@@ -1,0 +1,50 @@
+//! Quickstart: build a tensor expression, differentiate it symbolically,
+//! simplify, and evaluate — the 60-second tour of the public API.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use tensorcalc::prelude::*;
+use tensorcalc::simplify::dag_size;
+use tensorcalc::tensor::Tensor;
+
+fn main() {
+    // f(w) = Σ log(exp(X·w) + 1)  — a softplus sum
+    let (m, n) = (6usize, 4usize);
+    let mut g = Graph::new();
+    let x = g.var("X", &[m, n]);
+    let w = g.var("w", &[n]);
+    let xw = g.matvec(x, w);
+    let e = g.elem(Elem::Exp, xw);
+    let one = g.constant(1.0, &[m]);
+    let s = g.add(e, one);
+    let l = g.elem(Elem::Log, s);
+    let f = g.sum_all(l);
+    println!("f = {}", g.render(f));
+
+    // reverse-mode gradient (Theorem 8) + simplification
+    let grad = reverse_gradient(&mut g, f, w);
+    let grad = simplify(&mut g, &[grad])[0];
+    println!("\n∇f ({} nodes):\n{}", dag_size(&g, grad), g.program(&[grad]));
+
+    // Hessian, with and without cross-country reordering
+    let hess = hessian(&mut g, f, w);
+    let hess_cc = optimize_contractions(&mut g, hess);
+    println!("H shape: {:?}", g.shape(hess));
+
+    // evaluate everything on random data
+    let mut env = Env::new();
+    env.insert("X", Tensor::randn(&[m, n], 1));
+    env.insert("w", Tensor::randn(&[n], 2));
+    let vals = eval_many(&g, &[f, grad, hess, hess_cc], &env);
+    println!("\nf     = {:.6}", vals[0].item());
+    println!("∇f    = {:?}", vals[1]);
+    println!("H     = {:?}", vals[2]);
+    assert!(vals[2].allclose(&vals[3], 1e-10, 1e-12), "modes must agree");
+    println!("\nreverse and cross-country Hessians agree ✓");
+
+    // forward mode gives the same Jacobians as reverse mode
+    let jac_fwd = forward_derivative(&mut g, grad, w);
+    let hf = eval(&g, jac_fwd, &env);
+    assert!(hf.allclose(&vals[2], 1e-10, 1e-12));
+    println!("forward-over-reverse agrees with reverse-over-reverse ✓");
+}

@@ -1,0 +1,2 @@
+"""Build-time Python package: Layer-2 JAX models + Layer-1 Pallas kernels
+and the AOT lowering to HLO-text artifacts. Never imported at runtime."""

@@ -1,0 +1,136 @@
+"""AOT compilation: lower every Layer-2 entry point to HLO **text** and
+write it under artifacts/ together with a manifest the Rust runtime reads.
+
+HLO text — never ``lowered.compiler_ir(...).serialize()`` or proto bytes:
+jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids that the xla
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Usage: ``python -m compile.aot [--out-dir ../artifacts]``
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Fixed AOT shapes (documented in DESIGN.md §5).
+LOGREG_M, LOGREG_N = 256, 128
+MATFAC_M, MATFAC_N, MATFAC_K = 128, 128, 5
+MLP_BATCH, MLP_WIDTH, MLP_LAYERS = 64, 32, 10
+
+
+def to_hlo_text(fn, *args):
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def entries():
+    """name -> (callable, example specs, output names)."""
+    m, n = LOGREG_M, LOGREG_N
+    fm, fn_, fk = MATFAC_M, MATFAC_N, MATFAC_K
+    b, w, layers = MLP_BATCH, MLP_WIDTH, MLP_LAYERS
+
+    def mlp_vg(X, Y, *ws):
+        return model.mlp_val_grad_w1(list(ws), X, Y)
+
+    mlp_args = [spec(b, w), spec(b, w)] + [spec(w, w)] * layers
+
+    return {
+        "logreg_val_grad": (
+            model.logreg_val_grad,
+            [spec(n), spec(m, n), spec(m)],
+            ["loss", "grad"],
+        ),
+        "logreg_hess": (
+            model.logreg_hess,
+            [spec(n), spec(m, n), spec(m)],
+            ["hessian"],
+        ),
+        "logreg_hess_jax": (
+            model.logreg_hess_jax,
+            [spec(n), spec(m, n), spec(m)],
+            ["hessian"],
+        ),
+        "matfac_val_grad": (
+            model.matfac_val_grad,
+            [spec(fm, fk), spec(fm, fn_), spec(fn_, fk)],
+            ["loss", "grad"],
+        ),
+        "matfac_hess_core": (
+            model.matfac_hess_core,
+            [spec(fn_, fk)],
+            ["core"],
+        ),
+        "mlp_val_grad": (mlp_vg, mlp_args, ["loss", "grad_w1"]),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--out", default=None, help="unused compat flag")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"dtype": "f32", "entries": {}}
+    for name, (fn, specs, outs) in entries().items():
+        text = to_hlo_text(fn, *specs)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [list(s.shape) for s in specs],
+            "outputs": outs,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # example input/output bundle for the Rust cross-check test — raw
+    # little-endian f32 files (the offline Rust build has no npz reader)
+    check_dir = os.path.join(out_dir, "check")
+    os.makedirs(check_dir, exist_ok=True)
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((LOGREG_M, LOGREG_N)).astype(np.float32)
+    y = np.sign(rng.standard_normal(LOGREG_M)).astype(np.float32)
+    w = (0.1 * rng.standard_normal(LOGREG_N)).astype(np.float32)
+    val, grad = model.logreg_val_grad(jnp.asarray(w), jnp.asarray(x), jnp.asarray(y))
+    hess = model.logreg_hess(jnp.asarray(w), jnp.asarray(x), jnp.asarray(y))
+    for name, arr in [
+        ("X", x), ("y", y), ("w", w),
+        ("loss", np.asarray(val, dtype=np.float32)),
+        ("grad", np.asarray(grad, dtype=np.float32)),
+        ("hess", np.asarray(hess, dtype=np.float32)),
+    ]:
+        arr.astype("<f4").tofile(os.path.join(check_dir, f"logreg_{name}.f32"))
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # plain-text manifest for the (serde-less) Rust runtime:
+    #   name<TAB>file<TAB>shape;shape;...<TAB>out1,out2
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        for name, e in manifest["entries"].items():
+            shapes = ";".join(",".join(str(d) for d in s) for s in e["inputs"])
+            f.write(f"{name}\t{e['file']}\t{shapes}\t{','.join(e['outputs'])}\n")
+    print(f"wrote {out_dir}/manifest.json + manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

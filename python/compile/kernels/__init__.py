@@ -1,0 +1,6 @@
+"""Layer-1 Pallas kernels (build-time only)."""
+
+from .contraction import matmul_tn, xt_diag_x
+from .ref import matmul_tn_ref, xt_diag_x_ref
+
+__all__ = ["xt_diag_x", "matmul_tn", "xt_diag_x_ref", "matmul_tn_ref"]

@@ -1,0 +1,14 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+reference (pytest compares kernel output against these)."""
+
+import jax.numpy as jnp
+
+
+def xt_diag_x_ref(x, v):
+    """``Xᵀ·diag(v)·X`` by plain einsum."""
+    return jnp.einsum("ij,i,ik->jk", x, v, x)
+
+
+def matmul_tn_ref(a, b):
+    """``AᵀB`` by plain einsum."""
+    return jnp.einsum("ij,ik->jk", a, b)

@@ -1,0 +1,103 @@
+"""Layer-2 JAX models: the paper's three benchmark workloads with their
+gradients and (compressed) Hessians, written so the compute hot-spot runs
+through the Layer-1 Pallas kernels.
+
+These functions exist for two purposes:
+1. build-time correctness (pytest checks them against jax.grad /
+   jax.hessian), and
+2. AOT lowering (aot.py) to HLO text that the Rust runtime loads via
+   PJRT — the "deep-learning framework" comparison path of Figures 2/3,
+   executed from the Rust coordinator with Python off the request path.
+
+The closed-form derivative expressions below are exactly what the Rust
+tensor-calculus engine derives symbolically; the cross-layer integration
+test checks Rust-engine numerics against these artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul_tn, xt_diag_x
+
+
+# ---------------------------------------------------------------- logreg
+
+def logreg_loss(w, X, y):
+    """f(w) = Σ_i log(exp(−y_i·(X_i w)) + 1)."""
+    z = X @ w
+    return jnp.sum(jnp.logaddexp(0.0, -y * z))
+
+
+def logreg_val_grad(w, X, y):
+    """Loss and gradient, closed form: ∇f = Xᵀ(−y ⊙ σ(−y⊙z))."""
+    z = X @ w
+    t = -y * z
+    val = jnp.sum(jnp.logaddexp(0.0, t))
+    s = jax.nn.sigmoid(t)
+    grad = X.T @ (-y * s)
+    return val, grad
+
+
+def logreg_hess(w, X, y):
+    """Compressed Hessian H = Xᵀ·diag(v)·X with v = σ(t)(1−σ(t)), t=−y⊙z.
+
+    The diag(v) factor is fused inside the Pallas kernel — the paper's
+    cross-country ordering (vectors merge before the matrix products).
+    """
+    z = X @ w
+    t = -y * z
+    s = jax.nn.sigmoid(t)
+    v = s * (1.0 - s)  # y² = 1
+    return xt_diag_x(X, v)
+
+
+def logreg_hess_jax(w, X, y):
+    """The real-JAX comparator: jax.hessian of the loss."""
+    return jax.hessian(logreg_loss)(w, X, y)
+
+
+# ---------------------------------------------------------------- matfac
+
+def matfac_loss(U, T, V):
+    """f(U) = ‖T − U Vᵀ‖²."""
+    r = T - U @ V.T
+    return jnp.sum(r * r)
+
+
+def matfac_val_grad(U, T, V):
+    """Loss and gradient: ∇_U f = −2(T − UVᵀ)V."""
+    r = T - U @ V.T
+    return jnp.sum(r * r), -2.0 * r @ V
+
+
+def matfac_hess_core(V):
+    """The compressed Hessian core 2·VᵀV (full H = core ⊗ 𝕀, §3.3),
+    via the Pallas blocked AᵀB kernel."""
+    return 2.0 * matmul_tn(V, V)
+
+
+# ---------------------------------------------------------------- mlp
+
+def mlp_logits(ws, X):
+    """`len(ws)` dense layers, ReLU between, last layer linear."""
+    h = X
+    for i, w in enumerate(ws):
+        z = h @ w
+        h = jax.nn.relu(z) if i + 1 < len(ws) else z
+    return h
+
+
+def mlp_loss(ws, X, Y):
+    """Softmax cross-entropy against one-hot Y (summed, like the paper)."""
+    z = mlp_logits(ws, X)
+    lse = jax.scipy.special.logsumexp(z, axis=-1)
+    return jnp.sum(lse) - jnp.sum(Y * z)
+
+
+def mlp_val_grad_w1(ws, X, Y):
+    """Loss and gradient w.r.t. the first layer's weights (the layer the
+    paper reports Hessian times for)."""
+    def f(w1):
+        return mlp_loss([w1] + list(ws[1:]), X, Y)
+    val, g = jax.value_and_grad(f)(ws[0])
+    return val, g

@@ -1,0 +1,97 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracles in ref.py.
+Hypothesis sweeps shapes and dtypes — the core correctness signal for the
+kernel layer."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul_tn, matmul_tn_ref, xt_diag_x, xt_diag_x_ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+TOL = {jnp.float32: dict(rtol=1e-4, atol=1e-4), jnp.float64: dict(rtol=1e-9, atol=1e-9)}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+@pytest.mark.parametrize("m,n,bm", [(8, 4, 8), (64, 16, 32), (128, 32, 128), (256, 8, 64)])
+def test_xt_diag_x_matches_ref(dtype, m, n, bm):
+    x = rand((m, n), dtype, 1)
+    v = rand((m,), dtype, 2)
+    got = xt_diag_x(x, v, block_m=bm)
+    want = xt_diag_x_ref(x, v)
+    np.testing.assert_allclose(got, want, **TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+@pytest.mark.parametrize("m,k,n,bm", [(8, 3, 5, 8), (64, 16, 16, 32), (128, 5, 5, 128)])
+def test_matmul_tn_matches_ref(dtype, m, k, n, bm):
+    a = rand((m, k), dtype, 3)
+    b = rand((m, n), dtype, 4)
+    got = matmul_tn(a, b, block_m=bm)
+    want = matmul_tn_ref(a, b)
+    np.testing.assert_allclose(got, want, **TOL[dtype])
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=6),
+    bm=st.sampled_from([8, 16, 32]),
+    n=st.integers(min_value=1, max_value=24),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_xt_diag_x_hypothesis_sweep(blocks, bm, n, seed):
+    m = blocks * bm
+    x = rand((m, n), jnp.float64, seed)
+    v = rand((m,), jnp.float64, seed + 1)
+    got = xt_diag_x(x, v, block_m=bm)
+    want = xt_diag_x_ref(x, v)
+    np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=5),
+    bm=st.sampled_from([8, 16]),
+    k=st.integers(min_value=1, max_value=12),
+    n=st.integers(min_value=1, max_value=12),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_matmul_tn_hypothesis_sweep(blocks, bm, k, n, seed):
+    m = blocks * bm
+    a = rand((m, k), jnp.float64, seed)
+    b = rand((m, n), jnp.float64, seed + 1)
+    got = matmul_tn(a, b, block_m=bm)
+    want = matmul_tn_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
+
+
+def test_xt_diag_x_psd_when_v_nonnegative():
+    x = rand((64, 8), jnp.float64, 9)
+    v = jnp.abs(rand((64,), jnp.float64, 10))
+    h = np.asarray(xt_diag_x(x, v, block_m=32))
+    eig = np.linalg.eigvalsh(h)
+    assert eig.min() > -1e-10
+
+
+def test_block_size_must_divide_rows():
+    x = rand((10, 4), jnp.float64, 11)
+    v = rand((10,), jnp.float64, 12)
+    with pytest.raises(AssertionError):
+        xt_diag_x(x, v, block_m=4)
+
+
+def test_single_block_fast_path():
+    # block_m >= m collapses to a single grid step
+    x = rand((16, 4), jnp.float64, 13)
+    v = rand((16,), jnp.float64, 14)
+    got = xt_diag_x(x, v, block_m=128)
+    np.testing.assert_allclose(got, xt_diag_x_ref(x, v), rtol=1e-9, atol=1e-9)

@@ -1,0 +1,93 @@
+"""Layer-2 correctness: the closed-form derivative expressions in model.py
+against jax.grad / jax.hessian."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+jax.config.update("jax_enable_x64", True)
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(scale * rng.standard_normal(shape))
+
+
+@pytest.fixture
+def logreg_data():
+    m, n = 32, 8
+    X = rand((m, n), 0)
+    y = jnp.sign(rand((m,), 1))
+    w = rand((n,), 2, 0.1)
+    return w, X, y
+
+
+def test_logreg_grad_matches_jax(logreg_data):
+    w, X, y = logreg_data
+    _, g = model.logreg_val_grad(w, X, y)
+    gt = jax.grad(model.logreg_loss)(w, X, y)
+    np.testing.assert_allclose(g, gt, rtol=1e-9, atol=1e-10)
+
+
+def test_logreg_hess_matches_jax(logreg_data):
+    w, X, y = logreg_data
+    h = model.logreg_hess(w, X, y)
+    ht = jax.hessian(model.logreg_loss)(w, X, y)
+    np.testing.assert_allclose(h, ht, rtol=1e-8, atol=1e-9)
+
+
+def test_logreg_hess_symmetric_psd(logreg_data):
+    w, X, y = logreg_data
+    h = np.asarray(model.logreg_hess(w, X, y))
+    np.testing.assert_allclose(h, h.T, rtol=1e-12, atol=1e-12)
+    assert np.linalg.eigvalsh(h).min() > -1e-10
+
+
+def test_matfac_grad_matches_jax():
+    m, n, k = 12, 10, 3
+    U, T, V = rand((m, k), 3), rand((m, n), 4), rand((n, k), 5)
+    _, g = model.matfac_val_grad(U, T, V)
+    gt = jax.grad(model.matfac_loss)(U, T, V)
+    np.testing.assert_allclose(g, gt, rtol=1e-9, atol=1e-10)
+
+
+def test_matfac_hess_core_is_compressed_hessian():
+    # full Hessian H[i,j,k,l] = core[j,l]·δ_ik
+    m, n, k = 8, 8, 2
+    U, T, V = rand((m, k), 6), rand((m, n), 7), rand((n, k), 8)
+    core = np.asarray(model.matfac_hess_core(V))
+    H = np.asarray(jax.hessian(model.matfac_loss)(U, T, V))  # [m,k,m,k]
+    for i in range(m):
+        for kk in range(m):
+            blk = H[i, :, kk, :]
+            want = core if i == kk else np.zeros_like(core)
+            np.testing.assert_allclose(blk, want, rtol=1e-8, atol=1e-8)
+
+
+def test_mlp_grad_matches_jax():
+    b, w, layers = 8, 6, 4
+    X, Y = rand((b, w), 9), jnp.asarray(np.eye(w)[np.random.default_rng(1).integers(0, w, b)])
+    ws = [rand((w, w), 10 + i, 1 / np.sqrt(w)) for i in range(layers)]
+    _, g = model.mlp_val_grad_w1(ws, X, Y)
+    gt = jax.grad(lambda w1: model.mlp_loss([w1] + ws[1:], X, Y))(ws[0])
+    np.testing.assert_allclose(g, gt, rtol=1e-9, atol=1e-10)
+
+
+def test_mlp_loss_nonnegative():
+    b, w = 8, 6
+    X = rand((b, w), 20)
+    Y = jnp.asarray(np.eye(w)[np.random.default_rng(2).integers(0, w, b)])
+    ws = [rand((w, w), 30 + i, 1 / np.sqrt(w)) for i in range(3)]
+    assert float(model.mlp_loss(ws, X, Y)) > 0.0
+
+
+def test_aot_entries_lower_to_hlo_text():
+    # every registered entry must lower; HLO text must name an ENTRY
+    from compile import aot
+    for name, (fn, specs, _) in aot.entries().items():
+        text = aot.to_hlo_text(fn, *specs)
+        assert "ENTRY" in text, name
+        assert len(text) > 100, name

@@ -1,0 +1,116 @@
+//! Ablation benches for the two §3.3 design choices:
+//!
+//! * **newton** — compressed vs full Newton system on matrix
+//!   factorization (the paper's "10 µs vs 1 s at n=1000, k=10" claim,
+//!   scaled to this testbed),
+//! * **cc** — cross-country vs reverse association on the Example-7
+//!   chain `B·diag(u)·diag(v)·A` in isolation,
+//! * **compress** — evaluating the matfac Hessian core vs materialising
+//!   the order-4 tensor.
+//!
+//! Run: `cargo bench --bench ablation_modes`
+
+use tensorcalc::autodiff::cross_country::optimize_contractions;
+use tensorcalc::eval::{Env, Plan};
+use tensorcalc::figures::{newton, print_table, Row};
+use tensorcalc::ir::Graph;
+use tensorcalc::problems::matrix_factorization;
+use tensorcalc::tensor::Tensor;
+use tensorcalc::util::time_median;
+
+fn main() {
+    let secs = 0.3;
+
+    // ---- newton: §3.3 in-text claim ----
+    let rows = newton(&[20, 50, 100, 200], 10, secs);
+    print_table("§3.3 — compressed vs full Newton system (matfac, k=10)", &rows);
+    for n in [20usize, 50, 100, 200] {
+        let fast = rows.iter().find(|r| r.n == n && r.mode.starts_with("compressed"));
+        let slow = rows.iter().find(|r| r.n == n && r.mode.starts_with("full"));
+        if let (Some(f), Some(s)) = (fast, slow) {
+            println!("  n={:<5} compressed is {:>10.0}× faster", n, s.secs / f.secs);
+        }
+    }
+
+    // ---- cc: Example 7 chain ----
+    let mut rows = Vec::new();
+    for &n in &[64usize, 128, 256, 512] {
+        let m = n;
+        let build = |cc: bool| -> (Graph, tensorcalc::ir::NodeId, Env) {
+            let mut g = Graph::new();
+            let b = g.var("B", &[m, n]);
+            let a = g.var("A", &[n, m]);
+            let u = g.var("u", &[n]);
+            let v = g.var("v", &[n]);
+            // ((B·diag(u))·diag(v))·A — reverse-mode association
+            let bu = g.coldiag(b, u);
+            let buv = g.coldiag(bu, v);
+            let full = g.matmul(buv, a);
+            let expr = if cc { optimize_contractions(&mut g, full) } else { full };
+            let mut env = Env::new();
+            env.insert("B", Tensor::randn(&[m, n], 1));
+            env.insert("A", Tensor::randn(&[n, m], 2));
+            env.insert("u", Tensor::randn(&[n], 3));
+            env.insert("v", Tensor::randn(&[n], 4));
+            (g, expr, env)
+        };
+        for (label, cc) in [("reverse-order", false), ("cross-country", true)] {
+            let (g, node, env) = build(cc);
+            let plan = Plan::new(&g, &[node]);
+            let (t, runs) = time_median(
+                || {
+                    std::hint::black_box(plan.run(&g, &env));
+                },
+                3,
+                secs,
+            );
+            rows.push(Row { figure: "cc", problem: "example7", n, mode: label.into(), secs: t, runs });
+        }
+    }
+    print_table("Cross-country ablation — Example 7 chain B·diag(u)·diag(v)·A", &rows);
+
+    // ---- compress: core vs materialised matfac Hessian ----
+    let mut rows = Vec::new();
+    for &n in &[32usize, 64, 128] {
+        let mut w = matrix_factorization(n, n, 5, false);
+        let comp = w.hessian_compressed();
+        assert!(comp.is_compressed());
+        let core = comp.eval_node();
+        let plan = Plan::new(&w.g, &[core]);
+        let (t, runs) = time_median(
+            || {
+                std::hint::black_box(plan.run(&w.g, &w.env));
+            },
+            3,
+            secs,
+        );
+        rows.push(Row {
+            figure: "compress",
+            problem: "matfac",
+            n,
+            mode: "compressed core (k×k)".into(),
+            secs: t,
+            runs,
+        });
+
+        let mut w2 = matrix_factorization(n, n, 5, false);
+        let h = w2.hessian();
+        let plan = Plan::new(&w2.g, &[h]);
+        let (t, runs) = time_median(
+            || {
+                std::hint::black_box(plan.run(&w2.g, &w2.env));
+            },
+            3,
+            secs,
+        );
+        rows.push(Row {
+            figure: "compress",
+            problem: "matfac",
+            n,
+            mode: "materialised order-4".into(),
+            secs: t,
+            runs,
+        });
+    }
+    print_table("Compression ablation — matfac Hessian (k=5)", &rows);
+}

@@ -1,0 +1,58 @@
+//! Microbenchmarks of the evaluation engine hot paths (einsum → GEMM):
+//! used by the §Perf pass to find and verify bottleneck fixes.
+//!
+//! Run: `cargo bench --bench engine_micro`
+
+use tensorcalc::einsum::{einsum, gemm, EinSpec};
+use tensorcalc::figures::{print_table, Row};
+use tensorcalc::tensor::Tensor;
+use tensorcalc::util::{fmt_secs, time_median};
+
+fn main() {
+    let secs = 0.3;
+    let mut rows: Vec<Row> = Vec::new();
+
+    // raw GEMM roofline probe
+    for &n in &[128usize, 256, 512, 1024] {
+        let a = Tensor::randn(&[n, n], 1);
+        let b = Tensor::randn(&[n, n], 2);
+        let (t, runs) = time_median(
+            || {
+                std::hint::black_box(gemm(a.data(), b.data(), n, n, n));
+            },
+            3,
+            secs,
+        );
+        let gflops = 2.0 * (n as f64).powi(3) / t / 1e9;
+        println!("gemm {0}×{0}×{0}: {1} ({2:.2} GFLOP/s)", n, fmt_secs(t), gflops);
+        rows.push(Row { figure: "micro", problem: "gemm", n, mode: format!("{:.2} GFLOP/s", gflops), secs: t, runs });
+    }
+
+    // einsum shapes that dominate the derivative DAGs
+    let cases: Vec<(&str, Vec<usize>, Vec<usize>)> = vec![
+        ("ij,jk->ik", vec![256, 256], vec![256, 256]), // matmul
+        ("ji,jk->ik", vec![512, 256], vec![512, 256]), // XᵀX-style
+        ("ij,i->ij", vec![512, 256], vec![512]),       // diag-scale
+        ("ij,j->i", vec![512, 512], vec![512]),        // matvec
+        ("i,j->ij", vec![512], vec![512]),             // outer
+        ("ij,ij->", vec![512, 512], vec![512, 512]),   // full contraction
+        ("jl,ik->ijkl", vec![8, 8], vec![32, 32]),     // delta expansion
+        ("aij,ajk->aik", vec![64, 16, 16], vec![64, 16, 16]), // batched
+    ];
+    for (sig, sa, sb) in cases {
+        let spec = EinSpec::parse(sig);
+        let a = Tensor::randn(&sa, 3);
+        let b = Tensor::randn(&sb, 4);
+        let (t, runs) = time_median(
+            || {
+                std::hint::black_box(einsum(&spec, &a, &b));
+            },
+            3,
+            secs,
+        );
+        println!("einsum {:<14} {:?}×{:?}: {}", sig, sa, sb, fmt_secs(t));
+        rows.push(Row { figure: "micro", problem: "einsum", n: sa.iter().product(), mode: sig.into(), secs: t, runs });
+    }
+
+    print_table("engine microbenchmarks", &rows);
+}

@@ -1,0 +1,28 @@
+//! Figure 2 reproduction: function value + gradient evaluation times on
+//! the CPU for logistic regression, matrix factorization and the
+//! 10-layer neural net. The paper's point for this figure is a *tie*:
+//! every framework computes scalar-output gradients the same way, and so
+//! do we — the series should be flat across modes and scale with the
+//! problem size only.
+//!
+//! Run: `cargo bench --bench fig2_gradients [-- --sizes 16,32 --secs 0.1]`
+
+use tensorcalc::figures::{fig2, print_table};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let sizes = parse_sizes(&args).unwrap_or_else(|| vec![16, 32, 64, 128, 256]);
+    let secs = parse_secs(&args).unwrap_or(0.3);
+    let rows = fig2(&["logreg", "matfac", "mlp"], &sizes, secs);
+    print_table("Figure 2 — function value + gradient (CPU)", &rows);
+}
+
+fn parse_sizes(args: &[String]) -> Option<Vec<usize>> {
+    let i = args.iter().position(|a| a == "--sizes")?;
+    Some(args.get(i + 1)?.split(',').map(|s| s.parse().unwrap()).collect())
+}
+
+fn parse_secs(args: &[String]) -> Option<f64> {
+    let i = args.iter().position(|a| a == "--secs")?;
+    args.get(i + 1)?.parse().ok()
+}

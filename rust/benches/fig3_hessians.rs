@@ -1,0 +1,49 @@
+//! Figure 3 reproduction (CPU row): Hessian evaluation times per mode —
+//! the paper's headline result. Expected shape:
+//!
+//! * `framework(per-entry×N)` grows ~N× faster than `ours(reverse)`
+//!   (the 2–3 orders-of-magnitude gap of the paper at its sizes),
+//! * `ours(cross-country)` shaves ~30 % off logreg,
+//! * `ours(compressed)` wins big on matfac (k×k core) and the MLP,
+//! * the PJRT rows give the real-JAX comparator at the AOT shapes.
+//!
+//! The GPU row of Figure 3 is out of scope on this testbed (documented in
+//! EXPERIMENTS.md).
+//!
+//! Run: `cargo bench --bench fig3_hessians [-- --sizes 8,16,32 --secs 0.2 --no-baseline]`
+
+use tensorcalc::figures::{fig3, print_table, speedup};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let sizes = parse_sizes(&args).unwrap_or_else(|| vec![8, 16, 32, 64]);
+    let secs = parse_secs(&args).unwrap_or(0.3);
+    let with_baseline = !args.iter().any(|a| a == "--no-baseline");
+    let rows = fig3(&["logreg", "matfac", "mlp"], &sizes, secs, with_baseline);
+    print_table("Figure 3 — Hessian (CPU)", &rows);
+
+    if with_baseline {
+        println!("\nspeedup of ours(reverse) over framework(per-entry) — the Figure 3 gap:");
+        for (p, n, s) in speedup(&rows, "framework", "ours(reverse)") {
+            println!("  {:<8} n={:<5} {:>8.1}×", p, n, s);
+        }
+    }
+    println!("\nspeedup of ours(cross-country) over ours(reverse):");
+    for (p, n, s) in speedup(&rows, "ours(reverse)", "ours(cross-country)") {
+        println!("  {:<8} n={:<5} {:>8.2}×", p, n, s);
+    }
+    println!("\nspeedup of ours(compressed) over ours(reverse):");
+    for (p, n, s) in speedup(&rows, "ours(reverse)", "ours(compressed") {
+        println!("  {:<8} n={:<5} {:>8.1}×", p, n, s);
+    }
+}
+
+fn parse_sizes(args: &[String]) -> Option<Vec<usize>> {
+    let i = args.iter().position(|a| a == "--sizes")?;
+    Some(args.get(i + 1)?.split(',').map(|s| s.parse().unwrap()).collect())
+}
+
+fn parse_secs(args: &[String]) -> Option<f64> {
+    let i = args.iter().position(|a| a == "--secs")?;
+    args.get(i + 1)?.parse().ok()
+}

@@ -1,0 +1,230 @@
+//! Compression of higher-order derivatives (§3.3).
+//!
+//! In both modes the first partial derivative is a unit tensor; with the
+//! cross-country ordering it is multiplied last, where it either cancels
+//! (handled by [`crate::simplify`]) or survives as a *pure expansion*:
+//! a multiplication `core *_(…) δ` with no summed labels. Such a root is
+//! stored compressed — only `core` is ever evaluated. The flagship
+//! example is the matrix-factorization Hessian
+//! `H = 2(VᵀV) *_(jl,ik,ijkl) 𝕀 ∈ R^{n×k×n×k}`, compressed to the k×k
+//! matrix `2(VᵀV)`.
+
+use crate::einsum::{einsum, EinSpec};
+use crate::ir::{Graph, NodeId, Op};
+use crate::tensor::Tensor;
+
+/// A derivative in (possibly) compressed representation.
+#[derive(Clone, Debug)]
+pub enum CompressedDerivative {
+    /// No compressible structure found: the plain expression.
+    Full(NodeId),
+    /// `H[spec.s3] = core[spec.s1] · δ[spec.s2]` with no summation —
+    /// only `core` needs to be evaluated.
+    DeltaFactored {
+        core: NodeId,
+        delta_dims: Vec<usize>,
+        spec: EinSpec,
+        /// shape of the uncompressed derivative
+        full_shape: Vec<usize>,
+    },
+}
+
+impl CompressedDerivative {
+    /// The node to evaluate (core for compressed, the expression itself
+    /// otherwise).
+    pub fn eval_node(&self) -> NodeId {
+        match self {
+            CompressedDerivative::Full(n) => *n,
+            CompressedDerivative::DeltaFactored { core, .. } => *core,
+        }
+    }
+
+    pub fn is_compressed(&self) -> bool {
+        matches!(self, CompressedDerivative::DeltaFactored { .. })
+    }
+
+    /// Element count of what actually gets evaluated vs the full tensor —
+    /// the compression ratio reported in the benchmarks.
+    pub fn compression_ratio(&self, g: &Graph) -> f64 {
+        match self {
+            CompressedDerivative::Full(_) => 1.0,
+            CompressedDerivative::DeltaFactored { core, full_shape, .. } => {
+                let full: usize = full_shape.iter().product();
+                let small: usize = g.shape(*core).iter().product();
+                small as f64 / full as f64
+            }
+        }
+    }
+
+    /// Materialise the full derivative tensor from an evaluated core —
+    /// used by tests and by consumers that genuinely need the dense form.
+    pub fn materialize(&self, core_value: &Tensor) -> Tensor {
+        match self {
+            CompressedDerivative::Full(_) => core_value.clone(),
+            CompressedDerivative::DeltaFactored { delta_dims, spec, .. } => {
+                let d = Tensor::delta(delta_dims);
+                einsum(spec, core_value, &d)
+            }
+        }
+    }
+}
+
+/// Detect the compressible `core · δ` structure at the root of a
+/// derivative expression (run [`crate::simplify`] first — it leaves the
+/// delta factored at the root precisely when it cannot be contracted).
+/// Scalar scaling wrappers around the product are pushed into the core.
+pub fn compress_derivative(g: &mut Graph, h: NodeId) -> CompressedDerivative {
+    // peel `x *_(s,∅,s) c` scalar-scale wrappers, collecting the factor
+    let mut node = h;
+    let mut scale = 1.0f64;
+    loop {
+        match g.op(node).clone() {
+            Op::Mul(x, k, spec)
+                if spec.s2.is_empty()
+                    && spec.s3 == spec.s1
+                    && g.const_value(k).is_some() =>
+            {
+                scale *= g.const_value(k).unwrap();
+                node = x;
+            }
+            _ => break,
+        }
+    }
+
+    let (a, b, spec) = match g.op(node).clone() {
+        Op::Mul(a, b, spec) => (a, b, spec),
+        _ => return CompressedDerivative::Full(h),
+    };
+    // normalize delta to the right
+    let (core, delta, spec) = match (g.op(a).clone(), g.op(b).clone()) {
+        (_, Op::Delta { dims }) => (a, dims, spec),
+        (Op::Delta { dims }, _) => (b, dims, spec.swapped()),
+        _ => return CompressedDerivative::Full(h),
+    };
+    // pure expansion: nothing summed. Delta labels may be shared with the
+    // core — the paper's neural-net Hessian `A *_(ijl,ik,ijkl) 𝕀` shares
+    // `i` — because materialization is then a broadcast/mask, and the
+    // core still carries all the information.
+    if !spec.is_sum_free() {
+        return CompressedDerivative::Full(h);
+    }
+    let full_shape = g.shape(node).to_vec();
+    let core = if scale == 1.0 {
+        core
+    } else {
+        g.scale(core, scale)
+    };
+    CompressedDerivative::DeltaFactored { core, delta_dims: delta, spec, full_shape }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::hessian::{hessian, hessian_compressed};
+    use crate::eval::{eval, Env};
+    use crate::simplify::simplify_one;
+
+    #[test]
+    fn matfac_hessian_compresses_to_k_by_k() {
+        // f = ‖T − U Vᵀ‖², Hessian w.r.t. U is 2(VᵀV) ⊗ 𝕀 — the paper's
+        // flagship compression example
+        let (n, k) = (6, 2);
+        let mut g = Graph::new();
+        let t = g.var("T", &[n, n]);
+        let u = g.var("U", &[n, k]);
+        let v = g.var("V", &[n, k]);
+        let uvt = g.matmul_t(u, v);
+        let d = g.sub(t, uvt);
+        let f = g.norm2(d);
+        let comp = hessian_compressed(&mut g, f, u);
+        assert!(comp.is_compressed(), "matfac Hessian must compress");
+        let core = comp.eval_node();
+        assert_eq!(g.shape(core), &[k, k], "core must be k×k, got {:?}", g.shape(core));
+        // ratio (k·k)/(n·k·n·k) = 1/n²
+        let ratio = comp.compression_ratio(&g);
+        assert!((ratio - 1.0 / (n * n) as f64).abs() < 1e-12, "ratio {}", ratio);
+
+        // numerics: materialized compressed == full Hessian
+        let mut env = Env::new();
+        env.insert("T", Tensor::randn(&[n, n], 1));
+        env.insert("U", Tensor::randn(&[n, k], 2));
+        env.insert("V", Tensor::randn(&[n, k], 3));
+        let core_v = eval(&g, core, &env);
+        let mat = comp.materialize(&core_v);
+        let h_full = hessian(&mut g, f, u);
+        let full_v = eval(&g, h_full, &env);
+        assert!(
+            mat.allclose(&full_v, 1e-9, 1e-11),
+            "diff {}",
+            mat.max_abs_diff(&full_v)
+        );
+        // and the core is 2·VᵀV
+        let vt_v = {
+            let v = env.get("V").unwrap();
+            let spec = EinSpec::parse("ij,ik->jk");
+            einsum(&spec, v, v).scale(2.0)
+        };
+        assert!(core_v.allclose(&vt_v, 1e-9, 1e-11));
+    }
+
+    #[test]
+    fn non_compressible_hessian_returns_full() {
+        // logistic-regression Hessian Xᵀdiag(v)X has no free delta factor
+        let mut g = Graph::new();
+        let x = g.var("X", &[5, 3]);
+        let w = g.var("w", &[3]);
+        let xw = g.matvec(x, w);
+        let e = g.elem(crate::ir::Elem::Exp, xw);
+        let one = g.constant(1.0, &[5]);
+        let s = g.add(e, one);
+        let l = g.elem(crate::ir::Elem::Log, s);
+        let f = g.sum_all(l);
+        let comp = hessian_compressed(&mut g, f, w);
+        assert!(!comp.is_compressed());
+    }
+
+    #[test]
+    fn manual_delta_factored_root_detected() {
+        // H[i,j,k,l] = M[j,l]·δ[i,k], possibly scaled
+        let mut g = Graph::new();
+        let m = g.var("M", &[3, 3]);
+        let d = g.delta(&[5]);
+        let h = g.mul(m, d, EinSpec::parse("jl,ik->ijkl"));
+        let h2 = g.scale(h, 2.0);
+        let h2 = simplify_one(&mut g, h2);
+        let comp = compress_derivative(&mut g, h2);
+        assert!(comp.is_compressed());
+        assert_eq!(g.shape(comp.eval_node()), &[3, 3]);
+        // materialization semantics
+        let mut env = Env::new();
+        env.insert("M", Tensor::randn(&[3, 3], 4));
+        let cv = eval(&g, comp.eval_node(), &env);
+        let full = comp.materialize(&cv);
+        assert_eq!(full.shape(), &[5, 3, 5, 3]);
+        let mval = env.get("M").unwrap();
+        for i in 0..5 {
+            for j in 0..3 {
+                let want = 2.0 * mval.at(&[j, j]);
+                let _ = want;
+                for k in 0..5 {
+                    for l in 0..3 {
+                        let want = if i == k { 2.0 * mval.at(&[j, l]) } else { 0.0 };
+                        assert!((full.at(&[i, j, k, l]) - want).abs() < 1e-12);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn summed_delta_is_not_compressible() {
+        let mut g = Graph::new();
+        let m = g.var("M", &[3, 4]);
+        let d = g.delta(&[4]);
+        // Σ_j M[i,j] δ[j,k] — contraction, not expansion (simplify would
+        // remove it; compress alone must refuse)
+        let h = g.mul(m, d, EinSpec::parse("ij,jk->ik"));
+        let comp = compress_derivative(&mut g, h);
+        assert!(!comp.is_compressed());
+    }
+}

@@ -1,0 +1,204 @@
+//! Forward mode automatic differentiation in Einstein notation
+//! (Section 3.1, Theorems 5–7).
+//!
+//! Each node `v` receives a *pushforward* `v̇ = ∂v/∂x`, a tensor with
+//! index set `s_v ++ s4` where `s4` is the input variable's index set.
+//! The seed at the input is the unit tensor δ.
+
+use super::{fresh_block, relabel_from};
+use crate::einsum::{EinSpec, Label};
+use crate::ir::{Graph, NodeId, Op};
+use std::collections::HashMap;
+
+/// Forward-mode derivative of `y` with respect to `x`. Note the layout:
+/// forward mode produces `shape(y) ++ shape(x)` just like reverse mode,
+/// so the two are directly comparable (and interchangeable in the
+/// cross-country combinations of Section 3.3).
+pub fn forward_derivative(g: &mut Graph, y: NodeId, x: NodeId) -> NodeId {
+    let s4_shape = g.shape(x).to_vec();
+    let r4 = s4_shape.len();
+    let seed = if r4 == 0 { g.scalar(1.0) } else { g.delta(&s4_shape) };
+
+    let order = g.topo(&[y]);
+    // pushforward per node; absent = does not depend on x (zero)
+    let mut dot: HashMap<NodeId, NodeId> = HashMap::new();
+    dot.insert(x, seed);
+
+    for &id in &order {
+        if id == x || dot.contains_key(&id) {
+            continue;
+        }
+        let pushed = match g.op(id).clone() {
+            Op::Add(a, b) => match (dot.get(&a).copied(), dot.get(&b).copied()) {
+                (Some(da), Some(db)) => Some(g.add(da, db)),
+                (Some(da), None) => Some(da),
+                (None, Some(db)) => Some(db),
+                (None, None) => None,
+            },
+            Op::Mul(a, b, spec) => {
+                let da = dot.get(&a).copied();
+                let db = dot.get(&b).copied();
+                if da.is_none() && db.is_none() {
+                    None
+                } else {
+                    let sp = relabel_from(&spec, 0);
+                    let s4 = fresh_block(r4, sp.max_label() + 1);
+                    // Theorem 5: Ċ = B *_(s2, s1 s4, s3 s4) Ȧ
+                    //              + A *_(s1, s2 s4, s3 s4) Ḃ
+                    let s3s4: Vec<Label> = sp.s3.iter().chain(&s4).copied().collect();
+                    let term_a = da.map(|da| {
+                        let s1s4: Vec<Label> = sp.s1.iter().chain(&s4).copied().collect();
+                        g.mul(b, da, EinSpec::new(sp.s2.clone(), s1s4, s3s4.clone()))
+                    });
+                    let term_b = db.map(|db| {
+                        let s2s4: Vec<Label> = sp.s2.iter().chain(&s4).copied().collect();
+                        g.mul(a, db, EinSpec::new(sp.s1.clone(), s2s4, s3s4.clone()))
+                    });
+                    match (term_a, term_b) {
+                        (Some(ta), Some(tb)) => Some(g.add(ta, tb)),
+                        (Some(ta), None) => Some(ta),
+                        (None, Some(tb)) => Some(tb),
+                        (None, None) => unreachable!(),
+                    }
+                }
+            }
+            Op::Elem(f, a) => dot.get(&a).copied().map(|da| {
+                // Theorem 7: Ċ = f'(A) *_(s1, s1 s4, s1 s4) Ȧ
+                let r1 = g.order(a);
+                let s1 = fresh_block(r1, 0);
+                let s4 = fresh_block(r4, r1 as Label);
+                let fp = f.derivative(g, a);
+                let s14: Vec<Label> = s1.iter().chain(&s4).copied().collect();
+                g.mul(fp, da, EinSpec::new(s1, s14.clone(), s14))
+            }),
+            Op::GenUnary(f, a) => dot.get(&a).copied().map(|da| {
+                // Theorem 6: Ċ = f'(A) *_(s2 s1, s1 s4, s2 s4) Ȧ
+                let r1 = g.order(a);
+                let r2 = g.order(id);
+                let s2 = fresh_block(r2, 0);
+                let s1 = fresh_block(r1, r2 as Label);
+                let s4 = fresh_block(r4, (r2 + r1) as Label);
+                let fp = f.derivative(g, a);
+                let s21: Vec<Label> = s2.iter().chain(&s1).copied().collect();
+                let s14: Vec<Label> = s1.iter().chain(&s4).copied().collect();
+                let s24: Vec<Label> = s2.iter().chain(&s4).copied().collect();
+                g.mul(fp, da, EinSpec::new(s21, s14, s24))
+            }),
+            Op::Var(_) | Op::Const(_) | Op::Delta { .. } => None,
+        };
+        if let Some(p) = pushed {
+            dot.insert(id, p);
+        }
+    }
+
+    dot.get(&y).copied().unwrap_or_else(|| {
+        let shape: Vec<usize> = g.shape(y).iter().chain(&s4_shape).copied().collect();
+        g.constant(0.0, &shape)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::reverse::reverse_derivative;
+    use crate::eval::{eval, fd_jacobian, Env};
+    use crate::ir::Elem;
+    use crate::tensor::Tensor;
+
+    fn env_of(pairs: &[(&str, Tensor)]) -> Env {
+        let mut env = Env::new();
+        for (n, t) in pairs {
+            env.insert(n, t.clone());
+        }
+        env
+    }
+
+    #[test]
+    fn forward_matches_fd_on_vector_function() {
+        // y = exp(Ax)
+        let mut g = Graph::new();
+        let a = g.var("A", &[3, 4]);
+        let x = g.var("x", &[4]);
+        let ax = g.matvec(a, x);
+        let y = g.elem(Elem::Exp, ax);
+        let jac = forward_derivative(&mut g, y, x);
+        assert_eq!(g.shape(jac), &[3, 4]);
+        let env = env_of(&[("A", Tensor::randn(&[3, 4], 1)), ("x", Tensor::randn(&[4], 2))]);
+        let jv = eval(&g, jac, &env);
+        let want = fd_jacobian(&g, y, "x", &env, 1e-6);
+        assert!(jv.allclose(&want, 1e-5, 1e-7), "diff {}", jv.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn forward_equals_reverse_jacobian() {
+        // The two modes must produce identical tensors (they multiply the
+        // same partials in opposite order — Section 3.3).
+        let mut g = Graph::new();
+        let a = g.var("A", &[4, 3]);
+        let x = g.var("x", &[3]);
+        let ax = g.matvec(a, x);
+        let s = g.elem(Elem::Sigmoid, ax);
+        let y = g.tmatvec(a, s);
+        let jf = forward_derivative(&mut g, y, x);
+        let jr = reverse_derivative(&mut g, y, &[x])[0];
+        let env = env_of(&[("A", Tensor::randn(&[4, 3], 3)), ("x", Tensor::randn(&[3], 4))]);
+        let f = eval(&g, jf, &env);
+        let r = eval(&g, jr, &env);
+        assert!(f.allclose(&r, 1e-10, 1e-12), "diff {}", f.max_abs_diff(&r));
+    }
+
+    #[test]
+    fn forward_wrt_matrix_variable() {
+        // Y = AB, derivative wrt A has shape [2,4,2,3]
+        let mut g = Graph::new();
+        let a = g.var("A", &[2, 3]);
+        let b = g.var("B", &[3, 4]);
+        let y = g.matmul(a, b);
+        let j = forward_derivative(&mut g, y, a);
+        assert_eq!(g.shape(j), &[2, 4, 2, 3]);
+        let env = env_of(&[("A", Tensor::randn(&[2, 3], 5)), ("B", Tensor::randn(&[3, 4], 6))]);
+        let jv = eval(&g, j, &env);
+        let want = fd_jacobian(&g, y, "A", &env, 1e-6);
+        assert!(jv.allclose(&want, 1e-4, 1e-6), "diff {}", jv.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn forward_scalar_input() {
+        // y = exp(t · c) with scalar t
+        let mut g = Graph::new();
+        let t = g.var("t", &[]);
+        let c = g.var("c", &[3]);
+        let tc = g.mul(c, t, EinSpec::parse("i,->i"));
+        let y = g.elem(Elem::Exp, tc);
+        let j = forward_derivative(&mut g, y, t);
+        assert_eq!(g.shape(j), &[3]);
+        let env = env_of(&[("t", Tensor::scalar(0.7)), ("c", Tensor::randn(&[3], 7))]);
+        let jv = eval(&g, j, &env);
+        let want = fd_jacobian(&g, y, "t", &env, 1e-6).reshape(&[3]);
+        assert!(jv.allclose(&want, 1e-5, 1e-7));
+    }
+
+    #[test]
+    fn forward_zero_when_independent() {
+        let mut g = Graph::new();
+        let x = g.var("x", &[3]);
+        let z = g.var("z", &[2]);
+        let f = g.norm2(x);
+        let j = forward_derivative(&mut g, f, z);
+        let env = env_of(&[("x", Tensor::randn(&[3], 1)), ("z", Tensor::randn(&[2], 2))]);
+        assert_eq!(eval(&g, j, &env), Tensor::zeros(&[2]));
+    }
+
+    #[test]
+    fn forward_through_general_unary() {
+        let mut g = Graph::new();
+        let x = g.var("x", &[5]);
+        let s = g.gen_unary(crate::ir::GenFn::Softmax, x);
+        let j = forward_derivative(&mut g, s, x);
+        assert_eq!(g.shape(j), &[5, 5]);
+        let env = env_of(&[("x", Tensor::randn(&[5], 9))]);
+        let jv = eval(&g, j, &env);
+        let want = fd_jacobian(&g, s, "x", &env, 1e-6);
+        assert!(jv.allclose(&want, 1e-5, 1e-7), "diff {}", jv.max_abs_diff(&want));
+    }
+}

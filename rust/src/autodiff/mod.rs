@@ -1,0 +1,59 @@
+//! The tensor calculus itself (Section 3 of the paper): forward mode
+//! (Theorems 5–7), reverse mode (Theorems 8–10), the cross-country
+//! product reordering and the higher-order-derivative compression of
+//! Section 3.3.
+//!
+//! All modes are *symbolic*: they extend the expression DAG with nodes
+//! for the derivative, which is then simplified ([`crate::simplify`]) and
+//! evaluated ([`crate::eval`]). This mirrors the paper's implementation
+//! (and MatrixCalculus.org), where the derivative of a tensor expression
+//! is again a tensor expression in Einstein notation.
+
+pub mod compress;
+pub mod cross_country;
+pub mod forward;
+pub mod hessian;
+pub mod reverse;
+
+use crate::einsum::{EinSpec, Label};
+
+/// Relabel the distinct labels of `spec` injectively to `base, base+1, …`
+/// so it can be spliced into a larger label space (e.g. next to the fresh
+/// `s4` output/input block of the derivative constructions).
+pub(crate) fn relabel_from(spec: &EinSpec, base: Label) -> EinSpec {
+    let mut distinct: Vec<Label> = Vec::new();
+    for &l in spec.s1.iter().chain(&spec.s2).chain(&spec.s3) {
+        if !distinct.contains(&l) {
+            distinct.push(l);
+        }
+    }
+    spec.relabel(|l| base + distinct.iter().position(|&d| d == l).unwrap() as Label)
+}
+
+/// `0, 1, …, n-1` shifted by `base`.
+pub(crate) fn fresh_block(n: usize, base: Label) -> Vec<Label> {
+    (base..base + n as Label).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relabel_preserves_structure() {
+        let s = EinSpec::parse("ij,jk->ik");
+        let r = relabel_from(&s, 100);
+        assert_eq!(r.s1, vec![100, 101]);
+        assert_eq!(r.s2, vec![101, 102]);
+        assert_eq!(r.s3, vec![100, 102]);
+    }
+
+    #[test]
+    fn relabel_keeps_shared_labels_shared() {
+        let s = EinSpec::parse("ii,i->i");
+        let r = relabel_from(&s, 7);
+        assert_eq!(r.s1, vec![7, 7]);
+        assert_eq!(r.s2, vec![7]);
+        assert_eq!(r.s3, vec![7]);
+    }
+}

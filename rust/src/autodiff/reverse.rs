@@ -1,0 +1,371 @@
+//! Reverse mode automatic differentiation in Einstein notation
+//! (Section 3.2, Theorems 8–10).
+//!
+//! Each node `v` of the expression DAG receives a *pullback*
+//! `v̄ = ∂y/∂v`, a tensor with index set `s4 ++ s_v` where `s4` is the
+//! output's index set. The seed at the output is the unit tensor
+//! (a scalar `1` when `y` is scalar — in which case the pullback rules
+//! coincide exactly with what TF/PyTorch implement, as the paper notes
+//! after Theorem 8).
+
+use super::{fresh_block, relabel_from};
+use crate::einsum::{EinSpec, Label};
+use crate::ir::{Graph, NodeId, Op};
+use std::collections::HashMap;
+
+/// Reverse-mode derivative of `y` with respect to each variable in `xs`.
+/// The derivative w.r.t. `x` has shape `shape(y) ++ shape(x)`
+/// (Definition 4). One single sweep computes all of them — the property
+/// that makes reverse mode the default in deep-learning frameworks.
+pub fn reverse_derivative(g: &mut Graph, y: NodeId, xs: &[NodeId]) -> Vec<NodeId> {
+    let s4_shape = g.shape(y).to_vec();
+    let r4 = s4_shape.len();
+    // Seed: ∂y/∂y — scalar 1 for scalar outputs, the unit tensor otherwise.
+    let seed = if r4 == 0 { g.scalar(1.0) } else { g.delta(&s4_shape) };
+
+    let order = g.topo(&[y]);
+    // contributions to each node's pullback
+    let mut contrib: HashMap<NodeId, Vec<NodeId>> = HashMap::new();
+    contrib.insert(y, vec![seed]);
+
+    let total = |g: &mut Graph, parts: &[NodeId]| -> NodeId {
+        let mut it = parts.iter();
+        let first = *it.next().unwrap();
+        it.fold(first, |acc, &p| g.add(acc, p))
+    };
+
+    for &id in order.iter().rev() {
+        let parts = match contrib.get(&id) {
+            Some(p) if !p.is_empty() => p.clone(),
+            _ => continue, // node does not influence y
+        };
+        let vbar = total(g, &parts);
+        contrib.insert(id, vec![vbar]);
+
+        match g.op(id).clone() {
+            Op::Add(a, b) => {
+                // the contribution of an addition node to both arguments
+                // is simply C̄
+                contrib.entry(a).or_default().push(vbar);
+                contrib.entry(b).or_default().push(vbar);
+            }
+            Op::Mul(a, b, spec) => {
+                assert_distinct_operand_labels(&spec);
+                let s4 = fresh_block(r4, 0);
+                let sp = relabel_from(&spec, r4 as Label);
+                let s4s3: Vec<Label> = s4.iter().chain(&sp.s3).copied().collect();
+                // Theorem 8: contribution to Ā is C̄ *_(s4 s3, s2, s4 s1) B
+                let to_a = {
+                    let out: Vec<Label> = s4.iter().chain(&sp.s1).copied().collect();
+                    pullback_term(g, vbar, b, &s4s3, &sp.s2, &out, &sp.s1, g.shape(a).to_vec())
+                };
+                contrib.entry(a).or_default().push(to_a);
+                // and to B̄ it is C̄ *_(s4 s3, s1, s4 s2) A
+                let to_b = {
+                    let out: Vec<Label> = s4.iter().chain(&sp.s2).copied().collect();
+                    pullback_term(g, vbar, a, &s4s3, &sp.s1, &out, &sp.s2, g.shape(b).to_vec())
+                };
+                contrib.entry(b).or_default().push(to_b);
+            }
+            Op::Elem(f, a) => {
+                // Theorem 10: contribution is C̄ *_(s4 s1, s1, s4 s1) f'(A)
+                let r1 = g.order(a);
+                let s4 = fresh_block(r4, 0);
+                let s1 = fresh_block(r1, r4 as Label);
+                let fp = f.derivative(g, a);
+                let s41: Vec<Label> = s4.iter().chain(&s1).copied().collect();
+                let to_a = g.mul(vbar, fp, EinSpec::new(s41.clone(), s1, s41));
+                contrib.entry(a).or_default().push(to_a);
+            }
+            Op::GenUnary(f, a) => {
+                // Theorem 9: contribution is C̄ *_(s4 s2, s2 s1, s4 s1) f'(A)
+                let r2 = g.order(id); // range
+                let r1 = g.order(a); // domain
+                let s4 = fresh_block(r4, 0);
+                let s2 = fresh_block(r2, r4 as Label);
+                let s1 = fresh_block(r1, (r4 + r2) as Label);
+                let fp = f.derivative(g, a);
+                let s42: Vec<Label> = s4.iter().chain(&s2).copied().collect();
+                let s21: Vec<Label> = s2.iter().chain(&s1).copied().collect();
+                let s41: Vec<Label> = s4.iter().chain(&s1).copied().collect();
+                let to_a = g.mul(vbar, fp, EinSpec::new(s42, s21, s41));
+                contrib.entry(a).or_default().push(to_a);
+            }
+            Op::Var(_) | Op::Const(_) | Op::Delta { .. } => {}
+        }
+    }
+
+    xs.iter()
+        .map(|&x| match contrib.get(&x) {
+            Some(parts) if !parts.is_empty() => total(g, parts),
+            _ => {
+                // y does not depend on x: zero tensor of shape s4 ++ s_x
+                let shape: Vec<usize> =
+                    s4_shape.iter().chain(g.shape(x)).copied().collect();
+                g.constant(0.0, &shape)
+            }
+        })
+        .collect()
+}
+
+/// Gradient of a scalar-valued expression with respect to one variable.
+pub fn reverse_gradient(g: &mut Graph, y: NodeId, x: NodeId) -> NodeId {
+    assert!(g.shape(y).is_empty(), "reverse_gradient needs a scalar output");
+    reverse_derivative(g, y, &[x])[0]
+}
+
+/// Build one Theorem-8 pullback contribution `C̄ *_(s4s3, other, out)
+/// Other`, augmenting `Other` with a broadcast ones-tensor when `out`
+/// contains labels present in neither input. That happens exactly when
+/// the forward multiplication summed an axis the other operand does not
+/// carry (e.g. `Σ_ij A[ij]·1`): the pullback then *broadcasts* back over
+/// that axis.
+#[allow(clippy::too_many_arguments)]
+fn pullback_term(
+    g: &mut Graph,
+    vbar: NodeId,
+    other: NodeId,
+    s4s3: &[Label],
+    other_labels: &[Label],
+    out: &[Label],
+    own_labels: &[Label],
+    own_shape: Vec<usize>,
+) -> NodeId {
+    let mut missing: Vec<Label> = Vec::new();
+    let mut missing_dims: Vec<usize> = Vec::new();
+    for &l in out {
+        if !s4s3.contains(&l) && !other_labels.contains(&l) && !missing.contains(&l) {
+            let pos = own_labels.iter().position(|&x| x == l).expect("label origin");
+            missing.push(l);
+            missing_dims.push(own_shape[pos]);
+        }
+    }
+    if missing.is_empty() {
+        return g.mul(
+            vbar,
+            other,
+            EinSpec::new(s4s3.to_vec(), other_labels.to_vec(), out.to_vec()),
+        );
+    }
+    // outer-extend the other operand with ones over the missing axes
+    let ones = g.constant(1.0, &missing_dims);
+    let ext: Vec<Label> = other_labels.iter().chain(&missing).copied().collect();
+    let aug = g.mul(
+        other,
+        ones,
+        EinSpec::new(other_labels.to_vec(), missing.clone(), ext.clone()),
+    );
+    g.mul(vbar, aug, EinSpec::new(s4s3.to_vec(), ext, out.to_vec()))
+}
+
+fn assert_distinct_operand_labels(spec: &EinSpec) {
+    for ls in [&spec.s1, &spec.s2] {
+        for (i, l) in ls.iter().enumerate() {
+            assert!(
+                !ls[i + 1..].contains(l),
+                "repeated operand label in {} — rewrite the diagonal with an \
+                 explicit δ factor (see Graph::diag_of) to keep the node \
+                 differentiable",
+                spec
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::{eval, fd_gradient, fd_jacobian, Env};
+    use crate::ir::Elem;
+    use crate::tensor::Tensor;
+
+    fn env_of(pairs: &[(&str, Tensor)]) -> Env {
+        let mut env = Env::new();
+        for (n, t) in pairs {
+            env.insert(n, t.clone());
+        }
+        env
+    }
+
+    #[test]
+    fn gradient_of_quadratic_form() {
+        // f = xᵀAx  ⇒  ∇f = (A + Aᵀ)x — the paper's motivating example
+        let mut g = Graph::new();
+        let a = g.var("A", &[4, 4]);
+        let x = g.var("x", &[4]);
+        let ax = g.matvec(a, x);
+        let f = g.dot(x, ax);
+        let grad = reverse_gradient(&mut g, f, x);
+        let av = Tensor::randn(&[4, 4], 1);
+        let xv = Tensor::randn(&[4], 2);
+        let env = env_of(&[("A", av.clone()), ("x", xv.clone())]);
+        let gv = eval(&g, grad, &env);
+        let want = fd_gradient(&g, f, "x", &env, 1e-6);
+        assert!(gv.allclose(&want, 1e-5, 1e-7), "diff {}", gv.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn gradient_wrt_matrix() {
+        // f = xᵀAx ⇒ ∂f/∂A = x xᵀ
+        let mut g = Graph::new();
+        let a = g.var("A", &[3, 3]);
+        let x = g.var("x", &[3]);
+        let ax = g.matvec(a, x);
+        let f = g.dot(x, ax);
+        let grad = reverse_gradient(&mut g, f, a);
+        assert_eq!(g.shape(grad), &[3, 3]);
+        let env = env_of(&[("A", Tensor::randn(&[3, 3], 3)), ("x", Tensor::randn(&[3], 4))]);
+        let gv = eval(&g, grad, &env);
+        let want = fd_gradient(&g, f, "A", &env, 1e-6);
+        assert!(gv.allclose(&want, 1e-5, 1e-7));
+    }
+
+    #[test]
+    fn gradient_through_elementwise_chain() {
+        // f = Σ log(exp(Xw) + 1)
+        let mut g = Graph::new();
+        let x = g.var("X", &[5, 3]);
+        let w = g.var("w", &[3]);
+        let xw = g.matvec(x, w);
+        let e = g.elem(Elem::Exp, xw);
+        let one = g.constant(1.0, &[5]);
+        let s = g.add(e, one);
+        let l = g.elem(Elem::Log, s);
+        let f = g.sum_all(l);
+        let grad = reverse_gradient(&mut g, f, w);
+        let env = env_of(&[("X", Tensor::randn(&[5, 3], 5)), ("w", Tensor::randn(&[3], 6))]);
+        let gv = eval(&g, grad, &env);
+        let want = fd_gradient(&g, f, "w", &env, 1e-6);
+        assert!(gv.allclose(&want, 1e-5, 1e-7), "diff {}", gv.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn jacobian_of_vector_valued_function() {
+        // y = exp(Ax) (vector) ⇒ J ∈ R^{3×4}, non-scalar seed (δ tensor)
+        let mut g = Graph::new();
+        let a = g.var("A", &[3, 4]);
+        let x = g.var("x", &[4]);
+        let ax = g.matvec(a, x);
+        let y = g.elem(Elem::Exp, ax);
+        let jac = reverse_derivative(&mut g, y, &[x])[0];
+        assert_eq!(g.shape(jac), &[3, 4]);
+        let env = env_of(&[("A", Tensor::randn(&[3, 4], 7)), ("x", Tensor::randn(&[4], 8))]);
+        let jv = eval(&g, jac, &env);
+        let want = fd_jacobian(&g, y, "x", &env, 1e-6);
+        assert!(jv.allclose(&want, 1e-5, 1e-7), "diff {}", jv.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn jacobian_wrt_matrix_of_matrix_output() {
+        // Y = A B ⇒ ∂Y/∂B ∈ R^{2×4×3×4}
+        let mut g = Graph::new();
+        let a = g.var("A", &[2, 3]);
+        let b = g.var("B", &[3, 4]);
+        let y = g.matmul(a, b);
+        let jac = reverse_derivative(&mut g, y, &[b])[0];
+        assert_eq!(g.shape(jac), &[2, 4, 3, 4]);
+        let env = env_of(&[("A", Tensor::randn(&[2, 3], 9)), ("B", Tensor::randn(&[3, 4], 10))]);
+        let jv = eval(&g, jac, &env);
+        let want = fd_jacobian(&g, y, "B", &env, 1e-6);
+        assert!(jv.allclose(&want, 1e-4, 1e-6), "diff {}", jv.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn derivative_wrt_independent_variable_is_zero() {
+        let mut g = Graph::new();
+        let x = g.var("x", &[3]);
+        let z = g.var("z", &[2]);
+        let f = g.norm2(x);
+        let dz = reverse_derivative(&mut g, f, &[z])[0];
+        assert_eq!(g.shape(dz), &[2]);
+        let env = env_of(&[("x", Tensor::randn(&[3], 1)), ("z", Tensor::randn(&[2], 2))]);
+        assert_eq!(eval(&g, dz, &env), Tensor::zeros(&[2]));
+    }
+
+    #[test]
+    fn multiple_variables_single_sweep() {
+        // f = uᵀ v: one reverse sweep yields both gradients
+        let mut g = Graph::new();
+        let u = g.var("u", &[4]);
+        let v = g.var("v", &[4]);
+        let f = g.dot(u, v);
+        let grads = reverse_derivative(&mut g, f, &[u, v]);
+        let uv = Tensor::randn(&[4], 1);
+        let vv = Tensor::randn(&[4], 2);
+        let env = env_of(&[("u", uv.clone()), ("v", vv.clone())]);
+        assert!(eval(&g, grads[0], &env).allclose(&vv, 1e-12, 1e-12));
+        assert!(eval(&g, grads[1], &env).allclose(&uv, 1e-12, 1e-12));
+    }
+
+    #[test]
+    fn shared_subexpression_accumulates() {
+        // f = Σ (x ⊙ x): pullback must accumulate both uses of x
+        let mut g = Graph::new();
+        let x = g.var("x", &[3]);
+        let h = g.hadamard(x, x);
+        let f = g.sum_all(h);
+        let grad = reverse_gradient(&mut g, f, x);
+        let xv = Tensor::new(&[3], vec![1.0, 2.0, 3.0]);
+        let env = env_of(&[("x", xv.clone())]);
+        let gv = eval(&g, grad, &env);
+        assert!(gv.allclose(&xv.scale(2.0), 1e-12, 1e-12), "{:?}", gv);
+    }
+
+    #[test]
+    fn gradient_through_general_unary_softmax() {
+        // f = Σ (softmax(x) ⊙ c) — Theorem 9 path
+        let mut g = Graph::new();
+        let x = g.var("x", &[4]);
+        let c = g.var("c", &[4]);
+        let s = g.gen_unary(crate::ir::GenFn::Softmax, x);
+        let p = g.hadamard(s, c);
+        let f = g.sum_all(p);
+        let grad = reverse_gradient(&mut g, f, x);
+        let env = env_of(&[("x", Tensor::randn(&[4], 3)), ("c", Tensor::randn(&[4], 4))]);
+        let gv = eval(&g, grad, &env);
+        let want = fd_gradient(&g, f, "x", &env, 1e-6);
+        assert!(gv.allclose(&want, 1e-5, 1e-7), "diff {}", gv.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn gradient_through_batched_softmax() {
+        // batched softmax exercises the δ-over-batch structure of f'
+        let mut g = Graph::new();
+        let x = g.var("X", &[3, 4]);
+        let c = g.var("C", &[3, 4]);
+        let s = g.gen_unary(crate::ir::GenFn::Softmax, x);
+        let p = g.hadamard(s, c);
+        let f = g.sum_all(p);
+        let grad = reverse_gradient(&mut g, f, x);
+        let env = env_of(&[("X", Tensor::randn(&[3, 4], 5)), ("C", Tensor::randn(&[3, 4], 6))]);
+        let gv = eval(&g, grad, &env);
+        let want = fd_gradient(&g, f, "X", &env, 1e-6);
+        assert!(gv.allclose(&want, 1e-5, 1e-7), "diff {}", gv.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn gradient_through_logsumexp() {
+        let mut g = Graph::new();
+        let x = g.var("X", &[3, 4]);
+        let l = g.gen_unary(crate::ir::GenFn::LogSumExp, x);
+        let f = g.sum_all(l);
+        let grad = reverse_gradient(&mut g, f, x);
+        let env = env_of(&[("X", Tensor::randn(&[3, 4], 7))]);
+        let gv = eval(&g, grad, &env);
+        let want = fd_gradient(&g, f, "X", &env, 1e-6);
+        assert!(gv.allclose(&want, 1e-5, 1e-7), "diff {}", gv.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn relu_subgradient_matches_where_differentiable() {
+        let mut g = Graph::new();
+        let x = g.var("x", &[4]);
+        let r = g.elem(Elem::Relu, x);
+        let f = g.sum_all(r);
+        let grad = reverse_gradient(&mut g, f, x);
+        let xv = Tensor::new(&[4], vec![-2.0, -0.5, 0.5, 2.0]);
+        let env = env_of(&[("x", xv)]);
+        let gv = eval(&g, grad, &env);
+        assert_eq!(gv.data(), &[0.0, 0.0, 1.0, 1.0]);
+    }
+}

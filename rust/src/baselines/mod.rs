@@ -1,0 +1,129 @@
+//! The comparator the paper benchmarks against: standard deep-learning
+//! frameworks (TensorFlow, PyTorch, autograd, JAX) compute the derivative
+//! of a non-scalar function "for each entry of the output function
+//! separately" (§1, §4 — the Pearlmutter [10] strategy). For Hessians
+//! this means one full reverse sweep per gradient entry, which is the
+//! source of the 2–3 orders-of-magnitude gap in Figure 3.
+
+use crate::autodiff::reverse::reverse_gradient;
+use crate::eval::{Env, Plan};
+use crate::ir::{Graph, NodeId, Op};
+use crate::simplify::simplify_one;
+use crate::tensor::Tensor;
+
+/// A prepared per-entry Hessian evaluator: one scalar-seeded reverse-mode
+/// row expression, evaluated once per gradient entry with a basis vector
+/// bound — exactly the framework strategy.
+pub struct PerEntryHessian {
+    row_plan: Plan,
+    row_node: NodeId,
+    basis_name: String,
+    x_shape: Vec<usize>,
+}
+
+impl PerEntryHessian {
+    /// Build the row expression `∂(eᵀ·grad)/∂x` for a scalar loss.
+    pub fn new(g: &mut Graph, loss: NodeId, x: NodeId) -> Self {
+        assert!(g.shape(loss).is_empty());
+        let x_shape = g.shape(x).to_vec();
+        let grad = reverse_gradient(g, loss, x);
+        let grad = simplify_one(g, grad);
+        // scalar projection against a (runtime) basis tensor
+        let basis_name = "__basis".to_string();
+        let e = g.var(&basis_name, &x_shape);
+        let p = g.hadamard(grad, e);
+        let gi = g.sum_all(p);
+        let row = reverse_gradient(g, gi, x);
+        let row = simplify_one(g, row);
+        let row_plan = Plan::new(g, &[row]);
+        PerEntryHessian { row_plan, row_node: row, basis_name, x_shape }
+    }
+
+    /// Evaluate the full Hessian: `Π shape(x)` reverse sweeps.
+    pub fn eval(&self, g: &Graph, env: &Env) -> Tensor {
+        let n: usize = self.x_shape.iter().product();
+        let mut h_shape = self.x_shape.clone();
+        h_shape.extend(&self.x_shape);
+        let mut h = Tensor::zeros(&h_shape);
+        let mut env = env.clone();
+        let mut basis = Tensor::zeros(&self.x_shape);
+        for i in 0..n {
+            basis.data_mut()[i] = 1.0;
+            env.insert(&self.basis_name, basis.clone());
+            let row = self.row_plan.run(g, &env).pop().unwrap();
+            h.data_mut()[i * n..(i + 1) * n].copy_from_slice(row.data());
+            basis.data_mut()[i] = 0.0;
+        }
+        h
+    }
+
+    /// Number of reverse sweeps one Hessian evaluation costs.
+    pub fn sweeps(&self) -> usize {
+        self.x_shape.iter().product()
+    }
+
+    pub fn row_node(&self) -> NodeId {
+        self.row_node
+    }
+}
+
+/// Left-to-right (pure reverse-mode-order) evaluation baseline for the
+/// cross-country ablation: the Hessian expression *without* the
+/// re-association pass, i.e. exactly what `Workload::hessian` returns.
+/// Provided as a named function for the bench tables.
+pub fn reverse_mode_hessian(g: &mut Graph, loss: NodeId, x: NodeId) -> NodeId {
+    crate::autodiff::hessian::hessian(g, loss, x)
+}
+
+/// Count framework-visible "ops" (nodes) of a DAG — used in reports to
+/// contrast expression sizes between modes.
+pub fn op_count(g: &Graph, root: NodeId) -> (usize, usize) {
+    let nodes = g.topo(&[root]);
+    let muls = nodes
+        .iter()
+        .filter(|&&n| matches!(g.op(n), Op::Mul(..)))
+        .count();
+    (nodes.len(), muls)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::eval;
+    use crate::problems::logistic_regression;
+
+    #[test]
+    fn per_entry_hessian_matches_symbolic() {
+        let mut w = logistic_regression(10, 4);
+        let h_node = w.hessian();
+        let want = eval(&w.g, h_node, &w.env);
+        let pe = PerEntryHessian::new(&mut w.g, w.loss, w.wrt);
+        assert_eq!(pe.sweeps(), 4);
+        let got = pe.eval(&w.g, &w.env);
+        assert!(
+            got.allclose(&want, 1e-8, 1e-10),
+            "per-entry disagrees, diff {}",
+            got.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn per_entry_on_matrix_variable() {
+        use crate::problems::matrix_factorization;
+        let mut w = matrix_factorization(5, 5, 2, false);
+        let h_node = w.hessian();
+        let want = eval(&w.g, h_node, &w.env);
+        let pe = PerEntryHessian::new(&mut w.g, w.loss, w.wrt);
+        assert_eq!(pe.sweeps(), 10);
+        let got = pe.eval(&w.g, &w.env);
+        assert!(got.allclose(&want, 1e-8, 1e-10));
+    }
+
+    #[test]
+    fn op_count_reports() {
+        let mut w = logistic_regression(6, 3);
+        let h = w.hessian();
+        let (nodes, muls) = op_count(&w.g, h);
+        assert!(nodes > 0 && muls > 0 && muls < nodes);
+    }
+}

@@ -1,0 +1,120 @@
+//! Lock-light service metrics: counters + a sampled latency reservoir.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Shared metrics for the coordinator.
+pub struct Metrics {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    errors: AtomicU64,
+    /// per-entry latency samples (seconds), capped reservoir
+    latencies: Mutex<HashMap<String, Vec<f64>>>,
+}
+
+/// A point-in-time view.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub errors: u64,
+    /// per-entry (count, p50, p99) in seconds
+    pub per_entry: Vec<(String, usize, f64, f64)>,
+}
+
+const RESERVOIR: usize = 4096;
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics {
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            latencies: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn submitted(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn completed(&self, entry: &str, latency: f64, is_err: bool) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        if is_err {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut map = self.latencies.lock().unwrap();
+        let v = map.entry(entry.to_string()).or_default();
+        if v.len() < RESERVOIR {
+            v.push(latency);
+        } else {
+            // simple overwrite reservoir
+            let i = (latency.to_bits() as usize) % RESERVOIR;
+            v[i] = latency;
+        }
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let map = self.latencies.lock().unwrap();
+        let mut per_entry = Vec::new();
+        for (name, v) in map.iter() {
+            let mut s = v.clone();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let p = |q: f64| -> f64 {
+                if s.is_empty() {
+                    0.0
+                } else {
+                    s[((s.len() - 1) as f64 * q) as usize]
+                }
+            };
+            per_entry.push((name.clone(), v.len(), p(0.5), p(0.99)));
+        }
+        per_entry.sort_by(|a, b| a.0.cmp(&b.0));
+        Snapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            per_entry,
+        }
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.submitted();
+        m.submitted();
+        m.completed("a", 0.001, false);
+        m.completed("a", 0.002, true);
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 2);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.per_entry.len(), 1);
+        let (name, count, p50, p99) = &s.per_entry[0];
+        assert_eq!(name, "a");
+        assert_eq!(*count, 2);
+        assert!(*p50 > 0.0 && *p99 >= *p50);
+    }
+
+    #[test]
+    fn reservoir_caps_memory() {
+        let m = Metrics::new();
+        for i in 0..10_000 {
+            m.completed("x", i as f64 * 1e-6, false);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.per_entry[0].1, RESERVOIR);
+    }
+}

@@ -1,0 +1,427 @@
+//! Dense evaluation of the generic multiplication `C = A *_(s1,s2,s3) B`.
+//!
+//! Strategy (the classical einsum-to-GEMM reduction, as in `np.einsum` /
+//! `opt_einsum`):
+//!
+//! 1. *Diagonalize*: repeated labels within one operand become a strided
+//!    diagonal view that is materialised compactly.
+//! 2. *Pre-reduce*: labels private to one operand and absent from the
+//!    output are summed out immediately.
+//! 3. *Classify* the remaining labels into **batch** (in A, B and out),
+//!    **M** (A and out), **N** (B and out) and **K** (A and B, summed).
+//! 4. Permute to `A[batch, M, K]`, `B[batch, K, N]`, run the blocked GEMM
+//!    per batch slice (rayon over batches when the slices are small), and
+//!    permute the `[batch, M, N]` result to the requested output order.
+
+use super::gemm::gemm_into;
+use super::spec::{EinSpec, Label};
+use crate::tensor::{row_major_strides, Tensor};
+use crate::util::par_band_zip2;
+
+/// Sum a tensor over the given (distinct) axes.
+pub fn reduce_sum(t: &Tensor, axes: &[usize]) -> Tensor {
+    if axes.is_empty() {
+        return t.clone();
+    }
+    let keep: Vec<usize> = (0..t.order()).filter(|ax| !axes.contains(ax)).collect();
+    let mut perm = keep.clone();
+    perm.extend_from_slice(axes);
+    let moved = t.permute(&perm);
+    let keep_shape: Vec<usize> = keep.iter().map(|&ax| t.shape()[ax]).collect();
+    let chunk: usize = axes.iter().map(|&ax| t.shape()[ax]).product();
+    let out: Vec<f64> = moved
+        .data()
+        .chunks(chunk.max(1))
+        .map(|c| c.iter().sum())
+        .collect();
+    Tensor::new(&keep_shape, out)
+}
+
+/// Materialise the diagonal view of an operand with repeated labels:
+/// returns the tensor restricted to distinct labels (first-occurrence
+/// order) together with those labels.
+fn dedup(t: &Tensor, labels: &[Label]) -> (Tensor, Vec<Label>) {
+    let mut distinct: Vec<Label> = Vec::new();
+    for &l in labels {
+        if !distinct.contains(&l) {
+            distinct.push(l);
+        }
+    }
+    if distinct.len() == labels.len() {
+        return (t.clone(), distinct);
+    }
+    let strides_in = row_major_strides(t.shape());
+    // combined stride and dim per distinct label
+    let mut dims = Vec::with_capacity(distinct.len());
+    let mut strides = Vec::with_capacity(distinct.len());
+    for &l in &distinct {
+        let mut s = 0usize;
+        let mut d = 0usize;
+        for (pos, &ll) in labels.iter().enumerate() {
+            if ll == l {
+                s += strides_in[pos];
+                d = t.shape()[pos];
+            }
+        }
+        dims.push(d);
+        strides.push(s);
+    }
+    let n: usize = dims.iter().product();
+    let mut out = vec![0.0; n];
+    let rank = dims.len();
+    let mut idx = vec![0usize; rank];
+    let mut src = 0usize;
+    for slot in out.iter_mut() {
+        *slot = t.data()[src];
+        for ax in (0..rank).rev() {
+            idx[ax] += 1;
+            src += strides[ax];
+            if idx[ax] < dims[ax] {
+                break;
+            }
+            src -= strides[ax] * dims[ax];
+            idx[ax] = 0;
+        }
+        if rank == 0 {
+            break;
+        }
+    }
+    (Tensor::new(&dims, out), distinct)
+}
+
+/// Sum out labels private to this operand that are not in the output.
+fn presum(t: Tensor, labels: Vec<Label>, other: &[Label], out: &[Label]) -> (Tensor, Vec<Label>) {
+    let dead: Vec<usize> = labels
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| !other.contains(l) && !out.contains(l))
+        .map(|(ax, _)| ax)
+        .collect();
+    if dead.is_empty() {
+        return (t, labels);
+    }
+    let kept: Vec<Label> = labels
+        .iter()
+        .enumerate()
+        .filter(|(ax, _)| !dead.contains(ax))
+        .map(|(_, &l)| l)
+        .collect();
+    (reduce_sum(&t, &dead), kept)
+}
+
+/// Permute `t` (with `labels`) into the axis order given by `target`.
+fn to_order(t: &Tensor, labels: &[Label], target: &[Label]) -> Tensor {
+    debug_assert_eq!(labels.len(), target.len());
+    let perm: Vec<usize> = target
+        .iter()
+        .map(|l| labels.iter().position(|ll| ll == l).expect("label missing in to_order"))
+        .collect();
+    if perm.iter().enumerate().all(|(i, &p)| i == p) {
+        t.clone()
+    } else {
+        t.permute(&perm)
+    }
+}
+
+/// Evaluate `A *_(s1,s2,s3) B` on dense tensors.
+pub fn einsum(spec: &EinSpec, a: &Tensor, b: &Tensor) -> Tensor {
+    let out_shape = spec
+        .output_shape(a.shape(), b.shape())
+        .unwrap_or_else(|e| panic!("einsum shape error: {}", e));
+
+    // Fast path: aligned element-wise multiplication (`s1 == s2 == s3`,
+    // distinct labels — the ⊙ rows of Table 1).
+    if spec.is_elementwise() && has_distinct(&spec.s1) {
+        return a.mul_elem(b);
+    }
+
+    let (a_t, a_l) = dedup(a, &spec.s1);
+    let (b_t, b_l) = dedup(b, &spec.s2);
+    let (a_t, a_l) = presum(a_t, a_l, &b_l, &spec.s3);
+    let (b_t, b_l) = presum(b_t, b_l, &a_l, &spec.s3);
+
+    // Scalar operand → pure scale of the other side.
+    if b_l.is_empty() {
+        let m_labels: Vec<Label> = spec.s3.clone();
+        let scaled = a_t.scale(b_t.item());
+        return to_order(&scaled, &a_l, &m_labels);
+    }
+    if a_l.is_empty() {
+        let n_labels: Vec<Label> = spec.s3.clone();
+        let scaled = b_t.scale(a_t.item());
+        return to_order(&scaled, &b_l, &n_labels);
+    }
+
+    // Classify surviving labels.
+    let batch: Vec<Label> = spec
+        .s3
+        .iter()
+        .filter(|l| a_l.contains(l) && b_l.contains(l))
+        .copied()
+        .collect();
+    let m_labels: Vec<Label> = a_l
+        .iter()
+        .filter(|l| spec.s3.contains(l) && !b_l.contains(l))
+        .copied()
+        .collect();
+    let n_labels: Vec<Label> = b_l
+        .iter()
+        .filter(|l| spec.s3.contains(l) && !a_l.contains(l))
+        .copied()
+        .collect();
+    let k_labels: Vec<Label> = a_l
+        .iter()
+        .filter(|l| b_l.contains(l) && !spec.s3.contains(l))
+        .copied()
+        .collect();
+
+    let dim_of = |l: Label| -> usize {
+        a_l.iter()
+            .position(|&ll| ll == l)
+            .map(|p| a_t.shape()[p])
+            .or_else(|| b_l.iter().position(|&ll| ll == l).map(|p| b_t.shape()[p]))
+            .unwrap()
+    };
+
+    let mut a_order = batch.clone();
+    a_order.extend(&m_labels);
+    a_order.extend(&k_labels);
+    let mut b_order = batch.clone();
+    b_order.extend(&k_labels);
+    b_order.extend(&n_labels);
+    let a_g = to_order(&a_t, &a_l, &a_order);
+    let b_g = to_order(&b_t, &b_l, &b_order);
+
+    let bsz: usize = batch.iter().map(|&l| dim_of(l)).product();
+    let m: usize = m_labels.iter().map(|&l| dim_of(l)).product();
+    let k: usize = k_labels.iter().map(|&l| dim_of(l)).product();
+    let n: usize = n_labels.iter().map(|&l| dim_of(l)).product();
+
+    let mut c = vec![0.0; bsz * m * n];
+
+    if k == 0 || m == 0 || n == 0 || bsz == 0 {
+        // empty contraction — all zeros
+    } else if k_labels.is_empty() && m == 1 && n == 1 {
+        // pure batched element-wise product
+        for ((cv, av), bv) in c.iter_mut().zip(a_g.data()).zip(b_g.data()) {
+            *cv = av * bv;
+        }
+    } else if k_labels.is_empty() && n == 1 {
+        // row broadcast: C[b, m] = A[b, m] · B[b]
+        for bi in 0..bsz {
+            let bv = b_g.data()[bi];
+            let arow = &a_g.data()[bi * m..(bi + 1) * m];
+            let crow = &mut c[bi * m..(bi + 1) * m];
+            for (cv, av) in crow.iter_mut().zip(arow) {
+                *cv = av * bv;
+            }
+        }
+    } else {
+        // batched GEMM (when k_labels is empty, k == 1 and GEMM degrades
+        // gracefully to a batched outer product)
+        let per = m * k.max(1) * n;
+        if bsz > 1 && per < (1 << 16) && bsz * per > (1 << 16) {
+            par_band_zip2(
+                &mut c,
+                m * n,
+                a_g.data(),
+                m * k,
+                b_g.data(),
+                k * n,
+                |_, cc, aa, bb| {
+                    for ((cs, as_), bs) in cc
+                        .chunks_mut(m * n)
+                        .zip(as_chunks(aa, m * k))
+                        .zip(as_chunks(bb, k * n))
+                    {
+                        gemm_into(as_, bs, cs, m, k, n);
+                    }
+                },
+            );
+        } else {
+            for bi in 0..bsz {
+                gemm_into(
+                    &a_g.data()[bi * m * k..(bi + 1) * m * k],
+                    &b_g.data()[bi * k * n..(bi + 1) * k * n],
+                    &mut c[bi * m * n..(bi + 1) * m * n],
+                    m,
+                    k,
+                    n,
+                );
+            }
+        }
+    }
+
+    let mut res_labels = batch;
+    res_labels.extend(&m_labels);
+    res_labels.extend(&n_labels);
+    let res_shape: Vec<usize> = res_labels.iter().map(|&l| dim_of(l)).collect();
+    let res = Tensor::new(&res_shape, c);
+    let out = to_order(&res, &res_labels, &spec.s3);
+    debug_assert_eq!(out.shape(), &out_shape[..]);
+    out
+}
+
+fn as_chunks(s: &[f64], chunk: usize) -> std::slice::Chunks<'_, f64> {
+    s.chunks(chunk.max(1))
+}
+
+fn has_distinct(ls: &[Label]) -> bool {
+    ls.iter().enumerate().all(|(i, l)| !ls[i + 1..].contains(l))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Brute-force reference: iterate every (output ∪ summed) index tuple.
+    pub fn einsum_naive(spec: &EinSpec, a: &Tensor, b: &Tensor) -> Tensor {
+        let out_shape = spec.output_shape(a.shape(), b.shape()).unwrap();
+        // label -> dim
+        let mut labels: Vec<Label> = Vec::new();
+        let mut dims: Vec<usize> = Vec::new();
+        for (&l, &d) in spec.s1.iter().zip(a.shape()).chain(spec.s2.iter().zip(b.shape())) {
+            if !labels.contains(&l) {
+                labels.push(l);
+                dims.push(d);
+            }
+        }
+        let total: usize = dims.iter().product::<usize>().max(1);
+        let mut out = Tensor::zeros(&out_shape);
+        let pos = |l: Label| labels.iter().position(|&x| x == l).unwrap();
+        for flat in 0..total {
+            // decode assignment
+            let mut assign = vec![0usize; labels.len()];
+            let mut rem = flat;
+            for i in (0..labels.len()).rev() {
+                assign[i] = rem % dims[i];
+                rem /= dims[i];
+            }
+            let ai: Vec<usize> = spec.s1.iter().map(|&l| assign[pos(l)]).collect();
+            let bi: Vec<usize> = spec.s2.iter().map(|&l| assign[pos(l)]).collect();
+            let oi: Vec<usize> = spec.s3.iter().map(|&l| assign[pos(l)]).collect();
+            let mut oflat = 0usize;
+            for (x, &d) in oi.iter().zip(&out_shape) {
+                oflat = oflat * d + x;
+            }
+            out.data_mut()[oflat] += a.at(&ai) * b.at(&bi);
+        }
+        out
+    }
+
+    fn check(sig: &str, a_shape: &[usize], b_shape: &[usize]) {
+        let spec = EinSpec::parse(sig);
+        let a = Tensor::randn(a_shape, 11);
+        let b = Tensor::randn(b_shape, 22);
+        let fast = einsum(&spec, &a, &b);
+        let slow = einsum_naive(&spec, &a, &b);
+        assert!(
+            fast.allclose(&slow, 1e-9, 1e-9),
+            "{} mismatch: max diff {}",
+            sig,
+            fast.max_abs_diff(&slow)
+        );
+    }
+
+    #[test]
+    fn matmul_family() {
+        check("ij,jk->ik", &[4, 5], &[5, 6]);
+        check("ji,jk->ik", &[5, 4], &[5, 6]); // AᵀB
+        check("ij,kj->ik", &[4, 5], &[6, 5]); // ABᵀ
+        check("ij,j->i", &[4, 5], &[5]); // matvec
+        check("i,ij->j", &[4], &[4, 5]); // vecmat
+        check("i,i->", &[7], &[7]); // dot
+    }
+
+    #[test]
+    fn outer_and_elementwise() {
+        check("i,j->ij", &[3], &[4]);
+        check("i,i->i", &[5], &[5]);
+        check("ij,ij->ij", &[3, 4], &[3, 4]);
+        check("ij,i->ij", &[3, 4], &[3]); // diag-scale rows
+        check("ij,j->ij", &[3, 4], &[4]); // diag-scale cols
+    }
+
+    #[test]
+    fn reductions() {
+        check("ij,->i", &[3, 4], &[]); // row sums via scalar 1
+        check("ij,->", &[3, 4], &[]); // total sum
+        check("ijk,->ik", &[2, 3, 4], &[]);
+        check("ij,ij->", &[3, 4], &[3, 4]); // full contraction
+        check("ij,ij->i", &[3, 4], &[3, 4]); // row-wise dot
+    }
+
+    #[test]
+    fn higher_order() {
+        check("ijk,kl->ijl", &[2, 3, 4], &[4, 5]);
+        check("ijkl,kl->ij", &[2, 3, 4, 5], &[4, 5]);
+        check("ijkl,jl->ik", &[2, 3, 4, 3], &[3, 3]);
+        check("ij,kl->ijkl", &[2, 3], &[4, 5]); // big outer
+        check("abc,cd->abd", &[3, 2, 4], &[4, 2]);
+        check("aij,ajk->aik", &[3, 2, 4], &[3, 4, 2]); // batched matmul
+    }
+
+    #[test]
+    fn diagonal_specs() {
+        check("ii,->i", &[4, 4], &[]); // diag extraction
+        check("ii,->", &[4, 4], &[]); // trace
+        check("ij,ii->j", &[4, 4], &[4, 4]);
+        check("iji,j->ij", &[3, 4, 3], &[4]);
+    }
+
+    #[test]
+    fn private_label_presum() {
+        check("ij,k->i", &[3, 4], &[5]); // j and k summed privately
+        check("ijk,l->ik", &[2, 3, 4], &[5]);
+    }
+
+    #[test]
+    fn permuted_outputs() {
+        check("ij,jk->ki", &[3, 4], &[4, 5]);
+        check("ijk,->kji", &[2, 3, 4], &[]);
+        check("ij,kl->ljki", &[2, 3], &[4, 5]);
+    }
+
+    #[test]
+    fn scalar_operands() {
+        check(",->", &[], &[]);
+        check("ij,->ij", &[3, 4], &[]);
+        check(",ij->ij", &[], &[3, 4]);
+    }
+
+    #[test]
+    fn parallel_batched_path() {
+        // bsz large, small per-batch gemms → exercises the rayon batch path
+        check("aij,ajk->aik", &[300, 4, 4], &[300, 4, 4]);
+    }
+
+    #[test]
+    fn delta_contraction_numeric() {
+        // A[i,j] δ[j,k] summed over j must equal relabeling j→k.
+        let a = Tensor::randn(&[3, 4], 5);
+        let d = Tensor::delta(&[4]);
+        let spec = EinSpec::parse("ij,jk->ik");
+        let out = einsum(&spec, &a, &d);
+        assert!(out.allclose(&a, 1e-12, 1e-12));
+    }
+
+    #[test]
+    fn matfac_compression_identity() {
+        // H[i,j,k,l] = M[j,l]·δ[i,k]: materialised vs compressed semantics.
+        let m = Tensor::randn(&[3, 3], 8);
+        let d = Tensor::delta(&[5]);
+        let spec = EinSpec::parse("jl,ik->ijkl");
+        let h = einsum(&spec, &m, &d);
+        assert_eq!(h.shape(), &[5, 3, 5, 3]);
+        for i in 0..5 {
+            for j in 0..3 {
+                for k in 0..5 {
+                    for l in 0..3 {
+                        let want = if i == k { m.at(&[j, l]) } else { 0.0 };
+                        assert!((h.at(&[i, j, k, l]) - want).abs() < 1e-12);
+                    }
+                }
+            }
+        }
+    }
+}

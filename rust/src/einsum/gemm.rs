@@ -1,0 +1,157 @@
+//! Blocked dense GEMM — the inner kernel every contraction reduces to.
+//!
+//! `C[m,n] += Σ_k A[m,k] · B[k,n]` over row-major contiguous buffers.
+//! The kernel is cache-blocked over `k` and parallelised over row bands
+//! with scoped threads; the innermost `j` loop is written so LLVM
+//! auto-vectorises it (contiguous FMA over the output row).
+
+use crate::util::par_band_zip;
+
+/// Cache block along the contraction dimension (fits a few rows of B in L1/L2).
+const KC: usize = 256;
+/// Cache block along the output columns (B panel = KC·NC·8 bytes ≤ L2).
+const NC: usize = 512;
+/// Below this many total flops, the thread fork overhead dominates — run serially.
+const PAR_FLOP_THRESHOLD: usize = 1 << 17;
+
+/// `C = A · B` into a fresh buffer. `a` is `m×k` row-major, `b` is `k×n`.
+pub fn gemm(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    let mut c = vec![0.0; m * n];
+    gemm_into(a, b, &mut c, m, k, n);
+    c
+}
+
+/// `C += A · B` (accumulating) into an existing `m×n` buffer.
+pub fn gemm_into(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    // Degenerate shapes: dot products and outer products have cheaper forms.
+    if n == 1 && k > 1 {
+        // C[m] += A[m,k] · b[k]
+        let matvec_row = |ci: &mut f64, arow: &[f64]| {
+            let mut acc = 0.0;
+            for (av, bv) in arow.iter().zip(b.iter()) {
+                acc += av * bv;
+            }
+            *ci += acc;
+        };
+        if m * k >= PAR_FLOP_THRESHOLD {
+            par_band_zip(c, 1, a, k, |_, cb, ab| {
+                for (ci, arow) in cb.iter_mut().zip(ab.chunks(k)) {
+                    matvec_row(ci, arow);
+                }
+            });
+        } else {
+            for (ci, arow) in c.iter_mut().zip(a.chunks(k)) {
+                matvec_row(ci, arow);
+            }
+        }
+        return;
+    }
+
+    let body = |c_block: &mut [f64], a_block: &[f64]| {
+        let rows = c_block.len() / n;
+        for k0 in (0..k).step_by(KC) {
+            let kend = (k0 + KC).min(k);
+            // column blocking keeps the active B panel (KC×NC doubles)
+            // resident in L2 across the i loop
+            for j0 in (0..n).step_by(NC) {
+                let jend = (j0 + NC).min(n);
+                for i in 0..rows {
+                    let arow = &a_block[i * k..(i + 1) * k];
+                    let crow = &mut c_block[i * n + j0..i * n + jend];
+                    for kk in k0..kend {
+                        let av = arow[kk];
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let brow = &b[kk * n + j0..kk * n + jend];
+                        // contiguous fused multiply-add over the output
+                        // row — auto-vectorised
+                        for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                            *cv += av * bv;
+                        }
+                    }
+                }
+            }
+        }
+    };
+
+    if m * n * k >= PAR_FLOP_THRESHOLD && m > 1 {
+        par_band_zip(c, n, a, k, |_, cb, ab| body(cb, ab));
+    } else {
+        body(c, a);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::XorShift;
+
+    fn naive(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += a[i * k + kk] * b[kk * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f64> {
+        let mut r = XorShift::new(seed);
+        (0..n).map(|_| r.next_f64() - 0.5).collect()
+    }
+
+    fn check(m: usize, k: usize, n: usize) {
+        let a = rand_vec(m * k, 1);
+        let b = rand_vec(k * n, 2);
+        let got = gemm(&a, &b, m, k, n);
+        let want = naive(&a, &b, m, k, n);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-10, "{} vs {} ({m}x{k}x{n})", g, w);
+        }
+    }
+
+    #[test]
+    fn small_shapes() {
+        check(1, 1, 1);
+        check(2, 3, 4);
+        check(5, 1, 7);
+        check(1, 9, 1);
+        check(7, 7, 7);
+    }
+
+    #[test]
+    fn blocked_shapes() {
+        check(33, 300, 17); // crosses KC and MC boundaries
+        check(64, 64, 64);
+        check(100, 513, 3);
+    }
+
+    #[test]
+    fn parallel_path() {
+        check(200, 200, 200); // above PAR_FLOP_THRESHOLD
+    }
+
+    #[test]
+    fn matvec_path() {
+        check(100, 700, 1);
+    }
+
+    #[test]
+    fn accumulation_semantics() {
+        let a = vec![1.0, 2.0];
+        let b = vec![3.0, 4.0];
+        let mut c = vec![10.0];
+        gemm_into(&a, &b, &mut c, 1, 2, 1);
+        assert_eq!(c, vec![10.0 + 3.0 + 8.0]);
+    }
+}

@@ -1,0 +1,21 @@
+//! The generic Einstein-notation tensor multiplication `C = A *_(s1,s2,s3) B`
+//! (Section 2 of the paper) and its dense evaluation engine.
+//!
+//! The semantics is
+//!
+//! ```text
+//! C[s3] = Σ_{(s1 ∪ s2) \ s3}  A[s1] · B[s2]        with  s3 ⊆ s1 ∪ s2
+//! ```
+//!
+//! which is exactly NumPy/TF/PyTorch `einsum` restricted to two operands.
+//! [`EinSpec`] carries the three ordered label lists; [`einsum`] evaluates
+//! a spec on dense tensors by reduction to batched GEMM with fast paths
+//! for element-wise, scale/reduce and broadcast shapes.
+
+mod exec;
+mod gemm;
+mod spec;
+
+pub use exec::{einsum, reduce_sum};
+pub use gemm::{gemm, gemm_into};
+pub use spec::{EinSpec, Label};

@@ -1,0 +1,257 @@
+//! Index-set specifications for the generic tensor multiplication.
+
+use std::fmt;
+
+/// An index label. Labels are *local to one [`EinSpec`]* — they name axes
+/// of the two operands and the result, exactly like the letters in an
+/// einsum string `"ij,jk->ik"`.
+pub type Label = u32;
+
+/// The `(s1, s2, s3)` triple of the paper's generic multiplication
+/// `C = A *_(s1,s2,s3) B`:
+///
+/// * `s1` labels the axes of the left operand (in order),
+/// * `s2` labels the axes of the right operand,
+/// * `s3` labels the axes of the result; every label summed over is the
+///   one *missing* from `s3` (the paper's explicit-output convention).
+///
+/// Invariants (checked by [`EinSpec::validate`]):
+/// * `s3 ⊆ s1 ∪ s2`,
+/// * `s3` has no repeated labels (operands may repeat labels — that is a
+///   diagonal extraction, e.g. `diag(A) = A *_(ii,∅,i) 1`).
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct EinSpec {
+    pub s1: Vec<Label>,
+    pub s2: Vec<Label>,
+    pub s3: Vec<Label>,
+}
+
+impl EinSpec {
+    pub fn new(s1: Vec<Label>, s2: Vec<Label>, s3: Vec<Label>) -> Self {
+        let spec = EinSpec { s1, s2, s3 };
+        spec.validate().expect("invalid EinSpec");
+        spec
+    }
+
+    /// Parse an einsum-style string, e.g. `"ij,jk->ik"` or `"i,->i"`.
+    /// Each ASCII letter becomes one label.
+    pub fn parse(s: &str) -> Self {
+        let (ins, out) = s.split_once("->").expect("spec needs ->");
+        let (a, b) = ins.split_once(',').expect("spec needs two operands");
+        let lab = |c: char| c as Label;
+        EinSpec::new(
+            a.chars().map(lab).collect(),
+            b.chars().map(lab).collect(),
+            out.chars().map(lab).collect(),
+        )
+    }
+
+    /// Check the structural invariants (labels only — dimension consistency
+    /// is checked against concrete shapes in [`EinSpec::output_shape`]).
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, l) in self.s3.iter().enumerate() {
+            if self.s3[i + 1..].contains(l) {
+                return Err(format!("repeated output label {} in {}", l, self));
+            }
+            if !self.s1.contains(l) && !self.s2.contains(l) {
+                return Err(format!("output label {} not in s1 ∪ s2 ({})", l, self));
+            }
+        }
+        Ok(())
+    }
+
+    /// Labels that are summed over: `(s1 ∪ s2) \ s3`.
+    pub fn summed_labels(&self) -> Vec<Label> {
+        let mut out = Vec::new();
+        for &l in self.s1.iter().chain(&self.s2) {
+            if !self.s3.contains(&l) && !out.contains(&l) {
+                out.push(l);
+            }
+        }
+        out
+    }
+
+    /// True if this is a pure element-wise multiplication (`s1 == s2 == s3`).
+    pub fn is_elementwise(&self) -> bool {
+        self.s1 == self.s2 && self.s2 == self.s3
+    }
+
+    /// True if no label is summed over.
+    pub fn is_sum_free(&self) -> bool {
+        self.summed_labels().is_empty()
+    }
+
+    /// Infer the result shape given operand shapes; checks rank and
+    /// dimension consistency of shared labels.
+    pub fn output_shape(
+        &self,
+        a_shape: &[usize],
+        b_shape: &[usize],
+    ) -> Result<Vec<usize>, String> {
+        if a_shape.len() != self.s1.len() {
+            return Err(format!(
+                "left operand rank {} != |s1| {} in {}",
+                a_shape.len(),
+                self.s1.len(),
+                self
+            ));
+        }
+        if b_shape.len() != self.s2.len() {
+            return Err(format!(
+                "right operand rank {} != |s2| {} in {}",
+                b_shape.len(),
+                self.s2.len(),
+                self
+            ));
+        }
+        let mut dims: Vec<(Label, usize)> = Vec::new();
+        let mut bind = |l: Label, d: usize| -> Result<(), String> {
+            match dims.iter().find(|(ll, _)| *ll == l) {
+                Some(&(_, d0)) if d0 != d => {
+                    Err(format!("label {} bound to both {} and {} in {}", l, d0, d, self))
+                }
+                Some(_) => Ok(()),
+                None => {
+                    dims.push((l, d));
+                    Ok(())
+                }
+            }
+        };
+        for (&l, &d) in self.s1.iter().zip(a_shape) {
+            bind(l, d)?;
+        }
+        for (&l, &d) in self.s2.iter().zip(b_shape) {
+            bind(l, d)?;
+        }
+        Ok(self
+            .s3
+            .iter()
+            .map(|l| dims.iter().find(|(ll, _)| ll == l).unwrap().1)
+            .collect())
+    }
+
+    /// Swap the operands (Lemma 2, commutativity): `A *_(s1,s2,s3) B =
+    /// B *_(s2,s1,s3) A`.
+    pub fn swapped(&self) -> EinSpec {
+        EinSpec { s1: self.s2.clone(), s2: self.s1.clone(), s3: self.s3.clone() }
+    }
+
+    /// Relabel every label through `f` (used when splicing specs into a
+    /// larger label space, e.g. in the derivative constructions).
+    pub fn relabel(&self, f: impl Fn(Label) -> Label) -> EinSpec {
+        EinSpec {
+            s1: self.s1.iter().map(|&l| f(l)).collect(),
+            s2: self.s2.iter().map(|&l| f(l)).collect(),
+            s3: self.s3.iter().map(|&l| f(l)).collect(),
+        }
+    }
+
+    /// Largest label value used (for fresh-label generation).
+    pub fn max_label(&self) -> Label {
+        self.s1
+            .iter()
+            .chain(&self.s2)
+            .chain(&self.s3)
+            .copied()
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+fn fmt_labels(ls: &[Label], f: &mut fmt::Formatter<'_>) -> fmt::Result {
+    for &l in ls {
+        // print letters when in ASCII range, otherwise `#n`
+        if (97..=122).contains(&l) || (65..=90).contains(&l) {
+            write!(f, "{}", char::from_u32(l).unwrap())?;
+        } else {
+            write!(f, "#{} ", l)?;
+        }
+    }
+    Ok(())
+}
+
+impl fmt::Display for EinSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt_labels(&self.s1, f)?;
+        write!(f, ",")?;
+        fmt_labels(&self.s2, f)?;
+        write!(f, "->")?;
+        fmt_labels(&self.s3, f)
+    }
+}
+
+impl fmt::Debug for EinSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "EinSpec({})", self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        let s = EinSpec::parse("ij,jk->ik");
+        assert_eq!(s.to_string(), "ij,jk->ik");
+        assert_eq!(s.summed_labels(), vec!['j' as Label]);
+        assert!(!s.is_elementwise());
+    }
+
+    #[test]
+    fn elementwise_detection() {
+        assert!(EinSpec::parse("ij,ij->ij").is_elementwise());
+        assert!(!EinSpec::parse("ij,ij->i").is_elementwise());
+        assert!(EinSpec::parse("ij,ij->ij").is_sum_free());
+        assert!(EinSpec::parse("ij,i->ij").is_sum_free());
+    }
+
+    #[test]
+    fn output_shape_inference() {
+        let s = EinSpec::parse("ij,jk->ik");
+        assert_eq!(s.output_shape(&[2, 3], &[3, 4]).unwrap(), vec![2, 4]);
+        assert!(s.output_shape(&[2, 3], &[5, 4]).is_err()); // j mismatch
+        assert!(s.output_shape(&[2], &[3, 4]).is_err()); // rank mismatch
+    }
+
+    #[test]
+    fn validate_rejects_bad_specs() {
+        // repeated output label
+        assert!(EinSpec { s1: vec![1], s2: vec![2], s3: vec![1, 1] }.validate().is_err());
+        // output label not present in inputs
+        assert!(EinSpec { s1: vec![1], s2: vec![2], s3: vec![3] }.validate().is_err());
+    }
+
+    #[test]
+    fn diagonal_spec_allowed() {
+        // diag extraction: s1 = ii
+        let s = EinSpec::parse("ii,->i");
+        assert_eq!(s.output_shape(&[3, 3], &[]).unwrap(), vec![3]);
+    }
+
+    #[test]
+    fn swapped_is_commutativity() {
+        let s = EinSpec::parse("ij,jk->ik");
+        let t = s.swapped();
+        assert_eq!(t.to_string(), "jk,ij->ik");
+    }
+
+    #[test]
+    fn table1_specs_from_paper() {
+        // The Einstein-notation column of Table 1, row by row.
+        let outer = EinSpec::parse("i,j->ij"); // y xᵀ
+        assert_eq!(outer.output_shape(&[2], &[3]).unwrap(), vec![2, 3]);
+        let matvec = EinSpec::parse("ij,j->i"); // A x
+        assert_eq!(matvec.output_shape(&[2, 3], &[3]).unwrap(), vec![2]);
+        let dot = EinSpec::parse("i,i->"); // yᵀ x
+        assert_eq!(dot.output_shape(&[3], &[3]).unwrap(), Vec::<usize>::new());
+        let matmul = EinSpec::parse("ij,jk->ik"); // A B
+        assert_eq!(matmul.output_shape(&[2, 3], &[3, 4]).unwrap(), vec![2, 4]);
+        let had_v = EinSpec::parse("i,i->i"); // y ⊙ x
+        assert_eq!(had_v.output_shape(&[3], &[3]).unwrap(), vec![3]);
+        let had_m = EinSpec::parse("ij,ij->ij"); // A ⊙ B
+        assert_eq!(had_m.output_shape(&[2, 3], &[2, 3]).unwrap(), vec![2, 3]);
+        let diag_scale = EinSpec::parse("ij,i->ij"); // A · diag(x)
+        assert_eq!(diag_scale.output_shape(&[2, 3], &[2]).unwrap(), vec![2, 3]);
+    }
+}

@@ -1,0 +1,259 @@
+//! DAG evaluation: a memoizing interpreter plus reusable evaluation
+//! [`Plan`]s (precomputed topological order + buffer lifetimes) for the
+//! benchmark hot paths.
+
+use crate::ir::{Graph, NodeId, Op};
+use crate::tensor::Tensor;
+use crate::einsum::einsum;
+use std::collections::HashMap;
+
+/// Variable bindings for evaluation.
+#[derive(Default, Clone)]
+pub struct Env {
+    map: HashMap<String, Tensor>,
+}
+
+impl Env {
+    pub fn new() -> Self {
+        Env::default()
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.map.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.map.get(name)
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut Tensor> {
+        self.map.get_mut(name)
+    }
+}
+
+/// Evaluate a single root.
+pub fn eval(g: &Graph, root: NodeId, env: &Env) -> Tensor {
+    eval_many(g, &[root], env).pop().unwrap()
+}
+
+/// Evaluate several roots sharing intermediate results.
+pub fn eval_many(g: &Graph, roots: &[NodeId], env: &Env) -> Vec<Tensor> {
+    let plan = Plan::new(g, roots);
+    plan.run(g, env)
+}
+
+/// A reusable evaluation plan: topological order restricted to the
+/// reachable sub-DAG plus last-use positions so intermediate buffers are
+/// dropped as early as possible (the interpreter allocates nothing per
+/// step beyond the result tensors themselves).
+pub struct Plan {
+    order: Vec<NodeId>,
+    /// for each position in `order`, the node ids whose value dies there
+    frees: Vec<Vec<NodeId>>,
+    roots: Vec<NodeId>,
+}
+
+impl Plan {
+    pub fn new(g: &Graph, roots: &[NodeId]) -> Self {
+        let order = g.topo(roots);
+        let mut last_use: HashMap<NodeId, usize> = HashMap::new();
+        for (pos, &id) in order.iter().enumerate() {
+            for c in g.children(id) {
+                last_use.insert(c, pos);
+            }
+        }
+        // roots must survive to the end
+        for r in roots {
+            last_use.remove(r);
+        }
+        let mut frees: Vec<Vec<NodeId>> = vec![Vec::new(); order.len()];
+        for (id, pos) in last_use {
+            frees[pos].push(id);
+        }
+        Plan { order, frees, roots: roots.to_vec() }
+    }
+
+    /// Number of nodes the plan evaluates.
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    /// Execute the plan.
+    pub fn run(&self, g: &Graph, env: &Env) -> Vec<Tensor> {
+        let mut values: HashMap<NodeId, Tensor> = HashMap::with_capacity(self.order.len());
+        for (pos, &id) in self.order.iter().enumerate() {
+            let v = match g.op(id) {
+                Op::Var(name) => {
+                    let t = env
+                        .get(name)
+                        .unwrap_or_else(|| panic!("unbound variable {}", name))
+                        .clone();
+                    assert_eq!(
+                        t.shape(),
+                        g.shape(id),
+                        "variable {} bound with wrong shape",
+                        name
+                    );
+                    t
+                }
+                Op::Const(bits) => Tensor::fill(g.shape(id), f64::from_bits(*bits)),
+                Op::Delta { dims } => Tensor::delta(dims),
+                Op::Add(a, b) => values[a].add(&values[b]),
+                Op::Mul(a, b, spec) => einsum(spec, &values[a], &values[b]),
+                Op::Elem(f, a) => f.eval(&values[a]),
+                Op::GenUnary(f, a) => f.eval(&values[a]),
+            };
+            values.insert(id, v);
+            for dead in &self.frees[pos] {
+                values.remove(dead);
+            }
+        }
+        self.roots
+            .iter()
+            .map(|r| values.get(r).cloned().expect("root not computed"))
+            .collect()
+    }
+}
+
+/// Central finite-difference gradient of a *scalar* root with respect to
+/// one variable — the numerical oracle used throughout the test suite.
+pub fn fd_gradient(g: &Graph, root: NodeId, var: &str, env: &Env, eps: f64) -> Tensor {
+    assert!(g.shape(root).is_empty(), "fd_gradient needs a scalar root");
+    let x0 = env.get(var).expect("variable not bound").clone();
+    let mut grad = Tensor::zeros(x0.shape());
+    let plan = Plan::new(g, &[root]);
+    for i in 0..x0.len() {
+        let mut ep = env.clone();
+        ep.get_mut(var).unwrap().data_mut()[i] += eps;
+        let fp = plan.run(g, &ep)[0].item();
+        let mut em = env.clone();
+        em.get_mut(var).unwrap().data_mut()[i] -= eps;
+        let fm = plan.run(g, &em)[0].item();
+        grad.data_mut()[i] = (fp - fm) / (2.0 * eps);
+    }
+    grad
+}
+
+/// Finite-difference Jacobian of a tensor-valued root w.r.t. one variable:
+/// shape = root shape ++ var shape (Definition 4's derivative layout).
+pub fn fd_jacobian(g: &Graph, root: NodeId, var: &str, env: &Env, eps: f64) -> Tensor {
+    let x0 = env.get(var).expect("variable not bound").clone();
+    let out_shape: Vec<usize> =
+        g.shape(root).iter().chain(x0.shape()).copied().collect();
+    let m: usize = g.shape(root).iter().product();
+    let n = x0.len();
+    let mut jac = Tensor::zeros(&out_shape);
+    let plan = Plan::new(g, &[root]);
+    for j in 0..n {
+        let mut ep = env.clone();
+        ep.get_mut(var).unwrap().data_mut()[j] += eps;
+        let fp = plan.run(g, &ep).pop().unwrap();
+        let mut em = env.clone();
+        em.get_mut(var).unwrap().data_mut()[j] -= eps;
+        let fm = plan.run(g, &em).pop().unwrap();
+        for i in 0..m {
+            jac.data_mut()[i * n + j] = (fp.data()[i] - fm.data()[i]) / (2.0 * eps);
+        }
+    }
+    jac
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Elem;
+
+    #[test]
+    fn eval_expression_1_matches_manual() {
+        // Xᵀ((exp(Xw)+1)⁻¹ ⊙ exp(Xw)) — paper Expression (1)
+        let mut g = Graph::new();
+        let x = g.var("X", &[4, 3]);
+        let w = g.var("w", &[3]);
+        let xw = g.matvec(x, w);
+        let e = g.elem(Elem::Exp, xw);
+        let one = g.constant(1.0, &[4]);
+        let e1 = g.add(e, one);
+        let inv = g.elem(Elem::Recip, e1);
+        let prod = g.hadamard(inv, e);
+        let y = g.tmatvec(x, prod);
+
+        let xv = Tensor::randn(&[4, 3], 1);
+        let wv = Tensor::randn(&[3], 2);
+        let mut env = Env::new();
+        env.insert("X", xv.clone());
+        env.insert("w", wv.clone());
+        let got = eval(&g, y, &env);
+
+        // manual computation
+        let mut want = vec![0.0; 3];
+        for i in 0..4 {
+            let mut z = 0.0;
+            for j in 0..3 {
+                z += xv.at(&[i, j]) * wv.data()[j];
+            }
+            let s = z.exp() / (z.exp() + 1.0);
+            for j in 0..3 {
+                want[j] += xv.at(&[i, j]) * s;
+            }
+        }
+        for j in 0..3 {
+            assert!((got.data()[j] - want[j]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn eval_many_shares_work() {
+        let mut g = Graph::new();
+        let x = g.var("x", &[3]);
+        let e = g.elem(Elem::Exp, x);
+        let a = g.sum_all(e);
+        let b = g.hadamard(e, e);
+        let mut env = Env::new();
+        env.insert("x", Tensor::new(&[3], vec![0.0, 1.0, 2.0]));
+        let vals = eval_many(&g, &[a, b], &env);
+        assert_eq!(vals.len(), 2);
+        assert!((vals[0].item() - (1.0 + 1f64.exp() + 2f64.exp())).abs() < 1e-12);
+    }
+
+    #[test]
+    fn plan_reuse_is_consistent() {
+        let mut g = Graph::new();
+        let x = g.var("x", &[2]);
+        let y = g.norm2(x);
+        let plan = Plan::new(&g, &[y]);
+        for seed in 0..3 {
+            let mut env = Env::new();
+            let xv = Tensor::randn(&[2], seed);
+            env.insert("x", xv.clone());
+            let got = plan.run(&g, &env)[0].item();
+            assert!((got - xv.norm().powi(2)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unbound variable")]
+    fn unbound_variable_panics() {
+        let mut g = Graph::new();
+        let x = g.var("x", &[2]);
+        eval(&g, x, &Env::new());
+    }
+
+    #[test]
+    fn fd_jacobian_of_linear_map_is_matrix() {
+        // y = A x ⇒ dy/dx = A
+        let mut g = Graph::new();
+        let a = g.var("A", &[3, 4]);
+        let x = g.var("x", &[4]);
+        let y = g.matvec(a, x);
+        let av = Tensor::randn(&[3, 4], 5);
+        let mut env = Env::new();
+        env.insert("A", av.clone());
+        env.insert("x", Tensor::randn(&[4], 6));
+        let j = fd_jacobian(&g, y, "x", &env, 1e-6);
+        assert!(j.allclose(&av, 1e-5, 1e-7), "diff {}", j.max_abs_diff(&av));
+    }
+}

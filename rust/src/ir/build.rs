@@ -1,0 +1,214 @@
+//! Convenience builders for common linear-algebra shapes on top of the
+//! generic multiplication — the vectorized column of Table 1.
+
+use crate::einsum::{EinSpec, Label};
+use crate::ir::elem::Elem;
+use crate::ir::graph::{Graph, NodeId};
+
+impl Graph {
+    fn labels(&self, n: usize, base: Label) -> Vec<Label> {
+        (base..base + n as Label).collect()
+    }
+
+    /// Matrix product `A·B` (`ij,jk->ik`).
+    pub fn matmul(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.mul(a, b, EinSpec::parse("ij,jk->ik"))
+    }
+
+    /// Matrix–vector product `A·x` (`ij,j->i`).
+    pub fn matvec(&mut self, a: NodeId, x: NodeId) -> NodeId {
+        self.mul(a, x, EinSpec::parse("ij,j->i"))
+    }
+
+    /// Inner product `yᵀx` (`i,i->`).
+    pub fn dot(&mut self, y: NodeId, x: NodeId) -> NodeId {
+        self.mul(y, x, EinSpec::parse("i,i->"))
+    }
+
+    /// Outer product `y xᵀ` (`i,j->ij`).
+    pub fn outer(&mut self, y: NodeId, x: NodeId) -> NodeId {
+        self.mul(y, x, EinSpec::parse("i,j->ij"))
+    }
+
+    /// Element-wise (Hadamard) product of equally-shaped tensors.
+    pub fn hadamard(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        assert_eq!(self.shape(a), self.shape(b), "hadamard shape mismatch");
+        let l = self.labels(self.order(a), 0);
+        self.mul(a, b, EinSpec::new(l.clone(), l.clone(), l))
+    }
+
+    /// `AᵀB` (`ji,jk->ik`).
+    pub fn tmatmul(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.mul(a, b, EinSpec::parse("ji,jk->ik"))
+    }
+
+    /// `ABᵀ` (`ij,kj->ik`).
+    pub fn matmul_t(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.mul(a, b, EinSpec::parse("ij,kj->ik"))
+    }
+
+    /// `Aᵀx` (`ji,j->i`).
+    pub fn tmatvec(&mut self, a: NodeId, x: NodeId) -> NodeId {
+        self.mul(a, x, EinSpec::parse("ji,j->i"))
+    }
+
+    /// Axis permutation expressed as `A *_(s1, ∅, perm(s1)) 1`.
+    pub fn transpose(&mut self, a: NodeId, perm: &[usize]) -> NodeId {
+        let l = self.labels(self.order(a), 0);
+        let out: Vec<Label> = perm.iter().map(|&p| l[p]).collect();
+        let one = self.scalar(1.0);
+        self.mul(a, one, EinSpec::new(l, vec![], out))
+    }
+
+    /// Sum over all axes → scalar (`A *_(s1, ∅, ∅) 1`).
+    pub fn sum_all(&mut self, a: NodeId) -> NodeId {
+        let l = self.labels(self.order(a), 0);
+        let one = self.scalar(1.0);
+        self.mul(a, one, EinSpec::new(l, vec![], vec![]))
+    }
+
+    /// Sum over the given axes.
+    pub fn sum_axes(&mut self, a: NodeId, axes: &[usize]) -> NodeId {
+        let l = self.labels(self.order(a), 0);
+        let keep: Vec<Label> = (0..self.order(a))
+            .filter(|ax| !axes.contains(ax))
+            .map(|ax| l[ax])
+            .collect();
+        let one = self.scalar(1.0);
+        self.mul(a, one, EinSpec::new(l, vec![], keep))
+    }
+
+    /// Scale by a compile-time scalar constant.
+    pub fn scale(&mut self, a: NodeId, c: f64) -> NodeId {
+        let l = self.labels(self.order(a), 0);
+        let k = self.scalar(c);
+        self.mul(a, k, EinSpec::new(l.clone(), vec![], l))
+    }
+
+    /// `-a`.
+    pub fn neg(&mut self, a: NodeId) -> NodeId {
+        self.elem(Elem::Neg, a)
+    }
+
+    /// `a - b`.
+    pub fn sub(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let nb = self.neg(b);
+        self.add(a, nb)
+    }
+
+    /// `A · diag(x)` — scale the columns of `A` by `x` (`ij,j->ij`).
+    pub fn coldiag(&mut self, a: NodeId, x: NodeId) -> NodeId {
+        self.mul(a, x, EinSpec::parse("ij,j->ij"))
+    }
+
+    /// `diag(x) · A` — scale the rows of `A` by `x` (`ij,i->ij`).
+    pub fn rowdiag(&mut self, a: NodeId, x: NodeId) -> NodeId {
+        self.mul(a, x, EinSpec::parse("ij,i->ij"))
+    }
+
+    /// Extract the main diagonal of a square matrix. Written with an
+    /// explicit delta factor (`A *_(ij,ij,i) δ`) rather than a repeated
+    /// operand label so the node stays differentiable under Theorem 8.
+    pub fn diag_of(&mut self, a: NodeId) -> NodeId {
+        let n = self.shape(a)[0];
+        assert_eq!(self.shape(a), &[n, n], "diag_of needs a square matrix");
+        let d = self.delta(&[n]);
+        self.mul(a, d, EinSpec::parse("ij,ij->i"))
+    }
+
+    /// Squared Frobenius/Euclidean norm `‖A‖²`.
+    pub fn norm2(&mut self, a: NodeId) -> NodeId {
+        let sq = self.elem(Elem::Square, a);
+        self.sum_all(sq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::{eval, Env};
+    use crate::tensor::Tensor;
+
+    fn env2() -> (Env, Tensor, Tensor) {
+        let a = Tensor::randn(&[3, 4], 1);
+        let b = Tensor::randn(&[4, 5], 2);
+        let mut env = Env::new();
+        env.insert("A", a.clone());
+        env.insert("B", b.clone());
+        (env, a, b)
+    }
+
+    #[test]
+    fn matmul_builder() {
+        let mut g = Graph::new();
+        let a = g.var("A", &[3, 4]);
+        let b = g.var("B", &[4, 5]);
+        let c = g.matmul(a, b);
+        let (env, av, bv) = env2();
+        let cv = eval(&g, c, &env);
+        // spot check one entry
+        let want: f64 = (0..4).map(|k| av.at(&[1, k]) * bv.at(&[k, 2])).sum();
+        assert!((cv.at(&[1, 2]) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn transpose_builder() {
+        let mut g = Graph::new();
+        let a = g.var("A", &[3, 4]);
+        let t = g.transpose(a, &[1, 0]);
+        assert_eq!(g.shape(t), &[4, 3]);
+        let (env, av, _) = env2();
+        let tv = eval(&g, t, &env);
+        assert_eq!(tv, av.t());
+    }
+
+    #[test]
+    fn sum_builders() {
+        let mut g = Graph::new();
+        let a = g.var("A", &[3, 4]);
+        let s = g.sum_all(a);
+        let rows = g.sum_axes(a, &[1]);
+        assert_eq!(g.shape(s), &[] as &[usize]);
+        assert_eq!(g.shape(rows), &[3]);
+        let (env, av, _) = env2();
+        assert!((eval(&g, s, &env).item() - av.sum_all()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diag_of_square() {
+        let mut g = Graph::new();
+        let a = g.var("A", &[3, 3]);
+        let d = g.diag_of(a);
+        let mut env = Env::new();
+        let av = Tensor::randn(&[3, 3], 3);
+        env.insert("A", av.clone());
+        let dv = eval(&g, d, &env);
+        for i in 0..3 {
+            assert_eq!(dv.data()[i], av.at(&[i, i]));
+        }
+    }
+
+    #[test]
+    fn norm2_matches_tensor_norm() {
+        let mut g = Graph::new();
+        let a = g.var("A", &[4, 4]);
+        let n = g.norm2(a);
+        let mut env = Env::new();
+        let av = Tensor::randn(&[4, 4], 9);
+        env.insert("A", av.clone());
+        assert!((eval(&g, n, &env).item() - av.norm().powi(2)).abs() < 1e-10);
+    }
+
+    #[test]
+    fn sub_and_scale() {
+        let mut g = Graph::new();
+        let a = g.var("A", &[2]);
+        let b = g.var("B", &[2]);
+        let d = g.sub(a, b);
+        let s = g.scale(d, 3.0);
+        let mut env = Env::new();
+        env.insert("A", Tensor::new(&[2], vec![5.0, 1.0]));
+        env.insert("B", Tensor::new(&[2], vec![2.0, 4.0]));
+        assert_eq!(eval(&g, s, &env).data(), &[9.0, -9.0]);
+    }
+}

@@ -1,0 +1,129 @@
+//! Pretty-printing of expression DAGs: infix rendering, program listings
+//! and graphviz dumps (the paper's Figures 1, 4, 5 are such dumps).
+
+use crate::ir::graph::{Graph, NodeId, Op};
+use std::fmt::Write;
+
+impl Graph {
+    /// Render a node as an infix expression string (shared subexpressions
+    /// are inlined — use [`Graph::program`] for the DAG view).
+    pub fn render(&self, id: NodeId) -> String {
+        match self.op(id) {
+            Op::Var(name) => name.clone(),
+            Op::Const(bits) => {
+                let v = f64::from_bits(*bits);
+                if self.shape(id).is_empty() {
+                    format!("{}", v)
+                } else {
+                    format!("{}⟨{:?}⟩", v, self.shape(id))
+                }
+            }
+            Op::Delta { dims } => format!("δ{:?}", dims),
+            Op::Add(a, b) => format!("({} + {})", self.render(*a), self.render(*b)),
+            Op::Mul(a, b, spec) => {
+                format!("({} *[{}] {})", self.render(*a), spec, self.render(*b))
+            }
+            Op::Elem(f, a) => format!("{}({})", f.name(), self.render(*a)),
+            Op::GenUnary(f, a) => format!("{}({})", f.name(), self.render(*a)),
+        }
+    }
+
+    /// A three-address program listing of the sub-DAG below `roots` —
+    /// one line per node, in evaluation order.
+    pub fn program(&self, roots: &[NodeId]) -> String {
+        let mut out = String::new();
+        for id in self.topo(roots) {
+            let rhs = match self.op(id) {
+                Op::Var(name) => format!("var {}", name),
+                Op::Const(bits) => format!("const {}", f64::from_bits(*bits)),
+                Op::Delta { dims } => format!("delta {:?}", dims),
+                Op::Add(a, b) => format!("add %{} %{}", a.0, b.0),
+                Op::Mul(a, b, spec) => format!("mul[{}] %{} %{}", spec, a.0, b.0),
+                Op::Elem(f, a) => format!("{} %{}", f.name(), a.0),
+                Op::GenUnary(f, a) => format!("{} %{}", f.name(), a.0),
+            };
+            let _ = writeln!(out, "%{:<4} : {:<14} = {}", id.0, format!("{:?}", self.shape(id)), rhs);
+        }
+        out
+    }
+
+    /// Graphviz dot output for the sub-DAG below `roots`. Nodes whose value
+    /// is an order ≥ 4 tensor are highlighted red, mirroring the paper's
+    /// appendix figures.
+    pub fn to_dot(&self, roots: &[NodeId]) -> String {
+        let mut out = String::from("digraph expr {\n  rankdir=BT;\n");
+        for id in self.topo(roots) {
+            let label = match self.op(id) {
+                Op::Var(name) => name.clone(),
+                Op::Const(bits) => format!("{}", f64::from_bits(*bits)),
+                Op::Delta { dims } => format!("δ{:?}", dims),
+                Op::Add(..) => "+".into(),
+                Op::Mul(_, _, spec) => format!("*[{}]", spec),
+                Op::Elem(f, _) => f.name().into(),
+                Op::GenUnary(f, _) => f.name().into(),
+            };
+            let color = if self.order(id) >= 4 { ", color=red, fontcolor=red" } else { "" };
+            let _ = writeln!(
+                out,
+                "  n{} [label=\"{}\\n{:?}\"{}];",
+                id.0,
+                label.replace('"', "'"),
+                self.shape(id),
+                color
+            );
+            for c in self.children(id) {
+                let _ = writeln!(out, "  n{} -> n{};", c.0, id.0);
+            }
+        }
+        out.push_str("}\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Elem;
+
+    /// Expression (1) from the paper:
+    /// Xᵀ((exp(X·w)+1)⁻¹ ⊙ exp(X·w))
+    fn paper_expr1(g: &mut Graph) -> NodeId {
+        let x = g.var("X", &[4, 3]);
+        let w = g.var("w", &[3]);
+        let xw = g.matvec(x, w);
+        let e = g.elem(Elem::Exp, xw);
+        let one = g.constant(1.0, &[4]);
+        let e1 = g.add(e, one);
+        let inv = g.elem(Elem::Recip, e1);
+        let prod = g.hadamard(inv, e);
+        g.tmatvec(x, prod)
+    }
+
+    #[test]
+    fn render_expression_1() {
+        let mut g = Graph::new();
+        let y = paper_expr1(&mut g);
+        let s = g.render(y);
+        assert!(s.contains("exp"), "{}", s);
+        assert!(s.contains("recip"), "{}", s);
+        assert!(s.contains("X"), "{}", s);
+    }
+
+    #[test]
+    fn program_lists_all_nodes_once() {
+        let mut g = Graph::new();
+        let y = paper_expr1(&mut g);
+        let p = g.program(&[y]);
+        // exp(X·w) is shared (CSE) — must appear exactly once
+        let exp_lines = p.lines().filter(|l| l.contains("exp %")).count();
+        assert_eq!(exp_lines, 1, "{}", p);
+    }
+
+    #[test]
+    fn dot_marks_high_order_nodes() {
+        let mut g = Graph::new();
+        let d = g.delta(&[2, 3]); // order-4 tensor
+        let dot = g.to_dot(&[d]);
+        assert!(dot.contains("color=red"), "{}", dot);
+    }
+}

@@ -1,0 +1,368 @@
+//! Element-wise and general unary functions, together with the symbolic
+//! derivative `f'` each contributes to the pushforward/pullback rules
+//! (Theorems 6, 7, 9, 10).
+
+use crate::einsum::EinSpec;
+use crate::ir::graph::{Graph, NodeId};
+use crate::tensor::Tensor;
+
+/// Element-wise unary functions (applied entry by entry).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Elem {
+    Exp,
+    Log,
+    /// `max(0, x)` — the ReLU of the paper's neural-net experiment.
+    Relu,
+    /// Heaviside step `1[x > 0]` — ReLU's (sub)derivative.
+    Step,
+    Sigmoid,
+    Tanh,
+    Sqrt,
+    /// `-x`
+    Neg,
+    /// `1/x` — the paper's element-wise multiplicative inverse `·⁻¹`.
+    Recip,
+    /// `x²`
+    Square,
+    /// Sign function (subderivative of |x|).
+    Sign,
+    Abs,
+}
+
+impl Elem {
+    pub fn name(self) -> &'static str {
+        match self {
+            Elem::Exp => "exp",
+            Elem::Log => "log",
+            Elem::Relu => "relu",
+            Elem::Step => "step",
+            Elem::Sigmoid => "sigmoid",
+            Elem::Tanh => "tanh",
+            Elem::Sqrt => "sqrt",
+            Elem::Neg => "neg",
+            Elem::Recip => "recip",
+            Elem::Square => "square",
+            Elem::Sign => "sign",
+            Elem::Abs => "abs",
+        }
+    }
+
+    /// Scalar evaluation.
+    pub fn apply(self, x: f64) -> f64 {
+        match self {
+            Elem::Exp => x.exp(),
+            Elem::Log => x.ln(),
+            Elem::Relu => x.max(0.0),
+            Elem::Step => {
+                if x > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Elem::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+            Elem::Tanh => x.tanh(),
+            Elem::Sqrt => x.sqrt(),
+            Elem::Neg => -x,
+            Elem::Recip => 1.0 / x,
+            Elem::Square => x * x,
+            Elem::Sign => {
+                if x > 0.0 {
+                    1.0
+                } else if x < 0.0 {
+                    -1.0
+                } else {
+                    0.0
+                }
+            }
+            Elem::Abs => x.abs(),
+        }
+    }
+
+    /// Tensor evaluation.
+    pub fn eval(self, t: &Tensor) -> Tensor {
+        t.map(|x| self.apply(x))
+    }
+
+    /// Build the expression `f'(a)` (same shape as `a`) in the graph —
+    /// the `f'(A)` factor of Theorems 6/7/9/10.
+    pub fn derivative(self, g: &mut Graph, a: NodeId) -> NodeId {
+        let shape = g.shape(a).to_vec();
+        // elementwise spec over the argument shape
+        let labels: Vec<u32> = (0..shape.len() as u32).collect();
+        let ew = EinSpec::new(labels.clone(), labels.clone(), labels.clone());
+        match self {
+            Elem::Exp => g.elem(Elem::Exp, a),
+            Elem::Log => g.elem(Elem::Recip, a),
+            Elem::Relu => g.elem(Elem::Step, a),
+            Elem::Step => g.constant(0.0, &shape),
+            Elem::Sigmoid => {
+                // σ' = σ (1 − σ)
+                let s = g.elem(Elem::Sigmoid, a);
+                let one = g.constant(1.0, &shape);
+                let neg_s = g.elem(Elem::Neg, s);
+                let om = g.add(one, neg_s);
+                g.mul(s, om, ew)
+            }
+            Elem::Tanh => {
+                // tanh' = 1 − tanh²
+                let t = g.elem(Elem::Tanh, a);
+                let t2 = g.elem(Elem::Square, t);
+                let one = g.constant(1.0, &shape);
+                let neg = g.elem(Elem::Neg, t2);
+                g.add(one, neg)
+            }
+            Elem::Sqrt => {
+                // (√x)' = 1 / (2 √x)
+                let s = g.elem(Elem::Sqrt, a);
+                let half = g.scalar(0.5);
+                let r = g.elem(Elem::Recip, s);
+                let sc = EinSpec::new(labels.clone(), vec![], labels.clone());
+                g.mul(r, half, sc)
+            }
+            Elem::Neg => g.constant(-1.0, &shape),
+            Elem::Recip => {
+                // (1/x)' = −1/x²
+                let x2 = g.elem(Elem::Square, a);
+                let r = g.elem(Elem::Recip, x2);
+                g.elem(Elem::Neg, r)
+            }
+            Elem::Square => {
+                // (x²)' = 2x
+                let two = g.scalar(2.0);
+                let sc = EinSpec::new(labels.clone(), vec![], labels.clone());
+                g.mul(a, two, sc)
+            }
+            Elem::Sign => g.constant(0.0, &shape),
+            Elem::Abs => g.elem(Elem::Sign, a),
+        }
+    }
+}
+
+/// General (non-element-wise) unary tensor functions — the `f` of
+/// Theorems 6 and 9, whose derivative `f'` is a tensor of order
+/// `|range| + |domain|`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum GenFn {
+    /// Row-wise softmax over the last axis.
+    Softmax,
+    /// Row-wise log-sum-exp over the last axis (removes the last axis).
+    LogSumExp,
+}
+
+impl GenFn {
+    pub fn name(self) -> &'static str {
+        match self {
+            GenFn::Softmax => "softmax",
+            GenFn::LogSumExp => "logsumexp",
+        }
+    }
+
+    /// Shape of `f(A)` given the shape of `A`.
+    pub fn range_shape(self, domain: &[usize]) -> Vec<usize> {
+        match self {
+            GenFn::Softmax => domain.to_vec(),
+            GenFn::LogSumExp => domain[..domain.len() - 1].to_vec(),
+        }
+    }
+
+    /// Numeric evaluation.
+    pub fn eval(self, t: &Tensor) -> Tensor {
+        let n = *t.shape().last().expect("GenFn needs rank ≥ 1");
+        match self {
+            GenFn::Softmax => {
+                let mut out = t.clone();
+                for row in out.data_mut().chunks_mut(n) {
+                    let m = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                    let mut z = 0.0;
+                    for v in row.iter_mut() {
+                        *v = (*v - m).exp();
+                        z += *v;
+                    }
+                    for v in row.iter_mut() {
+                        *v /= z;
+                    }
+                }
+                out
+            }
+            GenFn::LogSumExp => {
+                let out_shape = self.range_shape(t.shape());
+                let data = t
+                    .data()
+                    .chunks(n)
+                    .map(|row| {
+                        let m = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                        m + row.iter().map(|v| (v - m).exp()).sum::<f64>().ln()
+                    })
+                    .collect();
+                Tensor::new(&out_shape, data)
+            }
+        }
+    }
+
+    /// Build `f'(A)` symbolically: a node of shape `range ++ domain`
+    /// (index set `s2 s1` in the paper's statement of Theorem 6/9).
+    pub fn derivative(self, g: &mut Graph, a: NodeId) -> NodeId {
+        let dom = g.shape(a).to_vec();
+        let r = dom.len();
+        let n = dom[r - 1];
+        let batch = &dom[..r - 1];
+        match self {
+            GenFn::Softmax => {
+                // f'[b, j, b', j'] = δ_{bb'} (δ_{jj'} s_{bj} − s_{bj} s_{bj'})
+                // with batch indices b and the softmax axis j.
+                let s = g.gen_unary(GenFn::Softmax, a);
+                // labels: batch = 0..r-1 (b), j = r-1, b' = r..2r-2, j' = 2r-2
+                let b_l: Vec<u32> = (0..(r as u32 - 1)).collect();
+                let j = r as u32 - 1;
+                let bp_l: Vec<u32> = (r as u32..(2 * r as u32 - 1)).collect();
+                let jp = 2 * r as u32 - 1;
+
+                // term1[b, j, j'] = δ_{jj'} s_{bj}:  s *_( bj, j j', b j j' ) δ_n
+                let dn = g.delta(&[n]);
+                let mut s1: Vec<u32> = b_l.clone();
+                s1.push(j);
+                let s2 = vec![j, jp];
+                let mut s3: Vec<u32> = b_l.clone();
+                s3.push(j);
+                s3.push(jp);
+                let term1 = g.mul(s, dn, EinSpec::new(s1.clone(), s2, s3.clone()));
+
+                // term2[b, j, j'] = s_{bj} s_{bj'}
+                let mut s2b: Vec<u32> = b_l.clone();
+                s2b.push(jp);
+                let term2 = g.mul(s, s, EinSpec::new(s1.clone(), s2b, s3.clone()));
+                let nt2 = g.elem(Elem::Neg, term2);
+                let core = g.add(term1, nt2); // [batch, j, j']
+
+                // expand with δ over the batch block: out[b, j, b', j'] =
+                // core[b, j, j'] · δ_{b b'}
+                if batch.is_empty() {
+                    // domain is a vector: f' is already [j, j']
+                    return core;
+                }
+                let db = g.delta(batch);
+                // core labels: b j jp ; delta labels: b bp
+                let mut cl: Vec<u32> = b_l.clone();
+                cl.push(j);
+                cl.push(jp);
+                let mut dl: Vec<u32> = b_l.clone();
+                dl.extend(&bp_l);
+                // out: b j bp jp   (range ++ domain order)
+                let mut ol: Vec<u32> = b_l.clone();
+                ol.push(j);
+                ol.extend(&bp_l);
+                ol.push(jp);
+                g.mul(core, db, EinSpec::new(cl, dl, ol))
+            }
+            GenFn::LogSumExp => {
+                // f'[b, b', j'] = δ_{bb'} softmax(a)[b', j']
+                let s = g.gen_unary(GenFn::Softmax, a);
+                if batch.is_empty() {
+                    // range is scalar: f' = softmax(a) of shape [j']
+                    return s;
+                }
+                let db = g.delta(batch);
+                let b_l: Vec<u32> = (0..(r as u32 - 1)).collect();
+                let bp_l: Vec<u32> = (r as u32..(2 * r as u32 - 1)).collect();
+                let jp = 2 * r as u32 - 1;
+                let mut sl: Vec<u32> = bp_l.clone();
+                sl.push(jp);
+                let mut dl: Vec<u32> = b_l.clone();
+                dl.extend(&bp_l);
+                let mut ol: Vec<u32> = b_l.clone();
+                ol.extend(&bp_l);
+                ol.push(jp);
+                g.mul(s, db, EinSpec::new(sl, dl, ol))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elem_scalar_values() {
+        assert_eq!(Elem::Relu.apply(-2.0), 0.0);
+        assert_eq!(Elem::Relu.apply(3.0), 3.0);
+        assert_eq!(Elem::Step.apply(0.5), 1.0);
+        assert_eq!(Elem::Step.apply(0.0), 0.0);
+        assert!((Elem::Sigmoid.apply(0.0) - 0.5).abs() < 1e-15);
+        assert_eq!(Elem::Neg.apply(4.0), -4.0);
+        assert_eq!(Elem::Square.apply(3.0), 9.0);
+        assert_eq!(Elem::Recip.apply(4.0), 0.25);
+        assert_eq!(Elem::Sign.apply(-3.0), -1.0);
+        assert_eq!(Elem::Abs.apply(-3.0), 3.0);
+    }
+
+    #[test]
+    fn elem_derivative_numeric_fd() {
+        // finite-difference check of every f' through the symbolic builder
+        use crate::eval::{eval, Env};
+        for f in [
+            Elem::Exp,
+            Elem::Log,
+            Elem::Sigmoid,
+            Elem::Tanh,
+            Elem::Sqrt,
+            Elem::Neg,
+            Elem::Recip,
+            Elem::Square,
+        ] {
+            let mut g = Graph::new();
+            let x = g.var("x", &[4]);
+            let d = f.derivative(&mut g, x);
+            let xv = Tensor::new(&[4], vec![0.3, 0.7, 1.2, 2.5]); // positive domain
+            let mut env = Env::new();
+            env.insert("x", xv.clone());
+            let dv = eval(&g, d, &env);
+            let h = 1e-6;
+            for i in 0..4 {
+                let fd = (f.apply(xv.data()[i] + h) - f.apply(xv.data()[i] - h)) / (2.0 * h);
+                assert!(
+                    (dv.data()[i] - fd).abs() < 1e-5,
+                    "{}' mismatch at {}: {} vs {}",
+                    f.name(),
+                    xv.data()[i],
+                    dv.data()[i],
+                    fd
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let t = Tensor::randn(&[3, 5], 4);
+        let s = GenFn::Softmax.eval(&t);
+        for row in s.data().chunks(5) {
+            let sum: f64 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-12);
+            assert!(row.iter().all(|&v| v > 0.0));
+        }
+    }
+
+    #[test]
+    fn logsumexp_matches_naive() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., -1., 0., 1.]);
+        let l = GenFn::LogSumExp.eval(&t);
+        assert_eq!(l.shape(), &[2]);
+        let naive0 = (1f64.exp() + 2f64.exp() + 3f64.exp()).ln();
+        assert!((l.data()[0] - naive0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn logsumexp_stable_for_large_inputs() {
+        let t = Tensor::new(&[1, 2], vec![1000.0, 1000.0]);
+        let l = GenFn::LogSumExp.eval(&t);
+        assert!((l.data()[0] - (1000.0 + 2f64.ln())).abs() < 1e-9);
+    }
+
+    #[test]
+    fn range_shapes() {
+        assert_eq!(GenFn::Softmax.range_shape(&[4, 7]), vec![4, 7]);
+        assert_eq!(GenFn::LogSumExp.range_shape(&[4, 7]), vec![4]);
+    }
+}

@@ -1,0 +1,319 @@
+//! The hash-consed expression DAG.
+
+use crate::einsum::EinSpec;
+use crate::ir::elem::{Elem, GenFn};
+use std::collections::HashMap;
+
+/// Handle to a node in a [`Graph`]. Node ids are topologically ordered:
+/// children always have smaller ids than their parents.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug)]
+pub struct NodeId(pub u32);
+
+impl NodeId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Node operation. `Mul` carries the `(s1,s2,s3)` spec whose labels are
+/// local to that node (like letters in one einsum string).
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub enum Op {
+    /// Named input tensor.
+    Var(String),
+    /// Constant-filled tensor (`value` in every entry). A scalar constant
+    /// has shape `[]`. Zero and one tensors are this with value 0 / 1.
+    Const(u64 /* f64 bits */),
+    /// Order-`2k` unit tensor `δ[u₁..u_k, v₁..v_k] = Π [u_m = v_m]`,
+    /// where `dims` are the k paired dimensions (shape = dims ++ dims).
+    Delta { dims: Vec<usize> },
+    /// Tensor addition; operands must have identical shapes.
+    Add(NodeId, NodeId),
+    /// The generic multiplication `a *_(s1,s2,s3) b`.
+    Mul(NodeId, NodeId, EinSpec),
+    /// Element-wise unary function.
+    Elem(Elem, NodeId),
+    /// General (non-element-wise) unary function, Theorem 6/9 territory.
+    GenUnary(GenFn, NodeId),
+}
+
+/// A node: operation plus the shape of its value.
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub struct Node {
+    pub op: Op,
+    pub shape: Vec<usize>,
+}
+
+/// The expression DAG. Nodes are hash-consed: structurally identical
+/// subexpressions share a node (free CSE), which the paper relies on when
+/// it reuses `exp(X·w)` twice in Expression (1).
+#[derive(Default, Clone)]
+pub struct Graph {
+    nodes: Vec<Node>,
+    intern: HashMap<Node, NodeId>,
+    vars: HashMap<String, NodeId>,
+}
+
+impl Graph {
+    pub fn new() -> Self {
+        Graph::default()
+    }
+
+    /// Number of nodes in the DAG.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.index()]
+    }
+
+    pub fn op(&self, id: NodeId) -> &Op {
+        &self.nodes[id.index()].op
+    }
+
+    pub fn shape(&self, id: NodeId) -> &[usize] {
+        &self.nodes[id.index()].shape
+    }
+
+    /// Tensor order (rank) of a node's value.
+    pub fn order(&self, id: NodeId) -> usize {
+        self.shape(id).len()
+    }
+
+    /// All nodes, in id (= topological) order.
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    /// Look up a declared variable by name.
+    pub fn var_id(&self, name: &str) -> Option<NodeId> {
+        self.vars.get(name).copied()
+    }
+
+    /// All declared variables in declaration order.
+    pub fn var_names(&self) -> Vec<String> {
+        let mut v: Vec<(NodeId, String)> =
+            self.vars.iter().map(|(n, &id)| (id, n.clone())).collect();
+        v.sort();
+        v.into_iter().map(|(_, n)| n).collect()
+    }
+
+    fn push(&mut self, node: Node) -> NodeId {
+        if let Some(&id) = self.intern.get(&node) {
+            return id;
+        }
+        let id = NodeId(self.nodes.len() as u32);
+        self.intern.insert(node.clone(), id);
+        self.nodes.push(node);
+        id
+    }
+
+    /// Declare (or fetch) an input variable with the given shape.
+    pub fn var(&mut self, name: &str, shape: &[usize]) -> NodeId {
+        if let Some(&id) = self.vars.get(name) {
+            assert_eq!(
+                self.shape(id),
+                shape,
+                "variable {} redeclared with different shape",
+                name
+            );
+            return id;
+        }
+        let id = self.push(Node { op: Op::Var(name.to_string()), shape: shape.to_vec() });
+        self.vars.insert(name.to_string(), id);
+        id
+    }
+
+    /// Constant-filled tensor.
+    pub fn constant(&mut self, value: f64, shape: &[usize]) -> NodeId {
+        self.push(Node { op: Op::Const(value.to_bits()), shape: shape.to_vec() })
+    }
+
+    /// Scalar constant.
+    pub fn scalar(&mut self, value: f64) -> NodeId {
+        self.constant(value, &[])
+    }
+
+    /// The order-`2k` unit tensor over the given paired dims.
+    pub fn delta(&mut self, dims: &[usize]) -> NodeId {
+        let mut shape = dims.to_vec();
+        shape.extend_from_slice(dims);
+        self.push(Node { op: Op::Delta { dims: dims.to_vec() }, shape })
+    }
+
+    /// `a + b`; shapes must match exactly (axis order included — use
+    /// [`Graph::transpose`] first when they differ).
+    pub fn add(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        assert_eq!(
+            self.shape(a),
+            self.shape(b),
+            "add shape mismatch: {:?} vs {:?}",
+            self.shape(a),
+            self.shape(b)
+        );
+        let shape = self.shape(a).to_vec();
+        // canonical operand order for better CSE
+        let (a, b) = if a <= b { (a, b) } else { (b, a) };
+        self.push(Node { op: Op::Add(a, b), shape })
+    }
+
+    /// The generic multiplication `a *_(s1,s2,s3) b`.
+    pub fn mul(&mut self, a: NodeId, b: NodeId, spec: EinSpec) -> NodeId {
+        let shape = spec
+            .output_shape(self.shape(a), self.shape(b))
+            .unwrap_or_else(|e| panic!("mul: {}", e));
+        self.push(Node { op: Op::Mul(a, b, spec), shape })
+    }
+
+    /// Element-wise unary application.
+    pub fn elem(&mut self, f: Elem, a: NodeId) -> NodeId {
+        let shape = self.shape(a).to_vec();
+        self.push(Node { op: Op::Elem(f, a), shape })
+    }
+
+    /// General unary application (range shape determined by the function).
+    pub fn gen_unary(&mut self, f: GenFn, a: NodeId) -> NodeId {
+        let shape = f.range_shape(self.shape(a));
+        self.push(Node { op: Op::GenUnary(f, a), shape })
+    }
+
+    /// Direct children of a node.
+    pub fn children(&self, id: NodeId) -> Vec<NodeId> {
+        match self.op(id) {
+            Op::Add(a, b) | Op::Mul(a, b, _) => vec![*a, *b],
+            Op::Elem(_, a) | Op::GenUnary(_, a) => vec![*a],
+            _ => vec![],
+        }
+    }
+
+    /// Topological order of the sub-DAG reachable from `roots`
+    /// (children before parents).
+    pub fn topo(&self, roots: &[NodeId]) -> Vec<NodeId> {
+        let mut seen = vec![false; self.nodes.len()];
+        let mut out = Vec::new();
+        // ids are already topologically sorted; mark reachable then scan
+        let mut stack: Vec<NodeId> = roots.to_vec();
+        while let Some(id) = stack.pop() {
+            if seen[id.index()] {
+                continue;
+            }
+            seen[id.index()] = true;
+            stack.extend(self.children(id));
+        }
+        for (i, s) in seen.iter().enumerate() {
+            if *s {
+                out.push(NodeId(i as u32));
+            }
+        }
+        out
+    }
+
+    /// True if `x` is reachable from `root` (i.e. `root` depends on `x`).
+    pub fn depends_on(&self, root: NodeId, x: NodeId) -> bool {
+        self.topo(&[root]).contains(&x)
+    }
+
+    /// Number of uses of each node within the sub-DAG reachable from `roots`.
+    pub fn use_counts(&self, roots: &[NodeId]) -> Vec<u32> {
+        let mut counts = vec![0u32; self.nodes.len()];
+        for id in self.topo(roots) {
+            for c in self.children(id) {
+                counts[c.index()] += 1;
+            }
+        }
+        for r in roots {
+            counts[r.index()] += 1;
+        }
+        counts
+    }
+
+    /// Is this node the scalar/filled constant `value`?
+    pub fn is_const_value(&self, id: NodeId, value: f64) -> bool {
+        matches!(self.op(id), Op::Const(bits) if *bits == value.to_bits())
+    }
+
+    pub fn const_value(&self, id: NodeId) -> Option<f64> {
+        match self.op(id) {
+            Op::Const(bits) => Some(f64::from_bits(*bits)),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_consing_dedups() {
+        let mut g = Graph::new();
+        let x = g.var("x", &[3]);
+        let a = g.elem(Elem::Exp, x);
+        let b = g.elem(Elem::Exp, x);
+        assert_eq!(a, b);
+        let s = g.add(a, x);
+        let t = g.add(x, a); // canonical order ⇒ same node
+        assert_eq!(s, t);
+    }
+
+    #[test]
+    fn shapes_inferred_through_mul() {
+        let mut g = Graph::new();
+        let a = g.var("A", &[2, 3]);
+        let b = g.var("B", &[3, 4]);
+        let c = g.mul(a, b, EinSpec::parse("ij,jk->ik"));
+        assert_eq!(g.shape(c), &[2, 4]);
+        assert_eq!(g.order(c), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn add_rejects_shape_mismatch() {
+        let mut g = Graph::new();
+        let a = g.var("A", &[2, 3]);
+        let b = g.var("B", &[3, 2]);
+        g.add(a, b);
+    }
+
+    #[test]
+    fn topo_is_child_first() {
+        let mut g = Graph::new();
+        let x = g.var("x", &[3]);
+        let e = g.elem(Elem::Exp, x);
+        let y = g.add(e, x);
+        let order = g.topo(&[y]);
+        let pos = |id: NodeId| order.iter().position(|&n| n == id).unwrap();
+        assert!(pos(x) < pos(e));
+        assert!(pos(e) < pos(y));
+    }
+
+    #[test]
+    fn depends_on_works() {
+        let mut g = Graph::new();
+        let x = g.var("x", &[3]);
+        let y = g.var("y", &[3]);
+        let e = g.elem(Elem::Exp, x);
+        assert!(g.depends_on(e, x));
+        assert!(!g.depends_on(e, y));
+    }
+
+    #[test]
+    fn delta_shape() {
+        let mut g = Graph::new();
+        let d = g.delta(&[2, 5]);
+        assert_eq!(g.shape(d), &[2, 5, 2, 5]);
+    }
+
+    #[test]
+    fn var_redeclaration_same_shape_ok() {
+        let mut g = Graph::new();
+        let a = g.var("x", &[3]);
+        let b = g.var("x", &[3]);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,21 @@
+//! The tensor-expression IR: a hash-consed expression DAG whose only
+//! multiplication primitive is the paper's generic Einstein-notation
+//! product `A *_(s1,s2,s3) B`.
+//!
+//! Node kinds (Section 3.1 of the paper distinguishes exactly these):
+//!
+//! * variables and constants (input nodes),
+//! * **multiplication nodes** `Mul(a, b, spec)`,
+//! * **addition nodes** `Add(a, b)`,
+//! * **element-wise unary** functions `Elem(f, a)`,
+//! * **general unary** functions `GenUnary(f, a)` (e.g. softmax),
+//! * **unit (delta) tensors** — the `δ`/`𝕀` tensors produced as
+//!   derivative seeds and eliminated by simplification/compression.
+
+mod build;
+mod display;
+mod elem;
+mod graph;
+
+pub use elem::{Elem, GenFn};
+pub use graph::{Graph, Node, NodeId, Op};

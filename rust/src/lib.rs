@@ -1,0 +1,73 @@
+//! # tensorcalc — A Simple and Efficient Tensor Calculus for Machine Learning
+//!
+//! Reproduction of Laue, Mitterreiter, Giesen (2020): an efficient tensor
+//! calculus — forward/reverse/cross-country mode automatic differentiation
+//! and higher-order-derivative compression — for tensor expressions in
+//! Einstein notation (the generic multiplication `C = A *_(s1,s2,s3) B`).
+//!
+//! The crate is organised as the three-layer stack described in DESIGN.md:
+//!
+//! * [`ir`], [`autodiff`], [`simplify`] — the paper's contribution: the
+//!   expression DAG in Einstein notation and the differentiation modes
+//!   (Theorems 5–10), cross-country reordering (§3.3) and derivative
+//!   compression (§3.3).
+//! * [`tensor`], [`einsum`], [`eval`], [`solve`] — the dense evaluation
+//!   substrate (the NumPy role in the paper's experiments).
+//! * [`problems`], [`baselines`] — the paper's three benchmark workloads
+//!   and the per-entry framework baseline (§4).
+//! * [`runtime`], [`coordinator`] — the PJRT bridge that loads the
+//!   AOT-compiled JAX/Pallas artifacts and the derivative-evaluation
+//!   service built on top.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use tensorcalc::prelude::*;
+//!
+//! // f(w) = sum(log(exp(-y .* (X w)) + 1))   — logistic regression
+//! let mut g = Graph::new();
+//! let x = g.var("X", &[4, 3]);
+//! let w = g.var("w", &[3]);
+//! let xw = g.matvec(x, w);
+//! let nxw = g.neg(xw);
+//! let e = g.elem(Elem::Exp, nxw);
+//! let one = g.constant(1.0, &[4]);
+//! let s = g.add(e, one);
+//! let l = g.elem(Elem::Log, s);
+//! let loss = g.sum_all(l);
+//! let grad = reverse_gradient(&mut g, loss, w);
+//! let mut env = Env::new();
+//! env.insert("X", Tensor::randn(&[4, 3], 1));
+//! env.insert("w", Tensor::randn(&[3], 2));
+//! let gval = eval(&g, grad, &env);
+//! assert_eq!(gval.shape(), &[3]);
+//! ```
+
+pub mod autodiff;
+pub mod baselines;
+pub mod coordinator;
+pub mod einsum;
+pub mod eval;
+pub mod figures;
+pub mod ir;
+pub mod parser;
+pub mod problems;
+pub mod runtime;
+pub mod simplify;
+pub mod solve;
+pub mod tensor;
+pub mod util;
+
+/// Convenience re-exports of the public API surface.
+pub mod prelude {
+    pub use crate::autodiff::compress::{compress_derivative, CompressedDerivative};
+    pub use crate::autodiff::cross_country::optimize_contractions;
+    pub use crate::autodiff::forward::forward_derivative;
+    pub use crate::autodiff::hessian::{hessian, hessian_compressed, hessian_vector_product, jacobian};
+    pub use crate::autodiff::reverse::{reverse_derivative, reverse_gradient};
+    pub use crate::einsum::{einsum, EinSpec};
+    pub use crate::eval::{eval, eval_many, Env, Plan};
+    pub use crate::ir::{Elem, Graph, NodeId, Op};
+    pub use crate::simplify::simplify;
+    pub use crate::tensor::Tensor;
+}

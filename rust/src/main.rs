@@ -1,0 +1,323 @@
+//! `tensorcalc` — CLI for the tensor-calculus reproduction.
+//!
+//! Subcommands (args hand-parsed; the offline build has no clap):
+//!
+//! ```text
+//! tensorcalc demo                           quick tour on Expression (1)
+//! tensorcalc derive <problem> [--n N] [--mode reverse|cc|compressed] [--dot]
+//! tensorcalc bench fig2|fig3|newton [--sizes a,b,c] [--secs S] [--full]
+//! tensorcalc artifacts [--dir D]            list + smoke-run AOT artifacts
+//! tensorcalc serve [--requests N]           coordinator demo with metrics
+//! ```
+
+use anyhow::{bail, Result};
+use tensorcalc::coordinator::{Coordinator, EngineEntry};
+use tensorcalc::eval::Plan;
+use tensorcalc::figures;
+use tensorcalc::ir::{Elem, Graph};
+use tensorcalc::prelude::*;
+use tensorcalc::problems::{logistic_regression, matrix_factorization, neural_net};
+use tensorcalc::simplify::{dag_size, flop_estimate};
+use tensorcalc::tensor::Tensor;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {:#}", e);
+        std::process::exit(1);
+    }
+}
+
+struct Args {
+    flags: Vec<(String, String)>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    fn parse(raw: &[String]) -> Self {
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        let mut it = raw.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let val = if it.peek().map(|v| !v.starts_with("--")).unwrap_or(false) {
+                    it.next().unwrap().clone()
+                } else {
+                    "true".into()
+                };
+                flags.push((name.to_string(), val));
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Args { flags, positional }
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+
+    fn sizes(&self, default: &[usize]) -> Vec<usize> {
+        self.get("sizes")
+            .map(|s| s.split(',').map(|x| x.parse().expect("bad size")).collect())
+            .unwrap_or_else(|| default.to_vec())
+    }
+
+    fn secs(&self, default: f64) -> f64 {
+        self.get("secs").map(|s| s.parse().expect("bad secs")).unwrap_or(default)
+    }
+}
+
+fn run() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = raw.first().cloned().unwrap_or_else(|| "help".into());
+    let args = Args::parse(&raw[raw.len().min(1)..]);
+    match cmd.as_str() {
+        "demo" => demo(),
+        "derive" => derive(&args),
+        "bench" => bench(&args),
+        "artifacts" => artifacts(&args),
+        "serve" => serve(&args),
+        _ => {
+            println!(
+                "tensorcalc — A Simple and Efficient Tensor Calculus for ML (reproduction)\n\n\
+                 usage:\n  tensorcalc demo\n  tensorcalc derive <logreg|matfac|mlp> \
+                 [--n N] [--mode reverse|cc|compressed] [--dot]\n  tensorcalc bench \
+                 <fig2|fig3|newton> [--sizes a,b,c] [--secs S] [--full]\n  tensorcalc \
+                 artifacts [--dir D]\n  tensorcalc serve [--requests N]"
+            );
+            Ok(())
+        }
+    }
+}
+
+/// Quick tour: Expression (1) from the paper, derivative + simplification.
+fn demo() -> Result<()> {
+    let (m, n) = (4usize, 3usize);
+    let mut g = Graph::new();
+    let x = g.var("X", &[m, n]);
+    let w = g.var("w", &[n]);
+    let xw = g.matvec(x, w);
+    let e = g.elem(Elem::Exp, xw);
+    let one = g.constant(1.0, &[m]);
+    let s = g.add(e, one);
+    let inv = g.elem(Elem::Recip, s);
+    let prod = g.hadamard(inv, e);
+    let y = g.tmatvec(x, prod); // Expression (1): Xᵀ((exp(Xw)+1)⁻¹ ⊙ exp(Xw))
+    println!("Expression (1) of the paper:\n  {}\n", g.render(y));
+    println!("DAG ({} nodes):\n{}", dag_size(&g, y), g.program(&[y]));
+
+    let jac = reverse_derivative(&mut g, y, &[w])[0];
+    let jac = simplify(&mut g, &[jac])[0];
+    println!(
+        "∂/∂w (reverse mode, simplified, {} nodes, ~{} flops @ this size):\n{}",
+        dag_size(&g, jac),
+        flop_estimate(&g, jac),
+        g.program(&[jac])
+    );
+
+    let mut env = Env::new();
+    env.insert("X", Tensor::randn(&[m, n], 1));
+    env.insert("w", Tensor::randn(&[n], 2));
+    let j = eval(&g, jac, &env);
+    println!("evaluated Jacobian {:?}", j);
+    Ok(())
+}
+
+fn derive(args: &Args) -> Result<()> {
+    let problem = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("logreg");
+    let n: usize = args.get("n").map(|v| v.parse().unwrap()).unwrap_or(8);
+    let mode = args.get("mode").unwrap_or("reverse");
+    let mut w = match problem {
+        "logreg" => logistic_regression(2 * n, n),
+        "matfac" => matrix_factorization(n, n, 5, false),
+        "mlp" => neural_net(n, 10, 2 * n),
+        other => bail!("unknown problem {}", other),
+    };
+    println!("problem={} n={} loss DAG: {} nodes", problem, n, dag_size(&w.g, w.loss));
+    let node = match mode {
+        "reverse" => w.hessian(),
+        "cc" => w.hessian_cross_country(),
+        "compressed" => {
+            let comp = w.hessian_compressed();
+            println!(
+                "compressed: {} (ratio {:.3e})",
+                comp.is_compressed(),
+                comp.compression_ratio(&w.g)
+            );
+            comp.eval_node()
+        }
+        other => bail!("unknown mode {}", other),
+    };
+    println!(
+        "Hessian[{}] : shape {:?}, {} nodes, ~{} flops",
+        mode,
+        w.g.shape(node),
+        dag_size(&w.g, node),
+        flop_estimate(&w.g, node)
+    );
+    if args.get("dot").is_some() {
+        println!("{}", w.g.to_dot(&[node]));
+    } else {
+        println!("{}", w.g.program(&[node]));
+    }
+    Ok(())
+}
+
+fn bench(args: &Args) -> Result<()> {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("fig3");
+    match which {
+        "fig2" => {
+            let rows = figures::fig2(
+                &["logreg", "matfac", "mlp"],
+                &args.sizes(&[16, 32, 64, 128]),
+                args.secs(0.2),
+            );
+            figures::print_table("Figure 2 — function value + gradient (CPU)", &rows);
+        }
+        "fig3" => {
+            let full = args.get("full").is_some();
+            let rows = figures::fig3(
+                &["logreg", "matfac", "mlp"],
+                &args.sizes(if full { &[16, 32, 64] } else { &[8, 16, 32] }),
+                args.secs(0.2),
+                true,
+            );
+            figures::print_table("Figure 3 — Hessian (CPU)", &rows);
+            println!("\nspeedup ours(reverse) vs framework(per-entry):");
+            for (p, n, s) in figures::speedup(&rows, "framework", "ours(reverse)") {
+                println!("  {:<8} n={:<5} {:>8.1}×", p, n, s);
+            }
+        }
+        "newton" => {
+            let rows = figures::newton(&args.sizes(&[20, 50, 100]), 10, args.secs(0.2));
+            figures::print_table("§3.3 — compressed vs full Newton system (matfac, k=10)", &rows);
+        }
+        other => bail!("unknown bench {}", other),
+    }
+    Ok(())
+}
+
+fn artifacts(args: &Args) -> Result<()> {
+    let dir = args
+        .get("dir")
+        .map(std::path::PathBuf::from)
+        .or_else(tensorcalc::runtime::artifacts_dir)
+        .ok_or_else(|| anyhow::anyhow!("no artifacts found — run `make artifacts`"))?;
+    let mut rt = tensorcalc::runtime::Runtime::open(&dir)?;
+    println!("artifacts in {:?}:", dir);
+    for name in rt.names() {
+        let art = rt.artifact(&name)?;
+        println!(
+            "  {:<20} inputs={:?} outputs={:?}",
+            art.name, art.input_shapes, art.output_names
+        );
+        let inputs: Vec<Tensor> = art
+            .input_shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| Tensor::randn(s, 42 + i as u64).scale(0.1))
+            .collect();
+        let t0 = std::time::Instant::now();
+        let out = art.run(&inputs)?;
+        println!(
+            "      ✓ ran in {} → {:?}",
+            tensorcalc::util::fmt_secs(t0.elapsed().as_secs_f64()).trim(),
+            out.iter().map(|t| t.shape().to_vec()).collect::<Vec<_>>()
+        );
+    }
+    Ok(())
+}
+
+/// Coordinator demo: register the logreg gradient (engine) and the AOT
+/// artifacts (PJRT), fire a synthetic request load, report metrics.
+fn serve(args: &Args) -> Result<()> {
+    let requests: usize = args.get("requests").map(|v| v.parse().unwrap()).unwrap_or(200);
+    let (m, n) = (256usize, 128usize);
+    let mut c = Coordinator::new(1024);
+
+    // engine-backed gradient entry
+    {
+        let mut w = logistic_regression(m, n);
+        let grad = w.gradient();
+        let plan = Plan::new(&w.g, &[w.loss, grad]);
+        c.register_engine(
+            "logreg_grad_engine",
+            EngineEntry {
+                graph: w.g,
+                plan,
+                inputs: vec![
+                    ("X".into(), vec![m, n]),
+                    ("y".into(), vec![m]),
+                    ("w".into(), vec![n]),
+                ],
+            },
+        );
+    }
+    // PJRT-backed entries
+    if let Some(dir) = tensorcalc::runtime::artifacts_dir() {
+        c.register_runtime(dir, &["logreg_val_grad".into(), "logreg_hess".into()])?;
+    } else {
+        println!("(no artifacts — PJRT entries skipped)");
+    }
+
+    println!("entries: {:?}", c.entries());
+    let x = Tensor::randn(&[m, n], 1);
+    let y = Tensor::randn(&[m], 2).map(f64::signum);
+    let wv = Tensor::randn(&[n], 3).scale(0.1);
+
+    let has_pjrt = c.entries().iter().any(|e| e == "logreg_val_grad");
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..requests {
+        let entry = match i % 3 {
+            0 => "logreg_grad_engine",
+            1 if has_pjrt => "logreg_val_grad",
+            _ if has_pjrt => "logreg_hess",
+            _ => "logreg_grad_engine",
+        };
+        let inputs = if entry == "logreg_grad_engine" {
+            vec![x.clone(), y.clone(), wv.clone()]
+        } else {
+            vec![wv.clone(), x.clone(), y.clone()]
+        };
+        match c.submit(entry, inputs) {
+            Ok(rx) => pending.push(rx),
+            Err(_) => {
+                // backpressure: drain one then continue
+                if let Some(rx) = pending.pop() {
+                    let _ = rx.recv();
+                }
+            }
+        }
+    }
+    let mut ok = 0usize;
+    for rx in pending {
+        if rx.recv().map(|r| r.is_ok()).unwrap_or(false) {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = c.metrics().snapshot();
+    println!(
+        "\ncompleted {}/{} in {:.3}s → {:.0} req/s",
+        ok,
+        snap.submitted,
+        wall,
+        ok as f64 / wall
+    );
+    println!("{:<22} {:>8} {:>12} {:>12}", "entry", "count", "p50", "p99");
+    for (name, count, p50, p99) in snap.per_entry {
+        println!(
+            "{:<22} {:>8} {:>12} {:>12}",
+            name,
+            count,
+            tensorcalc::util::fmt_secs(p50),
+            tensorcalc::util::fmt_secs(p99)
+        );
+    }
+    Ok(())
+}

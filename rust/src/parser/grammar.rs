@@ -1,0 +1,577 @@
+//! The expression language: a matrixcalculus.org-style front end.
+//!
+//! ```text
+//! expr   := term (('+' | '-') term)*
+//! term   := factor (('*' | '.*' | './' | '/') factor)*
+//! factor := atom | '-' factor
+//! atom   := number | ident | ident '(' expr ')' | '(' expr ')' | atom "'"
+//! ```
+//!
+//! `*` is shape-driven (matrix·matrix, matrix·vector, scalar scaling,
+//! row-vector·vector = inner product, vector·row-vector = outer product);
+//! `.*` and `./` are element-wise. `'` is transpose. Supported functions:
+//! `exp log relu sigmoid tanh sqrt abs sum norm2 tr diag inv` (element-wise
+//! `inv` = the paper's `·⁻¹`).
+
+use crate::einsum::EinSpec;
+use crate::ir::{Elem, Graph, NodeId};
+use std::fmt;
+
+/// A variable declaration for the expression language.
+#[derive(Clone, Debug)]
+pub struct VarDecl {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl VarDecl {
+    pub fn new(name: &str, shape: &[usize]) -> Self {
+        VarDecl { name: name.into(), shape: shape.to_vec() }
+    }
+}
+
+#[derive(Debug)]
+pub struct ParseError(pub String);
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "parse error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+fn err<T>(msg: impl Into<String>) -> Result<T, ParseError> {
+    Err(ParseError(msg.into()))
+}
+
+// ------------------------------------------------------------- lexer
+
+#[derive(Clone, Debug, PartialEq)]
+enum Tok {
+    Num(f64),
+    Ident(String),
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    DotStar,
+    DotSlash,
+    LParen,
+    RParen,
+    Tick,
+}
+
+fn lex(src: &str) -> Result<Vec<Tok>, ParseError> {
+    let mut out = Vec::new();
+    let chars: Vec<char> = src.chars().collect();
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        match c {
+            ' ' | '\t' | '\n' | '\r' => i += 1,
+            '+' => {
+                out.push(Tok::Plus);
+                i += 1;
+            }
+            '-' => {
+                out.push(Tok::Minus);
+                i += 1;
+            }
+            '*' => {
+                out.push(Tok::Star);
+                i += 1;
+            }
+            '/' => {
+                out.push(Tok::Slash);
+                i += 1;
+            }
+            '(' => {
+                out.push(Tok::LParen);
+                i += 1;
+            }
+            ')' => {
+                out.push(Tok::RParen);
+                i += 1;
+            }
+            '\'' => {
+                out.push(Tok::Tick);
+                i += 1;
+            }
+            '.' => {
+                match chars.get(i + 1) {
+                    Some('*') => {
+                        out.push(Tok::DotStar);
+                        i += 2;
+                    }
+                    Some('/') => {
+                        out.push(Tok::DotSlash);
+                        i += 2;
+                    }
+                    Some(d) if d.is_ascii_digit() => {
+                        // .5 style number
+                        let (n, len) = lex_number(&chars[i..])?;
+                        out.push(Tok::Num(n));
+                        i += len;
+                    }
+                    _ => return err(format!("unexpected '.' at {}", i)),
+                }
+            }
+            d if d.is_ascii_digit() => {
+                let (n, len) = lex_number(&chars[i..])?;
+                out.push(Tok::Num(n));
+                i += len;
+            }
+            a if a.is_alphabetic() || a == '_' => {
+                let start = i;
+                while i < chars.len() && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                    i += 1;
+                }
+                out.push(Tok::Ident(chars[start..i].iter().collect()));
+            }
+            other => return err(format!("unexpected character '{}'", other)),
+        }
+    }
+    Ok(out)
+}
+
+fn lex_number(chars: &[char]) -> Result<(f64, usize), ParseError> {
+    let mut len = 0;
+    while len < chars.len()
+        && (chars[len].is_ascii_digit()
+            || chars[len] == '.'
+            || (len > 0
+                && (chars[len] == 'e' || chars[len] == 'E')
+                && len + 1 < chars.len())
+            || (len > 0
+                && (chars[len] == '+' || chars[len] == '-')
+                && (chars[len - 1] == 'e' || chars[len - 1] == 'E')))
+    {
+        len += 1;
+    }
+    let s: String = chars[..len].iter().collect();
+    match s.parse() {
+        Ok(n) => Ok((n, len)),
+        Err(_) => err(format!("bad number '{}'", s)),
+    }
+}
+
+// ------------------------------------------------------------- parser
+
+/// A parsed value: the node plus a row-vector marker (`x'` on a vector).
+#[derive(Clone, Copy)]
+struct Val {
+    node: NodeId,
+    row: bool,
+}
+
+struct Parser<'g> {
+    g: &'g mut Graph,
+    toks: Vec<Tok>,
+    pos: usize,
+}
+
+/// Parse `src` into the graph. Every identifier must be declared in
+/// `decls` (shape inference is driven by the declarations).
+pub fn parse_expr(g: &mut Graph, decls: &[VarDecl], src: &str) -> Result<NodeId, ParseError> {
+    // declare variables up front so node ids are stable
+    for d in decls {
+        g.var(&d.name, &d.shape);
+    }
+    let toks = lex(src)?;
+    let mut p = Parser { g, toks, pos: 0 };
+    let v = p.expr()?;
+    if p.pos != p.toks.len() {
+        return err(format!("trailing tokens at {}", p.pos));
+    }
+    Ok(v.node)
+}
+
+impl<'g> Parser<'g> {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos)
+    }
+
+    fn next(&mut self) -> Option<Tok> {
+        let t = self.toks.get(self.pos).cloned();
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn expr(&mut self) -> Result<Val, ParseError> {
+        let mut lhs = self.term()?;
+        while let Some(op) = self.peek().cloned() {
+            match op {
+                Tok::Plus | Tok::Minus => {
+                    self.pos += 1;
+                    let rhs = self.term()?;
+                    let rhs_node = if op == Tok::Minus {
+                        self.g.neg(rhs.node)
+                    } else {
+                        rhs.node
+                    };
+                    let (a, b) = self.broadcast_pair(lhs.node, rhs_node)?;
+                    lhs = Val { node: self.g.add(a, b), row: lhs.row && rhs.row };
+                }
+                _ => break,
+            }
+        }
+        Ok(lhs)
+    }
+
+    fn term(&mut self) -> Result<Val, ParseError> {
+        let mut lhs = self.factor()?;
+        while let Some(op) = self.peek().cloned() {
+            match op {
+                Tok::Star => {
+                    self.pos += 1;
+                    let rhs = self.factor()?;
+                    lhs = self.mul(lhs, rhs)?;
+                }
+                Tok::DotStar => {
+                    self.pos += 1;
+                    let rhs = self.factor()?;
+                    let (a, b) = self.broadcast_pair(lhs.node, rhs.node)?;
+                    lhs = Val { node: self.g.hadamard(a, b), row: lhs.row };
+                }
+                Tok::DotSlash => {
+                    self.pos += 1;
+                    let rhs = self.factor()?;
+                    let inv = self.g.elem(Elem::Recip, rhs.node);
+                    let (a, b) = self.broadcast_pair(lhs.node, inv)?;
+                    lhs = Val { node: self.g.hadamard(a, b), row: lhs.row };
+                }
+                Tok::Slash => {
+                    self.pos += 1;
+                    let rhs = self.factor()?;
+                    if !self.g.shape(rhs.node).is_empty() {
+                        return err("'/' needs a scalar divisor (use ./ element-wise)");
+                    }
+                    let inv = self.g.elem(Elem::Recip, rhs.node);
+                    lhs = self.mul(lhs, Val { node: inv, row: false })?;
+                }
+                _ => break,
+            }
+        }
+        Ok(lhs)
+    }
+
+    fn factor(&mut self) -> Result<Val, ParseError> {
+        if self.peek() == Some(&Tok::Minus) {
+            self.pos += 1;
+            let v = self.factor()?;
+            return Ok(Val { node: self.g.neg(v.node), row: v.row });
+        }
+        self.atom()
+    }
+
+    fn atom(&mut self) -> Result<Val, ParseError> {
+        let t = match self.next() {
+            Some(t) => t,
+            None => return err("unexpected end of input"),
+        };
+        let mut v = match t {
+            Tok::Num(n) => Val { node: self.g.scalar(n), row: false },
+            Tok::LParen => {
+                let v = self.expr()?;
+                if self.next() != Some(Tok::RParen) {
+                    return err("expected ')'");
+                }
+                v
+            }
+            Tok::Ident(name) => {
+                if self.peek() == Some(&Tok::LParen) {
+                    self.pos += 1;
+                    let arg = self.expr()?;
+                    if self.next() != Some(Tok::RParen) {
+                        return err(format!("expected ')' after {}(…", name));
+                    }
+                    self.call(&name, arg)?
+                } else {
+                    match self.g.var_id(&name) {
+                        Some(id) => Val { node: id, row: false },
+                        None => return err(format!("undeclared variable '{}'", name)),
+                    }
+                }
+            }
+            other => return err(format!("unexpected token {:?}", other)),
+        };
+        while self.peek() == Some(&Tok::Tick) {
+            self.pos += 1;
+            v = self.transpose(v)?;
+        }
+        Ok(v)
+    }
+
+    fn transpose(&mut self, v: Val) -> Result<Val, ParseError> {
+        match self.g.order(v.node) {
+            0 => Ok(v),
+            1 => Ok(Val { node: v.node, row: !v.row }),
+            2 => Ok(Val { node: self.g.transpose(v.node, &[1, 0]), row: false }),
+            r => err(format!("cannot transpose an order-{} tensor", r)),
+        }
+    }
+
+    /// Shape-driven `*`.
+    fn mul(&mut self, a: Val, b: Val) -> Result<Val, ParseError> {
+        let (ra, rb) = (self.g.order(a.node), self.g.order(b.node));
+        let v = match (ra, rb) {
+            // scalar scaling
+            (0, _) => {
+                let l: Vec<u32> = (0..rb as u32).collect();
+                Val {
+                    node: self.g.mul(b.node, a.node, EinSpec::new(l.clone(), vec![], l)),
+                    row: b.row,
+                }
+            }
+            (_, 0) => {
+                let l: Vec<u32> = (0..ra as u32).collect();
+                Val {
+                    node: self.g.mul(a.node, b.node, EinSpec::new(l.clone(), vec![], l)),
+                    row: a.row,
+                }
+            }
+            (2, 2) => Val { node: self.g.matmul(a.node, b.node), row: false },
+            (2, 1) => {
+                if b.row {
+                    return err("matrix * row-vector is not defined (transpose it?)");
+                }
+                Val { node: self.g.matvec(a.node, b.node), row: false }
+            }
+            (1, 2) => {
+                if !a.row {
+                    return err("column-vector * matrix is not defined (use x'·A)");
+                }
+                // x' A = Aᵀ x
+                Val { node: self.g.tmatvec(b.node, a.node), row: true }
+            }
+            (1, 1) => match (a.row, b.row) {
+                (true, false) => Val { node: self.g.dot(a.node, b.node), row: false },
+                (false, true) => Val { node: self.g.outer(a.node, b.node), row: false },
+                _ => return err("vector * vector needs x'*y (inner) or x*y' (outer), or use .*"),
+            },
+            (ra, rb) => return err(format!("'*' undefined for orders {} and {}", ra, rb)),
+        };
+        Ok(v)
+    }
+
+    fn call(&mut self, name: &str, arg: Val) -> Result<Val, ParseError> {
+        let node = arg.node;
+        let v = match name {
+            "exp" => self.g.elem(Elem::Exp, node),
+            "log" => self.g.elem(Elem::Log, node),
+            "relu" => self.g.elem(Elem::Relu, node),
+            "sigmoid" => self.g.elem(Elem::Sigmoid, node),
+            "tanh" => self.g.elem(Elem::Tanh, node),
+            "sqrt" => self.g.elem(Elem::Sqrt, node),
+            "abs" => self.g.elem(Elem::Abs, node),
+            "inv" => self.g.elem(Elem::Recip, node), // the paper's element-wise ·⁻¹
+            "sum" => self.g.sum_all(node),
+            "norm2" => self.g.norm2(node),
+            "tr" => {
+                if self.g.order(node) != 2 {
+                    return err("tr(·) needs a matrix");
+                }
+                let d = self.g.diag_of(node);
+                self.g.sum_all(d)
+            }
+            "diag" => match self.g.order(node) {
+                1 => {
+                    // diag(v)[i,j] = v[i]·δ[i,j]
+                    let n = self.g.shape(node)[0];
+                    let d = self.g.delta(&[n]);
+                    self.g.mul(node, d, EinSpec::parse("i,ij->ij"))
+                }
+                2 => self.g.diag_of(node),
+                _ => return err("diag(·) needs a vector or a matrix"),
+            },
+            other => return err(format!("unknown function '{}'", other)),
+        };
+        Ok(Val { node: v, row: false })
+    }
+
+    /// Allow `tensor + scalar` by broadcasting the scalar constant.
+    fn broadcast_pair(&mut self, a: NodeId, b: NodeId) -> Result<(NodeId, NodeId), ParseError> {
+        let sa = self.g.shape(a).to_vec();
+        let sb = self.g.shape(b).to_vec();
+        if sa == sb {
+            return Ok((a, b));
+        }
+        if sb.is_empty() {
+            if let Some(c) = self.g.const_value(b) {
+                return Ok((a, self.g.constant(c, &sa)));
+            }
+            // computed scalar: broadcast with an explicit ones-mul
+            let l: Vec<u32> = (0..sa.len() as u32).collect();
+            let ones = self.g.constant(1.0, &sa);
+            let bb = self.g.mul(ones, b, EinSpec::new(l.clone(), vec![], l));
+            return Ok((a, bb));
+        }
+        if sa.is_empty() {
+            let (b2, a2) = self.broadcast_pair(b, a)?;
+            return Ok((a2, b2));
+        }
+        err(format!("shape mismatch {:?} vs {:?}", sa, sb))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::reverse::reverse_gradient;
+    use crate::eval::{eval, fd_gradient, Env};
+    use crate::simplify::simplify_one;
+    use crate::tensor::Tensor;
+
+    fn decls() -> Vec<VarDecl> {
+        vec![
+            VarDecl::new("A", &[3, 4]),
+            VarDecl::new("B", &[4, 3]),
+            VarDecl::new("x", &[4]),
+            VarDecl::new("y", &[3]),
+            VarDecl::new("w", &[4]),
+        ]
+    }
+
+    fn env() -> Env {
+        let mut e = Env::new();
+        e.insert("A", Tensor::randn(&[3, 4], 1));
+        e.insert("B", Tensor::randn(&[4, 3], 2));
+        e.insert("x", Tensor::randn(&[4], 3));
+        e.insert("y", Tensor::randn(&[3], 4));
+        e.insert("w", Tensor::randn(&[4], 5).scale(0.3));
+        e
+    }
+
+    #[test]
+    fn parses_matvec_and_shapes() {
+        let mut g = Graph::new();
+        let id = parse_expr(&mut g, &decls(), "A*x").unwrap();
+        assert_eq!(g.shape(id), &[3]);
+    }
+
+    #[test]
+    fn quadratic_form_parses_and_evaluates() {
+        let mut g = Graph::new();
+        let id = parse_expr(&mut g, &decls(), "x'*(B*(A*x))").unwrap();
+        assert_eq!(g.shape(id), &[] as &[usize]);
+        let e = env();
+        let got = eval(&g, id, &e).item();
+        // manual: xᵀ B A x
+        let a = e.get("A").unwrap();
+        let b = e.get("B").unwrap();
+        let x = e.get("x").unwrap();
+        let ax = crate::einsum::einsum(&EinSpec::parse("ij,j->i"), a, x);
+        let bax = crate::einsum::einsum(&EinSpec::parse("ij,j->i"), b, &ax);
+        let want = x.flat_dot(&bax);
+        assert!((got - want).abs() < 1e-10);
+    }
+
+    #[test]
+    fn paper_expression_1_parses() {
+        // Xᵀ((exp(X w)+1)⁻¹ ⊙ exp(X w)) with A in the X role
+        let mut g = Graph::new();
+        let src = "A'*(inv(exp(A*w)+1) .* exp(A*w))";
+        let id = parse_expr(&mut g, &decls(), src).unwrap();
+        assert_eq!(g.shape(id), &[4]);
+        // and it is differentiable end-to-end
+        let e = env();
+        let before = eval(&g, id, &e);
+        assert!(before.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn parsed_gradient_matches_fd() {
+        let mut g = Graph::new();
+        let src = "sum(log(exp(A*w)+1))";
+        let f = parse_expr(&mut g, &decls(), src).unwrap();
+        let w = g.var_id("w").unwrap();
+        let grad = reverse_gradient(&mut g, f, w);
+        let grad = simplify_one(&mut g, grad);
+        let e = env();
+        let gv = eval(&g, grad, &e);
+        let want = fd_gradient(&g, f, "w", &e, 1e-6);
+        assert!(gv.allclose(&want, 1e-5, 1e-7), "diff {}", gv.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn outer_and_inner_products() {
+        let mut g = Graph::new();
+        let outer = parse_expr(&mut g, &decls(), "x*y'").unwrap();
+        assert_eq!(g.shape(outer), &[4, 3]);
+        let inner = parse_expr(&mut g, &decls(), "x'*x").unwrap();
+        assert_eq!(g.shape(inner), &[] as &[usize]);
+    }
+
+    #[test]
+    fn diag_and_trace() {
+        let mut g = Graph::new();
+        let d = parse_expr(&mut g, &[VarDecl::new("v", &[3])], "diag(v)").unwrap();
+        assert_eq!(g.shape(d), &[3, 3]);
+        let mut e = Env::new();
+        e.insert("v", Tensor::new(&[3], vec![1., 2., 3.]));
+        let dv = eval(&g, d, &e);
+        assert_eq!(dv.at(&[1, 1]), 2.0);
+        assert_eq!(dv.at(&[0, 1]), 0.0);
+
+        let mut g2 = Graph::new();
+        let t = parse_expr(&mut g2, &[VarDecl::new("M", &[3, 3])], "tr(M)").unwrap();
+        let mut e2 = Env::new();
+        e2.insert("M", Tensor::eye(3).scale(2.0));
+        assert_eq!(eval(&g2, t, &e2).item(), 6.0);
+    }
+
+    #[test]
+    fn scalar_arithmetic_and_precedence() {
+        let mut g = Graph::new();
+        let id = parse_expr(&mut g, &[], "2+3*4").unwrap();
+        assert_eq!(eval(&g, id, &Env::new()).item(), 14.0);
+        let id = parse_expr(&mut g, &[], "(2+3)*4").unwrap();
+        assert_eq!(eval(&g, id, &Env::new()).item(), 20.0);
+        let id = parse_expr(&mut g, &[], "-2*3").unwrap();
+        assert_eq!(eval(&g, id, &Env::new()).item(), -6.0);
+        let id = parse_expr(&mut g, &[], "8/2").unwrap();
+        assert_eq!(eval(&g, id, &Env::new()).item(), 4.0);
+    }
+
+    #[test]
+    fn error_cases() {
+        let mut g = Graph::new();
+        assert!(parse_expr(&mut g, &decls(), "z*x").is_err()); // undeclared
+        assert!(parse_expr(&mut g, &decls(), "x*y").is_err()); // vec*vec
+        assert!(parse_expr(&mut g, &decls(), "A*x+").is_err()); // dangling op
+        assert!(parse_expr(&mut g, &decls(), "A*(x").is_err()); // unbalanced
+        assert!(parse_expr(&mut g, &decls(), "foo(x)").is_err()); // unknown fn
+        assert!(parse_expr(&mut g, &decls(), "A+x").is_err()); // shape mismatch
+    }
+
+    #[test]
+    fn scalar_broadcast_in_addition() {
+        let mut g = Graph::new();
+        let id = parse_expr(&mut g, &decls(), "exp(x)+1").unwrap();
+        assert_eq!(g.shape(id), &[4]);
+        let e = env();
+        let v = eval(&g, id, &e);
+        let x = e.get("x").unwrap();
+        for i in 0..4 {
+            assert!((v.data()[i] - (x.data()[i].exp() + 1.0)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matrix_transpose_in_products() {
+        let mut g = Graph::new();
+        let id = parse_expr(&mut g, &decls(), "A'*y").unwrap();
+        assert_eq!(g.shape(id), &[4]);
+        let e = env();
+        let got = eval(&g, id, &e);
+        let want = crate::einsum::einsum(
+            &EinSpec::parse("ji,j->i"),
+            e.get("A").unwrap(),
+            e.get("y").unwrap(),
+        );
+        assert!(got.allclose(&want, 1e-12, 1e-12));
+    }
+}

@@ -1,0 +1,6 @@
+//! Expression-language front end (matrixcalculus.org style): parse a
+//! string like `"X'*(inv(exp(X*w)+1) .* exp(X*w))"` against declared
+//! variable shapes into the expression DAG, ready for differentiation.
+
+mod grammar;
+pub use grammar::{parse_expr, ParseError, VarDecl};

@@ -1,0 +1,94 @@
+//! Logistic regression (§4): `f(w) = Σ_i log(exp(−y⁽ⁱ⁾·(X⁽ⁱ⁾w)) + 1)`
+//! with dense random data, `m = 2n` as in the paper's sweep.
+
+use super::Workload;
+use crate::eval::Env;
+use crate::ir::{Elem, Graph};
+use crate::tensor::{Tensor, XorShift};
+
+/// Build the logistic-regression workload with `m` data points in `n`
+/// dimensions, differentiated with respect to the weight vector `w`.
+pub fn logistic_regression(m: usize, n: usize) -> Workload {
+    let mut g = Graph::new();
+    let x = g.var("X", &[m, n]);
+    let y = g.var("y", &[m]);
+    let w = g.var("w", &[n]);
+    let xw = g.matvec(x, w);
+    let yxw = g.hadamard(y, xw);
+    let neg = g.neg(yxw);
+    let e = g.elem(Elem::Exp, neg);
+    let one = g.constant(1.0, &[m]);
+    let s = g.add(e, one);
+    let l = g.elem(Elem::Log, s);
+    let loss = g.sum_all(l);
+
+    let mut env = Env::new();
+    env.insert("X", Tensor::randn(&[m, n], 100));
+    let mut rng = XorShift::new(200);
+    let labels: Vec<f64> = (0..m)
+        .map(|_| if rng.next_f64() < 0.5 { -1.0 } else { 1.0 })
+        .collect();
+    env.insert("y", Tensor::new(&[m], labels));
+    env.insert("w", Tensor::randn(&[n], 300).scale(0.1));
+
+    Workload { name: "logreg", g, loss, wrt: w, env }
+}
+
+/// The paper's sweep sizes use `m = 2n`.
+pub fn logistic_regression_paper(n: usize) -> Workload {
+    logistic_regression(2 * n, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::eval;
+
+    #[test]
+    fn loss_is_positive_and_finite() {
+        let w = logistic_regression(10, 5);
+        let v = eval(&w.g, w.loss, &w.env).item();
+        assert!(v.is_finite() && v > 0.0, "loss {}", v);
+    }
+
+    #[test]
+    fn loss_matches_manual_computation() {
+        let w = logistic_regression(7, 3);
+        let xv = w.env.get("X").unwrap();
+        let yv = w.env.get("y").unwrap();
+        let wv = w.env.get("w").unwrap();
+        let mut want = 0.0;
+        for i in 0..7 {
+            let mut z = 0.0;
+            for j in 0..3 {
+                z += xv.at(&[i, j]) * wv.data()[j];
+            }
+            want += ((-yv.data()[i] * z).exp() + 1.0).ln();
+        }
+        let got = eval(&w.g, w.loss, &w.env).item();
+        assert!((got - want).abs() < 1e-10, "{} vs {}", got, want);
+    }
+
+    #[test]
+    fn hessian_shape_and_symmetry() {
+        let mut w = logistic_regression(8, 4);
+        let h = w.hessian();
+        assert_eq!(w.g.shape(h), &[4, 4]);
+        let hv = eval(&w.g, h, &w.env);
+        assert!(hv.allclose(&hv.t(), 1e-10, 1e-12));
+    }
+
+    #[test]
+    fn hessian_is_positive_semidefinite() {
+        // logistic loss is convex ⇒ H ⪰ 0; with random dense X it is PD
+        use crate::solve::cholesky;
+        let mut w = logistic_regression(20, 6);
+        let h = w.hessian();
+        let mut hv = eval(&w.g, h, &w.env);
+        // tiny jitter for numerical safety
+        for i in 0..6 {
+            hv.data_mut()[i * 6 + i] += 1e-10;
+        }
+        assert!(cholesky(&hv).is_some(), "logreg Hessian must be PSD");
+    }
+}

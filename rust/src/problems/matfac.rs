@@ -1,0 +1,172 @@
+//! Matrix factorization (§4): `min_U ‖T − U Vᵀ‖²_Ω`, gradient and Hessian
+//! with respect to `U`. Without the mask Ω the Hessian is the paper's
+//! flagship compression example `2(VᵀV) ⊗ 𝕀`; the §3.3 Newton-system
+//! comparison (O(k³) vs O((nk)³)) is implemented below.
+
+use super::Workload;
+use crate::eval::Env;
+use crate::ir::Graph;
+use crate::solve::{cholesky, solve_lower, solve_lower_t, solve_spd};
+use crate::tensor::{Tensor, XorShift};
+
+/// Build the matrix-factorization workload: `T ∈ R^{m×n}`,
+/// `U ∈ R^{m×k}`, `V ∈ R^{n×k}`. If `with_mask` an indicator Ω masks the
+/// known entries (the paper's general form).
+pub fn matrix_factorization(m: usize, n: usize, k: usize, with_mask: bool) -> Workload {
+    let mut g = Graph::new();
+    let t = g.var("T", &[m, n]);
+    let u = g.var("U", &[m, k]);
+    let v = g.var("V", &[n, k]);
+    let uvt = g.matmul_t(u, v); // U Vᵀ : [m, n]
+    let d = g.sub(t, uvt);
+    let loss = if with_mask {
+        let om = g.var("Omega", &[m, n]);
+        let masked = g.hadamard(d, om);
+        g.norm2(masked)
+    } else {
+        g.norm2(d)
+    };
+
+    let mut env = Env::new();
+    env.insert("T", Tensor::randn(&[m, n], 400));
+    env.insert("U", Tensor::randn(&[m, k], 500));
+    env.insert("V", Tensor::randn(&[n, k], 600));
+    if with_mask {
+        let mut rng = XorShift::new(700);
+        let om: Vec<f64> = (0..m * n)
+            .map(|_| if rng.next_f64() < 0.8 { 1.0 } else { 0.0 })
+            .collect();
+        env.insert("Omega", Tensor::new(&[m, n], om));
+    }
+
+    Workload {
+        name: if with_mask { "matfac_masked" } else { "matfac" },
+        g,
+        loss,
+        wrt: u,
+        env,
+    }
+}
+
+/// Solve the Newton system `H·D = G` with the *compressed* Hessian
+/// `H[i,j,k,l] = M[j,l]·δ_{ik}` (core `M = 2VᵀV`, k×k): one Cholesky of
+/// `M` plus one triangular solve per row of `G` — O(k³ + m·k²).
+pub fn newton_step_compressed(core: &Tensor, grad: &Tensor) -> Option<Tensor> {
+    let k = core.shape()[0];
+    assert_eq!(core.shape(), &[k, k]);
+    let m = grad.shape()[0];
+    assert_eq!(grad.shape(), &[m, k]);
+    let l = cholesky(core)?;
+    let mut out = Tensor::zeros(&[m, k]);
+    for i in 0..m {
+        let gi = &grad.data()[i * k..(i + 1) * k];
+        let y = solve_lower(&l, gi);
+        let x = solve_lower_t(&l, &y);
+        out.data_mut()[i * k..(i + 1) * k].copy_from_slice(&x);
+    }
+    Some(out)
+}
+
+/// Solve the same system with the *materialised* order-4 Hessian,
+/// flattened to (mk)×(mk) — the O((mk)³) baseline of §3.3.
+pub fn newton_step_full(h: &Tensor, grad: &Tensor) -> Option<Tensor> {
+    let (m, k) = (grad.shape()[0], grad.shape()[1]);
+    assert_eq!(h.shape(), &[m, k, m, k]);
+    let nk = m * k;
+    let h2 = h.reshape(&[nk, nk]);
+    let g2 = grad.reshape(&[nk]);
+    let sol = solve_spd(&h2, &g2).or_else(|| crate::solve::solve(&h2, &g2))?;
+    Some(sol.reshape(&[m, k]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::eval;
+
+    #[test]
+    fn loss_zero_at_exact_factorization() {
+        let mut w = matrix_factorization(5, 4, 2, false);
+        // set T = U Vᵀ exactly
+        let uv = {
+            let u = w.env.get("U").unwrap();
+            let v = w.env.get("V").unwrap();
+            crate::einsum::einsum(&crate::einsum::EinSpec::parse("ik,jk->ij"), u, v)
+        };
+        w.env.insert("T", uv);
+        let v = eval(&w.g, w.loss, &w.env).item();
+        assert!(v.abs() < 1e-18, "loss {}", v);
+    }
+
+    #[test]
+    fn compressed_and_full_newton_agree() {
+        let mut w = matrix_factorization(10, 10, 3, false);
+        let comp = w.hessian_compressed();
+        assert!(comp.is_compressed());
+        let core = eval(&w.g, comp.eval_node(), &w.env);
+        let h = comp.materialize(&core);
+        let grad_node = w.gradient();
+        let grad = eval(&w.g, grad_node, &w.env);
+
+        let fast = newton_step_compressed(&core, &grad).expect("core must be SPD");
+        let slow = newton_step_full(&h, &grad).expect("full solve failed");
+        assert!(
+            fast.allclose(&slow, 1e-7, 1e-8),
+            "newton steps diverge, diff {}",
+            fast.max_abs_diff(&slow)
+        );
+    }
+
+    #[test]
+    fn newton_step_solves_the_quadratic_exactly() {
+        // f is quadratic in U, so one full Newton step lands on the
+        // global minimum of the (convex in U) objective: grad becomes 0.
+        let mut w = matrix_factorization(8, 8, 2, false);
+        let comp = w.hessian_compressed();
+        let core = eval(&w.g, comp.eval_node(), &w.env);
+        let grad_node = w.gradient();
+        let grad = eval(&w.g, grad_node, &w.env);
+        let step = newton_step_compressed(&core, &grad).unwrap();
+        // U ← U − step
+        let u_new = w.env.get("U").unwrap().sub(&step);
+        w.env.insert("U", u_new);
+        let g_after = eval(&w.g, grad_node, &w.env);
+        assert!(
+            g_after.norm() < 1e-8 * grad.norm().max(1.0),
+            "gradient after Newton step: {}",
+            g_after.norm()
+        );
+    }
+
+    #[test]
+    fn masked_hessian_compresses_to_third_order_core() {
+        // with the Ω mask the Hessian is H[i,j,k,l] = C[j,l,i]·δ_{ik}
+        // (C = 2 Σ_b Ω_ib V_bj V_bl): the δ still factors out, with a
+        // per-row k×k core — ratio 1/m
+        let (m, n, k) = (8, 6, 2);
+        let mut w = matrix_factorization(m, n, k, true);
+        let comp = w.hessian_compressed();
+        assert!(comp.is_compressed(), "masked matfac Hessian must compress");
+        let core_elems: usize = w.g.shape(comp.eval_node()).iter().product();
+        assert_eq!(core_elems, k * k * m);
+        let ratio = comp.compression_ratio(&w.g);
+        assert!((ratio - 1.0 / m as f64).abs() < 1e-12, "ratio {}", ratio);
+        // numerics: materialised compressed == full Hessian
+        use crate::eval::eval;
+        let core = eval(&w.g, comp.eval_node(), &w.env);
+        let mat = comp.materialize(&core);
+        let full = w.hessian();
+        let fv = eval(&w.g, full, &w.env);
+        assert!(mat.allclose(&fv, 1e-9, 1e-11), "diff {}", mat.max_abs_diff(&fv));
+    }
+
+    #[test]
+    fn masked_variant_uses_omega() {
+        let mut w = matrix_factorization(6, 5, 2, true);
+        let base = eval(&w.g, w.loss, &w.env).item();
+        // zeroing Ω must zero the loss
+        w.env.insert("Omega", Tensor::zeros(&[6, 5]));
+        let z = eval(&w.g, w.loss, &w.env).item();
+        assert!(z.abs() < 1e-18 && base > 0.0);
+    }
+}

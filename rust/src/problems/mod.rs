@@ -1,0 +1,155 @@
+//! The paper's three benchmark workloads (§4): logistic regression,
+//! matrix factorization and a small fully-connected neural net — each
+//! built on the public IR API with synthetic dense data, exactly as in
+//! the paper ("we generated dense, random data for each experiment").
+
+mod logreg;
+mod matfac;
+mod neural_net;
+
+pub use logreg::{logistic_regression, logistic_regression_paper};
+pub use matfac::{matrix_factorization, newton_step_compressed, newton_step_full};
+pub use neural_net::neural_net;
+
+use crate::autodiff::compress::{compress_derivative, CompressedDerivative};
+use crate::autodiff::cross_country::optimize_contractions;
+use crate::autodiff::hessian::jacobian;
+use crate::autodiff::reverse::reverse_gradient;
+use crate::eval::Env;
+use crate::ir::{Graph, NodeId};
+use crate::simplify::simplify_one;
+
+/// A benchmark workload: a scalar loss over synthetic data, with one
+/// distinguished variable to differentiate.
+pub struct Workload {
+    pub name: &'static str,
+    pub g: Graph,
+    pub loss: NodeId,
+    pub wrt: NodeId,
+    pub env: Env,
+}
+
+impl Workload {
+    /// Simplified reverse-mode gradient.
+    pub fn gradient(&mut self) -> NodeId {
+        let gr = reverse_gradient(&mut self.g, self.loss, self.wrt);
+        simplify_one(&mut self.g, gr)
+    }
+
+    /// Simplified reverse-mode Hessian (the mode equivalent to Laue et
+    /// al. [6] — the paper's "ours (reverse)" series).
+    pub fn hessian(&mut self) -> NodeId {
+        let gr = self.gradient();
+        jacobian(&mut self.g, gr, self.wrt)
+    }
+
+    /// Hessian with the cross-country re-association applied — the
+    /// paper's "ours (cross-country)" series.
+    pub fn hessian_cross_country(&mut self) -> NodeId {
+        let h = self.hessian();
+        let h = optimize_contractions(&mut self.g, h);
+        simplify_one(&mut self.g, h)
+    }
+
+    /// Hessian in compressed representation — the paper's "ours
+    /// (compressed)" series.
+    pub fn hessian_compressed(&mut self) -> CompressedDerivative {
+        let h = self.hessian_cross_country();
+        compress_derivative(&mut self.g, h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::{eval, fd_gradient, fd_jacobian};
+
+    #[test]
+    fn all_workloads_gradients_match_fd() {
+        for mut w in [
+            logistic_regression(6, 3),
+            matrix_factorization(5, 5, 2, false),
+            matrix_factorization(5, 4, 2, true),
+            neural_net(4, 3, 5),
+        ] {
+            let grad = w.gradient();
+            let name = w.name;
+            let wrt_name = match w.g.op(w.wrt) {
+                crate::ir::Op::Var(n) => n.clone(),
+                _ => unreachable!(),
+            };
+            let gv = eval(&w.g, grad, &w.env);
+            let want = fd_gradient(&w.g, w.loss, &wrt_name, &w.env, 1e-6);
+            assert!(
+                gv.allclose(&want, 1e-4, 1e-6),
+                "{}: gradient mismatch, diff {}",
+                name,
+                gv.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn all_workloads_hessians_match_fd_of_gradient() {
+        for mut w in [
+            logistic_regression(6, 3),
+            matrix_factorization(5, 5, 2, false),
+            neural_net(4, 2, 5),
+        ] {
+            let grad = w.gradient();
+            let h = w.hessian();
+            let name = w.name;
+            let wrt_name = match w.g.op(w.wrt) {
+                crate::ir::Op::Var(n) => n.clone(),
+                _ => unreachable!(),
+            };
+            let hv = eval(&w.g, h, &w.env);
+            let want = fd_jacobian(&w.g, grad, &wrt_name, &w.env, 1e-5);
+            assert!(
+                hv.allclose(&want, 1e-3, 1e-5),
+                "{}: hessian mismatch, diff {}",
+                name,
+                hv.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn hessian_modes_agree_numerically() {
+        for mut w in [
+            logistic_regression(8, 4),
+            matrix_factorization(6, 6, 2, false),
+            neural_net(4, 3, 6),
+        ] {
+            let h = w.hessian();
+            let hcc = w.hessian_cross_country();
+            let name = w.name;
+            let a = eval(&w.g, h, &w.env);
+            let b = eval(&w.g, hcc, &w.env);
+            assert!(
+                a.allclose(&b, 1e-8, 1e-10),
+                "{}: cross-country changed the Hessian, diff {}",
+                name,
+                a.max_abs_diff(&b)
+            );
+            let comp = w.hessian_compressed();
+            let cv = eval(&w.g, comp.eval_node(), &w.env);
+            let mat = comp.materialize(&cv);
+            assert!(
+                mat.allclose(&a, 1e-8, 1e-10),
+                "{}: compressed Hessian disagrees, diff {}",
+                name,
+                mat.max_abs_diff(&a)
+            );
+        }
+    }
+
+    #[test]
+    fn matfac_hessian_is_compressed() {
+        let mut w = matrix_factorization(8, 8, 3, false);
+        let comp = w.hessian_compressed();
+        assert!(comp.is_compressed(), "plain matfac Hessian must compress");
+        let ratio = comp.compression_ratio(&w.g);
+        assert!(ratio <= 1.0 / 60.0, "ratio {} not small enough", ratio);
+    }
+}

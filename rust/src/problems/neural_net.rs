@@ -1,0 +1,114 @@
+//! A small fully-connected neural net (§4): `layers` dense layers of
+//! width `n` with ReLU activations and a softmax cross-entropy output,
+//! differentiated with respect to the *first* layer's weights (the paper
+//! reports Hessian times for the first layer).
+
+use super::Workload;
+use crate::eval::Env;
+use crate::ir::{Elem, GenFn, Graph};
+use crate::tensor::{Tensor, XorShift};
+
+/// Build the neural-net workload: batch `m`, width `n`, `layers` weight
+/// matrices `W1..WL` (all n×n). Loss = Σ_i [logsumexp(z_i) − y_iᵀ z_i]
+/// — softmax cross-entropy against one-hot labels.
+pub fn neural_net(n: usize, layers: usize, m: usize) -> Workload {
+    assert!(layers >= 1);
+    let mut g = Graph::new();
+    let x = g.var("X", &[m, n]);
+    let mut h = x;
+    let mut w1 = None;
+    for l in 1..=layers {
+        let w = g.var(&format!("W{}", l), &[n, n]);
+        if l == 1 {
+            w1 = Some(w);
+        }
+        let z = g.matmul(h, w);
+        h = if l < layers {
+            g.elem(Elem::Relu, z)
+        } else {
+            z // logits
+        };
+    }
+    let z = h;
+    let lse = g.gen_unary(GenFn::LogSumExp, z); // [m]
+    let total_lse = g.sum_all(lse);
+    let y = g.var("Y", &[m, n]);
+    let yz = g.hadamard(y, z);
+    let fit = g.sum_all(yz);
+    let neg_fit = g.neg(fit);
+    let loss = g.add(total_lse, neg_fit);
+
+    let mut env = Env::new();
+    env.insert("X", Tensor::randn(&[m, n], 800));
+    let mut rng = XorShift::new(900);
+    let mut yv = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        let c = rng.below(n);
+        yv.data_mut()[i * n + c] = 1.0;
+    }
+    env.insert("Y", yv);
+    for l in 1..=layers {
+        // small weights keep ReLU pre-activations well spread
+        env.insert(
+            &format!("W{}", l),
+            Tensor::randn(&[n, n], 1000 + l as u64).scale(1.0 / (n as f64).sqrt()),
+        );
+    }
+
+    Workload { name: "neural_net", g, loss, wrt: w1.unwrap(), env }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::{eval, fd_gradient};
+
+    #[test]
+    fn loss_is_cross_entropy_like() {
+        let w = neural_net(4, 2, 6);
+        let v = eval(&w.g, w.loss, &w.env).item();
+        // cross-entropy of m samples over n classes is ≥ 0
+        assert!(v.is_finite() && v > 0.0, "loss {}", v);
+    }
+
+    #[test]
+    fn single_layer_gradient_matches_fd() {
+        let mut w = neural_net(3, 1, 4);
+        let grad = w.gradient();
+        let gv = eval(&w.g, grad, &w.env);
+        let want = fd_gradient(&w.g, w.loss, "W1", &w.env, 1e-6);
+        assert!(gv.allclose(&want, 1e-5, 1e-7), "diff {}", gv.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn deep_net_gradient_matches_fd() {
+        let mut w = neural_net(3, 4, 4);
+        let grad = w.gradient();
+        let gv = eval(&w.g, grad, &w.env);
+        let want = fd_gradient(&w.g, w.loss, "W1", &w.env, 1e-6);
+        assert!(gv.allclose(&want, 1e-4, 1e-6), "diff {}", gv.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn hessian_shape_is_order4() {
+        let mut w = neural_net(3, 2, 4);
+        let h = w.hessian();
+        assert_eq!(w.g.shape(h), &[3, 3, 3, 3]);
+    }
+
+    #[test]
+    fn softmax_probabilities_embedded_in_gradient() {
+        // For a 1-layer net, ∇_{W} loss = Xᵀ(softmax(XW) − Y)
+        let mut w = neural_net(3, 1, 5);
+        let grad = w.gradient();
+        let gv = eval(&w.g, grad, &w.env);
+        let xv = w.env.get("X").unwrap().clone();
+        let wv = w.env.get("W1").unwrap().clone();
+        let yv = w.env.get("Y").unwrap().clone();
+        let z = crate::einsum::einsum(&crate::einsum::EinSpec::parse("ij,jk->ik"), &xv, &wv);
+        let p = crate::ir::GenFn::Softmax.eval(&z);
+        let pm = p.sub(&yv);
+        let want = crate::einsum::einsum(&crate::einsum::EinSpec::parse("ji,jk->ik"), &xv, &pm);
+        assert!(gv.allclose(&want, 1e-9, 1e-11), "diff {}", gv.max_abs_diff(&want));
+    }
+}

@@ -1,0 +1,278 @@
+//! PJRT runtime bridge: loads the AOT-compiled HLO-text artifacts
+//! produced by `python/compile/aot.py` and executes them on the XLA CPU
+//! client — the request path never touches Python.
+//!
+//! Interchange format is HLO **text** (see aot.py for why), parsed with
+//! `HloModuleProto::from_text_file`, compiled once per artifact and then
+//! executed with `f32` literals converted from/to the engine's `f64`
+//! [`Tensor`]s.
+
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One compiled artifact: the loaded executable plus its signature from
+/// the manifest.
+pub struct Artifact {
+    pub name: String,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub output_names: Vec<String>,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The artifact registry: a PJRT CPU client plus every entry of
+/// `artifacts/manifest.txt`, compiled lazily on first use.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    specs: Vec<(String, String, Vec<Vec<usize>>, Vec<String>)>,
+    compiled: HashMap<String, Artifact>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (reads `manifest.txt`; does not compile
+    /// anything yet).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {:?} — run `make artifacts` first", manifest))?;
+        let mut specs = Vec::new();
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = line.split('\t').collect();
+            if parts.len() != 4 {
+                bail!("malformed manifest line: {}", line);
+            }
+            let shapes: Vec<Vec<usize>> = parts[2]
+                .split(';')
+                .map(|s| {
+                    if s.is_empty() {
+                        Ok(vec![])
+                    } else {
+                        s.split(',')
+                            .map(|d| d.parse::<usize>().map_err(|e| anyhow!("{}", e)))
+                            .collect()
+                    }
+                })
+                .collect::<Result<_>>()?;
+            let outs: Vec<String> = parts[3].split(',').map(|s| s.to_string()).collect();
+            specs.push((parts[0].to_string(), parts[1].to_string(), shapes, outs));
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {:?}", e))?;
+        Ok(Runtime { client, dir, specs, compiled: HashMap::new() })
+    }
+
+    /// Default artifact location (`artifacts/`, overridable with
+    /// `TENSORCALC_ARTIFACTS`).
+    pub fn open_default() -> Result<Self> {
+        let dir = std::env::var("TENSORCALC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::open(dir)
+    }
+
+    /// Names of all artifacts in the manifest.
+    pub fn names(&self) -> Vec<String> {
+        self.specs.iter().map(|(n, ..)| n.clone()).collect()
+    }
+
+    /// Compile (once) and return the artifact.
+    pub fn artifact(&mut self, name: &str) -> Result<&Artifact> {
+        if !self.compiled.contains_key(name) {
+            let (n, file, shapes, outs) = self
+                .specs
+                .iter()
+                .find(|(n, ..)| n == name)
+                .ok_or_else(|| anyhow!("unknown artifact {}", name))?
+                .clone();
+            let path = self.dir.join(&file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {:?}: {:?}", path, e))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {:?}", name, e))?;
+            self.compiled.insert(
+                name.to_string(),
+                Artifact { name: n, input_shapes: shapes, output_names: outs, exe },
+            );
+        }
+        Ok(&self.compiled[name])
+    }
+
+    /// Execute an artifact on `f64` tensors (converted to the artifact's
+    /// `f32` signature and back).
+    pub fn execute(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let art = self.artifact(name)?;
+        art.run(inputs)
+    }
+}
+
+impl Artifact {
+    /// Execute with shape checking.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.input_shapes.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.input_shapes.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (t, want) in inputs.iter().zip(&self.input_shapes) {
+            if t.shape() != &want[..] {
+                bail!("{}: input shape {:?}, expected {:?}", self.name, t.shape(), want);
+            }
+            let data: Vec<f32> = t.data().iter().map(|&v| v as f32).collect();
+            let lit = xla::Literal::vec1(&data);
+            let dims: Vec<i64> = want.iter().map(|&d| d as i64).collect();
+            let lit = lit.reshape(&dims).map_err(|e| anyhow!("reshape: {:?}", e))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {:?}", self.name, e))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {:?}", e))?;
+        // aot.py lowers with return_tuple=True — always a tuple
+        let parts = lit.to_tuple().map_err(|e| anyhow!("to_tuple: {:?}", e))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            let shape = p.shape().map_err(|e| anyhow!("shape: {:?}", e))?;
+            let dims: Vec<usize> = match &shape {
+                xla::Shape::Array(a) => a.dims().iter().map(|&d| d as usize).collect(),
+                _ => bail!("{}: non-array output", self.name),
+            };
+            let v: Vec<f32> = p.to_vec().map_err(|e| anyhow!("to_vec: {:?}", e))?;
+            out.push(Tensor::new(&dims, v.into_iter().map(|x| x as f64).collect()));
+        }
+        Ok(out)
+    }
+}
+
+/// Read a raw little-endian `f32` file (the check bundles written by
+/// aot.py) into an `f64` tensor of the given shape.
+pub fn read_f32_raw(path: impl AsRef<Path>, shape: &[usize]) -> Result<Tensor> {
+    let bytes = std::fs::read(path.as_ref())
+        .with_context(|| format!("reading {:?}", path.as_ref()))?;
+    let n: usize = shape.iter().product();
+    if bytes.len() != n * 4 {
+        bail!("{:?}: {} bytes, expected {}", path.as_ref(), bytes.len(), n * 4);
+    }
+    let data: Vec<f64> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f64)
+        .collect();
+    Ok(Tensor::new(shape, data))
+}
+
+/// Locate the artifacts directory for tests/benches: `$TENSORCALC_ARTIFACTS`
+/// or `<manifest dir>/artifacts`.
+pub fn artifacts_dir() -> Option<PathBuf> {
+    if let Ok(d) = std::env::var("TENSORCALC_ARTIFACTS") {
+        let d = PathBuf::from(d);
+        return d.join("manifest.txt").exists().then_some(d);
+    }
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    d.join("manifest.txt").exists().then_some(d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        };
+        let rt = Runtime::open(&dir).unwrap();
+        let names = rt.names();
+        assert!(names.contains(&"logreg_val_grad".to_string()), "{:?}", names);
+        assert!(names.contains(&"matfac_hess_core".to_string()));
+    }
+
+    #[test]
+    fn logreg_artifact_matches_check_bundle() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let mut rt = Runtime::open(&dir).unwrap();
+        let (m, n) = (256, 128);
+        let x = read_f32_raw(dir.join("check/logreg_X.f32"), &[m, n]).unwrap();
+        let y = read_f32_raw(dir.join("check/logreg_y.f32"), &[m]).unwrap();
+        let w = read_f32_raw(dir.join("check/logreg_w.f32"), &[n]).unwrap();
+        let loss = read_f32_raw(dir.join("check/logreg_loss.f32"), &[]).unwrap();
+        let grad = read_f32_raw(dir.join("check/logreg_grad.f32"), &[n]).unwrap();
+        let hess = read_f32_raw(dir.join("check/logreg_hess.f32"), &[n, n]).unwrap();
+
+        let out = rt.execute("logreg_val_grad", &[w.clone(), x.clone(), y.clone()]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert!((out[0].item() - loss.item()).abs() < 1e-2 * loss.item().abs());
+        assert!(out[1].allclose(&grad, 1e-4, 1e-4), "grad diff {}", out[1].max_abs_diff(&grad));
+
+        let h = rt.execute("logreg_hess", &[w, x, y]).unwrap();
+        assert!(h[0].allclose(&hess, 1e-4, 1e-4), "hess diff {}", h[0].max_abs_diff(&hess));
+    }
+
+    #[test]
+    fn engine_matches_pjrt_artifact() {
+        // the cross-layer test: Rust symbolic engine vs the JAX-lowered
+        // artifact on identical data
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        use crate::eval::{eval, Env};
+        use crate::ir::{Elem, Graph};
+        let mut rt = Runtime::open(&dir).unwrap();
+        let (m, n) = (256usize, 128usize);
+        let x = read_f32_raw(dir.join("check/logreg_X.f32"), &[m, n]).unwrap();
+        let y = read_f32_raw(dir.join("check/logreg_y.f32"), &[m]).unwrap();
+        let w = read_f32_raw(dir.join("check/logreg_w.f32"), &[n]).unwrap();
+
+        // engine-side logistic loss gradient
+        let mut g = Graph::new();
+        let xv = g.var("X", &[m, n]);
+        let yv = g.var("y", &[m]);
+        let wv = g.var("w", &[n]);
+        let xw = g.matvec(xv, wv);
+        let yxw = g.hadamard(yv, xw);
+        let t = g.neg(yxw);
+        let e = g.elem(Elem::Exp, t);
+        let one = g.constant(1.0, &[m]);
+        let s = g.add(e, one);
+        let l = g.elem(Elem::Log, s);
+        let loss = g.sum_all(l);
+        let grad = crate::autodiff::reverse::reverse_gradient(&mut g, loss, wv);
+        let grad = crate::simplify::simplify_one(&mut g, grad);
+        let mut env = Env::new();
+        env.insert("X", x.clone());
+        env.insert("y", y.clone());
+        env.insert("w", w.clone());
+        let engine_grad = eval(&g, grad, &env);
+
+        let out = rt.execute("logreg_val_grad", &[w, x, y]).unwrap();
+        assert!(
+            engine_grad.allclose(&out[1], 1e-3, 1e-3),
+            "engine vs PJRT grad diff {}",
+            engine_grad.max_abs_diff(&out[1])
+        );
+    }
+
+    #[test]
+    fn read_f32_raw_rejects_bad_size() {
+        let tmp = std::env::temp_dir().join("tc_raw_test.f32");
+        std::fs::write(&tmp, [0u8; 8]).unwrap();
+        assert!(read_f32_raw(&tmp, &[3]).is_err());
+        assert!(read_f32_raw(&tmp, &[2]).is_ok());
+    }
+}

@@ -1,0 +1,264 @@
+//! Algebraic simplification of expression DAGs.
+//!
+//! The paper (§4): *"our implementation performs some expression
+//! simplification like constant folding and removal of zero and identity
+//! tensors."* These rewrites are what turn the raw Theorem-8 pullback
+//! chains into the familiar compact derivative expressions — in
+//! particular the **delta-contraction rule** `Σ_u A[…u…]·δ[u,v] = A[…v…]`
+//! that eliminates the unit-tensor seeds, and its failure case (a delta
+//! whose indices all reach the output) is exactly what the compression
+//! scheme of §3.3 exploits.
+
+mod rules;
+
+use crate::ir::{Graph, NodeId, Op};
+use rules::Simplifier;
+use std::collections::HashMap;
+
+/// Simplify the sub-DAGs rooted at `roots`; returns the new roots.
+/// Runs rewrite passes to a fixpoint (bounded).
+pub fn simplify(g: &mut Graph, roots: &[NodeId]) -> Vec<NodeId> {
+    let mut current = roots.to_vec();
+    for _ in 0..8 {
+        let mut s = Simplifier { g, memo: HashMap::new() };
+        let next: Vec<NodeId> = current.iter().map(|&r| s.simp(r)).collect();
+        if next == current {
+            return next;
+        }
+        current = next;
+    }
+    current
+}
+
+/// Simplify a single root.
+pub fn simplify_one(g: &mut Graph, root: NodeId) -> NodeId {
+    simplify(g, &[root])[0]
+}
+
+/// Count the nodes in the sub-DAG (a cheap complexity metric used by
+/// tests and by the benchmark reports).
+pub fn dag_size(g: &Graph, root: NodeId) -> usize {
+    g.topo(&[root]).len()
+}
+
+/// Estimated flop count of evaluating the sub-DAG once: for every Mul the
+/// size of its iteration space (product of all distinct label dims), for
+/// element-wise ops the element count. Used by the cross-country cost
+/// model report.
+pub fn flop_estimate(g: &Graph, root: NodeId) -> u128 {
+    let mut total: u128 = 0;
+    for id in g.topo(&[root]) {
+        total += match g.op(id) {
+            Op::Mul(a, b, spec) => {
+                let mut dims: Vec<(u32, usize)> = Vec::new();
+                for (&l, &d) in spec
+                    .s1
+                    .iter()
+                    .zip(g.shape(*a))
+                    .chain(spec.s2.iter().zip(g.shape(*b)))
+                {
+                    if !dims.iter().any(|(ll, _)| *ll == l) {
+                        dims.push((l, d));
+                    }
+                }
+                dims.iter().map(|(_, d)| *d as u128).product()
+            }
+            Op::Elem(..) | Op::GenUnary(..) | Op::Add(..) => {
+                g.shape(id).iter().map(|&d| d as u128).product()
+            }
+            _ => 0,
+        };
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::reverse::reverse_gradient;
+    use crate::einsum::EinSpec;
+    use crate::eval::{eval, Env};
+    use crate::ir::Elem;
+    use crate::tensor::Tensor;
+
+    fn eval_both(g: &mut Graph, root: NodeId, env: &Env) -> (Tensor, Tensor, NodeId) {
+        let before = eval(g, root, env);
+        let s = simplify_one(g, root);
+        let after = eval(g, s, env);
+        (before, after, s)
+    }
+
+    #[test]
+    fn add_zero_is_removed() {
+        let mut g = Graph::new();
+        let x = g.var("x", &[3]);
+        let z = g.constant(0.0, &[3]);
+        let y = g.add(x, z);
+        let s = simplify_one(&mut g, y);
+        assert_eq!(s, x);
+    }
+
+    #[test]
+    fn mul_by_zero_collapses() {
+        let mut g = Graph::new();
+        let x = g.var("x", &[3, 4]);
+        let z = g.constant(0.0, &[4]);
+        let y = g.mul(x, z, EinSpec::parse("ij,j->i"));
+        let s = simplify_one(&mut g, y);
+        assert!(g.is_const_value(s, 0.0));
+        assert_eq!(g.shape(s), &[3]);
+    }
+
+    #[test]
+    fn identity_permute_is_removed() {
+        let mut g = Graph::new();
+        let x = g.var("x", &[3, 4]);
+        let one = g.scalar(1.0);
+        let y = g.mul(x, one, EinSpec::parse("ij,->ij"));
+        let s = simplify_one(&mut g, y);
+        assert_eq!(s, x);
+    }
+
+    #[test]
+    fn double_transpose_cancels() {
+        let mut g = Graph::new();
+        let x = g.var("x", &[3, 4]);
+        let t1 = g.transpose(x, &[1, 0]);
+        let t2 = g.transpose(t1, &[1, 0]);
+        let s = simplify_one(&mut g, t2);
+        assert_eq!(s, x);
+    }
+
+    #[test]
+    fn constants_fold_through_mul() {
+        let mut g = Graph::new();
+        let a = g.constant(2.0, &[3]);
+        let b = g.constant(5.0, &[3]);
+        // Σ_i a[i]·b[i] = 3·10 = 30
+        let y = g.mul(a, b, EinSpec::parse("i,i->"));
+        let s = simplify_one(&mut g, y);
+        assert_eq!(g.const_value(s), Some(30.0));
+    }
+
+    #[test]
+    fn constants_fold_through_elem_and_add() {
+        let mut g = Graph::new();
+        let a = g.constant(0.0, &[2]);
+        let e = g.elem(Elem::Exp, a); // exp(0) = 1
+        let b = g.constant(2.0, &[2]);
+        let y = g.add(e, b);
+        let s = simplify_one(&mut g, y);
+        assert_eq!(g.const_value(s), Some(3.0));
+    }
+
+    #[test]
+    fn delta_contraction_renames() {
+        // Σ_j A[i,j] δ[j,k] = A[i,k]
+        let mut g = Graph::new();
+        let a = g.var("A", &[3, 4]);
+        let d = g.delta(&[4]);
+        let y = g.mul(a, d, EinSpec::parse("ij,jk->ik"));
+        let s = simplify_one(&mut g, y);
+        assert_eq!(s, a, "δ contraction should eliminate the Mul:\n{}", g.program(&[s]));
+    }
+
+    #[test]
+    fn delta_contraction_with_permuted_output() {
+        // Σ_j A[i,j] δ[j,k] -> output ki: must become a transpose of A
+        let mut g = Graph::new();
+        let a = g.var("A", &[3, 4]);
+        let d = g.delta(&[4]);
+        let y = g.mul(a, d, EinSpec::parse("ij,jk->ki"));
+        let mut env = Env::new();
+        env.insert("A", Tensor::randn(&[3, 4], 1));
+        let (before, after, s) = eval_both(&mut g, y, &env);
+        assert!(before.allclose(&after, 1e-12, 1e-12));
+        // no delta node should survive
+        assert!(
+            !g.topo(&[s]).iter().any(|&n| matches!(g.op(n), Op::Delta { .. })),
+            "{}",
+            g.program(&[s])
+        );
+    }
+
+    #[test]
+    fn delta_trace_becomes_constant_dimension() {
+        // Σ_{u,v} δ[u,v] δ[u,v] = n  (both labels summed)
+        let mut g = Graph::new();
+        let d = g.delta(&[5]);
+        let y = g.mul(d, d, EinSpec::parse("uv,uv->"));
+        let s = simplify_one(&mut g, y);
+        assert_eq!(g.const_value(s), Some(5.0), "{}", g.program(&[s]));
+    }
+
+    #[test]
+    fn order4_delta_contracts_pairwise() {
+        // Σ_{k,l} A[k,l] δ[k,l,m,n] = A[m,n]
+        let mut g = Graph::new();
+        let a = g.var("A", &[3, 4]);
+        let d = g.delta(&[3, 4]);
+        let y = g.mul(a, d, EinSpec::parse("kl,klmn->mn"));
+        let s = simplify_one(&mut g, y);
+        assert_eq!(s, a, "{}", g.program(&[s]));
+    }
+
+    #[test]
+    fn gradient_of_xtax_simplifies_to_small_dag() {
+        // the raw reverse-mode gradient carries δ seeds; after
+        // simplification no delta may remain and the result must agree
+        let mut g = Graph::new();
+        let a = g.var("A", &[4, 4]);
+        let x = g.var("x", &[4]);
+        let ax = g.matvec(a, x);
+        let f = g.dot(x, ax);
+        let grad = reverse_gradient(&mut g, f, x);
+        let mut env = Env::new();
+        env.insert("A", Tensor::randn(&[4, 4], 1));
+        env.insert("x", Tensor::randn(&[4], 2));
+        let (before, after, s) = eval_both(&mut g, grad, &env);
+        assert!(before.allclose(&after, 1e-10, 1e-12));
+        assert!(
+            !g.topo(&[s]).iter().any(|&n| matches!(g.op(n), Op::Delta { .. })),
+            "gradient should be delta-free:\n{}",
+            g.program(&[s])
+        );
+        assert!(dag_size(&g, s) <= 10, "DAG too big:\n{}", g.program(&[s]));
+    }
+
+    #[test]
+    fn simplify_preserves_semantics_randomized() {
+        // random-ish DAG: f = Σ relu(Aᵀ(exp(Ax) ⊙ x + x))
+        let mut g = Graph::new();
+        let a = g.var("A", &[4, 4]);
+        let x = g.var("x", &[4]);
+        let ax = g.matvec(a, x);
+        let e = g.elem(Elem::Exp, ax);
+        let h = g.hadamard(e, x);
+        let hx = g.add(h, x);
+        let at = g.tmatvec(a, hx);
+        let r = g.elem(Elem::Relu, at);
+        let f = g.sum_all(r);
+        let grad = reverse_gradient(&mut g, f, x);
+        let mut env = Env::new();
+        env.insert("A", Tensor::randn(&[4, 4], 3));
+        env.insert("x", Tensor::randn(&[4], 4));
+        let (before, after, _) = eval_both(&mut g, grad, &env);
+        assert!(
+            before.allclose(&after, 1e-9, 1e-11),
+            "diff {}",
+            before.max_abs_diff(&after)
+        );
+    }
+
+    #[test]
+    fn flop_estimate_monotone_under_simplify() {
+        let mut g = Graph::new();
+        let a = g.var("A", &[8, 8]);
+        let d = g.delta(&[8]);
+        let y = g.mul(a, d, EinSpec::parse("ij,jk->ik"));
+        let before = flop_estimate(&g, y);
+        let s = simplify_one(&mut g, y);
+        let after = flop_estimate(&g, s);
+        assert!(after <= before);
+    }
+}

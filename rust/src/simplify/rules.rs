@@ -1,0 +1,301 @@
+//! The rewrite rules, applied through "smart constructors" while the DAG
+//! is rebuilt bottom-up.
+
+use crate::einsum::{EinSpec, Label};
+use crate::ir::{Elem, Graph, NodeId, Op};
+use std::collections::HashMap;
+
+pub(crate) struct Simplifier<'g> {
+    pub g: &'g mut Graph,
+    pub memo: HashMap<NodeId, NodeId>,
+}
+
+impl<'g> Simplifier<'g> {
+    pub fn simp(&mut self, id: NodeId) -> NodeId {
+        if let Some(&m) = self.memo.get(&id) {
+            return m;
+        }
+        let res = match self.g.op(id).clone() {
+            Op::Var(_) | Op::Const(_) | Op::Delta { .. } => id,
+            Op::Add(a, b) => {
+                let a = self.simp(a);
+                let b = self.simp(b);
+                self.make_add(a, b)
+            }
+            Op::Mul(a, b, spec) => {
+                let a = self.simp(a);
+                let b = self.simp(b);
+                self.make_mul(a, b, spec)
+            }
+            Op::Elem(f, a) => {
+                let a = self.simp(a);
+                self.make_elem(f, a)
+            }
+            Op::GenUnary(f, a) => {
+                let a = self.simp(a);
+                self.g.gen_unary(f, a)
+            }
+        };
+        self.memo.insert(id, res);
+        res
+    }
+
+    fn make_add(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        // 0 + x = x
+        if self.g.is_const_value(a, 0.0) {
+            return b;
+        }
+        if self.g.is_const_value(b, 0.0) {
+            return a;
+        }
+        // constant folding
+        if let (Some(va), Some(vb)) = (self.g.const_value(a), self.g.const_value(b)) {
+            let shape = self.g.shape(a).to_vec();
+            return self.g.constant(va + vb, &shape);
+        }
+        // x + x = 2x
+        if a == b {
+            let l: Vec<Label> = (0..self.g.order(a) as Label).collect();
+            let two = self.g.scalar(2.0);
+            return self.make_mul(a, two, EinSpec::new(l.clone(), vec![], l));
+        }
+        self.g.add(a, b)
+    }
+
+    fn make_elem(&mut self, f: Elem, a: NodeId) -> NodeId {
+        if let Some(v) = self.g.const_value(a) {
+            let shape = self.g.shape(a).to_vec();
+            return self.g.constant(f.apply(v), &shape);
+        }
+        // involution cancellation: −(−x), 1/(1/x)
+        if let Op::Elem(inner, x) = self.g.op(a) {
+            if (f == Elem::Neg && *inner == Elem::Neg)
+                || (f == Elem::Recip && *inner == Elem::Recip)
+            {
+                return *x;
+            }
+        }
+        self.g.elem(f, a)
+    }
+
+    pub(crate) fn make_mul(&mut self, a: NodeId, b: NodeId, spec: EinSpec) -> NodeId {
+        let dim_of = |g: &Graph, l: Label| -> usize {
+            spec.s1
+                .iter()
+                .position(|&x| x == l)
+                .map(|p| g.shape(a)[p])
+                .or_else(|| spec.s2.iter().position(|&x| x == l).map(|p| g.shape(b)[p]))
+                .unwrap()
+        };
+
+        // zero annihilates
+        if self.g.is_const_value(a, 0.0) || self.g.is_const_value(b, 0.0) {
+            let shape = spec.output_shape(self.g.shape(a), self.g.shape(b)).unwrap();
+            return self.g.constant(0.0, &shape);
+        }
+        // both constant → fold, including the implicit summation factor
+        if let (Some(va), Some(vb)) = (self.g.const_value(a), self.g.const_value(b)) {
+            let factor: f64 = spec
+                .summed_labels()
+                .iter()
+                .map(|&l| dim_of(self.g, l) as f64)
+                .product();
+            let shape = spec.output_shape(self.g.shape(a), self.g.shape(b)).unwrap();
+            return self.g.constant(va * vb * factor, &shape);
+        }
+        // normalize: delta on the right; otherwise constants on the right
+        let a_delta = matches!(self.g.op(a), Op::Delta { .. });
+        let b_delta = matches!(self.g.op(b), Op::Delta { .. });
+        if a_delta && !b_delta {
+            return self.make_mul(b, a, spec.swapped());
+        }
+        if !a_delta && !b_delta && self.g.const_value(a).is_some() && self.g.const_value(b).is_none()
+        {
+            return self.make_mul(b, a, spec.swapped());
+        }
+
+        // constant operand: fold its axes away when possible
+        if let Some(c) = self.g.const_value(b) {
+            if !spec.s2.is_empty() {
+                // every s2 label must be provided by A or be summed away
+                let ok = spec
+                    .s2
+                    .iter()
+                    .all(|l| spec.s1.contains(l) || !spec.s3.contains(l));
+                if ok {
+                    // private summed s2 labels contribute a dimension factor
+                    let mut seen: Vec<Label> = Vec::new();
+                    let mut factor = 1.0;
+                    for &l in &spec.s2 {
+                        if !spec.s1.contains(&l) && !spec.s3.contains(&l) && !seen.contains(&l)
+                        {
+                            factor *= dim_of(self.g, l) as f64;
+                            seen.push(l);
+                        }
+                    }
+                    let k = self.g.scalar(c * factor);
+                    return self.make_mul(
+                        a,
+                        k,
+                        EinSpec::new(spec.s1.clone(), vec![], spec.s3.clone()),
+                    );
+                }
+            } else {
+                // scalar constant
+                if c == 1.0 && spec.s3 == spec.s1 {
+                    return a; // identity
+                }
+                // pure permute of a Mul: push the permutation into the
+                // inner product's output labels
+                if c == 1.0
+                    && spec.is_sum_free()
+                    && spec.s3.len() == spec.s1.len()
+                {
+                    if let Op::Mul(p, q, inner) = self.g.op(a).clone() {
+                        // outer s1 position i ↔ inner output axis i
+                        let new_s3: Vec<Label> = spec
+                            .s3
+                            .iter()
+                            .map(|l| {
+                                let pos = spec.s1.iter().position(|x| x == l).unwrap();
+                                inner.s3[pos]
+                            })
+                            .collect();
+                        return self.make_mul(
+                            p,
+                            q,
+                            EinSpec::new(inner.s1.clone(), inner.s2.clone(), new_s3),
+                        );
+                    }
+                }
+                // compose nested scalar-const muls (scales, permutes and
+                // reductions): (x *_(sa1,∅,sa3) c1) *_(sb1,∅,sb3) c2
+                //            =  x *_(sa1,∅,compose) (c1·c2)
+                if let Op::Mul(x, k1, inner) = self.g.op(a).clone() {
+                    if let Some(c1) = self.g.const_value(k1) {
+                        let distinct = spec
+                            .s1
+                            .iter()
+                            .enumerate()
+                            .all(|(i, l)| !spec.s1[i + 1..].contains(l));
+                        if inner.s2.is_empty() && distinct {
+                            // outer sb1 position i corresponds to inner
+                            // output axis i; translate sb3 through it
+                            let composed_s3: Vec<Label> = spec
+                                .s3
+                                .iter()
+                                .map(|l| {
+                                    let p =
+                                        spec.s1.iter().position(|x| x == l).unwrap();
+                                    inner.s3[p]
+                                })
+                                .collect();
+                            let k = self.g.scalar(c1 * c);
+                            return self.make_mul(
+                                x,
+                                k,
+                                EinSpec::new(inner.s1.clone(), vec![], composed_s3),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+
+        // delta elimination (the paper's unit-tensor removal)
+        if let Op::Delta { dims } = self.g.op(b).clone() {
+            if let Some(n) = self.delta_step(a, &dims, &spec) {
+                return n;
+            }
+        }
+
+        self.g.mul(a, b, spec)
+    }
+
+    /// One delta-elimination step on `A *_(s1,s2,s3) δ`. Returns the
+    /// rewritten node if any pair of the delta can be contracted.
+    ///
+    /// For a pair `(u, v)` of delta labels (`δ[… u …, … v …]`):
+    /// * `Σ_u A[… u …] δ[u,v] = A[… v …]` when `u` is summed, appears in
+    ///   `s1` and nowhere else — the index is *renamed* (and symmetrically
+    ///   for `v`),
+    /// * a pair whose two labels coincide is a constant-1 factor,
+    /// * a fully private summed pair contributes a factor `dim`.
+    ///
+    /// Pairs whose labels all reach the output are *not* eliminated —
+    /// those are exactly the compressible unit tensors of §3.3.
+    fn delta_step(&mut self, a: NodeId, dims: &[usize], spec: &EinSpec) -> Option<NodeId> {
+        let k = dims.len();
+        debug_assert_eq!(spec.s2.len(), 2 * k);
+        let occ_s1 = |l: Label| spec.s1.iter().filter(|&&x| x == l).count();
+        let occ_s2 = |l: Label| spec.s2.iter().filter(|&&x| x == l).count();
+        let in_s3 = |l: Label| spec.s3.contains(&l);
+
+        for m in 0..k {
+            let (u, v) = (spec.s2[m], spec.s2[m + k]);
+
+            // helper: rebuild with pair m removed and s1 relabeled
+            let rebuild = |s: &mut Simplifier,
+                           new_s1: Vec<Label>,
+                           factor: f64|
+             -> NodeId {
+                let mut new_dims = dims.to_vec();
+                new_dims.remove(m);
+                let mut new_s2: Vec<Label> = spec.s2.clone();
+                new_s2.remove(m + k); // remove back slot first (higher index)
+                new_s2.remove(m);
+                let new_b = if new_dims.is_empty() {
+                    s.g.scalar(1.0)
+                } else {
+                    s.g.delta(&new_dims)
+                };
+                let inner =
+                    s.make_mul(a, new_b, EinSpec::new(new_s1, new_s2, spec.s3.clone()));
+                if factor == 1.0 {
+                    inner
+                } else {
+                    let l: Vec<Label> = (0..s.g.order(inner) as Label).collect();
+                    let f = s.g.scalar(factor);
+                    s.make_mul(inner, f, EinSpec::new(l.clone(), vec![], l))
+                }
+            };
+
+            if u == v {
+                // δ[…u…, …u…] pair is identically 1; if u is otherwise
+                // unused and summed it contributes a factor dim(u)
+                let private =
+                    occ_s1(u) == 0 && occ_s2(u) == 2 && !in_s3(u);
+                let factor = if private { dims[m] as f64 } else { 1.0 };
+                return Some(rebuild(self, spec.s1.clone(), factor));
+            }
+            // Σ_u: contract into A, renaming u → v
+            if !in_s3(u) && occ_s2(u) == 1 && occ_s1(u) >= 1 {
+                let new_s1: Vec<Label> =
+                    spec.s1.iter().map(|&l| if l == u { v } else { l }).collect();
+                return Some(rebuild(self, new_s1, 1.0));
+            }
+            // Σ_v: contract into A, renaming v → u
+            if !in_s3(v) && occ_s2(v) == 1 && occ_s1(v) >= 1 {
+                let new_s1: Vec<Label> =
+                    spec.s1.iter().map(|&l| if l == v { u } else { l }).collect();
+                return Some(rebuild(self, new_s1, 1.0));
+            }
+            // fully private pair: Σ_{u,v} δ[u,v] = dim
+            if occ_s1(u) == 0
+                && occ_s1(v) == 0
+                && !in_s3(u)
+                && !in_s3(v)
+                && occ_s2(u) == 1
+                && occ_s2(v) == 1
+            {
+                return Some(rebuild(self, spec.s1.clone(), dims[m] as f64));
+            }
+            // one label summed & private, the other reaches the output
+            // from the delta itself: Σ_u δ[u,v] = 1 for each v — the pair
+            // collapses to a broadcast only if A can still provide v; it
+            // cannot, so this case must keep the delta. (compression
+            // handles it at the root.)
+        }
+        None
+    }
+}

@@ -1,0 +1,224 @@
+//! Dense linear-algebra substrate for the Newton examples: Cholesky and
+//! LU factorizations with solves. Needed to demonstrate the §3.3 claim
+//! that the compressed matrix-factorization Hessian turns an O((nk)³)
+//! Newton solve into an O(k³) one.
+
+use crate::tensor::Tensor;
+
+/// Cholesky factor `L` (lower-triangular, `A = L·Lᵀ`) of a symmetric
+/// positive-definite matrix. Returns `None` if a pivot is non-positive.
+pub fn cholesky(a: &Tensor) -> Option<Tensor> {
+    let n = a.shape()[0];
+    assert_eq!(a.shape(), &[n, n], "cholesky needs a square matrix");
+    let mut l = vec![0.0f64; n * n];
+    let ad = a.data();
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = ad[i * n + j];
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                l[i * n + i] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    Some(Tensor::new(&[n, n], l))
+}
+
+/// Solve `L·x = b` with `L` lower triangular.
+pub fn solve_lower(l: &Tensor, b: &[f64]) -> Vec<f64> {
+    let n = l.shape()[0];
+    let ld = l.data();
+    let mut x = b.to_vec();
+    for i in 0..n {
+        let mut s = x[i];
+        for k in 0..i {
+            s -= ld[i * n + k] * x[k];
+        }
+        x[i] = s / ld[i * n + i];
+    }
+    x
+}
+
+/// Solve `Lᵀ·x = b` with `L` lower triangular.
+pub fn solve_lower_t(l: &Tensor, b: &[f64]) -> Vec<f64> {
+    let n = l.shape()[0];
+    let ld = l.data();
+    let mut x = b.to_vec();
+    for i in (0..n).rev() {
+        let mut s = x[i];
+        for k in (i + 1)..n {
+            s -= ld[k * n + i] * x[k];
+        }
+        x[i] = s / ld[i * n + i];
+    }
+    x
+}
+
+/// Solve the SPD system `A·x = b` via Cholesky.
+pub fn solve_spd(a: &Tensor, b: &Tensor) -> Option<Tensor> {
+    let l = cholesky(a)?;
+    let y = solve_lower(&l, b.data());
+    let x = solve_lower_t(&l, &y);
+    Some(Tensor::new(b.shape(), x))
+}
+
+/// LU decomposition with partial pivoting: returns `(lu, perm)` where the
+/// combined factors are stored in `lu` and `perm` is the row permutation.
+pub fn lu_decompose(a: &Tensor) -> Option<(Tensor, Vec<usize>)> {
+    let n = a.shape()[0];
+    assert_eq!(a.shape(), &[n, n]);
+    let mut lu = a.data().to_vec();
+    let mut perm: Vec<usize> = (0..n).collect();
+    for col in 0..n {
+        // pivot
+        let (mut piv, mut pmax) = (col, lu[col * n + col].abs());
+        for r in (col + 1)..n {
+            let v = lu[r * n + col].abs();
+            if v > pmax {
+                piv = r;
+                pmax = v;
+            }
+        }
+        if pmax < 1e-300 {
+            return None; // singular
+        }
+        if piv != col {
+            for c in 0..n {
+                lu.swap(col * n + c, piv * n + c);
+            }
+            perm.swap(col, piv);
+        }
+        let d = lu[col * n + col];
+        for r in (col + 1)..n {
+            let f = lu[r * n + col] / d;
+            lu[r * n + col] = f;
+            for c in (col + 1)..n {
+                lu[r * n + c] -= f * lu[col * n + c];
+            }
+        }
+    }
+    Some((Tensor::new(&[n, n], lu), perm))
+}
+
+/// Solve `A·x = b` from a precomputed LU decomposition.
+pub fn lu_solve(lu: &Tensor, perm: &[usize], b: &[f64]) -> Vec<f64> {
+    let n = lu.shape()[0];
+    let d = lu.data();
+    // apply permutation
+    let mut x: Vec<f64> = perm.iter().map(|&p| b[p]).collect();
+    // forward (unit lower)
+    for i in 0..n {
+        for k in 0..i {
+            x[i] -= d[i * n + k] * x[k];
+        }
+    }
+    // back (upper)
+    for i in (0..n).rev() {
+        for k in (i + 1)..n {
+            x[i] -= d[i * n + k] * x[k];
+        }
+        x[i] /= d[i * n + i];
+    }
+    x
+}
+
+/// Solve the general square system `A·x = b`.
+pub fn solve(a: &Tensor, b: &Tensor) -> Option<Tensor> {
+    let (lu, perm) = lu_decompose(a)?;
+    Some(Tensor::new(b.shape(), lu_solve(&lu, &perm, b.data())))
+}
+
+/// Matrix inverse via LU.
+pub fn inverse(a: &Tensor) -> Option<Tensor> {
+    let n = a.shape()[0];
+    let (lu, perm) = lu_decompose(a)?;
+    let mut inv = vec![0.0; n * n];
+    let mut e = vec![0.0; n];
+    for j in 0..n {
+        e[j] = 1.0;
+        let col = lu_solve(&lu, &perm, &e);
+        for i in 0..n {
+            inv[i * n + j] = col[i];
+        }
+        e[j] = 0.0;
+    }
+    Some(Tensor::new(&[n, n], inv))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::einsum::{einsum, EinSpec};
+
+    fn spd(n: usize, seed: u64) -> Tensor {
+        // AᵀA + n·I is SPD
+        let a = Tensor::randn(&[n, n], seed);
+        let mut m = einsum(&EinSpec::parse("ki,kj->ij"), &a, &a);
+        for i in 0..n {
+            m.data_mut()[i * n + i] += n as f64;
+        }
+        m
+    }
+
+    #[test]
+    fn cholesky_roundtrip() {
+        let a = spd(8, 1);
+        let l = cholesky(&a).unwrap();
+        let llt = einsum(&EinSpec::parse("ik,jk->ij"), &l, &l);
+        assert!(llt.allclose(&a, 1e-9, 1e-9), "diff {}", llt.max_abs_diff(&a));
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Tensor::new(&[2, 2], vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, −1
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn solve_spd_residual_small() {
+        let a = spd(10, 2);
+        let b = Tensor::randn(&[10], 3);
+        let x = solve_spd(&a, &b).unwrap();
+        let ax = einsum(&EinSpec::parse("ij,j->i"), &a, &x);
+        assert!(ax.allclose(&b, 1e-8, 1e-8), "residual {}", ax.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn lu_solve_general_matrix() {
+        let a = Tensor::randn(&[12, 12], 4);
+        let b = Tensor::randn(&[12], 5);
+        let x = solve(&a, &b).unwrap();
+        let ax = einsum(&EinSpec::parse("ij,j->i"), &a, &x);
+        assert!(ax.allclose(&b, 1e-8, 1e-8));
+    }
+
+    #[test]
+    fn lu_needs_pivoting() {
+        // zero on the diagonal forces a row swap
+        let a = Tensor::new(&[2, 2], vec![0.0, 1.0, 1.0, 0.0]);
+        let b = Tensor::new(&[2], vec![3.0, 7.0]);
+        let x = solve(&a, &b).unwrap();
+        assert!(x.allclose(&Tensor::new(&[2], vec![7.0, 3.0]), 1e-12, 1e-12));
+    }
+
+    #[test]
+    fn singular_matrix_detected() {
+        let a = Tensor::new(&[2, 2], vec![1.0, 2.0, 2.0, 4.0]);
+        assert!(solve(&a, &Tensor::new(&[2], vec![1.0, 1.0])).is_none());
+    }
+
+    #[test]
+    fn inverse_times_matrix_is_identity() {
+        let a = Tensor::randn(&[6, 6], 6);
+        let inv = inverse(&a).unwrap();
+        let prod = einsum(&EinSpec::parse("ij,jk->ik"), &a, &inv);
+        assert!(prod.allclose(&Tensor::eye(6), 1e-8, 1e-8));
+    }
+}

@@ -1,0 +1,326 @@
+//! Dense row-major tensors over `f64`.
+//!
+//! This is the storage substrate of the evaluation engine — the role NumPy
+//! plays in the paper's experiments. Tensors are immutable-ish contiguous
+//! buffers with shape metadata; all contraction logic lives in
+//! [`crate::einsum`].
+
+mod ops;
+
+use std::fmt;
+
+/// A dense, row-major (C-order), contiguous tensor of `f64` values.
+///
+/// An order-0 tensor (shape `[]`) is a scalar with one element.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f64>,
+}
+
+impl Tensor {
+    /// Build a tensor from a flat row-major buffer. Panics if the buffer
+    /// length does not match the shape product.
+    pub fn new(shape: &[usize], data: Vec<f64>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(
+            n,
+            data.len(),
+            "shape {:?} wants {} elements, got {}",
+            shape,
+            n,
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// A scalar (order-0) tensor.
+    pub fn scalar(v: f64) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    /// Constant-filled tensor.
+    pub fn fill(shape: &[usize], v: f64) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    /// All zeros.
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self::fill(shape, 0.0)
+    }
+
+    /// All ones.
+    pub fn ones(shape: &[usize]) -> Self {
+        Self::fill(shape, 1.0)
+    }
+
+    /// The `n × n` identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut t = Self::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    /// The order-`2k` unit (delta) tensor with index structure
+    /// `[d_0..d_{k-1}, d_0..d_{k-1}]`: entry 1 iff the m-th front index
+    /// equals the m-th back index for all m. This is the tensor `𝕀` the
+    /// paper's compression scheme eliminates.
+    pub fn delta(dims: &[usize]) -> Self {
+        let mut shape = dims.to_vec();
+        shape.extend_from_slice(dims);
+        let mut t = Self::zeros(&shape);
+        let block: usize = dims.iter().product();
+        // flat index of (i, i) = i * block + i
+        for i in 0..block {
+            t.data[i * block + i] = 1.0;
+        }
+        t
+    }
+
+    /// Deterministic pseudo-random standard-normal tensor (xorshift +
+    /// Box–Muller); seeded so tests and benches are reproducible without
+    /// an external RNG dependency.
+    pub fn randn(shape: &[usize], seed: u64) -> Self {
+        let n: usize = shape.iter().product();
+        let mut rng = XorShift::new(seed);
+        let mut data = Vec::with_capacity(n);
+        while data.len() < n {
+            let (a, b) = rng.normal_pair();
+            data.push(a);
+            if data.len() < n {
+                data.push(b);
+            }
+        }
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// Uniform in `[lo, hi)`.
+    pub fn rand_uniform(shape: &[usize], seed: u64, lo: f64, hi: f64) -> Self {
+        let n: usize = shape.iter().product();
+        let mut rng = XorShift::new(seed);
+        let data = (0..n).map(|_| lo + (hi - lo) * rng.next_f64()).collect();
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Tensor order (number of axes).
+    pub fn order(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Row-major strides of this tensor's shape.
+    pub fn strides(&self) -> Vec<usize> {
+        row_major_strides(&self.shape)
+    }
+
+    /// Value of a scalar tensor. Panics if more than one element.
+    pub fn item(&self) -> f64 {
+        assert_eq!(self.data.len(), 1, "item() on tensor of shape {:?}", self.shape);
+        self.data[0]
+    }
+
+    /// Element access by multi-index.
+    pub fn at(&self, idx: &[usize]) -> f64 {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut flat = 0;
+        for (i, (&ix, &d)) in idx.iter().zip(&self.shape).enumerate() {
+            debug_assert!(ix < d, "index {} out of bounds at axis {} (dim {})", ix, i, d);
+            flat = flat * d + ix;
+        }
+        self.data[flat]
+    }
+
+    /// Reinterpret with a new shape of the same element count.
+    pub fn reshape(&self, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, self.data.len(), "reshape {:?} -> {:?}", self.shape, shape);
+        Tensor { shape: shape.to_vec(), data: self.data.clone() }
+    }
+
+    /// Frobenius / Euclidean norm (`‖A‖ = sqrt(Σ A[s]²)`, Definition 4).
+    pub fn norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Largest absolute element-wise difference to `other`.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape, "shape mismatch in max_abs_diff");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// True if all elements match `other` within `atol + rtol·|other|`.
+    pub fn allclose(&self, other: &Tensor, rtol: f64, atol: f64) -> bool {
+        self.shape == other.shape
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.data.len() <= 16 {
+            write!(f, " {:?}", self.data)
+        } else {
+            write!(f, " [{:.4}, {:.4}, …, {:.4}]", self.data[0], self.data[1], self.data[self.data.len() - 1])
+        }
+    }
+}
+
+/// Row-major strides for a shape.
+pub fn row_major_strides(shape: &[usize]) -> Vec<usize> {
+    let mut strides = vec![0usize; shape.len()];
+    let mut acc = 1usize;
+    for i in (0..shape.len()).rev() {
+        strides[i] = acc;
+        acc *= shape[i];
+    }
+    strides
+}
+
+/// Minimal xorshift64* PRNG — keeps the crate dependency-free for
+/// reproducible test/bench data.
+pub struct XorShift {
+    state: u64,
+}
+
+impl XorShift {
+    pub fn new(seed: u64) -> Self {
+        XorShift { state: seed.wrapping_mul(0x9E3779B97F4A7C15).max(1) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[0, 1)`.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Two independent standard normals (Box–Muller).
+    pub fn normal_pair(&mut self) -> (f64, f64) {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let th = 2.0 * std::f64::consts::PI * u2;
+        (r * th.cos(), r * th.sin())
+    }
+
+    /// Uniform integer in `[0, n)`.
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = Tensor::scalar(3.5);
+        assert_eq!(t.shape(), &[] as &[usize]);
+        assert_eq!(t.item(), 3.5);
+        assert_eq!(t.order(), 0);
+    }
+
+    #[test]
+    fn fill_and_at() {
+        let t = Tensor::new(&[2, 3], vec![0., 1., 2., 3., 4., 5.]);
+        assert_eq!(t.at(&[0, 2]), 2.0);
+        assert_eq!(t.at(&[1, 0]), 3.0);
+        assert_eq!(t.strides(), vec![3, 1]);
+    }
+
+    #[test]
+    fn eye_is_delta_of_one_dim() {
+        assert_eq!(Tensor::eye(4), Tensor::delta(&[4]));
+    }
+
+    #[test]
+    fn delta_order4() {
+        // δ[i,j,k,l] = [i==k][j==l]
+        let d = Tensor::delta(&[2, 3]);
+        assert_eq!(d.shape(), &[2, 3, 2, 3]);
+        for i in 0..2 {
+            for j in 0..3 {
+                for k in 0..2 {
+                    for l in 0..3 {
+                        let want = if i == k && j == l { 1.0 } else { 0.0 };
+                        assert_eq!(d.at(&[i, j, k, l]), want);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn randn_reproducible_and_normalish() {
+        let a = Tensor::randn(&[1000], 7);
+        let b = Tensor::randn(&[1000], 7);
+        assert_eq!(a, b);
+        let mean = a.data().iter().sum::<f64>() / 1000.0;
+        let var = a.data().iter().map(|v| (v - mean).powi(2)).sum::<f64>() / 1000.0;
+        assert!(mean.abs() < 0.15, "mean {}", mean);
+        assert!((var - 1.0).abs() < 0.3, "var {}", var);
+    }
+
+    #[test]
+    fn norm_matches_frobenius() {
+        let t = Tensor::new(&[2, 2], vec![3., 4., 0., 0.]);
+        assert!((t.norm() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = Tensor::new(&[2], vec![1.0, 2.0]);
+        let b = Tensor::new(&[2], vec![1.0 + 1e-9, 2.0 - 1e-9]);
+        assert!(a.allclose(&b, 1e-6, 1e-8));
+        let c = Tensor::new(&[2], vec![1.1, 2.0]);
+        assert!(!a.allclose(&c, 1e-6, 1e-8));
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::new(&[2, 2], vec![1.0]);
+    }
+}

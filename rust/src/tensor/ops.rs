@@ -1,0 +1,151 @@
+//! Element-wise tensor operations and permutations.
+
+use super::{row_major_strides, Tensor};
+
+impl Tensor {
+    /// Element-wise binary map. Shapes must match exactly.
+    pub fn zip_map(&self, other: &Tensor, f: impl Fn(f64, f64) -> f64) -> Tensor {
+        assert_eq!(self.shape(), other.shape(), "zip_map shape mismatch");
+        let data = self
+            .data()
+            .iter()
+            .zip(other.data())
+            .map(|(&a, &b)| f(a, b))
+            .collect();
+        Tensor::new(self.shape(), data)
+    }
+
+    /// Element-wise unary map.
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> Tensor {
+        Tensor::new(self.shape(), self.data().iter().map(|&a| f(a)).collect())
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        self.zip_map(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        self.zip_map(other, |a, b| a - b)
+    }
+
+    pub fn mul_elem(&self, other: &Tensor) -> Tensor {
+        self.zip_map(other, |a, b| a * b)
+    }
+
+    pub fn scale(&self, c: f64) -> Tensor {
+        self.map(|a| a * c)
+    }
+
+    /// In-place `self += other`. Shapes must match.
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape(), other.shape(), "add_assign shape mismatch");
+        for (a, b) in self.data_mut().iter_mut().zip(other.data()) {
+            *a += b;
+        }
+    }
+
+    /// Axis permutation (generalized transpose). `perm[k]` gives the input
+    /// axis that becomes output axis `k`.
+    pub fn permute(&self, perm: &[usize]) -> Tensor {
+        assert_eq!(perm.len(), self.order(), "permute rank mismatch");
+        let in_shape = self.shape();
+        let in_strides = row_major_strides(in_shape);
+        let out_shape: Vec<usize> = perm.iter().map(|&p| in_shape[p]).collect();
+        // stride (in the input buffer) per output axis
+        let strides: Vec<usize> = perm.iter().map(|&p| in_strides[p]).collect();
+        let n: usize = out_shape.iter().product();
+        let mut out = vec![0.0; n];
+        let rank = out_shape.len();
+        if rank == 0 {
+            return Tensor::scalar(self.item());
+        }
+        // odometer over the output shape
+        let mut idx = vec![0usize; rank];
+        let mut src = 0usize;
+        for slot in out.iter_mut() {
+            *slot = self.data()[src];
+            // increment
+            for ax in (0..rank).rev() {
+                idx[ax] += 1;
+                src += strides[ax];
+                if idx[ax] < out_shape[ax] {
+                    break;
+                }
+                src -= strides[ax] * out_shape[ax];
+                idx[ax] = 0;
+            }
+        }
+        Tensor::new(&out_shape, out)
+    }
+
+    /// Matrix transpose (order-2 only).
+    pub fn t(&self) -> Tensor {
+        assert_eq!(self.order(), 2, "t() on non-matrix");
+        self.permute(&[1, 0])
+    }
+
+    /// Sum of all elements.
+    pub fn sum_all(&self) -> f64 {
+        self.data().iter().sum()
+    }
+
+    /// Dot product of two equally-shaped tensors viewed as flat vectors.
+    pub fn flat_dot(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.len(), other.len());
+        self.data().iter().zip(other.data()).map(|(a, b)| a * b).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn permute_matrix_transpose() {
+        let a = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let t = a.t();
+        assert_eq!(t.shape(), &[3, 2]);
+        assert_eq!(t.data(), &[1., 4., 2., 5., 3., 6.]);
+        // double transpose is identity
+        assert_eq!(t.t(), a);
+    }
+
+    #[test]
+    fn permute_order3() {
+        let a = Tensor::randn(&[2, 3, 4], 3);
+        let p = a.permute(&[2, 0, 1]);
+        assert_eq!(p.shape(), &[4, 2, 3]);
+        for i in 0..2 {
+            for j in 0..3 {
+                for k in 0..4 {
+                    assert_eq!(p.at(&[k, i, j]), a.at(&[i, j, k]));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn permute_identity() {
+        let a = Tensor::randn(&[3, 5], 9);
+        assert_eq!(a.permute(&[0, 1]), a);
+    }
+
+    #[test]
+    fn elementwise_ops() {
+        let a = Tensor::new(&[3], vec![1., 2., 3.]);
+        let b = Tensor::new(&[3], vec![4., 5., 6.]);
+        assert_eq!(a.add(&b).data(), &[5., 7., 9.]);
+        assert_eq!(a.sub(&b).data(), &[-3., -3., -3.]);
+        assert_eq!(a.mul_elem(&b).data(), &[4., 10., 18.]);
+        assert_eq!(a.scale(2.0).data(), &[2., 4., 6.]);
+        assert_eq!(a.flat_dot(&b), 32.0);
+    }
+
+    #[test]
+    fn add_assign_accumulates() {
+        let mut a = Tensor::zeros(&[2, 2]);
+        a.add_assign(&Tensor::ones(&[2, 2]));
+        a.add_assign(&Tensor::ones(&[2, 2]));
+        assert_eq!(a, Tensor::fill(&[2, 2], 2.0));
+    }
+}

@@ -1,0 +1,189 @@
+//! Small utilities: scoped-thread data parallelism (the offline build has
+//! no rayon) and wall-clock helpers for the bench harnesses.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+/// Number of worker threads (overridable with `TENSORCALC_THREADS`).
+pub fn num_threads() -> usize {
+    static CACHE: AtomicUsize = AtomicUsize::new(0);
+    let c = CACHE.load(Ordering::Relaxed);
+    if c != 0 {
+        return c;
+    }
+    let n = std::env::var("TENSORCALC_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+        .max(1);
+    CACHE.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Split `out` into up to `num_threads` contiguous bands of whole
+/// `out_chunk`-sized units (paired with the corresponding `inp` bands of
+/// `in_chunk`-sized units) and run `f(band_index_offset, out_band,
+/// in_band)` on each band in parallel.
+pub fn par_band_zip<F>(out: &mut [f64], out_chunk: usize, inp: &[f64], in_chunk: usize, f: F)
+where
+    F: Fn(usize, &mut [f64], &[f64]) + Sync,
+{
+    let units = out.len() / out_chunk.max(1);
+    debug_assert_eq!(inp.len() / in_chunk.max(1), units);
+    let nt = num_threads().min(units.max(1));
+    if nt <= 1 {
+        f(0, out, inp);
+        return;
+    }
+    let per = units.div_ceil(nt);
+    std::thread::scope(|s| {
+        let mut out_rest = out;
+        let mut in_rest = inp;
+        let mut off = 0usize;
+        for _ in 0..nt {
+            if out_rest.is_empty() {
+                break;
+            }
+            let take = per.min(out_rest.len() / out_chunk);
+            let (ob, ot) = out_rest.split_at_mut(take * out_chunk);
+            let (ib, it) = in_rest.split_at(take * in_chunk);
+            let fr = &f;
+            let this_off = off;
+            s.spawn(move || fr(this_off, ob, ib));
+            out_rest = ot;
+            in_rest = it;
+            off += take;
+        }
+    });
+}
+
+/// Like [`par_band_zip`] but with two read-only inputs (for batched GEMM:
+/// C bands zipped with A and B bands).
+pub fn par_band_zip2<F>(
+    out: &mut [f64],
+    out_chunk: usize,
+    a: &[f64],
+    a_chunk: usize,
+    b: &[f64],
+    b_chunk: usize,
+    f: F,
+) where
+    F: Fn(usize, &mut [f64], &[f64], &[f64]) + Sync,
+{
+    let units = out.len() / out_chunk.max(1);
+    let nt = num_threads().min(units.max(1));
+    if nt <= 1 {
+        f(0, out, a, b);
+        return;
+    }
+    let per = units.div_ceil(nt);
+    std::thread::scope(|s| {
+        let mut out_rest = out;
+        let mut a_rest = a;
+        let mut b_rest = b;
+        let mut off = 0usize;
+        for _ in 0..nt {
+            if out_rest.is_empty() {
+                break;
+            }
+            let take = per.min(out_rest.len() / out_chunk);
+            let (ob, ot) = out_rest.split_at_mut(take * out_chunk);
+            let (ab, at) = a_rest.split_at(take * a_chunk);
+            let (bb, bt) = b_rest.split_at(take * b_chunk);
+            let fr = &f;
+            let this_off = off;
+            s.spawn(move || fr(this_off, ob, ab, bb));
+            out_rest = ot;
+            a_rest = at;
+            b_rest = bt;
+            off += take;
+        }
+    });
+}
+
+/// Median-of-runs timing helper for the hand-rolled bench harnesses.
+/// Runs `f` for at least `min_runs` times and at least `min_secs`
+/// seconds; returns (median_secs, runs).
+pub fn time_median<F: FnMut()>(mut f: F, min_runs: usize, min_secs: f64) -> (f64, usize) {
+    let mut times = Vec::new();
+    let start = Instant::now();
+    loop {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+        if times.len() >= min_runs && start.elapsed().as_secs_f64() >= min_secs {
+            break;
+        }
+        if times.len() >= 10_000 {
+            break;
+        }
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (times[times.len() / 2], times.len())
+}
+
+/// Pretty seconds for bench tables.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:8.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:8.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:8.2} ms", s * 1e3)
+    } else {
+        format!("{:8.3} s ", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_band_zip_covers_everything() {
+        let mut out = vec![0.0; 64];
+        let inp: Vec<f64> = (0..64).map(|i| i as f64).collect();
+        par_band_zip(&mut out, 4, &inp, 4, |off, ob, ib| {
+            for (k, (o, i)) in ob.iter_mut().zip(ib).enumerate() {
+                *o = i * 2.0 + (off * 4 + k) as f64 * 0.0;
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as f64 * 2.0);
+        }
+    }
+
+    #[test]
+    fn par_band_zip2_offsets_are_consistent() {
+        let mut out = vec![0.0; 30];
+        let a: Vec<f64> = (0..30).map(|i| i as f64).collect();
+        let b: Vec<f64> = (0..30).map(|i| 100.0 + i as f64).collect();
+        par_band_zip2(&mut out, 3, &a, 3, &b, 3, |off, ob, ab, bb| {
+            for k in 0..ob.len() {
+                ob[k] = ab[k] + bb[k] + (off * 3 + k) as f64 * 0.0;
+            }
+        });
+        for i in 0..30 {
+            assert_eq!(out[i], a[i] + b[i]);
+        }
+    }
+
+    #[test]
+    fn time_median_returns_positive() {
+        let (t, runs) = time_median(
+            || {
+                std::hint::black_box(1 + 1);
+            },
+            3,
+            0.0,
+        );
+        assert!(t >= 0.0 && runs >= 3);
+    }
+
+    #[test]
+    fn num_threads_at_least_one() {
+        assert!(num_threads() >= 1);
+    }
+}

@@ -1,0 +1,201 @@
+//! Cross-module integration tests: parser → autodiff → simplify →
+//! cross-country → compress → eval, the three benchmark workloads, and
+//! the coordinator + PJRT runtime (artifact-gated).
+
+use tensorcalc::autodiff::hessian::{grad_and_hessian, hessian_compressed};
+use tensorcalc::baselines::PerEntryHessian;
+use tensorcalc::coordinator::{Coordinator, EngineEntry};
+use tensorcalc::eval::{eval, eval_many, fd_gradient, Env, Plan};
+use tensorcalc::parser::{parse_expr, VarDecl};
+use tensorcalc::prelude::*;
+use tensorcalc::problems::{
+    logistic_regression, matrix_factorization, neural_net, newton_step_compressed,
+};
+use tensorcalc::solve::solve_spd;
+use tensorcalc::tensor::Tensor;
+
+/// The full front-to-back path on the paper's Expression (1): parse,
+/// differentiate, reorder, simplify; every stage must agree numerically.
+#[test]
+fn expression1_full_pipeline() {
+    let decls = vec![VarDecl::new("X", &[6, 4]), VarDecl::new("w", &[4])];
+    let mut g = Graph::new();
+    let y = parse_expr(&mut g, &decls, "X'*(inv(exp(X*w)+1) .* exp(X*w))").unwrap();
+    let w = g.var_id("w").unwrap();
+
+    let jac_raw = reverse_derivative(&mut g, y, &[w])[0];
+    let jac_simpl = simplify(&mut g, &[jac_raw])[0];
+    let jac_cc = optimize_contractions(&mut g, jac_simpl);
+    let jac_cc = simplify(&mut g, &[jac_cc])[0];
+    let jac_fwd = forward_derivative(&mut g, y, w);
+
+    let mut env = Env::new();
+    env.insert("X", Tensor::randn(&[6, 4], 1));
+    env.insert("w", Tensor::randn(&[4], 2).scale(0.3));
+    let vals = eval_many(&g, &[jac_raw, jac_simpl, jac_cc, jac_fwd], &env);
+    for (i, v) in vals.iter().enumerate().skip(1) {
+        assert!(
+            v.allclose(&vals[0], 1e-9, 1e-11),
+            "stage {} disagrees, diff {}",
+            i,
+            v.max_abs_diff(&vals[0])
+        );
+    }
+}
+
+/// A parsed loss drives a full Newton solve (parser + autodiff + solve).
+#[test]
+fn parsed_newton_on_ridge_regression() {
+    // f(w) = ‖A w − b‖²-ish, written in the expression language
+    let decls = vec![
+        VarDecl::new("A", &[12, 5]),
+        VarDecl::new("b", &[12]),
+        VarDecl::new("w", &[5]),
+    ];
+    let mut g = Graph::new();
+    let f = parse_expr(&mut g, &decls, "norm2(A*w-b) + 0.1*norm2(w)").unwrap();
+    let w = g.var_id("w").unwrap();
+    let (grad, hess) = grad_and_hessian(&mut g, f, w);
+    let mut env = Env::new();
+    env.insert("A", Tensor::randn(&[12, 5], 3));
+    env.insert("b", Tensor::randn(&[12], 4));
+    env.insert("w", Tensor::zeros(&[5]));
+    // quadratic ⇒ one Newton step reaches the optimum
+    let vals = eval_many(&g, &[grad, hess], &env);
+    let step = solve_spd(&vals[1], &vals[0]).expect("SPD");
+    env.insert("w", env.get("w").unwrap().sub(&step));
+    let g_after = eval(&g, grad, &env);
+    assert!(g_after.norm() < 1e-9, "‖grad‖ after Newton: {}", g_after.norm());
+}
+
+/// All three workloads: the four Hessian modes must agree numerically
+/// and match finite differences of the gradient.
+#[test]
+fn workload_mode_consistency_matrix() {
+    for mut w in [
+        logistic_regression(10, 5),
+        matrix_factorization(6, 6, 2, false),
+        neural_net(4, 3, 6),
+    ] {
+        let name = w.name;
+        let h = w.hessian();
+        let hcc = w.hessian_cross_country();
+        let comp = w.hessian_compressed();
+        let pe = PerEntryHessian::new(&mut w.g, w.loss, w.wrt);
+
+        let vals = eval_many(&w.g, &[h, hcc, comp.eval_node()], &w.env);
+        let h_pe = pe.eval(&w.g, &w.env);
+        assert!(vals[1].allclose(&vals[0], 1e-8, 1e-10), "{}: cc", name);
+        let mat = comp.materialize(&vals[2]);
+        assert!(mat.allclose(&vals[0], 1e-8, 1e-10), "{}: compressed", name);
+        assert!(h_pe.allclose(&vals[0], 1e-8, 1e-10), "{}: per-entry", name);
+    }
+}
+
+/// The matfac compressed-Newton path (the §3.3 claim) end-to-end.
+#[test]
+fn compressed_newton_drives_loss_to_conditional_optimum() {
+    let mut w = matrix_factorization(12, 12, 3, false);
+    let comp = w.hessian_compressed();
+    assert!(comp.is_compressed());
+    let grad_node = w.gradient();
+    let core_node = comp.eval_node();
+    let before = eval(&w.g, w.loss, &w.env).item();
+    let vals = eval_many(&w.g, &[core_node, grad_node], &w.env);
+    let step = newton_step_compressed(&vals[0], &vals[1]).unwrap();
+    let u = w.env.get("U").unwrap().sub(&step);
+    w.env.insert("U", u);
+    let after = eval(&w.g, w.loss, &w.env).item();
+    assert!(after < before, "loss must drop: {} -> {}", before, after);
+    let g_after = eval(&w.g, grad_node, &w.env);
+    assert!(g_after.norm() < 1e-8);
+}
+
+/// Gradients of all workloads validate against finite differences when
+/// accessed through the public Workload API (not just internals).
+#[test]
+fn public_api_gradients_fd() {
+    let mut w = logistic_regression(8, 4);
+    let grad = w.gradient();
+    let gv = eval(&w.g, grad, &w.env);
+    let want = fd_gradient(&w.g, w.loss, "w", &w.env, 1e-6);
+    assert!(gv.allclose(&want, 1e-5, 1e-7));
+}
+
+/// Coordinator serving an engine entry: many concurrent clients, all
+/// responses correct (not just completed).
+#[test]
+fn coordinator_responses_are_correct() {
+    let (m, n) = (12usize, 4usize);
+    let mut w = logistic_regression(m, n);
+    let grad = w.gradient();
+    let plan = Plan::new(&w.g, &[grad]);
+    let graph = w.g.clone();
+    let mut c = Coordinator::new(64);
+    c.register_engine(
+        "grad",
+        EngineEntry {
+            graph: w.g,
+            plan,
+            inputs: vec![
+                ("X".into(), vec![m, n]),
+                ("y".into(), vec![m]),
+                ("w".into(), vec![n]),
+            ],
+        },
+    );
+    let mut handles = Vec::new();
+    for seed in 0..16u64 {
+        let x = Tensor::randn(&[m, n], seed);
+        let y = Tensor::randn(&[m], seed + 50).map(f64::signum);
+        let wv = Tensor::randn(&[n], seed + 100);
+        let rx = c.submit("grad", vec![x.clone(), y.clone(), wv.clone()]).unwrap();
+        handles.push((x, y, wv, rx));
+    }
+    for (x, y, wv, rx) in handles {
+        let resp = rx.recv().unwrap().unwrap();
+        // recompute directly
+        let mut env = Env::new();
+        env.insert("X", x);
+        env.insert("y", y);
+        env.insert("w", wv);
+        let want = eval(&graph, grad, &env);
+        assert!(resp.outputs[0].allclose(&want, 1e-10, 1e-12));
+    }
+}
+
+/// PJRT + engine agreement on the matfac Hessian core (artifact-gated).
+#[test]
+fn matfac_core_engine_vs_pjrt() {
+    let Some(dir) = tensorcalc::runtime::artifacts_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let mut rt = tensorcalc::runtime::Runtime::open(&dir).unwrap();
+    // AOT shape: V ∈ R^{128×5}
+    let v = Tensor::randn(&[128, 5], 77);
+    let out = rt.execute("matfac_hess_core", &[v.clone()]).unwrap();
+
+    let mut w = matrix_factorization(128, 128, 5, false);
+    w.env.insert("V", v);
+    let comp = w.hessian_compressed();
+    assert!(comp.is_compressed());
+    let core = eval(&w.g, comp.eval_node(), &w.env);
+    assert!(
+        core.allclose(&out[0], 1e-3, 1e-3),
+        "engine vs PJRT core diff {}",
+        core.max_abs_diff(&out[0])
+    );
+}
+
+/// The per-entry baseline costs Θ(n) reverse sweeps — verify the *count*,
+/// which is what produces the Figure-3 gap.
+#[test]
+fn per_entry_sweep_count_scales() {
+    let mut w = logistic_regression(8, 4);
+    let pe = PerEntryHessian::new(&mut w.g, w.loss, w.wrt);
+    assert_eq!(pe.sweeps(), 4);
+    let mut w = matrix_factorization(6, 6, 3, false);
+    let pe = PerEntryHessian::new(&mut w.g, w.loss, w.wrt);
+    assert_eq!(pe.sweeps(), 18); // 6×3 matrix variable
+}

@@ -1,0 +1,274 @@
+//! Property-based tests (in-crate generator — the offline build has no
+//! proptest): randomized einsum specs against a brute-force oracle,
+//! semantics preservation under simplify/cross-country, mode agreement
+//! on random DAGs, and FD validation of random derivative chains.
+
+use tensorcalc::einsum::{einsum, EinSpec, Label};
+use tensorcalc::eval::{eval, eval_many, fd_gradient, Env};
+use tensorcalc::ir::{Elem, Graph, NodeId};
+use tensorcalc::prelude::*;
+use tensorcalc::tensor::{Tensor, XorShift};
+
+/// Brute-force einsum reference (independent of the engine's fast paths).
+fn einsum_naive(spec: &EinSpec, a: &Tensor, b: &Tensor) -> Tensor {
+    let out_shape = spec.output_shape(a.shape(), b.shape()).unwrap();
+    let mut labels: Vec<Label> = Vec::new();
+    let mut dims: Vec<usize> = Vec::new();
+    for (&l, &d) in spec.s1.iter().zip(a.shape()).chain(spec.s2.iter().zip(b.shape())) {
+        if !labels.contains(&l) {
+            labels.push(l);
+            dims.push(d);
+        }
+    }
+    let total: usize = dims.iter().product::<usize>().max(1);
+    let mut out = Tensor::zeros(&out_shape);
+    let pos = |l: Label| labels.iter().position(|&x| x == l).unwrap();
+    for flat in 0..total {
+        let mut assign = vec![0usize; labels.len()];
+        let mut rem = flat;
+        for i in (0..labels.len()).rev() {
+            assign[i] = rem % dims[i];
+            rem /= dims[i];
+        }
+        let ai: Vec<usize> = spec.s1.iter().map(|&l| assign[pos(l)]).collect();
+        let bi: Vec<usize> = spec.s2.iter().map(|&l| assign[pos(l)]).collect();
+        let oi: Vec<usize> = spec.s3.iter().map(|&l| assign[pos(l)]).collect();
+        let mut oflat = 0usize;
+        for (x, &d) in oi.iter().zip(&out_shape) {
+            oflat = oflat * d + x;
+        }
+        out.data_mut()[oflat] += a.at(&ai) * b.at(&bi);
+    }
+    out
+}
+
+/// Generate a random valid spec + matching operand shapes.
+fn random_spec(rng: &mut XorShift) -> (EinSpec, Vec<usize>, Vec<usize>) {
+    let n_labels = 1 + rng.below(4); // 1..4 distinct labels
+    let dims: Vec<usize> = (0..n_labels).map(|_| 1 + rng.below(4)).collect();
+    let ra = 1 + rng.below(3);
+    let rb = rng.below(3);
+    let s1: Vec<Label> = (0..ra).map(|_| rng.below(n_labels) as Label).collect();
+    let s2: Vec<Label> = (0..rb).map(|_| rng.below(n_labels) as Label).collect();
+    // output: random subset of distinct used labels
+    let mut used: Vec<Label> = Vec::new();
+    for &l in s1.iter().chain(&s2) {
+        if !used.contains(&l) {
+            used.push(l);
+        }
+    }
+    let mut s3 = Vec::new();
+    for &l in &used {
+        if rng.below(2) == 0 {
+            s3.push(l);
+        }
+    }
+    // random permutation of s3
+    for i in (1..s3.len()).rev() {
+        let j = rng.below(i + 1);
+        s3.swap(i, j);
+    }
+    let a_shape: Vec<usize> = s1.iter().map(|&l| dims[l as usize]).collect();
+    let b_shape: Vec<usize> = s2.iter().map(|&l| dims[l as usize]).collect();
+    (EinSpec::new(s1, s2, s3), a_shape, b_shape)
+}
+
+#[test]
+fn prop_einsum_matches_bruteforce_on_200_random_specs() {
+    let mut rng = XorShift::new(2024);
+    for case in 0..200 {
+        let (spec, sa, sb) = random_spec(&mut rng);
+        let a = Tensor::randn(&sa, 1000 + case);
+        let b = Tensor::randn(&sb, 2000 + case);
+        let fast = einsum(&spec, &a, &b);
+        let slow = einsum_naive(&spec, &a, &b);
+        assert!(
+            fast.allclose(&slow, 1e-9, 1e-9),
+            "case {}: {} on {:?}×{:?}, diff {}",
+            case,
+            spec,
+            sa,
+            sb,
+            fast.max_abs_diff(&slow)
+        );
+    }
+}
+
+#[test]
+fn prop_einsum_commutativity() {
+    // Lemma 2: A *_(s1,s2,s3) B == B *_(s2,s1,s3) A
+    let mut rng = XorShift::new(7);
+    for case in 0..100 {
+        let (spec, sa, sb) = random_spec(&mut rng);
+        let a = Tensor::randn(&sa, 3000 + case);
+        let b = Tensor::randn(&sb, 4000 + case);
+        let lhs = einsum(&spec, &a, &b);
+        let rhs = einsum(&spec.swapped(), &b, &a);
+        assert!(lhs.allclose(&rhs, 1e-10, 1e-11), "case {}: {}", case, spec);
+    }
+}
+
+#[test]
+fn prop_einsum_distributivity() {
+    // Lemma 3: A*(B+C) == A*B + A*C (same spec)
+    let mut rng = XorShift::new(9);
+    for case in 0..100 {
+        let (spec, sa, sb) = random_spec(&mut rng);
+        let a = Tensor::randn(&sa, 5000 + case);
+        let b = Tensor::randn(&sb, 6000 + case);
+        let c = Tensor::randn(&sb, 7000 + case);
+        let lhs = einsum(&spec, &a, &b.add(&c));
+        let rhs = einsum(&spec, &a, &b).add(&einsum(&spec, &a, &c));
+        assert!(lhs.allclose(&rhs, 1e-9, 1e-10), "case {}: {}", case, spec);
+    }
+}
+
+/// Random expression DAG over a small pool of variables.
+struct DagGen {
+    rng: XorShift,
+}
+
+impl DagGen {
+    /// Build a random scalar expression of `x` (shape [n]) and `a`
+    /// (shape [n, n]) using smooth, domain-safe ops.
+    fn random_scalar_expr(&mut self, g: &mut Graph, depth: usize) -> NodeId {
+        let x = g.var("x", &[4]);
+        let a = g.var("A", &[4, 4]);
+        let mut v = g.matvec(a, x); // [4]
+        for _ in 0..depth {
+            v = match self.rng.below(6) {
+                0 => g.elem(Elem::Tanh, v),
+                1 => g.elem(Elem::Sigmoid, v),
+                2 => {
+                    let e = g.elem(Elem::Exp, v);
+                    let half = g.scale(e, 0.2);
+                    g.elem(Elem::Tanh, half)
+                }
+                3 => g.hadamard(v, x),
+                4 => {
+                    let av = g.matvec(a, v);
+                    g.scale(av, 0.5)
+                }
+                _ => {
+                    let t = g.tmatvec(a, v);
+                    g.add(t, x)
+                }
+            };
+        }
+        let sq = g.elem(Elem::Square, v);
+        g.sum_all(sq)
+    }
+}
+
+#[test]
+fn prop_simplify_and_cc_preserve_random_gradients() {
+    for seed in 0..25u64 {
+        let mut gen = DagGen { rng: XorShift::new(seed) };
+        let mut g = Graph::new();
+        let depth = 1 + (seed % 4) as usize;
+        let f = gen.random_scalar_expr(&mut g, depth);
+        let x = g.var_id("x").unwrap();
+        let raw = reverse_derivative(&mut g, f, &[x])[0];
+        let simpl = simplify(&mut g, &[raw])[0];
+        let cc = optimize_contractions(&mut g, simpl);
+        let cc = simplify(&mut g, &[cc])[0];
+        let mut env = Env::new();
+        env.insert("x", Tensor::randn(&[4], seed + 1).scale(0.5));
+        env.insert("A", Tensor::randn(&[4, 4], seed + 2).scale(0.5));
+        let vals = eval_many(&g, &[raw, simpl, cc], &env);
+        assert!(
+            vals[1].allclose(&vals[0], 1e-8, 1e-10),
+            "seed {}: simplify changed value, diff {}",
+            seed,
+            vals[1].max_abs_diff(&vals[0])
+        );
+        assert!(
+            vals[2].allclose(&vals[0], 1e-8, 1e-10),
+            "seed {}: cross-country changed value, diff {}",
+            seed,
+            vals[2].max_abs_diff(&vals[0])
+        );
+    }
+}
+
+#[test]
+fn prop_forward_equals_reverse_on_random_dags() {
+    for seed in 100..115u64 {
+        let mut gen = DagGen { rng: XorShift::new(seed) };
+        let mut g = Graph::new();
+        let f = gen.random_scalar_expr(&mut g, 2);
+        let x = g.var_id("x").unwrap();
+        let r = reverse_derivative(&mut g, f, &[x])[0];
+        let fw = forward_derivative(&mut g, f, x);
+        let mut env = Env::new();
+        env.insert("x", Tensor::randn(&[4], seed + 1).scale(0.5));
+        env.insert("A", Tensor::randn(&[4, 4], seed + 2).scale(0.5));
+        let vals = eval_many(&g, &[r, fw], &env);
+        assert!(
+            vals[0].allclose(&vals[1], 1e-9, 1e-11),
+            "seed {}: modes disagree, diff {}",
+            seed,
+            vals[0].max_abs_diff(&vals[1])
+        );
+    }
+}
+
+#[test]
+fn prop_gradients_match_fd_on_random_dags() {
+    for seed in 200..212u64 {
+        let mut gen = DagGen { rng: XorShift::new(seed) };
+        let mut g = Graph::new();
+        let f = gen.random_scalar_expr(&mut g, 2);
+        let x = g.var_id("x").unwrap();
+        let grad = reverse_derivative(&mut g, f, &[x])[0];
+        let grad = simplify(&mut g, &[grad])[0];
+        let mut env = Env::new();
+        env.insert("x", Tensor::randn(&[4], seed + 1).scale(0.4));
+        env.insert("A", Tensor::randn(&[4, 4], seed + 2).scale(0.4));
+        let gv = eval(&g, grad, &env);
+        let want = fd_gradient(&g, f, "x", &env, 1e-6);
+        assert!(
+            gv.allclose(&want, 1e-4, 1e-6),
+            "seed {}: FD mismatch, diff {}",
+            seed,
+            gv.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn prop_hessian_symmetry_on_random_dags() {
+    use tensorcalc::autodiff::hessian::hessian;
+    for seed in 300..308u64 {
+        let mut gen = DagGen { rng: XorShift::new(seed) };
+        let mut g = Graph::new();
+        let f = gen.random_scalar_expr(&mut g, 2);
+        let x = g.var_id("x").unwrap();
+        let h = hessian(&mut g, f, x);
+        let mut env = Env::new();
+        env.insert("x", Tensor::randn(&[4], seed + 1).scale(0.4));
+        env.insert("A", Tensor::randn(&[4, 4], seed + 2).scale(0.4));
+        let hv = eval(&g, h, &env);
+        assert!(
+            hv.allclose(&hv.t(), 1e-8, 1e-10),
+            "seed {}: Hessian asymmetric, diff {}",
+            seed,
+            hv.max_abs_diff(&hv.t())
+        );
+    }
+}
+
+#[test]
+fn prop_reduce_then_expand_roundtrips() {
+    // Σ over fresh outer-product axis recovers a scale: Σ_j (x ⊗ 1_j) = m·x
+    let mut rng = XorShift::new(11);
+    for _ in 0..50 {
+        let n = 1 + rng.below(6);
+        let m = 1 + rng.below(6);
+        let x = Tensor::randn(&[n], rng.next_u64());
+        let ones = Tensor::ones(&[m]);
+        let outer = einsum(&EinSpec::parse("i,j->ij"), &x, &ones);
+        let back = einsum(&EinSpec::parse("ij,->i"), &outer, &Tensor::scalar(1.0));
+        assert!(back.allclose(&x.scale(m as f64), 1e-10, 1e-11));
+    }
+}
