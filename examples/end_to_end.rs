@@ -15,7 +15,7 @@
 use std::time::Instant;
 use tensorcalc::baselines::PerEntryHessian;
 use tensorcalc::coordinator::{Coordinator, EngineEntry};
-use tensorcalc::eval::Plan;
+use tensorcalc::exec::CompiledPlan;
 use tensorcalc::ir::{Elem, Graph, NodeId};
 use tensorcalc::prelude::*;
 use tensorcalc::runtime::{artifacts_dir, Runtime};
@@ -101,18 +101,17 @@ fn main() {
 
     // ---- 3. Newton training through the coordinator ----
     let mut coord = Coordinator::new(64);
-    let plan = Plan::new(&g, &[loss, grad, hess]);
     coord.register_engine(
         "logreg_newton_state",
-        EngineEntry {
-            graph: g,
-            plan,
-            inputs: vec![
+        EngineEntry::compiled(
+            &g,
+            &[loss, grad, hess],
+            vec![
                 ("X".into(), vec![M, N]),
                 ("y".into(), vec![M]),
                 ("w".into(), vec![N]),
             ],
-        },
+        ),
     );
     let mut wcur = Tensor::zeros(&[N]);
     println!("\n{:>4} {:>14} {:>14} {:>10}", "iter", "loss", "‖grad‖", "latency");
@@ -149,16 +148,16 @@ fn main() {
     println!("\nHessian mode comparison at m={}, n={}:", M, N);
     let mut wl = tensorcalc::problems::logistic_regression(M, N);
     let h = wl.hessian();
-    let plan = Plan::new(&wl.g, &[h]);
+    let plan = CompiledPlan::new(&wl.g, &[h]);
     let t0 = Instant::now();
-    let _ = plan.run(&wl.g, &wl.env);
+    let _ = plan.run(&wl.env);
     let t_rev = t0.elapsed().as_secs_f64();
 
     let mut wl2 = tensorcalc::problems::logistic_regression(M, N);
     let hcc = wl2.hessian_cross_country();
-    let plan = Plan::new(&wl2.g, &[hcc]);
+    let plan = CompiledPlan::new(&wl2.g, &[hcc]);
     let t0 = Instant::now();
-    let _ = plan.run(&wl2.g, &wl2.env);
+    let _ = plan.run(&wl2.env);
     let t_cc = t0.elapsed().as_secs_f64();
 
     let mut wl3 = tensorcalc::problems::logistic_regression(M, N);

@@ -6,7 +6,38 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# hypothesis is optional in the offline environment: the parametrized
+# tests below still run without it, only the randomized sweeps skip.
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAS_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAS_HYPOTHESIS = False
+
+    def given(**_kwargs):  # type: ignore[misc]
+        def deco(_fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(_fn)
+
+        return deco
+
+    def settings(**_kwargs):  # type: ignore[misc]
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _St:
+        @staticmethod
+        def integers(**kwargs):
+            return kwargs
+
+        @staticmethod
+        def sampled_from(values):
+            return values
+
+    st = _St()
 
 from compile.kernels import matmul_tn, matmul_tn_ref, xt_diag_x, xt_diag_x_ref
 

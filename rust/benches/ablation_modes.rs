@@ -11,7 +11,8 @@
 //! Run: `cargo bench --bench ablation_modes`
 
 use tensorcalc::autodiff::cross_country::optimize_contractions;
-use tensorcalc::eval::{Env, Plan};
+use tensorcalc::eval::Env;
+use tensorcalc::exec::CompiledPlan;
 use tensorcalc::figures::{newton, print_table, Row};
 use tensorcalc::ir::Graph;
 use tensorcalc::problems::matrix_factorization;
@@ -56,10 +57,10 @@ fn main() {
         };
         for (label, cc) in [("reverse-order", false), ("cross-country", true)] {
             let (g, node, env) = build(cc);
-            let plan = Plan::new(&g, &[node]);
+            let plan = CompiledPlan::new(&g, &[node]);
             let (t, runs) = time_median(
                 || {
-                    std::hint::black_box(plan.run(&g, &env));
+                    std::hint::black_box(plan.run(&env));
                 },
                 3,
                 secs,
@@ -76,10 +77,10 @@ fn main() {
         let comp = w.hessian_compressed();
         assert!(comp.is_compressed());
         let core = comp.eval_node();
-        let plan = Plan::new(&w.g, &[core]);
+        let plan = CompiledPlan::new(&w.g, &[core]);
         let (t, runs) = time_median(
             || {
-                std::hint::black_box(plan.run(&w.g, &w.env));
+                std::hint::black_box(plan.run(&w.env));
             },
             3,
             secs,
@@ -95,10 +96,10 @@ fn main() {
 
         let mut w2 = matrix_factorization(n, n, 5, false);
         let h = w2.hessian();
-        let plan = Plan::new(&w2.g, &[h]);
+        let plan = CompiledPlan::new(&w2.g, &[h]);
         let (t, runs) = time_median(
             || {
-                std::hint::black_box(plan.run(&w2.g, &w2.env));
+                std::hint::black_box(plan.run(&w2.env));
             },
             3,
             secs,

@@ -1,10 +1,13 @@
-//! Microbenchmarks of the evaluation engine hot paths (einsum → GEMM):
-//! used by the §Perf pass to find and verify bottleneck fixes.
+//! Microbenchmarks of the evaluation engine hot paths (einsum → GEMM,
+//! plus the compiled executor): used by the §Perf pass to find and
+//! verify bottleneck fixes.
 //!
 //! Run: `cargo bench --bench engine_micro`
 
-use tensorcalc::einsum::{einsum, gemm, EinSpec};
+use tensorcalc::einsum::{einsum, gemm, EinScratch, EinSpec, EinsumPlan};
+use tensorcalc::exec::CompiledPlan;
 use tensorcalc::figures::{print_table, Row};
+use tensorcalc::problems::logistic_regression;
 use tensorcalc::tensor::Tensor;
 use tensorcalc::util::{fmt_secs, time_median};
 
@@ -52,6 +55,72 @@ fn main() {
         );
         println!("einsum {:<14} {:?}×{:?}: {}", sig, sa, sb, fmt_secs(t));
         rows.push(Row { figure: "micro", problem: "einsum", n: sa.iter().product(), mode: sig.into(), secs: t, runs });
+
+        // the write-into path: pre-compiled plan, reused scratch + output
+        let plan = EinsumPlan::new(&spec, &sa, &sb);
+        let mut scratch = EinScratch::default();
+        let mut out = Tensor::zeros(plan.out_shape());
+        let (t2, runs2) = time_median(
+            || {
+                plan.run(&a, &b, &mut out, &mut scratch);
+                std::hint::black_box(&out);
+            },
+            3,
+            secs,
+        );
+        println!(
+            "  einsum_into {:<9} {:?}×{:?}: {}  ({:+.0}% vs interpreter)",
+            sig,
+            sa,
+            sb,
+            fmt_secs(t2),
+            100.0 * (t2 - t) / t
+        );
+        rows.push(Row {
+            figure: "micro",
+            problem: "einsum_into",
+            n: sa.iter().product(),
+            mode: sig.into(),
+            secs: t2,
+            runs: runs2,
+        });
+    }
+
+    // compiled executor on a whole derivative DAG: the repeated-request
+    // hot path. After the warm-up run the buffer pool must serve every
+    // intermediate (fresh allocations ≈ one root buffer per run).
+    {
+        let (m, n) = (256usize, 128usize);
+        let mut w = logistic_regression(m, n);
+        let grad = w.gradient();
+        let plan = CompiledPlan::new(&w.g, &[w.loss, grad]);
+        let _ = plan.run(&w.env); // warm-up
+        let warm = plan.pool_stats();
+        let (t, runs) = time_median(
+            || {
+                std::hint::black_box(plan.run(&w.env));
+            },
+            5,
+            secs,
+        );
+        let after = plan.pool_stats();
+        println!(
+            "\ncompiled logreg grad (m={}, n={}): {}  [{} nodes, {} levels]",
+            m,
+            n,
+            fmt_secs(t),
+            plan.len(),
+            plan.depth()
+        );
+        println!(
+            "  buffer pool: fresh {} → {} (+{} over {} runs ≈ roots only), reused {}",
+            warm.fresh,
+            after.fresh,
+            after.fresh - warm.fresh,
+            runs,
+            after.reused
+        );
+        rows.push(Row { figure: "micro", problem: "compiled", n, mode: "logreg grad".into(), secs: t, runs });
     }
 
     print_table("engine microbenchmarks", &rows);

@@ -6,16 +6,19 @@
 //! source of the 2–3 orders-of-magnitude gap in Figure 3.
 
 use crate::autodiff::reverse::reverse_gradient;
-use crate::eval::{Env, Plan};
+use crate::eval::Env;
+use crate::exec::CompiledPlan;
 use crate::ir::{Graph, NodeId, Op};
 use crate::simplify::simplify_one;
 use crate::tensor::Tensor;
 
 /// A prepared per-entry Hessian evaluator: one scalar-seeded reverse-mode
 /// row expression, evaluated once per gradient entry with a basis vector
-/// bound — exactly the framework strategy.
+/// bound — exactly the framework strategy. The row runs on the same
+/// compiled executor as the "ours" modes, so the Figure-3 gap measures
+/// the *algorithmic* difference (N sweeps vs one), not executor overhead.
 pub struct PerEntryHessian {
-    row_plan: Plan,
+    row_plan: CompiledPlan,
     row_node: NodeId,
     basis_name: String,
     x_shape: Vec<usize>,
@@ -35,12 +38,14 @@ impl PerEntryHessian {
         let gi = g.sum_all(p);
         let row = reverse_gradient(g, gi, x);
         let row = simplify_one(g, row);
-        let row_plan = Plan::new(g, &[row]);
+        let row_plan = CompiledPlan::new(g, &[row]);
         PerEntryHessian { row_plan, row_node: row, basis_name, x_shape }
     }
 
-    /// Evaluate the full Hessian: `Π shape(x)` reverse sweeps.
-    pub fn eval(&self, g: &Graph, env: &Env) -> Tensor {
+    /// Evaluate the full Hessian: `Π shape(x)` reverse sweeps. The graph
+    /// argument is kept for API stability; the compiled row plan is
+    /// self-contained.
+    pub fn eval(&self, _g: &Graph, env: &Env) -> Tensor {
         let n: usize = self.x_shape.iter().product();
         let mut h_shape = self.x_shape.clone();
         h_shape.extend(&self.x_shape);
@@ -50,7 +55,7 @@ impl PerEntryHessian {
         for i in 0..n {
             basis.data_mut()[i] = 1.0;
             env.insert(&self.basis_name, basis.clone());
-            let row = self.row_plan.run(g, &env).pop().unwrap();
+            let row = self.row_plan.run(&env).pop().unwrap();
             h.data_mut()[i * n..(i + 1) * n].copy_from_slice(row.data());
             basis.data_mut()[i] = 0.0;
         }

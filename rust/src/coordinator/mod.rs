@@ -1,6 +1,6 @@
 //! The derivative-evaluation service: a request router + per-entry
 //! worker with bounded queues (backpressure), serving two backends —
-//! the symbolic engine (expression DAG + [`Plan`]) and the PJRT
+//! the symbolic engine (expression DAG + [`CompiledPlan`]) and the PJRT
 //! executables loaded by [`crate::runtime`].
 //!
 //! The paper's contribution is the calculus itself, so this layer is a
@@ -11,24 +11,42 @@
 mod metrics;
 pub use metrics::{Metrics, Snapshot};
 
-use crate::eval::{Env, Plan};
-use crate::ir::Graph;
+use crate::error::Result;
+use crate::eval::Env;
+use crate::exec::{global_plan_cache, CompiledPlan};
+use crate::ir::{Graph, NodeId};
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
-use anyhow::{anyhow, bail, Result};
+use crate::{anyhow, bail};
 use std::collections::HashMap;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-/// An engine-backed entry: an expression DAG with a prepared plan and a
-/// fixed input signature.
+/// An engine-backed entry: a *compiled* plan (pooled buffers,
+/// level-parallel execution — see [`crate::exec`]) plus a fixed input
+/// signature. The graph itself is not retained — the plan is
+/// self-contained — and the plan comes from the global plan cache, so
+/// re-registering the same graph (the repeated-request hot path) reuses
+/// the compiled artifact and its warm buffer pool.
 pub struct EngineEntry {
-    pub graph: Graph,
-    pub plan: Plan,
+    pub plan: Arc<CompiledPlan>,
     /// variable names in submission order, with expected shapes
     pub inputs: Vec<(String, Vec<usize>)>,
+}
+
+impl EngineEntry {
+    /// Compile `roots` of `graph` (through the global plan cache) into a
+    /// servable entry.
+    pub fn compiled(
+        graph: &Graph,
+        roots: &[NodeId],
+        inputs: Vec<(String, Vec<usize>)>,
+    ) -> Self {
+        let plan = global_plan_cache().get_or_compile(graph, roots);
+        EngineEntry { plan, inputs }
+    }
 }
 
 enum Job {
@@ -225,7 +243,7 @@ fn run_engine(entry: &EngineEntry, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
         }
         env.insert(name, t);
     }
-    Ok(entry.plan.run(&entry.graph, &env))
+    Ok(entry.plan.run(&env))
 }
 
 /// PJRT worker: owns the runtime, routes jobs by artifact name.
@@ -268,16 +286,15 @@ mod tests {
         let loss = g.sum_all(l);
         let grad = reverse_gradient(&mut g, loss, w);
         let grad = simplify_one(&mut g, grad);
-        let plan = Plan::new(&g, &[loss, grad]);
-        EngineEntry {
-            graph: g,
-            plan,
-            inputs: vec![
+        EngineEntry::compiled(
+            &g,
+            &[loss, grad],
+            vec![
                 ("X".into(), vec![m, n]),
                 ("y".into(), vec![m]),
                 ("w".into(), vec![n]),
             ],
-        }
+        )
     }
 
     #[test]

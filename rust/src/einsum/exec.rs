@@ -10,13 +10,19 @@
 //! 3. *Classify* the remaining labels into **batch** (in A, B and out),
 //!    **M** (A and out), **N** (B and out) and **K** (A and B, summed).
 //! 4. Permute to `A[batch, M, K]`, `B[batch, K, N]`, run the blocked GEMM
-//!    per batch slice (rayon over batches when the slices are small), and
-//!    permute the `[batch, M, N]` result to the requested output order.
+//!    per batch slice (scoped threads over batches when the slices are
+//!    small — thresholds in [`crate::util`]), and permute the
+//!    `[batch, M, N]` result to the requested output order.
+//!
+//! This is the *interpreter* path: every step materialises a fresh
+//! tensor. The write-into twin in [`super::plan`] shares the same GEMM
+//! core ([`super::plan::batched_gemm`]) but resolves all staging at
+//! compile time — this file stays allocating-and-simple on purpose, as
+//! the reference oracle.
 
-use super::gemm::gemm_into;
+use super::plan::batched_gemm;
 use super::spec::{EinSpec, Label};
 use crate::tensor::{row_major_strides, Tensor};
-use crate::util::par_band_zip2;
 
 /// Sum a tensor over the given (distinct) axes.
 pub fn reduce_sum(t: &Tensor, axes: &[usize]) -> Tensor {
@@ -198,59 +204,16 @@ pub fn einsum(spec: &EinSpec, a: &Tensor, b: &Tensor) -> Tensor {
     let n: usize = n_labels.iter().map(|&l| dim_of(l)).product();
 
     let mut c = vec![0.0; bsz * m * n];
-
-    if k == 0 || m == 0 || n == 0 || bsz == 0 {
-        // empty contraction — all zeros
-    } else if k_labels.is_empty() && m == 1 && n == 1 {
-        // pure batched element-wise product
-        for ((cv, av), bv) in c.iter_mut().zip(a_g.data()).zip(b_g.data()) {
-            *cv = av * bv;
-        }
-    } else if k_labels.is_empty() && n == 1 {
-        // row broadcast: C[b, m] = A[b, m] · B[b]
-        for bi in 0..bsz {
-            let bv = b_g.data()[bi];
-            let arow = &a_g.data()[bi * m..(bi + 1) * m];
-            let crow = &mut c[bi * m..(bi + 1) * m];
-            for (cv, av) in crow.iter_mut().zip(arow) {
-                *cv = av * bv;
-            }
-        }
-    } else {
-        // batched GEMM (when k_labels is empty, k == 1 and GEMM degrades
-        // gracefully to a batched outer product)
-        let per = m * k.max(1) * n;
-        if bsz > 1 && per < (1 << 16) && bsz * per > (1 << 16) {
-            par_band_zip2(
-                &mut c,
-                m * n,
-                a_g.data(),
-                m * k,
-                b_g.data(),
-                k * n,
-                |_, cc, aa, bb| {
-                    for ((cs, as_), bs) in cc
-                        .chunks_mut(m * n)
-                        .zip(as_chunks(aa, m * k))
-                        .zip(as_chunks(bb, k * n))
-                    {
-                        gemm_into(as_, bs, cs, m, k, n);
-                    }
-                },
-            );
-        } else {
-            for bi in 0..bsz {
-                gemm_into(
-                    &a_g.data()[bi * m * k..(bi + 1) * m * k],
-                    &b_g.data()[bi * k * n..(bi + 1) * k * n],
-                    &mut c[bi * m * n..(bi + 1) * m * n],
-                    m,
-                    k,
-                    n,
-                );
-            }
-        }
-    }
+    batched_gemm(
+        a_g.data(),
+        b_g.data(),
+        &mut c,
+        bsz,
+        m,
+        k,
+        n,
+        k_labels.is_empty(),
+    );
 
     let mut res_labels = batch;
     res_labels.extend(&m_labels);
@@ -262,52 +225,52 @@ pub fn einsum(spec: &EinSpec, a: &Tensor, b: &Tensor) -> Tensor {
     out
 }
 
-fn as_chunks(s: &[f64], chunk: usize) -> std::slice::Chunks<'_, f64> {
-    s.chunks(chunk.max(1))
+/// True if no label repeats within `ls`.
+pub(super) fn has_distinct(ls: &[Label]) -> bool {
+    ls.iter().enumerate().all(|(i, l)| !ls[i + 1..].contains(l))
 }
 
-fn has_distinct(ls: &[Label]) -> bool {
-    ls.iter().enumerate().all(|(i, l)| !ls[i + 1..].contains(l))
+/// Brute-force reference: iterate every (output ∪ summed) index tuple.
+/// Exponential in the label count — this is the *oracle* the differential
+/// test suites (`tests/exec_equivalence.rs`, `tests/property.rs`) pin
+/// both the interpreter and the compiled executor against.
+pub fn einsum_naive(spec: &EinSpec, a: &Tensor, b: &Tensor) -> Tensor {
+    let out_shape = spec.output_shape(a.shape(), b.shape()).unwrap();
+    // label -> dim
+    let mut labels: Vec<Label> = Vec::new();
+    let mut dims: Vec<usize> = Vec::new();
+    for (&l, &d) in spec.s1.iter().zip(a.shape()).chain(spec.s2.iter().zip(b.shape())) {
+        if !labels.contains(&l) {
+            labels.push(l);
+            dims.push(d);
+        }
+    }
+    let total: usize = dims.iter().product::<usize>().max(1);
+    let mut out = Tensor::zeros(&out_shape);
+    let pos = |l: Label| labels.iter().position(|&x| x == l).unwrap();
+    for flat in 0..total {
+        // decode assignment
+        let mut assign = vec![0usize; labels.len()];
+        let mut rem = flat;
+        for i in (0..labels.len()).rev() {
+            assign[i] = rem % dims[i];
+            rem /= dims[i];
+        }
+        let ai: Vec<usize> = spec.s1.iter().map(|&l| assign[pos(l)]).collect();
+        let bi: Vec<usize> = spec.s2.iter().map(|&l| assign[pos(l)]).collect();
+        let oi: Vec<usize> = spec.s3.iter().map(|&l| assign[pos(l)]).collect();
+        let mut oflat = 0usize;
+        for (x, &d) in oi.iter().zip(&out_shape) {
+            oflat = oflat * d + x;
+        }
+        out.data_mut()[oflat] += a.at(&ai) * b.at(&bi);
+    }
+    out
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    /// Brute-force reference: iterate every (output ∪ summed) index tuple.
-    pub fn einsum_naive(spec: &EinSpec, a: &Tensor, b: &Tensor) -> Tensor {
-        let out_shape = spec.output_shape(a.shape(), b.shape()).unwrap();
-        // label -> dim
-        let mut labels: Vec<Label> = Vec::new();
-        let mut dims: Vec<usize> = Vec::new();
-        for (&l, &d) in spec.s1.iter().zip(a.shape()).chain(spec.s2.iter().zip(b.shape())) {
-            if !labels.contains(&l) {
-                labels.push(l);
-                dims.push(d);
-            }
-        }
-        let total: usize = dims.iter().product::<usize>().max(1);
-        let mut out = Tensor::zeros(&out_shape);
-        let pos = |l: Label| labels.iter().position(|&x| x == l).unwrap();
-        for flat in 0..total {
-            // decode assignment
-            let mut assign = vec![0usize; labels.len()];
-            let mut rem = flat;
-            for i in (0..labels.len()).rev() {
-                assign[i] = rem % dims[i];
-                rem /= dims[i];
-            }
-            let ai: Vec<usize> = spec.s1.iter().map(|&l| assign[pos(l)]).collect();
-            let bi: Vec<usize> = spec.s2.iter().map(|&l| assign[pos(l)]).collect();
-            let oi: Vec<usize> = spec.s3.iter().map(|&l| assign[pos(l)]).collect();
-            let mut oflat = 0usize;
-            for (x, &d) in oi.iter().zip(&out_shape) {
-                oflat = oflat * d + x;
-            }
-            out.data_mut()[oflat] += a.at(&ai) * b.at(&bi);
-        }
-        out
-    }
 
     fn check(sig: &str, a_shape: &[usize], b_shape: &[usize]) {
         let spec = EinSpec::parse(sig);
@@ -391,7 +354,7 @@ mod tests {
 
     #[test]
     fn parallel_batched_path() {
-        // bsz large, small per-batch gemms → exercises the rayon batch path
+        // bsz large, small per-batch gemms → exercises the parallel batch path
         check("aij,ajk->aik", &[300, 4, 4], &[300, 4, 4]);
     }
 

@@ -5,14 +5,12 @@
 //! with scoped threads; the innermost `j` loop is written so LLVM
 //! auto-vectorises it (contiguous FMA over the output row).
 
-use crate::util::par_band_zip;
+use crate::util::{par_band_zip, PAR_GEMM_MIN_FLOP};
 
 /// Cache block along the contraction dimension (fits a few rows of B in L1/L2).
 const KC: usize = 256;
 /// Cache block along the output columns (B panel = KC·NC·8 bytes ≤ L2).
 const NC: usize = 512;
-/// Below this many total flops, the thread fork overhead dominates — run serially.
-const PAR_FLOP_THRESHOLD: usize = 1 << 17;
 
 /// `C = A · B` into a fresh buffer. `a` is `m×k` row-major, `b` is `k×n`.
 pub fn gemm(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
@@ -39,7 +37,7 @@ pub fn gemm_into(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usi
             }
             *ci += acc;
         };
-        if m * k >= PAR_FLOP_THRESHOLD {
+        if m * k >= PAR_GEMM_MIN_FLOP {
             par_band_zip(c, 1, a, k, |_, cb, ab| {
                 for (ci, arow) in cb.iter_mut().zip(ab.chunks(k)) {
                     matvec_row(ci, arow);
@@ -81,7 +79,7 @@ pub fn gemm_into(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usi
         }
     };
 
-    if m * n * k >= PAR_FLOP_THRESHOLD && m > 1 {
+    if m * n * k >= PAR_GEMM_MIN_FLOP && m > 1 {
         par_band_zip(c, n, a, k, |_, cb, ab| body(cb, ab));
     } else {
         body(c, a);
@@ -138,7 +136,7 @@ mod tests {
 
     #[test]
     fn parallel_path() {
-        check(200, 200, 200); // above PAR_FLOP_THRESHOLD
+        check(200, 200, 200); // above PAR_GEMM_MIN_FLOP
     }
 
     #[test]

@@ -11,11 +11,23 @@
 //! [`EinSpec`] carries the three ordered label lists; [`einsum`] evaluates
 //! a spec on dense tensors by reduction to batched GEMM with fast paths
 //! for element-wise, scale/reduce and broadcast shapes.
+//!
+//! Two evaluation paths share the GEMM core:
+//!
+//! * [`einsum`] — the allocating *interpreter* path (one fresh tensor per
+//!   step); simple, independently tested, and kept as the reference
+//!   oracle for the compiled executor.
+//! * [`einsum_into`] / [`EinsumPlan`] — the *write-into* path used by
+//!   [`crate::exec`]: gathers, pre-sums and permutations are fused into
+//!   strided passes over reused [`EinScratch`] buffers and the result is
+//!   written into a caller-provided (typically pooled) buffer.
 
 mod exec;
 mod gemm;
+mod plan;
 mod spec;
 
-pub use exec::{einsum, reduce_sum};
+pub use exec::{einsum, einsum_naive, reduce_sum};
 pub use gemm::{gemm, gemm_into};
+pub use plan::{einsum_into, EinScratch, EinsumPlan};
 pub use spec::{EinSpec, Label};

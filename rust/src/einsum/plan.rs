@@ -1,0 +1,626 @@
+//! Write-into einsum: a contraction compiled once per `(spec, shapes)`
+//! pair and then executed into caller-provided buffers — the
+//! allocation-free core of the compiled executor ([`crate::exec`]).
+//!
+//! Where the interpreter path ([`super::exec::einsum`]) materialises a
+//! fresh tensor for every `dedup` / `presum` / `to_order` step, an
+//! [`EinsumPlan`] resolves all of that at *compile* time into three
+//! strided passes over reused scratch:
+//!
+//! 1. **gather** each operand (diagonal extraction via combined strides,
+//!    private-label pre-summation, and permutation to GEMM order fused
+//!    into one strided sweep),
+//! 2. **batched GEMM** into scratch (or straight into the output buffer
+//!    when no final permutation is needed),
+//! 3. **permute** the `[batch, M, N]` product into the requested output
+//!    order with one strided read / contiguous write.
+//!
+//! After warm-up no step allocates: scratch buffers grow to their peak
+//! size once and are reused on every subsequent execution.
+
+use super::exec::has_distinct;
+use super::gemm::gemm_into;
+use super::spec::{EinSpec, Label};
+use crate::tensor::{row_major_strides, Tensor};
+use crate::util::{par_band_zip2, PAR_BATCH_SLICE_MAX_FLOP, PAR_BATCH_TOTAL_MIN_FLOP};
+
+/// Reusable scratch for [`einsum_into`] / [`EinsumPlan::run`]: two
+/// operand staging buffers, the pre-permutation product buffer, and the
+/// odometer index vector. All grow monotonically and are reused across
+/// calls, so a warmed-up scratch never allocates.
+#[derive(Default)]
+pub struct EinScratch {
+    a: Vec<f64>,
+    b: Vec<f64>,
+    c: Vec<f64>,
+    idx: Vec<usize>,
+}
+
+/// One fused gather: reads a strided (possibly diagonal) view of the
+/// source operand, sums out the private ("dead") axes, and writes the
+/// surviving axes in target order. Every destination slot is assigned
+/// (never accumulated into), so destination buffers need no pre-zeroing.
+struct Gather {
+    /// destination shape (target order)
+    out_dims: Vec<usize>,
+    /// source stride per destination axis (diagonal repeats pre-summed)
+    out_strides: Vec<usize>,
+    /// summed-out axes: dims and source strides
+    dead_dims: Vec<usize>,
+    dead_strides: Vec<usize>,
+    /// Π dead_dims (1 for the empty product; 0 if any dead axis is
+    /// empty, in which case the sum is the empty sum, 0.0)
+    dead_total: usize,
+    /// Π out_dims — the destination length
+    n_out: usize,
+}
+
+impl Gather {
+    fn new(op: &Operand, target: &[usize]) -> Gather {
+        let out_dims: Vec<usize> = target.iter().map(|&i| op.dims[i]).collect();
+        let out_strides: Vec<usize> = target.iter().map(|&i| op.strides[i]).collect();
+        let dead_dims: Vec<usize> = op.dead.iter().map(|&i| op.dims[i]).collect();
+        let dead_strides: Vec<usize> = op.dead.iter().map(|&i| op.strides[i]).collect();
+        let dead_total = dead_dims.iter().product::<usize>();
+        let n_out = out_dims.iter().product();
+        Gather { out_dims, out_strides, dead_dims, dead_strides, dead_total, n_out }
+    }
+
+    /// `dst[target multi-index] = Σ_{dead} src[strided index]`. `dst`
+    /// must hold exactly `n_out` elements; `idx` is odometer scratch.
+    fn run(&self, src: &[f64], dst: &mut [f64], idx: &mut Vec<usize>) {
+        debug_assert_eq!(dst.len(), self.n_out);
+        if self.n_out == 0 {
+            return;
+        }
+        let rank = self.out_dims.len();
+        let drank = self.dead_dims.len();
+        idx.clear();
+        idx.resize(rank + drank, 0);
+        let (oidx, didx) = idx.split_at_mut(rank);
+        let mut base = 0usize;
+        for slot in dst.iter_mut() {
+            let mut s = 0.0;
+            if drank == 0 {
+                s = src[base];
+            } else {
+                // odometer over the dead axes with a running offset; a
+                // full sweep wraps didx back to all zeros and off to 0
+                let mut off = 0usize;
+                for _ in 0..self.dead_total {
+                    s += src[base + off];
+                    for ax in (0..drank).rev() {
+                        didx[ax] += 1;
+                        off += self.dead_strides[ax];
+                        if didx[ax] < self.dead_dims[ax] {
+                            break;
+                        }
+                        off -= self.dead_strides[ax] * self.dead_dims[ax];
+                        didx[ax] = 0;
+                    }
+                }
+            }
+            *slot = s;
+            // advance the destination odometer, tracking the source base
+            for ax in (0..rank).rev() {
+                oidx[ax] += 1;
+                base += self.out_strides[ax];
+                if oidx[ax] < self.out_dims[ax] {
+                    break;
+                }
+                base -= self.out_strides[ax] * self.out_dims[ax];
+                oidx[ax] = 0;
+            }
+        }
+    }
+}
+
+/// Compile-time analysis of one operand: distinct labels with their dims
+/// and combined (diagonal) strides, split into surviving and pre-summed
+/// axes.
+struct Operand {
+    /// distinct labels, first-occurrence order
+    labels: Vec<Label>,
+    dims: Vec<usize>,
+    /// source stride per distinct label (repeats summed → diagonal view)
+    strides: Vec<usize>,
+    /// indices (into `labels`) of axes that survive the pre-sum
+    kept: Vec<usize>,
+    /// indices of axes private to this operand and absent from the output
+    dead: Vec<usize>,
+    /// the operand had no repeated labels (no diagonal extraction)
+    no_repeats: bool,
+}
+
+impl Operand {
+    fn analyze(labels: &[Label], shape: &[usize], other: &[Label], out: &[Label]) -> Operand {
+        let strides_in = row_major_strides(shape);
+        let mut distinct: Vec<Label> = Vec::new();
+        for &l in labels {
+            if !distinct.contains(&l) {
+                distinct.push(l);
+            }
+        }
+        let no_repeats = distinct.len() == labels.len();
+        let mut dims = Vec::with_capacity(distinct.len());
+        let mut strides = Vec::with_capacity(distinct.len());
+        for &l in &distinct {
+            let mut s = 0usize;
+            let mut d = 0usize;
+            for (pos, &ll) in labels.iter().enumerate() {
+                if ll == l {
+                    s += strides_in[pos];
+                    d = shape[pos];
+                }
+            }
+            dims.push(d);
+            strides.push(s);
+        }
+        let mut kept = Vec::new();
+        let mut dead = Vec::new();
+        for (i, &l) in distinct.iter().enumerate() {
+            if other.contains(&l) || out.contains(&l) {
+                kept.push(i);
+            } else {
+                dead.push(i);
+            }
+        }
+        Operand { labels: distinct, dims, strides, kept, dead, no_repeats }
+    }
+
+    /// Position of `l` among the distinct labels (must exist).
+    fn pos(&self, l: Label) -> usize {
+        self.labels.iter().position(|&x| x == l).expect("label not in operand")
+    }
+}
+
+enum Kind {
+    /// `s1 == s2 == s3` with distinct labels: `out = a ⊙ b`.
+    Elementwise,
+    /// The right operand reduces to a scalar: `out = gather(a) · Σ(b)`.
+    ScaleA { a_gather: Gather, b_sum: Gather },
+    /// The left operand reduces to a scalar: `out = gather(b) · Σ(a)`.
+    ScaleB { b_gather: Gather, a_sum: Gather },
+    /// The general case: gather to `[batch, M, K]` × `[batch, K, N]`,
+    /// batched GEMM, permute to the requested output order.
+    Gemm {
+        /// `None` when the operand is already in GEMM order (borrowed).
+        a_gather: Option<Gather>,
+        b_gather: Option<Gather>,
+        bsz: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+        /// no label is contracted (outer/broadcast shapes)
+        k_empty: bool,
+        /// source strides into the `[batch, M, N]` product per output
+        /// axis; `None` when the product order already matches `s3`
+        /// (GEMM then writes straight into the output buffer).
+        out_read: Option<Vec<usize>>,
+    },
+}
+
+/// A contraction compiled for fixed operand shapes: run it any number of
+/// times against tensors of those shapes with [`EinsumPlan::run`].
+pub struct EinsumPlan {
+    out_shape: Vec<usize>,
+    /// Π over all distinct label dims — the iteration-space flop proxy.
+    iter_space: usize,
+    kind: Kind,
+}
+
+impl EinsumPlan {
+    /// Compile `spec` for the given operand shapes. Panics on rank or
+    /// dimension mismatches (same contract as [`super::einsum`]).
+    pub fn new(spec: &EinSpec, a_shape: &[usize], b_shape: &[usize]) -> EinsumPlan {
+        let out_shape = spec
+            .output_shape(a_shape, b_shape)
+            .unwrap_or_else(|e| panic!("einsum shape error: {}", e));
+
+        // flop proxy: product of every distinct label's dimension
+        let mut seen: Vec<Label> = Vec::new();
+        let mut iter_space = 1usize;
+        for (&l, &d) in spec.s1.iter().zip(a_shape).chain(spec.s2.iter().zip(b_shape)) {
+            if !seen.contains(&l) {
+                seen.push(l);
+                iter_space = iter_space.saturating_mul(d);
+            }
+        }
+
+        if spec.is_elementwise() && has_distinct(&spec.s1) {
+            return EinsumPlan { out_shape, iter_space, kind: Kind::Elementwise };
+        }
+
+        let a_op = Operand::analyze(&spec.s1, a_shape, &spec.s2, &spec.s3);
+        let b_op = Operand::analyze(&spec.s2, b_shape, &spec.s1, &spec.s3);
+        let a_kept: Vec<Label> = a_op.kept.iter().map(|&i| a_op.labels[i]).collect();
+        let b_kept: Vec<Label> = b_op.kept.iter().map(|&i| b_op.labels[i]).collect();
+
+        // A scalar operand turns the contraction into a gather + scale.
+        // (When one side keeps no labels, every output label lives on the
+        // other side — see the presum invariants in super::exec.)
+        if b_kept.is_empty() {
+            let target: Vec<usize> = spec.s3.iter().map(|&l| a_op.pos(l)).collect();
+            let kind = Kind::ScaleA {
+                a_gather: Gather::new(&a_op, &target),
+                b_sum: Gather::new(&b_op, &[]),
+            };
+            return EinsumPlan { out_shape, iter_space, kind };
+        }
+        if a_kept.is_empty() {
+            let target: Vec<usize> = spec.s3.iter().map(|&l| b_op.pos(l)).collect();
+            let kind = Kind::ScaleB {
+                b_gather: Gather::new(&b_op, &target),
+                a_sum: Gather::new(&a_op, &[]),
+            };
+            return EinsumPlan { out_shape, iter_space, kind };
+        }
+
+        // Classify surviving labels exactly as the interpreter does.
+        let batch: Vec<Label> = spec
+            .s3
+            .iter()
+            .filter(|l| a_kept.contains(l) && b_kept.contains(l))
+            .copied()
+            .collect();
+        let m_labels: Vec<Label> = a_kept
+            .iter()
+            .filter(|l| spec.s3.contains(l) && !b_kept.contains(l))
+            .copied()
+            .collect();
+        let n_labels: Vec<Label> = b_kept
+            .iter()
+            .filter(|l| spec.s3.contains(l) && !a_kept.contains(l))
+            .copied()
+            .collect();
+        let k_labels: Vec<Label> = a_kept
+            .iter()
+            .filter(|l| b_kept.contains(l) && !spec.s3.contains(l))
+            .copied()
+            .collect();
+
+        let dim_of = |l: Label| -> usize {
+            a_op.labels
+                .iter()
+                .position(|&ll| ll == l)
+                .map(|p| a_op.dims[p])
+                .unwrap_or_else(|| b_op.dims[b_op.pos(l)])
+        };
+
+        let mut a_order: Vec<Label> = batch.clone();
+        a_order.extend(&m_labels);
+        a_order.extend(&k_labels);
+        let mut b_order: Vec<Label> = batch.clone();
+        b_order.extend(&k_labels);
+        b_order.extend(&n_labels);
+        let a_target: Vec<usize> = a_order.iter().map(|&l| a_op.pos(l)).collect();
+        let b_target: Vec<usize> = b_order.iter().map(|&l| b_op.pos(l)).collect();
+
+        let identity =
+            |op: &Operand, target: &[usize]| -> bool {
+                op.no_repeats
+                    && op.dead.is_empty()
+                    && target.iter().enumerate().all(|(i, &t)| i == t)
+            };
+        let a_gather =
+            if identity(&a_op, &a_target) { None } else { Some(Gather::new(&a_op, &a_target)) };
+        let b_gather =
+            if identity(&b_op, &b_target) { None } else { Some(Gather::new(&b_op, &b_target)) };
+
+        let bsz: usize = batch.iter().map(|&l| dim_of(l)).product();
+        let m: usize = m_labels.iter().map(|&l| dim_of(l)).product();
+        let k: usize = k_labels.iter().map(|&l| dim_of(l)).product();
+        let n: usize = n_labels.iter().map(|&l| dim_of(l)).product();
+
+        let mut res_labels: Vec<Label> = batch;
+        res_labels.extend(&m_labels);
+        res_labels.extend(&n_labels);
+        let out_read = if res_labels == spec.s3 {
+            None
+        } else {
+            let res_dims: Vec<usize> = res_labels.iter().map(|&l| dim_of(l)).collect();
+            let res_strides = row_major_strides(&res_dims);
+            let strides: Vec<usize> = spec
+                .s3
+                .iter()
+                .map(|l| {
+                    let p = res_labels.iter().position(|ll| ll == l).expect("output label");
+                    res_strides[p]
+                })
+                .collect();
+            Some(strides)
+        };
+
+        let kind = Kind::Gemm {
+            a_gather,
+            b_gather,
+            bsz,
+            m,
+            k,
+            n,
+            k_empty: k_labels.is_empty(),
+            out_read,
+        };
+        EinsumPlan { out_shape, iter_space, kind }
+    }
+
+    /// The output shape this plan produces.
+    pub fn out_shape(&self) -> &[usize] {
+        &self.out_shape
+    }
+
+    /// Product of all distinct label dims — a cheap flop estimate used
+    /// by the executor's parallelism gate.
+    pub fn iteration_space(&self) -> usize {
+        self.iter_space
+    }
+
+    /// Execute the contraction into `out` (shape-checked), reusing
+    /// `scratch`. Every element of `out` is written.
+    pub fn run(&self, a: &Tensor, b: &Tensor, out: &mut Tensor, scratch: &mut EinScratch) {
+        assert_eq!(
+            out.shape(),
+            &self.out_shape[..],
+            "einsum_into: output buffer has the wrong shape"
+        );
+        let out_data = out.data_mut();
+        match &self.kind {
+            Kind::Elementwise => {
+                for ((o, &x), &y) in out_data.iter_mut().zip(a.data()).zip(b.data()) {
+                    *o = x * y;
+                }
+            }
+            Kind::ScaleA { a_gather, b_sum } => {
+                a_gather.run(a.data(), out_data, &mut scratch.idx);
+                let mut s = [0.0f64];
+                b_sum.run(b.data(), &mut s, &mut scratch.idx);
+                if s[0] != 1.0 {
+                    for o in out_data.iter_mut() {
+                        *o *= s[0];
+                    }
+                }
+            }
+            Kind::ScaleB { b_gather, a_sum } => {
+                b_gather.run(b.data(), out_data, &mut scratch.idx);
+                let mut s = [0.0f64];
+                a_sum.run(a.data(), &mut s, &mut scratch.idx);
+                if s[0] != 1.0 {
+                    for o in out_data.iter_mut() {
+                        *o *= s[0];
+                    }
+                }
+            }
+            Kind::Gemm { a_gather, b_gather, bsz, m, k, n, k_empty, out_read } => {
+                let (bsz, m, k, n) = (*bsz, *m, *k, *n);
+                let a_data: &[f64] = match a_gather {
+                    None => a.data(),
+                    Some(gth) => {
+                        scratch.a.clear();
+                        scratch.a.resize(gth.n_out, 0.0);
+                        gth.run(a.data(), &mut scratch.a, &mut scratch.idx);
+                        &scratch.a
+                    }
+                };
+                let b_data: &[f64] = match b_gather {
+                    None => b.data(),
+                    Some(gth) => {
+                        scratch.b.clear();
+                        scratch.b.resize(gth.n_out, 0.0);
+                        gth.run(b.data(), &mut scratch.b, &mut scratch.idx);
+                        &scratch.b
+                    }
+                };
+                match out_read {
+                    None => {
+                        out_data.fill(0.0);
+                        batched_gemm(a_data, b_data, out_data, bsz, m, k, n, *k_empty);
+                    }
+                    Some(strides) => {
+                        scratch.c.clear();
+                        scratch.c.resize(bsz * m * n, 0.0);
+                        batched_gemm(a_data, b_data, &mut scratch.c, bsz, m, k, n, *k_empty);
+                        permute_read(&scratch.c, out_data, &self.out_shape, strides, &mut scratch.idx);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Evaluate `A *_(s1,s2,s3) B` into `out`, reusing `scratch` buffers.
+/// Compiles the spec on the fly — callers on a hot path should hold an
+/// [`EinsumPlan`] instead (the compiled executor does).
+pub fn einsum_into(spec: &EinSpec, a: &Tensor, b: &Tensor, out: &mut Tensor, scratch: &mut EinScratch) {
+    EinsumPlan::new(spec, a.shape(), b.shape()).run(a, b, out, scratch)
+}
+
+/// `dst[i] = src[strided(i)]`: one strided read / contiguous write pass
+/// (the write-into analogue of `Tensor::permute`).
+fn permute_read(src: &[f64], dst: &mut [f64], dims: &[usize], strides: &[usize], idx: &mut Vec<usize>) {
+    let rank = dims.len();
+    debug_assert_eq!(rank, strides.len());
+    idx.clear();
+    idx.resize(rank, 0);
+    let mut off = 0usize;
+    for slot in dst.iter_mut() {
+        *slot = src[off];
+        for ax in (0..rank).rev() {
+            idx[ax] += 1;
+            off += strides[ax];
+            if idx[ax] < dims[ax] {
+                break;
+            }
+            off -= strides[ax] * dims[ax];
+            idx[ax] = 0;
+        }
+    }
+}
+
+/// Whole-`chunk` slices of `s` — named to avoid shadowing the unstable
+/// `slice::as_chunks` (which an earlier private helper collided with).
+pub(super) fn chunks_of(s: &[f64], chunk: usize) -> std::slice::Chunks<'_, f64> {
+    s.chunks(chunk.max(1))
+}
+
+/// `C[b] = A[b] · B[b]` over `bsz` row-major batch slices, with the
+/// degenerate-shape fast paths and the small-slice parallel split shared
+/// by the interpreter and compiled einsum paths. `c` must be zeroed; all
+/// zero-size shapes leave it untouched.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn batched_gemm(
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+    bsz: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    k_empty: bool,
+) {
+    if bsz == 0 || m == 0 || n == 0 || k == 0 {
+        return; // empty contraction — c stays zero
+    }
+    if k_empty && m == 1 && n == 1 {
+        // pure batched element-wise product
+        for ((cv, av), bv) in c.iter_mut().zip(a).zip(b) {
+            *cv = av * bv;
+        }
+    } else if k_empty && n == 1 {
+        // row broadcast: C[b, m] = A[b, m] · B[b]
+        for bi in 0..bsz {
+            let bv = b[bi];
+            let arow = &a[bi * m..(bi + 1) * m];
+            let crow = &mut c[bi * m..(bi + 1) * m];
+            for (cv, av) in crow.iter_mut().zip(arow) {
+                *cv = av * bv;
+            }
+        }
+    } else {
+        // batched GEMM (with k_empty, k == 1 and GEMM degrades gracefully
+        // to a batched outer product)
+        let per = m * k * n;
+        if bsz > 1 && per < PAR_BATCH_SLICE_MAX_FLOP && bsz * per > PAR_BATCH_TOTAL_MIN_FLOP {
+            par_band_zip2(c, m * n, a, m * k, b, k * n, |_, cc, aa, bb| {
+                for ((cs, as_), bs) in cc
+                    .chunks_mut(m * n)
+                    .zip(chunks_of(aa, m * k))
+                    .zip(chunks_of(bb, k * n))
+                {
+                    gemm_into(as_, bs, cs, m, k, n);
+                }
+            });
+        } else {
+            for bi in 0..bsz {
+                gemm_into(
+                    &a[bi * m * k..(bi + 1) * m * k],
+                    &b[bi * k * n..(bi + 1) * k * n],
+                    &mut c[bi * m * n..(bi + 1) * m * n],
+                    m,
+                    k,
+                    n,
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::exec::{einsum, einsum_naive};
+    use super::*;
+
+    fn check_into(sig: &str, a_shape: &[usize], b_shape: &[usize]) {
+        let spec = EinSpec::parse(sig);
+        let a = Tensor::randn(a_shape, 31);
+        let b = Tensor::randn(b_shape, 32);
+        let want = einsum(&spec, &a, &b);
+        let naive = einsum_naive(&spec, &a, &b);
+
+        let mut scratch = EinScratch::default();
+        let plan = EinsumPlan::new(&spec, a_shape, b_shape);
+        // poisoned output buffer: every slot must be overwritten
+        let mut out = Tensor::fill(plan.out_shape(), f64::NAN);
+        plan.run(&a, &b, &mut out, &mut scratch);
+        assert!(
+            out.allclose(&want, 1e-12, 1e-12),
+            "{}: into vs einsum diff {}",
+            sig,
+            out.max_abs_diff(&want)
+        );
+        assert!(
+            out.allclose(&naive, 1e-9, 1e-9),
+            "{}: into vs naive diff {}",
+            sig,
+            out.max_abs_diff(&naive)
+        );
+        // second run with the warmed scratch must agree bit-for-bit
+        let mut out2 = Tensor::fill(plan.out_shape(), f64::NAN);
+        plan.run(&a, &b, &mut out2, &mut scratch);
+        assert_eq!(out.data(), out2.data(), "{}: scratch reuse changed the result", sig);
+    }
+
+    #[test]
+    fn matmul_family_into() {
+        check_into("ij,jk->ik", &[4, 5], &[5, 6]);
+        check_into("ji,jk->ik", &[5, 4], &[5, 6]);
+        check_into("ij,kj->ik", &[4, 5], &[6, 5]);
+        check_into("ij,j->i", &[4, 5], &[5]);
+        check_into("i,i->", &[7], &[7]);
+    }
+
+    #[test]
+    fn elementwise_outer_diag_into() {
+        check_into("i,j->ij", &[3], &[4]);
+        check_into("ij,ij->ij", &[3, 4], &[3, 4]);
+        check_into("ij,i->ij", &[3, 4], &[3]);
+        check_into("ii,->i", &[4, 4], &[]);
+        check_into("ii,->", &[4, 4], &[]);
+        check_into("iji,j->ij", &[3, 4, 3], &[4]);
+    }
+
+    #[test]
+    fn presum_scalar_permuted_into() {
+        check_into("ij,k->i", &[3, 4], &[5]);
+        check_into("ij,->ij", &[3, 4], &[]);
+        check_into(",ij->ij", &[], &[3, 4]);
+        check_into(",->", &[], &[]);
+        check_into("ij,jk->ki", &[3, 4], &[4, 5]);
+        check_into("ijk,->kji", &[2, 3, 4], &[]);
+        check_into("ij,kl->ljki", &[2, 3], &[4, 5]);
+        check_into("aij,ajk->aik", &[3, 2, 4], &[3, 4, 2]);
+    }
+
+    #[test]
+    fn parallel_batched_into() {
+        check_into("aij,ajk->aik", &[300, 4, 4], &[300, 4, 4]);
+    }
+
+    #[test]
+    fn einsum_into_free_function() {
+        let spec = EinSpec::parse("ij,jk->ik");
+        let a = Tensor::randn(&[3, 4], 1);
+        let b = Tensor::randn(&[4, 5], 2);
+        let mut out = Tensor::zeros(&[3, 5]);
+        let mut scratch = EinScratch::default();
+        einsum_into(&spec, &a, &b, &mut out, &mut scratch);
+        assert!(out.allclose(&einsum(&spec, &a, &b), 1e-12, 1e-12));
+    }
+
+    #[test]
+    #[should_panic(expected = "wrong shape")]
+    fn wrong_out_shape_panics() {
+        let spec = EinSpec::parse("ij,jk->ik");
+        let a = Tensor::randn(&[3, 4], 1);
+        let b = Tensor::randn(&[4, 5], 2);
+        let mut out = Tensor::zeros(&[5, 3]);
+        einsum_into(&spec, &a, &b, &mut out, &mut EinScratch::default());
+    }
+
+    #[test]
+    fn iteration_space_estimates() {
+        let p = EinsumPlan::new(&EinSpec::parse("ij,jk->ik"), &[4, 5], &[5, 6]);
+        assert_eq!(p.iteration_space(), 4 * 5 * 6);
+        let p = EinsumPlan::new(&EinSpec::parse("i,i->i"), &[7], &[7]);
+        assert_eq!(p.iteration_space(), 7);
+    }
+}

@@ -1,0 +1,95 @@
+//! Minimal `anyhow`-shaped error plumbing. The offline build carries no
+//! external dependencies, so the handful of idioms the service layer
+//! uses (`anyhow!`, `bail!`, `Context`, `Result`) are provided here with
+//! the same spelling; swapping the real `anyhow` back in is a one-line
+//! import change per module.
+
+use std::fmt;
+
+/// A message-carrying error (the `anyhow::Error` role).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error { msg: m.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Drop-in for `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error (the `anyhow::Context` role).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {}", c, e)))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {}", f(), e)))
+    }
+}
+
+/// Build an [`Error`] from a format string (the `anyhow::anyhow!` role).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::error::Error::msg(format!($($arg)*)) };
+}
+
+/// Early-return an [`Error`] (the `anyhow::bail!` role).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::error::Error::msg(format!($($arg)*))) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anyhow_macro_formats() {
+        let e = crate::anyhow!("bad thing {}", 7);
+        assert_eq!(e.to_string(), "bad thing 7");
+    }
+
+    #[test]
+    fn bail_early_returns() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                crate::bail!("nope: {}", 42);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).unwrap_err().to_string(), "nope: 42");
+    }
+
+    #[test]
+    fn context_wraps_source_error() {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        let e = r.with_context(|| format!("reading {}", "x")).unwrap_err();
+        assert!(e.to_string().contains("reading x"));
+        assert!(e.to_string().contains("gone"));
+    }
+}

@@ -1,6 +1,15 @@
 //! DAG evaluation: a memoizing interpreter plus reusable evaluation
-//! [`Plan`]s (precomputed topological order + buffer lifetimes) for the
-//! benchmark hot paths.
+//! [`Plan`]s (precomputed topological order + buffer lifetimes).
+//!
+//! Two executors coexist deliberately:
+//!
+//! * [`Plan`] (here) — the allocating *interpreter*: the reference
+//!   semantics, validated against brute-force einsum and
+//!   finite-difference oracles, and itself the oracle the compiled
+//!   executor is differentially tested against.
+//! * [`crate::exec::CompiledPlan`] — the pooled-buffer, level-parallel
+//!   *hot path*. [`eval_many`] (and therefore [`eval`]) route through it;
+//!   the FD helpers below stay on the interpreter on purpose.
 
 use crate::ir::{Graph, NodeId, Op};
 use crate::tensor::Tensor;
@@ -36,10 +45,10 @@ pub fn eval(g: &Graph, root: NodeId, env: &Env) -> Tensor {
     eval_many(g, &[root], env).pop().unwrap()
 }
 
-/// Evaluate several roots sharing intermediate results.
+/// Evaluate several roots sharing intermediate results. Routes through
+/// the compiled executor; use [`Plan`] directly for the interpreter.
 pub fn eval_many(g: &Graph, roots: &[NodeId], env: &Env) -> Vec<Tensor> {
-    let plan = Plan::new(g, roots);
-    plan.run(g, env)
+    crate::exec::CompiledPlan::new(g, roots).run(env)
 }
 
 /// A reusable evaluation plan: topological order restricted to the

@@ -14,7 +14,7 @@
 //!   Rust (fixed AOT shapes only).
 
 use crate::baselines::PerEntryHessian;
-use crate::eval::Plan;
+use crate::exec::CompiledPlan;
 use crate::problems::{
     logistic_regression, matrix_factorization, neural_net, newton_step_compressed,
     newton_step_full, Workload,
@@ -67,12 +67,11 @@ pub fn fig2(problems: &[&'static str], sizes: &[usize], min_secs: f64) -> Vec<Ro
         for &n in sizes {
             let mut w = workloads_for(p, n);
             let grad = w.gradient();
-            let plan = Plan::new(&w.g, &[w.loss, grad]);
+            let plan = CompiledPlan::new(&w.g, &[w.loss, grad]);
             let env = w.env.clone();
-            let g = &w.g;
             let (secs, runs) = time_median(
                 || {
-                    let out = plan.run(g, &env);
+                    let out = plan.run(&env);
                     std::hint::black_box(out);
                 },
                 5,
@@ -149,10 +148,10 @@ pub fn fig3(
             {
                 let mut w = workloads_for(p, n);
                 let h = w.hessian();
-                let plan = Plan::new(&w.g, &[h]);
+                let plan = CompiledPlan::new(&w.g, &[h]);
                 let (secs, runs) = time_median(
                     || {
-                        std::hint::black_box(plan.run(&w.g, &w.env));
+                        std::hint::black_box(plan.run(&w.env));
                     },
                     3,
                     min_secs,
@@ -163,10 +162,10 @@ pub fn fig3(
             {
                 let mut w = workloads_for(p, n);
                 let h = w.hessian_cross_country();
-                let plan = Plan::new(&w.g, &[h]);
+                let plan = CompiledPlan::new(&w.g, &[h]);
                 let (secs, runs) = time_median(
                     || {
-                        std::hint::black_box(plan.run(&w.g, &w.env));
+                        std::hint::black_box(plan.run(&w.env));
                     },
                     3,
                     min_secs,
@@ -190,10 +189,10 @@ pub fn fig3(
                     "ours(compressed=n/a)".into()
                 };
                 let node = comp.eval_node();
-                let plan = Plan::new(&w.g, &[node]);
+                let plan = CompiledPlan::new(&w.g, &[node]);
                 let (secs, runs) = time_median(
                     || {
-                        std::hint::black_box(plan.run(&w.g, &w.env));
+                        std::hint::black_box(plan.run(&w.env));
                     },
                     3,
                     min_secs,

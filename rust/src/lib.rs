@@ -11,13 +11,21 @@
 //!   expression DAG in Einstein notation and the differentiation modes
 //!   (Theorems 5–10), cross-country reordering (§3.3) and derivative
 //!   compression (§3.3).
-//! * [`tensor`], [`einsum`], [`eval`], [`solve`] — the dense evaluation
-//!   substrate (the NumPy role in the paper's experiments).
+//! * [`tensor`], [`einsum`], [`eval`], [`exec`], [`solve`] — the dense
+//!   evaluation substrate (the NumPy role in the paper's experiments).
+//!   Two executors coexist by design: the [`eval`] *interpreter* is the
+//!   reference oracle, while the [`exec`] *compiled* engine is the hot
+//!   path — write-into einsums ([`einsum::einsum_into`]), a
+//!   shape-bucketed buffer pool that recycles intermediates at their
+//!   last use, a plan cache keyed by graph fingerprint, and parallel
+//!   execution of independent DAG levels. `tests/exec_equivalence.rs`
+//!   pins the two against each other and against brute force.
 //! * [`problems`], [`baselines`] — the paper's three benchmark workloads
 //!   and the per-entry framework baseline (§4).
 //! * [`runtime`], [`coordinator`] — the PJRT bridge that loads the
-//!   AOT-compiled JAX/Pallas artifacts and the derivative-evaluation
-//!   service built on top.
+//!   AOT-compiled JAX/Pallas artifacts (behind the `pjrt` cargo
+//!   feature) and the derivative-evaluation service built on top; engine
+//!   entries serve requests through cached [`exec::CompiledPlan`]s.
 //!
 //! ## Quickstart
 //!
@@ -47,7 +55,9 @@ pub mod autodiff;
 pub mod baselines;
 pub mod coordinator;
 pub mod einsum;
+pub mod error;
 pub mod eval;
+pub mod exec;
 pub mod figures;
 pub mod ir;
 pub mod parser;
@@ -65,8 +75,9 @@ pub mod prelude {
     pub use crate::autodiff::forward::forward_derivative;
     pub use crate::autodiff::hessian::{hessian, hessian_compressed, hessian_vector_product, jacobian};
     pub use crate::autodiff::reverse::{reverse_derivative, reverse_gradient};
-    pub use crate::einsum::{einsum, EinSpec};
+    pub use crate::einsum::{einsum, einsum_into, EinScratch, EinSpec, EinsumPlan};
     pub use crate::eval::{eval, eval_many, Env, Plan};
+    pub use crate::exec::{global_plan_cache, CompiledPlan, PlanCache};
     pub use crate::ir::{Elem, Graph, NodeId, Op};
     pub use crate::simplify::simplify;
     pub use crate::tensor::Tensor;

@@ -10,10 +10,10 @@
 //! tensorcalc serve [--requests N]           coordinator demo with metrics
 //! ```
 
-use anyhow::{bail, Result};
 use tensorcalc::coordinator::{Coordinator, EngineEntry};
-use tensorcalc::eval::Plan;
+use tensorcalc::error::Result;
 use tensorcalc::figures;
+use tensorcalc::{anyhow, bail};
 use tensorcalc::ir::{Elem, Graph};
 use tensorcalc::prelude::*;
 use tensorcalc::problems::{logistic_regression, matrix_factorization, neural_net};
@@ -206,7 +206,7 @@ fn artifacts(args: &Args) -> Result<()> {
         .get("dir")
         .map(std::path::PathBuf::from)
         .or_else(tensorcalc::runtime::artifacts_dir)
-        .ok_or_else(|| anyhow::anyhow!("no artifacts found — run `make artifacts`"))?;
+        .ok_or_else(|| anyhow!("no artifacts found — run `make artifacts`"))?;
     let mut rt = tensorcalc::runtime::Runtime::open(&dir)?;
     println!("artifacts in {:?}:", dir);
     for name in rt.names() {
@@ -239,22 +239,22 @@ fn serve(args: &Args) -> Result<()> {
     let (m, n) = (256usize, 128usize);
     let mut c = Coordinator::new(1024);
 
-    // engine-backed gradient entry
+    // engine-backed gradient entry (compiled plan via the global cache)
     {
         let mut w = logistic_regression(m, n);
         let grad = w.gradient();
-        let plan = Plan::new(&w.g, &[w.loss, grad]);
+        let roots = [w.loss, grad];
         c.register_engine(
             "logreg_grad_engine",
-            EngineEntry {
-                graph: w.g,
-                plan,
-                inputs: vec![
+            EngineEntry::compiled(
+                &w.g,
+                &roots,
+                vec![
                     ("X".into(), vec![m, n]),
                     ("y".into(), vec![m]),
                     ("w".into(), vec![n]),
                 ],
-            },
+            ),
         );
     }
     // PJRT-backed entries

@@ -4,6 +4,31 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
 
+// ---------------------------------------------------------------------------
+// Parallelism thresholds, shared by the GEMM kernel (`crate::einsum::gemm`),
+// the batched einsum paths (`crate::einsum`) and the compiled executor
+// (`crate::exec`). All counts are in flops ≈ multiply-adds; the values were
+// chosen so the scoped-thread fork cost (~10 µs on this testbed) stays well
+// under 10 % of the forked work.
+// ---------------------------------------------------------------------------
+
+/// Below this many flops a single GEMM runs serially — the fork overhead
+/// would dominate.
+pub const PAR_GEMM_MIN_FLOP: usize = 1 << 17;
+
+/// Batched contractions parallelise over *batch slices* only when each
+/// slice is smaller than this (bigger slices parallelise internally via
+/// the GEMM row bands instead).
+pub const PAR_BATCH_SLICE_MAX_FLOP: usize = 1 << 16;
+
+/// … and only when the whole batch is at least this big; otherwise the
+/// batch loop runs serially.
+pub const PAR_BATCH_TOTAL_MIN_FLOP: usize = 1 << 16;
+
+/// A DAG level of the compiled executor forks worker threads only when
+/// the level's estimated flops exceed this.
+pub const PAR_LEVEL_MIN_FLOP: usize = 1 << 17;
+
 /// Number of worker threads (overridable with `TENSORCALC_THREADS`).
 pub fn num_threads() -> usize {
     static CACHE: AtomicUsize = AtomicUsize::new(0);

@@ -1,0 +1,370 @@
+//! Differential verification of the compiled executor (in-crate seeded
+//! generators — the offline build has no proptest):
+//!
+//! * `CompiledPlan::run == Plan::run == einsum_naive` to 1e-12 over
+//!   randomized `EinSpec`s and over curated spec families
+//!   (matmul / diagonal / presum / permuted / scalar),
+//! * `einsum_into` against the allocating `einsum` on the same specs,
+//! * pool-reuse regressions: the same plan run repeatedly must neither
+//!   alias stale buffers nor drift, and after warm-up the pool must stop
+//!   allocating (beyond the root buffers that leave with the caller),
+//! * finite-difference oracles for the compiled path: gradients and
+//!   Hessians of all three `problems::*` workloads, where the FD side
+//!   runs on the *interpreter* and the symbolic side on `CompiledPlan`.
+
+use tensorcalc::autodiff::reverse::reverse_derivative;
+use tensorcalc::einsum::{einsum, einsum_into, einsum_naive, EinScratch, EinSpec, Label};
+use tensorcalc::eval::{fd_gradient, fd_jacobian, Env, Plan};
+use tensorcalc::exec::{CompiledPlan, PlanCache};
+use tensorcalc::ir::{Elem, Graph, NodeId, Op};
+use tensorcalc::problems::{logistic_regression, matrix_factorization, neural_net};
+use tensorcalc::tensor::{Tensor, XorShift};
+
+/// Generate a random valid spec + matching operand shapes (diagonals,
+/// private labels, permuted outputs and scalar operands all reachable).
+fn random_spec(rng: &mut XorShift) -> (EinSpec, Vec<usize>, Vec<usize>) {
+    let n_labels = 1 + rng.below(4);
+    let dims: Vec<usize> = (0..n_labels).map(|_| 1 + rng.below(4)).collect();
+    let ra = 1 + rng.below(3);
+    let rb = rng.below(3);
+    let s1: Vec<Label> = (0..ra).map(|_| rng.below(n_labels) as Label).collect();
+    let s2: Vec<Label> = (0..rb).map(|_| rng.below(n_labels) as Label).collect();
+    let mut used: Vec<Label> = Vec::new();
+    for &l in s1.iter().chain(&s2) {
+        if !used.contains(&l) {
+            used.push(l);
+        }
+    }
+    let mut s3 = Vec::new();
+    for &l in &used {
+        if rng.below(2) == 0 {
+            s3.push(l);
+        }
+    }
+    for i in (1..s3.len()).rev() {
+        let j = rng.below(i + 1);
+        s3.swap(i, j);
+    }
+    let a_shape: Vec<usize> = s1.iter().map(|&l| dims[l as usize]).collect();
+    let b_shape: Vec<usize> = s2.iter().map(|&l| dims[l as usize]).collect();
+    (EinSpec::new(s1, s2, s3), a_shape, b_shape)
+}
+
+/// Check one spec across all four evaluators: naive oracle, interpreter
+/// einsum, write-into einsum, and a single-Mul graph on both executors.
+fn check_all_paths(case: u64, spec: &EinSpec, sa: &[usize], sb: &[usize]) {
+    let a = Tensor::randn(sa, 9000 + case);
+    let b = Tensor::randn(sb, 10000 + case);
+    let naive = einsum_naive(spec, &a, &b);
+    let interp = einsum(spec, &a, &b);
+    assert!(
+        interp.allclose(&naive, 1e-12, 1e-12),
+        "case {}: einsum vs naive on {}: diff {}",
+        case,
+        spec,
+        interp.max_abs_diff(&naive)
+    );
+
+    // write-into path, with a poisoned output buffer
+    let mut out = Tensor::fill(naive.shape(), f64::NAN);
+    let mut scratch = EinScratch::default();
+    einsum_into(spec, &a, &b, &mut out, &mut scratch);
+    assert!(
+        out.allclose(&naive, 1e-12, 1e-12),
+        "case {}: einsum_into vs naive on {}: diff {}",
+        case,
+        spec,
+        out.max_abs_diff(&naive)
+    );
+
+    // graph with one Mul node through both executors
+    let mut g = Graph::new();
+    let av = g.var("A", sa);
+    let bv = g.var("B", sb);
+    let y = g.mul(av, bv, spec.clone());
+    let mut env = Env::new();
+    env.insert("A", a);
+    env.insert("B", b);
+    let compiled = CompiledPlan::new(&g, &[y]).run(&env);
+    let interp_plan = Plan::new(&g, &[y]).run(&g, &env);
+    assert!(
+        compiled[0].allclose(&naive, 1e-12, 1e-12),
+        "case {}: CompiledPlan vs naive on {}: diff {}",
+        case,
+        spec,
+        compiled[0].max_abs_diff(&naive)
+    );
+    assert!(
+        compiled[0].allclose(&interp_plan[0], 1e-12, 1e-12),
+        "case {}: CompiledPlan vs Plan on {}: diff {}",
+        case,
+        spec,
+        compiled[0].max_abs_diff(&interp_plan[0])
+    );
+}
+
+#[test]
+fn prop_compiled_einsum_matches_oracles_on_200_random_specs() {
+    let mut rng = XorShift::new(4242);
+    for case in 0..200 {
+        let (spec, sa, sb) = random_spec(&mut rng);
+        check_all_paths(case, &spec, &sa, &sb);
+    }
+}
+
+#[test]
+fn curated_spec_families_match() {
+    let families: &[(&str, &[usize], &[usize])] = &[
+        // matmul family
+        ("ij,jk->ik", &[4, 5], &[5, 6]),
+        ("ji,jk->ik", &[5, 4], &[5, 6]),
+        ("ij,kj->ik", &[4, 5], &[6, 5]),
+        ("ij,j->i", &[4, 5], &[5]),
+        ("i,i->", &[7], &[7]),
+        ("aij,ajk->aik", &[3, 2, 4], &[3, 4, 2]),
+        // diagonal family
+        ("ii,->i", &[4, 4], &[]),
+        ("ii,->", &[4, 4], &[]),
+        ("ij,ii->j", &[4, 4], &[4, 4]),
+        ("iji,j->ij", &[3, 4, 3], &[4]),
+        // presum family (private labels summed out)
+        ("ij,k->i", &[3, 4], &[5]),
+        ("ijk,l->ik", &[2, 3, 4], &[5]),
+        // permuted outputs
+        ("ij,jk->ki", &[3, 4], &[4, 5]),
+        ("ijk,->kji", &[2, 3, 4], &[]),
+        ("ij,kl->ljki", &[2, 3], &[4, 5]),
+        // scalar operands
+        (",->", &[], &[]),
+        ("ij,->ij", &[3, 4], &[]),
+        (",ij->ij", &[], &[3, 4]),
+        ("ij,->", &[3, 4], &[]),
+    ];
+    for (case, (sig, sa, sb)) in families.iter().enumerate() {
+        let spec = EinSpec::parse(sig);
+        check_all_paths(500 + case as u64, &spec, sa, sb);
+    }
+}
+
+/// Random scalar-expression DAGs (same generator family as
+/// tests/property.rs): the whole compiled pipeline against the
+/// interpreter, including shared subexpressions, adds, elementwise
+/// chains and matrix products.
+fn random_scalar_expr(rng: &mut XorShift, g: &mut Graph, depth: usize) -> NodeId {
+    let x = g.var("x", &[4]);
+    let a = g.var("A", &[4, 4]);
+    let mut v = g.matvec(a, x);
+    for _ in 0..depth {
+        v = match rng.below(6) {
+            0 => g.elem(Elem::Tanh, v),
+            1 => g.elem(Elem::Sigmoid, v),
+            2 => {
+                let e = g.elem(Elem::Exp, v);
+                let half = g.scale(e, 0.2);
+                g.elem(Elem::Tanh, half)
+            }
+            3 => g.hadamard(v, x),
+            4 => {
+                let av = g.matvec(a, v);
+                g.scale(av, 0.5)
+            }
+            _ => {
+                let t = g.tmatvec(a, v);
+                g.add(t, x)
+            }
+        };
+    }
+    let sq = g.elem(Elem::Square, v);
+    g.sum_all(sq)
+}
+
+#[test]
+fn prop_compiled_matches_interpreter_on_random_dags() {
+    for seed in 0..30u64 {
+        let mut rng = XorShift::new(seed);
+        let mut g = Graph::new();
+        let depth = 1 + (seed % 5) as usize;
+        let f = random_scalar_expr(&mut rng, &mut g, depth);
+        let x = g.var_id("x").unwrap();
+        let grad = reverse_derivative(&mut g, f, &[x])[0];
+        let mut env = Env::new();
+        env.insert("x", Tensor::randn(&[4], seed + 1).scale(0.5));
+        env.insert("A", Tensor::randn(&[4, 4], seed + 2).scale(0.5));
+        let compiled = CompiledPlan::new(&g, &[f, grad]).run(&env);
+        let interp = Plan::new(&g, &[f, grad]).run(&g, &env);
+        for (c, i) in compiled.iter().zip(&interp) {
+            assert!(
+                c.allclose(i, 1e-12, 1e-13),
+                "seed {}: compiled vs interpreter diff {}",
+                seed,
+                c.max_abs_diff(i)
+            );
+        }
+    }
+}
+
+#[test]
+fn pool_reuse_does_not_alias_or_drift() {
+    // a DAG with many same-shaped intermediates so released buffers get
+    // reacquired; repeated runs on *different* inputs must never see
+    // stale data
+    let mut g = Graph::new();
+    let x = g.var("x", &[6]);
+    let a = g.var("A", &[6, 6]);
+    let mut v = g.matvec(a, x);
+    for _ in 0..6 {
+        let e = g.elem(Elem::Tanh, v);
+        let w = g.matvec(a, e);
+        v = g.add(w, x);
+    }
+    let f = g.norm2(v);
+    let plan = CompiledPlan::new(&g, &[f, v]);
+    let interp = Plan::new(&g, &[f, v]);
+
+    for round in 0..10u64 {
+        let mut env = Env::new();
+        env.insert("x", Tensor::randn(&[6], 100 + round));
+        env.insert("A", Tensor::randn(&[6, 6], 200 + round).scale(0.3));
+        let got = plan.run(&env);
+        let want = interp.run(&g, &env);
+        assert!(
+            got[0].allclose(&want[0], 1e-12, 1e-13) && got[1].allclose(&want[1], 1e-12, 1e-13),
+            "round {}: pooled run diverged (stale buffer?): diff {} / {}",
+            round,
+            got[0].max_abs_diff(&want[0]),
+            got[1].max_abs_diff(&want[1])
+        );
+    }
+}
+
+#[test]
+fn pool_stops_allocating_after_warmup() {
+    let mut w = logistic_regression(32, 8);
+    let grad = w.gradient();
+    let plan = CompiledPlan::new(&w.g, &[w.loss, grad]);
+    let first = plan.run(&w.env);
+    let cold = plan.pool_stats();
+    let runs = 20u64;
+    for _ in 0..runs {
+        let again = plan.run(&w.env);
+        assert_eq!(again[0].data(), first[0].data(), "repeated runs must be deterministic");
+        assert_eq!(again[1].data(), first[1].data());
+    }
+    let warm = plan.pool_stats();
+    // roots (two per run) leave with the caller; everything else must be
+    // served from the pool
+    assert!(
+        warm.fresh <= cold.fresh + 2 * runs,
+        "per-node allocations survived warm-up: {:?} -> {:?}",
+        cold,
+        warm
+    );
+    assert!(warm.reused > cold.reused, "pool never reused a buffer");
+}
+
+#[test]
+fn same_plan_twice_from_cache_shares_pool_safely() {
+    let cache = PlanCache::new();
+    let mut w = logistic_regression(10, 4);
+    let grad = w.gradient();
+    let p1 = cache.get_or_compile(&w.g, &[grad]);
+    let p2 = cache.get_or_compile(&w.g, &[grad]);
+    let a = p1.run(&w.env);
+    let b = p2.run(&w.env);
+    assert_eq!(a[0].data(), b[0].data());
+    assert_eq!(cache.len(), 1);
+}
+
+#[test]
+fn compiled_handles_delta_and_const_roots() {
+    // statics as direct roots and as operands
+    let mut g = Graph::new();
+    let d = g.delta(&[3]);
+    let c = g.constant(4.0, &[3, 3]);
+    let m = g.hadamard(d, c);
+    let tr = g.sum_all(m); // trace · 4 = 12
+    let plan = CompiledPlan::new(&g, &[tr, d, c]);
+    let vals = plan.run(&Env::new());
+    assert!((vals[0].item() - 12.0).abs() < 1e-12);
+    assert_eq!(vals[1], Tensor::eye(3));
+    assert_eq!(vals[2], Tensor::fill(&[3, 3], 4.0));
+}
+
+// ---------------------------------------------------------------------------
+// Finite-difference oracles for the compiled path. The FD helpers run the
+// interpreter internally; the symbolic values come from CompiledPlan.
+// ---------------------------------------------------------------------------
+
+fn wrt_name(g: &Graph, wrt: NodeId) -> String {
+    match g.op(wrt) {
+        Op::Var(n) => n.clone(),
+        _ => unreachable!("wrt must be a variable"),
+    }
+}
+
+#[test]
+fn fd_gradients_of_all_workloads_on_compiled_path() {
+    for mut w in [
+        logistic_regression(6, 3),
+        matrix_factorization(5, 5, 2, false),
+        matrix_factorization(5, 4, 2, true),
+        neural_net(4, 3, 5),
+    ] {
+        let grad = w.gradient();
+        let name = w.name;
+        let var = wrt_name(&w.g, w.wrt);
+        let gv = CompiledPlan::new(&w.g, &[grad]).run(&w.env).pop().unwrap();
+        let want = fd_gradient(&w.g, w.loss, &var, &w.env, 1e-6);
+        assert!(
+            gv.allclose(&want, 1e-4, 1e-6),
+            "{}: compiled gradient vs FD, diff {}",
+            name,
+            gv.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn fd_hessians_of_all_workloads_on_compiled_path() {
+    for mut w in [
+        logistic_regression(6, 3),
+        matrix_factorization(5, 5, 2, false),
+        neural_net(4, 2, 5),
+    ] {
+        let grad = w.gradient();
+        let h = w.hessian();
+        let name = w.name;
+        let var = wrt_name(&w.g, w.wrt);
+        let hv = CompiledPlan::new(&w.g, &[h]).run(&w.env).pop().unwrap();
+        let want = fd_jacobian(&w.g, grad, &var, &w.env, 1e-5);
+        assert!(
+            hv.allclose(&want, 1e-3, 1e-5),
+            "{}: compiled Hessian vs FD-of-gradient, diff {}",
+            name,
+            hv.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn fd_compressed_hessians_on_compiled_path() {
+    for mut w in [
+        logistic_regression(8, 4),
+        matrix_factorization(6, 6, 2, false),
+        neural_net(4, 2, 5),
+    ] {
+        let grad = w.gradient();
+        let comp = w.hessian_compressed();
+        let name = w.name;
+        let var = wrt_name(&w.g, w.wrt);
+        let vals = CompiledPlan::new(&w.g, &[comp.eval_node()]).run(&w.env);
+        let hv = comp.materialize(&vals[0]);
+        let want = fd_jacobian(&w.g, grad, &var, &w.env, 1e-5);
+        assert!(
+            hv.allclose(&want, 1e-3, 1e-5),
+            "{}: compiled compressed Hessian vs FD, diff {}",
+            name,
+            hv.max_abs_diff(&want)
+        );
+    }
+}

@@ -2,10 +2,10 @@
 //! cross-country → compress → eval, the three benchmark workloads, and
 //! the coordinator + PJRT runtime (artifact-gated).
 
-use tensorcalc::autodiff::hessian::{grad_and_hessian, hessian_compressed};
+use tensorcalc::autodiff::hessian::grad_and_hessian;
 use tensorcalc::baselines::PerEntryHessian;
 use tensorcalc::coordinator::{Coordinator, EngineEntry};
-use tensorcalc::eval::{eval, eval_many, fd_gradient, Env, Plan};
+use tensorcalc::eval::{eval, eval_many, fd_gradient, Env};
 use tensorcalc::parser::{parse_expr, VarDecl};
 use tensorcalc::prelude::*;
 use tensorcalc::problems::{
@@ -129,20 +129,18 @@ fn coordinator_responses_are_correct() {
     let (m, n) = (12usize, 4usize);
     let mut w = logistic_regression(m, n);
     let grad = w.gradient();
-    let plan = Plan::new(&w.g, &[grad]);
-    let graph = w.g.clone();
     let mut c = Coordinator::new(64);
     c.register_engine(
         "grad",
-        EngineEntry {
-            graph: w.g,
-            plan,
-            inputs: vec![
+        EngineEntry::compiled(
+            &w.g,
+            &[grad],
+            vec![
                 ("X".into(), vec![m, n]),
                 ("y".into(), vec![m]),
                 ("w".into(), vec![n]),
             ],
-        },
+        ),
     );
     let mut handles = Vec::new();
     for seed in 0..16u64 {
@@ -159,7 +157,7 @@ fn coordinator_responses_are_correct() {
         env.insert("X", x);
         env.insert("y", y);
         env.insert("w", wv);
-        let want = eval(&graph, grad, &env);
+        let want = eval(&w.g, grad, &env);
         assert!(resp.outputs[0].allclose(&want, 1e-10, 1e-12));
     }
 }
