@@ -14,7 +14,7 @@ use tensorcalc::autodiff::cross_country::optimize_contractions;
 use tensorcalc::eval::Env;
 use tensorcalc::exec::CompiledPlan;
 use tensorcalc::figures::{newton, print_table, Row};
-use tensorcalc::ir::Graph;
+use tensorcalc::ir::{Elem, Graph};
 use tensorcalc::problems::matrix_factorization;
 use tensorcalc::tensor::Tensor;
 use tensorcalc::util::time_median;
@@ -69,6 +69,40 @@ fn main() {
         }
     }
     print_table("Cross-country ablation — Example 7 chain B·diag(u)·diag(v)·A", &rows);
+
+    // ---- fusion: element-wise chains fused vs one buffer per node ----
+    let mut rows = Vec::new();
+    for &n in &[1usize << 12, 1 << 16, 1 << 20] {
+        let mut g = Graph::new();
+        let x = g.var("x", &[n]);
+        let mut v = g.elem(Elem::Tanh, x);
+        for _ in 0..7 {
+            v = g.elem(Elem::Sigmoid, v);
+            v = g.elem(Elem::Tanh, v);
+        }
+        let mut env = Env::new();
+        env.insert("x", Tensor::randn(&[n], 5));
+        for (label, fuse) in [("fused single pass", true), ("per-node buffers", false)] {
+            let plan = CompiledPlan::with_fusion(&g, &[v], fuse);
+            let _ = plan.run(&env); // warm-up
+            let (t, runs) = time_median(
+                || {
+                    std::hint::black_box(plan.run(&env));
+                },
+                3,
+                secs,
+            );
+            rows.push(Row {
+                figure: "fusion",
+                problem: "elem-chain-15",
+                n,
+                mode: label.into(),
+                secs: t,
+                runs,
+            });
+        }
+    }
+    print_table("Fusion ablation — 15-deep element-wise chain", &rows);
 
     // ---- compress: core vs materialised matfac Hessian ----
     let mut rows = Vec::new();

@@ -87,40 +87,63 @@ fn main() {
     }
 
     // compiled executor on a whole derivative DAG: the repeated-request
-    // hot path. After the warm-up run the buffer pool must serve every
-    // intermediate (fresh allocations ≈ one root buffer per run).
+    // hot path, with the fusion + work-stealing executor against the
+    // PR 1-style unfused plan. After the warm-up run the buffer pool
+    // must serve every intermediate (fresh allocations ≈ one root
+    // buffer per run), and the fused plan must allocate strictly fewer
+    // cold buffers.
     {
         let (m, n) = (256usize, 128usize);
         let mut w = logistic_regression(m, n);
         let grad = w.gradient();
-        let plan = CompiledPlan::new(&w.g, &[w.loss, grad]);
-        let _ = plan.run(&w.env); // warm-up
-        let warm = plan.pool_stats();
-        let (t, runs) = time_median(
-            || {
-                std::hint::black_box(plan.run(&w.env));
-            },
-            5,
-            secs,
-        );
-        let after = plan.pool_stats();
+        let fused = CompiledPlan::new(&w.g, &[w.loss, grad]);
+        let unfused = CompiledPlan::with_fusion(&w.g, &[w.loss, grad], false);
+        let mut stats: Vec<(u64, f64)> = Vec::new();
+        for (label, plan) in [("fused", &fused), ("unfused (PR 1)", &unfused)] {
+            let _ = plan.run(&w.env); // warm-up
+            let cold = plan.pool_stats();
+            let (t, runs) = time_median(
+                || {
+                    std::hint::black_box(plan.run(&w.env));
+                },
+                5,
+                secs,
+            );
+            let after = plan.pool_stats();
+            println!(
+                "\ncompiled logreg grad [{}] (m={}, n={}): {}  [{} instrs, {} levels, {} fused]",
+                label,
+                m,
+                n,
+                fmt_secs(t),
+                plan.len(),
+                plan.depth(),
+                plan.fused_count()
+            );
+            println!(
+                "  buffer pool: fresh {} → {} (+{} over {} runs ≈ roots only), reused {}",
+                cold.fresh,
+                after.fresh,
+                after.fresh - cold.fresh,
+                runs,
+                after.reused
+            );
+            rows.push(Row {
+                figure: "micro",
+                problem: "compiled",
+                n,
+                mode: format!("logreg grad {}", label),
+                secs: t,
+                runs,
+            });
+            stats.push((cold.fresh, t));
+        }
         println!(
-            "\ncompiled logreg grad (m={}, n={}): {}  [{} nodes, {} levels]",
-            m,
-            n,
-            fmt_secs(t),
-            plan.len(),
-            plan.depth()
+            "\n  fused vs unfused: cold allocations {} vs {}, wall-clock {:+.1}%",
+            stats[0].0,
+            stats[1].0,
+            100.0 * (stats[0].1 - stats[1].1) / stats[1].1
         );
-        println!(
-            "  buffer pool: fresh {} → {} (+{} over {} runs ≈ roots only), reused {}",
-            warm.fresh,
-            after.fresh,
-            after.fresh - warm.fresh,
-            runs,
-            after.reused
-        );
-        rows.push(Row { figure: "micro", problem: "compiled", n, mode: "logreg grad".into(), secs: t, runs });
     }
 
     print_table("engine microbenchmarks", &rows);

@@ -187,14 +187,27 @@ impl Coordinator {
     }
 
     /// Stop all workers and wait for them.
+    ///
+    /// The authoritative shutdown signal is *dropping every sender
+    /// before joining any worker*: a `try_send(Job::Shutdown)` alone
+    /// fails silently when a queue is full, and joining while the
+    /// sender is still alive would then deadlock (the worker blocks in
+    /// `recv` forever). Workers treat channel closure as shutdown and
+    /// still drain (and answer) every job buffered before the close.
+    /// All senders drop before the first join so that fan-in topologies
+    /// (the PJRT backend) cannot wedge on a sibling's queue either.
     pub fn shutdown(&mut self) {
-        for w in self.workers.values() {
-            let _ = w.tx.try_send(Job::Shutdown);
-        }
+        let mut handles = Vec::new();
         for (_, mut w) in self.workers.drain() {
+            // best-effort nudge for an idle worker; the sender drop at
+            // the end of this iteration is what guarantees progress
+            let _ = w.tx.try_send(Job::Shutdown);
             if let Some(h) = w.handle.take() {
-                let _ = h.join();
+                handles.push(h);
             }
+        }
+        for h in handles {
+            let _ = h.join();
         }
     }
 }
@@ -206,17 +219,22 @@ impl Drop for Coordinator {
 }
 
 /// Engine worker: drains the queue (micro-batching: everything already
-/// queued is processed back-to-back and reported as one batch).
+/// queued is processed back-to-back and reported as one batch). A
+/// `Shutdown` drained mid-batch does not abort the batch: every eval
+/// job drained alongside it is still answered before the worker exits,
+/// and `batch_size` counts eval jobs only. Channel closure (all senders
+/// dropped) is treated as shutdown too.
 fn engine_worker(name: String, entry: EngineEntry, rx: Receiver<Job>, metrics: Arc<Metrics>) {
     while let Ok(first) = rx.recv() {
         let mut jobs = vec![first];
         while let Ok(j) = rx.try_recv() {
             jobs.push(j);
         }
-        let batch = jobs.len();
+        let batch = jobs.iter().filter(|j| matches!(j, Job::Eval { .. })).count();
+        let mut shutdown = false;
         for job in jobs {
             match job {
-                Job::Shutdown => return,
+                Job::Shutdown => shutdown = true,
                 Job::Eval { inputs, reply } => {
                     let t0 = Instant::now();
                     let res = run_engine(&entry, inputs).map(|outputs| Response {
@@ -228,6 +246,9 @@ fn engine_worker(name: String, entry: EngineEntry, rx: Receiver<Job>, metrics: A
                     let _ = reply.send(res);
                 }
             }
+        }
+        if shutdown {
+            return;
         }
     }
 }
@@ -371,6 +392,70 @@ mod tests {
         }
         // with queue_cap=1 and 64 rapid submits, backpressure should trigger
         assert!(errs > 0, "expected backpressure with cap=1");
+    }
+
+    #[test]
+    fn shutdown_with_saturated_cap1_queue_terminates() {
+        let mut c = Coordinator::new(1);
+        c.register_engine("e", logreg_grad_entry(64, 16));
+        let mk = |i| {
+            vec![
+                Tensor::randn(&[64, 16], i),
+                Tensor::randn(&[64], i + 1).map(f64::signum),
+                Tensor::randn(&[16], i + 2),
+            ]
+        };
+        // saturate the cap-1 queue so try_send(Shutdown) will fail
+        let mut accepted = Vec::new();
+        for i in 0..16 {
+            if let Ok(rx) = c.submit("e", mk(i)) {
+                accepted.push(rx);
+            }
+        }
+        let (done_tx, done_rx) = sync_channel::<()>(1);
+        let h = std::thread::spawn(move || {
+            c.shutdown();
+            drop(c);
+            let _ = done_tx.send(());
+        });
+        assert!(
+            done_rx.recv_timeout(std::time::Duration::from_secs(60)).is_ok(),
+            "Coordinator::shutdown deadlocked on a full queue"
+        );
+        h.join().unwrap();
+        // every accepted job was answered before the worker exited
+        for rx in accepted {
+            let resp = rx.recv().expect("reply dropped on shutdown");
+            assert!(resp.is_ok());
+        }
+    }
+
+    #[test]
+    fn mid_batch_shutdown_answers_drained_jobs() {
+        // Deterministic mid-batch shutdown: queue [Eval, Shutdown, Eval]
+        // before the worker starts, so one drain sees all three.
+        let entry = logreg_grad_entry(8, 3);
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = sync_channel::<Job>(8);
+        let mk = |i: u64| {
+            vec![
+                Tensor::randn(&[8, 3], i),
+                Tensor::randn(&[8], i + 1).map(f64::signum),
+                Tensor::randn(&[3], i + 2),
+            ]
+        };
+        let (r1tx, r1rx) = sync_channel(1);
+        let (r2tx, r2rx) = sync_channel(1);
+        tx.send(Job::Eval { inputs: mk(1), reply: r1tx }).unwrap();
+        tx.send(Job::Shutdown).unwrap();
+        tx.send(Job::Eval { inputs: mk(10), reply: r2tx }).unwrap();
+        drop(tx);
+        engine_worker("e".into(), entry, rx, metrics.clone());
+        let a = r1rx.recv().expect("first reply dropped").unwrap();
+        let b = r2rx.recv().expect("eval after mid-batch Shutdown dropped").unwrap();
+        assert_eq!(a.batch_size, 2, "Shutdown must not count toward the eval batch");
+        assert_eq!(b.batch_size, 2);
+        assert_eq!(metrics.snapshot().completed, 2);
     }
 
     #[test]

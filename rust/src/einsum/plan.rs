@@ -425,6 +425,24 @@ impl EinsumPlan {
             }
         }
     }
+
+    /// Execute the contraction into `out`, then apply `epilogue` to the
+    /// freshly written output data — the hook the compiled executor
+    /// uses to fuse trailing element-wise chains onto a contraction
+    /// without a separate buffer. Today the epilogue is a second sweep
+    /// over `out`; pushing it into the GEMM tiles while they are still
+    /// cache-hot is the recorded open seam in ROADMAP.md.
+    pub fn run_with_epilogue<F: FnOnce(&mut [f64])>(
+        &self,
+        a: &Tensor,
+        b: &Tensor,
+        out: &mut Tensor,
+        scratch: &mut EinScratch,
+        epilogue: F,
+    ) {
+        self.run(a, b, out, scratch);
+        epilogue(out.data_mut());
+    }
 }
 
 /// Evaluate `A *_(s1,s2,s3) B` into `out`, reusing `scratch` buffers.

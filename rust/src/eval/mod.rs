@@ -6,10 +6,14 @@
 //! * [`Plan`] (here) — the allocating *interpreter*: the reference
 //!   semantics, validated against brute-force einsum and
 //!   finite-difference oracles, and itself the oracle the compiled
-//!   executor is differentially tested against.
-//! * [`crate::exec::CompiledPlan`] — the pooled-buffer, level-parallel
-//!   *hot path*. [`eval_many`] (and therefore [`eval`]) route through it;
-//!   the FD helpers below stay on the interpreter on purpose.
+//!   executor is differentially tested against. It deliberately stays
+//!   **un-fused** (one tensor per node) so the compiled executor's
+//!   fusion pass always has an independent baseline.
+//! * [`crate::exec::CompiledPlan`] — the pooled-buffer *hot path*:
+//!   element-wise chains fused into single-pass kernels/epilogues and
+//!   levels scheduled with work stealing. [`eval_many`] (and therefore
+//!   [`eval`]) route through it; the FD helpers below stay on the
+//!   interpreter on purpose.
 
 use crate::ir::{Graph, NodeId, Op};
 use crate::tensor::Tensor;

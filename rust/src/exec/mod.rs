@@ -1,6 +1,7 @@
 //! The compiled execution engine: [`CompiledPlan`] lowers an expression
 //! DAG into a dense instruction stream executed with pooled buffers,
-//! pre-compiled write-into einsums and level-parallel scheduling.
+//! pre-compiled write-into einsums, cross-node fusion of element-wise
+//! chains and work-stealing level scheduling.
 //!
 //! ## Architecture (interpreter = oracle, compiled plan = hot path)
 //!
@@ -8,7 +9,8 @@
 //!
 //! * [`crate::eval::Plan`] — the *interpreter*: simple, allocating, and
 //!   independently validated against brute-force and finite-difference
-//!   oracles. It is the reference semantics.
+//!   oracles. It is the reference semantics and deliberately stays
+//!   un-fused — it is the oracle the fused executor is pinned against.
 //! * [`CompiledPlan`] (this module) — the *hot path*: every `Mul` is
 //!   pre-compiled into an [`EinsumPlan`](crate::einsum::EinsumPlan)
 //!   (strides, pre-sums and permutations resolved at compile time),
@@ -17,7 +19,27 @@
 //!   last use, and independent DAG levels run on scoped worker threads.
 //!
 //! `tests/exec_equivalence.rs` pins the two against each other (and
-//! against `einsum_naive`) over randomized specs and DAGs.
+//! against `einsum_naive`) over randomized specs and DAGs, including
+//! deep element-wise chains that exercise the fusion pass.
+//!
+//! ## Fusion pass
+//!
+//! At compile time, maximal single-consumer chains/trees of `Elem`,
+//! `Add`, Hadamard- and scalar-`Mul` nodes collapse into one
+//! `FusedKernel`: a tiny postfix program evaluated in a single pass over
+//! the data — one output buffer, zero intermediates, regardless of the
+//! chain depth. Where the chain rides on the output of a contraction or
+//! general unary whose value is not needed elsewhere, the kernel is
+//! instead applied *in place* as an epilogue on the producer's freshly
+//! written buffer (via [`EinsumPlan::run_with_epilogue`]), so the whole
+//! chain costs no buffer at all.
+//!
+//! ## Work-stealing level scheduling
+//!
+//! Within a parallel level, worker threads claim chunks of the level's
+//! instruction list from a shared atomic cursor instead of pre-sliced
+//! static bands, so one oversized node delays only the thread that
+//! claimed it — not an entire band scheduled behind it.
 //!
 //! ## Plan-cache key contract
 //!
@@ -34,14 +56,17 @@
 //! distinct service entries. Cached plans are `Arc`-shared, so every
 //! worker that serves the same graph also shares one warm buffer pool.
 
-use crate::einsum::{EinScratch, EinsumPlan};
+use crate::einsum::{EinScratch, EinSpec, EinsumPlan, Label};
 use crate::eval::Env;
 use crate::ir::{Elem, GenFn, Graph, NodeId, Op};
 use crate::tensor::Tensor;
-use crate::util::{num_threads, PAR_BATCH_TOTAL_MIN_FLOP, PAR_LEVEL_MIN_FLOP};
+use crate::util::{
+    num_threads, PAR_BATCH_TOTAL_MIN_FLOP, PAR_LEVEL_MIN_FLOP, STEAL_CHUNKS_PER_THREAD,
+};
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 /// A shape-bucketed free list of `f64` buffers. Buffers are bucketed by
@@ -87,6 +112,113 @@ impl BufferPool {
     }
 }
 
+/// Maximum value-stack depth of a [`FusedKernel`] postfix program; the
+/// group builder stops inlining before a kernel could exceed it.
+const FUSED_MAX_STACK: usize = 16;
+
+/// One step of a fused single-pass pipeline (postfix form).
+#[derive(Clone, Copy)]
+enum FusedOp {
+    /// Push element `i` (or the broadcast scalar) of operand slot `k`.
+    Load(u32),
+    /// Apply an element-wise function to the top of the stack.
+    Un(Elem),
+    /// Pop two values, push their sum.
+    Add,
+    /// Pop two values, push their product.
+    Mul,
+}
+
+/// A collapsed chain/tree of `Elem` / `Add` / Hadamard- and
+/// scalar-`Mul` nodes evaluated in one pass over the data: for every
+/// element index the postfix program runs over a fixed-size value
+/// stack, reading operand slots and producing one output value — zero
+/// intermediate buffers regardless of the chain depth.
+struct FusedKernel {
+    ops: Vec<FusedOp>,
+    /// number of graph nodes collapsed into this kernel
+    n_nodes: usize,
+}
+
+/// An operand slot resolved for one execution: same-shape operands are
+/// read per element, rank-0 operands broadcast one value.
+enum FusedSrc<'s> {
+    Slice(&'s [f64]),
+    Scalar(f64),
+}
+
+impl FusedSrc<'_> {
+    #[inline]
+    fn at(&self, i: usize) -> f64 {
+        match self {
+            FusedSrc::Slice(s) => s[i],
+            FusedSrc::Scalar(v) => *v,
+        }
+    }
+}
+
+impl FusedKernel {
+    /// `out[i] = program(srcs, i)`; `Load(k)` reads `srcs[k]`.
+    fn run(&self, srcs: &[FusedSrc], out: &mut [f64]) {
+        let mut stack = [0.0f64; FUSED_MAX_STACK];
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = self.eval_one(&mut stack, None, srcs, i);
+        }
+    }
+
+    /// In-place epilogue on a producer's output: `Load(0)` reads the
+    /// buffer value being replaced, `Load(k ≥ 1)` reads `rest[k-1]`.
+    fn run_inplace(&self, buf: &mut [f64], rest: &[FusedSrc]) {
+        let mut stack = [0.0f64; FUSED_MAX_STACK];
+        for (i, slot) in buf.iter_mut().enumerate() {
+            let carrier = *slot;
+            *slot = self.eval_one(&mut stack, Some(carrier), rest, i);
+        }
+    }
+
+    #[inline]
+    fn eval_one(
+        &self,
+        stack: &mut [f64; FUSED_MAX_STACK],
+        carrier: Option<f64>,
+        srcs: &[FusedSrc],
+        i: usize,
+    ) -> f64 {
+        let mut sp = 0usize;
+        for op in &self.ops {
+            match op {
+                FusedOp::Load(k) => {
+                    stack[sp] = match (carrier, *k) {
+                        (Some(c), 0) => c,
+                        (Some(_), k) => srcs[k as usize - 1].at(i),
+                        (None, k) => srcs[k as usize].at(i),
+                    };
+                    sp += 1;
+                }
+                FusedOp::Un(f) => stack[sp - 1] = f.apply(stack[sp - 1]),
+                FusedOp::Add => {
+                    sp -= 1;
+                    stack[sp - 1] += stack[sp];
+                }
+                FusedOp::Mul => {
+                    sp -= 1;
+                    stack[sp - 1] *= stack[sp];
+                }
+            }
+        }
+        debug_assert_eq!(sp, 1, "fused program must leave exactly one value");
+        stack[0]
+    }
+}
+
+/// A fused chain applied in place on a producer's freshly written
+/// output (slot 0 of the kernel is the produced value itself).
+struct Epilogue {
+    kernel: FusedKernel,
+    /// operand positions for kernel slots `1..` (slot 0 is the carrier)
+    args: Vec<usize>,
+}
+
 /// One lowered node. Operands are dense positions into the instruction
 /// stream (not `NodeId`s), so execution never touches the `Graph`.
 enum Instr {
@@ -95,10 +227,13 @@ enum Instr {
     /// A `Const`/`Delta` tensor materialised once at compile time.
     Static(usize),
     Add(usize, usize),
-    /// Pre-compiled contraction (strides/pre-sums/permutation resolved).
-    Mul(usize, usize, EinsumPlan),
+    /// Pre-compiled contraction (strides/pre-sums/permutation resolved),
+    /// optionally with a fused element-wise epilogue applied in place.
+    Mul(usize, usize, EinsumPlan, Option<Epilogue>),
     Elem(Elem, usize),
-    GenUnary(GenFn, usize),
+    GenUnary(GenFn, usize, Option<Epilogue>),
+    /// A collapsed element-wise chain/tree evaluated in one pass.
+    Fused { kernel: FusedKernel, args: Vec<usize> },
 }
 
 /// A value slot during execution: intermediates own pooled buffers,
@@ -117,9 +252,173 @@ impl<'a> Val<'a> {
     }
 }
 
+/// Intermediate lowering of one node, before the fusion pass decides
+/// which nodes survive as instructions.
+enum DescKind {
+    Var(String),
+    Static(usize),
+    Add(usize, usize),
+    Mul(usize, usize, EinsumPlan),
+    Elem(Elem, usize),
+    GenUnary(GenFn, usize),
+}
+
+fn desc_operands(d: &DescKind) -> Vec<usize> {
+    match d {
+        DescKind::Add(a, b) | DescKind::Mul(a, b, _) => vec![*a, *b],
+        DescKind::Elem(_, a) | DescKind::GenUnary(_, a) => vec![*a],
+        DescKind::Var(_) | DescKind::Static(_) => Vec::new(),
+    }
+}
+
+/// Fusion-pass classification of a node: how it reads its operands when
+/// evaluated element by element.
+#[derive(Clone, Copy)]
+enum FuseNode {
+    Un(Elem, usize),
+    Add2(usize, usize),
+    /// element-wise product of two same-shape operands
+    Had(usize, usize),
+    /// `(tensor, scalar)`: tensor scaled by a broadcast rank-0 operand
+    Scale(usize, usize),
+}
+
+fn all_distinct(ls: &[Label]) -> bool {
+    ls.iter().enumerate().all(|(i, l)| !ls[i + 1..].contains(l))
+}
+
+/// Classify a `Mul` node as element-wise fusable: a Hadamard product of
+/// same-shape operands, or a scalar broadcast scale. Anything with
+/// summed labels, diagonals or permuted outputs stays a contraction.
+fn classify_mul(
+    spec: &EinSpec,
+    a_shape: &[usize],
+    b_shape: &[usize],
+    pa: usize,
+    pb: usize,
+) -> Option<FuseNode> {
+    if spec.is_elementwise() && all_distinct(&spec.s1) {
+        return Some(FuseNode::Had(pa, pb));
+    }
+    if b_shape.is_empty() && spec.s2.is_empty() && spec.s3 == spec.s1 && all_distinct(&spec.s1) {
+        return Some(FuseNode::Scale(pa, pb));
+    }
+    if a_shape.is_empty() && spec.s1.is_empty() && spec.s3 == spec.s2 && all_distinct(&spec.s2) {
+        return Some(FuseNode::Scale(pb, pa));
+    }
+    None
+}
+
+/// A fused group under construction: the postfix program, its leaf
+/// operands (pre-fusion stream positions, slot order) and how many
+/// loads each leaf received — the epilogue-carrier check needs the
+/// latter to prove all of a producer's uses live inside the group.
+#[derive(Default)]
+struct Group {
+    ops: Vec<FusedOp>,
+    leaves: Vec<usize>,
+    leaf_loads: Vec<usize>,
+    n_nodes: usize,
+    /// melted producer applied in place (pre-fusion position)
+    carrier: Option<usize>,
+}
+
+impl Group {
+    fn push_leaf(&mut self, o: usize) {
+        let slot = match self.leaves.iter().position(|&q| q == o) {
+            Some(s) => s,
+            None => {
+                self.leaves.push(o);
+                self.leaf_loads.push(0);
+                self.leaves.len() - 1
+            }
+        };
+        self.leaf_loads[slot] += 1;
+        self.ops.push(FusedOp::Load(slot as u32));
+    }
+
+    /// Re-number slots for epilogue form: the carrier slot becomes
+    /// `Load(0)`, remaining leaves shift to slots `1..` in order.
+    fn rewrite_for_carrier(&mut self, slot: usize) {
+        for op in self.ops.iter_mut() {
+            if let FusedOp::Load(k) = op {
+                let k0 = *k as usize;
+                *k = if k0 == slot {
+                    0
+                } else if k0 < slot {
+                    (k0 + 1) as u32
+                } else {
+                    k0 as u32
+                };
+            }
+        }
+        self.carrier = Some(self.leaves.remove(slot));
+        self.leaf_loads.remove(slot);
+    }
+}
+
+/// Shared context of one group build (the fusion pass working over the
+/// pre-fusion descriptor stream).
+struct GroupBuilder<'c> {
+    fusable: &'c [Option<FuseNode>],
+    uses: &'c [usize],
+    is_root: &'c [bool],
+    shapes: &'c [Vec<usize>],
+    group_shape: &'c [usize],
+}
+
+impl GroupBuilder<'_> {
+    /// Emit the postfix program of member `p`; the value stack already
+    /// holds `held` entries when the member starts executing.
+    fn member(&self, p: usize, held: usize, melted: &mut [bool], grp: &mut Group) {
+        grp.n_nodes += 1;
+        match self.fusable[p].expect("group member must be fusable") {
+            FuseNode::Un(f, a) => {
+                self.operand(a, held, melted, grp);
+                grp.ops.push(FusedOp::Un(f));
+            }
+            FuseNode::Add2(a, b) => {
+                self.operand(a, held, melted, grp);
+                self.operand(b, held + 1, melted, grp);
+                grp.ops.push(FusedOp::Add);
+            }
+            FuseNode::Had(a, b) => {
+                self.operand(a, held, melted, grp);
+                self.operand(b, held + 1, melted, grp);
+                grp.ops.push(FusedOp::Mul);
+            }
+            FuseNode::Scale(t, s) => {
+                self.operand(t, held, melted, grp);
+                // the rank-0 operand broadcasts per run, not per
+                // element: always a leaf
+                grp.push_leaf(s);
+                grp.ops.push(FusedOp::Mul);
+            }
+        }
+    }
+
+    /// Inline operand `o` when it is fusable, consumed only here, not a
+    /// plan root, shape-preserving, and the value stack has headroom;
+    /// otherwise record it as a leaf.
+    fn operand(&self, o: usize, held: usize, melted: &mut [bool], grp: &mut Group) {
+        let inline = held + 2 <= FUSED_MAX_STACK
+            && !self.is_root[o]
+            && self.uses[o] == 1
+            && self.fusable[o].is_some()
+            && self.shapes[o].as_slice() == self.group_shape;
+        if inline {
+            melted[o] = true;
+            self.member(o, held, melted, grp);
+        } else {
+            grp.push_leaf(o);
+        }
+    }
+}
+
 /// An expression DAG compiled for repeated execution: dense instruction
-/// stream in topological order, per-level scheduling, buffer lifetimes
-/// resolved to pool-release points, and all contractions pre-compiled.
+/// stream in topological order (element-wise chains fused), per-level
+/// scheduling, buffer lifetimes resolved to pool-release points, and all
+/// contractions pre-compiled.
 pub struct CompiledPlan {
     instrs: Vec<Instr>,
     shapes: Vec<Vec<usize>>,
@@ -129,72 +428,216 @@ pub struct CompiledPlan {
     levels: Vec<Vec<usize>>,
     /// estimated flops per level — gates the scoped-thread fork
     level_flops: Vec<usize>,
-    /// largest single-node flop estimate per level — levels whose nodes
-    /// parallelise *internally* (GEMM row bands / batch splits) are run
-    /// serially at this layer to avoid nested-fork oversubscription
+    /// largest *internally parallel* (GEMM) flop estimate per level —
+    /// levels whose contractions parallelise internally (row bands /
+    /// batch splits) run serially at this layer to avoid nested-fork
+    /// oversubscription
     level_max_flops: Vec<usize>,
     /// positions whose value dies after each level (returned to the pool)
     free_at_level: Vec<Vec<usize>>,
     root_pos: Vec<usize>,
     pool: Mutex<BufferPool>,
     /// einsum scratch buffers, checked out once per run (serial) or once
-    /// per band (parallel) — never per node, to keep lock traffic low
+    /// per worker (parallel) — never per node, to keep lock traffic low
     scratches: Mutex<Vec<EinScratch>>,
 }
 
 impl CompiledPlan {
     /// Compile the sub-DAG of `g` reachable from `roots`.
     pub fn new(g: &Graph, roots: &[NodeId]) -> Self {
+        Self::with_fusion(g, roots, true)
+    }
+
+    /// Compile with or without the cross-node fusion pass. `false`
+    /// reproduces the PR 1 executor (one pooled buffer per node) and is
+    /// kept as the ablation baseline for benches and differential tests.
+    pub fn with_fusion(g: &Graph, roots: &[NodeId], fuse: bool) -> Self {
         let order = g.topo(roots);
-        let mut pos_of: HashMap<NodeId, usize> = HashMap::with_capacity(order.len());
+        let n = order.len();
+        let mut pos_of: HashMap<NodeId, usize> = HashMap::with_capacity(n);
         for (i, &id) in order.iter().enumerate() {
             pos_of.insert(id, i);
         }
 
-        let mut instrs: Vec<Instr> = Vec::with_capacity(order.len());
-        let mut shapes: Vec<Vec<usize>> = Vec::with_capacity(order.len());
+        // -- lower every reachable node to a descriptor --
+        let mut descs: Vec<Option<DescKind>> = Vec::with_capacity(n);
+        let mut shapes: Vec<Vec<usize>> = Vec::with_capacity(n);
         let mut statics: Vec<Tensor> = Vec::new();
-        let mut depth: Vec<usize> = vec![0; order.len()];
-        let mut flops: Vec<usize> = vec![0; order.len()];
-
+        let mut base_flops: Vec<usize> = vec![0; n];
+        let mut fusable: Vec<Option<FuseNode>> = Vec::with_capacity(n);
         for (i, &id) in order.iter().enumerate() {
             let shape = g.shape(id).to_vec();
             let out_len: usize = shape.iter().product();
-            let instr = match g.op(id) {
-                Op::Var(name) => Instr::Var { name: name.clone(), shape: shape.clone() },
+            let (kind, fnode) = match g.op(id) {
+                Op::Var(name) => (DescKind::Var(name.clone()), None),
                 Op::Const(bits) => {
                     statics.push(Tensor::fill(&shape, f64::from_bits(*bits)));
-                    Instr::Static(statics.len() - 1)
+                    (DescKind::Static(statics.len() - 1), None)
                 }
                 Op::Delta { dims } => {
                     statics.push(Tensor::delta(dims));
-                    Instr::Static(statics.len() - 1)
+                    (DescKind::Static(statics.len() - 1), None)
                 }
-                Op::Add(a, b) => Instr::Add(pos_of[a], pos_of[b]),
+                Op::Add(a, b) => {
+                    let (pa, pb) = (pos_of[a], pos_of[b]);
+                    (DescKind::Add(pa, pb), Some(FuseNode::Add2(pa, pb)))
+                }
                 Op::Mul(a, b, spec) => {
                     let plan = EinsumPlan::new(spec, g.shape(*a), g.shape(*b));
-                    flops[i] = plan.iteration_space();
-                    Instr::Mul(pos_of[a], pos_of[b], plan)
+                    base_flops[i] = plan.iteration_space();
+                    let (pa, pb) = (pos_of[a], pos_of[b]);
+                    let f = classify_mul(spec, g.shape(*a), g.shape(*b), pa, pb);
+                    (DescKind::Mul(pa, pb, plan), f)
                 }
-                Op::Elem(f, a) => Instr::Elem(*f, pos_of[a]),
-                Op::GenUnary(f, a) => Instr::GenUnary(*f, pos_of[a]),
+                Op::Elem(f, a) => {
+                    let pa = pos_of[a];
+                    (DescKind::Elem(*f, pa), Some(FuseNode::Un(*f, pa)))
+                }
+                Op::GenUnary(f, a) => {
+                    // the interpreter's contract, enforced at *compile*
+                    // time — a mid-run panic in gen_unary_into would
+                    // poison pooled buffers
+                    assert!(
+                        !g.shape(*a).is_empty(),
+                        "GenUnary({}) needs a rank ≥ 1 operand (got rank 0)",
+                        f.name()
+                    );
+                    (DescKind::GenUnary(*f, pos_of[a]), None)
+                }
             };
-            if flops[i] == 0 {
-                flops[i] = match &instr {
-                    Instr::Var { .. } | Instr::Static(_) => 0,
-                    _ => out_len,
-                };
+            if base_flops[i] == 0 && !matches!(kind, DescKind::Var(_) | DescKind::Static(_)) {
+                base_flops[i] = out_len;
             }
-            let d = operands(&instr)
+            descs.push(Some(kind));
+            shapes.push(shape);
+            fusable.push(if fuse { fnode } else { None });
+        }
+
+        // -- consumer counts over the pre-fusion stream (roots count) --
+        let root_old: Vec<usize> = roots.iter().map(|r| pos_of[r]).collect();
+        let mut uses = vec![0usize; n];
+        for d in &descs {
+            for o in desc_operands(d.as_ref().expect("desc present")) {
+                uses[o] += 1;
+            }
+        }
+        let mut is_root = vec![false; n];
+        for &r in &root_old {
+            uses[r] += 1;
+            is_root[r] = true;
+        }
+
+        // -- fusion pass: greedy maximal groups, processed root-down --
+        let mut melted = vec![false; n];
+        let mut groups: Vec<Option<Group>> = Vec::with_capacity(n);
+        groups.resize_with(n, || None);
+        for p in (0..n).rev() {
+            if melted[p] || fusable[p].is_none() {
+                continue;
+            }
+            let builder = GroupBuilder {
+                fusable: &fusable,
+                uses: &uses,
+                is_root: &is_root,
+                shapes: &shapes,
+                group_shape: &shapes[p],
+            };
+            let mut grp = Group::default();
+            builder.member(p, 0, &mut melted, &mut grp);
+            // epilogue carrier: a contraction / general unary consumed
+            // only by this group, producing exactly the group shape
+            let carrier_slot = grp.leaves.iter().enumerate().find_map(|(slot, &l)| {
+                let eligible = !is_root[l]
+                    && shapes[l].as_slice() == shapes[p].as_slice()
+                    && grp.leaf_loads[slot] == uses[l]
+                    && matches!(
+                        descs[l].as_ref().expect("desc present"),
+                        DescKind::Mul(..) | DescKind::GenUnary(..)
+                    );
+                eligible.then_some(slot)
+            });
+            if let Some(slot) = carrier_slot {
+                let l = grp.leaves[slot];
+                melted[l] = true;
+                grp.rewrite_for_carrier(slot);
+                groups[p] = Some(grp);
+            } else if grp.n_nodes >= 2 {
+                groups[p] = Some(grp);
+            }
+            // n_nodes == 1 without a carrier: nothing was melted — the
+            // original single instruction is kept as-is
+        }
+
+        // -- emit the fused instruction stream (dense re-map) --
+        let mut remap = vec![usize::MAX; n];
+        let mut instrs: Vec<Instr> = Vec::new();
+        let mut out_shapes: Vec<Vec<usize>> = Vec::new();
+        let mut flops: Vec<usize> = Vec::new();
+        let mut internal_flops: Vec<usize> = Vec::new();
+        for p in 0..n {
+            if melted[p] {
+                continue;
+            }
+            let out_len: usize = shapes[p].iter().product();
+            let (instr, fl, ifl) = if let Some(grp) = groups[p].take() {
+                let args: Vec<usize> = grp.leaves.iter().map(|&q| remap[q]).collect();
+                let kernel = FusedKernel { ops: grp.ops, n_nodes: grp.n_nodes };
+                let chain_fl = grp.n_nodes.saturating_mul(out_len);
+                match grp.carrier {
+                    Some(l) => {
+                        let epi = Some(Epilogue { kernel, args });
+                        match descs[l].take().expect("carrier desc present") {
+                            DescKind::Mul(a, b, plan) => {
+                                let gemm_fl = plan.iteration_space();
+                                (
+                                    Instr::Mul(remap[a], remap[b], plan, epi),
+                                    gemm_fl.saturating_add(chain_fl),
+                                    gemm_fl,
+                                )
+                            }
+                            DescKind::GenUnary(f, a) => (
+                                Instr::GenUnary(f, remap[a], epi),
+                                out_len.saturating_add(chain_fl),
+                                0,
+                            ),
+                            _ => unreachable!("carrier must be Mul or GenUnary"),
+                        }
+                    }
+                    None => (Instr::Fused { kernel, args }, chain_fl, 0),
+                }
+            } else {
+                let instr = match descs[p].take().expect("desc present") {
+                    DescKind::Var(name) => Instr::Var { name, shape: shapes[p].clone() },
+                    DescKind::Static(i) => Instr::Static(i),
+                    DescKind::Add(a, b) => Instr::Add(remap[a], remap[b]),
+                    DescKind::Mul(a, b, plan) => Instr::Mul(remap[a], remap[b], plan, None),
+                    DescKind::Elem(f, a) => Instr::Elem(f, remap[a]),
+                    DescKind::GenUnary(f, a) => Instr::GenUnary(f, remap[a], None),
+                };
+                let ifl = match &instr {
+                    Instr::Mul(_, _, plan, _) => plan.iteration_space(),
+                    _ => 0,
+                };
+                (instr, base_flops[p], ifl)
+            };
+            remap[p] = instrs.len();
+            instrs.push(instr);
+            out_shapes.push(shapes[p].clone());
+            flops.push(fl);
+            internal_flops.push(ifl);
+        }
+
+        // -- levels / lifetimes over the fused stream --
+        let m = instrs.len();
+        let mut depth: Vec<usize> = vec![0; m];
+        for (i, instr) in instrs.iter().enumerate() {
+            let d = operands(instr)
                 .iter()
                 .map(|&c| depth[c] + 1)
                 .max()
                 .unwrap_or(0);
             depth[i] = d;
-            instrs.push(instr);
-            shapes.push(shape);
         }
-
         let n_levels = depth.iter().copied().max().map(|d| d + 1).unwrap_or(0);
         let mut levels: Vec<Vec<usize>> = vec![Vec::new(); n_levels];
         let mut level_flops: Vec<usize> = vec![0; n_levels];
@@ -202,19 +645,19 @@ impl CompiledPlan {
         for (i, &d) in depth.iter().enumerate() {
             levels[d].push(i);
             level_flops[d] = level_flops[d].saturating_add(flops[i]);
-            level_max_flops[d] = level_max_flops[d].max(flops[i]);
+            level_max_flops[d] = level_max_flops[d].max(internal_flops[i]);
         }
 
         // Buffer lifetimes: a value is released to the pool after the
         // last level that consumes it. Roots are never released.
-        let mut last_level: Vec<Option<usize>> = vec![None; instrs.len()];
+        let mut last_level: Vec<Option<usize>> = vec![None; m];
         for (i, instr) in instrs.iter().enumerate() {
             for &c in operands(instr).iter() {
                 let lvl = depth[i];
                 last_level[c] = Some(last_level[c].map_or(lvl, |p| p.max(lvl)));
             }
         }
-        let root_pos: Vec<usize> = roots.iter().map(|r| pos_of[r]).collect();
+        let root_pos: Vec<usize> = root_old.iter().map(|&r| remap[r]).collect();
         for &r in &root_pos {
             last_level[r] = None;
         }
@@ -227,7 +670,7 @@ impl CompiledPlan {
 
         CompiledPlan {
             instrs,
-            shapes,
+            shapes: out_shapes,
             statics,
             levels,
             level_flops,
@@ -239,7 +682,8 @@ impl CompiledPlan {
         }
     }
 
-    /// Number of instructions (reachable nodes) the plan executes.
+    /// Number of instructions the plan executes (after fusion this is
+    /// smaller than the reachable node count).
     pub fn len(&self) -> usize {
         self.instrs.len()
     }
@@ -251,6 +695,22 @@ impl CompiledPlan {
     /// Number of dependency levels (the critical-path length).
     pub fn depth(&self) -> usize {
         self.levels.len()
+    }
+
+    /// Number of fused pipelines in the stream — standalone `Fused`
+    /// instructions plus contraction/unary epilogues.
+    pub fn fused_count(&self) -> usize {
+        self.instrs
+            .iter()
+            .filter(|i| {
+                matches!(
+                    i,
+                    Instr::Fused { .. }
+                        | Instr::Mul(_, _, _, Some(_))
+                        | Instr::GenUnary(_, _, Some(_))
+                )
+            })
+            .count()
     }
 
     /// Buffer-pool counters (cold allocations vs warm reuses) — after
@@ -269,42 +729,51 @@ impl CompiledPlan {
 
         for (lv, level) in self.levels.iter().enumerate() {
             let nt = num_threads().min(level.len());
-            // Fork at the level layer only for many-small-node levels:
-            // a node above PAR_BATCH_TOTAL_MIN_FLOP may fork its own row
-            // bands / batch splits inside the GEMM, and nesting both
-            // layers would oversubscribe the cores num_threads-fold.
+            // Fork at the level layer only for many-small-node levels: a
+            // node whose contraction exceeds PAR_BATCH_TOTAL_MIN_FLOP
+            // forks its own row bands / batch splits inside the GEMM,
+            // and nesting both layers would oversubscribe the cores.
             if nt > 1
                 && self.level_flops[lv] >= PAR_LEVEL_MIN_FLOP
                 && self.level_max_flops[lv] <= PAR_BATCH_TOTAL_MIN_FLOP
             {
-                // band-split the level across scoped worker threads; each
-                // thread writes its own slice of `results`
-                let mut results: Vec<Option<Val>> = Vec::with_capacity(level.len());
-                results.resize_with(level.len(), || None);
-                let per = level.len().div_ceil(nt);
+                // Work stealing: workers claim chunks of the level from
+                // a shared cursor, so one oversized node delays only the
+                // thread that claimed it — not a whole static band.
+                let results: Vec<Mutex<Option<Val>>> =
+                    level.iter().map(|_| Mutex::new(None)).collect();
+                let cursor = AtomicUsize::new(0);
+                let chunk = (level.len() / (nt * STEAL_CHUNKS_PER_THREAD)).max(1);
                 std::thread::scope(|s| {
                     let values_ref = &values;
-                    let mut rest: &mut [Option<Val>] = &mut results;
-                    let mut nodes: &[usize] = level;
-                    while !rest.is_empty() {
-                        let take = per.min(rest.len());
-                        let (band, tail) = rest.split_at_mut(take);
-                        let (nb, ntail) = nodes.split_at(take);
+                    let results_ref = &results;
+                    let cursor_ref = &cursor;
+                    for _ in 0..nt {
                         s.spawn(move || {
                             let mut band_scratch =
                                 self.scratches.lock().unwrap().pop().unwrap_or_default();
-                            for (slot, &p) in band.iter_mut().zip(nb) {
-                                *slot =
-                                    Some(self.exec_node(p, values_ref, env, &mut band_scratch));
+                            loop {
+                                let start = cursor_ref.fetch_add(chunk, Ordering::Relaxed);
+                                if start >= level.len() {
+                                    break;
+                                }
+                                let end = (start + chunk).min(level.len());
+                                for k in start..end {
+                                    let v = self.exec_node(
+                                        level[k],
+                                        values_ref,
+                                        env,
+                                        &mut band_scratch,
+                                    );
+                                    *results_ref[k].lock().unwrap() = Some(v);
+                                }
                             }
                             self.scratches.lock().unwrap().push(band_scratch);
                         });
-                        rest = tail;
-                        nodes = ntail;
                     }
                 });
                 for (r, &p) in results.into_iter().zip(level) {
-                    values[p] = r;
+                    values[p] = r.into_inner().unwrap();
                 }
             } else {
                 for &p in level {
@@ -373,13 +842,21 @@ impl CompiledPlan {
                 }
                 Val::Owned(Tensor::new(shape, buf))
             }
-            Instr::Mul(a, b, plan) => {
+            Instr::Mul(a, b, plan, epi) => {
                 let ta = values[*a].as_ref().expect("operand not computed").tensor();
                 let tb = values[*b].as_ref().expect("operand not computed").tensor();
                 let out_len: usize = shape.iter().product();
                 let buf = self.pool.lock().unwrap().acquire(out_len);
                 let mut out = Tensor::new(shape, buf);
-                plan.run(ta, tb, &mut out, scratch);
+                match epi {
+                    None => plan.run(ta, tb, &mut out, scratch),
+                    Some(e) => {
+                        let srcs = fused_srcs(&e.args, values, out_len);
+                        plan.run_with_epilogue(ta, tb, &mut out, scratch, |data| {
+                            e.kernel.run_inplace(data, &srcs)
+                        });
+                    }
+                }
                 Val::Owned(out)
             }
             Instr::Elem(f, a) => {
@@ -390,28 +867,74 @@ impl CompiledPlan {
                 }
                 Val::Owned(Tensor::new(shape, buf))
             }
-            Instr::GenUnary(f, a) => {
+            Instr::GenUnary(f, a, epi) => {
                 let ta = values[*a].as_ref().expect("operand not computed").tensor();
                 let out_len: usize = shape.iter().product();
                 let mut buf = self.pool.lock().unwrap().acquire(out_len);
                 gen_unary_into(*f, ta, &mut buf);
+                if let Some(e) = epi {
+                    let srcs = fused_srcs(&e.args, values, out_len);
+                    e.kernel.run_inplace(&mut buf, &srcs);
+                }
+                Val::Owned(Tensor::new(shape, buf))
+            }
+            Instr::Fused { kernel, args } => {
+                let out_len: usize = shape.iter().product();
+                let srcs = fused_srcs(args, values, out_len);
+                let mut buf = self.pool.lock().unwrap().acquire(out_len);
+                kernel.run(&srcs, &mut buf);
                 Val::Owned(Tensor::new(shape, buf))
             }
         }
     }
 }
 
-/// Operand positions of one instruction.
+/// Resolve fused-kernel operand slots against computed values: operands
+/// matching the output length stream per element, rank-0 operands
+/// broadcast. (Group construction guarantees every slot is one of the
+/// two.)
+///
+/// This allocates one small `Vec` per fused instruction per run — the
+/// only steady-state allocation left on the hot path (a handful of
+/// `FusedSrc` words, amortised over the kernel's whole-buffer pass).
+/// Hoisting it into a per-worker scratch like `EinScratch` is listed as
+/// an open seam in ROADMAP.md.
+fn fused_srcs<'v>(
+    args: &[usize],
+    values: &'v [Option<Val<'_>>],
+    out_len: usize,
+) -> Vec<FusedSrc<'v>> {
+    args.iter()
+        .map(|&q| {
+            let t = values[q].as_ref().expect("operand not computed").tensor();
+            if t.len() == out_len {
+                FusedSrc::Slice(t.data())
+            } else {
+                FusedSrc::Scalar(t.data()[0])
+            }
+        })
+        .collect()
+}
+
+/// Operand positions of one instruction (epilogue arguments included).
 fn operands(instr: &Instr) -> Vec<usize> {
-    match instr {
-        Instr::Add(a, b) | Instr::Mul(a, b, _) => vec![*a, *b],
-        Instr::Elem(_, a) | Instr::GenUnary(_, a) => vec![*a],
+    let mut v = match instr {
+        Instr::Add(a, b) | Instr::Mul(a, b, _, _) => vec![*a, *b],
+        Instr::Elem(_, a) | Instr::GenUnary(_, a, _) => vec![*a],
+        Instr::Fused { args, .. } => args.clone(),
         Instr::Var { .. } | Instr::Static(_) => Vec::new(),
+    };
+    match instr {
+        Instr::Mul(_, _, _, Some(e)) | Instr::GenUnary(_, _, Some(e)) => v.extend(&e.args),
+        _ => {}
     }
+    v
 }
 
 /// Write-into evaluation of the general unary functions (mirrors
-/// [`GenFn::eval`] but targets a pooled buffer).
+/// [`GenFn::eval`] but targets a pooled buffer). Rank-0 inputs are
+/// rejected by `CompiledPlan::with_fusion` at compile time, so the
+/// `expect` here is defensive.
 fn gen_unary_into(f: GenFn, t: &Tensor, out: &mut [f64]) {
     let n = *t.shape().last().expect("GenFn needs rank ≥ 1");
     match f {
@@ -531,6 +1054,48 @@ mod tests {
         let a = compiled.run(&env);
         let b = interp.run(&g, &env);
         assert!(a[0].allclose(&b[0], 1e-12, 1e-14), "diff {}", a[0].max_abs_diff(&b[0]));
+    }
+
+    #[test]
+    fn expression1_fuses_chain_and_epilogue() {
+        let (g, y, env) = expr1();
+        let fused = CompiledPlan::new(&g, &[y]);
+        let unfused = CompiledPlan::with_fusion(&g, &[y], false);
+        assert!(fused.len() < unfused.len(), "fusion must shrink the stream");
+        assert!(fused.fused_count() >= 1, "expression 1 has a fusable chain");
+        let a = fused.run(&env);
+        let b = unfused.run(&env);
+        assert_eq!(a[0].data(), b[0].data(), "fusion changed the numerics");
+    }
+
+    #[test]
+    fn deep_chain_fuses_to_single_instruction() {
+        let mut g = Graph::new();
+        let x = g.var("x", &[8]);
+        let mut v = x;
+        for _ in 0..6 {
+            v = g.elem(Elem::Tanh, v);
+            v = g.scale(v, 0.5);
+        }
+        let mut env = Env::new();
+        env.insert("x", Tensor::randn(&[8], 5));
+        let plan = CompiledPlan::new(&g, &[v]);
+        // stream: Var x, the shared 0.5 Static, one Fused pipeline
+        assert_eq!(plan.fused_count(), 1);
+        assert_eq!(plan.len(), 3);
+        let unfused = CompiledPlan::with_fusion(&g, &[v], false);
+        let a = plan.run(&env);
+        let b = unfused.run(&env);
+        assert_eq!(a[0].data(), b[0].data());
+    }
+
+    #[test]
+    #[should_panic(expected = "rank ≥ 1")]
+    fn rank0_gen_unary_rejected_at_compile_time() {
+        let mut g = Graph::new();
+        let x = g.var("x", &[]);
+        let s = g.gen_unary(GenFn::Softmax, x);
+        let _ = CompiledPlan::new(&g, &[s]);
     }
 
     #[test]

@@ -47,7 +47,9 @@ impl Elem {
         }
     }
 
-    /// Scalar evaluation.
+    /// Scalar evaluation. `#[inline]` because the compiled executor's
+    /// fused kernels call this once per element inside their hot loop.
+    #[inline]
     pub fn apply(self, x: f64) -> f64 {
         match self {
             Elem::Exp => x.exp(),

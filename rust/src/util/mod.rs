@@ -29,6 +29,13 @@ pub const PAR_BATCH_TOTAL_MIN_FLOP: usize = 1 << 16;
 /// the level's estimated flops exceed this.
 pub const PAR_LEVEL_MIN_FLOP: usize = 1 << 17;
 
+/// The work-stealing level scheduler in `crate::exec` carves each
+/// parallel level into roughly this many chunks *per worker thread*
+/// (at least one node per chunk): small enough that one oversized node
+/// strands at most the chunk that claimed it, large enough that the
+/// shared cursor is not hit once per node.
+pub const STEAL_CHUNKS_PER_THREAD: usize = 4;
+
 /// Number of worker threads (overridable with `TENSORCALC_THREADS`).
 pub fn num_threads() -> usize {
     static CACHE: AtomicUsize = AtomicUsize::new(0);

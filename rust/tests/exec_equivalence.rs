@@ -203,6 +203,112 @@ fn prop_compiled_matches_interpreter_on_random_dags() {
     }
 }
 
+/// Element-wise-heavy DAGs with chains of depth ≥ 6 — the shapes the
+/// fusion pass must collapse. Pins the fused `CompiledPlan` against the
+/// unfused (PR 1) plan and the interpreter, with a multi-use tail so
+/// leaves shared across groups stay materialised.
+#[test]
+fn prop_fused_deep_chains_match_interpreter_and_unfused() {
+    for seed in 0..20u64 {
+        let mut rng = XorShift::new(7000 + seed);
+        let mut g = Graph::new();
+        let x = g.var("x", &[5]);
+        let a = g.var("A", &[5, 5]);
+        let mut v = g.matvec(a, x);
+        let steps = 6 + rng.below(6);
+        for _ in 0..steps {
+            v = match rng.below(5) {
+                0 => g.elem(Elem::Tanh, v),
+                1 => g.elem(Elem::Sigmoid, v),
+                2 => g.scale(v, 0.7),
+                3 => {
+                    let c = g.constant(0.3, &[5]);
+                    g.add(v, c)
+                }
+                _ => g.elem(Elem::Neg, v),
+            };
+        }
+        let w = g.hadamard(v, v); // multi-use: v feeds two kernel slots
+        let f = g.sum_all(w);
+        let mut env = Env::new();
+        env.insert("x", Tensor::randn(&[5], seed + 1).scale(0.5));
+        env.insert("A", Tensor::randn(&[5, 5], seed + 2).scale(0.5));
+        let fused = CompiledPlan::new(&g, &[f, v]);
+        let unfused = CompiledPlan::with_fusion(&g, &[f, v], false);
+        assert!(fused.len() < unfused.len(), "seed {}: chain did not fuse", seed);
+        let got = fused.run(&env);
+        let base = unfused.run(&env);
+        let want = Plan::new(&g, &[f, v]).run(&g, &env);
+        for ((gt, bt), wt) in got.iter().zip(&base).zip(&want) {
+            assert!(
+                gt.allclose(wt, 1e-12, 1e-13),
+                "seed {}: fused vs interpreter diff {}",
+                seed,
+                gt.max_abs_diff(wt)
+            );
+            assert!(
+                bt.allclose(wt, 1e-12, 1e-13),
+                "seed {}: unfused vs interpreter diff {}",
+                seed,
+                bt.max_abs_diff(wt)
+            );
+        }
+    }
+}
+
+/// A deep pure-`Elem` chain: the fused plan must collapse it into one
+/// pipeline, cutting cold pool allocations versus one-buffer-per-node.
+#[test]
+fn fusion_cuts_fresh_pool_allocations_on_deep_elem_chain() {
+    let mut g = Graph::new();
+    let x = g.var("x", &[256]);
+    let mut v = g.elem(Elem::Tanh, x);
+    for _ in 0..9 {
+        v = g.elem(Elem::Sigmoid, v);
+        v = g.elem(Elem::Tanh, v);
+    }
+    let mut env = Env::new();
+    env.insert("x", Tensor::randn(&[256], 7));
+    let fused = CompiledPlan::new(&g, &[v]);
+    let unfused = CompiledPlan::with_fusion(&g, &[v], false);
+    let a = fused.run(&env);
+    let b = unfused.run(&env);
+    assert_eq!(a[0].data(), b[0].data(), "fusion changed the numerics");
+    let fs = fused.pool_stats();
+    let us = unfused.pool_stats();
+    assert!(
+        fs.fresh < us.fresh,
+        "fusion must cut cold allocations: fused {:?} vs unfused {:?}",
+        fs,
+        us
+    );
+    assert_eq!(fs.fresh, 1, "a fully fused chain needs exactly the root buffer");
+}
+
+/// One wide level of many small independent nodes: forces the
+/// work-stealing fork (level flops above the gate, every node below the
+/// internal-parallelism cutoff) and pins it to the interpreter.
+#[test]
+fn work_stealing_level_matches_interpreter_on_wide_level() {
+    let mut g = Graph::new();
+    let x = g.var("x", &[4096]);
+    let roots: Vec<NodeId> = (0..64).map(|i| g.scale(x, 1.0 + i as f64 * 0.01)).collect();
+    let mut env = Env::new();
+    env.insert("x", Tensor::randn(&[4096], 11));
+    let plan = CompiledPlan::new(&g, &roots);
+    let got = plan.run(&env);
+    let want = Plan::new(&g, &roots).run(&g, &env);
+    assert_eq!(got.len(), 64);
+    for (i, (gt, wt)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            gt.allclose(wt, 1e-12, 1e-14),
+            "root {}: stolen-level result diverged, diff {}",
+            i,
+            gt.max_abs_diff(wt)
+        );
+    }
+}
+
 #[test]
 fn pool_reuse_does_not_alias_or_drift() {
     // a DAG with many same-shaped intermediates so released buffers get
