@@ -31,6 +31,14 @@ fn main() {
     let hess_cc = optimize_contractions(&mut g, hess);
     println!("H shape: {:?}", g.shape(hess));
 
+    // the graph optimizer (global CSE + contraction reassociation) runs
+    // automatically inside eval_many; here is what it does to the joint
+    // loss/gradient/Hessian DAG before compilation
+    let stats = tensorcalc::opt::report(&g, &[f, grad, hess], OptLevel::Full);
+    println!("optimizer: {}", stats);
+    assert!(stats.nodes_after <= stats.nodes_before);
+    assert!(stats.flops_after <= stats.flops_before);
+
     // evaluate everything on random data
     let mut env = Env::new();
     env.insert("X", Tensor::randn(&[m, n], 1));

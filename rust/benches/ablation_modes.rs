@@ -15,7 +15,8 @@ use tensorcalc::eval::Env;
 use tensorcalc::exec::CompiledPlan;
 use tensorcalc::figures::{newton, print_table, Row};
 use tensorcalc::ir::{Elem, Graph};
-use tensorcalc::problems::matrix_factorization;
+use tensorcalc::opt::{optimize, OptLevel};
+use tensorcalc::problems::{logistic_regression, matrix_factorization, neural_net};
 use tensorcalc::tensor::Tensor;
 use tensorcalc::util::time_median;
 
@@ -103,6 +104,50 @@ fn main() {
         }
     }
     print_table("Fusion ablation — 15-deep element-wise chain", &rows);
+
+    // ---- opt: graph-optimizer ablation on the fig3 Hessian workloads ----
+    // none = the raw Theorem-8/simplify output, cse = global CSE only,
+    // cse+reassoc = the full pipeline eval_many/plan-cache run.
+    let mut rows = Vec::new();
+    for &(p, n) in &[("logreg", 32usize), ("logreg", 64), ("matfac", 32), ("mlp", 16)] {
+        let mut w = match p {
+            "logreg" => logistic_regression(2 * n, n),
+            "matfac" => matrix_factorization(n, n, 5, false),
+            _ => neural_net(n, 10, 2 * n),
+        };
+        let h = w.hessian();
+        for (label, level) in [
+            ("OptLevel::None", OptLevel::None),
+            ("cse", OptLevel::Cse),
+            ("cse+reassoc", OptLevel::Full),
+        ] {
+            let mut g2 = w.g.clone();
+            let o = optimize(&mut g2, &[h], level);
+            let plan = CompiledPlan::new(&g2, &o.roots);
+            let _ = plan.run(&w.env); // warm-up
+            let (t, runs) = time_median(
+                || {
+                    std::hint::black_box(plan.run(&w.env));
+                },
+                3,
+                secs,
+            );
+            println!("  opt[{:<15}] {:<8} n={:<4} {}", label, p, n, o.stats);
+            rows.push(Row { figure: "opt", problem: p, n, mode: label.into(), secs: t, runs });
+        }
+    }
+    print_table("Optimizer ablation — Hessians, none vs CSE vs CSE+reassoc", &rows);
+    for &(p, n) in &[("logreg", 32usize), ("logreg", 64), ("matfac", 32), ("mlp", 16)] {
+        let base = rows
+            .iter()
+            .find(|r| r.problem == p && r.n == n && r.mode.starts_with("OptLevel::None"));
+        let full = rows
+            .iter()
+            .find(|r| r.problem == p && r.n == n && r.mode == "cse+reassoc");
+        if let (Some(b), Some(f)) = (base, full) {
+            println!("  {:<8} n={:<4} cse+reassoc is {:>6.2}× vs OptLevel::None", p, n, b.secs / f.secs);
+        }
+    }
 
     // ---- compress: core vs materialised matfac Hessian ----
     let mut rows = Vec::new();

@@ -3,7 +3,7 @@
 //! Forward and reverse mode multiply the partial derivatives in opposite,
 //! fixed orders; neither is optimal for non-scalar derivatives. The paper's
 //! strategy — multiply tensors in order of increasing tensor order
-//! (vectors first, then matrices, …) — is implemented here as its natural
+//! (vectors first, then matrices, …) — is implemented as its natural
 //! generalization: multiplication chains in the derivative DAG are
 //! flattened into n-ary contractions and re-associated greedily by
 //! contraction cost (with tensor order as tie-break). On the
@@ -11,230 +11,30 @@
 //! reproduces exactly the paper's ordering: the element-wise vector
 //! factors merge first.
 //!
+//! Since PR 3 the machinery lives in [`crate::opt::reassoc`], where the
+//! optimizer pipeline runs it jointly over whole root sets (with a cost
+//! guard); this entry point is the single-root historical API used by
+//! the `ours(cross-country)` mode and the compression pipeline.
+//!
 //! Re-association is justified by Lemmas 1–3; the flattened n-ary view
 //! makes the validity condition automatic (labels are unified globally,
 //! summed labels stay internal).
 
-use crate::einsum::{EinSpec, Label};
-use crate::ir::{Graph, NodeId, Op};
-use std::collections::HashMap;
-
-type GLabel = u64;
+use crate::ir::{Graph, NodeId};
 
 /// Re-associate all multiplication chains below `root`; returns the new
 /// root. Semantics are preserved exactly (tested against the untouched
 /// DAG); only the association order of `*` changes.
 pub fn optimize_contractions(g: &mut Graph, root: NodeId) -> NodeId {
-    let uses = g.use_counts(&[root]);
-    let mut opt = Opt { uses, memo: HashMap::new(), counter: 0 };
-    opt.rewrite(g, root)
-}
-
-struct Opt {
-    uses: Vec<u32>,
-    memo: HashMap<NodeId, NodeId>,
-    counter: GLabel,
-}
-
-/// One operand of a flattened n-ary contraction: the (original-graph)
-/// node plus the global labels of its axes.
-struct Term {
-    node: NodeId,
-    labels: Vec<GLabel>,
-}
-
-impl Opt {
-    fn fresh(&mut self) -> GLabel {
-        self.counter += 1;
-        self.counter
-    }
-
-    fn rewrite(&mut self, g: &mut Graph, id: NodeId) -> NodeId {
-        if let Some(&m) = self.memo.get(&id) {
-            return m;
-        }
-        let res = match g.op(id).clone() {
-            Op::Mul(..) => {
-                // flatten the chain rooted here
-                let out: Vec<GLabel> = (0..g.order(id)).map(|_| self.fresh()).collect();
-                let mut terms: Vec<Term> = Vec::new();
-                let mut dims: HashMap<GLabel, usize> = HashMap::new();
-                for (gl, &d) in out.iter().zip(g.shape(id)) {
-                    dims.insert(*gl, d);
-                }
-                self.flatten(g, id, &out, true, &mut terms, &mut dims);
-                // rewrite the atomic operands themselves
-                for t in &mut terms {
-                    t.node = self.rewrite(g, t.node);
-                }
-                contract_greedy(g, terms, &out, &dims)
-            }
-            Op::Add(a, b) => {
-                let a = self.rewrite(g, a);
-                let b = self.rewrite(g, b);
-                g.add(a, b)
-            }
-            Op::Elem(f, a) => {
-                let a = self.rewrite(g, a);
-                g.elem(f, a)
-            }
-            Op::GenUnary(f, a) => {
-                let a = self.rewrite(g, a);
-                g.gen_unary(f, a)
-            }
-            _ => id,
-        };
-        self.memo.insert(id, res);
-        res
-    }
-
-    /// Collect the operands of the multiplication tree at `id`, whose
-    /// axes carry the global labels `labels`. Only exclusively-owned Mul
-    /// children are inlined — shared subexpressions stay atomic so no
-    /// work is duplicated.
-    fn flatten(
-        &mut self,
-        g: &Graph,
-        id: NodeId,
-        labels: &[GLabel],
-        is_root: bool,
-        terms: &mut Vec<Term>,
-        dims: &mut HashMap<GLabel, usize>,
-    ) {
-        let inline = is_root || self.uses[id.index()] <= 1;
-        if let Op::Mul(a, b, spec) = g.op(id).clone() {
-            if inline {
-                // map the spec's local labels to global ones: output labels
-                // through `labels`, summed labels fresh
-                let mut map: HashMap<Label, GLabel> = HashMap::new();
-                for (l, &gl) in spec.s3.iter().zip(labels) {
-                    map.insert(*l, gl);
-                }
-                let bind = |this: &mut Self,
-                            map: &mut HashMap<Label, GLabel>,
-                            ls: &[Label],
-                            shape: &[usize],
-                            dims: &mut HashMap<GLabel, usize>|
-                 -> Vec<GLabel> {
-                    ls.iter()
-                        .zip(shape)
-                        .map(|(l, &d)| {
-                            let gl = *map.entry(*l).or_insert_with(|| this.fresh());
-                            dims.insert(gl, d);
-                            gl
-                        })
-                        .collect()
-                };
-                let la = bind(self, &mut map, &spec.s1, g.shape(a), dims);
-                let lb = bind(self, &mut map, &spec.s2, g.shape(b), dims);
-                self.flatten(g, a, &la, false, terms, dims);
-                self.flatten(g, b, &lb, false, terms, dims);
-                return;
-            }
-        }
-        terms.push(Term { node: id, labels: labels.to_vec() });
-    }
-}
-
-/// Greedily contract the flattened terms pairwise: cheapest contraction
-/// first (iteration-space size; ties broken by the *order* of the result
-/// tensor — the paper's vectors-before-matrices rule).
-fn contract_greedy(
-    g: &mut Graph,
-    mut terms: Vec<Term>,
-    out: &[GLabel],
-    dims: &HashMap<GLabel, usize>,
-) -> NodeId {
-    assert!(!terms.is_empty());
-    while terms.len() > 1 {
-        let mut best: Option<(usize, usize, u128, usize)> = None; // (i, j, cost, result order)
-        for i in 0..terms.len() {
-            for j in (i + 1)..terms.len() {
-                let (cost, res) = pair_result(&terms, i, j, out, dims);
-                let order = res.len();
-                let better = match best {
-                    None => true,
-                    Some((_, _, bc, bo)) => cost < bc || (cost == bc && order < bo),
-                };
-                if better {
-                    best = Some((i, j, cost, order));
-                }
-            }
-        }
-        let (i, j, _, _) = best.unwrap();
-        let (_, mut res_labels) = pair_result(&terms, i, j, out, dims);
-        if terms.len() == 2 {
-            // final contraction: emit directly in the requested output order
-            res_labels = out.to_vec();
-        }
-        let merged = build_mul(g, &terms[i], &terms[j], &res_labels);
-        terms[i] = Term { node: merged, labels: res_labels };
-        terms.remove(j);
-    }
-    let last = terms.pop().unwrap();
-    // final axis order must match `out`
-    if last.labels == out {
-        last.node
-    } else {
-        let perm: Vec<usize> = out
-            .iter()
-            .map(|gl| last.labels.iter().position(|x| x == gl).unwrap())
-            .collect();
-        g.transpose(last.node, &perm)
-    }
-}
-
-/// Cost (iteration-space size) and surviving labels of contracting the
-/// pair `(i, j)`: a label survives if some other term or the output still
-/// needs it.
-fn pair_result(
-    terms: &[Term],
-    i: usize,
-    j: usize,
-    out: &[GLabel],
-    dims: &HashMap<GLabel, usize>,
-) -> (u128, Vec<GLabel>) {
-    let mut union: Vec<GLabel> = Vec::new();
-    for &l in terms[i].labels.iter().chain(&terms[j].labels) {
-        if !union.contains(&l) {
-            union.push(l);
-        }
-    }
-    let cost: u128 = union.iter().map(|l| dims[l] as u128).product();
-    let needed = |l: &GLabel| {
-        out.contains(l)
-            || terms
-                .iter()
-                .enumerate()
-                .any(|(t, term)| t != i && t != j && term.labels.contains(l))
-    };
-    let res: Vec<GLabel> = union.into_iter().filter(needed).collect();
-    (cost, res)
-}
-
-/// Emit the binary Mul node for one greedy step, relabelling the global
-/// labels into a compact local space.
-fn build_mul(g: &mut Graph, a: &Term, b: &Term, res: &[GLabel]) -> NodeId {
-    let mut local: HashMap<GLabel, Label> = HashMap::new();
-    let mut next: Label = 0;
-    let mut conv = |gl: GLabel, local: &mut HashMap<GLabel, Label>| -> Label {
-        *local.entry(gl).or_insert_with(|| {
-            let l = next;
-            next += 1;
-            l
-        })
-    };
-    let s1: Vec<Label> = a.labels.iter().map(|&gl| conv(gl, &mut local)).collect();
-    let s2: Vec<Label> = b.labels.iter().map(|&gl| conv(gl, &mut local)).collect();
-    let s3: Vec<Label> = res.iter().map(|&gl| conv(gl, &mut local)).collect();
-    g.mul(a.node, b.node, EinSpec::new(s1, s2, s3))
+    crate::opt::reassoc::reassociate(g, &[root]).0[0]
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::einsum::EinSpec;
     use crate::eval::{eval, Env};
-    use crate::ir::Elem;
+    use crate::ir::{Elem, Op};
     use crate::simplify::{flop_estimate, simplify_one};
     use crate::tensor::Tensor;
 

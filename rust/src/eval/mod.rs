@@ -12,12 +12,14 @@
 //! * [`crate::exec::CompiledPlan`] — the pooled-buffer *hot path*:
 //!   element-wise chains fused into single-pass kernels/epilogues and
 //!   levels scheduled with work stealing. [`eval_many`] (and therefore
-//!   [`eval`]) route through it; the FD helpers below stay on the
-//!   interpreter on purpose.
+//!   [`eval`]) first run the [`crate::opt`] graph optimizer (global CSE
+//!   + contraction reassociation) and then route through it; the FD
+//!   helpers below stay on the raw interpreter on purpose.
 
-use crate::ir::{Graph, NodeId, Op};
-use crate::tensor::Tensor;
 use crate::einsum::einsum;
+use crate::ir::{Graph, NodeId, Op};
+use crate::opt::OptLevel;
+use crate::tensor::Tensor;
 use std::collections::HashMap;
 
 /// Variable bindings for evaluation.
@@ -49,10 +51,25 @@ pub fn eval(g: &Graph, root: NodeId, env: &Env) -> Tensor {
     eval_many(g, &[root], env).pop().unwrap()
 }
 
-/// Evaluate several roots sharing intermediate results. Routes through
-/// the compiled executor; use [`Plan`] directly for the interpreter.
+/// Evaluate several roots sharing intermediate results. Runs the
+/// [`crate::opt`] pipeline (global CSE + contraction reassociation, on a
+/// clone of the graph) and routes through the compiled executor; use
+/// [`eval_many_with`] + [`OptLevel::None`] for the unoptimized lowering
+/// and [`Plan`] directly for the interpreter.
 pub fn eval_many(g: &Graph, roots: &[NodeId], env: &Env) -> Vec<Tensor> {
-    crate::exec::CompiledPlan::new(g, roots).run(env)
+    eval_many_with(g, roots, env, OptLevel::default())
+}
+
+/// [`eval_many`] with an explicit optimizer level. `OptLevel::None` is
+/// the escape hatch that compiles the graph exactly as given (the
+/// ablation baseline alongside `CompiledPlan::with_fusion(.., false)`).
+pub fn eval_many_with(g: &Graph, roots: &[NodeId], env: &Env, level: OptLevel) -> Vec<Tensor> {
+    if level == OptLevel::None {
+        return crate::exec::CompiledPlan::new(g, roots).run(env);
+    }
+    let mut g2 = g.clone();
+    let o = crate::opt::optimize(&mut g2, roots, level);
+    crate::exec::CompiledPlan::new(&g2, &o.roots).run(env)
 }
 
 /// A reusable evaluation plan: topological order restricted to the

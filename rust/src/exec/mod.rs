@@ -32,7 +32,10 @@
 //! general unary whose value is not needed elsewhere, the kernel is
 //! instead applied *in place* as an epilogue on the producer's freshly
 //! written buffer (via [`EinsumPlan::run_with_epilogue`]), so the whole
-//! chain costs no buffer at all.
+//! chain costs no buffer at all. Kernels are capped at `FUSED_MAX_ARGS`
+//! operand slots (a chain that would exceed it splits into two kernels),
+//! which lets execution resolve operands into a stack array — the hot
+//! path performs no heap allocation at all once the pool is warm.
 //!
 //! ## Work-stealing level scheduling
 //!
@@ -44,21 +47,28 @@
 //! ## Plan-cache key contract
 //!
 //! [`PlanCache`] memoises compiled plans for the coordinator's
-//! repeated-request hot path. The key is
-//! `(graph fingerprint, root node ids)` where the fingerprint hashes
-//! every node of the graph **in id order** — operator, einsum spec,
-//! constant bits, δ dims *and node shape*. Because `Var` nodes carry
-//! their declared shape, the fingerprint covers the input-shape
-//! signature; two graphs with equal fingerprints therefore compile to
-//! identical instruction streams (modulo 64-bit hash collision). The
-//! cache never evicts: it is bounded by the number of distinct
-//! `(graph, roots)` pairs a process registers, which is the number of
-//! distinct service entries. Cached plans are `Arc`-shared, so every
-//! worker that serves the same graph also shares one warm buffer pool.
+//! repeated-request hot path. Unless the caller opts out with
+//! [`OptLevel::None`](crate::opt::OptLevel), the graph first runs
+//! through the [`crate::opt`] pipeline (global CSE + contraction
+//! reassociation) and a dead-node sweep; the key is
+//! `(graph fingerprint, root node ids)` **of the optimized, compacted
+//! graph**, where the fingerprint hashes every node **in id order** —
+//! operator, einsum spec, constant bits, δ dims *and node shape*.
+//! Because `Var` nodes carry their declared shape, the fingerprint
+//! covers the input-shape signature, and because the optimizer
+//! canonicalises specs and operand orders, differently-built but
+//! equivalent graphs converge on the same key; two graphs with equal
+//! fingerprints compile to identical instruction streams (modulo 64-bit
+//! hash collision). The cache never evicts: it is bounded by the number
+//! of distinct `(graph, roots)` pairs a process registers, which is the
+//! number of distinct service entries. Cached plans are `Arc`-shared,
+//! so every worker that serves the same graph also shares one warm
+//! buffer pool.
 
 use crate::einsum::{EinScratch, EinSpec, EinsumPlan, Label};
 use crate::eval::Env;
 use crate::ir::{Elem, GenFn, Graph, NodeId, Op};
+use crate::opt::OptLevel;
 use crate::tensor::Tensor;
 use crate::util::{
     num_threads, PAR_BATCH_TOTAL_MIN_FLOP, PAR_LEVEL_MIN_FLOP, STEAL_CHUNKS_PER_THREAD,
@@ -116,6 +126,13 @@ impl BufferPool {
 /// group builder stops inlining before a kernel could exceed it.
 const FUSED_MAX_STACK: usize = 16;
 
+/// Maximum number of operand slots of a [`FusedKernel`]. The group
+/// builder enforces it (pending-leaf accounting in
+/// [`GroupBuilder::operand`]), which lets the executor resolve operands
+/// into a fixed-size stack array per instruction — no heap allocation on
+/// the steady-state hot path.
+const FUSED_MAX_ARGS: usize = 16;
+
 /// One step of a fused single-pass pipeline (postfix form).
 #[derive(Clone, Copy)]
 enum FusedOp {
@@ -141,7 +158,9 @@ struct FusedKernel {
 }
 
 /// An operand slot resolved for one execution: same-shape operands are
-/// read per element, rank-0 operands broadcast one value.
+/// read per element, rank-0 operands broadcast one value. `Copy` so a
+/// whole slot array can live on the stack (see [`fused_srcs`]).
+#[derive(Clone, Copy)]
 enum FusedSrc<'s> {
     Slice(&'s [f64]),
     Scalar(f64),
@@ -369,26 +388,29 @@ struct GroupBuilder<'c> {
 
 impl GroupBuilder<'_> {
     /// Emit the postfix program of member `p`; the value stack already
-    /// holds `held` entries when the member starts executing.
-    fn member(&self, p: usize, held: usize, melted: &mut [bool], grp: &mut Group) {
+    /// holds `held` entries when the member starts executing, and
+    /// enclosing members will still load `pending` more leaves after
+    /// this member returns (the operand-slot budget mirrors how `held`
+    /// budgets the value stack).
+    fn member(&self, p: usize, held: usize, pending: usize, melted: &mut [bool], grp: &mut Group) {
         grp.n_nodes += 1;
         match self.fusable[p].expect("group member must be fusable") {
             FuseNode::Un(f, a) => {
-                self.operand(a, held, melted, grp);
+                self.operand(a, held, pending, melted, grp);
                 grp.ops.push(FusedOp::Un(f));
             }
             FuseNode::Add2(a, b) => {
-                self.operand(a, held, melted, grp);
-                self.operand(b, held + 1, melted, grp);
+                self.operand(a, held, pending + 1, melted, grp);
+                self.operand(b, held + 1, pending, melted, grp);
                 grp.ops.push(FusedOp::Add);
             }
             FuseNode::Had(a, b) => {
-                self.operand(a, held, melted, grp);
-                self.operand(b, held + 1, melted, grp);
+                self.operand(a, held, pending + 1, melted, grp);
+                self.operand(b, held + 1, pending, melted, grp);
                 grp.ops.push(FusedOp::Mul);
             }
             FuseNode::Scale(t, s) => {
-                self.operand(t, held, melted, grp);
+                self.operand(t, held, pending + 1, melted, grp);
                 // the rank-0 operand broadcasts per run, not per
                 // element: always a leaf
                 grp.push_leaf(s);
@@ -398,17 +420,27 @@ impl GroupBuilder<'_> {
     }
 
     /// Inline operand `o` when it is fusable, consumed only here, not a
-    /// plan root, shape-preserving, and the value stack has headroom;
+    /// plan root, shape-preserving, and both the value stack and the
+    /// operand-slot array have headroom (an inlined member adds at most
+    /// two direct leaves, and `pending` siblings still follow);
     /// otherwise record it as a leaf.
-    fn operand(&self, o: usize, held: usize, melted: &mut [bool], grp: &mut Group) {
+    fn operand(
+        &self,
+        o: usize,
+        held: usize,
+        pending: usize,
+        melted: &mut [bool],
+        grp: &mut Group,
+    ) {
         let inline = held + 2 <= FUSED_MAX_STACK
+            && grp.leaves.len() + pending + 2 <= FUSED_MAX_ARGS
             && !self.is_root[o]
             && self.uses[o] == 1
             && self.fusable[o].is_some()
             && self.shapes[o].as_slice() == self.group_shape;
         if inline {
             melted[o] = true;
-            self.member(o, held, melted, grp);
+            self.member(o, held, pending, melted, grp);
         } else {
             grp.push_leaf(o);
         }
@@ -543,7 +575,7 @@ impl CompiledPlan {
                 group_shape: &shapes[p],
             };
             let mut grp = Group::default();
-            builder.member(p, 0, &mut melted, &mut grp);
+            builder.member(p, 0, 0, &mut melted, &mut grp);
             // epilogue carrier: a contraction / general unary consumed
             // only by this group, producing exactly the group shape
             let carrier_slot = grp.leaves.iter().enumerate().find_map(|(slot, &l)| {
@@ -853,7 +885,7 @@ impl CompiledPlan {
                     Some(e) => {
                         let srcs = fused_srcs(&e.args, values, out_len);
                         plan.run_with_epilogue(ta, tb, &mut out, scratch, |data| {
-                            e.kernel.run_inplace(data, &srcs)
+                            e.kernel.run_inplace(data, &srcs[..e.args.len()])
                         });
                     }
                 }
@@ -874,7 +906,7 @@ impl CompiledPlan {
                 gen_unary_into(*f, ta, &mut buf);
                 if let Some(e) = epi {
                     let srcs = fused_srcs(&e.args, values, out_len);
-                    e.kernel.run_inplace(&mut buf, &srcs);
+                    e.kernel.run_inplace(&mut buf, &srcs[..e.args.len()]);
                 }
                 Val::Owned(Tensor::new(shape, buf))
             }
@@ -882,7 +914,7 @@ impl CompiledPlan {
                 let out_len: usize = shape.iter().product();
                 let srcs = fused_srcs(args, values, out_len);
                 let mut buf = self.pool.lock().unwrap().acquire(out_len);
-                kernel.run(&srcs, &mut buf);
+                kernel.run(&srcs[..args.len()], &mut buf);
                 Val::Owned(Tensor::new(shape, buf))
             }
         }
@@ -894,26 +926,26 @@ impl CompiledPlan {
 /// broadcast. (Group construction guarantees every slot is one of the
 /// two.)
 ///
-/// This allocates one small `Vec` per fused instruction per run — the
-/// only steady-state allocation left on the hot path (a handful of
-/// `FusedSrc` words, amortised over the kernel's whole-buffer pass).
-/// Hoisting it into a per-worker scratch like `EinScratch` is listed as
-/// an open seam in ROADMAP.md.
+/// Returns a fixed-size stack array — the group builder caps kernels at
+/// [`FUSED_MAX_ARGS`] operand slots, so resolution costs zero heap
+/// allocations and the executor's steady-state hot path is strictly
+/// alloc-free (callers slice the array to `args.len()`).
 fn fused_srcs<'v>(
     args: &[usize],
     values: &'v [Option<Val<'_>>],
     out_len: usize,
-) -> Vec<FusedSrc<'v>> {
-    args.iter()
-        .map(|&q| {
-            let t = values[q].as_ref().expect("operand not computed").tensor();
-            if t.len() == out_len {
-                FusedSrc::Slice(t.data())
-            } else {
-                FusedSrc::Scalar(t.data()[0])
-            }
-        })
-        .collect()
+) -> [FusedSrc<'v>; FUSED_MAX_ARGS] {
+    debug_assert!(args.len() <= FUSED_MAX_ARGS, "group builder must cap operand slots");
+    let mut srcs = [FusedSrc::Scalar(0.0); FUSED_MAX_ARGS];
+    for (slot, &q) in args.iter().enumerate() {
+        let t = values[q].as_ref().expect("operand not computed").tensor();
+        srcs[slot] = if t.len() == out_len {
+            FusedSrc::Slice(t.data())
+        } else {
+            FusedSrc::Scalar(t.data()[0])
+        };
+    }
+    srcs
 }
 
 /// Operand positions of one instruction (epilogue arguments included).
@@ -983,7 +1015,13 @@ struct PlanKey {
 /// shares it (plan + warm buffer pool) across workers.
 #[derive(Default)]
 pub struct PlanCache {
+    /// canonical plans, keyed by the fingerprint of the graph actually
+    /// compiled (the optimized + compacted graph unless `OptLevel::None`)
     map: Mutex<HashMap<PlanKey, Arc<CompiledPlan>>>,
+    /// fast path: `(raw input fingerprint, roots, level)` → plan, so a
+    /// repeated request skips the optimizer entirely — only first-time
+    /// graphs pay for canonicalization
+    by_input: Mutex<HashMap<(PlanKey, OptLevel), Arc<CompiledPlan>>>,
 }
 
 impl PlanCache {
@@ -991,22 +1029,67 @@ impl PlanCache {
         PlanCache::default()
     }
 
-    /// Fetch the compiled plan for `(g, roots)`, compiling on first use.
+    /// Fetch the compiled plan for `(g, roots)` at the default optimizer
+    /// level, compiling on first use.
     pub fn get_or_compile(&self, g: &Graph, roots: &[NodeId]) -> Arc<CompiledPlan> {
-        let key = PlanKey {
+        self.get_or_compile_with(g, roots, OptLevel::default())
+    }
+
+    /// Fetch the compiled plan for `(g, roots)` with an explicit
+    /// optimizer level. For `OptLevel::None` the graph is fingerprinted
+    /// and compiled exactly as given (the pre-PR 3 behaviour, kept as
+    /// the ablation escape hatch); otherwise the graph is optimized and
+    /// dead-node-swept first and the *optimized, compacted* graph is
+    /// what the key fingerprints — so differently-built but equivalent
+    /// graphs converge on one cached plan (and one warm buffer pool).
+    pub fn get_or_compile_with(
+        &self,
+        g: &Graph,
+        roots: &[NodeId],
+        level: OptLevel,
+    ) -> Arc<CompiledPlan> {
+        let input_key = PlanKey {
             fingerprint: graph_fingerprint(g),
             roots: roots.iter().map(|r| r.0).collect(),
         };
-        let mut map = self.map.lock().unwrap();
-        if let Some(plan) = map.get(&key) {
+        if level == OptLevel::None {
+            let mut map = self.map.lock().unwrap();
+            if let Some(plan) = map.get(&input_key) {
+                return plan.clone();
+            }
+            let plan = Arc::new(CompiledPlan::new(g, roots));
+            map.insert(input_key, plan.clone());
+            return plan;
+        }
+        // fast path: this exact graph was optimized before — one hash
+        // pass of the raw graph, no clone, no optimizer
+        let input_key = (input_key, level);
+        if let Some(plan) = self.by_input.lock().unwrap().get(&input_key) {
             return plan.clone();
         }
-        let plan = Arc::new(CompiledPlan::new(g, roots));
-        map.insert(key, plan.clone());
+        let mut g2 = g.clone();
+        let o = crate::opt::optimize(&mut g2, roots, level);
+        let (gc, croots) = crate::opt::compact(&g2, &o.roots);
+        let canon_key = PlanKey {
+            fingerprint: graph_fingerprint(&gc),
+            roots: croots.iter().map(|r| r.0).collect(),
+        };
+        let plan = {
+            let mut map = self.map.lock().unwrap();
+            if let Some(plan) = map.get(&canon_key) {
+                plan.clone()
+            } else {
+                let plan = Arc::new(CompiledPlan::new(&gc, &croots));
+                map.insert(canon_key, plan.clone());
+                plan
+            }
+        };
+        self.by_input.lock().unwrap().insert(input_key, plan.clone());
         plan
     }
 
-    /// Number of cached plans.
+    /// Number of cached plans (distinct compiled artifacts, not raw-graph
+    /// aliases).
     pub fn len(&self) -> usize {
         self.map.lock().unwrap().len()
     }
@@ -1174,6 +1257,66 @@ mod tests {
         // different roots miss
         let _ = cache.get_or_compile(&g, &[y, y]);
         assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn plan_cache_canonicalizes_equivalent_graphs() {
+        // the same contraction written with different labels / operand
+        // order must converge on ONE cached plan via the optimizer...
+        let build = |swap: bool| {
+            let mut g = Graph::new();
+            let a = g.var("A", &[4, 5]);
+            let x = g.var("x", &[5]);
+            let m = if swap {
+                g.mul(x, a, EinSpec::parse("j,ij->i"))
+            } else {
+                g.mul(a, x, EinSpec::new(vec![30, 31], vec![31], vec![30]))
+            };
+            (g, m)
+        };
+        let cache = PlanCache::new();
+        let (g1, r1) = build(false);
+        let (g2, r2) = build(true);
+        let p1 = cache.get_or_compile(&g1, &[r1]);
+        let p2 = cache.get_or_compile(&g2, &[r2]);
+        assert!(Arc::ptr_eq(&p1, &p2), "canonicalisation must unify equivalent graphs");
+        assert_eq!(cache.len(), 1);
+        // ...while the OptLevel::None escape hatch keeps them distinct
+        let p3 = cache.get_or_compile_with(&g1, &[r1], OptLevel::None);
+        let p4 = cache.get_or_compile_with(&g2, &[r2], OptLevel::None);
+        assert!(!Arc::ptr_eq(&p3, &p4));
+        assert_eq!(cache.len(), 3);
+        // and both lowerings agree numerically
+        let mut env = Env::new();
+        env.insert("A", Tensor::randn(&[4, 5], 1));
+        env.insert("x", Tensor::randn(&[5], 2));
+        let a = p1.run(&env);
+        let b = p3.run(&env);
+        assert!(a[0].allclose(&b[0], 1e-12, 1e-13));
+    }
+
+    #[test]
+    fn wide_add_tree_splits_at_operand_cap() {
+        // 24 distinct leaves exceed FUSED_MAX_ARGS: the builder must
+        // split the chain into several kernels, bit-identically
+        let mut g = Graph::new();
+        let vars: Vec<NodeId> = (0..24).map(|i| g.var(&format!("x{}", i), &[32])).collect();
+        let mut v = vars[0];
+        for &x in &vars[1..] {
+            v = g.add(v, x);
+        }
+        let mut env = Env::new();
+        for (i, _) in vars.iter().enumerate() {
+            env.insert(&format!("x{}", i), Tensor::randn(&[32], 50 + i as u64));
+        }
+        let fused = CompiledPlan::new(&g, &[v]);
+        let unfused = CompiledPlan::with_fusion(&g, &[v], false);
+        assert!(fused.len() < unfused.len(), "the chain must still fuse partially");
+        let a = fused.run(&env);
+        let b = unfused.run(&env);
+        assert_eq!(a[0].data(), b[0].data(), "splitting must not change the association");
+        let want = Plan::new(&g, &[v]).run(&g, &env);
+        assert!(a[0].allclose(&want[0], 1e-12, 1e-13));
     }
 
     #[test]

@@ -15,12 +15,26 @@
 
 use crate::baselines::PerEntryHessian;
 use crate::exec::CompiledPlan;
+use crate::ir::{Graph, NodeId};
+use crate::opt::{self, OptLevel};
 use crate::problems::{
     logistic_regression, matrix_factorization, neural_net, newton_step_compressed,
     newton_step_full, Workload,
 };
 use crate::tensor::Tensor;
 use crate::util::{fmt_secs, time_median};
+
+/// Compile roots through the graph optimizer and report what it did.
+/// fig2 uses the production default ([`OptLevel::Full`]); the fig3 mode
+/// rows use [`OptLevel::Cse`] — CSE is association-preserving, so the
+/// reverse vs cross-country comparison the figure exists to report
+/// still measures the §3.3 reordering, not the optimizer's own
+/// reassociation pass.
+fn compile_opt(g: &Graph, roots: &[NodeId], level: OptLevel) -> (CompiledPlan, opt::OptStats) {
+    let mut g2 = g.clone();
+    let o = opt::optimize(&mut g2, roots, level);
+    (CompiledPlan::new(&g2, &o.roots), o.stats)
+}
 
 /// One measurement row.
 #[derive(Clone, Debug)]
@@ -67,7 +81,7 @@ pub fn fig2(problems: &[&'static str], sizes: &[usize], min_secs: f64) -> Vec<Ro
         for &n in sizes {
             let mut w = workloads_for(p, n);
             let grad = w.gradient();
-            let plan = CompiledPlan::new(&w.g, &[w.loss, grad]);
+            let (plan, _) = compile_opt(&w.g, &[w.loss, grad], OptLevel::Full);
             let env = w.env.clone();
             let (secs, runs) = time_median(
                 || {
@@ -148,7 +162,8 @@ pub fn fig3(
             {
                 let mut w = workloads_for(p, n);
                 let h = w.hessian();
-                let plan = CompiledPlan::new(&w.g, &[h]);
+                let (plan, stats) = compile_opt(&w.g, &[h], OptLevel::Cse);
+                println!("  [opt] fig3 {:<8} n={:<5} ours(reverse): {}", p, n, stats);
                 let (secs, runs) = time_median(
                     || {
                         std::hint::black_box(plan.run(&w.env));
@@ -162,7 +177,7 @@ pub fn fig3(
             {
                 let mut w = workloads_for(p, n);
                 let h = w.hessian_cross_country();
-                let plan = CompiledPlan::new(&w.g, &[h]);
+                let (plan, _) = compile_opt(&w.g, &[h], OptLevel::Cse);
                 let (secs, runs) = time_median(
                     || {
                         std::hint::black_box(plan.run(&w.env));
@@ -189,7 +204,7 @@ pub fn fig3(
                     "ours(compressed=n/a)".into()
                 };
                 let node = comp.eval_node();
-                let plan = CompiledPlan::new(&w.g, &[node]);
+                let (plan, _) = compile_opt(&w.g, &[node], OptLevel::Cse);
                 let (secs, runs) = time_median(
                     || {
                         std::hint::black_box(plan.run(&w.env));

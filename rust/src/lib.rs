@@ -7,10 +7,13 @@
 //!
 //! The crate is organised as the three-layer stack described in DESIGN.md:
 //!
-//! * [`ir`], [`autodiff`], [`simplify`] — the paper's contribution: the
-//!   expression DAG in Einstein notation and the differentiation modes
-//!   (Theorems 5–10), cross-country reordering (§3.3) and derivative
-//!   compression (§3.3).
+//! * [`ir`], [`autodiff`], [`simplify`], [`opt`] — the paper's
+//!   contribution: the expression DAG in Einstein notation and the
+//!   differentiation modes (Theorems 5–10), cross-country reordering
+//!   (§3.3) and derivative compression (§3.3), plus the graph optimizer
+//!   (global CSE with einsum-spec canonicalization + cost-driven
+//!   contraction reassociation) that sits between autodiff and plan
+//!   compilation.
 //! * [`tensor`], [`einsum`], [`eval`], [`exec`], [`solve`] — the dense
 //!   evaluation substrate (the NumPy role in the paper's experiments).
 //!   Two executors coexist by design: the [`eval`] *interpreter* is the
@@ -60,6 +63,7 @@ pub mod eval;
 pub mod exec;
 pub mod figures;
 pub mod ir;
+pub mod opt;
 pub mod parser;
 pub mod problems;
 pub mod runtime;
@@ -76,9 +80,10 @@ pub mod prelude {
     pub use crate::autodiff::hessian::{hessian, hessian_compressed, hessian_vector_product, jacobian};
     pub use crate::autodiff::reverse::{reverse_derivative, reverse_gradient};
     pub use crate::einsum::{einsum, einsum_into, EinScratch, EinSpec, EinsumPlan};
-    pub use crate::eval::{eval, eval_many, Env, Plan};
+    pub use crate::eval::{eval, eval_many, eval_many_with, Env, Plan};
     pub use crate::exec::{global_plan_cache, CompiledPlan, PlanCache};
     pub use crate::ir::{Elem, Graph, NodeId, Op};
+    pub use crate::opt::{compact, optimize, report, OptLevel, OptStats};
     pub use crate::simplify::simplify;
     pub use crate::tensor::Tensor;
 }

@@ -159,6 +159,10 @@ fn derive(args: &Args) -> Result<()> {
         dag_size(&w.g, node),
         flop_estimate(&w.g, node)
     );
+    // what the graph optimizer (the eval_many / plan-cache pipeline) does
+    // to this DAG before compilation
+    let stats = tensorcalc::opt::report(&w.g, &[node], tensorcalc::opt::OptLevel::Full);
+    println!("optimizer (CSE + reassociation): {}", stats);
     if args.get("dot").is_some() {
         println!("{}", w.g.to_dot(&[node]));
     } else {

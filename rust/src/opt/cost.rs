@@ -1,0 +1,83 @@
+//! The dimension-aware cost model shared by the optimizer passes.
+//!
+//! The unit is an *estimated flop*: for a multiplication node the size of
+//! its iteration space (the product of the dimensions of all distinct
+//! labels of the spec — exactly the number of multiply-adds a naive
+//! evaluation performs), for element-wise nodes the element count of the
+//! result, and zero for inputs and compile-time constants. This
+//! generalises the old per-root `simplify::flop_estimate` (which now
+//! delegates here) to *joint* root sets: a node shared by several roots
+//! is counted once, which is what the executor actually pays.
+
+use crate::einsum::Label;
+use crate::ir::{Graph, NodeId, Op};
+
+/// Estimated flops of evaluating node `id` once.
+pub fn node_flops(g: &Graph, id: NodeId) -> u128 {
+    match g.op(id) {
+        Op::Mul(a, b, spec) => {
+            let mut dims: Vec<(Label, usize)> = Vec::new();
+            for (&l, &d) in spec
+                .s1
+                .iter()
+                .zip(g.shape(*a))
+                .chain(spec.s2.iter().zip(g.shape(*b)))
+            {
+                if !dims.iter().any(|(ll, _)| *ll == l) {
+                    dims.push((l, d));
+                }
+            }
+            dims.iter().map(|(_, d)| *d as u128).product()
+        }
+        Op::Elem(..) | Op::GenUnary(..) | Op::Add(..) => {
+            g.shape(id).iter().map(|&d| d as u128).product()
+        }
+        _ => 0,
+    }
+}
+
+/// Estimated flops of evaluating the sub-DAG reachable from `roots`
+/// once, counting every shared node exactly once.
+pub fn dag_flops(g: &Graph, roots: &[NodeId]) -> u128 {
+    g.topo(roots).iter().map(|&id| node_flops(g, id)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::einsum::EinSpec;
+
+    #[test]
+    fn mul_cost_is_iteration_space() {
+        let mut g = Graph::new();
+        let a = g.var("A", &[3, 4]);
+        let b = g.var("B", &[4, 5]);
+        let c = g.mul(a, b, EinSpec::parse("ij,jk->ik"));
+        assert_eq!(node_flops(&g, c), 3 * 4 * 5);
+        assert_eq!(dag_flops(&g, &[c]), 3 * 4 * 5);
+    }
+
+    #[test]
+    fn shared_nodes_count_once_across_roots() {
+        let mut g = Graph::new();
+        let a = g.var("A", &[6, 6]);
+        let x = g.var("x", &[6]);
+        let ax = g.matvec(a, x); // 36 flops
+        let r1 = g.elem(crate::ir::Elem::Exp, ax); // 6
+        let r2 = g.elem(crate::ir::Elem::Tanh, ax); // 6
+        assert_eq!(dag_flops(&g, &[r1, r2]), 36 + 6 + 6);
+        // and each root alone still pays for the shared product
+        assert_eq!(dag_flops(&g, &[r1]), 36 + 6);
+    }
+
+    #[test]
+    fn matches_simplify_flop_estimate_on_single_roots() {
+        let mut g = Graph::new();
+        let a = g.var("A", &[4, 4]);
+        let x = g.var("x", &[4]);
+        let ax = g.matvec(a, x);
+        let e = g.elem(crate::ir::Elem::Exp, ax);
+        let f = g.sum_all(e);
+        assert_eq!(dag_flops(&g, &[f]), crate::simplify::flop_estimate(&g, f));
+    }
+}

@@ -1,0 +1,302 @@
+//! The graph optimizer: a pass pipeline that runs on `(Graph, roots)`
+//! *after* autodiff/simplify and *before* plan compilation.
+//!
+//! The paper's efficiency claim "hinges on the representation of the
+//! expressions": loss, gradient and Hessian DAGs share large common
+//! subexpressions, and the association order of contraction chains
+//! decides the constant factors. The local rewrites of
+//! [`crate::simplify`] cannot see either — this subsystem adds the two
+//! graph-level passes where those constants hide:
+//!
+//! 1. **Global CSE** ([`cse`]) — hash-consing with einsum-spec
+//!    canonicalization (commutative `Add`, Lemma-2 swapped `Mul`,
+//!    relabel-equivalent specs all dedupe to one node), run jointly over
+//!    *all* roots so the whole root set shares one sub-DAG. Exact up to
+//!    operand order (swapping commutes elementwise; only accumulation
+//!    order inside the lowered contraction can move the last bits).
+//! 2. **Contraction reassociation** ([`reassoc`]) — maximal
+//!    multiplication chains are flattened and re-associated greedily
+//!    under the dimension-aware cost model of [`cost`] (the classic
+//!    `(A·B)·v → A·(B·v)` win on every Hessian-vector workload), with a
+//!    guard that restores the original association whenever the greedy
+//!    order would cost more (ties keep greedy — compression relies on
+//!    its factor ordering). Changes only the association (and rounding
+//!    at the last bits), never the semantics.
+//! 3. **CSE again + dead-node sweep** — reassociation emits canonically
+//!    labelled nodes, so a second (cheap) CSE merges newly identical
+//!    chains; [`compact`] then rebuilds the live sub-DAG into a fresh
+//!    graph for consumers that key on the whole graph (the plan cache
+//!    fingerprints the *optimized, compacted* graph).
+//!
+//! Pass ordering matters: CSE first maximises sharing so reassociation
+//! sees true use counts (a shared product must stay atomic); reassociation
+//! then mints relabelled nodes that only a second CSE can merge.
+//!
+//! Invariants, relied on by the tests and the wiring in
+//! [`crate::eval::eval_many`] / [`crate::exec::PlanCache`]:
+//!
+//! * optimisation never *adds* reachable nodes or estimated flops
+//!   (`nodes_after ≤ nodes_before`, `flops_after ≤ flops_before`),
+//! * root order (and duplicates) are preserved, roots only ever merge,
+//! * the pipeline is deterministic: equal input graphs give equal
+//!   optimized graphs (the plan-cache key contract),
+//! * [`OptLevel::None`] is a true no-op escape hatch, kept as the
+//!   ablation baseline alongside `CompiledPlan::with_fusion(.., false)`.
+
+pub mod cost;
+pub mod cse;
+pub mod reassoc;
+
+use crate::ir::{Graph, NodeId, Op};
+use std::collections::HashMap;
+use std::fmt;
+
+/// How hard the optimizer works. Levels are cumulative.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug, Hash, Default)]
+pub enum OptLevel {
+    /// No optimisation — compile the graph exactly as given.
+    None,
+    /// Global CSE only (exact up to operand order).
+    Cse,
+    /// CSE + contraction reassociation + final CSE. The default.
+    #[default]
+    Full,
+}
+
+/// What the optimizer did, in the units the paper argues in: DAG nodes
+/// and estimated flops, before and after.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OptStats {
+    pub nodes_before: usize,
+    pub nodes_after: usize,
+    pub flops_before: u128,
+    pub flops_after: u128,
+    /// distinct nodes merged away by the CSE passes
+    pub cse_merged: usize,
+    /// multiplication chains whose association order changed
+    pub reassoc_rewritten: usize,
+}
+
+impl fmt::Display for OptStats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "nodes {} -> {}, est. flops {} -> {}, cse merged {}, chains reassociated {}",
+            self.nodes_before,
+            self.nodes_after,
+            self.flops_before,
+            self.flops_after,
+            self.cse_merged,
+            self.reassoc_rewritten
+        )
+    }
+}
+
+/// Result of one optimizer run: the rewritten roots plus statistics.
+pub struct Optimized {
+    pub roots: Vec<NodeId>,
+    pub stats: OptStats,
+}
+
+/// Run the pass pipeline on the sub-DAG of `roots` at the given level.
+/// New nodes are appended to `g`; dead originals simply become
+/// unreachable (use [`compact`] to sweep them into a fresh graph).
+pub fn optimize(g: &mut Graph, roots: &[NodeId], level: OptLevel) -> Optimized {
+    let nodes_before = g.topo(roots).len();
+    let flops_before = cost::dag_flops(g, roots);
+    let mut cur = roots.to_vec();
+    let mut cse_merged = 0;
+    let mut reassoc_rewritten = 0;
+    if level >= OptLevel::Cse {
+        let (r, m) = cse::cse(g, &cur);
+        cur = r;
+        cse_merged += m;
+    }
+    if level >= OptLevel::Full {
+        let (r, n) = reassoc::reassociate(g, &cur);
+        cur = r;
+        reassoc_rewritten = n;
+        let (r, m) = cse::cse(g, &cur);
+        cur = r;
+        cse_merged += m;
+    }
+    let stats = OptStats {
+        nodes_before,
+        nodes_after: g.topo(&cur).len(),
+        flops_before,
+        flops_after: cost::dag_flops(g, &cur),
+        cse_merged,
+        reassoc_rewritten,
+    };
+    Optimized { roots: cur, stats }
+}
+
+/// What [`optimize`] *would* do to `(g, roots)` at `level`, without
+/// mutating the caller's graph — the reporting entry point used by the
+/// CLI, the figures and the examples.
+pub fn report(g: &Graph, roots: &[NodeId], level: OptLevel) -> OptStats {
+    let mut g2 = g.clone();
+    optimize(&mut g2, roots, level).stats
+}
+
+/// Dead-node sweep: rebuild only the nodes reachable from `roots` into a
+/// fresh graph (variable names and declaration shapes preserved).
+/// Returns the new graph and the remapped roots. Node ids stay in
+/// topological order, so the compiled instruction stream — and therefore
+/// the numerics — are identical to compiling the original graph.
+pub fn compact(g: &Graph, roots: &[NodeId]) -> (Graph, Vec<NodeId>) {
+    let mut g2 = Graph::new();
+    let mut map: HashMap<NodeId, NodeId> = HashMap::new();
+    for id in g.topo(roots) {
+        let new = match g.op(id) {
+            Op::Var(name) => {
+                let name = name.clone();
+                let shape = g.shape(id).to_vec();
+                g2.var(&name, &shape)
+            }
+            Op::Const(bits) => {
+                let v = f64::from_bits(*bits);
+                let shape = g.shape(id).to_vec();
+                g2.constant(v, &shape)
+            }
+            Op::Delta { dims } => {
+                let dims = dims.clone();
+                g2.delta(&dims)
+            }
+            Op::Add(a, b) => {
+                let (a, b) = (map[a], map[b]);
+                g2.add(a, b)
+            }
+            Op::Mul(a, b, spec) => {
+                let (a, b, spec) = (map[a], map[b], spec.clone());
+                g2.mul(a, b, spec)
+            }
+            Op::Elem(f, a) => {
+                let (f, a) = (*f, map[a]);
+                g2.elem(f, a)
+            }
+            Op::GenUnary(f, a) => {
+                let (f, a) = (*f, map[a]);
+                g2.gen_unary(f, a)
+            }
+        };
+        map.insert(id, new);
+    }
+    let new_roots = roots.iter().map(|r| map[r]).collect();
+    (g2, new_roots)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::{Env, Plan};
+    use crate::ir::Elem;
+    use crate::tensor::Tensor;
+
+    fn chain_graph() -> (Graph, NodeId, Env) {
+        let mut g = Graph::new();
+        let a = g.var("A", &[16, 16]);
+        let b = g.var("B", &[16, 16]);
+        let x = g.var("x", &[16]);
+        let ab = g.matmul(a, b);
+        let abx = g.matvec(ab, x);
+        let y = g.elem(Elem::Tanh, abx);
+        let mut env = Env::new();
+        env.insert("A", Tensor::randn(&[16, 16], 1));
+        env.insert("B", Tensor::randn(&[16, 16], 2));
+        env.insert("x", Tensor::randn(&[16], 3));
+        (g, y, env)
+    }
+
+    #[test]
+    fn levels_are_monotone_and_none_is_identity() {
+        let (mut g, y, _) = chain_graph();
+        let o = optimize(&mut g, &[y], OptLevel::None);
+        assert_eq!(o.roots, vec![y]);
+        assert_eq!(o.stats.nodes_after, o.stats.nodes_before);
+        assert_eq!(o.stats.flops_after, o.stats.flops_before);
+
+        let o = optimize(&mut g, &[y], OptLevel::Full);
+        assert!(o.stats.nodes_after <= o.stats.nodes_before);
+        assert!(
+            o.stats.flops_after < o.stats.flops_before,
+            "the matrix chain must reassociate: {}",
+            o.stats
+        );
+        assert!(o.stats.reassoc_rewritten >= 1);
+    }
+
+    #[test]
+    fn optimize_preserves_values() {
+        let (mut g, y, env) = chain_graph();
+        let want = Plan::new(&g, &[y]).run(&g, &env);
+        for level in [OptLevel::None, OptLevel::Cse, OptLevel::Full] {
+            let o = optimize(&mut g, &[y], level);
+            let got = Plan::new(&g, &o.roots).run(&g, &env);
+            assert!(
+                got[0].allclose(&want[0], 1e-10, 1e-12),
+                "{:?}: diff {}",
+                level,
+                got[0].max_abs_diff(&want[0])
+            );
+        }
+    }
+
+    #[test]
+    fn duplicate_roots_survive() {
+        let (mut g, y, _) = chain_graph();
+        let o = optimize(&mut g, &[y, y], OptLevel::Full);
+        assert_eq!(o.roots.len(), 2);
+        assert_eq!(o.roots[0], o.roots[1]);
+    }
+
+    #[test]
+    fn compact_drops_dead_nodes_and_preserves_values() {
+        let (mut g, y, env) = chain_graph();
+        // grow some garbage that is unreachable from y
+        let dead = g.var("dead", &[7]);
+        let _ = g.elem(Elem::Exp, dead);
+        let o = optimize(&mut g, &[y], OptLevel::Full);
+        let (g2, roots2) = compact(&g, &o.roots);
+        assert_eq!(g2.len(), g.topo(&o.roots).len(), "compacted graph must be exactly the live set");
+        assert!(g2.len() < g.len());
+        assert!(g2.var_id("dead").is_none());
+        let want = Plan::new(&g, &o.roots).run(&g, &env);
+        let got = Plan::new(&g2, &roots2).run(&g2, &env);
+        assert_eq!(got[0], want[0], "compaction must not change numerics");
+    }
+
+    #[test]
+    fn optimize_is_deterministic() {
+        let build = || {
+            let (mut g, y, _) = chain_graph();
+            let o = optimize(&mut g, &[y], OptLevel::Full);
+            compact(&g, &o.roots)
+        };
+        let (g1, r1) = build();
+        let (g2, r2) = build();
+        assert_eq!(r1, r2);
+        assert_eq!(crate::exec::graph_fingerprint(&g1), crate::exec::graph_fingerprint(&g2));
+    }
+
+    #[test]
+    fn raw_delta_seeded_derivatives_survive_optimization() {
+        // the optimizer must digest *unsimplified* autodiff output
+        // (delta seeds, broadcast pullbacks) without panicking
+        let mut g = Graph::new();
+        let a = g.var("A", &[3, 4]);
+        let x = g.var("x", &[4]);
+        let ax = g.matvec(a, x);
+        let y = g.elem(Elem::Exp, ax);
+        let jac = crate::autodiff::reverse::reverse_derivative(&mut g, y, &[x])[0];
+        let mut env = Env::new();
+        env.insert("A", Tensor::randn(&[3, 4], 4));
+        env.insert("x", Tensor::randn(&[4], 5));
+        let want = Plan::new(&g, &[jac]).run(&g, &env);
+        let o = optimize(&mut g, &[jac], OptLevel::Full);
+        assert!(o.stats.nodes_after <= o.stats.nodes_before);
+        assert!(o.stats.flops_after <= o.stats.flops_before);
+        let got = Plan::new(&g, &o.roots).run(&g, &env);
+        assert!(got[0].allclose(&want[0], 1e-10, 1e-12));
+    }
+}

@@ -1,0 +1,396 @@
+//! Contraction reassociation: rewrite chains/trees of generic
+//! multiplications into the cheapest pairwise association order found by
+//! a greedy dimension-aware search (the §3.3 cross-country strategy,
+//! generalised to whole root *sets*).
+//!
+//! Each maximal multiplication tree whose interior nodes are consumed
+//! nowhere else is flattened into one n-ary contraction with globally
+//! unified labels; the flattened terms are then contracted pairwise,
+//! cheapest iteration space first (result order as the tie-break — the
+//! paper's vectors-before-matrices rule). Shared subexpressions stay
+//! atomic, so no work is ever duplicated across roots. Re-association is
+//! justified by Lemmas 1–3: labels are unified globally and summed
+//! labels stay internal to the chain.
+//!
+//! A cost guard makes the pass monotone: the original association
+//! (rebuilt over the same optimised leaves) is restored whenever the
+//! [`cost`](crate::opt::cost) model says the greedy order would cost
+//! *more*; on ties the greedy order wins, because its
+//! expensive-factors-last property is what the §3.3 compression scheme
+//! builds on. So `(A·B)·v` becomes `A·(B·v)`, and no chain ever gets
+//! costlier than it started.
+
+use crate::einsum::{EinSpec, Label};
+use crate::ir::{Graph, NodeId, Op};
+use crate::opt::cost;
+use std::collections::HashMap;
+
+/// Global label space for flattened chains (disjoint from the per-spec
+/// local labels).
+type GLabel = u64;
+
+/// Re-associate all multiplication chains reachable from `roots`,
+/// jointly. Returns the new roots (same order) and the number of chains
+/// whose association actually changed. Semantics are preserved exactly;
+/// only the association order (and label names) of `*` change.
+pub fn reassociate(g: &mut Graph, roots: &[NodeId]) -> (Vec<NodeId>, usize) {
+    let uses = g.use_counts(roots);
+    let mut r = Reassoc { uses, memo: HashMap::new(), counter: 0, rewritten: 0 };
+    let new_roots = roots.iter().map(|&root| r.rewrite(g, root)).collect();
+    (new_roots, r.rewritten)
+}
+
+struct Reassoc {
+    /// use counts over the *joint* pre-rewrite root set: a node consumed
+    /// more than once stays atomic (never inlined into a chain)
+    uses: Vec<u32>,
+    memo: HashMap<NodeId, NodeId>,
+    counter: GLabel,
+    rewritten: usize,
+}
+
+/// One operand of a flattened n-ary contraction: the (original-graph)
+/// node plus the global labels of its axes.
+struct Term {
+    node: NodeId,
+    labels: Vec<GLabel>,
+}
+
+impl Reassoc {
+    fn fresh(&mut self) -> GLabel {
+        self.counter += 1;
+        self.counter
+    }
+
+    fn rewrite(&mut self, g: &mut Graph, id: NodeId) -> NodeId {
+        if let Some(&m) = self.memo.get(&id) {
+            return m;
+        }
+        let res = match g.op(id).clone() {
+            Op::Mul(..) => {
+                // flatten the chain rooted here
+                let out: Vec<GLabel> = (0..g.order(id)).map(|_| self.fresh()).collect();
+                let mut terms: Vec<Term> = Vec::new();
+                let mut dims: HashMap<GLabel, usize> = HashMap::new();
+                for (gl, &d) in out.iter().zip(g.shape(id)) {
+                    dims.insert(*gl, d);
+                }
+                self.flatten(g, id, &out, true, &mut terms, &mut dims);
+                // rewrite the atomic operands themselves
+                for t in &mut terms {
+                    t.node = self.rewrite(g, t.node);
+                }
+                // cost guard: compare the greedy merge sequence against
+                // the chain's original association, both measured as the
+                // sum of interior-contraction iteration spaces (the
+                // flattened region is a tree of single-use Muls, so both
+                // sums are exact region costs — leaves cancel out). Fall
+                // back to the original association only when greedy would
+                // actually cost *more*; ties keep the greedy order, whose
+                // expensive-factors-last property the §3.3 compression
+                // scheme builds on.
+                let plain_cost = self.plain_region_cost(g, id, true);
+                let (greedy, greedy_cost) = contract_greedy(g, terms, &out, &dims);
+                if greedy_cost <= plain_cost {
+                    if greedy_cost < plain_cost {
+                        self.rewritten += 1;
+                    }
+                    greedy
+                } else {
+                    self.rebuild_plain(g, id, true)
+                }
+            }
+            Op::Add(a, b) => {
+                let a = self.rewrite(g, a);
+                let b = self.rewrite(g, b);
+                g.add(a, b)
+            }
+            Op::Elem(f, a) => {
+                let a = self.rewrite(g, a);
+                g.elem(f, a)
+            }
+            Op::GenUnary(f, a) => {
+                let a = self.rewrite(g, a);
+                g.gen_unary(f, a)
+            }
+            _ => id,
+        };
+        self.memo.insert(id, res);
+        res
+    }
+
+    /// Collect the operands of the multiplication tree at `id`, whose
+    /// axes carry the global labels `labels`. Only exclusively-owned Mul
+    /// children are inlined — shared subexpressions stay atomic so no
+    /// work is duplicated.
+    fn flatten(
+        &mut self,
+        g: &Graph,
+        id: NodeId,
+        labels: &[GLabel],
+        is_root: bool,
+        terms: &mut Vec<Term>,
+        dims: &mut HashMap<GLabel, usize>,
+    ) {
+        let inline = is_root || self.uses[id.index()] <= 1;
+        if let Op::Mul(a, b, spec) = g.op(id).clone() {
+            if inline {
+                // map the spec's local labels to global ones: output labels
+                // through `labels`, summed labels fresh
+                let mut map: HashMap<Label, GLabel> = HashMap::new();
+                for (l, &gl) in spec.s3.iter().zip(labels) {
+                    map.insert(*l, gl);
+                }
+                let bind = |this: &mut Self,
+                            map: &mut HashMap<Label, GLabel>,
+                            ls: &[Label],
+                            shape: &[usize],
+                            dims: &mut HashMap<GLabel, usize>|
+                 -> Vec<GLabel> {
+                    ls.iter()
+                        .zip(shape)
+                        .map(|(l, &d)| {
+                            let gl = *map.entry(*l).or_insert_with(|| this.fresh());
+                            dims.insert(gl, d);
+                            gl
+                        })
+                        .collect()
+                };
+                let la = bind(self, &mut map, &spec.s1, g.shape(a), dims);
+                let lb = bind(self, &mut map, &spec.s2, g.shape(b), dims);
+                self.flatten(g, a, &la, false, terms, dims);
+                self.flatten(g, b, &lb, false, terms, dims);
+                return;
+            }
+        }
+        terms.push(Term { node: id, labels: labels.to_vec() });
+    }
+
+    /// Estimated flops of the chain's *original* association: the sum of
+    /// the iteration spaces of the interior (inlined) `Mul` nodes. The
+    /// leaves' own sub-DAG costs are identical for every association of
+    /// the chain, so they are excluded from the comparison.
+    fn plain_region_cost(&self, g: &Graph, id: NodeId, is_root: bool) -> u128 {
+        if let Op::Mul(a, b, _) = g.op(id) {
+            if is_root || self.uses[id.index()] <= 1 {
+                return cost::node_flops(g, id)
+                    + self.plain_region_cost(g, *a, false)
+                    + self.plain_region_cost(g, *b, false);
+            }
+        }
+        0
+    }
+
+    /// Rebuild the chain at `id` keeping its *original* association, with
+    /// the atomic leaves rewritten through the normal path. Only invoked
+    /// when the cost guard rejects the greedy order.
+    fn rebuild_plain(&mut self, g: &mut Graph, id: NodeId, is_root: bool) -> NodeId {
+        if let Op::Mul(a, b, spec) = g.op(id).clone() {
+            if is_root || self.uses[id.index()] <= 1 {
+                let ra = self.rebuild_plain(g, a, false);
+                let rb = self.rebuild_plain(g, b, false);
+                return g.mul(ra, rb, spec);
+            }
+        }
+        self.rewrite(g, id)
+    }
+}
+
+/// Greedily contract the flattened terms pairwise: cheapest contraction
+/// first (iteration-space size; ties broken by the *order* of the result
+/// tensor — the paper's vectors-before-matrices rule). Returns the chain
+/// root plus the summed cost of the merges it performed (the greedy
+/// region cost the guard in [`Reassoc::rewrite`] compares).
+fn contract_greedy(
+    g: &mut Graph,
+    mut terms: Vec<Term>,
+    out: &[GLabel],
+    dims: &HashMap<GLabel, usize>,
+) -> (NodeId, u128) {
+    assert!(!terms.is_empty());
+    let mut total: u128 = 0;
+    while terms.len() > 1 {
+        let mut best: Option<(usize, usize, u128, usize)> = None; // (i, j, cost, result order)
+        for i in 0..terms.len() {
+            for j in (i + 1)..terms.len() {
+                let (cost, res) = pair_result(&terms, i, j, out, dims);
+                let order = res.len();
+                let better = match best {
+                    None => true,
+                    Some((_, _, bc, bo)) => cost < bc || (cost == bc && order < bo),
+                };
+                if better {
+                    best = Some((i, j, cost, order));
+                }
+            }
+        }
+        let (i, j, step_cost, _) = best.unwrap();
+        let (_, mut res_labels) = pair_result(&terms, i, j, out, dims);
+        if terms.len() == 2 {
+            // final contraction: emit directly in the requested output order
+            res_labels = out.to_vec();
+        }
+        let merged = build_mul(g, &terms[i], &terms[j], &res_labels);
+        terms[i] = Term { node: merged, labels: res_labels };
+        terms.remove(j);
+        total = total.saturating_add(step_cost);
+    }
+    let last = terms.pop().unwrap();
+    // final axis order must match `out`
+    if last.labels == out {
+        (last.node, total)
+    } else {
+        let perm: Vec<usize> = out
+            .iter()
+            .map(|gl| last.labels.iter().position(|x| x == gl).unwrap())
+            .collect();
+        let n: u128 = g.shape(last.node).iter().map(|&d| d as u128).product();
+        (g.transpose(last.node, &perm), total.saturating_add(n))
+    }
+}
+
+/// Cost (iteration-space size) and surviving labels of contracting the
+/// pair `(i, j)`: a label survives if some other term or the output still
+/// needs it.
+fn pair_result(
+    terms: &[Term],
+    i: usize,
+    j: usize,
+    out: &[GLabel],
+    dims: &HashMap<GLabel, usize>,
+) -> (u128, Vec<GLabel>) {
+    let mut union: Vec<GLabel> = Vec::new();
+    for &l in terms[i].labels.iter().chain(&terms[j].labels) {
+        if !union.contains(&l) {
+            union.push(l);
+        }
+    }
+    let cost: u128 = union.iter().map(|l| dims[l] as u128).product();
+    let needed = |l: &GLabel| {
+        out.contains(l)
+            || terms
+                .iter()
+                .enumerate()
+                .any(|(t, term)| t != i && t != j && term.labels.contains(l))
+    };
+    let res: Vec<GLabel> = union.into_iter().filter(needed).collect();
+    (cost, res)
+}
+
+/// Emit the binary Mul node for one greedy step, relabelling the global
+/// labels into a compact local space.
+fn build_mul(g: &mut Graph, a: &Term, b: &Term, res: &[GLabel]) -> NodeId {
+    let mut local: HashMap<GLabel, Label> = HashMap::new();
+    let mut next: Label = 0;
+    let mut conv = |gl: GLabel, local: &mut HashMap<GLabel, Label>| -> Label {
+        *local.entry(gl).or_insert_with(|| {
+            let l = next;
+            next += 1;
+            l
+        })
+    };
+    let s1: Vec<Label> = a.labels.iter().map(|&gl| conv(gl, &mut local)).collect();
+    let s2: Vec<Label> = b.labels.iter().map(|&gl| conv(gl, &mut local)).collect();
+    let s3: Vec<Label> = res.iter().map(|&gl| conv(gl, &mut local)).collect();
+    g.mul(a.node, b.node, EinSpec::new(s1, s2, s3))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::{Env, Plan};
+    use crate::simplify::flop_estimate;
+    use crate::tensor::Tensor;
+
+    fn eval1(g: &Graph, root: NodeId, env: &Env) -> Tensor {
+        Plan::new(g, &[root]).run(g, env).pop().unwrap()
+    }
+
+    #[test]
+    fn matrix_chain_reassociates_to_matvec_first() {
+        // (A·B)·x costs n³ + n²; A·(B·x) costs 2n² — greedy must switch
+        let mut g = Graph::new();
+        let a = g.var("A", &[20, 20]);
+        let b = g.var("B", &[20, 20]);
+        let x = g.var("x", &[20]);
+        let ab = g.matmul(a, b);
+        let y = g.matvec(ab, x);
+        let (roots, changed) = reassociate(&mut g, &[y]);
+        assert_eq!(changed, 1);
+        assert!(
+            flop_estimate(&g, roots[0]) < flop_estimate(&g, y),
+            "association must get cheaper: {} vs {}",
+            flop_estimate(&g, roots[0]),
+            flop_estimate(&g, y)
+        );
+        let mut env = Env::new();
+        env.insert("A", Tensor::randn(&[20, 20], 1));
+        env.insert("B", Tensor::randn(&[20, 20], 2));
+        env.insert("x", Tensor::randn(&[20], 3));
+        let want = eval1(&g, y, &env);
+        let got = eval1(&g, roots[0], &env);
+        assert!(got.allclose(&want, 1e-9, 1e-11), "diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn cost_guard_never_regresses() {
+        // a lone matvec has nothing to improve: the rewrite may relabel
+        // but must neither count as a reassociation nor change the cost
+        let mut g = Graph::new();
+        let a = g.var("A", &[8, 6]);
+        let x = g.var("x", &[6]);
+        let y = g.matvec(a, x);
+        let before = flop_estimate(&g, y);
+        let (roots, changed) = reassociate(&mut g, &[y]);
+        assert_eq!(changed, 0);
+        assert_eq!(flop_estimate(&g, roots[0]), before);
+    }
+
+    #[test]
+    fn shared_chain_interior_stays_atomic_across_roots() {
+        // A·B feeds two different chains; reassociating both roots must
+        // keep one shared A·B (or cheaper), never duplicate the work
+        let mut g = Graph::new();
+        let a = g.var("A", &[10, 10]);
+        let b = g.var("B", &[10, 10]);
+        let x = g.var("x", &[10]);
+        let z = g.var("z", &[10]);
+        let ab = g.matmul(a, b);
+        let r1 = g.matvec(ab, x);
+        let r2 = g.matvec(ab, z);
+        let joint_before = cost::dag_flops(&g, &[r1, r2]);
+        let (roots, _) = reassociate(&mut g, &[r1, r2]);
+        let joint_after = cost::dag_flops(&g, &roots);
+        assert!(
+            joint_after <= joint_before,
+            "joint cost must not regress: {} vs {}",
+            joint_after,
+            joint_before
+        );
+        let mut env = Env::new();
+        env.insert("A", Tensor::randn(&[10, 10], 1));
+        env.insert("B", Tensor::randn(&[10, 10], 2));
+        env.insert("x", Tensor::randn(&[10], 3));
+        env.insert("z", Tensor::randn(&[10], 4));
+        let want = Plan::new(&g, &[r1, r2]).run(&g, &env);
+        let got = Plan::new(&g, &roots).run(&g, &env);
+        for (w, v) in want.iter().zip(&got) {
+            assert!(v.allclose(w, 1e-9, 1e-11));
+        }
+    }
+
+    #[test]
+    fn permuted_outputs_preserved() {
+        let mut g = Graph::new();
+        let a = g.var("A", &[3, 4]);
+        let b = g.var("B", &[4, 5]);
+        let c = g.mul(a, b, EinSpec::parse("ij,jk->ki"));
+        let (roots, _) = reassociate(&mut g, &[c]);
+        let mut env = Env::new();
+        env.insert("A", Tensor::randn(&[3, 4], 1));
+        env.insert("B", Tensor::randn(&[4, 5], 2));
+        let want = eval1(&g, c, &env);
+        let got = eval1(&g, roots[0], &env);
+        assert!(got.allclose(&want, 1e-10, 1e-12));
+    }
+}

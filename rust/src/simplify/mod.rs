@@ -11,18 +11,21 @@
 
 mod rules;
 
-use crate::ir::{Graph, NodeId, Op};
+use crate::ir::{Graph, NodeId};
 use rules::Simplifier;
 use std::collections::HashMap;
 
 /// Simplify the sub-DAGs rooted at `roots`; returns the new roots.
-/// Runs rewrite passes to a fixpoint (bounded).
+/// Runs rewrite passes to a fixpoint (bounded): a pass in which no
+/// rewrite rule fired anywhere in the DAG ends the loop immediately —
+/// the `Simplifier` tracks rule firings itself, so convergence is
+/// detected at interior nodes too, not only through root-`Vec` equality.
 pub fn simplify(g: &mut Graph, roots: &[NodeId]) -> Vec<NodeId> {
     let mut current = roots.to_vec();
     for _ in 0..8 {
-        let mut s = Simplifier { g, memo: HashMap::new() };
+        let mut s = Simplifier { g, memo: HashMap::new(), changed: false };
         let next: Vec<NodeId> = current.iter().map(|&r| s.simp(r)).collect();
-        if next == current {
+        if !s.changed || next == current {
             return next;
         }
         current = next;
@@ -43,33 +46,11 @@ pub fn dag_size(g: &Graph, root: NodeId) -> usize {
 
 /// Estimated flop count of evaluating the sub-DAG once: for every Mul the
 /// size of its iteration space (product of all distinct label dims), for
-/// element-wise ops the element count. Used by the cross-country cost
-/// model report.
+/// element-wise ops the element count. Thin single-root wrapper around
+/// the optimizer's cost model ([`crate::opt::cost`]), kept for API
+/// stability; use `opt::cost::dag_flops` directly for joint root sets.
 pub fn flop_estimate(g: &Graph, root: NodeId) -> u128 {
-    let mut total: u128 = 0;
-    for id in g.topo(&[root]) {
-        total += match g.op(id) {
-            Op::Mul(a, b, spec) => {
-                let mut dims: Vec<(u32, usize)> = Vec::new();
-                for (&l, &d) in spec
-                    .s1
-                    .iter()
-                    .zip(g.shape(*a))
-                    .chain(spec.s2.iter().zip(g.shape(*b)))
-                {
-                    if !dims.iter().any(|(ll, _)| *ll == l) {
-                        dims.push((l, d));
-                    }
-                }
-                dims.iter().map(|(_, d)| *d as u128).product()
-            }
-            Op::Elem(..) | Op::GenUnary(..) | Op::Add(..) => {
-                g.shape(id).iter().map(|&d| d as u128).product()
-            }
-            _ => 0,
-        };
-    }
-    total
+    crate::opt::cost::dag_flops(g, &[root])
 }
 
 #[cfg(test)]
@@ -78,7 +59,7 @@ mod tests {
     use crate::autodiff::reverse::reverse_gradient;
     use crate::einsum::EinSpec;
     use crate::eval::{eval, Env};
-    use crate::ir::Elem;
+    use crate::ir::{Elem, Op};
     use crate::tensor::Tensor;
 
     fn eval_both(g: &mut Graph, root: NodeId, env: &Env) -> (Tensor, Tensor, NodeId) {
@@ -248,6 +229,26 @@ mod tests {
             "diff {}",
             before.max_abs_diff(&after)
         );
+    }
+
+    #[test]
+    fn simplify_converges_and_is_idempotent() {
+        // an already-canonical DAG must come back unchanged (the
+        // no-rewrite-fired early exit), and re-simplifying a simplified
+        // DAG must be the identity
+        let mut g = Graph::new();
+        let a = g.var("A", &[4, 4]);
+        let x = g.var("x", &[4]);
+        let ax = g.matvec(a, x);
+        let f = g.sum_all(ax);
+        let s1 = simplify(&mut g, &[f]);
+        let s2 = simplify(&mut g, &s1);
+        assert_eq!(s1, s2);
+
+        let grad = reverse_gradient(&mut g, f, x);
+        let t1 = simplify(&mut g, &[grad]);
+        let t2 = simplify(&mut g, &t1);
+        assert_eq!(t1, t2);
     }
 
     #[test]

@@ -8,6 +8,11 @@ use std::collections::HashMap;
 pub(crate) struct Simplifier<'g> {
     pub g: &'g mut Graph,
     pub memo: HashMap<NodeId, NodeId>,
+    /// set whenever a rewrite rule fires anywhere in the pass — the
+    /// fixpoint loop in [`super::simplify`] stops as soon as a whole
+    /// pass completes without firing (interior-node convergence, not
+    /// just root equality)
+    pub changed: bool,
 }
 
 impl<'g> Simplifier<'g> {
@@ -43,20 +48,24 @@ impl<'g> Simplifier<'g> {
     fn make_add(&mut self, a: NodeId, b: NodeId) -> NodeId {
         // 0 + x = x
         if self.g.is_const_value(a, 0.0) {
+            self.changed = true;
             return b;
         }
         if self.g.is_const_value(b, 0.0) {
+            self.changed = true;
             return a;
         }
         // constant folding
         if let (Some(va), Some(vb)) = (self.g.const_value(a), self.g.const_value(b)) {
             let shape = self.g.shape(a).to_vec();
+            self.changed = true;
             return self.g.constant(va + vb, &shape);
         }
         // x + x = 2x
         if a == b {
             let l: Vec<Label> = (0..self.g.order(a) as Label).collect();
             let two = self.g.scalar(2.0);
+            self.changed = true;
             return self.make_mul(a, two, EinSpec::new(l.clone(), vec![], l));
         }
         self.g.add(a, b)
@@ -65,6 +74,7 @@ impl<'g> Simplifier<'g> {
     fn make_elem(&mut self, f: Elem, a: NodeId) -> NodeId {
         if let Some(v) = self.g.const_value(a) {
             let shape = self.g.shape(a).to_vec();
+            self.changed = true;
             return self.g.constant(f.apply(v), &shape);
         }
         // involution cancellation: −(−x), 1/(1/x)
@@ -72,6 +82,7 @@ impl<'g> Simplifier<'g> {
             if (f == Elem::Neg && *inner == Elem::Neg)
                 || (f == Elem::Recip && *inner == Elem::Recip)
             {
+                self.changed = true;
                 return *x;
             }
         }
@@ -91,6 +102,7 @@ impl<'g> Simplifier<'g> {
         // zero annihilates
         if self.g.is_const_value(a, 0.0) || self.g.is_const_value(b, 0.0) {
             let shape = spec.output_shape(self.g.shape(a), self.g.shape(b)).unwrap();
+            self.changed = true;
             return self.g.constant(0.0, &shape);
         }
         // both constant → fold, including the implicit summation factor
@@ -101,16 +113,19 @@ impl<'g> Simplifier<'g> {
                 .map(|&l| dim_of(self.g, l) as f64)
                 .product();
             let shape = spec.output_shape(self.g.shape(a), self.g.shape(b)).unwrap();
+            self.changed = true;
             return self.g.constant(va * vb * factor, &shape);
         }
         // normalize: delta on the right; otherwise constants on the right
         let a_delta = matches!(self.g.op(a), Op::Delta { .. });
         let b_delta = matches!(self.g.op(b), Op::Delta { .. });
         if a_delta && !b_delta {
+            self.changed = true;
             return self.make_mul(b, a, spec.swapped());
         }
         if !a_delta && !b_delta && self.g.const_value(a).is_some() && self.g.const_value(b).is_none()
         {
+            self.changed = true;
             return self.make_mul(b, a, spec.swapped());
         }
 
@@ -134,6 +149,7 @@ impl<'g> Simplifier<'g> {
                         }
                     }
                     let k = self.g.scalar(c * factor);
+                    self.changed = true;
                     return self.make_mul(
                         a,
                         k,
@@ -143,6 +159,7 @@ impl<'g> Simplifier<'g> {
             } else {
                 // scalar constant
                 if c == 1.0 && spec.s3 == spec.s1 {
+                    self.changed = true;
                     return a; // identity
                 }
                 // pure permute of a Mul: push the permutation into the
@@ -161,6 +178,7 @@ impl<'g> Simplifier<'g> {
                                 inner.s3[pos]
                             })
                             .collect();
+                        self.changed = true;
                         return self.make_mul(
                             p,
                             q,
@@ -191,6 +209,7 @@ impl<'g> Simplifier<'g> {
                                 })
                                 .collect();
                             let k = self.g.scalar(c1 * c);
+                            self.changed = true;
                             return self.make_mul(
                                 x,
                                 k,
@@ -205,6 +224,7 @@ impl<'g> Simplifier<'g> {
         // delta elimination (the paper's unit-tensor removal)
         if let Op::Delta { dims } = self.g.op(b).clone() {
             if let Some(n) = self.delta_step(a, &dims, &spec) {
+                self.changed = true;
                 return n;
             }
         }

@@ -1,0 +1,295 @@
+//! Differential verification of the graph-optimizer subsystem
+//! (`rust/src/opt`): opt-on vs opt-off vs the interpreter oracle, on
+//! random DAGs and on the three benchmark workloads' gradients and
+//! Hessians, plus the public wiring (`eval_many`, `PlanCache`).
+//!
+//! Invariants pinned here:
+//! * every `OptLevel` preserves values within the crate's existing
+//!   tolerances (CSE is exact up to operand order; reassociation changes
+//!   only the association and therefore only the last bits),
+//! * optimisation is monotone in the stats it reports (`nodes_after ≤
+//!   nodes_before`, `flops_after ≤ flops_before`) — the cost guard,
+//! * `compact` (the dead-node sweep) never changes numerics,
+//! * spec-canonicalization CSE actually merges relabelled / swapped
+//!   duplicates, and reassociation actually re-associates a matrix
+//!   chain.
+
+use tensorcalc::autodiff::reverse::reverse_derivative;
+use tensorcalc::einsum::EinSpec;
+use tensorcalc::eval::{eval_many, eval_many_with, Env, Plan};
+use tensorcalc::exec::CompiledPlan;
+use tensorcalc::ir::{Elem, Graph, NodeId, Op};
+use tensorcalc::opt::{compact, cost, optimize, OptLevel};
+use tensorcalc::problems::{logistic_regression, matrix_factorization, neural_net};
+use tensorcalc::tensor::{Tensor, XorShift};
+
+/// Random scalar-expression DAG (same generator family as
+/// tests/property.rs / tests/exec_equivalence.rs).
+fn random_scalar_expr(rng: &mut XorShift, g: &mut Graph, depth: usize) -> NodeId {
+    let x = g.var("x", &[4]);
+    let a = g.var("A", &[4, 4]);
+    let mut v = g.matvec(a, x);
+    for _ in 0..depth {
+        v = match rng.below(6) {
+            0 => g.elem(Elem::Tanh, v),
+            1 => g.elem(Elem::Sigmoid, v),
+            2 => {
+                let e = g.elem(Elem::Exp, v);
+                let half = g.scale(e, 0.2);
+                g.elem(Elem::Tanh, half)
+            }
+            3 => g.hadamard(v, x),
+            4 => {
+                let av = g.matvec(a, v);
+                g.scale(av, 0.5)
+            }
+            _ => {
+                let t = g.tmatvec(a, v);
+                g.add(t, x)
+            }
+        };
+    }
+    let sq = g.elem(Elem::Square, v);
+    g.sum_all(sq)
+}
+
+#[test]
+fn prop_all_levels_match_interpreter_on_random_dags() {
+    for seed in 0..25u64 {
+        let mut rng = XorShift::new(4100 + seed);
+        let mut g = Graph::new();
+        let depth = 1 + (seed % 5) as usize;
+        let f = random_scalar_expr(&mut rng, &mut g, depth);
+        let x = g.var_id("x").unwrap();
+        let grad = reverse_derivative(&mut g, f, &[x])[0];
+        let mut env = Env::new();
+        env.insert("x", Tensor::randn(&[4], seed + 1).scale(0.5));
+        env.insert("A", Tensor::randn(&[4, 4], seed + 2).scale(0.5));
+        let want = Plan::new(&g, &[f, grad]).run(&g, &env);
+        for level in [OptLevel::None, OptLevel::Cse, OptLevel::Full] {
+            let mut g2 = g.clone();
+            let o = optimize(&mut g2, &[f, grad], level);
+            assert!(
+                o.stats.nodes_after <= o.stats.nodes_before,
+                "seed {} {:?}: node count regressed: {}",
+                seed,
+                level,
+                o.stats
+            );
+            assert!(
+                o.stats.flops_after <= o.stats.flops_before,
+                "seed {} {:?}: flop estimate regressed: {}",
+                seed,
+                level,
+                o.stats
+            );
+            let got = CompiledPlan::new(&g2, &o.roots).run(&env);
+            for (c, w) in got.iter().zip(&want) {
+                assert!(
+                    c.allclose(w, 1e-9, 1e-11),
+                    "seed {} {:?}: optimized vs interpreter diff {}",
+                    seed,
+                    level,
+                    c.max_abs_diff(w)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn workload_gradients_and_hessians_all_levels_match_interpreter() {
+    for mut w in [
+        logistic_regression(8, 4),
+        matrix_factorization(6, 6, 2, false),
+        neural_net(4, 3, 6),
+    ] {
+        let name = w.name;
+        let grad = w.gradient();
+        let h = w.hessian();
+        let roots = [w.loss, grad, h];
+        let want = Plan::new(&w.g, &roots).run(&w.g, &w.env);
+        for level in [OptLevel::None, OptLevel::Cse, OptLevel::Full] {
+            let mut g2 = w.g.clone();
+            let o = optimize(&mut g2, &roots, level);
+            assert!(o.stats.nodes_after <= o.stats.nodes_before, "{}: {}", name, o.stats);
+            assert!(o.stats.flops_after <= o.stats.flops_before, "{}: {}", name, o.stats);
+            let got = CompiledPlan::new(&g2, &o.roots).run(&w.env);
+            for (c, wv) in got.iter().zip(&want) {
+                assert!(
+                    c.allclose(wv, 1e-8, 1e-10),
+                    "{} {:?}: optimized executor vs interpreter diff {}",
+                    name,
+                    level,
+                    c.max_abs_diff(wv)
+                );
+            }
+            // the dead-node sweep must be invisible to the numerics
+            let (gc, rc) = compact(&g2, &o.roots);
+            let swept = CompiledPlan::new(&gc, &rc).run(&w.env);
+            for (s, c) in swept.iter().zip(&got) {
+                assert!(
+                    s.allclose(c, 1e-12, 1e-14),
+                    "{} {:?}: compaction changed values, diff {}",
+                    name,
+                    level,
+                    s.max_abs_diff(c)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fig3_hessians_report_joint_savings_for_full_roots() {
+    // loss + gradient + Hessian jointly: the optimizer must never make
+    // the joint DAG bigger, and the reported stats must be coherent
+    for mut w in [
+        logistic_regression(16, 8),
+        matrix_factorization(8, 8, 3, false),
+        neural_net(8, 3, 12),
+    ] {
+        let name = w.name;
+        let grad = w.gradient();
+        let h = w.hessian();
+        let roots = [w.loss, grad, h];
+        let mut g2 = w.g.clone();
+        let o = optimize(&mut g2, &roots, OptLevel::Full);
+        assert!(
+            o.stats.nodes_after <= o.stats.nodes_before
+                && o.stats.flops_after <= o.stats.flops_before,
+            "{}: optimizer regressed: {}",
+            name,
+            o.stats
+        );
+        // sanity of the joint-cost accounting: the compacted graph holds
+        // exactly the live nodes
+        let (gc, rc) = compact(&g2, &o.roots);
+        assert_eq!(gc.len(), g2.topo(&o.roots).len(), "{}", name);
+        assert_eq!(cost::dag_flops(&gc, &rc), o.stats.flops_after, "{}", name);
+    }
+}
+
+#[test]
+fn cse_merges_relabelled_and_swapped_duplicates() {
+    let mut g = Graph::new();
+    let a = g.var("A", &[5, 6]);
+    let x = g.var("x", &[6]);
+    // three spellings of A·x: parsed labels, shifted labels, swapped
+    let m1 = g.mul(a, x, EinSpec::parse("ij,j->i"));
+    let m2 = g.mul(a, x, EinSpec::new(vec![11, 4], vec![4], vec![11]));
+    let m3 = g.mul(x, a, EinSpec::parse("j,ij->i"));
+    assert!(m1 != m2 && m2 != m3 && m1 != m3);
+    let s12 = g.add(m1, m2);
+    let s = g.add(s12, m3);
+    let mut g2 = g.clone();
+    let o = optimize(&mut g2, &[s], OptLevel::Cse);
+    assert!(o.stats.cse_merged >= 2, "three spellings must merge: {}", o.stats);
+    assert!(o.stats.nodes_after < o.stats.nodes_before, "{}", o.stats);
+    let muls = g2
+        .topo(&o.roots)
+        .iter()
+        .filter(|&&n| matches!(g2.op(n), Op::Mul(..)))
+        .count();
+    assert_eq!(muls, 1, "exactly one contraction must survive CSE");
+    // numerics: 3·(A x)
+    let mut env = Env::new();
+    env.insert("A", Tensor::randn(&[5, 6], 1));
+    env.insert("x", Tensor::randn(&[6], 2));
+    let want = Plan::new(&g, &[s]).run(&g, &env);
+    let got = Plan::new(&g2, &o.roots).run(&g2, &env);
+    assert!(got[0].allclose(&want[0], 1e-12, 1e-13));
+}
+
+#[test]
+fn matrix_chain_association_must_change() {
+    // ((A·B)·C)·x on 24×24 matrices: right-to-left association is the
+    // unique cheap order; the optimizer must find it
+    let n = 24usize;
+    let mut g = Graph::new();
+    let a = g.var("A", &[n, n]);
+    let b = g.var("B", &[n, n]);
+    let c = g.var("C", &[n, n]);
+    let x = g.var("x", &[n]);
+    let ab = g.matmul(a, b);
+    let abc = g.matmul(ab, c);
+    let y = g.matvec(abc, x);
+    let mut g2 = g.clone();
+    let o = optimize(&mut g2, &[y], OptLevel::Full);
+    assert!(o.stats.reassoc_rewritten >= 1, "{}", o.stats);
+    // cheap order: three matvecs ≈ 3n², vs 2n³ + n² before
+    let n3 = (n as u128).pow(3);
+    assert!(o.stats.flops_before >= 2 * n3);
+    assert!(
+        o.stats.flops_after < o.stats.flops_before / 4,
+        "association search missed the matvec chain: {}",
+        o.stats
+    );
+    let mut env = Env::new();
+    env.insert("A", Tensor::randn(&[n, n], 1).scale(0.3));
+    env.insert("B", Tensor::randn(&[n, n], 2).scale(0.3));
+    env.insert("C", Tensor::randn(&[n, n], 3).scale(0.3));
+    env.insert("x", Tensor::randn(&[n], 4));
+    let want = Plan::new(&g, &[y]).run(&g, &env);
+    let got = Plan::new(&g2, &o.roots).run(&g2, &env);
+    assert!(got[0].allclose(&want[0], 1e-9, 1e-11), "diff {}", got[0].max_abs_diff(&want[0]));
+}
+
+#[test]
+fn eval_many_levels_agree_on_public_path() {
+    // the public eval path runs the optimizer by default; the escape
+    // hatch must agree within association tolerance
+    let mut w = logistic_regression(12, 5);
+    let grad = w.gradient();
+    let h = w.hessian();
+    let on = eval_many(&w.g, &[w.loss, grad, h], &w.env);
+    let off = eval_many_with(&w.g, &[w.loss, grad, h], &w.env, OptLevel::None);
+    for (a, b) in on.iter().zip(&off) {
+        assert!(
+            a.allclose(b, 1e-9, 1e-11),
+            "opt-on vs opt-off diverged: diff {}",
+            a.max_abs_diff(b)
+        );
+    }
+}
+
+#[test]
+fn optimizer_handles_raw_delta_seeded_jacobians() {
+    // unsimplified reverse-mode output: delta seeds, broadcast pullbacks,
+    // permuted outputs — the optimizer must digest all of it
+    for seed in 0..6u64 {
+        let mut g = Graph::new();
+        let a = g.var("A", &[3, 4]);
+        let x = g.var("x", &[4]);
+        let ax = g.matvec(a, x);
+        let y = match seed % 3 {
+            0 => g.elem(Elem::Exp, ax),
+            1 => {
+                let t = g.elem(Elem::Tanh, ax);
+                g.hadamard(t, ax)
+            }
+            _ => {
+                let s = g.elem(Elem::Sigmoid, ax);
+                g.add(s, ax)
+            }
+        };
+        let jac = reverse_derivative(&mut g, y, &[x, a]);
+        let mut env = Env::new();
+        env.insert("A", Tensor::randn(&[3, 4], 10 + seed));
+        env.insert("x", Tensor::randn(&[4], 20 + seed));
+        let want = Plan::new(&g, &jac).run(&g, &env);
+        let mut g2 = g.clone();
+        let o = optimize(&mut g2, &jac, OptLevel::Full);
+        assert!(o.stats.nodes_after <= o.stats.nodes_before);
+        assert!(o.stats.flops_after <= o.stats.flops_before);
+        let got = CompiledPlan::new(&g2, &o.roots).run(&env);
+        for (c, wv) in got.iter().zip(&want) {
+            assert!(
+                c.allclose(wv, 1e-9, 1e-11),
+                "seed {}: diff {}",
+                seed,
+                c.max_abs_diff(wv)
+            );
+        }
+    }
+}
