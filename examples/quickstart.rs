@@ -2,6 +2,13 @@
 //! simplify, and evaluate — the 60-second tour of the public API.
 //!
 //! Run: `cargo run --release --example quickstart`
+//!
+//! The `optimizer: …` line below is the [`tensorcalc::opt::OptStats`]
+//! report (DAG nodes and estimated flops before/after the graph
+//! optimizer). To reproduce the paper's figures and the design
+//! ablations, see the "Reproduce" section of the repository README:
+//! `cargo bench --bench fig2_gradients | fig3_hessians | ablation_modes`,
+//! and `scripts/bench_baseline.sh` to record `BENCH_exec.json`.
 
 use tensorcalc::prelude::*;
 use tensorcalc::simplify::dag_size;

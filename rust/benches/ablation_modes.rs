@@ -6,14 +6,27 @@
 //! * **cc** — cross-country vs reverse association on the Example-7
 //!   chain `B·diag(u)·diag(v)·A` in isolation,
 //! * **compress** — evaluating the matfac Hessian core vs materialising
-//!   the order-4 tensor.
+//!   the order-4 tensor,
+//!
+//! plus the two exec-layer kernel ablations added with the tiled GEMM:
+//!
+//! * **gemm** — the tiled/packed kernel vs the flat pre-tiling kernel on
+//!   epilogue-free contractions (tiling must not regress these),
+//! * **epilogue** — fused chains riding on a contraction:
+//!   `EpilogueMode::InTile` (applied inside the GEMM tiles, no second
+//!   output sweep) vs `EpilogueMode::TwoPass` vs the unfused executor.
 //!
 //! Run: `cargo bench --bench ablation_modes`
+//!
+//! Set `BENCH_JSON=<path>` to also record every row as JSON — the
+//! perf-trajectory hook `scripts/bench_baseline.sh` uses to write
+//! `BENCH_exec.json`.
 
 use tensorcalc::autodiff::cross_country::optimize_contractions;
+use tensorcalc::einsum::{gemm_into, gemm_into_flat};
 use tensorcalc::eval::Env;
-use tensorcalc::exec::CompiledPlan;
-use tensorcalc::figures::{newton, print_table, Row};
+use tensorcalc::exec::{CompiledPlan, EpilogueMode};
+use tensorcalc::figures::{maybe_write_bench_json, newton, print_table, Row};
 use tensorcalc::ir::{Elem, Graph};
 use tensorcalc::opt::{optimize, OptLevel};
 use tensorcalc::problems::{logistic_regression, matrix_factorization, neural_net};
@@ -22,10 +35,12 @@ use tensorcalc::util::time_median;
 
 fn main() {
     let secs = 0.3;
+    let mut all_rows: Vec<Row> = Vec::new();
 
     // ---- newton: §3.3 in-text claim ----
     let rows = newton(&[20, 50, 100, 200], 10, secs);
     print_table("§3.3 — compressed vs full Newton system (matfac, k=10)", &rows);
+    all_rows.extend(rows.iter().cloned());
     for n in [20usize, 50, 100, 200] {
         let fast = rows.iter().find(|r| r.n == n && r.mode.starts_with("compressed"));
         let slow = rows.iter().find(|r| r.n == n && r.mode.starts_with("full"));
@@ -70,6 +85,85 @@ fn main() {
         }
     }
     print_table("Cross-country ablation — Example 7 chain B·diag(u)·diag(v)·A", &rows);
+    all_rows.extend(rows.iter().cloned());
+
+    // ---- gemm: tiled/packed kernel vs the flat pre-tiling kernel ----
+    // epilogue-free contractions: tiling must win (or at least not
+    // regress) without any fused chain riding on the output. Both sides
+    // reuse one re-zeroed output buffer so only the kernels differ.
+    let mut rows = Vec::new();
+    for &n in &[128usize, 256, 512] {
+        let a = Tensor::randn(&[n, n], 11);
+        let b = Tensor::randn(&[n, n], 12);
+        let mut c = vec![0.0; n * n];
+        let (t, runs) = time_median(
+            || {
+                c.fill(0.0);
+                gemm_into(a.data(), b.data(), &mut c, n, n, n);
+                std::hint::black_box(&c);
+            },
+            3,
+            secs,
+        );
+        rows.push(Row { figure: "gemm", problem: "matmul", n, mode: "tiled (default)".into(), secs: t, runs });
+        let (t, runs) = time_median(
+            || {
+                c.fill(0.0);
+                gemm_into_flat(a.data(), b.data(), &mut c, n, n, n);
+                std::hint::black_box(&c);
+            },
+            3,
+            secs,
+        );
+        rows.push(Row { figure: "gemm", problem: "matmul", n, mode: "flat (pre-tiling)".into(), secs: t, runs });
+    }
+    print_table("GEMM kernel ablation — tiled/packed vs flat (epilogue-free)", &rows);
+    all_rows.extend(rows.iter().cloned());
+
+    // ---- epilogue: in-tile vs two-pass vs unfused on a GEMM-fed chain ----
+    // tanh(X·W)+1 ⊙ (X·W): the chain melts into a contraction epilogue;
+    // InTile applies it inside the GEMM tiles (no second output sweep),
+    // TwoPass sweeps the finished output once more, unfused materialises
+    // every chain node.
+    let mut rows = Vec::new();
+    for &n in &[256usize, 512, 1024] {
+        let mut g = Graph::new();
+        let x = g.var("X", &[n, n]);
+        let w = g.var("W", &[n, n]);
+        let xw = g.matmul(x, w);
+        let t = g.elem(Elem::Tanh, xw);
+        let one = g.constant(1.0, &[n, n]);
+        let s = g.add(t, one);
+        let y = g.hadamard(s, xw);
+        let mut env = Env::new();
+        env.insert("X", Tensor::randn(&[n, n], 13));
+        env.insert("W", Tensor::randn(&[n, n], 14));
+        for (label, fuse, mode) in [
+            ("in-tile epilogue", true, EpilogueMode::InTile),
+            ("two-pass epilogue", true, EpilogueMode::TwoPass),
+            ("unfused", false, EpilogueMode::InTile),
+        ] {
+            let plan = CompiledPlan::with_options(&g, &[y], fuse, mode);
+            let _ = plan.run(&env); // warm-up
+            let (t, runs) = time_median(
+                || {
+                    std::hint::black_box(plan.run(&env));
+                },
+                3,
+                secs,
+            );
+            rows.push(Row { figure: "epilogue", problem: "gemm-chain", n, mode: label.into(), secs: t, runs });
+        }
+    }
+    print_table("Epilogue ablation — fused chain on a contraction", &rows);
+    for &n in &[256usize, 512, 1024] {
+        let it = rows.iter().find(|r| r.n == n && r.mode.starts_with("in-tile"));
+        let tp = rows.iter().find(|r| r.n == n && r.mode.starts_with("two-pass"));
+        if let (Some(i), Some(t)) = (it, tp) {
+            println!("  n={:<5} in-tile saves {:>6.1}% of the two-pass wall-clock", n, 100.0 * (t.secs - i.secs) / t.secs);
+        }
+    }
+    all_rows.extend(rows.iter().cloned());
 
     // ---- fusion: element-wise chains fused vs one buffer per node ----
     let mut rows = Vec::new();
@@ -104,6 +198,7 @@ fn main() {
         }
     }
     print_table("Fusion ablation — 15-deep element-wise chain", &rows);
+    all_rows.extend(rows.iter().cloned());
 
     // ---- opt: graph-optimizer ablation on the fig3 Hessian workloads ----
     // none = the raw Theorem-8/simplify output, cse = global CSE only,
@@ -137,6 +232,7 @@ fn main() {
         }
     }
     print_table("Optimizer ablation — Hessians, none vs CSE vs CSE+reassoc", &rows);
+    all_rows.extend(rows.iter().cloned());
     for &(p, n) in &[("logreg", 32usize), ("logreg", 64), ("matfac", 32), ("mlp", 16)] {
         let base = rows
             .iter()
@@ -193,4 +289,7 @@ fn main() {
         });
     }
     print_table("Compression ablation — matfac Hessian (k=5)", &rows);
+    all_rows.extend(rows.iter().cloned());
+
+    maybe_write_bench_json(&all_rows);
 }

@@ -4,7 +4,7 @@
 //!
 //! Run: `cargo bench --bench engine_micro`
 
-use tensorcalc::einsum::{einsum, gemm, EinScratch, EinSpec, EinsumPlan};
+use tensorcalc::einsum::{einsum, gemm_into, gemm_into_flat, EinScratch, EinSpec, EinsumPlan};
 use tensorcalc::exec::CompiledPlan;
 use tensorcalc::figures::{print_table, Row};
 use tensorcalc::problems::logistic_regression;
@@ -15,20 +15,44 @@ fn main() {
     let secs = 0.3;
     let mut rows: Vec<Row> = Vec::new();
 
-    // raw GEMM roofline probe
+    // raw GEMM roofline probe: the tiled default kernel vs the flat
+    // pre-tiling reference it replaced (one reused, re-zeroed output
+    // buffer on both sides so only the kernels differ)
     for &n in &[128usize, 256, 512, 1024] {
         let a = Tensor::randn(&[n, n], 1);
         let b = Tensor::randn(&[n, n], 2);
+        let mut c = vec![0.0; n * n];
         let (t, runs) = time_median(
             || {
-                std::hint::black_box(gemm(a.data(), b.data(), n, n, n));
+                c.fill(0.0);
+                gemm_into(a.data(), b.data(), &mut c, n, n, n);
+                std::hint::black_box(&c);
             },
             3,
             secs,
         );
         let gflops = 2.0 * (n as f64).powi(3) / t / 1e9;
-        println!("gemm {0}×{0}×{0}: {1} ({2:.2} GFLOP/s)", n, fmt_secs(t), gflops);
-        rows.push(Row { figure: "micro", problem: "gemm", n, mode: format!("{:.2} GFLOP/s", gflops), secs: t, runs });
+        println!("gemm(tiled) {0}×{0}×{0}: {1} ({2:.2} GFLOP/s)", n, fmt_secs(t), gflops);
+        rows.push(Row { figure: "micro", problem: "gemm-tiled", n, mode: format!("{:.2} GFLOP/s", gflops), secs: t, runs });
+
+        let (tf, runs_f) = time_median(
+            || {
+                c.fill(0.0);
+                gemm_into_flat(a.data(), b.data(), &mut c, n, n, n);
+                std::hint::black_box(&c);
+            },
+            3,
+            secs,
+        );
+        let gflops_f = 2.0 * (n as f64).powi(3) / tf / 1e9;
+        println!(
+            "gemm(flat)  {0}×{0}×{0}: {1} ({2:.2} GFLOP/s, tiled is {3:+.0}%)",
+            n,
+            fmt_secs(tf),
+            gflops_f,
+            100.0 * (tf - t) / tf
+        );
+        rows.push(Row { figure: "micro", problem: "gemm-flat", n, mode: format!("{:.2} GFLOP/s", gflops_f), secs: tf, runs: runs_f });
     }
 
     // einsum shapes that dominate the derivative DAGs

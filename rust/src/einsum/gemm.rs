@@ -1,16 +1,80 @@
-//! Blocked dense GEMM — the inner kernel every contraction reduces to.
+//! Blocked, packed, tiled GEMM — the inner kernel every contraction
+//! reduces to — with an in-tile epilogue hook.
 //!
 //! `C[m,n] += Σ_k A[m,k] · B[k,n]` over row-major contiguous buffers.
-//! The kernel is cache-blocked over `k` and parallelised over row bands
-//! with scoped threads; the innermost `j` loop is written so LLVM
-//! auto-vectorises it (contiguous FMA over the output row).
+//!
+//! The tiled path is the classic three-level blocking: a
+//! [`GEMM_MR`]×[`GEMM_NR`] register microkernel accumulates into local
+//! scalars, an [`GEMM_MC`]×[`GEMM_KC`] block of A is packed into
+//! microkernel order (L2-resident, per-thread scratch sized to the
+//! call), and B is packed **once per GEMM** into
+//! [`GEMM_KC`]×[`GEMM_NC`] chunks ([`pack_b_all`]) that the microkernel
+//! streams through — on the parallel path all row bands share the one
+//! packed B read-only. Packing pads partial tiles with zeros so the
+//! microkernel always runs full constant-trip loops (auto-vectorised);
+//! the store loop masks the padding back off. Large GEMMs parallelise
+//! over row bands with scoped threads, exactly like the flat kernel.
+//!
+//! **In-tile epilogue** ([`TileEpilogue`]): callers can pass a per-tile
+//! post-processing hook that is applied to every output element exactly
+//! once, immediately after its *final* k-accumulation, while the tile is
+//! still cache-hot. The compiled executor uses this to run fused
+//! element-wise chains riding on a contraction without a second sweep
+//! over the output buffer (the memory pass that
+//! `EinsumPlan::run_with_epilogue` — kept as the two-pass reference —
+//! still performs). Epilogue offsets are *global* flat indices so
+//! broadcast/sliced operands of the fused chain resolve correctly from
+//! inside row bands and batch slices.
+//!
+//! The pre-tiling flat kernel survives as [`gemm_into_flat`]: it is the
+//! differential baseline for the tiled path, the small-shape fast path
+//! (below [`GEMM_TILED_MIN_FLOP`] packing would dominate) and the
+//! tiled-vs-flat ablation dimension in `benches/`.
 
-use crate::util::{par_band_zip, PAR_GEMM_MIN_FLOP};
+use crate::util::{
+    num_threads, par_band_zip, with_pack_scratch, GEMM_KC, GEMM_MC, GEMM_MR, GEMM_NC, GEMM_NR,
+    GEMM_TILED_MIN_FLOP, PAR_GEMM_MIN_FLOP,
+};
 
-/// Cache block along the contraction dimension (fits a few rows of B in L1/L2).
-const KC: usize = 256;
-/// Cache block along the output columns (B panel = KC·NC·8 bytes ≤ L2).
-const NC: usize = 512;
+/// Flat-kernel cache block along the contraction dimension.
+const KC_FLAT: usize = 256;
+/// Flat-kernel cache block along the output columns.
+const NC_FLAT: usize = 512;
+
+/// A per-tile output post-processing hook: `apply(base, seg)` must
+/// transform every element of `seg` exactly once, where `seg[j]` holds
+/// the *final* accumulated value of global flat output index `base + j`.
+/// The kernel guarantees each output element is handed to the epilogue
+/// exactly once, after its last k-block accumulation, in disjoint
+/// segments (so `Sync` suffices for the parallel row-band path).
+///
+/// The hook is called from inside the tile loop while the thread's
+/// packing scratch is checked out: it must be element-wise work only and
+/// must not re-enter a GEMM on the same thread.
+pub trait TileEpilogue: Sync {
+    fn apply(&self, base: usize, seg: &mut [f64]);
+}
+
+/// The no-op epilogue: `gemm_into` instantiates the tiled kernel with
+/// it, and the optimizer erases the calls entirely.
+pub struct NoEpilogue;
+
+impl TileEpilogue for NoEpilogue {
+    #[inline(always)]
+    fn apply(&self, _base: usize, _seg: &mut [f64]) {}
+}
+
+/// Adapter running any `Fn(usize, &mut [f64]) + Sync` closure as a
+/// [`TileEpilogue`]. (A direct blanket impl over `F: Fn` would collide
+/// with the [`NoEpilogue`] impl under coherence, hence the newtype.)
+pub struct EpiFn<F>(pub F);
+
+impl<F: Fn(usize, &mut [f64]) + Sync> TileEpilogue for EpiFn<F> {
+    #[inline]
+    fn apply(&self, base: usize, seg: &mut [f64]) {
+        (self.0)(base, seg)
+    }
+}
 
 /// `C = A · B` into a fresh buffer. `a` is `m×k` row-major, `b` is `k×n`.
 pub fn gemm(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
@@ -21,13 +85,235 @@ pub fn gemm(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
 
 /// `C += A · B` (accumulating) into an existing `m×n` buffer.
 pub fn gemm_into(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
+    gemm_into_epi(a, b, c, m, k, n, 0, &NoEpilogue);
+}
+
+/// `C += A · B`, then `epi` applied exactly once to every element of `C`
+/// after its final accumulation — inside the tile loop while the tile is
+/// cache-hot on the tiled path, as a trailing sweep on the small-shape
+/// and matvec fast paths (where `C` is tiny or freshly written anyway).
+///
+/// `c_base` is the global flat index of `c[0]` in the logical output
+/// buffer; the epilogue sees global offsets (batched callers pass the
+/// slice offset).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_into_epi<E: TileEpilogue>(
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    c_base: usize,
+    epi: &E,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        // the empty contraction adds nothing, but the epilogue still
+        // owes every element exactly one application
+        epi.apply(c_base, c);
+        return;
+    }
+    // Matvec (n == 1 < GEMM_NR), small, or skinny shapes: the
+    // packed/tiled path cannot pay for itself — run the flat reference
+    // kernel (which has its own matvec fast path) and sweep the output
+    // once. For every shape in this class the output is tiny relative
+    // to the operand reads, so the extra sweep is noise.
+    if m < GEMM_MR || n < GEMM_NR || m * n * k < GEMM_TILED_MIN_FLOP {
+        gemm_into_flat(a, b, c, m, k, n);
+        epi.apply(c_base, c);
+        return;
+    }
+
+    // The `num_threads() > 1` gate guarantees par_band_zip really forks
+    // (units = m ≥ 2): bands then run on fresh scoped threads with their
+    // own pack scratch, so holding this thread's scratch open for the
+    // shared packed B below can never be re-entered.
+    if m * n * k >= PAR_GEMM_MIN_FLOP && m > 1 && num_threads() > 1 {
+        with_pack_scratch(|pack| {
+            // B is packed once into this thread's reusable scratch and
+            // shared read-only by the row bands — packing it inside
+            // each band would multiply that memory traffic by the
+            // thread count. Each band packs only its own A blocks.
+            pack_b_all(b, &mut pack.b, k, n);
+            let bpack: &[f64] = &pack.b;
+            par_band_zip(c, n, a, k, |off, cb, ab| {
+                let rows = cb.len() / n;
+                with_pack_scratch(|wpack| {
+                    tiled_body(ab, bpack, cb, rows, k, n, c_base + off * n, epi, &mut wpack.a)
+                });
+            });
+        });
+    } else {
+        with_pack_scratch(|pack| {
+            pack_b_all(b, &mut pack.b, k, n);
+            tiled_body(a, &pack.b, c, m, k, n, c_base, epi, &mut pack.a)
+        });
+    }
+}
+
+/// Pack every `(jc, pc)` block of B once, in the exact `(jc outer, pc
+/// inner)` order [`tiled_body`] consumes chunks — so B is packed once
+/// per GEMM, not once per row band. The scratch only ever grows (no
+/// clear-and-zero: [`pack_b`] overwrites every element of its chunk,
+/// padding included, and readers use the same chunk offsets).
+fn pack_b_all(b: &[f64], bpack: &mut Vec<f64>, k: usize, n: usize) {
+    let mut padded_n = 0usize;
+    for jc in (0..n).step_by(GEMM_NC) {
+        padded_n += GEMM_NC.min(n - jc).div_ceil(GEMM_NR) * GEMM_NR;
+    }
+    if bpack.len() < padded_n * k {
+        bpack.resize(padded_n * k, 0.0);
+    }
+    let mut off = 0usize;
+    for jc in (0..n).step_by(GEMM_NC) {
+        let nc = GEMM_NC.min(n - jc);
+        for pc in (0..k).step_by(GEMM_KC) {
+            let kc = GEMM_KC.min(k - pc);
+            let len = nc.div_ceil(GEMM_NR) * GEMM_NR * kc;
+            pack_b(b, &mut bpack[off..off + len], pc, kc, jc, nc, n);
+            off += len;
+        }
+    }
+}
+
+/// The blocked/packed serial core: loops `jc` (NC column blocks) → `pc`
+/// (KC k-blocks) → `ic` (MC row blocks), reading pre-packed B chunks
+/// (see [`pack_b_all`]) and packing A once per `(ic, pc)` into `apack`
+/// (grown to the call's actual block size, then reused), then sweeps
+/// the microkernel over the packed panels. On the *last* k-block each
+/// finished `mc×nc` output block gets the epilogue applied row by row,
+/// while it is cache-hot.
+#[allow(clippy::too_many_arguments)]
+fn tiled_body<E: TileEpilogue>(
+    a: &[f64],
+    bpack: &[f64],
+    c: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    c_base: usize,
+    epi: &E,
+    apack: &mut Vec<f64>,
+) {
+    let a_need = GEMM_MC.min(m).div_ceil(GEMM_MR) * GEMM_MR * GEMM_KC.min(k);
+    if apack.len() < a_need {
+        apack.resize(a_need, 0.0);
+    }
+    let mut b_off = 0usize;
+    for jc in (0..n).step_by(GEMM_NC) {
+        let nc = GEMM_NC.min(n - jc);
+        for pc in (0..k).step_by(GEMM_KC) {
+            let kc = GEMM_KC.min(k - pc);
+            let last_k = pc + kc == k;
+            let bchunk = &bpack[b_off..b_off + nc.div_ceil(GEMM_NR) * GEMM_NR * kc];
+            b_off += bchunk.len();
+            for ic in (0..m).step_by(GEMM_MC) {
+                let mc = GEMM_MC.min(m - ic);
+                pack_a(a, apack, ic, mc, pc, kc, k);
+                for jr in (0..nc).step_by(GEMM_NR) {
+                    let nr = GEMM_NR.min(nc - jr);
+                    let bp = &bchunk[(jr / GEMM_NR) * kc * GEMM_NR..][..kc * GEMM_NR];
+                    for ir in (0..mc).step_by(GEMM_MR) {
+                        let mr = GEMM_MR.min(mc - ir);
+                        let ap = &apack[(ir / GEMM_MR) * kc * GEMM_MR..][..kc * GEMM_MR];
+                        microkernel(ap, bp, c, n, ic + ir, jc + jr, mr, nr, kc);
+                    }
+                }
+                if last_k {
+                    for i in ic..ic + mc {
+                        let row = &mut c[i * n + jc..i * n + jc + nc];
+                        epi.apply(c_base + i * n + jc, row);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Pack `A[ic..ic+mc, pc..pc+kc]` (row stride `lda`) into panels of
+/// [`GEMM_MR`] rows: `ap[panel][kk][r]`, zero-padded to full panels.
+fn pack_a(a: &[f64], ap: &mut [f64], ic: usize, mc: usize, pc: usize, kc: usize, lda: usize) {
+    let mut dst = 0usize;
+    for ir in (0..mc).step_by(GEMM_MR) {
+        let mr = GEMM_MR.min(mc - ir);
+        for kk in 0..kc {
+            for r in 0..GEMM_MR {
+                ap[dst] = if r < mr { a[(ic + ir + r) * lda + pc + kk] } else { 0.0 };
+                dst += 1;
+            }
+        }
+    }
+}
+
+/// Pack `B[pc..pc+kc, jc..jc+nc]` (row stride `ldb`) into panels of
+/// [`GEMM_NR`] columns: `bp[panel][kk][j]`, zero-padded to full panels.
+fn pack_b(b: &[f64], bp: &mut [f64], pc: usize, kc: usize, jc: usize, nc: usize, ldb: usize) {
+    let mut dst = 0usize;
+    for jr in (0..nc).step_by(GEMM_NR) {
+        let nr = GEMM_NR.min(nc - jr);
+        for kk in 0..kc {
+            let src = (pc + kk) * ldb + jc + jr;
+            for j in 0..GEMM_NR {
+                bp[dst] = if j < nr { b[src + j] } else { 0.0 };
+                dst += 1;
+            }
+        }
+    }
+}
+
+/// The register microkernel: accumulate a full [`GEMM_MR`]×[`GEMM_NR`]
+/// tile over `kc` packed steps in local accumulators (constant-trip
+/// loops — LLVM keeps the tile in SIMD registers), then add the valid
+/// `mr×nr` part into `C` at `(row0, col0)` with row stride `ldc`.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn microkernel(
+    ap: &[f64],
+    bp: &[f64],
+    c: &mut [f64],
+    ldc: usize,
+    row0: usize,
+    col0: usize,
+    mr: usize,
+    nr: usize,
+    kc: usize,
+) {
+    let mut acc = [[0.0f64; GEMM_NR]; GEMM_MR];
+    for kk in 0..kc {
+        let av = &ap[kk * GEMM_MR..kk * GEMM_MR + GEMM_MR];
+        let bv = &bp[kk * GEMM_NR..kk * GEMM_NR + GEMM_NR];
+        for r in 0..GEMM_MR {
+            let ar = av[r];
+            for j in 0..GEMM_NR {
+                acc[r][j] += ar * bv[j];
+            }
+        }
+    }
+    for r in 0..mr {
+        let crow = &mut c[(row0 + r) * ldc + col0..(row0 + r) * ldc + col0 + nr];
+        for (cv, av) in crow.iter_mut().zip(acc[r][..nr].iter()) {
+            *cv += av;
+        }
+    }
+}
+
+/// The pre-tiling flat kernel (k-blocked, column-blocked, row-parallel,
+/// auto-vectorised over contiguous output rows). Kept as the reference
+/// baseline the tiled path is differentially pinned against, as the
+/// small-shape fast path, and as the "flat" ablation mode in the benches.
+pub fn gemm_into_flat(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
     if m == 0 || n == 0 || k == 0 {
         return;
     }
-    // Degenerate shapes: dot products and outer products have cheaper forms.
     if n == 1 && k > 1 {
         // C[m] += A[m,k] · b[k]
         let matvec_row = |ci: &mut f64, arow: &[f64]| {
@@ -53,12 +339,12 @@ pub fn gemm_into(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usi
 
     let body = |c_block: &mut [f64], a_block: &[f64]| {
         let rows = c_block.len() / n;
-        for k0 in (0..k).step_by(KC) {
-            let kend = (k0 + KC).min(k);
-            // column blocking keeps the active B panel (KC×NC doubles)
-            // resident in L2 across the i loop
-            for j0 in (0..n).step_by(NC) {
-                let jend = (j0 + NC).min(n);
+        for k0 in (0..k).step_by(KC_FLAT) {
+            let kend = (k0 + KC_FLAT).min(k);
+            // column blocking keeps the active B panel resident in L2
+            // across the i loop
+            for j0 in (0..n).step_by(NC_FLAT) {
+                let jend = (j0 + NC_FLAT).min(n);
                 for i in 0..rows {
                     let arow = &a_block[i * k..(i + 1) * k];
                     let crow = &mut c_block[i * n + j0..i * n + jend];
@@ -111,10 +397,16 @@ mod tests {
     fn check(m: usize, k: usize, n: usize) {
         let a = rand_vec(m * k, 1);
         let b = rand_vec(k * n, 2);
-        let got = gemm(&a, &b, m, k, n);
         let want = naive(&a, &b, m, k, n);
+        let got = gemm(&a, &b, m, k, n);
         for (g, w) in got.iter().zip(&want) {
-            assert!((g - w).abs() < 1e-10, "{} vs {} ({m}x{k}x{n})", g, w);
+            assert!((g - w).abs() < 1e-9, "{} vs {} ({m}x{k}x{n})", g, w);
+        }
+        // the flat reference kernel must agree with the tiled default
+        let mut flat = vec![0.0; m * n];
+        gemm_into_flat(&a, &b, &mut flat, m, k, n);
+        for (g, w) in flat.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-9, "flat {} vs {} ({m}x{k}x{n})", g, w);
         }
     }
 
@@ -132,6 +424,9 @@ mod tests {
         check(33, 300, 17); // crosses KC and MC boundaries
         check(64, 64, 64);
         check(100, 513, 3);
+        check(65, 257, 513); // one past every tiled block boundary
+        check(4, 512, 8); // minimal tile dims, exactly at the flop threshold
+        check(32, 64, 32); // serial tiled path (below the parallel gate)
     }
 
     #[test]
@@ -151,5 +446,60 @@ mod tests {
         let mut c = vec![10.0];
         gemm_into(&a, &b, &mut c, 1, 2, 1);
         assert_eq!(c, vec![10.0 + 3.0 + 8.0]);
+    }
+
+    /// The in-tile epilogue must touch every element exactly once, after
+    /// its final accumulation, with the right global offset.
+    fn check_epilogue(m: usize, k: usize, n: usize, c_base: usize) {
+        let a = rand_vec(m * k, 3);
+        let b = rand_vec(k * n, 4);
+        // reference: full GEMM, then one sweep applying the epilogue
+        let mut want = naive(&a, &b, m, k, n);
+        for (j, w) in want.iter_mut().enumerate() {
+            *w = w.tanh() + (c_base + j) as f64;
+        }
+        let mut got = vec![0.0; m * n];
+        let epi = EpiFn(|base: usize, seg: &mut [f64]| {
+            for (j, v) in seg.iter_mut().enumerate() {
+                *v = v.tanh() + (base + j) as f64;
+            }
+        });
+        gemm_into_epi(&a, &b, &mut got, m, k, n, c_base, &epi);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!((g - w).abs() < 1e-9, "epi {} vs {} at {} ({m}x{k}x{n})", g, w, i);
+        }
+    }
+
+    #[test]
+    fn epilogue_small_flat_path() {
+        check_epilogue(3, 5, 4, 0);
+        check_epilogue(3, 5, 4, 17);
+        check_epilogue(7, 1, 9, 2); // k == 1
+    }
+
+    #[test]
+    fn epilogue_tiled_path() {
+        check_epilogue(32, 64, 32, 0); // serial tiled (below the parallel gate)
+        check_epilogue(32, 64, 32, 1000);
+        check_epilogue(4, 512, 8, 7); // minimal tile dims
+    }
+
+    #[test]
+    fn epilogue_parallel_and_matvec_paths() {
+        check_epilogue(200, 200, 200, 5); // parallel row bands
+        check_epilogue(65, 257, 130, 0); // parallel + every block boundary
+        check_epilogue(100, 700, 1, 3); // matvec fast path
+    }
+
+    #[test]
+    fn epilogue_empty_k_still_applies() {
+        let mut c = vec![1.0, 2.0, 3.0, 4.0];
+        let epi = EpiFn(|_base: usize, seg: &mut [f64]| {
+            for v in seg.iter_mut() {
+                *v += 10.0;
+            }
+        });
+        gemm_into_epi(&[], &[], &mut c, 2, 0, 2, 0, &epi);
+        assert_eq!(c, vec![11.0, 12.0, 13.0, 14.0]);
     }
 }

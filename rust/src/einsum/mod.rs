@@ -21,6 +21,35 @@
 //!   [`crate::exec`]: gathers, pre-sums and permutations are fused into
 //!   strided passes over reused [`EinScratch`] buffers and the result is
 //!   written into a caller-provided (typically pooled) buffer.
+//!
+//! Both bottom out in the tiled GEMM kernel ([`gemm_into`]): register
+//! microkernel, packed cache-blocked panels, scoped-thread row bands,
+//! and a per-tile epilogue hook ([`TileEpilogue`]) that lets fused
+//! element-wise chains run on each output tile right after its final
+//! k-accumulation, while the tile is cache-hot. The pre-tiling flat
+//! kernel survives as [`gemm_into_flat`], the differential/ablation
+//! baseline.
+//!
+//! # Example
+//!
+//! ```
+//! use tensorcalc::einsum::{einsum, EinSpec};
+//! use tensorcalc::tensor::Tensor;
+//!
+//! // matrix product: C[i,k] = Σ_j A[i,j] · B[j,k]
+//! let spec = EinSpec::parse("ij,jk->ik");
+//! let a = Tensor::randn(&[2, 3], 1);
+//! let b = Tensor::randn(&[3, 4], 2);
+//! let c = einsum(&spec, &a, &b);
+//! assert_eq!(c.shape(), &[2, 4]);
+//!
+//! // the same spec also covers traces, diagonals and broadcasts:
+//! // tr(M) via "ii,->"
+//! let m = Tensor::randn(&[5, 5], 3);
+//! let tr = einsum(&EinSpec::parse("ii,->"), &m, &Tensor::scalar(1.0));
+//! let want: f64 = (0..5).map(|i| m.at(&[i, i])).sum();
+//! assert!((tr.item() - want).abs() < 1e-12);
+//! ```
 
 mod exec;
 mod gemm;
@@ -28,6 +57,6 @@ mod plan;
 mod spec;
 
 pub use exec::{einsum, einsum_naive, reduce_sum};
-pub use gemm::{gemm, gemm_into};
+pub use gemm::{gemm, gemm_into, gemm_into_epi, gemm_into_flat, EpiFn, NoEpilogue, TileEpilogue};
 pub use plan::{einsum_into, EinScratch, EinsumPlan};
 pub use spec::{EinSpec, Label};

@@ -16,10 +16,20 @@
 //!    order with one strided read / contiguous write.
 //!
 //! After warm-up no step allocates: scratch buffers grow to their peak
-//! size once and are reused on every subsequent execution.
+//! size once and are reused on every subsequent execution. (The tiled
+//! GEMM's packing scratch is thread-local and follows the same
+//! grow-once pattern on long-lived threads; scoped row-band workers are
+//! born per call and re-grow theirs — bounded by one A block each.)
+//!
+//! Fused element-wise chains riding on a contraction enter here through
+//! two doors: [`EinsumPlan::run_with_epilogue`] (the two-pass reference
+//! — contract, then sweep the output once more) and
+//! [`EinsumPlan::run_with_epilogue_in_tile`] (the hot path — the
+//! epilogue runs inside the GEMM tile loop, right after each tile's
+//! final k-accumulation, erasing the second memory pass).
 
 use super::exec::has_distinct;
-use super::gemm::gemm_into;
+use super::gemm::{gemm_into_epi, NoEpilogue, TileEpilogue};
 use super::spec::{EinSpec, Label};
 use crate::tensor::{row_major_strides, Tensor};
 use crate::util::{par_band_zip2, PAR_BATCH_SLICE_MAX_FLOP, PAR_BATCH_TOTAL_MIN_FLOP};
@@ -358,6 +368,62 @@ impl EinsumPlan {
     /// Execute the contraction into `out` (shape-checked), reusing
     /// `scratch`. Every element of `out` is written.
     pub fn run(&self, a: &Tensor, b: &Tensor, out: &mut Tensor, scratch: &mut EinScratch) {
+        self.run_epi(a, b, out, scratch, &NoEpilogue);
+    }
+
+    /// Execute the contraction into `out`, then apply `epilogue` to the
+    /// freshly written output data — the **two-pass reference** hook the
+    /// compiled executor uses to fuse trailing element-wise chains onto
+    /// a contraction without a separate buffer (and its
+    /// `EpilogueMode::TwoPass` ablation baseline). The epilogue here is
+    /// always a second full sweep over `out`; see
+    /// [`EinsumPlan::run_with_epilogue_in_tile`] for the in-tile form
+    /// that erases that memory pass.
+    pub fn run_with_epilogue<F: FnOnce(&mut [f64])>(
+        &self,
+        a: &Tensor,
+        b: &Tensor,
+        out: &mut Tensor,
+        scratch: &mut EinScratch,
+        epilogue: F,
+    ) {
+        self.run(a, b, out, scratch);
+        epilogue(out.data_mut());
+    }
+
+    /// Execute the contraction with `epi` pushed into the GEMM tile
+    /// loop: every output element receives exactly one `epi` application
+    /// immediately after its final k-accumulation, while the tile is
+    /// still cache-hot — no second sweep over the output buffer.
+    ///
+    /// Plans whose GEMM result needs a final permutation (`out_read`)
+    /// and the non-GEMM kinds fall back to op-then-sweep, which is
+    /// semantically identical (the two-pass reference
+    /// [`EinsumPlan::run_with_epilogue`] and this method agree
+    /// bit-for-bit on every plan kind).
+    pub fn run_with_epilogue_in_tile<E: TileEpilogue>(
+        &self,
+        a: &Tensor,
+        b: &Tensor,
+        out: &mut Tensor,
+        scratch: &mut EinScratch,
+        epi: &E,
+    ) {
+        self.run_epi(a, b, out, scratch, epi);
+    }
+
+    /// Shared execution core: the epilogue is applied exactly once to
+    /// every output element — in-tile on the straight-to-output GEMM
+    /// path, as a trailing sweep everywhere else. `run` instantiates it
+    /// with [`NoEpilogue`], which the optimizer erases.
+    fn run_epi<E: TileEpilogue>(
+        &self,
+        a: &Tensor,
+        b: &Tensor,
+        out: &mut Tensor,
+        scratch: &mut EinScratch,
+        epi: &E,
+    ) {
         assert_eq!(
             out.shape(),
             &self.out_shape[..],
@@ -369,6 +435,7 @@ impl EinsumPlan {
                 for ((o, &x), &y) in out_data.iter_mut().zip(a.data()).zip(b.data()) {
                     *o = x * y;
                 }
+                epi.apply(0, out_data);
             }
             Kind::ScaleA { a_gather, b_sum } => {
                 a_gather.run(a.data(), out_data, &mut scratch.idx);
@@ -379,6 +446,7 @@ impl EinsumPlan {
                         *o *= s[0];
                     }
                 }
+                epi.apply(0, out_data);
             }
             Kind::ScaleB { b_gather, a_sum } => {
                 b_gather.run(b.data(), out_data, &mut scratch.idx);
@@ -389,6 +457,7 @@ impl EinsumPlan {
                         *o *= s[0];
                     }
                 }
+                epi.apply(0, out_data);
             }
             Kind::Gemm { a_gather, b_gather, bsz, m, k, n, k_empty, out_read } => {
                 let (bsz, m, k, n) = (*bsz, *m, *k, *n);
@@ -412,36 +481,24 @@ impl EinsumPlan {
                 };
                 match out_read {
                     None => {
+                        // GEMM order already matches the output order:
+                        // global flat indices in the product equal output
+                        // indices, so the epilogue rides inside the tiles
                         out_data.fill(0.0);
-                        batched_gemm(a_data, b_data, out_data, bsz, m, k, n, *k_empty);
+                        batched_gemm_epi(a_data, b_data, out_data, bsz, m, k, n, *k_empty, epi);
                     }
                     Some(strides) => {
+                        // the permutation re-orders elements, so the
+                        // epilogue can only run on the permuted output
                         scratch.c.clear();
                         scratch.c.resize(bsz * m * n, 0.0);
                         batched_gemm(a_data, b_data, &mut scratch.c, bsz, m, k, n, *k_empty);
                         permute_read(&scratch.c, out_data, &self.out_shape, strides, &mut scratch.idx);
+                        epi.apply(0, out_data);
                     }
                 }
             }
         }
-    }
-
-    /// Execute the contraction into `out`, then apply `epilogue` to the
-    /// freshly written output data — the hook the compiled executor
-    /// uses to fuse trailing element-wise chains onto a contraction
-    /// without a separate buffer. Today the epilogue is a second sweep
-    /// over `out`; pushing it into the GEMM tiles while they are still
-    /// cache-hot is the recorded open seam in ROADMAP.md.
-    pub fn run_with_epilogue<F: FnOnce(&mut [f64])>(
-        &self,
-        a: &Tensor,
-        b: &Tensor,
-        out: &mut Tensor,
-        scratch: &mut EinScratch,
-        epilogue: F,
-    ) {
-        self.run(a, b, out, scratch);
-        epilogue(out.data_mut());
     }
 }
 
@@ -495,13 +552,49 @@ pub(super) fn batched_gemm(
     n: usize,
     k_empty: bool,
 ) {
+    batched_gemm_epi(a, b, c, bsz, m, k, n, k_empty, &NoEpilogue);
+}
+
+/// Block size for epilogue application on the element-wise fast paths:
+/// compute a block, post-process it while it is still in L1/L2, move on.
+const EPI_BLOCK: usize = 4096;
+
+/// [`batched_gemm`] with a [`TileEpilogue`] applied exactly once to
+/// every element of `c` after its final accumulation — inside the GEMM
+/// tiles on the general path, per freshly written block on the
+/// element-wise fast paths. Epilogue offsets are global flat indices
+/// into `c`.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn batched_gemm_epi<E: TileEpilogue>(
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+    bsz: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    k_empty: bool,
+    epi: &E,
+) {
     if bsz == 0 || m == 0 || n == 0 || k == 0 {
-        return; // empty contraction — c stays zero
+        // empty contraction — c stays zero, but the epilogue still owes
+        // every (if any) element one application
+        if !c.is_empty() {
+            epi.apply(0, c);
+        }
+        return;
     }
     if k_empty && m == 1 && n == 1 {
-        // pure batched element-wise product
-        for ((cv, av), bv) in c.iter_mut().zip(a).zip(b) {
-            *cv = av * bv;
+        // pure batched element-wise product, post-processed per block
+        let mut off = 0usize;
+        while off < c.len() {
+            let end = (off + EPI_BLOCK).min(c.len());
+            let cb = &mut c[off..end];
+            for ((cv, av), bv) in cb.iter_mut().zip(&a[off..end]).zip(&b[off..end]) {
+                *cv = av * bv;
+            }
+            epi.apply(off, cb);
+            off = end;
         }
     } else if k_empty && n == 1 {
         // row broadcast: C[b, m] = A[b, m] · B[b]
@@ -512,30 +605,34 @@ pub(super) fn batched_gemm(
             for (cv, av) in crow.iter_mut().zip(arow) {
                 *cv = av * bv;
             }
+            epi.apply(bi * m, crow);
         }
     } else {
         // batched GEMM (with k_empty, k == 1 and GEMM degrades gracefully
         // to a batched outer product)
         let per = m * k * n;
         if bsz > 1 && per < PAR_BATCH_SLICE_MAX_FLOP && bsz * per > PAR_BATCH_TOTAL_MIN_FLOP {
-            par_band_zip2(c, m * n, a, m * k, b, k * n, |_, cc, aa, bb| {
-                for ((cs, as_), bs) in cc
+            par_band_zip2(c, m * n, a, m * k, b, k * n, |off, cc, aa, bb| {
+                for (si, ((cs, as_), bs)) in cc
                     .chunks_mut(m * n)
                     .zip(chunks_of(aa, m * k))
                     .zip(chunks_of(bb, k * n))
+                    .enumerate()
                 {
-                    gemm_into(as_, bs, cs, m, k, n);
+                    gemm_into_epi(as_, bs, cs, m, k, n, (off + si) * m * n, epi);
                 }
             });
         } else {
             for bi in 0..bsz {
-                gemm_into(
+                gemm_into_epi(
                     &a[bi * m * k..(bi + 1) * m * k],
                     &b[bi * k * n..(bi + 1) * k * n],
                     &mut c[bi * m * n..(bi + 1) * m * n],
                     m,
                     k,
                     n,
+                    bi * m * n,
+                    epi,
                 );
             }
         }
@@ -545,6 +642,7 @@ pub(super) fn batched_gemm(
 #[cfg(test)]
 mod tests {
     use super::super::exec::{einsum, einsum_naive};
+    use super::super::gemm::EpiFn;
     use super::*;
 
     fn check_into(sig: &str, a_shape: &[usize], b_shape: &[usize]) {
@@ -632,6 +730,46 @@ mod tests {
         let b = Tensor::randn(&[4, 5], 2);
         let mut out = Tensor::zeros(&[5, 3]);
         einsum_into(&spec, &a, &b, &mut out, &mut EinScratch::default());
+    }
+
+    #[test]
+    fn in_tile_epilogue_matches_two_pass() {
+        // every plan kind: tiled GEMM, permuted fallback, parallel
+        // batch, elementwise, scale, outer (k_empty)
+        let cases: Vec<(&str, Vec<usize>, Vec<usize>)> = vec![
+            ("ij,jk->ik", vec![65, 257], vec![257, 130]),
+            ("ij,jk->ki", vec![9, 8], vec![8, 7]),
+            ("aij,ajk->aik", vec![300, 4, 4], vec![300, 4, 4]),
+            ("ij,ij->ij", vec![33, 5], vec![33, 5]),
+            ("ij,k->i", vec![3, 4], vec![5]),
+            ("i,j->ij", vec![64], vec![64]),
+        ];
+        for (sig, sa, sb) in cases {
+            let spec = EinSpec::parse(sig);
+            let a = Tensor::randn(&sa, 41);
+            let b = Tensor::randn(&sb, 42);
+            let plan = EinsumPlan::new(&spec, &sa, &sb);
+            let mut scratch = EinScratch::default();
+            let mut two_pass = Tensor::fill(plan.out_shape(), f64::NAN);
+            plan.run_with_epilogue(&a, &b, &mut two_pass, &mut scratch, |data| {
+                for (i, v) in data.iter_mut().enumerate() {
+                    *v = v.tanh() + i as f64 * 0.01;
+                }
+            });
+            let mut in_tile = Tensor::fill(plan.out_shape(), f64::NAN);
+            let epi = EpiFn(|base: usize, seg: &mut [f64]| {
+                for (j, v) in seg.iter_mut().enumerate() {
+                    *v = v.tanh() + (base + j) as f64 * 0.01;
+                }
+            });
+            plan.run_with_epilogue_in_tile(&a, &b, &mut in_tile, &mut scratch, &epi);
+            assert_eq!(
+                two_pass.data(),
+                in_tile.data(),
+                "{}: in-tile epilogue diverged from the two-pass reference",
+                sig
+            );
+        }
     }
 
     #[test]

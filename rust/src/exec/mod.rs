@@ -30,12 +30,31 @@
 //! the data — one output buffer, zero intermediates, regardless of the
 //! chain depth. Where the chain rides on the output of a contraction or
 //! general unary whose value is not needed elsewhere, the kernel is
-//! instead applied *in place* as an epilogue on the producer's freshly
-//! written buffer (via [`EinsumPlan::run_with_epilogue`]), so the whole
-//! chain costs no buffer at all. Kernels are capped at `FUSED_MAX_ARGS`
-//! operand slots (a chain that would exceed it splits into two kernels),
-//! which lets execution resolve operands into a stack array — the hot
-//! path performs no heap allocation at all once the pool is warm.
+//! instead applied *in place* as an epilogue on the producer's buffer,
+//! so the whole chain costs no buffer at all. Kernels are capped at
+//! `FUSED_MAX_ARGS` operand slots (a chain that would exceed it splits
+//! into two kernels), which lets execution resolve operands into a stack
+//! array — the hot path performs no heap allocation at all once the pool
+//! is warm.
+//!
+//! ## Epilogue placement ([`EpilogueMode`])
+//!
+//! A contraction epilogue can run two ways, selected at compile time:
+//!
+//! * [`EpilogueMode::InTile`] (default) — the kernel is pushed down into
+//!   the GEMM tile loop
+//!   ([`EinsumPlan::run_with_epilogue_in_tile`](crate::einsum::EinsumPlan::run_with_epilogue_in_tile)):
+//!   each output tile is post-processed right after its final
+//!   k-accumulation, while it is cache-hot, so the fused chain costs no
+//!   extra pass over the output buffer at all.
+//! * [`EpilogueMode::TwoPass`] — the pre-tiling behaviour, kept as the
+//!   reference and ablation baseline: the contraction finishes, then the
+//!   kernel sweeps the whole output buffer once more
+//!   ([`EinsumPlan::run_with_epilogue`]).
+//!
+//! The two are bit-identical (same GEMM accumulation order, same
+//! per-element epilogue program); `tests/tile_epilogue.rs` pins them
+//! against each other and against the interpreter.
 //!
 //! ## Work-stealing level scheduling
 //!
@@ -65,7 +84,7 @@
 //! so every worker that serves the same graph also shares one warm
 //! buffer pool.
 
-use crate::einsum::{EinScratch, EinSpec, EinsumPlan, Label};
+use crate::einsum::{EinScratch, EinSpec, EinsumPlan, EpiFn, Label};
 use crate::eval::Env;
 use crate::ir::{Elem, GenFn, Graph, NodeId, Op};
 use crate::opt::OptLevel;
@@ -188,10 +207,17 @@ impl FusedKernel {
     /// In-place epilogue on a producer's output: `Load(0)` reads the
     /// buffer value being replaced, `Load(k ≥ 1)` reads `rest[k-1]`.
     fn run_inplace(&self, buf: &mut [f64], rest: &[FusedSrc]) {
+        self.run_inplace_at(buf, 0, rest);
+    }
+
+    /// [`FusedKernel::run_inplace`] on a tile: `buf[j]` is global flat
+    /// output element `base + j`, so operand slots resolve correctly
+    /// from inside GEMM tiles, row bands and batch slices.
+    fn run_inplace_at(&self, buf: &mut [f64], base: usize, rest: &[FusedSrc]) {
         let mut stack = [0.0f64; FUSED_MAX_STACK];
-        for (i, slot) in buf.iter_mut().enumerate() {
+        for (j, slot) in buf.iter_mut().enumerate() {
             let carrier = *slot;
-            *slot = self.eval_one(&mut stack, Some(carrier), rest, i);
+            *slot = self.eval_one(&mut stack, Some(carrier), rest, base + j);
         }
     }
 
@@ -447,6 +473,20 @@ impl GroupBuilder<'_> {
     }
 }
 
+/// Where a contraction's fused epilogue runs — the ablation toggle next
+/// to `CompiledPlan::with_fusion`. See the module docs ("Epilogue
+/// placement") for the contract; the two modes are bit-identical.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum EpilogueMode {
+    /// Inside the GEMM tile loop, while each output tile is cache-hot
+    /// (no second sweep over the output buffer). The default.
+    #[default]
+    InTile,
+    /// As a second full sweep over the finished contraction output —
+    /// the pre-tiling behaviour, kept as reference/ablation baseline.
+    TwoPass,
+}
+
 /// An expression DAG compiled for repeated execution: dense instruction
 /// stream in topological order (element-wise chains fused), per-level
 /// scheduling, buffer lifetimes resolved to pool-release points, and all
@@ -472,18 +512,31 @@ pub struct CompiledPlan {
     /// einsum scratch buffers, checked out once per run (serial) or once
     /// per worker (parallel) — never per node, to keep lock traffic low
     scratches: Mutex<Vec<EinScratch>>,
+    /// where contraction epilogues run (in-tile vs two-pass ablation)
+    epilogue_mode: EpilogueMode,
 }
 
 impl CompiledPlan {
     /// Compile the sub-DAG of `g` reachable from `roots`.
     pub fn new(g: &Graph, roots: &[NodeId]) -> Self {
-        Self::with_fusion(g, roots, true)
+        Self::with_options(g, roots, true, EpilogueMode::default())
     }
 
     /// Compile with or without the cross-node fusion pass. `false`
     /// reproduces the PR 1 executor (one pooled buffer per node) and is
     /// kept as the ablation baseline for benches and differential tests.
     pub fn with_fusion(g: &Graph, roots: &[NodeId], fuse: bool) -> Self {
+        Self::with_options(g, roots, fuse, EpilogueMode::default())
+    }
+
+    /// Compile with both ablation toggles explicit: the fusion pass
+    /// on/off, and where contraction epilogues run ([`EpilogueMode`]).
+    pub fn with_options(
+        g: &Graph,
+        roots: &[NodeId],
+        fuse: bool,
+        epilogue_mode: EpilogueMode,
+    ) -> Self {
         let order = g.topo(roots);
         let n = order.len();
         let mut pos_of: HashMap<NodeId, usize> = HashMap::with_capacity(n);
@@ -711,6 +764,7 @@ impl CompiledPlan {
             root_pos,
             pool: Mutex::new(BufferPool::default()),
             scratches: Mutex::new(Vec::new()),
+            epilogue_mode,
         }
     }
 
@@ -884,9 +938,23 @@ impl CompiledPlan {
                     None => plan.run(ta, tb, &mut out, scratch),
                     Some(e) => {
                         let srcs = fused_srcs(&e.args, values, out_len);
-                        plan.run_with_epilogue(ta, tb, &mut out, scratch, |data| {
-                            e.kernel.run_inplace(data, &srcs[..e.args.len()])
-                        });
+                        let rest = &srcs[..e.args.len()];
+                        match self.epilogue_mode {
+                            EpilogueMode::InTile => {
+                                // the fused chain runs on each output
+                                // tile right after its final
+                                // k-accumulation, cache-hot
+                                let tile_epi = EpiFn(|base: usize, seg: &mut [f64]| {
+                                    e.kernel.run_inplace_at(seg, base, rest)
+                                });
+                                plan.run_with_epilogue_in_tile(ta, tb, &mut out, scratch, &tile_epi);
+                            }
+                            EpilogueMode::TwoPass => {
+                                plan.run_with_epilogue(ta, tb, &mut out, scratch, |data| {
+                                    e.kernel.run_inplace(data, rest)
+                                });
+                            }
+                        }
                     }
                 }
                 Val::Owned(out)
@@ -1170,6 +1238,21 @@ mod tests {
         let a = plan.run(&env);
         let b = unfused.run(&env);
         assert_eq!(a[0].data(), b[0].data());
+    }
+
+    #[test]
+    fn epilogue_modes_are_bit_identical() {
+        let (g, y, env) = expr1();
+        let in_tile = CompiledPlan::with_options(&g, &[y], true, EpilogueMode::InTile);
+        let two_pass = CompiledPlan::with_options(&g, &[y], true, EpilogueMode::TwoPass);
+        assert!(in_tile.fused_count() >= 1, "expression 1 must produce an epilogue");
+        let a = in_tile.run(&env);
+        let b = two_pass.run(&env);
+        assert_eq!(
+            a[0].data(),
+            b[0].data(),
+            "in-tile epilogue must be bit-identical to the two-pass reference"
+        );
     }
 
     #[test]

@@ -337,6 +337,42 @@ pub fn newton(sizes: &[usize], k: usize, min_secs: f64) -> Vec<Row> {
     rows
 }
 
+/// Serialize measurement rows as the perf-trajectory JSON that
+/// `scripts/bench_baseline.sh` records into `BENCH_exec.json` at the
+/// repository root. Hand-rolled — the crate is dependency-free.
+pub fn rows_to_json(rows: &[Row]) -> String {
+    let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
+    let mut out = String::from("{\n  \"schema\": \"tensorcalc-bench-rows/v1\",\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"figure\": \"{}\", \"problem\": \"{}\", \"n\": {}, \"mode\": \"{}\", \"median_secs\": {:e}, \"runs\": {}}}{}\n",
+            esc(r.figure),
+            esc(r.problem),
+            r.n,
+            esc(&r.mode),
+            r.secs,
+            r.runs,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Write `rows` to the file named by the `BENCH_JSON` environment
+/// variable (the hook `scripts/bench_baseline.sh` uses); silent no-op
+/// when the variable is unset or empty.
+pub fn maybe_write_bench_json(rows: &[Row]) {
+    let path = match std::env::var("BENCH_JSON") {
+        Ok(p) if !p.is_empty() => p,
+        _ => return,
+    };
+    match std::fs::write(&path, rows_to_json(rows)) {
+        Ok(()) => println!("\nwrote {} bench rows to {}", rows.len(), path),
+        Err(e) => eprintln!("BENCH_JSON: failed to write {}: {}", path, e),
+    }
+}
+
 /// Speedup summary used by EXPERIMENTS.md: for each (problem, n) compare
 /// a mode's median against a reference mode.
 pub fn speedup(rows: &[Row], reference: &str, mode: &str) -> Vec<(String, usize, f64)> {
@@ -384,6 +420,21 @@ mod tests {
             fast.secs,
             slow.secs
         );
+    }
+
+    #[test]
+    fn bench_json_is_well_formed() {
+        let rows = vec![
+            Row { figure: "f", problem: "p", n: 4, mode: "a \"q\"".into(), secs: 5e-4, runs: 7 },
+            Row { figure: "f", problem: "p", n: 8, mode: "b".into(), secs: 1e-3, runs: 3 },
+        ];
+        let j = rows_to_json(&rows);
+        assert!(j.contains("\"schema\": \"tensorcalc-bench-rows/v1\""));
+        assert!(j.contains("\\\"q\\\""), "quotes must be escaped: {}", j);
+        assert!(j.contains("e-4"), "secs must serialize in exponent form: {}", j);
+        assert!(j.trim_start().starts_with('{') && j.trim_end().ends_with('}'));
+        // exactly one separator comma between the two row objects
+        assert_eq!(j.matches("},").count(), 1);
     }
 
     #[test]

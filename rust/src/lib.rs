@@ -5,7 +5,8 @@
 //! and higher-order-derivative compression — for tensor expressions in
 //! Einstein notation (the generic multiplication `C = A *_(s1,s2,s3) B`).
 //!
-//! The crate is organised as the three-layer stack described in DESIGN.md:
+//! The crate is organised as the three-layer stack described in
+//! ARCHITECTURE.md at the repository root:
 //!
 //! * [`ir`], [`autodiff`], [`simplify`], [`opt`] — the paper's
 //!   contribution: the expression DAG in Einstein notation and the
@@ -18,11 +19,13 @@
 //!   evaluation substrate (the NumPy role in the paper's experiments).
 //!   Two executors coexist by design: the [`eval`] *interpreter* is the
 //!   reference oracle, while the [`exec`] *compiled* engine is the hot
-//!   path — write-into einsums ([`einsum::einsum_into`]), a
+//!   path — write-into einsums ([`einsum::einsum_into`]) bottoming out
+//!   in a tiled/packed GEMM kernel with in-tile epilogue fusion, a
 //!   shape-bucketed buffer pool that recycles intermediates at their
 //!   last use, a plan cache keyed by graph fingerprint, and parallel
 //!   execution of independent DAG levels. `tests/exec_equivalence.rs`
-//!   pins the two against each other and against brute force.
+//!   and `tests/tile_epilogue.rs` pin the two against each other and
+//!   against brute force.
 //! * [`problems`], [`baselines`] — the paper's three benchmark workloads
 //!   and the per-entry framework baseline (§4).
 //! * [`runtime`], [`coordinator`] — the PJRT bridge that loads the
@@ -81,7 +84,7 @@ pub mod prelude {
     pub use crate::autodiff::reverse::{reverse_derivative, reverse_gradient};
     pub use crate::einsum::{einsum, einsum_into, EinScratch, EinSpec, EinsumPlan};
     pub use crate::eval::{eval, eval_many, eval_many_with, Env, Plan};
-    pub use crate::exec::{global_plan_cache, CompiledPlan, PlanCache};
+    pub use crate::exec::{global_plan_cache, CompiledPlan, EpilogueMode, PlanCache};
     pub use crate::ir::{Elem, Graph, NodeId, Op};
     pub use crate::opt::{compact, optimize, report, OptLevel, OptStats};
     pub use crate::simplify::simplify;

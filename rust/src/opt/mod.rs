@@ -101,6 +101,28 @@ pub struct Optimized {
 /// Run the pass pipeline on the sub-DAG of `roots` at the given level.
 /// New nodes are appended to `g`; dead originals simply become
 /// unreachable (use [`compact`] to sweep them into a fresh graph).
+///
+/// # Example
+///
+/// The classic reassociation win — `(A·B)·x` is rewritten to `A·(B·x)`,
+/// and [`OptStats`] reports the flop change the paper argues in:
+///
+/// ```
+/// use tensorcalc::ir::Graph;
+/// use tensorcalc::opt::{optimize, OptLevel};
+///
+/// let mut g = Graph::new();
+/// let a = g.var("A", &[64, 64]);
+/// let b = g.var("B", &[64, 64]);
+/// let x = g.var("x", &[64]);
+/// let ab = g.matmul(a, b);       // 64³ flops if evaluated this way
+/// let y = g.matvec(ab, x);
+///
+/// let o = optimize(&mut g, &[y], OptLevel::Full);
+/// assert_eq!(o.roots.len(), 1);          // roots map 1:1, in order
+/// assert!(o.stats.reassoc_rewritten >= 1);
+/// assert!(o.stats.flops_after < o.stats.flops_before); // two matvecs now
+/// ```
 pub fn optimize(g: &mut Graph, roots: &[NodeId], level: OptLevel) -> Optimized {
     let nodes_before = g.topo(roots).len();
     let flops_before = cost::dag_flops(g, roots);

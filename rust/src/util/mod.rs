@@ -1,6 +1,8 @@
 //! Small utilities: scoped-thread data parallelism (the offline build has
-//! no rayon) and wall-clock helpers for the bench harnesses.
+//! no rayon), the shared parallelism/blocking constants, per-thread GEMM
+//! packing scratch, and wall-clock helpers for the bench harnesses.
 
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
 
@@ -35,6 +37,59 @@ pub const PAR_LEVEL_MIN_FLOP: usize = 1 << 17;
 /// strands at most the chunk that claimed it, large enough that the
 /// shared cursor is not hit once per node.
 pub const STEAL_CHUNKS_PER_THREAD: usize = 4;
+
+// ---------------------------------------------------------------------------
+// Blocking parameters of the tiled GEMM kernel (`crate::einsum::gemm`).
+// The register microkernel computes a GEMM_MR×GEMM_NR tile of C in local
+// accumulators; cache blocking packs an MC×KC panel of A (L2-resident)
+// and a KC×NC panel of B (streamed through L2/L3) around it. Sizes are
+// in f64 elements: the A panel is MC·KC·8 = 128 KiB and the active B
+// sub-panel KC·NR·8 = 16 KiB, comfortable for common L2/L1 sizes.
+// ---------------------------------------------------------------------------
+
+/// Microkernel tile rows — accumulator rows held in registers.
+pub const GEMM_MR: usize = 4;
+
+/// Microkernel tile columns — one or two SIMD vectors of f64.
+pub const GEMM_NR: usize = 8;
+
+/// Cache block of output rows (must be a multiple of [`GEMM_MR`]).
+pub const GEMM_MC: usize = 64;
+
+/// Cache block along the contraction dimension.
+pub const GEMM_KC: usize = 256;
+
+/// Cache block of output columns (must be a multiple of [`GEMM_NR`]).
+pub const GEMM_NC: usize = 512;
+
+/// Below this many flops (m·n·k) a GEMM skips tiling/packing and runs
+/// the flat reference kernel — the packing sweep would dominate.
+pub const GEMM_TILED_MIN_FLOP: usize = 1 << 14;
+
+/// Packing scratch of the tiled GEMM, laid out in microkernel panel
+/// order with zero padding to full [`GEMM_MR`]/[`GEMM_NR`] tiles: `a`
+/// holds one A block (≤ `GEMM_MC·GEMM_KC` elements, sized to the
+/// call's actual blocks), `b` holds the serial path's packed copy of
+/// the whole B operand (the parallel path shares one packed B across
+/// its row bands instead). Both grow monotonically and are reused.
+#[derive(Default)]
+pub struct PackBuf {
+    pub a: Vec<f64>,
+    pub b: Vec<f64>,
+}
+
+thread_local! {
+    /// Per-thread packing scratch. Long-lived threads (the main thread,
+    /// the coordinator workers) warm it once and never allocate again;
+    /// short-lived scoped GEMM band workers pay one allocation per fork,
+    /// which the `PAR_GEMM_MIN_FLOP` gate already amortises.
+    static PACK_SCRATCH: RefCell<PackBuf> = RefCell::new(PackBuf::default());
+}
+
+/// Run `f` with this thread's GEMM packing scratch.
+pub fn with_pack_scratch<R>(f: impl FnOnce(&mut PackBuf) -> R) -> R {
+    PACK_SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
 
 /// Number of worker threads (overridable with `TENSORCALC_THREADS`).
 pub fn num_threads() -> usize {

@@ -1,0 +1,191 @@
+//! Differential pinning of the tiled GEMM and its in-tile epilogue:
+//!
+//! * epilogue-free contractions: tiled default vs the flat reference
+//!   kernel vs `einsum_naive` vs the interpreter, across skinny /
+//!   square / panel / block-boundary shapes,
+//! * contraction-fed fused chains: `EpilogueMode::InTile` vs
+//!   `EpilogueMode::TwoPass` (bit-identical by contract) vs the unfused
+//!   executor vs the interpreter,
+//! * the matvec and batched fast paths with epilogues riding on them.
+
+use tensorcalc::einsum::{einsum_naive, gemm_into_flat, EinSpec};
+use tensorcalc::eval::{Env, Plan};
+use tensorcalc::exec::{CompiledPlan, EpilogueMode};
+use tensorcalc::ir::{Elem, Graph, NodeId};
+use tensorcalc::tensor::Tensor;
+
+/// Shapes chosen to hit every kernel path: the flat small/skinny
+/// fallback, the tiled serial path, block-boundary crossings (MC=64,
+/// KC=256, NC=512 plus one), and the parallel row-band split.
+const SHAPES: &[(usize, usize, usize)] = &[
+    (64, 64, 64),    // square, tiled
+    (65, 257, 130),  // one past every block boundary
+    (4, 300, 1000),  // minimal tile rows, wide panel
+    (3, 200, 130),   // skinny m — flat fallback
+    (200, 3, 200),   // skinny k — tiled, kc = 3
+    (512, 64, 16),   // tall panel
+    (200, 200, 200), // parallel row bands
+];
+
+#[test]
+fn epilogue_free_gemm_tiled_vs_flat_vs_naive() {
+    for &(m, k, n) in SHAPES {
+        let spec = EinSpec::parse("ij,jk->ik");
+        let a = Tensor::randn(&[m, k], 7);
+        let b = Tensor::randn(&[k, n], 8);
+        let naive = einsum_naive(&spec, &a, &b);
+
+        let mut flat = vec![0.0; m * n];
+        gemm_into_flat(a.data(), b.data(), &mut flat, m, k, n);
+        let flat = Tensor::new(&[m, n], flat);
+        assert!(
+            flat.allclose(&naive, 1e-9, 1e-9),
+            "{m}x{k}x{n}: flat vs naive diff {}",
+            flat.max_abs_diff(&naive)
+        );
+
+        let mut g = Graph::new();
+        let av = g.var("A", &[m, k]);
+        let bv = g.var("B", &[k, n]);
+        let y = g.matmul(av, bv);
+        let mut env = Env::new();
+        env.insert("A", a);
+        env.insert("B", b);
+        let compiled = CompiledPlan::new(&g, &[y]).run(&env);
+        let interp = Plan::new(&g, &[y]).run(&g, &env);
+        assert!(
+            compiled[0].allclose(&naive, 1e-9, 1e-9),
+            "{m}x{k}x{n}: tiled vs naive diff {}",
+            compiled[0].max_abs_diff(&naive)
+        );
+        assert!(
+            compiled[0].allclose(&interp[0], 1e-12, 1e-12),
+            "{m}x{k}x{n}: compiled vs interpreter diff {}",
+            compiled[0].max_abs_diff(&interp[0])
+        );
+    }
+}
+
+/// `tanh(X·W) + 1`, then a Hadamard with the contraction output itself:
+/// the fusion pass melts the whole chain into an epilogue whose carrier
+/// (the `Mul`) is loaded twice.
+fn chain_on_matmul(m: usize, k: usize, n: usize) -> (Graph, NodeId, Env) {
+    let mut g = Graph::new();
+    let x = g.var("X", &[m, k]);
+    let w = g.var("W", &[k, n]);
+    let xw = g.matmul(x, w);
+    let t = g.elem(Elem::Tanh, xw);
+    let one = g.constant(1.0, &[m, n]);
+    let s = g.add(t, one);
+    let y = g.hadamard(s, xw);
+    let mut env = Env::new();
+    env.insert("X", Tensor::randn(&[m, k], 21));
+    env.insert("W", Tensor::randn(&[k, n], 22));
+    (g, y, env)
+}
+
+#[test]
+fn in_tile_epilogue_pinned_on_all_shapes() {
+    for &(m, k, n) in SHAPES {
+        let (g, y, env) = chain_on_matmul(m, k, n);
+        let in_tile = CompiledPlan::with_options(&g, &[y], true, EpilogueMode::InTile);
+        let two_pass = CompiledPlan::with_options(&g, &[y], true, EpilogueMode::TwoPass);
+        let unfused = CompiledPlan::with_fusion(&g, &[y], false);
+        assert!(
+            in_tile.fused_count() >= 1,
+            "{m}x{k}x{n}: the chain must fuse into an epilogue"
+        );
+        assert!(in_tile.len() < unfused.len());
+
+        let a = in_tile.run(&env);
+        let b = two_pass.run(&env);
+        let c = unfused.run(&env);
+        let want = Plan::new(&g, &[y]).run(&g, &env);
+        assert_eq!(
+            a[0].data(),
+            b[0].data(),
+            "{m}x{k}x{n}: in-tile vs two-pass must be bit-identical"
+        );
+        assert_eq!(
+            a[0].data(),
+            c[0].data(),
+            "{m}x{k}x{n}: epilogue vs unfused must be bit-identical"
+        );
+        assert!(
+            a[0].allclose(&want[0], 1e-12, 1e-12),
+            "{m}x{k}x{n}: vs interpreter diff {}",
+            a[0].max_abs_diff(&want[0])
+        );
+    }
+}
+
+#[test]
+fn in_tile_epilogue_on_matvec_fast_path() {
+    // n = 1 takes the matvec kernel; 300×700 crosses the parallel gate
+    let (m, k) = (300usize, 700usize);
+    let mut g = Graph::new();
+    let x = g.var("X", &[m, k]);
+    let w = g.var("w", &[k]);
+    let xw = g.matvec(x, w);
+    let t = g.elem(Elem::Sigmoid, xw);
+    let y = g.scale(t, 0.5);
+    let mut env = Env::new();
+    env.insert("X", Tensor::randn(&[m, k], 31));
+    env.insert("w", Tensor::randn(&[k], 32));
+    let in_tile = CompiledPlan::with_options(&g, &[y], true, EpilogueMode::InTile);
+    let two_pass = CompiledPlan::with_options(&g, &[y], true, EpilogueMode::TwoPass);
+    assert!(in_tile.fused_count() >= 1);
+    let a = in_tile.run(&env);
+    let b = two_pass.run(&env);
+    let want = Plan::new(&g, &[y]).run(&g, &env);
+    assert_eq!(a[0].data(), b[0].data());
+    assert!(a[0].allclose(&want[0], 1e-12, 1e-12));
+}
+
+#[test]
+fn in_tile_epilogue_on_batched_contraction() {
+    // 300 batch slices of 8×8×8 take the parallel batch split (slice
+    // flops below PAR_BATCH_SLICE_MAX_FLOP, total above
+    // PAR_BATCH_TOTAL_MIN_FLOP); the epilogue's global offsets must
+    // line up across slices
+    let (bsz, d) = (300usize, 8usize);
+    let mut g = Graph::new();
+    let a = g.var("A", &[bsz, d, d]);
+    let b = g.var("B", &[bsz, d, d]);
+    let ab = g.mul(a, b, EinSpec::parse("aij,ajk->aik"));
+    let t = g.elem(Elem::Tanh, ab);
+    let y = g.scale(t, 2.0);
+    let mut env = Env::new();
+    env.insert("A", Tensor::randn(&[bsz, d, d], 51));
+    env.insert("B", Tensor::randn(&[bsz, d, d], 52));
+    let in_tile = CompiledPlan::with_options(&g, &[y], true, EpilogueMode::InTile);
+    let two_pass = CompiledPlan::with_options(&g, &[y], true, EpilogueMode::TwoPass);
+    assert!(in_tile.fused_count() >= 1);
+    let va = in_tile.run(&env);
+    let vb = two_pass.run(&env);
+    let want = Plan::new(&g, &[y]).run(&g, &env);
+    assert_eq!(va[0].data(), vb[0].data());
+    assert!(va[0].allclose(&want[0], 1e-12, 1e-12));
+}
+
+#[test]
+fn in_tile_epilogue_on_permuted_output_falls_back() {
+    // "ij,jk->ki" permutes the GEMM product: the epilogue must run on
+    // the permuted output (the fallback), not inside the tiles
+    let (m, k, n) = (65usize, 257, 130);
+    let mut g = Graph::new();
+    let a = g.var("A", &[m, k]);
+    let b = g.var("B", &[k, n]);
+    let ab = g.mul(a, b, EinSpec::parse("ij,jk->ki"));
+    let y = g.elem(Elem::Tanh, ab);
+    let mut env = Env::new();
+    env.insert("A", Tensor::randn(&[m, k], 61));
+    env.insert("B", Tensor::randn(&[k, n], 62));
+    let in_tile = CompiledPlan::with_options(&g, &[y], true, EpilogueMode::InTile);
+    let two_pass = CompiledPlan::with_options(&g, &[y], true, EpilogueMode::TwoPass);
+    let va = in_tile.run(&env);
+    let vb = two_pass.run(&env);
+    let want = Plan::new(&g, &[y]).run(&g, &env);
+    assert_eq!(va[0].data(), vb[0].data());
+    assert!(va[0].allclose(&want[0], 1e-12, 1e-12));
+}

@@ -1,0 +1,14 @@
+#!/usr/bin/env sh
+# Record the exec-layer perf baseline: run the ablation_modes bench and
+# write every measurement row to BENCH_exec.json at the repository root,
+# so later PRs can diff their numbers against this trajectory file.
+#
+# Usage:   scripts/bench_baseline.sh
+# Env:     BENCH_JSON  — override the output path (default BENCH_exec.json)
+#          BENCH_SECS  — not yet wired; edit `secs` in the bench source
+set -eu
+root=$(cd "$(dirname "$0")/.." && pwd)
+out="${BENCH_JSON:-$root/BENCH_exec.json}"
+cd "$root/rust"
+BENCH_JSON="$out" cargo bench --bench ablation_modes
+echo "perf trajectory recorded at $out"
