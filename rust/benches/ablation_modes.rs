@@ -8,24 +8,28 @@
 //! * **compress** — evaluating the matfac Hessian core vs materialising
 //!   the order-4 tensor,
 //!
-//! plus the two exec-layer kernel ablations added with the tiled GEMM:
+//! plus the exec-layer ablations:
 //!
 //! * **gemm** — the tiled/packed kernel vs the flat pre-tiling kernel on
 //!   epilogue-free contractions (tiling must not regress these),
 //! * **epilogue** — fused chains riding on a contraction:
 //!   `EpilogueMode::InTile` (applied inside the GEMM tiles, no second
-//!   output sweep) vs `EpilogueMode::TwoPass` vs the unfused executor.
+//!   output sweep) vs `EpilogueMode::TwoPass` vs the unfused executor,
+//! * **memory** — `ExecMemory::Planned` (buffer lifetimes compiled to
+//!   arena offsets, persistent workers, no per-instruction lock) vs
+//!   `ExecMemory::Pooled` (the PR 1 mutex-guarded buffer pool).
 //!
 //! Run: `cargo bench --bench ablation_modes`
 //!
 //! Set `BENCH_JSON=<path>` to also record every row as JSON — the
 //! perf-trajectory hook `scripts/bench_baseline.sh` uses to write
-//! `BENCH_exec.json`.
+//! `BENCH_exec.json` — and `BENCH_SECS=<secs>` to override the
+//! per-measurement budget (CI's bench-smoke job uses a small value).
 
 use tensorcalc::autodiff::cross_country::optimize_contractions;
 use tensorcalc::einsum::{gemm_into, gemm_into_flat};
 use tensorcalc::eval::Env;
-use tensorcalc::exec::{CompiledPlan, EpilogueMode};
+use tensorcalc::exec::{CompiledPlan, EpilogueMode, ExecMemory};
 use tensorcalc::figures::{maybe_write_bench_json, newton, print_table, Row};
 use tensorcalc::ir::{Elem, Graph};
 use tensorcalc::opt::{optimize, OptLevel};
@@ -34,7 +38,10 @@ use tensorcalc::tensor::Tensor;
 use tensorcalc::util::time_median;
 
 fn main() {
-    let secs = 0.3;
+    let secs: f64 = std::env::var("BENCH_SECS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.3);
     let mut all_rows: Vec<Row> = Vec::new();
 
     // ---- newton: §3.3 in-text claim ----
@@ -143,7 +150,8 @@ fn main() {
             ("two-pass epilogue", true, EpilogueMode::TwoPass),
             ("unfused", false, EpilogueMode::InTile),
         ] {
-            let plan = CompiledPlan::with_options(&g, &[y], fuse, mode);
+            let plan =
+                CompiledPlan::with_options(&g, &[y], fuse, mode, ExecMemory::default());
             let _ = plan.run(&env); // warm-up
             let (t, runs) = time_median(
                 || {
@@ -199,6 +207,67 @@ fn main() {
     }
     print_table("Fusion ablation — 15-deep element-wise chain", &rows);
     all_rows.extend(rows.iter().cloned());
+
+    // ---- memory: planned arena vs PR 1 pooled buffers ----
+    // the coordinator-shaped steady state: one compiled plan run
+    // repeatedly. Planned compiles lifetimes to arena offsets (no
+    // per-instruction mutex, no allocation after warm-up, persistent
+    // workers); Pooled is the PR 1 bucket pool behind a mutex.
+    const MEMORY_WORKLOADS: [(&str, usize); 3] =
+        [("logreg-grad", 128), ("logreg-grad", 256), ("matfac-hess", 32)];
+    let mut rows = Vec::new();
+    for (p, n) in MEMORY_WORKLOADS {
+        let (g, roots, env) = match p {
+            "logreg-grad" => {
+                let mut w = logistic_regression(2 * n, n);
+                let grad = w.gradient();
+                (w.g.clone(), vec![w.loss, grad], w.env.clone())
+            }
+            _ => {
+                let mut w = matrix_factorization(n, n, 5, false);
+                let h = w.hessian();
+                (w.g.clone(), vec![h], w.env.clone())
+            }
+        };
+        let mut g2 = g.clone();
+        let o = optimize(&mut g2, &roots, OptLevel::Full);
+        for (label, memory) in [
+            ("planned arena", ExecMemory::Planned),
+            ("pooled (PR 1)", ExecMemory::Pooled),
+        ] {
+            let plan = CompiledPlan::with_options(
+                &g2,
+                &o.roots,
+                true,
+                EpilogueMode::default(),
+                memory,
+            );
+            let _ = plan.run(&env); // warm-up
+            let (t, runs) = time_median(
+                || {
+                    std::hint::black_box(plan.run(&env));
+                },
+                3,
+                secs,
+            );
+            println!("  memory[{:<14}] {:<12} n={:<4} {}", label, p, n, plan.pool_stats());
+            rows.push(Row { figure: "memory", problem: p, n, mode: label.into(), secs: t, runs });
+        }
+    }
+    print_table("Memory ablation — planned arena vs pooled buffers", &rows);
+    all_rows.extend(rows.iter().cloned());
+    for (p, n) in MEMORY_WORKLOADS {
+        let pl = rows.iter().find(|r| r.problem == p && r.n == n && r.mode.starts_with("planned"));
+        let po = rows.iter().find(|r| r.problem == p && r.n == n && r.mode.starts_with("pooled"));
+        if let (Some(a), Some(b)) = (pl, po) {
+            println!(
+                "  {:<12} n={:<4} planned saves {:>6.1}% of the pooled wall-clock",
+                p,
+                n,
+                100.0 * (b.secs - a.secs) / b.secs
+            );
+        }
+    }
 
     // ---- opt: graph-optimizer ablation on the fig3 Hessian workloads ----
     // none = the raw Theorem-8/simplify output, cse = global CSE only,

@@ -5,7 +5,7 @@
 //! Run: `cargo bench --bench engine_micro`
 
 use tensorcalc::einsum::{einsum, gemm_into, gemm_into_flat, EinScratch, EinSpec, EinsumPlan};
-use tensorcalc::exec::CompiledPlan;
+use tensorcalc::exec::{CompiledPlan, EpilogueMode, ExecMemory};
 use tensorcalc::figures::{print_table, Row};
 use tensorcalc::problems::logistic_regression;
 use tensorcalc::tensor::Tensor;
@@ -111,21 +111,28 @@ fn main() {
     }
 
     // compiled executor on a whole derivative DAG: the repeated-request
-    // hot path, with the fusion + work-stealing executor against the
-    // PR 1-style unfused plan. After the warm-up run the buffer pool
-    // must serve every intermediate (fresh allocations ≈ one root
-    // buffer per run), and the fused plan must allocate strictly fewer
-    // cold buffers.
+    // hot path across the memory ablation — the planned arena (fixed
+    // offsets, persistent workers, zero steady-state allocation), the
+    // PR 1 pooled mode, and the pooled+unfused PR 1 lowering.
     {
         let (m, n) = (256usize, 128usize);
         let mut w = logistic_regression(m, n);
         let grad = w.gradient();
-        let fused = CompiledPlan::new(&w.g, &[w.loss, grad]);
-        let unfused = CompiledPlan::with_fusion(&w.g, &[w.loss, grad], false);
-        let mut stats: Vec<(u64, f64)> = Vec::new();
-        for (label, plan) in [("fused", &fused), ("unfused (PR 1)", &unfused)] {
+        let modes: [(&str, ExecMemory, bool); 3] = [
+            ("planned", ExecMemory::Planned, true),
+            ("pooled", ExecMemory::Pooled, true),
+            ("pooled unfused (PR 1)", ExecMemory::Pooled, false),
+        ];
+        let mut timed: Vec<f64> = Vec::new();
+        for (label, memory, fuse) in modes {
+            let plan = CompiledPlan::with_options(
+                &w.g,
+                &[w.loss, grad],
+                fuse,
+                EpilogueMode::default(),
+                memory,
+            );
             let _ = plan.run(&w.env); // warm-up
-            let cold = plan.pool_stats();
             let (t, runs) = time_median(
                 || {
                     std::hint::black_box(plan.run(&w.env));
@@ -133,7 +140,6 @@ fn main() {
                 5,
                 secs,
             );
-            let after = plan.pool_stats();
             println!(
                 "\ncompiled logreg grad [{}] (m={}, n={}): {}  [{} instrs, {} levels, {} fused]",
                 label,
@@ -144,14 +150,7 @@ fn main() {
                 plan.depth(),
                 plan.fused_count()
             );
-            println!(
-                "  buffer pool: fresh {} → {} (+{} over {} runs ≈ roots only), reused {}",
-                cold.fresh,
-                after.fresh,
-                after.fresh - cold.fresh,
-                runs,
-                after.reused
-            );
+            println!("  memory: {}", plan.pool_stats());
             rows.push(Row {
                 figure: "micro",
                 problem: "compiled",
@@ -160,13 +159,12 @@ fn main() {
                 secs: t,
                 runs,
             });
-            stats.push((cold.fresh, t));
+            timed.push(t);
         }
         println!(
-            "\n  fused vs unfused: cold allocations {} vs {}, wall-clock {:+.1}%",
-            stats[0].0,
-            stats[1].0,
-            100.0 * (stats[0].1 - stats[1].1) / stats[1].1
+            "\n  planned vs pooled wall-clock {:+.1}%, fused vs unfused {:+.1}%",
+            100.0 * (timed[0] - timed[1]) / timed[1],
+            100.0 * (timed[1] - timed[2]) / timed[2]
         );
     }
 

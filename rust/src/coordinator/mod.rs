@@ -38,13 +38,30 @@ pub struct EngineEntry {
 
 impl EngineEntry {
     /// Compile `roots` of `graph` (through the global plan cache) into a
-    /// servable entry.
+    /// servable entry at the default optimizer level and memory
+    /// discipline (planned arena).
     pub fn compiled(
         graph: &Graph,
         roots: &[NodeId],
         inputs: Vec<(String, Vec<usize>)>,
     ) -> Self {
         let plan = global_plan_cache().get_or_compile(graph, roots);
+        EngineEntry { plan, inputs }
+    }
+
+    /// [`EngineEntry::compiled`] with the optimizer level and executor
+    /// memory discipline explicit — the coordinator-side end of the
+    /// `ExecMemory` ablation. All entries share the process-wide
+    /// persistent worker pool regardless of mode, so the level
+    /// scheduler of repeated request bursts spawns no threads.
+    pub fn compiled_with(
+        graph: &Graph,
+        roots: &[NodeId],
+        inputs: Vec<(String, Vec<usize>)>,
+        level: crate::opt::OptLevel,
+        memory: crate::exec::ExecMemory,
+    ) -> Self {
+        let plan = global_plan_cache().get_or_compile_opts(graph, roots, level, memory);
         EngineEntry { plan, inputs }
     }
 }
@@ -293,6 +310,14 @@ mod tests {
     use crate::simplify::simplify_one;
 
     fn logreg_grad_entry(m: usize, n: usize) -> EngineEntry {
+        logreg_grad_entry_mem(m, n, crate::exec::ExecMemory::default())
+    }
+
+    fn logreg_grad_entry_mem(
+        m: usize,
+        n: usize,
+        memory: crate::exec::ExecMemory,
+    ) -> EngineEntry {
         let mut g = Graph::new();
         let x = g.var("X", &[m, n]);
         let y = g.var("y", &[m]);
@@ -307,7 +332,7 @@ mod tests {
         let loss = g.sum_all(l);
         let grad = reverse_gradient(&mut g, loss, w);
         let grad = simplify_one(&mut g, grad);
-        EngineEntry::compiled(
+        EngineEntry::compiled_with(
             &g,
             &[loss, grad],
             vec![
@@ -315,6 +340,8 @@ mod tests {
                 ("y".into(), vec![m]),
                 ("w".into(), vec![n]),
             ],
+            crate::opt::OptLevel::default(),
+            memory,
         )
     }
 
@@ -329,6 +356,23 @@ mod tests {
         assert_eq!(resp.outputs.len(), 2);
         assert_eq!(resp.outputs[1].shape(), &[3]);
         assert!(resp.latency >= 0.0);
+    }
+
+    #[test]
+    fn planned_and_pooled_entries_agree() {
+        use crate::exec::ExecMemory;
+        let mut c = Coordinator::new(16);
+        c.register_engine("planned", logreg_grad_entry_mem(8, 3, ExecMemory::Planned));
+        c.register_engine("pooled", logreg_grad_entry_mem(8, 3, ExecMemory::Pooled));
+        let x = Tensor::randn(&[8, 3], 1);
+        let y = Tensor::randn(&[8], 2).map(f64::signum);
+        let w = Tensor::randn(&[3], 3);
+        let a = c.eval("planned", vec![x.clone(), y.clone(), w.clone()]).unwrap();
+        let b = c.eval("pooled", vec![x, y, w]).unwrap();
+        assert_eq!(a.outputs.len(), b.outputs.len());
+        for (ta, tb) in a.outputs.iter().zip(&b.outputs) {
+            assert_eq!(ta.data(), tb.data(), "entry memory modes diverged");
+        }
     }
 
     #[test]

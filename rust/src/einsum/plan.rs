@@ -38,12 +38,38 @@ use crate::util::{par_band_zip2, PAR_BATCH_SLICE_MAX_FLOP, PAR_BATCH_TOTAL_MIN_F
 /// operand staging buffers, the pre-permutation product buffer, and the
 /// odometer index vector. All grow monotonically and are reused across
 /// calls, so a warmed-up scratch never allocates.
+///
+/// The compiled executor's planned-memory mode does not use this type at
+/// all: the `a`/`b`/`c` regions are assigned fixed offsets in the plan's
+/// arena at compile time (their sizes are known via
+/// [`EinsumPlan::scratch_sizes`]) and handed to
+/// [`EinsumPlan::run_planned`] as slices.
 #[derive(Default)]
 pub struct EinScratch {
     a: Vec<f64>,
     b: Vec<f64>,
     c: Vec<f64>,
     idx: Vec<usize>,
+}
+
+/// Compile-time element counts of the scratch regions one execution of a
+/// plan needs: gather staging for each operand (`a`, `b`) and the
+/// pre-permutation product buffer (`c`). All zero for the non-GEMM kinds,
+/// for operands already in GEMM order, and for contractions that write
+/// straight into the output.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ScratchSizes {
+    pub a: usize,
+    pub b: usize,
+    pub c: usize,
+}
+
+/// Grow `v` to at least `n` elements (zero-filling only the new tail);
+/// never shrinks, so warmed-up scratch stays allocation-free.
+fn ensure_len(v: &mut Vec<f64>, n: usize) {
+    if v.len() < n {
+        v.resize(n, 0.0);
+    }
 }
 
 /// One fused gather: reads a strided (possibly diagonal) view of the
@@ -412,10 +438,24 @@ impl EinsumPlan {
         self.run_epi(a, b, out, scratch, epi);
     }
 
-    /// Shared execution core: the epilogue is applied exactly once to
-    /// every output element — in-tile on the straight-to-output GEMM
-    /// path, as a trailing sweep everywhere else. `run` instantiates it
-    /// with [`NoEpilogue`], which the optimizer erases.
+    /// Element counts of the scratch regions one execution needs. The
+    /// compiled executor's memory planner uses this to reserve fixed
+    /// arena offsets for them at compile time.
+    pub fn scratch_sizes(&self) -> ScratchSizes {
+        match &self.kind {
+            Kind::Gemm { a_gather, b_gather, bsz, m, n, out_read, .. } => ScratchSizes {
+                a: a_gather.as_ref().map_or(0, |g| g.n_out),
+                b: b_gather.as_ref().map_or(0, |g| g.n_out),
+                c: if out_read.is_some() { bsz * m * n } else { 0 },
+            },
+            _ => ScratchSizes::default(),
+        }
+    }
+
+    /// Shape-checking wrapper over [`EinsumPlan::run_core`] that stages
+    /// the scratch regions in a (growing, reused) [`EinScratch`]. `run`
+    /// instantiates the epilogue with [`NoEpilogue`], which the optimizer
+    /// erases.
     fn run_epi<E: TileEpilogue>(
         &self,
         a: &Tensor,
@@ -429,18 +469,74 @@ impl EinsumPlan {
             &self.out_shape[..],
             "einsum_into: output buffer has the wrong shape"
         );
-        let out_data = out.data_mut();
+        let ss = self.scratch_sizes();
+        ensure_len(&mut scratch.a, ss.a);
+        ensure_len(&mut scratch.b, ss.b);
+        ensure_len(&mut scratch.c, ss.c);
+        let EinScratch { a: sa, b: sb, c: sc, idx } = scratch;
+        self.run_core(
+            a.data(),
+            b.data(),
+            out.data_mut(),
+            &mut sa[..ss.a],
+            &mut sb[..ss.b],
+            &mut sc[..ss.c],
+            idx,
+            epi,
+        );
+    }
+
+    /// Execute the contraction over raw slices with caller-provided
+    /// scratch — the planned-arena entry point of the compiled executor:
+    /// `sa`/`sb`/`sc` are fixed arena regions sized exactly by
+    /// [`EinsumPlan::scratch_sizes`], so the call performs no allocation
+    /// and takes no lock. Semantically identical to [`EinsumPlan::run`] /
+    /// [`EinsumPlan::run_with_epilogue_in_tile`] (bit-for-bit: same core).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_planned<E: TileEpilogue>(
+        &self,
+        a: &[f64],
+        b: &[f64],
+        out: &mut [f64],
+        sa: &mut [f64],
+        sb: &mut [f64],
+        sc: &mut [f64],
+        idx: &mut Vec<usize>,
+        epi: &E,
+    ) {
+        self.run_core(a, b, out, sa, sb, sc, idx, epi);
+    }
+
+    /// Shared execution core over raw slices: `sa`/`sb`/`sc` must be
+    /// exactly [`EinsumPlan::scratch_sizes`] long (the planned executor
+    /// hands arena slices, the pooled path resized [`EinScratch`]
+    /// vectors). The epilogue is applied exactly once to every output
+    /// element — in-tile on the straight-to-output GEMM path, as a
+    /// trailing sweep everywhere else.
+    #[allow(clippy::too_many_arguments)]
+    fn run_core<E: TileEpilogue>(
+        &self,
+        a: &[f64],
+        b: &[f64],
+        out_data: &mut [f64],
+        sa: &mut [f64],
+        sb: &mut [f64],
+        sc: &mut [f64],
+        idx: &mut Vec<usize>,
+        epi: &E,
+    ) {
+        debug_assert_eq!(out_data.len(), self.out_shape.iter().product::<usize>());
         match &self.kind {
             Kind::Elementwise => {
-                for ((o, &x), &y) in out_data.iter_mut().zip(a.data()).zip(b.data()) {
+                for ((o, &x), &y) in out_data.iter_mut().zip(a).zip(b) {
                     *o = x * y;
                 }
                 epi.apply(0, out_data);
             }
             Kind::ScaleA { a_gather, b_sum } => {
-                a_gather.run(a.data(), out_data, &mut scratch.idx);
+                a_gather.run(a, out_data, idx);
                 let mut s = [0.0f64];
-                b_sum.run(b.data(), &mut s, &mut scratch.idx);
+                b_sum.run(b, &mut s, idx);
                 if s[0] != 1.0 {
                     for o in out_data.iter_mut() {
                         *o *= s[0];
@@ -449,9 +545,9 @@ impl EinsumPlan {
                 epi.apply(0, out_data);
             }
             Kind::ScaleB { b_gather, a_sum } => {
-                b_gather.run(b.data(), out_data, &mut scratch.idx);
+                b_gather.run(b, out_data, idx);
                 let mut s = [0.0f64];
-                a_sum.run(a.data(), &mut s, &mut scratch.idx);
+                a_sum.run(a, &mut s, idx);
                 if s[0] != 1.0 {
                     for o in out_data.iter_mut() {
                         *o *= s[0];
@@ -462,21 +558,17 @@ impl EinsumPlan {
             Kind::Gemm { a_gather, b_gather, bsz, m, k, n, k_empty, out_read } => {
                 let (bsz, m, k, n) = (*bsz, *m, *k, *n);
                 let a_data: &[f64] = match a_gather {
-                    None => a.data(),
+                    None => a,
                     Some(gth) => {
-                        scratch.a.clear();
-                        scratch.a.resize(gth.n_out, 0.0);
-                        gth.run(a.data(), &mut scratch.a, &mut scratch.idx);
-                        &scratch.a
+                        gth.run(a, sa, idx);
+                        sa
                     }
                 };
                 let b_data: &[f64] = match b_gather {
-                    None => b.data(),
+                    None => b,
                     Some(gth) => {
-                        scratch.b.clear();
-                        scratch.b.resize(gth.n_out, 0.0);
-                        gth.run(b.data(), &mut scratch.b, &mut scratch.idx);
-                        &scratch.b
+                        gth.run(b, sb, idx);
+                        sb
                     }
                 };
                 match out_read {
@@ -490,10 +582,9 @@ impl EinsumPlan {
                     Some(strides) => {
                         // the permutation re-orders elements, so the
                         // epilogue can only run on the permuted output
-                        scratch.c.clear();
-                        scratch.c.resize(bsz * m * n, 0.0);
-                        batched_gemm(a_data, b_data, &mut scratch.c, bsz, m, k, n, *k_empty);
-                        permute_read(&scratch.c, out_data, &self.out_shape, strides, &mut scratch.idx);
+                        sc.fill(0.0);
+                        batched_gemm(a_data, b_data, sc, bsz, m, k, n, *k_empty);
+                        permute_read(sc, out_data, &self.out_shape, strides, idx);
                         epi.apply(0, out_data);
                     }
                 }
@@ -769,6 +860,49 @@ mod tests {
                 "{}: in-tile epilogue diverged from the two-pass reference",
                 sig
             );
+        }
+    }
+
+    #[test]
+    fn run_planned_matches_run_on_all_kinds() {
+        // planned-arena entry (caller-provided scratch slices) must be
+        // bit-identical to the EinScratch path on every plan kind
+        let cases: Vec<(&str, Vec<usize>, Vec<usize>)> = vec![
+            ("ij,jk->ik", vec![9, 17], vec![17, 13]),
+            ("ij,jk->ki", vec![9, 8], vec![8, 7]),
+            ("ji,jk->ik", vec![5, 4], vec![5, 6]),
+            ("aij,ajk->aik", vec![6, 4, 4], vec![6, 4, 4]),
+            ("ij,ij->ij", vec![33, 5], vec![33, 5]),
+            ("ij,k->i", vec![3, 4], vec![5]),
+            ("i,j->ij", vec![16], vec![16]),
+            ("ii,->i", vec![4, 4], vec![]),
+        ];
+        for (sig, sa_shape, sb_shape) in cases {
+            let spec = EinSpec::parse(sig);
+            let a = Tensor::randn(&sa_shape, 71);
+            let b = Tensor::randn(&sb_shape, 72);
+            let plan = EinsumPlan::new(&spec, &sa_shape, &sb_shape);
+            let mut want = Tensor::fill(plan.out_shape(), f64::NAN);
+            plan.run(&a, &b, &mut want, &mut EinScratch::default());
+
+            let ss = plan.scratch_sizes();
+            let mut sa = vec![f64::NAN; ss.a];
+            let mut sb = vec![f64::NAN; ss.b];
+            let mut sc = vec![f64::NAN; ss.c];
+            let mut idx = Vec::new();
+            let out_len: usize = plan.out_shape().iter().product();
+            let mut out = vec![f64::NAN; out_len];
+            plan.run_planned(
+                a.data(),
+                b.data(),
+                &mut out,
+                &mut sa,
+                &mut sb,
+                &mut sc,
+                &mut idx,
+                &NoEpilogue,
+            );
+            assert_eq!(out.as_slice(), want.data(), "{}: planned path diverged", sig);
         }
     }
 

@@ -64,12 +64,29 @@ pub fn eval_many(g: &Graph, roots: &[NodeId], env: &Env) -> Vec<Tensor> {
 /// the escape hatch that compiles the graph exactly as given (the
 /// ablation baseline alongside `CompiledPlan::with_fusion(.., false)`).
 pub fn eval_many_with(g: &Graph, roots: &[NodeId], env: &Env, level: OptLevel) -> Vec<Tensor> {
+    eval_many_opts(g, roots, env, level, crate::exec::ExecMemory::default())
+}
+
+/// [`eval_many_with`] with the executor's memory discipline explicit:
+/// [`ExecMemory::Planned`](crate::exec::ExecMemory) compiles buffer
+/// lifetimes to arena offsets (the default),
+/// [`ExecMemory::Pooled`](crate::exec::ExecMemory) keeps the PR 1
+/// mutex-guarded buffer pool as the ablation baseline.
+pub fn eval_many_opts(
+    g: &Graph,
+    roots: &[NodeId],
+    env: &Env,
+    level: OptLevel,
+    memory: crate::exec::ExecMemory,
+) -> Vec<Tensor> {
+    use crate::exec::{CompiledPlan, EpilogueMode};
     if level == OptLevel::None {
-        return crate::exec::CompiledPlan::new(g, roots).run(env);
+        return CompiledPlan::with_options(g, roots, true, EpilogueMode::default(), memory)
+            .run(env);
     }
     let mut g2 = g.clone();
     let o = crate::opt::optimize(&mut g2, roots, level);
-    crate::exec::CompiledPlan::new(&g2, &o.roots).run(env)
+    CompiledPlan::with_options(&g2, &o.roots, true, EpilogueMode::default(), memory).run(env)
 }
 
 /// A reusable evaluation plan: topological order restricted to the

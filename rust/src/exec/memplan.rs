@@ -1,0 +1,444 @@
+//! The static memory planner: buffer lifetimes compiled to arena offsets.
+//!
+//! A [`CompiledPlan`](super::CompiledPlan) already knows, at compile
+//! time, when every intermediate is born (its dependency level) and when
+//! it dies (the last level that reads it — the same liveness the pooled
+//! mode uses for recycling). This module turns that knowledge into a
+//! *memory plan*: every instruction output — and every einsum
+//! gather/presum scratch region — gets a fixed element offset into one
+//! per-plan arena, so at run time a destination is just
+//! `&arena[off..off + len]`. No mutex, no bucket lookup, no allocation
+//! after the arena's first growth.
+//!
+//! ```text
+//!   liveness            intervals                offsets
+//!   (per level)         (def ..= last use)       (best-fit packing)
+//!
+//!   L0  a ──┐           a: [0, 2] ────┐          a: [0   .. 400)
+//!   L1  b ──┼─ reads a   b: [1, 1] ──┐│          b: [400 .. 480)
+//!   L2  c ──┘  reads a,b c: [2, 3]   ││ b dead   c: [400 .. 464)   ← reuses b's bytes
+//!   L3  d  reads c       d: [3, 3] ──┘│ a dead   d: [0   .. 320)   ← reuses a's bytes
+//!                                     └─────────────────────────────
+//! ```
+//!
+//! Packing rules (all decided here, once per plan):
+//!
+//! * Two buffers may share bytes iff their level intervals are disjoint.
+//!   A buffer read for the last time in level `L` frees its bytes for
+//!   allocations from level `L + 1` on — never within `L`, because
+//!   instructions inside one level run concurrently.
+//! * Allocation is **best-fit** over a coalescing free list (smallest
+//!   hole that fits; a top-adjacent hole is grown instead of leaving a
+//!   permanent gap); only when nothing fits does the arena extend.
+//! * **In-place reuse**: when an alias-safe instruction (element-wise
+//!   map, add, fused pipeline) is the *sole* last-level consumer of an
+//!   operand whose slot length equals the output length, the output
+//!   simply takes over the dying operand's slot and the instruction runs
+//!   in place — the chain `x → tanh → scale → …` costs one slot total.
+//! * Einsum scratch regions live exactly for their instruction's level
+//!   (`[L, L]`), so concurrent contractions in one level get disjoint
+//!   scratch and consecutive levels reuse it.
+//!
+//! [`MemPlan::check_no_overlap`] is the debug-mode checker the
+//! differential test suite calls: it re-verifies, pairwise, that no two
+//! live intervals share arena bytes (in-place transfers hand bytes over
+//! with back-to-back intervals, which it models exactly).
+
+use crate::einsum::ScratchSizes;
+
+/// One arena region, in `f64` elements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Slot {
+    pub off: usize,
+    pub len: usize,
+}
+
+/// What the planner must know about one instruction.
+pub struct PlanInput {
+    /// output length in elements; `None` for instructions that do not
+    /// own a buffer (`Var` bindings, compile-time statics)
+    pub out_len: Option<usize>,
+    /// einsum scratch sizes (contractions only)
+    pub scratch: Option<ScratchSizes>,
+    /// dependency level the instruction executes at
+    pub def: usize,
+    /// last level that reads the output (inclusive); `None` = lives to
+    /// the end of the run (roots)
+    pub last: Option<usize>,
+    /// stream position of an operand whose slot the output may take over
+    /// in place (the executor pre-checks alias safety, sole-last-level
+    /// consumption and length equality; the planner confirms and commits)
+    pub inplace_from: Option<usize>,
+}
+
+/// The compiled memory plan of one instruction stream.
+pub struct MemPlan {
+    /// per instruction: the arena slot of its output
+    pub out: Vec<Option<Slot>>,
+    /// per instruction: einsum scratch slots `[a, b, c]`
+    pub scratch: Vec<Option<[Slot; 3]>>,
+    /// per instruction: confirmed in-place source (stream position)
+    pub inplace: Vec<Option<usize>>,
+    /// total arena length in elements
+    pub arena_len: usize,
+    /// slots packed into bytes a dead buffer freed earlier
+    pub planned_reuse: u64,
+    /// outputs that took over a dying operand's slot in place
+    pub inplace_reuse: u64,
+    /// `(slot, first level, last level)` of every placed buffer — the
+    /// overlap checker's ground truth (in-place donors end one level
+    /// before their taker starts)
+    intervals: Vec<(Slot, usize, usize)>,
+}
+
+impl MemPlan {
+    /// Pack the instruction stream's buffers into arena offsets.
+    /// `n_levels` is the number of dependency levels; inputs are indexed
+    /// by stream position.
+    pub fn build(inputs: &[PlanInput], n_levels: usize) -> MemPlan {
+        let m = inputs.len();
+        let mut out: Vec<Option<Slot>> = vec![None; m];
+        let mut scratch: Vec<Option<[Slot; 3]>> = vec![None; m];
+        let mut inplace: Vec<Option<usize>> = vec![None; m];
+        let mut free: Vec<Slot> = Vec::new();
+        let mut arena_len = 0usize;
+        let mut planned_reuse = 0u64;
+        let mut inplace_reuse = 0u64;
+        let last_level = n_levels.saturating_sub(1);
+        let end_of = |i: usize| inputs[i].last.unwrap_or(last_level);
+
+        // buffers whose bytes become free *after* level L sit in
+        // expiring[L]; they are released when level L + 1 starts
+        let mut expiring: Vec<Vec<Slot>> = vec![Vec::new(); n_levels.max(1)];
+        let mut defs: Vec<Vec<usize>> = vec![Vec::new(); n_levels.max(1)];
+        for (i, inp) in inputs.iter().enumerate() {
+            if inp.out_len.is_some() || inp.scratch.is_some() {
+                defs[inp.def].push(i);
+            }
+        }
+
+        for lv in 0..n_levels {
+            // 1. bytes whose last reader ran in the previous level are free
+            if lv > 0 {
+                let expired = std::mem::take(&mut expiring[lv - 1]);
+                for s in expired {
+                    free_slot(&mut free, s);
+                }
+            }
+            // 2. place this level's outputs, then scratch
+            for &i in &defs[lv] {
+                let inp = &inputs[i];
+                if let (Some(len), Some(o)) = (inp.out_len, inp.inplace_from) {
+                    // in-place transfer: take over the dying operand's
+                    // slot (its expiry at this level is cancelled — the
+                    // bytes now live until *this* buffer dies)
+                    if len > 0 {
+                        if let Some(oslot) = out[o] {
+                            let donor_end = end_of(o);
+                            if oslot.len == len && donor_end == lv {
+                                if let Some(pos) =
+                                    expiring[donor_end].iter().position(|s| *s == oslot)
+                                {
+                                    expiring[donor_end].remove(pos);
+                                    out[i] = Some(oslot);
+                                    inplace[i] = Some(o);
+                                    inplace_reuse += 1;
+                                    if let Some(e) = inp.last {
+                                        expiring[e].push(oslot);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                if out[i].is_none() {
+                    if let Some(len) = inp.out_len {
+                        let (slot, reused) = alloc(&mut free, &mut arena_len, len);
+                        if reused {
+                            planned_reuse += 1;
+                        }
+                        out[i] = Some(slot);
+                        if let Some(e) = inp.last {
+                            if len > 0 {
+                                expiring[e].push(slot);
+                            }
+                        }
+                    }
+                }
+                if let Some(ss) = inp.scratch {
+                    // scratch is live only while instruction i runs
+                    let mut slots = [Slot { off: 0, len: 0 }; 3];
+                    for (j, len) in [ss.a, ss.b, ss.c].into_iter().enumerate() {
+                        let (slot, reused) = alloc(&mut free, &mut arena_len, len);
+                        if reused {
+                            planned_reuse += 1;
+                        }
+                        slots[j] = slot;
+                        if len > 0 {
+                            expiring[lv].push(slot);
+                        }
+                    }
+                    scratch[i] = Some(slots);
+                }
+            }
+        }
+
+        // record intervals for the overlap checker: an in-place donor's
+        // bytes are handed over at the taker's level, so its interval
+        // ends one level earlier
+        let mut donated_until: Vec<Option<usize>> = vec![None; m];
+        for (i, &src) in inplace.iter().enumerate() {
+            if let Some(o) = src {
+                donated_until[o] = Some(inputs[i].def - 1);
+            }
+        }
+        let mut intervals = Vec::new();
+        for (i, inp) in inputs.iter().enumerate() {
+            if let Some(slot) = out[i] {
+                if slot.len > 0 {
+                    let end = donated_until[i].unwrap_or_else(|| end_of(i));
+                    intervals.push((slot, inp.def, end));
+                }
+            }
+            if let Some(slots) = scratch[i] {
+                for s in slots.iter().filter(|s| s.len > 0) {
+                    intervals.push((*s, inp.def, inp.def));
+                }
+            }
+        }
+
+        let plan = MemPlan {
+            out,
+            scratch,
+            inplace,
+            arena_len,
+            planned_reuse,
+            inplace_reuse,
+            intervals,
+        };
+        #[cfg(debug_assertions)]
+        plan.check_no_overlap();
+        plan
+    }
+
+    /// Assert that no two live intervals share arena bytes (O(n²); run at
+    /// compile time under `debug_assertions` and by the differential test
+    /// suite). Panics with the offending pair on violation.
+    pub fn check_no_overlap(&self) {
+        for (x, &(sa, da, ea)) in self.intervals.iter().enumerate() {
+            assert!(
+                sa.off + sa.len <= self.arena_len,
+                "slot {:?} exceeds the arena ({} elements)",
+                sa,
+                self.arena_len
+            );
+            for &(sb, db, eb) in &self.intervals[x + 1..] {
+                let time_overlap = da <= eb && db <= ea;
+                let byte_overlap = sa.off < sb.off + sb.len && sb.off < sa.off + sa.len;
+                assert!(
+                    !(time_overlap && byte_overlap),
+                    "memory plan overlap: {:?} live [{}, {}] vs {:?} live [{}, {}]",
+                    sa,
+                    da,
+                    ea,
+                    sb,
+                    db,
+                    eb
+                );
+            }
+        }
+    }
+}
+
+/// Best-fit allocation: the smallest free hole that fits; a hole ending
+/// at the arena top is grown in place rather than left as a permanent
+/// gap; otherwise the arena extends. The returned flag is true only for
+/// a genuine best-fit hit — growing the top hole still extends the
+/// arena, so it does not count as packing reuse.
+fn alloc(free: &mut Vec<Slot>, arena_len: &mut usize, len: usize) -> (Slot, bool) {
+    if len == 0 {
+        return (Slot { off: 0, len: 0 }, false);
+    }
+    let mut best: Option<usize> = None;
+    for (k, h) in free.iter().enumerate() {
+        let better = match best {
+            None => h.len >= len,
+            Some(b) => h.len >= len && free[b].len > h.len,
+        };
+        if better {
+            best = Some(k);
+        }
+    }
+    if let Some(k) = best {
+        let h = free[k];
+        let slot = Slot { off: h.off, len };
+        if h.len == len {
+            free.remove(k);
+        } else {
+            free[k] = Slot { off: h.off + len, len: h.len - len };
+        }
+        return (slot, true);
+    }
+    // grow a top-adjacent hole instead of stranding it below a fresh
+    // slot (not counted as reuse: the arena still extends)
+    if let Some(last) = free.last().copied() {
+        if last.off + last.len == *arena_len {
+            free.pop();
+            let slot = Slot { off: last.off, len };
+            *arena_len = last.off + len;
+            return (slot, false);
+        }
+    }
+    let slot = Slot { off: *arena_len, len };
+    *arena_len += len;
+    (slot, false)
+}
+
+/// Return a slot to the free list, coalescing with adjacent holes.
+fn free_slot(free: &mut Vec<Slot>, s: Slot) {
+    if s.len == 0 {
+        return;
+    }
+    let mut pos = free.partition_point(|h| h.off < s.off);
+    let mut slot = s;
+    if pos > 0 && free[pos - 1].off + free[pos - 1].len == slot.off {
+        slot = Slot { off: free[pos - 1].off, len: free[pos - 1].len + slot.len };
+        free.remove(pos - 1);
+        pos -= 1;
+    }
+    if pos < free.len() && slot.off + slot.len == free[pos].off {
+        slot.len += free[pos].len;
+        free.remove(pos);
+    }
+    free.insert(pos, slot);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn input(
+        out_len: Option<usize>,
+        def: usize,
+        last: Option<usize>,
+        inplace_from: Option<usize>,
+    ) -> PlanInput {
+        PlanInput { out_len, scratch: None, def, last, inplace_from }
+    }
+
+    #[test]
+    fn disjoint_lifetimes_share_bytes() {
+        // a[0,1] feeds b[1,2]; c at level 2 can take a's bytes
+        let inputs = vec![
+            input(Some(100), 0, Some(1), None),
+            input(Some(100), 1, Some(2), None),
+            input(Some(100), 2, None, None),
+        ];
+        let mp = MemPlan::build(&inputs, 3);
+        mp.check_no_overlap();
+        assert_eq!(mp.arena_len, 200, "c must reuse a's bytes");
+        assert_eq!(mp.planned_reuse, 1);
+        assert_eq!(mp.out[2].unwrap().off, mp.out[0].unwrap().off);
+    }
+
+    #[test]
+    fn same_level_buffers_never_share() {
+        // two level-1 consumers of a level-0 value run concurrently
+        let inputs = vec![
+            input(Some(10), 0, Some(1), None),
+            input(Some(10), 1, None, None),
+            input(Some(10), 1, None, None),
+        ];
+        let mp = MemPlan::build(&inputs, 2);
+        mp.check_no_overlap();
+        assert_eq!(mp.arena_len, 30);
+        assert_ne!(mp.out[1].unwrap().off, mp.out[2].unwrap().off);
+    }
+
+    #[test]
+    fn inplace_transfer_hands_over_the_slot() {
+        let inputs = vec![
+            input(Some(64), 0, Some(1), None),
+            input(Some(64), 1, None, Some(0)),
+        ];
+        let mp = MemPlan::build(&inputs, 2);
+        mp.check_no_overlap();
+        assert_eq!(mp.arena_len, 64, "in-place chain must cost one slot");
+        assert_eq!(mp.inplace[1], Some(0));
+        assert_eq!(mp.inplace_reuse, 1);
+        assert_eq!(mp.out[1], mp.out[0]);
+    }
+
+    #[test]
+    fn inplace_rejected_on_length_mismatch() {
+        let inputs = vec![
+            input(Some(64), 0, Some(1), None),
+            input(Some(32), 1, None, Some(0)),
+        ];
+        let mp = MemPlan::build(&inputs, 2);
+        mp.check_no_overlap();
+        assert_eq!(mp.inplace[1], None);
+        assert_ne!(mp.out[1].unwrap().off, mp.out[0].unwrap().off);
+    }
+
+    #[test]
+    fn scratch_is_disjoint_within_a_level_and_reused_across() {
+        let scr = ScratchSizes { a: 16, b: 16, c: 32 };
+        let mk = |def: usize, last: Option<usize>| PlanInput {
+            out_len: Some(8),
+            scratch: Some(scr),
+            def,
+            last,
+            inplace_from: None,
+        };
+        // two contractions in level 0, one in level 1
+        let inputs = vec![mk(0, Some(1)), mk(0, Some(1)), mk(1, None)];
+        let mp = MemPlan::build(&inputs, 2);
+        mp.check_no_overlap();
+        // every level-0 region (2 outputs + 6 scratch slots) is pairwise
+        // disjoint — the two contractions run concurrently
+        let mut regions: Vec<Slot> = vec![mp.out[0].unwrap(), mp.out[1].unwrap()];
+        regions.extend(mp.scratch[0].unwrap());
+        regions.extend(mp.scratch[1].unwrap());
+        let regions: Vec<Slot> = regions.into_iter().filter(|s| s.len > 0).collect();
+        for (x, a) in regions.iter().enumerate() {
+            for b in &regions[x + 1..] {
+                assert!(
+                    a.off + a.len <= b.off || b.off + b.len <= a.off,
+                    "level-0 regions overlap: {:?} vs {:?}",
+                    a,
+                    b
+                );
+            }
+        }
+        // the level-1 contraction reuses freed level-0 scratch bytes
+        assert!(mp.planned_reuse > 0, "level-1 scratch must reuse freed bytes");
+        // arena is bounded by one level's worst case plus live outputs
+        assert!(mp.arena_len < 2 * (8 + 64) + (8 + 64), "packing too loose: {}", mp.arena_len);
+    }
+
+    #[test]
+    fn free_list_coalesces() {
+        let mut free = Vec::new();
+        free_slot(&mut free, Slot { off: 0, len: 10 });
+        free_slot(&mut free, Slot { off: 20, len: 10 });
+        free_slot(&mut free, Slot { off: 10, len: 10 });
+        assert_eq!(free, vec![Slot { off: 0, len: 30 }]);
+        let mut arena = 30usize;
+        let (s, reused) = alloc(&mut free, &mut arena, 30);
+        assert!(reused);
+        assert_eq!(s, Slot { off: 0, len: 30 });
+        assert!(free.is_empty());
+    }
+
+    #[test]
+    fn top_adjacent_hole_grows_instead_of_stranding() {
+        let mut free = Vec::new();
+        let mut arena = 100usize;
+        free_slot(&mut free, Slot { off: 60, len: 40 });
+        let (s, reused) = alloc(&mut free, &mut arena, 80);
+        assert!(!reused, "growing the top hole extends the arena — not a packing win");
+        assert_eq!(s.off, 60);
+        assert_eq!(arena, 140, "the top hole must grow, not strand");
+    }
+}

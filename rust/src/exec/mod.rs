@@ -1,7 +1,9 @@
 //! The compiled execution engine: [`CompiledPlan`] lowers an expression
-//! DAG into a dense instruction stream executed with pooled buffers,
+//! DAG into a dense instruction stream executed over a statically
+//! planned arena (or, as the ablation baseline, pooled buffers), with
 //! pre-compiled write-into einsums, cross-node fusion of element-wise
-//! chains and work-stealing level scheduling.
+//! chains and work-stealing level scheduling on a persistent worker
+//! pool.
 //!
 //! ## Architecture (interpreter = oracle, compiled plan = hot path)
 //!
@@ -15,8 +17,10 @@
 //!   pre-compiled into an [`EinsumPlan`](crate::einsum::EinsumPlan)
 //!   (strides, pre-sums and permutations resolved at compile time),
 //!   constants and δ tensors are materialised once, intermediate buffers
-//!   come from a shape-bucketed [`BufferPool`] and are recycled at their
-//!   last use, and independent DAG levels run on scoped worker threads.
+//!   live at planner-assigned fixed offsets of a per-plan arena (the
+//!   shape-bucketed [`BufferPool`] survives as the
+//!   [`ExecMemory::Pooled`] ablation), and independent DAG levels run on
+//!   the persistent worker pool.
 //!
 //! `tests/exec_equivalence.rs` pins the two against each other (and
 //! against `einsum_naive`) over randomized specs and DAGs, including
@@ -56,12 +60,44 @@
 //! per-element epilogue program); `tests/tile_epilogue.rs` pins them
 //! against each other and against the interpreter.
 //!
-//! ## Work-stealing level scheduling
+//! ## Memory discipline ([`ExecMemory`])
+//!
+//! Where an instruction's output lives is a compile-time choice:
+//!
+//! * [`ExecMemory::Planned`] (default) — the `memplan` pass runs a
+//!   liveness analysis over the instruction stream (the same last-use
+//!   levels the pooled mode recycles on), builds the interference
+//!   intervals of every intermediate and einsum scratch region, and
+//!   packs them into fixed offsets of a single per-plan arena
+//!   (best-fit, with in-place reuse when a dying input's slot fits the
+//!   output). At run time a destination is `&arena[off..off + len]`:
+//!   after the arena's first growth, the steady-state hot path performs
+//!   **zero** heap allocations and acquires **no** pool mutex — one
+//!   run-state checkout per call is the only synchronization.
+//! * [`ExecMemory::Pooled`] — the PR 1 executor, kept as the
+//!   ablation/reference mode: intermediates come from a shape-bucketed
+//!   [`BufferPool`] behind a mutex and are recycled at their last use.
+//!
+//! The two modes are bit-identical (same instruction stream, same
+//! kernels, same accumulation order); `tests/memory_plan.rs` pins them
+//! against each other and against the interpreter, checks the planner's
+//! no-overlap invariant, and asserts the steady-state zero-alloc /
+//! no-lock counters.
+//!
+//! ## Work-stealing level scheduling on a persistent pool
 //!
 //! Within a parallel level, worker threads claim chunks of the level's
 //! instruction list from a shared atomic cursor instead of pre-sliced
 //! static bands, so one oversized node delays only the thread that
-//! claimed it — not an entire band scheduled behind it.
+//! claimed it — not an entire band scheduled behind it. The workers
+//! themselves come from the process-wide
+//! [`util::worker_pool`](crate::util::worker_pool): parked threads that
+//! survive across runs, plans and coordinator entries, so the level
+//! scheduler spawns no threads and every worker keeps its GEMM packing
+//! scratch and einsum odometer warm. (Serial levels containing a large
+//! contraction still fork scoped row-band threads *inside* the GEMM
+//! kernel — that layer is gated by `PAR_GEMM_MIN_FLOP` and is the one
+//! remaining spawn site.)
 //!
 //! ## Plan-cache key contract
 //!
@@ -81,22 +117,29 @@
 //! hash collision). The cache never evicts: it is bounded by the number
 //! of distinct `(graph, roots)` pairs a process registers, which is the
 //! number of distinct service entries. Cached plans are `Arc`-shared,
-//! so every worker that serves the same graph also shares one warm
-//! buffer pool.
+//! so every worker that serves the same graph also shares one warm set
+//! of run arenas (or, under the pooled ablation mode, one warm buffer
+//! pool).
 
-use crate::einsum::{EinScratch, EinSpec, EinsumPlan, EpiFn, Label};
+mod memplan;
+
+use crate::einsum::{EinScratch, EinSpec, EinsumPlan, EpiFn, Label, NoEpilogue};
 use crate::eval::Env;
 use crate::ir::{Elem, GenFn, Graph, NodeId, Op};
 use crate::opt::OptLevel;
 use crate::tensor::Tensor;
 use crate::util::{
-    num_threads, PAR_BATCH_TOTAL_MIN_FLOP, PAR_LEVEL_MIN_FLOP, STEAL_CHUNKS_PER_THREAD,
+    num_threads, worker_pool, PAR_BATCH_TOTAL_MIN_FLOP, PAR_LEVEL_MIN_FLOP,
+    STEAL_CHUNKS_PER_THREAD,
 };
+use memplan::{MemPlan, PlanInput, Slot};
+use std::cell::RefCell;
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
+use std::fmt;
 use std::hash::{Hash, Hasher};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
 
 /// A shape-bucketed free list of `f64` buffers. Buffers are bucketed by
 /// exact element count; `acquire` pops a warm buffer (contents arbitrary
@@ -109,14 +152,77 @@ pub struct BufferPool {
     reused: u64,
 }
 
-/// Allocation counters of a [`BufferPool`] — the executor's "near-zero
-/// allocations after warm-up" invariant is asserted through these.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Memory counters of a [`CompiledPlan`] — the executor's "zero
+/// steady-state allocation" invariant is asserted through these, in the
+/// units of whichever [`ExecMemory`] mode the plan compiled with.
+///
+/// Under [`ExecMemory::Pooled`] the meaningful fields are the bucket
+/// counters `fresh`/`reused` (and `pool_locks`). Under
+/// [`ExecMemory::Planned`] the pool is never touched — those stay zero —
+/// and the plan reports its arena instead: `arena_bytes` (the packed
+/// footprint), the planner's compile-time `planned_reuse`/`inplace_reuse`
+/// packing wins, and `arena_allocs`, the number of run-state arenas that
+/// had to grow at run time (one per concurrent caller, then constant —
+/// the steady-state zero-allocation assertion in `tests/memory_plan.rs`
+/// checks exactly this counter and `pool_locks == 0`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct PoolStats {
-    /// buffers allocated anew (cold misses)
+    /// which discipline the plan compiled with (selects the meaningful
+    /// counters, and the `Display` format)
+    pub memory: ExecMemory,
+    /// pooled mode: buffers allocated anew (cold misses)
     pub fresh: u64,
-    /// buffers served from the pool (warm hits)
+    /// pooled mode: buffers served from the pool (warm hits)
     pub reused: u64,
+    /// planned mode: bytes of one run arena (all intermediates + scratch)
+    pub arena_bytes: u64,
+    /// planned mode: slots packed into bytes freed by dead buffers
+    pub planned_reuse: u64,
+    /// planned mode: outputs reusing a dying input's slot in place
+    pub inplace_reuse: u64,
+    /// planned mode: run-state arenas grown at run time (cold starts)
+    pub arena_allocs: u64,
+    /// times the buffer-pool mutex was acquired (zero under `Planned`)
+    pub pool_locks: u64,
+}
+
+impl fmt::Display for PoolStats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.memory {
+            ExecMemory::Planned => write!(
+                f,
+                "arena {:.1} KiB, packed-reuse {}, in-place {}, arena allocs {}, pool locks {}",
+                self.arena_bytes as f64 / 1024.0,
+                self.planned_reuse,
+                self.inplace_reuse,
+                self.arena_allocs,
+                self.pool_locks
+            ),
+            ExecMemory::Pooled => write!(
+                f,
+                "pool fresh {}, reused {}, locks {}",
+                self.fresh, self.reused, self.pool_locks
+            ),
+        }
+    }
+}
+
+/// Where a plan's intermediates live — the memory-discipline ablation
+/// toggle next to [`EpilogueMode`]. See the module docs ("Memory
+/// discipline") for the contract; the two modes are bit-identical.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default, Hash)]
+pub enum ExecMemory {
+    /// Buffer lifetimes compiled to fixed offsets in one per-plan arena
+    /// (liveness → interference intervals → best-fit packing, in-place
+    /// reuse of dying inputs, einsum scratch planned alongside). The
+    /// steady-state hot path allocates nothing and takes no pool mutex.
+    /// The default.
+    #[default]
+    Planned,
+    /// The PR 1 executor: a shape-bucketed [`BufferPool`] behind a mutex,
+    /// buffers recycled at their last use. Kept as the ablation/reference
+    /// mode.
+    Pooled,
 }
 
 impl BufferPool {
@@ -137,7 +243,7 @@ impl BufferPool {
     }
 
     fn stats(&self) -> PoolStats {
-        PoolStats { fresh: self.fresh, reused: self.reused }
+        PoolStats { fresh: self.fresh, reused: self.reused, ..PoolStats::default() }
     }
 }
 
@@ -200,7 +306,7 @@ impl FusedKernel {
     fn run(&self, srcs: &[FusedSrc], out: &mut [f64]) {
         let mut stack = [0.0f64; FUSED_MAX_STACK];
         for (i, slot) in out.iter_mut().enumerate() {
-            *slot = self.eval_one(&mut stack, None, srcs, i);
+            *slot = self.eval_one(&mut stack, |k| srcs[k].at(i));
         }
     }
 
@@ -217,27 +323,51 @@ impl FusedKernel {
         let mut stack = [0.0f64; FUSED_MAX_STACK];
         for (j, slot) in buf.iter_mut().enumerate() {
             let carrier = *slot;
-            *slot = self.eval_one(&mut stack, Some(carrier), rest, base + j);
+            *slot = self.eval_one(&mut stack, |k| {
+                if k == 0 {
+                    carrier
+                } else {
+                    rest[k - 1].at(base + j)
+                }
+            });
         }
     }
 
+    /// The planned executor's in-place form: operand slot `arg` aliases
+    /// the output buffer, so `Load(arg)` reads the value being replaced
+    /// while every other slot reads `srcs` at its *original* position
+    /// (`srcs[arg]` is a dummy, never touched). Bit-identical to
+    /// [`FusedKernel::run`] with the aliased operand materialised.
+    fn run_inplace_arg(&self, buf: &mut [f64], arg: u32, srcs: &[FusedSrc]) {
+        let arg = arg as usize;
+        let mut stack = [0.0f64; FUSED_MAX_STACK];
+        for (i, out) in buf.iter_mut().enumerate() {
+            let carrier = *out;
+            *out = self.eval_one(&mut stack, |k| {
+                if k == arg {
+                    carrier
+                } else {
+                    srcs[k].at(i)
+                }
+            });
+        }
+    }
+
+    /// The one postfix interpreter every execution form shares: `load`
+    /// resolves `Load(k)` (per-element slice read, broadcast scalar, or
+    /// the in-place carrier value, depending on the caller's slot
+    /// convention).
     #[inline]
-    fn eval_one(
+    fn eval_one<L: Fn(usize) -> f64>(
         &self,
         stack: &mut [f64; FUSED_MAX_STACK],
-        carrier: Option<f64>,
-        srcs: &[FusedSrc],
-        i: usize,
+        load: L,
     ) -> f64 {
         let mut sp = 0usize;
         for op in &self.ops {
             match op {
                 FusedOp::Load(k) => {
-                    stack[sp] = match (carrier, *k) {
-                        (Some(c), 0) => c,
-                        (Some(_), k) => srcs[k as usize - 1].at(i),
-                        (None, k) => srcs[k as usize].at(i),
-                    };
+                    stack[sp] = load(*k as usize);
                     sp += 1;
                 }
                 FusedOp::Un(f) => stack[sp - 1] = f.apply(stack[sp - 1]),
@@ -487,10 +617,73 @@ pub enum EpilogueMode {
     TwoPass,
 }
 
+/// Per-run state of a planned-memory execution, checked out once per
+/// call (one lock) and returned warm: the arena plus the resolved
+/// per-instruction source table. A plan keeps one `RunState` per
+/// concurrent caller; each grows its arena once and never again.
+#[derive(Default)]
+struct RunState {
+    arena: Vec<f64>,
+    srcs: SrcTable,
+}
+
+/// Resolved value source of every instruction for one run: a pointer and
+/// element count into the env's tensors, the plan's statics, or the
+/// checked-out arena.
+#[derive(Default)]
+struct SrcTable(Vec<(*const f64, usize)>);
+
+// SAFETY: the raw pointers are inert between runs (rewritten at the
+// start of every run) and only dereferenced while the borrows they were
+// derived from — env tensors, plan statics, the checked-out arena — are
+// live within that run.
+unsafe impl Send for SrcTable {}
+
+/// Shared view of one planned run handed to the level workers: the
+/// arena base plus the per-instruction source table.
+///
+/// SAFETY (for the `Sync` impl): each worker writes only its own
+/// instructions' output slots, and the memory planner guarantees that a
+/// slot written in level `L` overlaps no slot read or written by any
+/// other instruction live in `L` (`MemPlan::check_no_overlap`).
+struct ArenaExec<'r> {
+    base: *mut f64,
+    srcs: &'r [(*const f64, usize)],
+}
+
+unsafe impl Sync for ArenaExec<'_> {}
+
+/// Operand slice of instruction `q` (env tensor, static, or arena slot).
+#[inline]
+fn src_slice<'r>(ex: &ArenaExec<'r>, q: usize) -> &'r [f64] {
+    let (ptr, len) = ex.srcs[q];
+    // SAFETY: see ArenaExec — the pointee outlives the run and no &mut
+    // to the same region exists while this borrow is used.
+    unsafe { std::slice::from_raw_parts(ptr, len) }
+}
+
+/// Mutable view of an arena slot.
+///
+/// SAFETY: caller must be the (sole) instruction that owns `slot` in the
+/// current level — guaranteed by the memory plan.
+#[inline]
+#[allow(clippy::mut_from_ref)] // disjointness is the planner's invariant
+unsafe fn slot_mut<'r>(ex: &ArenaExec<'r>, slot: Slot) -> &'r mut [f64] {
+    std::slice::from_raw_parts_mut(ex.base.add(slot.off), slot.len)
+}
+
+thread_local! {
+    /// Per-thread odometer scratch for planned-mode einsum gathers — the
+    /// one scratch that cannot live in the `f64` arena. Persistent pool
+    /// workers keep it warm across scopes, plans and coordinator entries.
+    static IDX_SCRATCH: RefCell<Vec<usize>> = const { RefCell::new(Vec::new()) };
+}
+
 /// An expression DAG compiled for repeated execution: dense instruction
 /// stream in topological order (element-wise chains fused), per-level
-/// scheduling, buffer lifetimes resolved to pool-release points, and all
-/// contractions pre-compiled.
+/// scheduling on the persistent worker pool, buffer lifetimes compiled
+/// to arena offsets (or pool-release points under the pooled ablation
+/// mode), and all contractions pre-compiled.
 pub struct CompiledPlan {
     instrs: Vec<Instr>,
     shapes: Vec<Vec<usize>>,
@@ -498,44 +691,62 @@ pub struct CompiledPlan {
     /// instruction positions grouped by dependency depth (level 0 first);
     /// nodes within one level are independent and may run in parallel
     levels: Vec<Vec<usize>>,
-    /// estimated flops per level — gates the scoped-thread fork
+    /// estimated flops per level — gates the worker-pool fork
     level_flops: Vec<usize>,
     /// largest *internally parallel* (GEMM) flop estimate per level —
     /// levels whose contractions parallelise internally (row bands /
     /// batch splits) run serially at this layer to avoid nested-fork
     /// oversubscription
     level_max_flops: Vec<usize>,
-    /// positions whose value dies after each level (returned to the pool)
+    /// positions whose value dies after each level (returned to the pool;
+    /// pooled mode only — the planner bakes lifetimes into offsets)
     free_at_level: Vec<Vec<usize>>,
     root_pos: Vec<usize>,
     pool: Mutex<BufferPool>,
     /// einsum scratch buffers, checked out once per run (serial) or once
     /// per worker (parallel) — never per node, to keep lock traffic low
+    /// (pooled mode only)
     scratches: Mutex<Vec<EinScratch>>,
     /// where contraction epilogues run (in-tile vs two-pass ablation)
     epilogue_mode: EpilogueMode,
+    /// where intermediates live (planned arena vs pooled ablation)
+    memory: ExecMemory,
+    /// the static memory plan (planned mode only)
+    memplan: Option<MemPlan>,
+    /// per instruction: operand index *within the instruction* whose
+    /// dying slot the output takes over in place (planned mode only; for
+    /// `Fused` this is the kernel's operand slot)
+    inplace_arg: Vec<Option<usize>>,
+    /// warm per-caller run states (arena + source table), planned mode
+    run_states: Mutex<Vec<RunState>>,
+    /// run-state arenas grown at run time (cold starts; then constant)
+    arena_allocs: AtomicU64,
+    /// buffer-pool mutex acquisitions (the no-lock assertion's counter)
+    pool_locks: AtomicU64,
 }
 
 impl CompiledPlan {
     /// Compile the sub-DAG of `g` reachable from `roots`.
     pub fn new(g: &Graph, roots: &[NodeId]) -> Self {
-        Self::with_options(g, roots, true, EpilogueMode::default())
+        Self::with_options(g, roots, true, EpilogueMode::default(), ExecMemory::default())
     }
 
     /// Compile with or without the cross-node fusion pass. `false`
-    /// reproduces the PR 1 executor (one pooled buffer per node) and is
-    /// kept as the ablation baseline for benches and differential tests.
+    /// reproduces the PR 1 lowering (one buffer per node) and is kept as
+    /// the ablation baseline for benches and differential tests.
     pub fn with_fusion(g: &Graph, roots: &[NodeId], fuse: bool) -> Self {
-        Self::with_options(g, roots, fuse, EpilogueMode::default())
+        Self::with_options(g, roots, fuse, EpilogueMode::default(), ExecMemory::default())
     }
 
-    /// Compile with both ablation toggles explicit: the fusion pass
-    /// on/off, and where contraction epilogues run ([`EpilogueMode`]).
+    /// Compile with every ablation toggle explicit: the fusion pass
+    /// on/off, where contraction epilogues run ([`EpilogueMode`]), and
+    /// where intermediates live ([`ExecMemory`]).
     pub fn with_options(
         g: &Graph,
         roots: &[NodeId],
         fuse: bool,
         epilogue_mode: EpilogueMode,
+        memory: ExecMemory,
     ) -> Self {
         let order = g.topo(roots);
         let n = order.len();
@@ -753,6 +964,88 @@ impl CompiledPlan {
             }
         }
 
+        // -- static memory plan (planned mode): liveness → intervals →
+        //    arena offsets, with in-place reuse of dying inputs --
+        let (plan_mem, inplace_arg) = match memory {
+            ExecMemory::Pooled => (None, vec![None; m]),
+            ExecMemory::Planned => {
+                // consumers of each value at its last-use level: in-place
+                // transfer requires the taker to be the *sole* reader
+                // there (anything else in that level runs concurrently)
+                let mut last_consumers: Vec<Vec<usize>> = vec![Vec::new(); m];
+                for (i, instr) in instrs.iter().enumerate() {
+                    for &c in operands(instr).iter() {
+                        if last_level[c] == Some(depth[i]) {
+                            last_consumers[c].push(i);
+                        }
+                    }
+                }
+                // alias-safe in-place candidates: (operand stream
+                // position, operand index within the instruction)
+                let mut cand: Vec<Option<(usize, usize)>> = vec![None; m];
+                for (i, instr) in instrs.iter().enumerate() {
+                    let out_len: usize = out_shapes[i].iter().product();
+                    let eligible = |o: usize| -> bool {
+                        out_len > 0
+                            && !matches!(instrs[o], Instr::Var { .. } | Instr::Static(_))
+                            && last_level[o] == Some(depth[i])
+                            && last_consumers[o].len() == 1
+                            && out_shapes[o].iter().product::<usize>() == out_len
+                    };
+                    cand[i] = match instr {
+                        // streaming element-wise reads of index j happen
+                        // strictly before the write of index j, so the
+                        // output may overwrite the dying operand
+                        Instr::Elem(_, a) if eligible(*a) => Some((*a, 0)),
+                        Instr::Add(a, b) => {
+                            if eligible(*a) {
+                                Some((*a, 0))
+                            } else if eligible(*b) && a != b {
+                                Some((*b, 1))
+                            } else {
+                                None
+                            }
+                        }
+                        Instr::Fused { args, .. } => args
+                            .iter()
+                            .enumerate()
+                            .find(|(_, &q)| eligible(q))
+                            .map(|(slot, &q)| (q, slot)),
+                        // contractions and general unaries read arbitrary
+                        // indices (gather/GEMM/row reductions): never
+                        // in-place
+                        _ => None,
+                    };
+                }
+                let inputs: Vec<PlanInput> = instrs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, instr)| PlanInput {
+                        out_len: match instr {
+                            Instr::Var { .. } | Instr::Static(_) => None,
+                            _ => Some(out_shapes[i].iter().product()),
+                        },
+                        scratch: match instr {
+                            Instr::Mul(_, _, plan, _) => Some(plan.scratch_sizes()),
+                            _ => None,
+                        },
+                        def: depth[i],
+                        last: last_level[i],
+                        inplace_from: cand[i].map(|(o, _)| o),
+                    })
+                    .collect();
+                let mp = MemPlan::build(&inputs, n_levels);
+                // keep only the transfers the planner actually committed
+                let inplace_arg: Vec<Option<usize>> = (0..m)
+                    .map(|i| match mp.inplace[i] {
+                        Some(_) => cand[i].map(|(_, arg)| arg),
+                        None => None,
+                    })
+                    .collect();
+                (Some(mp), inplace_arg)
+            }
+        };
+
         CompiledPlan {
             instrs,
             shapes: out_shapes,
@@ -765,6 +1058,12 @@ impl CompiledPlan {
             pool: Mutex::new(BufferPool::default()),
             scratches: Mutex::new(Vec::new()),
             epilogue_mode,
+            memory,
+            memplan: plan_mem,
+            inplace_arg,
+            run_states: Mutex::new(Vec::new()),
+            arena_allocs: AtomicU64::new(0),
+            pool_locks: AtomicU64::new(0),
         }
     }
 
@@ -799,65 +1098,199 @@ impl CompiledPlan {
             .count()
     }
 
-    /// Buffer-pool counters (cold allocations vs warm reuses) — after
-    /// one warm-up run, repeated executions should add reuses only.
+    /// Memory counters — pooled bucket hits or planned arena figures,
+    /// depending on the compile-time [`ExecMemory`]. After one warm-up
+    /// run, repeated executions must not move the allocation counters.
     pub fn pool_stats(&self) -> PoolStats {
-        self.pool.lock().unwrap().stats()
+        // diagnostic read: bypasses lock_pool so it never perturbs the
+        // pool_locks counter the tests assert on
+        let base = self.pool.lock().unwrap().stats();
+        PoolStats {
+            memory: self.memory,
+            arena_bytes: self
+                .memplan
+                .as_ref()
+                .map_or(0, |mp| (mp.arena_len * std::mem::size_of::<f64>()) as u64),
+            planned_reuse: self.memplan.as_ref().map_or(0, |mp| mp.planned_reuse),
+            inplace_reuse: self.memplan.as_ref().map_or(0, |mp| mp.inplace_reuse),
+            arena_allocs: self.arena_allocs.load(Ordering::Relaxed),
+            pool_locks: self.pool_locks.load(Ordering::Relaxed),
+            ..base
+        }
+    }
+
+    /// The memory discipline this plan compiled with.
+    pub fn memory(&self) -> ExecMemory {
+        self.memory
+    }
+
+    /// Re-verify the memory plan's no-overlap invariant (no two live
+    /// intervals share arena bytes). Panics on violation; no-op for
+    /// pooled plans. The differential suite calls this on every plan it
+    /// builds; compile already asserts it under `debug_assertions`.
+    pub fn validate_memory_plan(&self) {
+        if let Some(mp) = &self.memplan {
+            mp.check_no_overlap();
+        }
+    }
+
+    /// Acquire the buffer pool, counting the acquisition (the planned
+    /// mode's "no pool mutex on the hot path" assertion reads this).
+    fn lock_pool(&self) -> MutexGuard<'_, BufferPool> {
+        self.pool_locks.fetch_add(1, Ordering::Relaxed);
+        self.pool.lock().unwrap()
+    }
+
+    /// The level fork gate shared by **both** memory modes: fork only
+    /// for many-small-node levels — a node whose contraction exceeds
+    /// `PAR_BATCH_TOTAL_MIN_FLOP` forks its own row bands / batch splits
+    /// inside the GEMM, and nesting both layers would oversubscribe the
+    /// cores. Returns `(participants, steal-chunk size)` when the level
+    /// should fork, `None` to run it serially. Keeping the gate and the
+    /// chunk formula in one place is part of the Planned/Pooled
+    /// bit-identical contract: the two modes must schedule identically.
+    fn level_fork(&self, lv: usize, level_len: usize) -> Option<(usize, usize)> {
+        let nt = num_threads().min(level_len);
+        if nt > 1
+            && self.level_flops[lv] >= PAR_LEVEL_MIN_FLOP
+            && self.level_max_flops[lv] <= PAR_BATCH_TOTAL_MIN_FLOP
+        {
+            Some((nt, (level_len / (nt * STEAL_CHUNKS_PER_THREAD)).max(1)))
+        } else {
+            None
+        }
     }
 
     /// Execute the plan against `env`. Panics on unbound or wrongly
     /// shaped variables (same contract as the interpreter).
     pub fn run(&self, env: &Env) -> Vec<Tensor> {
+        match self.memory {
+            ExecMemory::Planned => self.run_planned(env),
+            ExecMemory::Pooled => self.run_pooled(env),
+        }
+    }
+
+    /// Planned-memory execution: one run-state checkout (a single lock),
+    /// then every instruction reads and writes fixed arena offsets. No
+    /// allocation after the arena's first growth, no pool mutex, no
+    /// thread spawn (parallel levels run on the persistent worker pool).
+    fn run_planned(&self, env: &Env) -> Vec<Tensor> {
+        let mp = self.memplan.as_ref().expect("planned plan carries a memory plan");
+        let mut st = self.run_states.lock().unwrap().pop().unwrap_or_default();
+        if st.arena.len() < mp.arena_len {
+            self.arena_allocs.fetch_add(1, Ordering::Relaxed);
+            st.arena.resize(mp.arena_len, 0.0);
+        }
+
+        // resolve every instruction's value source up front: env lookups
+        // and shape checks happen once per run, on the calling thread
+        let base = st.arena.as_mut_ptr();
+        st.srcs.0.clear();
+        for (i, instr) in self.instrs.iter().enumerate() {
+            let entry = match instr {
+                Instr::Var { name, shape } => {
+                    let t = env
+                        .get(name)
+                        .unwrap_or_else(|| panic!("unbound variable {}", name));
+                    assert_eq!(
+                        t.shape(),
+                        &shape[..],
+                        "variable {} bound with wrong shape",
+                        name
+                    );
+                    (t.data().as_ptr(), t.len())
+                }
+                Instr::Static(s) => {
+                    let t = &self.statics[*s];
+                    (t.data().as_ptr(), t.len())
+                }
+                _ => {
+                    let slot = mp.out[i].expect("planned instruction output");
+                    // SAFETY: in-bounds by construction (checked against
+                    // arena_len by the planner's validator)
+                    (unsafe { base.add(slot.off) } as *const f64, slot.len)
+                }
+            };
+            st.srcs.0.push(entry);
+        }
+        let ex = ArenaExec { base, srcs: &st.srcs.0 };
+
+        for (lv, level) in self.levels.iter().enumerate() {
+            if let Some((nt, chunk)) = self.level_fork(lv, level.len()) {
+                let cursor = AtomicUsize::new(0);
+                let ex_ref = &ex;
+                let cursor_ref = &cursor;
+                worker_pool().scope(nt, move |_| loop {
+                    let start = cursor_ref.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= level.len() {
+                        break;
+                    }
+                    let end = (start + chunk).min(level.len());
+                    for &p in &level[start..end] {
+                        self.exec_node_planned(p, ex_ref);
+                    }
+                });
+            } else {
+                for &p in level {
+                    self.exec_node_planned(p, &ex);
+                }
+            }
+        }
+
+        // materialise the roots (the only per-run allocations: the
+        // caller owns the returned tensors)
+        let mut out = Vec::with_capacity(self.root_pos.len());
+        for &p in &self.root_pos {
+            let data = src_slice(&ex, p).to_vec();
+            out.push(Tensor::new(&self.shapes[p], data));
+        }
+        drop(ex);
+        self.run_states.lock().unwrap().push(st);
+        out
+    }
+
+    /// Pooled-memory execution (the PR 1 ablation baseline): buffers
+    /// from the mutex-guarded pool, recycled at their last-use level.
+    fn run_pooled(&self, env: &Env) -> Vec<Tensor> {
         let n = self.instrs.len();
         let mut values: Vec<Option<Val>> = Vec::with_capacity(n);
         values.resize_with(n, || None);
         let mut scratch = self.scratches.lock().unwrap().pop().unwrap_or_default();
 
         for (lv, level) in self.levels.iter().enumerate() {
-            let nt = num_threads().min(level.len());
-            // Fork at the level layer only for many-small-node levels: a
-            // node whose contraction exceeds PAR_BATCH_TOTAL_MIN_FLOP
-            // forks its own row bands / batch splits inside the GEMM,
-            // and nesting both layers would oversubscribe the cores.
-            if nt > 1
-                && self.level_flops[lv] >= PAR_LEVEL_MIN_FLOP
-                && self.level_max_flops[lv] <= PAR_BATCH_TOTAL_MIN_FLOP
-            {
+            if let Some((nt, chunk)) = self.level_fork(lv, level.len()) {
                 // Work stealing: workers claim chunks of the level from
                 // a shared cursor, so one oversized node delays only the
                 // thread that claimed it — not a whole static band.
                 let results: Vec<Mutex<Option<Val>>> =
                     level.iter().map(|_| Mutex::new(None)).collect();
                 let cursor = AtomicUsize::new(0);
-                let chunk = (level.len() / (nt * STEAL_CHUNKS_PER_THREAD)).max(1);
-                std::thread::scope(|s| {
+                {
                     let values_ref = &values;
                     let results_ref = &results;
                     let cursor_ref = &cursor;
-                    for _ in 0..nt {
-                        s.spawn(move || {
-                            let mut band_scratch =
-                                self.scratches.lock().unwrap().pop().unwrap_or_default();
-                            loop {
-                                let start = cursor_ref.fetch_add(chunk, Ordering::Relaxed);
-                                if start >= level.len() {
-                                    break;
-                                }
-                                let end = (start + chunk).min(level.len());
-                                for k in start..end {
-                                    let v = self.exec_node(
-                                        level[k],
-                                        values_ref,
-                                        env,
-                                        &mut band_scratch,
-                                    );
-                                    *results_ref[k].lock().unwrap() = Some(v);
-                                }
+                    worker_pool().scope(nt, move |_| {
+                        let mut band_scratch =
+                            self.scratches.lock().unwrap().pop().unwrap_or_default();
+                        loop {
+                            let start = cursor_ref.fetch_add(chunk, Ordering::Relaxed);
+                            if start >= level.len() {
+                                break;
                             }
-                            self.scratches.lock().unwrap().push(band_scratch);
-                        });
-                    }
-                });
+                            let end = (start + chunk).min(level.len());
+                            for k in start..end {
+                                let v = self.exec_node(
+                                    level[k],
+                                    values_ref,
+                                    env,
+                                    &mut band_scratch,
+                                );
+                                *results_ref[k].lock().unwrap() = Some(v);
+                            }
+                        }
+                        self.scratches.lock().unwrap().push(band_scratch);
+                    });
+                }
                 for (r, &p) in results.into_iter().zip(level) {
                     values[p] = r.into_inner().unwrap();
                 }
@@ -870,7 +1303,7 @@ impl CompiledPlan {
             // recycle buffers whose last consumer ran in this level
             // (one pool lock per level, not per buffer)
             if !self.free_at_level[lv].is_empty() {
-                let mut pool = self.pool.lock().unwrap();
+                let mut pool = self.lock_pool();
                 for &p in &self.free_at_level[lv] {
                     if let Some(Val::Owned(t)) = values[p].take() {
                         pool.release(t.into_data());
@@ -895,6 +1328,120 @@ impl CompiledPlan {
             out.push(t);
         }
         out
+    }
+
+    /// Execute one instruction of a planned run: operands and the
+    /// destination are fixed arena offsets (or pre-resolved env/static
+    /// pointers); nothing here allocates, locks, or touches a `Tensor`.
+    fn exec_node_planned(&self, p: usize, ex: &ArenaExec<'_>) {
+        let mp = self.memplan.as_ref().expect("planned plan carries a memory plan");
+        let instr = &self.instrs[p];
+        let slot = match instr {
+            Instr::Var { .. } | Instr::Static(_) => return, // resolved up front
+            _ => mp.out[p].expect("planned instruction output"),
+        };
+        // SAFETY: this instruction is the sole writer of `slot` in its
+        // level, and no concurrently live buffer overlaps it (planner
+        // invariant, re-checked by validate_memory_plan / debug builds).
+        let out: &mut [f64] = unsafe { slot_mut(ex, slot) };
+        match instr {
+            Instr::Var { .. } | Instr::Static(_) => unreachable!(),
+            Instr::Add(a, b) => match self.inplace_arg[p] {
+                // out aliases operand a: its values are already in place
+                Some(0) => {
+                    for (o, &y) in out.iter_mut().zip(src_slice(ex, *b)) {
+                        *o += y;
+                    }
+                }
+                // out aliases operand b
+                Some(_) => {
+                    for (o, &x) in out.iter_mut().zip(src_slice(ex, *a)) {
+                        *o += x;
+                    }
+                }
+                None => {
+                    let ta = src_slice(ex, *a);
+                    let tb = src_slice(ex, *b);
+                    for ((o, &x), &y) in out.iter_mut().zip(ta).zip(tb) {
+                        *o = x + y;
+                    }
+                }
+            },
+            Instr::Elem(f, a) => match self.inplace_arg[p] {
+                Some(_) => {
+                    for o in out.iter_mut() {
+                        *o = f.apply(*o);
+                    }
+                }
+                None => {
+                    for (o, &x) in out.iter_mut().zip(src_slice(ex, *a)) {
+                        *o = f.apply(x);
+                    }
+                }
+            },
+            Instr::Mul(a, b, plan, epi) => {
+                let ta = src_slice(ex, *a);
+                let tb = src_slice(ex, *b);
+                let scr = mp.scratch[p].expect("contraction scratch planned");
+                // SAFETY: scratch slots are exclusive to this instruction
+                // for the duration of its level (planner invariant).
+                let (sa, sb, sc) = unsafe {
+                    (slot_mut(ex, scr[0]), slot_mut(ex, scr[1]), slot_mut(ex, scr[2]))
+                };
+                IDX_SCRATCH.with(|idx_cell| {
+                    let mut guard = idx_cell.borrow_mut();
+                    let idx: &mut Vec<usize> = &mut guard;
+                    match epi {
+                        None => plan.run_planned(ta, tb, out, sa, sb, sc, idx, &NoEpilogue),
+                        Some(e) => {
+                            let srcs = fused_srcs_planned(&e.args, ex, out.len());
+                            let rest = &srcs[..e.args.len()];
+                            match self.epilogue_mode {
+                                EpilogueMode::InTile => {
+                                    let tile_epi = EpiFn(|base: usize, seg: &mut [f64]| {
+                                        e.kernel.run_inplace_at(seg, base, rest)
+                                    });
+                                    plan.run_planned(ta, tb, out, sa, sb, sc, idx, &tile_epi);
+                                }
+                                EpilogueMode::TwoPass => {
+                                    plan.run_planned(
+                                        ta,
+                                        tb,
+                                        out,
+                                        sa,
+                                        sb,
+                                        sc,
+                                        idx,
+                                        &NoEpilogue,
+                                    );
+                                    e.kernel.run_inplace(out, rest);
+                                }
+                            }
+                        }
+                    }
+                });
+            }
+            Instr::GenUnary(f, a, epi) => {
+                let ta = src_slice(ex, *a);
+                let last_dim = *self.shapes[*a].last().expect("GenFn needs rank ≥ 1");
+                gen_unary_into(*f, ta, last_dim, out);
+                if let Some(e) = epi {
+                    let srcs = fused_srcs_planned(&e.args, ex, out.len());
+                    e.kernel.run_inplace(out, &srcs[..e.args.len()]);
+                }
+            }
+            Instr::Fused { kernel, args } => match self.inplace_arg[p] {
+                Some(arg) => {
+                    // slot `arg` aliases the output; resolve the others
+                    let srcs = fused_srcs_planned_except(args, ex, out.len(), arg);
+                    kernel.run_inplace_arg(out, arg as u32, &srcs[..args.len()]);
+                }
+                None => {
+                    let srcs = fused_srcs_planned(args, ex, out.len());
+                    kernel.run(&srcs[..args.len()], out);
+                }
+            },
+        }
     }
 
     fn exec_node<'a>(
@@ -922,7 +1469,7 @@ impl CompiledPlan {
             Instr::Add(a, b) => {
                 let ta = values[*a].as_ref().expect("operand not computed").tensor();
                 let tb = values[*b].as_ref().expect("operand not computed").tensor();
-                let mut buf = self.pool.lock().unwrap().acquire(ta.len());
+                let mut buf = self.lock_pool().acquire(ta.len());
                 for ((o, &x), &y) in buf.iter_mut().zip(ta.data()).zip(tb.data()) {
                     *o = x + y;
                 }
@@ -932,7 +1479,7 @@ impl CompiledPlan {
                 let ta = values[*a].as_ref().expect("operand not computed").tensor();
                 let tb = values[*b].as_ref().expect("operand not computed").tensor();
                 let out_len: usize = shape.iter().product();
-                let buf = self.pool.lock().unwrap().acquire(out_len);
+                let buf = self.lock_pool().acquire(out_len);
                 let mut out = Tensor::new(shape, buf);
                 match epi {
                     None => plan.run(ta, tb, &mut out, scratch),
@@ -961,7 +1508,7 @@ impl CompiledPlan {
             }
             Instr::Elem(f, a) => {
                 let ta = values[*a].as_ref().expect("operand not computed").tensor();
-                let mut buf = self.pool.lock().unwrap().acquire(ta.len());
+                let mut buf = self.lock_pool().acquire(ta.len());
                 for (o, &x) in buf.iter_mut().zip(ta.data()) {
                     *o = f.apply(x);
                 }
@@ -970,8 +1517,9 @@ impl CompiledPlan {
             Instr::GenUnary(f, a, epi) => {
                 let ta = values[*a].as_ref().expect("operand not computed").tensor();
                 let out_len: usize = shape.iter().product();
-                let mut buf = self.pool.lock().unwrap().acquire(out_len);
-                gen_unary_into(*f, ta, &mut buf);
+                let mut buf = self.lock_pool().acquire(out_len);
+                let last_dim = *ta.shape().last().expect("GenFn needs rank ≥ 1");
+                gen_unary_into(*f, ta.data(), last_dim, &mut buf);
                 if let Some(e) = epi {
                     let srcs = fused_srcs(&e.args, values, out_len);
                     e.kernel.run_inplace(&mut buf, &srcs[..e.args.len()]);
@@ -981,7 +1529,7 @@ impl CompiledPlan {
             Instr::Fused { kernel, args } => {
                 let out_len: usize = shape.iter().product();
                 let srcs = fused_srcs(args, values, out_len);
-                let mut buf = self.pool.lock().unwrap().acquire(out_len);
+                let mut buf = self.lock_pool().acquire(out_len);
                 kernel.run(&srcs[..args.len()], &mut buf);
                 Val::Owned(Tensor::new(shape, buf))
             }
@@ -1016,6 +1564,53 @@ fn fused_srcs<'v>(
     srcs
 }
 
+/// [`fused_srcs`] for the planned path: operand slots resolve through
+/// the run's source table instead of `Val`s. Same contract, same
+/// fixed-size zero-allocation array.
+fn fused_srcs_planned<'r>(
+    args: &[usize],
+    ex: &ArenaExec<'r>,
+    out_len: usize,
+) -> [FusedSrc<'r>; FUSED_MAX_ARGS] {
+    debug_assert!(args.len() <= FUSED_MAX_ARGS, "group builder must cap operand slots");
+    let mut srcs = [FusedSrc::Scalar(0.0); FUSED_MAX_ARGS];
+    for (slot, &q) in args.iter().enumerate() {
+        let s = src_slice(ex, q);
+        srcs[slot] = if s.len() == out_len {
+            FusedSrc::Slice(s)
+        } else {
+            FusedSrc::Scalar(s[0])
+        };
+    }
+    srcs
+}
+
+/// [`fused_srcs_planned`] minus the slot that aliases the output of an
+/// in-place fused instruction: that operand's bytes *are* the output
+/// buffer, so no shared slice to it may exist — the kernel reads it as
+/// the carrier instead ([`FusedKernel::run_inplace_arg`]).
+fn fused_srcs_planned_except<'r>(
+    args: &[usize],
+    ex: &ArenaExec<'r>,
+    out_len: usize,
+    skip: usize,
+) -> [FusedSrc<'r>; FUSED_MAX_ARGS] {
+    debug_assert!(args.len() <= FUSED_MAX_ARGS, "group builder must cap operand slots");
+    let mut srcs = [FusedSrc::Scalar(0.0); FUSED_MAX_ARGS];
+    for (slot, &q) in args.iter().enumerate() {
+        if slot == skip {
+            continue; // dummy: Load(skip) reads the carrier value
+        }
+        let s = src_slice(ex, q);
+        srcs[slot] = if s.len() == out_len {
+            FusedSrc::Slice(s)
+        } else {
+            FusedSrc::Scalar(s[0])
+        };
+    }
+    srcs
+}
+
 /// Operand positions of one instruction (epilogue arguments included).
 fn operands(instr: &Instr) -> Vec<usize> {
     let mut v = match instr {
@@ -1032,14 +1627,13 @@ fn operands(instr: &Instr) -> Vec<usize> {
 }
 
 /// Write-into evaluation of the general unary functions (mirrors
-/// [`GenFn::eval`] but targets a pooled buffer). Rank-0 inputs are
-/// rejected by `CompiledPlan::with_fusion` at compile time, so the
-/// `expect` here is defensive.
-fn gen_unary_into(f: GenFn, t: &Tensor, out: &mut [f64]) {
-    let n = *t.shape().last().expect("GenFn needs rank ≥ 1");
+/// [`GenFn::eval`] but targets a raw buffer — pooled or arena-planned).
+/// `n` is the operand's trailing dimension; rank-0 inputs are rejected
+/// at compile time.
+fn gen_unary_into(f: GenFn, data: &[f64], n: usize, out: &mut [f64]) {
     match f {
         GenFn::Softmax => {
-            out.copy_from_slice(t.data());
+            out.copy_from_slice(data);
             for row in out.chunks_mut(n) {
                 let m = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
                 let mut z = 0.0;
@@ -1053,7 +1647,7 @@ fn gen_unary_into(f: GenFn, t: &Tensor, out: &mut [f64]) {
             }
         }
         GenFn::LogSumExp => {
-            for (o, row) in out.iter_mut().zip(t.data().chunks(n)) {
+            for (o, row) in out.iter_mut().zip(data.chunks(n)) {
                 let m = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
                 *o = m + row.iter().map(|v| (v - m).exp()).sum::<f64>().ln();
             }
@@ -1076,6 +1670,9 @@ pub fn graph_fingerprint(g: &Graph) -> u64 {
 struct PlanKey {
     fingerprint: u64,
     roots: Vec<u32>,
+    /// plans compiled under different memory disciplines are distinct
+    /// artifacts (offsets vs pool), so the key separates them
+    memory: ExecMemory,
 }
 
 /// Memoised compiled plans keyed by `(graph fingerprint, roots)` — the
@@ -1104,28 +1701,50 @@ impl PlanCache {
     }
 
     /// Fetch the compiled plan for `(g, roots)` with an explicit
-    /// optimizer level. For `OptLevel::None` the graph is fingerprinted
-    /// and compiled exactly as given (the pre-PR 3 behaviour, kept as
-    /// the ablation escape hatch); otherwise the graph is optimized and
-    /// dead-node-swept first and the *optimized, compacted* graph is
-    /// what the key fingerprints — so differently-built but equivalent
-    /// graphs converge on one cached plan (and one warm buffer pool).
+    /// optimizer level (default memory discipline). See
+    /// [`PlanCache::get_or_compile_opts`].
     pub fn get_or_compile_with(
         &self,
         g: &Graph,
         roots: &[NodeId],
         level: OptLevel,
     ) -> Arc<CompiledPlan> {
+        self.get_or_compile_opts(g, roots, level, ExecMemory::default())
+    }
+
+    /// Fetch the compiled plan for `(g, roots)` with an explicit
+    /// optimizer level and memory discipline. For `OptLevel::None` the
+    /// graph is fingerprinted and compiled exactly as given (the pre-PR 3
+    /// behaviour, kept as the ablation escape hatch); otherwise the graph
+    /// is optimized and dead-node-swept first and the *optimized,
+    /// compacted* graph is what the key fingerprints — so
+    /// differently-built but equivalent graphs converge on one cached
+    /// plan (one warm arena set or buffer pool). Plans compiled under
+    /// different [`ExecMemory`] modes are cached separately.
+    pub fn get_or_compile_opts(
+        &self,
+        g: &Graph,
+        roots: &[NodeId],
+        level: OptLevel,
+        memory: ExecMemory,
+    ) -> Arc<CompiledPlan> {
         let input_key = PlanKey {
             fingerprint: graph_fingerprint(g),
             roots: roots.iter().map(|r| r.0).collect(),
+            memory,
         };
         if level == OptLevel::None {
             let mut map = self.map.lock().unwrap();
             if let Some(plan) = map.get(&input_key) {
                 return plan.clone();
             }
-            let plan = Arc::new(CompiledPlan::new(g, roots));
+            let plan = Arc::new(CompiledPlan::with_options(
+                g,
+                roots,
+                true,
+                EpilogueMode::default(),
+                memory,
+            ));
             map.insert(input_key, plan.clone());
             return plan;
         }
@@ -1141,13 +1760,20 @@ impl PlanCache {
         let canon_key = PlanKey {
             fingerprint: graph_fingerprint(&gc),
             roots: croots.iter().map(|r| r.0).collect(),
+            memory,
         };
         let plan = {
             let mut map = self.map.lock().unwrap();
             if let Some(plan) = map.get(&canon_key) {
                 plan.clone()
             } else {
-                let plan = Arc::new(CompiledPlan::new(&gc, &croots));
+                let plan = Arc::new(CompiledPlan::with_options(
+                    &gc,
+                    &croots,
+                    true,
+                    EpilogueMode::default(),
+                    memory,
+                ));
                 map.insert(canon_key, plan.clone());
                 plan
             }
@@ -1243,8 +1869,20 @@ mod tests {
     #[test]
     fn epilogue_modes_are_bit_identical() {
         let (g, y, env) = expr1();
-        let in_tile = CompiledPlan::with_options(&g, &[y], true, EpilogueMode::InTile);
-        let two_pass = CompiledPlan::with_options(&g, &[y], true, EpilogueMode::TwoPass);
+        let in_tile = CompiledPlan::with_options(
+            &g,
+            &[y],
+            true,
+            EpilogueMode::InTile,
+            ExecMemory::default(),
+        );
+        let two_pass = CompiledPlan::with_options(
+            &g,
+            &[y],
+            true,
+            EpilogueMode::TwoPass,
+            ExecMemory::default(),
+        );
         assert!(in_tile.fused_count() >= 1, "expression 1 must produce an epilogue");
         let a = in_tile.run(&env);
         let b = two_pass.run(&env);
@@ -1267,7 +1905,13 @@ mod tests {
     #[test]
     fn pool_warm_after_first_run() {
         let (g, y, env) = expr1();
-        let plan = CompiledPlan::new(&g, &[y]);
+        let plan = CompiledPlan::with_options(
+            &g,
+            &[y],
+            true,
+            EpilogueMode::default(),
+            ExecMemory::Pooled,
+        );
         let first = plan.run(&env);
         let cold = plan.pool_stats();
         for _ in 0..5 {
@@ -1285,6 +1929,37 @@ mod tests {
             warm
         );
         assert!(warm.reused > cold.reused, "pool never reused a buffer");
+    }
+
+    #[test]
+    fn planned_matches_pooled_and_takes_no_pool_lock() {
+        let (g, y, env) = expr1();
+        let planned = CompiledPlan::new(&g, &[y]);
+        assert_eq!(planned.memory(), ExecMemory::Planned);
+        planned.validate_memory_plan();
+        let pooled = CompiledPlan::with_options(
+            &g,
+            &[y],
+            true,
+            EpilogueMode::default(),
+            ExecMemory::Pooled,
+        );
+        let a = planned.run(&env);
+        let b = pooled.run(&env);
+        assert_eq!(a[0].data(), b[0].data(), "memory modes must be bit-identical");
+        // warm-up done: further runs must not grow the arena, touch the
+        // pool, or acquire its mutex
+        let cold = planned.pool_stats();
+        assert!(cold.arena_bytes > 0, "expression 1 has intermediates to plan");
+        for _ in 0..5 {
+            let again = planned.run(&env);
+            assert_eq!(again[0].data(), a[0].data());
+        }
+        let warm = planned.pool_stats();
+        assert_eq!(warm.arena_allocs, cold.arena_allocs, "arena grew after warm-up");
+        assert_eq!(warm.pool_locks, 0, "planned mode must not touch the pool mutex");
+        assert_eq!(warm.fresh, 0);
+        assert_eq!(warm.reused, 0);
     }
 
     #[test]

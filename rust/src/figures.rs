@@ -33,6 +33,9 @@ use crate::util::{fmt_secs, time_median};
 fn compile_opt(g: &Graph, roots: &[NodeId], level: OptLevel) -> (CompiledPlan, opt::OptStats) {
     let mut g2 = g.clone();
     let o = opt::optimize(&mut g2, roots, level);
+    // default executor options (planned arena, in-tile epilogues); the
+    // `memory` dimension of `benches/ablation_modes.rs` is where the
+    // ExecMemory ablation is actually measured
     (CompiledPlan::new(&g2, &o.roots), o.stats)
 }
 
@@ -164,6 +167,7 @@ pub fn fig3(
                 let h = w.hessian();
                 let (plan, stats) = compile_opt(&w.g, &[h], OptLevel::Cse);
                 println!("  [opt] fig3 {:<8} n={:<5} ours(reverse): {}", p, n, stats);
+                println!("  [mem] fig3 {:<8} n={:<5} {}", p, n, plan.pool_stats());
                 let (secs, runs) = time_median(
                     || {
                         std::hint::black_box(plan.run(&w.env));

@@ -21,11 +21,14 @@
 //!   reference oracle, while the [`exec`] *compiled* engine is the hot
 //!   path — write-into einsums ([`einsum::einsum_into`]) bottoming out
 //!   in a tiled/packed GEMM kernel with in-tile epilogue fusion, a
-//!   shape-bucketed buffer pool that recycles intermediates at their
-//!   last use, a plan cache keyed by graph fingerprint, and parallel
-//!   execution of independent DAG levels. `tests/exec_equivalence.rs`
-//!   and `tests/tile_epilogue.rs` pin the two against each other and
-//!   against brute force.
+//!   static memory planner that compiles buffer lifetimes to fixed
+//!   arena offsets (with the PR 1 buffer pool kept as the
+//!   [`exec::ExecMemory::Pooled`] ablation), a plan cache keyed by
+//!   graph fingerprint, and parallel execution of independent DAG
+//!   levels on a persistent worker pool ([`util::worker_pool`]).
+//!   `tests/exec_equivalence.rs`, `tests/tile_epilogue.rs` and
+//!   `tests/memory_plan.rs` pin the two against each other and against
+//!   brute force.
 //! * [`problems`], [`baselines`] — the paper's three benchmark workloads
 //!   and the per-entry framework baseline (§4).
 //! * [`runtime`], [`coordinator`] — the PJRT bridge that loads the
@@ -83,8 +86,10 @@ pub mod prelude {
     pub use crate::autodiff::hessian::{hessian, hessian_compressed, hessian_vector_product, jacobian};
     pub use crate::autodiff::reverse::{reverse_derivative, reverse_gradient};
     pub use crate::einsum::{einsum, einsum_into, EinScratch, EinSpec, EinsumPlan};
-    pub use crate::eval::{eval, eval_many, eval_many_with, Env, Plan};
-    pub use crate::exec::{global_plan_cache, CompiledPlan, EpilogueMode, PlanCache};
+    pub use crate::eval::{eval, eval_many, eval_many_opts, eval_many_with, Env, Plan};
+    pub use crate::exec::{
+        global_plan_cache, CompiledPlan, EpilogueMode, ExecMemory, PlanCache,
+    };
     pub use crate::ir::{Elem, Graph, NodeId, Op};
     pub use crate::opt::{compact, optimize, report, OptLevel, OptStats};
     pub use crate::simplify::simplify;

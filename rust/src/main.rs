@@ -160,9 +160,20 @@ fn derive(args: &Args) -> Result<()> {
         flop_estimate(&w.g, node)
     );
     // what the graph optimizer (the eval_many / plan-cache pipeline) does
-    // to this DAG before compilation
-    let stats = tensorcalc::opt::report(&w.g, &[node], tensorcalc::opt::OptLevel::Full);
-    println!("optimizer (CSE + reassociation): {}", stats);
+    // to this DAG before compilation, and what the executor's static
+    // memory planner packs the result into — one optimize run for both
+    {
+        let mut g2 = w.g.clone();
+        let o = tensorcalc::opt::optimize(&mut g2, &[node], tensorcalc::opt::OptLevel::Full);
+        println!("optimizer (CSE + reassociation): {}", o.stats);
+        let plan = CompiledPlan::new(&g2, &o.roots);
+        println!(
+            "memory plan ({} instrs, {} levels): {}",
+            plan.len(),
+            plan.depth(),
+            plan.pool_stats()
+        );
+    }
     if args.get("dot").is_some() {
         println!("{}", w.g.to_dot(&[node]));
     } else {

@@ -1,24 +1,33 @@
 //! Contraction reassociation: rewrite chains/trees of generic
-//! multiplications into the cheapest pairwise association order found by
-//! a greedy dimension-aware search (the §3.3 cross-country strategy,
-//! generalised to whole root *sets*).
+//! multiplications into the cheapest pairwise association order (the
+//! §3.3 cross-country strategy, generalised to whole root *sets*).
 //!
 //! Each maximal multiplication tree whose interior nodes are consumed
 //! nowhere else is flattened into one n-ary contraction with globally
-//! unified labels; the flattened terms are then contracted pairwise,
-//! cheapest iteration space first (result order as the tie-break — the
-//! paper's vectors-before-matrices rule). Shared subexpressions stay
-//! atomic, so no work is ever duplicated across roots. Re-association is
-//! justified by Lemmas 1–3: labels are unified globally and summed
-//! labels stay internal to the chain.
+//! unified labels; the flattened terms are then contracted pairwise.
+//! Two search strategies pick the order:
+//!
+//! * **optimal (DP)** — chains of at most [`DP_MAX_TERMS`] terms run an
+//!   exact Held–Karp-style search over term subsets (the classic
+//!   matrix-chain/einsum-ordering dynamic program, generalised to
+//!   arbitrary label structure including outer products), so short
+//!   chains — which is nearly all chains autodiff emits — get the
+//!   provably cheapest association;
+//! * **greedy** — longer chains contract cheapest-pair-first (result
+//!   order as the tie-break — the paper's vectors-before-matrices rule),
+//!   which is O(t³) instead of O(3ᵗ).
+//!
+//! Shared subexpressions stay atomic, so no work is ever duplicated
+//! across roots. Re-association is justified by Lemmas 1–3: labels are
+//! unified globally and summed labels stay internal to the chain.
 //!
 //! A cost guard makes the pass monotone: the original association
 //! (rebuilt over the same optimised leaves) is restored whenever the
-//! [`cost`](crate::opt::cost) model says the greedy order would cost
-//! *more*; on ties the greedy order wins, because its
-//! expensive-factors-last property is what the §3.3 compression scheme
-//! builds on. So `(A·B)·v` becomes `A·(B·v)`, and no chain ever gets
-//! costlier than it started.
+//! [`cost`](crate::opt::cost) model says the chosen order would cost
+//! *more*; on ties the greedy order wins — even against an equal-cost DP
+//! plan — because its expensive-factors-last property is what the §3.3
+//! compression scheme builds on. So `(A·B)·v` becomes `A·(B·v)`, and no
+//! chain ever gets costlier than it started.
 
 use crate::einsum::{EinSpec, Label};
 use crate::ir::{Graph, NodeId, Op};
@@ -28,6 +37,18 @@ use std::collections::HashMap;
 /// Global label space for flattened chains (disjoint from the per-spec
 /// local labels).
 type GLabel = u64;
+
+/// Chains of at most this many terms run the exact subset-DP association
+/// search; longer chains fall back to the greedy order. At 12 terms the
+/// DP visits 3¹² ≈ 531k subset splits — well under a millisecond, and
+/// comfortably above the chain lengths autodiff emits in practice.
+pub const DP_MAX_TERMS: usize = 12;
+
+/// A planned sequence of pairwise merges, as indices into the *current*
+/// (shrinking) term list: step `(i, j)` merges the terms at positions
+/// `i < j`, stores the result at `i` and removes `j` — exactly what the
+/// emitter replays.
+type Schedule = Vec<(usize, usize)>;
 
 /// Re-associate all multiplication chains reachable from `roots`,
 /// jointly. Returns the new roots (same order) and the number of chains
@@ -80,22 +101,31 @@ impl Reassoc {
                 for t in &mut terms {
                     t.node = self.rewrite(g, t.node);
                 }
-                // cost guard: compare the greedy merge sequence against
-                // the chain's original association, both measured as the
-                // sum of interior-contraction iteration spaces (the
-                // flattened region is a tree of single-use Muls, so both
-                // sums are exact region costs — leaves cancel out). Fall
-                // back to the original association only when greedy would
-                // actually cost *more*; ties keep the greedy order, whose
-                // expensive-factors-last property the §3.3 compression
-                // scheme builds on.
+                // Pick the association: exact DP for short chains, greedy
+                // otherwise, with the cost guard comparing against the
+                // chain's original association — all measured as the sum
+                // of interior-contraction iteration spaces (the flattened
+                // region is a tree of single-use Muls, so the sums are
+                // exact region costs — leaves cancel out). A DP plan is
+                // taken only when *strictly* cheaper than greedy, and the
+                // original association is restored whenever the chosen
+                // order would cost *more* than it; ties keep greedy,
+                // whose expensive-factors-last property the §3.3
+                // compression scheme builds on.
                 let plain_cost = self.plain_region_cost(g, id, true);
-                let (greedy, greedy_cost) = contract_greedy(g, terms, &out, &dims);
-                if greedy_cost <= plain_cost {
-                    if greedy_cost < plain_cost {
+                let label_sets: Vec<Vec<GLabel>> =
+                    terms.iter().map(|t| t.labels.clone()).collect();
+                let (greedy_sched, greedy_cost) =
+                    schedule_greedy(label_sets.clone(), &out, &dims);
+                let (sched, best_cost) = match schedule_optimal(&label_sets, &out, &dims) {
+                    Some((s, c)) if c < greedy_cost => (s, c),
+                    _ => (greedy_sched, greedy_cost),
+                };
+                if best_cost <= plain_cost {
+                    if best_cost < plain_cost {
                         self.rewritten += 1;
                     }
-                    greedy
+                    emit_schedule(g, terms, &sched, &out, &dims)
                 } else {
                     self.rebuild_plain(g, id, true)
                 }
@@ -196,24 +226,25 @@ impl Reassoc {
     }
 }
 
-/// Greedily contract the flattened terms pairwise: cheapest contraction
-/// first (iteration-space size; ties broken by the *order* of the result
-/// tensor — the paper's vectors-before-matrices rule). Returns the chain
-/// root plus the summed cost of the merges it performed (the greedy
-/// region cost the guard in [`Reassoc::rewrite`] compares).
-fn contract_greedy(
-    g: &mut Graph,
-    mut terms: Vec<Term>,
+/// Plan the greedy association: contract cheapest pair first
+/// (iteration-space size; ties broken by the *order* of the result
+/// tensor — the paper's vectors-before-matrices rule). Pure label-level
+/// simulation: returns the merge schedule plus its summed cost (the
+/// greedy region cost the guard in [`Reassoc::rewrite`] compares);
+/// [`emit_schedule`] replays the winner into the graph.
+fn schedule_greedy(
+    mut labels: Vec<Vec<GLabel>>,
     out: &[GLabel],
     dims: &HashMap<GLabel, usize>,
-) -> (NodeId, u128) {
-    assert!(!terms.is_empty());
+) -> (Schedule, u128) {
+    assert!(!labels.is_empty());
+    let mut sched = Schedule::new();
     let mut total: u128 = 0;
-    while terms.len() > 1 {
+    while labels.len() > 1 {
         let mut best: Option<(usize, usize, u128, usize)> = None; // (i, j, cost, result order)
-        for i in 0..terms.len() {
-            for j in (i + 1)..terms.len() {
-                let (cost, res) = pair_result(&terms, i, j, out, dims);
+        for i in 0..labels.len() {
+            for j in (i + 1)..labels.len() {
+                let (cost, res) = pair_result(&labels, i, j, out, dims);
                 let order = res.len();
                 let better = match best {
                     None => true,
@@ -225,27 +256,166 @@ fn contract_greedy(
             }
         }
         let (i, j, step_cost, _) = best.unwrap();
-        let (_, mut res_labels) = pair_result(&terms, i, j, out, dims);
+        let (_, res) = pair_result(&labels, i, j, out, dims);
+        labels[i] = res;
+        labels.remove(j);
+        sched.push((i, j));
+        total = total.saturating_add(step_cost);
+    }
+    // a single term that is not already in output order pays one
+    // transpose pass (the emitter adds the same node)
+    if sched.is_empty() && labels[0] != out {
+        let n: u128 = labels[0].iter().map(|l| dims[l] as u128).product();
+        total = total.saturating_add(n);
+    }
+    (sched, total)
+}
+
+/// Plan the *optimal* association of a short chain: Held–Karp dynamic
+/// programming over term subsets. `dp[S]` is the cheapest cost of
+/// contracting subset `S` down to one tensor; a merge of `T` and `S \ T`
+/// costs the iteration space of the union of their reduced label sets
+/// (identical to the greedy step cost, so the two plans are compared in
+/// the same currency). Returns `None` for chains outside `3..=DP_MAX_TERMS`
+/// (2 terms have a unique association; longer chains stay greedy).
+fn schedule_optimal(
+    labels: &[Vec<GLabel>],
+    out: &[GLabel],
+    dims: &HashMap<GLabel, usize>,
+) -> Option<(Schedule, u128)> {
+    let t = labels.len();
+    if !(3..=DP_MAX_TERMS).contains(&t) {
+        return None;
+    }
+    let full: u32 = (1u32 << t) - 1;
+    // reduced label set of every subset: the union of its members'
+    // labels, keeping only labels still needed outside the subset (by
+    // another term or by the output) — order-independent, which is what
+    // makes the subset DP well-defined
+    let mut set_labels: Vec<Vec<GLabel>> = vec![Vec::new(); (full as usize) + 1];
+    for s in 1..=full {
+        let mut ls: Vec<GLabel> = Vec::new();
+        for (k, term) in labels.iter().enumerate() {
+            if s & (1 << k) != 0 {
+                for &l in term {
+                    if !ls.contains(&l) {
+                        ls.push(l);
+                    }
+                }
+            }
+        }
+        if s.count_ones() > 1 {
+            ls.retain(|l| {
+                out.contains(l)
+                    || labels
+                        .iter()
+                        .enumerate()
+                        .any(|(k, term)| s & (1 << k) == 0 && term.contains(l))
+            });
+        }
+        set_labels[s as usize] = ls;
+    }
+
+    const INF: u128 = u128::MAX;
+    let mut best: Vec<u128> = vec![INF; (full as usize) + 1];
+    let mut split: Vec<u32> = vec![0; (full as usize) + 1];
+    for k in 0..t {
+        best[1usize << k] = 0;
+    }
+    for s in 1..=full {
+        if s.count_ones() < 2 {
+            continue;
+        }
+        // enumerate splits (T, S \ T) with the lowest set bit pinned to T
+        // so each unordered split is visited once
+        let low = s & s.wrapping_neg();
+        let rest = s ^ low;
+        let mut sub = rest;
+        loop {
+            let t1 = sub | low;
+            let t2 = s ^ t1;
+            if t2 != 0 {
+                let (c1, c2) = (best[t1 as usize], best[t2 as usize]);
+                if c1 != INF && c2 != INF {
+                    let mut union: Vec<GLabel> = set_labels[t1 as usize].clone();
+                    for &l in &set_labels[t2 as usize] {
+                        if !union.contains(&l) {
+                            union.push(l);
+                        }
+                    }
+                    let mc: u128 = union.iter().map(|l| dims[l] as u128).product();
+                    let cost = c1.saturating_add(c2).saturating_add(mc);
+                    if cost < best[s as usize] {
+                        best[s as usize] = cost;
+                        split[s as usize] = t1;
+                    }
+                }
+            }
+            if sub == 0 {
+                break;
+            }
+            sub = (sub - 1) & rest;
+        }
+    }
+    if best[full as usize] == INF {
+        return None;
+    }
+
+    // flatten the winning binary tree into a shrinking-list schedule
+    // (post-order), mirroring the emitter's replay semantics
+    let mut live: Vec<u32> = (0..t).map(|k| 1u32 << k).collect();
+    let mut sched = Schedule::new();
+    fn flatten_tree(s: u32, split: &[u32], live: &mut Vec<u32>, sched: &mut Schedule) {
+        if s.count_ones() == 1 {
+            return;
+        }
+        let t1 = split[s as usize];
+        let t2 = s ^ t1;
+        flatten_tree(t1, split, live, sched);
+        flatten_tree(t2, split, live, sched);
+        let a = live.iter().position(|&x| x == t1).expect("live subset");
+        let b = live.iter().position(|&x| x == t2).expect("live subset");
+        let (i, j) = if a < b { (a, b) } else { (b, a) };
+        live[i] = s;
+        live.remove(j);
+        sched.push((i, j));
+    }
+    flatten_tree(full, &split, &mut live, &mut sched);
+    Some((sched, best[full as usize]))
+}
+
+/// Replay a merge schedule into the graph: each step contracts two live
+/// terms into a fresh `Mul` (the final step emits directly in the
+/// requested output order, so no trailing transpose is ever needed for
+/// multi-term chains).
+fn emit_schedule(
+    g: &mut Graph,
+    mut terms: Vec<Term>,
+    sched: &Schedule,
+    out: &[GLabel],
+    dims: &HashMap<GLabel, usize>,
+) -> NodeId {
+    for &(i, j) in sched {
+        let labels_view: Vec<Vec<GLabel>> = terms.iter().map(|t| t.labels.clone()).collect();
+        let (_, mut res_labels) = pair_result(&labels_view, i, j, out, dims);
         if terms.len() == 2 {
-            // final contraction: emit directly in the requested output order
+            // final contraction: emit directly in the requested order
             res_labels = out.to_vec();
         }
         let merged = build_mul(g, &terms[i], &terms[j], &res_labels);
         terms[i] = Term { node: merged, labels: res_labels };
         terms.remove(j);
-        total = total.saturating_add(step_cost);
     }
-    let last = terms.pop().unwrap();
+    let last = terms.pop().expect("chain has at least one term");
     // final axis order must match `out`
     if last.labels == out {
-        (last.node, total)
+        last.node
     } else {
         let perm: Vec<usize> = out
             .iter()
             .map(|gl| last.labels.iter().position(|x| x == gl).unwrap())
             .collect();
-        let n: u128 = g.shape(last.node).iter().map(|&d| d as u128).product();
-        (g.transpose(last.node, &perm), total.saturating_add(n))
+        g.transpose(last.node, &perm)
     }
 }
 
@@ -253,14 +423,14 @@ fn contract_greedy(
 /// pair `(i, j)`: a label survives if some other term or the output still
 /// needs it.
 fn pair_result(
-    terms: &[Term],
+    labels: &[Vec<GLabel>],
     i: usize,
     j: usize,
     out: &[GLabel],
     dims: &HashMap<GLabel, usize>,
 ) -> (u128, Vec<GLabel>) {
     let mut union: Vec<GLabel> = Vec::new();
-    for &l in terms[i].labels.iter().chain(&terms[j].labels) {
+    for &l in labels[i].iter().chain(&labels[j]) {
         if !union.contains(&l) {
             union.push(l);
         }
@@ -268,10 +438,10 @@ fn pair_result(
     let cost: u128 = union.iter().map(|l| dims[l] as u128).product();
     let needed = |l: &GLabel| {
         out.contains(l)
-            || terms
+            || labels
                 .iter()
                 .enumerate()
-                .any(|(t, term)| t != i && t != j && term.labels.contains(l))
+                .any(|(t, ls)| t != i && t != j && ls.contains(l))
     };
     let res: Vec<GLabel> = union.into_iter().filter(needed).collect();
     (cost, res)
@@ -377,6 +547,85 @@ mod tests {
         for (w, v) in want.iter().zip(&got) {
             assert!(v.allclose(w, 1e-9, 1e-11));
         }
+    }
+
+    #[test]
+    fn dp_beats_greedy_where_cheapest_first_misleads() {
+        // M1: 1×1, M2: 1×100, M3: 100×2, out 1×2.
+        // Greedy grabs the cheapest pair first — M1·M2 at 1·1·100 = 100 —
+        // and then pays 1·100·2 = 200 for the rest: 300 total.
+        // The optimal order is M2·M3 (1·100·2 = 200) then M1·(M2·M3)
+        // (1·1·2 = 2): 202 total. Only the exact DP finds it.
+        let mut g = Graph::new();
+        let m1 = g.var("M1", &[1, 1]);
+        let m2 = g.var("M2", &[1, 100]);
+        let m3 = g.var("M3", &[100, 2]);
+        let m12 = g.matmul(m1, m2);
+        let y = g.matmul(m12, m3);
+        assert_eq!(flop_estimate(&g, y), 300, "plain association costs 300");
+        let (roots, changed) = reassociate(&mut g, &[y]);
+        assert_eq!(changed, 1);
+        assert_eq!(
+            flop_estimate(&g, roots[0]),
+            202,
+            "DP must find the 202-flop association (greedy stops at 300)"
+        );
+        let mut env = Env::new();
+        env.insert("M1", Tensor::randn(&[1, 1], 1));
+        env.insert("M2", Tensor::randn(&[1, 100], 2));
+        env.insert("M3", Tensor::randn(&[100, 2], 3));
+        let want = eval1(&g, y, &env);
+        let got = eval1(&g, roots[0], &env);
+        assert!(got.allclose(&want, 1e-9, 1e-11), "diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn long_chains_fall_back_to_greedy() {
+        // 14 terms exceed DP_MAX_TERMS: the pass must stay on the greedy
+        // path and still preserve semantics
+        let mut g = Graph::new();
+        let vars: Vec<_> = (0..14).map(|i| g.var(&format!("v{}", i), &[6])).collect();
+        let mut y = vars[0];
+        for &v in &vars[1..] {
+            y = g.hadamard(y, v);
+        }
+        let before = flop_estimate(&g, y);
+        let (roots, _) = reassociate(&mut g, &[y]);
+        assert!(flop_estimate(&g, roots[0]) <= before);
+        let mut env = Env::new();
+        for i in 0..14 {
+            env.insert(&format!("v{}", i), Tensor::randn(&[6], 10 + i as u64));
+        }
+        let want = eval1(&g, y, &env);
+        let got = eval1(&g, roots[0], &env);
+        assert!(got.allclose(&want, 1e-9, 1e-11), "diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn dp_ties_keep_the_greedy_order() {
+        // square matrix chain where greedy already finds the optimum:
+        // the DP must not displace it (fingerprint-stable graphs)
+        let build = || {
+            let mut g = Graph::new();
+            let a = g.var("A", &[20, 20]);
+            let b = g.var("B", &[20, 20]);
+            let x = g.var("x", &[20]);
+            let ab = g.matmul(a, b);
+            let y = g.matvec(ab, x);
+            let (roots, _) = reassociate(&mut g, &[y]);
+            // both searches land on A·(B·x): two 20²-space matvecs
+            assert_eq!(flop_estimate(&g, roots[0]), 800);
+            let (gc, croots) = crate::opt::compact(&g, &roots);
+            (gc, croots)
+        };
+        let (g1, r1) = build();
+        let (g2, r2) = build();
+        assert_eq!(r1, r2);
+        assert_eq!(
+            crate::exec::graph_fingerprint(&g1),
+            crate::exec::graph_fingerprint(&g2),
+            "tie-handling must stay deterministic"
+        );
     }
 
     #[test]

@@ -1,9 +1,12 @@
-//! Small utilities: scoped-thread data parallelism (the offline build has
-//! no rayon), the shared parallelism/blocking constants, per-thread GEMM
-//! packing scratch, and wall-clock helpers for the bench harnesses.
+//! Small utilities: the persistent [`WorkerPool`], scoped-thread data
+//! parallelism (the offline build has no rayon), the shared
+//! parallelism/blocking constants, per-thread GEMM packing scratch, and
+//! wall-clock helpers for the bench harnesses.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Instant;
 
 // ---------------------------------------------------------------------------
@@ -107,6 +110,245 @@ pub fn num_threads() -> usize {
         .max(1);
     CACHE.store(n, Ordering::Relaxed);
     n
+}
+
+// ---------------------------------------------------------------------------
+// Persistent worker pool
+//
+// `std::thread::scope` pays a clone/spawn/join round trip per fork (~10 µs
+// plus a cold stack and cold thread-locals). The compiled executor forks on
+// *every parallel level of every run*, which on the coordinator's
+// steady-state hot path means thousands of spawns per second — all for
+// workers that execute the same shape of work each time. `WorkerPool` keeps
+// the workers alive instead: they park on a condvar, wake to run one
+// scope's closure, and go back to sleep warm (thread-local GEMM packing
+// scratch and einsum scratch survive between scopes).
+// ---------------------------------------------------------------------------
+
+/// A unit of work handed to a parked worker: a raw pointer to the scope's
+/// closure plus the participant index it should run as. The pointer is only
+/// dereferenced while [`WorkerPool::scope`] is still blocked waiting on the
+/// job's latch, so the borrow it erases is always live.
+struct Job {
+    f: *const (dyn Fn(usize) + Sync),
+    idx: usize,
+    done: Arc<ScopeLatch>,
+}
+
+// SAFETY: the closure behind `f` is `Sync` (shared by reference across the
+// scope's participants) and outlives the job — `WorkerPool::scope` does not
+// return, and therefore does not release the borrow, until every job has
+// counted down the latch.
+unsafe impl Send for Job {}
+
+/// Completion latch of one `scope` call: counts outstanding jobs and holds
+/// the first panic payload so the caller can resume the unwind.
+struct ScopeLatch {
+    state: Mutex<LatchState>,
+    cv: Condvar,
+}
+
+struct LatchState {
+    remaining: usize,
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+impl ScopeLatch {
+    fn new(count: usize) -> Self {
+        ScopeLatch {
+            state: Mutex::new(LatchState { remaining: count, panic: None }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn count_down(&self, panic: Option<Box<dyn std::any::Any + Send>>) {
+        let mut st = self.state.lock().unwrap();
+        st.remaining -= 1;
+        if st.panic.is_none() {
+            st.panic = panic;
+        }
+        if st.remaining == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) -> Option<Box<dyn std::any::Any + Send>> {
+        let mut st = self.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.panic.take()
+    }
+}
+
+struct PoolShared {
+    queue: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    /// workers spawned so far (grown lazily up to `num_threads() - 1`)
+    spawned: AtomicUsize,
+}
+
+thread_local! {
+    /// Set while a pool worker is running jobs: a nested `scope` from
+    /// inside a job degrades to serial execution instead of deadlocking
+    /// on workers that are all busy waiting for each other.
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// A persistent pool of parked worker threads executing fork-join scopes.
+///
+/// [`WorkerPool::scope`]`(n, f)` runs `f(0) … f(n-1)` concurrently — `f(0)`
+/// on the calling thread, the rest on pool workers — and returns when all
+/// participants have finished, exactly like `std::thread::scope` with `n`
+/// spawns, but without creating or joining a single thread on the hot
+/// path. Workers are spawned lazily (at most `num_threads() - 1`, shared
+/// process-wide via [`worker_pool`]) and live for the rest of the process,
+/// so their thread-local scratch (GEMM packing buffers, einsum odometers)
+/// stays warm across scopes, plans and coordinator entries.
+///
+/// Panics inside any participant are caught, forwarded, and re-raised on
+/// the calling thread after the scope has fully drained (no job is left
+/// holding the closure borrow).
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+}
+
+impl Default for WorkerPool {
+    fn default() -> Self {
+        WorkerPool::new()
+    }
+}
+
+impl WorkerPool {
+    pub fn new() -> Self {
+        WorkerPool {
+            shared: Arc::new(PoolShared {
+                queue: Mutex::new(VecDeque::new()),
+                cv: Condvar::new(),
+                spawned: AtomicUsize::new(0),
+            }),
+        }
+    }
+
+    /// Ensure at least `want` workers exist (capped at `num_threads()-1`).
+    fn ensure_workers(&self, want: usize) {
+        let cap = num_threads().saturating_sub(1);
+        let want = want.min(cap);
+        loop {
+            let cur = self.shared.spawned.load(Ordering::Relaxed);
+            if cur >= want {
+                return;
+            }
+            if self
+                .shared
+                .spawned
+                .compare_exchange(cur, cur + 1, Ordering::Relaxed, Ordering::Relaxed)
+                .is_err()
+            {
+                continue;
+            }
+            let shared = self.shared.clone();
+            std::thread::Builder::new()
+                .name(format!("tensorcalc-worker-{}", cur))
+                .spawn(move || worker_loop(shared))
+                .expect("failed to spawn pool worker");
+        }
+    }
+
+    /// Run `f(0) … f(n-1)` concurrently; blocks until every participant
+    /// has finished. `f(0)` runs on the calling thread. With `n <= 1`, or
+    /// when called from inside a pool worker (a nested fork would risk
+    /// waiting on ourselves), every index runs serially on the caller.
+    pub fn scope<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if n <= 1 || num_threads() <= 1 || IN_POOL_WORKER.with(|w| w.get()) {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        self.ensure_workers(n - 1);
+        let done = Arc::new(ScopeLatch::new(n - 1));
+        {
+            let f_ref: &(dyn Fn(usize) + Sync) = &f;
+            // SAFETY: erase the borrow lifetime to store the pointer in
+            // the queue (`*const dyn Trait` defaults to `'static`, which
+            // a plain cast cannot produce from a scoped borrow); `scope`
+            // blocks on the latch until every job has finished, so the
+            // closure strictly outlives all uses of the pointer.
+            #[allow(clippy::useless_transmute)]
+            let fp = unsafe {
+                std::mem::transmute::<&(dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(
+                    f_ref,
+                )
+            };
+            let mut q = self.shared.queue.lock().unwrap();
+            for idx in 1..n {
+                q.push_back(Job { f: fp, idx, done: done.clone() });
+            }
+        }
+        self.shared.cv.notify_all();
+        // The caller participates as index 0. Its panic must still wait
+        // for the latch — workers hold a pointer into this stack frame.
+        let caller_panic =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(0))).err();
+        // Help-first join: under concurrent scopes the shared workers may
+        // be busy draining another scope's jobs — instead of idling on
+        // the latch behind them, the caller runs its *own* still-queued
+        // jobs itself. After this loop only jobs a worker has already
+        // claimed (i.e. is actively running) remain outstanding.
+        loop {
+            let job = {
+                let mut q = self.shared.queue.lock().unwrap();
+                match q.iter().position(|j| Arc::ptr_eq(&j.done, &done)) {
+                    Some(pos) => q.remove(pos),
+                    None => None,
+                }
+            };
+            let Some(job) = job else { break };
+            // SAFETY: same contract as worker_loop — we are still inside
+            // `scope`, so the closure is alive.
+            let jf = unsafe { &*job.f };
+            let panic =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| jf(job.idx))).err();
+            job.done.count_down(panic);
+        }
+        let worker_panic = done.wait();
+        if let Some(p) = caller_panic.or(worker_panic) {
+            std::panic::resume_unwind(p);
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>) {
+    IN_POOL_WORKER.with(|w| w.set(true));
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break job;
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+        };
+        // SAFETY: the scope that enqueued this job blocks on its latch
+        // until we count down below, so the closure is still alive.
+        let f = unsafe { &*job.f };
+        let panic =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(job.idx))).err();
+        job.done.count_down(panic);
+    }
+}
+
+/// The process-wide worker pool: shared by every compiled plan and by the
+/// coordinator's entry workers across `eval_many` calls, so the whole
+/// process keeps one set of warm, parked threads.
+pub fn worker_pool() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(WorkerPool::new)
 }
 
 /// Split `out` into up to `num_threads` contiguous bands of whole
@@ -272,5 +514,72 @@ mod tests {
     #[test]
     fn num_threads_at_least_one() {
         assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn worker_pool_scope_runs_every_index_once() {
+        use std::sync::atomic::AtomicU64;
+        let pool = WorkerPool::new();
+        for round in 0..8 {
+            let n = 1 + (round % 5);
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            pool.scope(n, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "index {} round {}", i, round);
+            }
+        }
+    }
+
+    #[test]
+    fn worker_pool_propagates_worker_panics() {
+        let pool = worker_pool();
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.scope(4, |i| {
+                if i == 3 {
+                    panic!("boom from participant");
+                }
+            });
+        }));
+        assert!(res.is_err(), "a participant panic must surface on the caller");
+        // the pool must stay usable after a panicked scope
+        let count = AtomicUsize::new(0);
+        pool.scope(4, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn worker_pool_nested_scope_degrades_to_serial() {
+        let pool = worker_pool();
+        let count = AtomicUsize::new(0);
+        pool.scope(3, |_| {
+            // nested fork from inside a job: must complete (serially on
+            // workers, in parallel on the caller) rather than deadlock
+            pool.scope(2, |_| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn worker_pool_concurrent_scopes_interleave() {
+        let pool = worker_pool();
+        let total = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..25 {
+                        pool.scope(3, |_| {
+                            total.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 25 * 3);
     }
 }

@@ -15,7 +15,7 @@
 use tensorcalc::autodiff::reverse::reverse_derivative;
 use tensorcalc::einsum::{einsum, einsum_into, einsum_naive, EinScratch, EinSpec, Label};
 use tensorcalc::eval::{fd_gradient, fd_jacobian, Env, Plan};
-use tensorcalc::exec::{CompiledPlan, PlanCache};
+use tensorcalc::exec::{CompiledPlan, EpilogueMode, ExecMemory, PlanCache};
 use tensorcalc::ir::{Elem, Graph, NodeId, Op};
 use tensorcalc::problems::{logistic_regression, matrix_factorization, neural_net};
 use tensorcalc::tensor::{Tensor, XorShift};
@@ -269,8 +269,13 @@ fn fusion_cuts_fresh_pool_allocations_on_deep_elem_chain() {
     }
     let mut env = Env::new();
     env.insert("x", Tensor::randn(&[256], 7));
-    let fused = CompiledPlan::new(&g, &[v]);
-    let unfused = CompiledPlan::with_fusion(&g, &[v], false);
+    // pooled mode: this test asserts the *pool's* bucket counters (the
+    // planned default never touches them — tests/memory_plan.rs owns the
+    // arena-side assertions)
+    let fused =
+        CompiledPlan::with_options(&g, &[v], true, EpilogueMode::default(), ExecMemory::Pooled);
+    let unfused =
+        CompiledPlan::with_options(&g, &[v], false, EpilogueMode::default(), ExecMemory::Pooled);
     let a = fused.run(&env);
     let b = unfused.run(&env);
     assert_eq!(a[0].data(), b[0].data(), "fusion changed the numerics");
@@ -347,7 +352,14 @@ fn pool_reuse_does_not_alias_or_drift() {
 fn pool_stops_allocating_after_warmup() {
     let mut w = logistic_regression(32, 8);
     let grad = w.gradient();
-    let plan = CompiledPlan::new(&w.g, &[w.loss, grad]);
+    // pooled ablation mode — the planned default bypasses the pool
+    let plan = CompiledPlan::with_options(
+        &w.g,
+        &[w.loss, grad],
+        true,
+        EpilogueMode::default(),
+        ExecMemory::Pooled,
+    );
     let first = plan.run(&w.env);
     let cold = plan.pool_stats();
     let runs = 20u64;

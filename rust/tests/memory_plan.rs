@@ -1,0 +1,317 @@
+//! Differential pinning of the static memory planner
+//! (`ExecMemory::Planned`, the default) against the PR 1 pooled
+//! executor (`ExecMemory::Pooled`) and the interpreter:
+//!
+//! * Planned vs Pooled must be **bit-identical** (same instruction
+//!   stream, same kernels, same accumulation order — only the buffers'
+//!   addresses differ) across skinny, batched, permuted and Hessian
+//!   workloads, fused and unfused;
+//! * the planner's no-overlap invariant (no two live intervals share
+//!   arena bytes) is re-checked on every plan the suite builds;
+//! * steady state: after the warm-up run, `CompiledPlan::run` under
+//!   `Planned` performs **zero** heap allocations (the `arena_allocs`
+//!   counter freezes) and acquires **no** pool mutex (`pool_locks == 0`);
+//! * concurrent runs of one shared plan are isolated (one arena per
+//!   concurrent caller, results bit-stable).
+
+use tensorcalc::eval::{Env, Plan};
+use tensorcalc::exec::{CompiledPlan, EpilogueMode, ExecMemory};
+use tensorcalc::ir::{Elem, Graph, NodeId};
+use tensorcalc::opt::{optimize, OptLevel};
+use tensorcalc::problems::{logistic_regression, matrix_factorization, neural_net};
+use tensorcalc::tensor::Tensor;
+
+/// Compile `(g, roots)` under both memory modes, pin them bit-identical
+/// against each other and close against the interpreter, check the
+/// memory plan's no-overlap invariant, and verify warm-arena re-runs are
+/// bit-stable.
+fn check_modes(g: &Graph, roots: &[NodeId], env: &Env, fuse: bool, label: &str) {
+    let planned =
+        CompiledPlan::with_options(g, roots, fuse, EpilogueMode::default(), ExecMemory::Planned);
+    planned.validate_memory_plan();
+    let pooled =
+        CompiledPlan::with_options(g, roots, fuse, EpilogueMode::default(), ExecMemory::Pooled);
+    let a = planned.run(env);
+    let b = pooled.run(env);
+    let want = Plan::new(g, roots).run(g, env);
+    assert_eq!(a.len(), b.len());
+    for (k, ((ta, tb), tw)) in a.iter().zip(&b).zip(&want).enumerate() {
+        assert_eq!(
+            ta.data(),
+            tb.data(),
+            "{label}: root {k}: Planned vs Pooled must be bit-identical"
+        );
+        assert!(
+            ta.allclose(tw, 1e-9, 1e-11),
+            "{label}: root {k}: vs interpreter diff {}",
+            ta.max_abs_diff(tw)
+        );
+    }
+    // the warm arena must not leak state between runs
+    let again = planned.run(env);
+    for (k, (x, y)) in a.iter().zip(&again).enumerate() {
+        assert_eq!(x.data(), y.data(), "{label}: root {k}: warm re-run drifted");
+    }
+}
+
+#[test]
+fn skinny_gradient_workload() {
+    // tall-thin logreg: skinny GEMMs, scalar loss + vector gradient roots
+    let mut w = logistic_regression(96, 8);
+    let grad = w.gradient();
+    check_modes(&w.g, &[w.loss, grad], &w.env, true, "logreg-grad fused");
+    check_modes(&w.g, &[w.loss, grad], &w.env, false, "logreg-grad unfused");
+}
+
+#[test]
+fn batched_contraction_workload() {
+    // 400 small batch slices cross the parallel-batch gate (400·6³ >
+    // PAR_BATCH_TOTAL_MIN_FLOP); a fused chain rides on the contraction
+    let (bsz, d) = (400usize, 6usize);
+    let mut g = Graph::new();
+    let a = g.var("A", &[bsz, d, d]);
+    let b = g.var("B", &[bsz, d, d]);
+    let ab = g.mul(a, b, tensorcalc::einsum::EinSpec::parse("aij,ajk->aik"));
+    let t = g.elem(Elem::Tanh, ab);
+    let y = g.scale(t, 0.5);
+    let mut env = Env::new();
+    env.insert("A", Tensor::randn(&[bsz, d, d], 41));
+    env.insert("B", Tensor::randn(&[bsz, d, d], 42));
+    check_modes(&g, &[y], &env, true, "batched fused");
+    check_modes(&g, &[y], &env, false, "batched unfused");
+}
+
+#[test]
+fn permuted_output_workload() {
+    // "ij,jk->ki" exercises the gather + permute path, whose scratch
+    // regions (a/b staging and the pre-permutation product) live in the
+    // arena under Planned
+    let (m, k, n) = (33usize, 47, 29);
+    let mut g = Graph::new();
+    let a = g.var("A", &[m, k]);
+    let b = g.var("B", &[k, n]);
+    let ab = g.mul(a, b, tensorcalc::einsum::EinSpec::parse("ij,jk->ki"));
+    let t = g.elem(Elem::Tanh, ab);
+    let tt = g.transpose(t, &[1, 0]);
+    let y = g.matmul(tt, a);
+    let mut env = Env::new();
+    env.insert("A", Tensor::randn(&[m, k], 51));
+    env.insert("B", Tensor::randn(&[k, n], 52));
+    check_modes(&g, &[y], &env, true, "permuted fused");
+    check_modes(&g, &[y], &env, false, "permuted unfused");
+}
+
+#[test]
+fn hessian_workloads() {
+    // whole optimized Hessian DAGs — deep levels, shared sub-DAGs, the
+    // planner's worst case for interval packing
+    for (name, mut w) in [
+        ("logreg", logistic_regression(24, 6)),
+        ("matfac", matrix_factorization(10, 10, 3, false)),
+        ("mlp", neural_net(6, 4, 10)),
+    ] {
+        let h = w.hessian();
+        let mut g2 = w.g.clone();
+        let o = optimize(&mut g2, &[h], OptLevel::Full);
+        check_modes(&g2, &o.roots, &w.env, true, name);
+    }
+}
+
+#[test]
+fn epilogue_modes_bit_identical_under_planned() {
+    // TwoPass vs InTile must stay bit-identical when both run on arena
+    // offsets
+    let (m, k, n) = (65usize, 257, 130);
+    let mut g = Graph::new();
+    let x = g.var("X", &[m, k]);
+    let w = g.var("W", &[k, n]);
+    let xw = g.matmul(x, w);
+    let t = g.elem(Elem::Tanh, xw);
+    let y = g.hadamard(t, xw);
+    let mut env = Env::new();
+    env.insert("X", Tensor::randn(&[m, k], 61));
+    env.insert("W", Tensor::randn(&[k, n], 62));
+    let in_tile =
+        CompiledPlan::with_options(&g, &[y], true, EpilogueMode::InTile, ExecMemory::Planned);
+    let two_pass =
+        CompiledPlan::with_options(&g, &[y], true, EpilogueMode::TwoPass, ExecMemory::Planned);
+    assert!(in_tile.fused_count() >= 1);
+    let a = in_tile.run(&env);
+    let b = two_pass.run(&env);
+    assert_eq!(a[0].data(), b[0].data());
+}
+
+#[test]
+fn steady_state_allocates_nothing_and_takes_no_pool_lock() {
+    let mut w = logistic_regression(64, 16);
+    let grad = w.gradient();
+    let plan = CompiledPlan::new(&w.g, &[w.loss, grad]); // Planned default
+    assert_eq!(plan.memory(), ExecMemory::Planned);
+    let first = plan.run(&w.env);
+    let cold = plan.pool_stats();
+    assert!(cold.arena_bytes > 0, "the gradient DAG has intermediates to plan");
+    assert_eq!(cold.arena_allocs, 1, "first run grows exactly one arena");
+    let runs = 20;
+    for _ in 0..runs {
+        let again = plan.run(&w.env);
+        assert_eq!(again[0].data(), first[0].data());
+        assert_eq!(again[1].data(), first[1].data());
+    }
+    let warm = plan.pool_stats();
+    // the acceptance criterion: steady-state runs perform zero heap
+    // allocation (the arena never grows again) and never touch the
+    // buffer-pool mutex
+    assert_eq!(
+        warm.arena_allocs, cold.arena_allocs,
+        "a steady-state run allocated: {:?}",
+        warm
+    );
+    assert_eq!(warm.pool_locks, 0, "planned mode acquired the pool mutex: {:?}", warm);
+    assert_eq!(warm.fresh, 0);
+    assert_eq!(warm.reused, 0);
+}
+
+#[test]
+fn pooled_mode_still_counts_its_locks() {
+    // sanity for the counter the planned assertion relies on: the
+    // pooled ablation *does* take the mutex
+    let mut w = logistic_regression(16, 4);
+    let grad = w.gradient();
+    let plan = CompiledPlan::with_options(
+        &w.g,
+        &[w.loss, grad],
+        true,
+        EpilogueMode::default(),
+        ExecMemory::Pooled,
+    );
+    let _ = plan.run(&w.env);
+    let st = plan.pool_stats();
+    assert!(st.pool_locks > 0, "pooled mode must go through lock_pool: {:?}", st);
+    assert!(st.fresh > 0);
+    assert_eq!(st.arena_bytes, 0);
+}
+
+#[test]
+fn packing_reuses_dead_bytes_and_chains_in_place() {
+    // unfused Elem chain: every link dies as the next is written, so the
+    // whole chain must collapse onto ONE arena slot via in-place
+    // transfers
+    let len = 64usize;
+    let mut g = Graph::new();
+    let x = g.var("x", &[len]);
+    let mut v = g.elem(Elem::Tanh, x);
+    for _ in 0..5 {
+        v = g.elem(Elem::Sigmoid, v);
+    }
+    let mut env = Env::new();
+    env.insert("x", Tensor::randn(&[len], 7));
+    let planned =
+        CompiledPlan::with_options(&g, &[v], false, EpilogueMode::default(), ExecMemory::Planned);
+    planned.validate_memory_plan();
+    let st = planned.pool_stats();
+    assert_eq!(
+        st.arena_bytes,
+        (len * std::mem::size_of::<f64>()) as u64,
+        "the whole unfused chain must fit in one slot: {:?}",
+        st
+    );
+    assert_eq!(st.inplace_reuse, 5, "every link must take over its input in place");
+    // and in-place execution must not change the numerics
+    let pooled =
+        CompiledPlan::with_options(&g, &[v], false, EpilogueMode::default(), ExecMemory::Pooled);
+    let a = planned.run(&env);
+    let b = pooled.run(&env);
+    assert_eq!(a[0].data(), b[0].data());
+
+    // a diamond (two same-shape branches live at once) must pack the
+    // second branch into recycled bytes once the first dies
+    let mut g2 = Graph::new();
+    let x2 = g2.var("x", &[256]);
+    let t1 = g2.elem(Elem::Tanh, x2);
+    let s1 = g2.elem(Elem::Sigmoid, x2);
+    let d = g2.hadamard(t1, s1);
+    let e = g2.elem(Elem::Exp, d);
+    let y2 = g2.hadamard(e, e);
+    let mut env2 = Env::new();
+    env2.insert("x", Tensor::randn(&[256], 8));
+    let p2 = CompiledPlan::with_options(
+        &g2,
+        &[y2],
+        false,
+        EpilogueMode::default(),
+        ExecMemory::Planned,
+    );
+    p2.validate_memory_plan();
+    let st2 = p2.pool_stats();
+    assert!(
+        st2.planned_reuse + st2.inplace_reuse > 0,
+        "the diamond must reuse freed bytes: {:?}",
+        st2
+    );
+    check_modes(&g2, &[y2], &env2, false, "diamond unfused");
+}
+
+#[test]
+fn wide_parallel_level_is_planned_disjoint() {
+    // one wide level above the fork gate: concurrent instructions write
+    // planner-assigned disjoint slots on the persistent worker pool
+    let mut g = Graph::new();
+    let x = g.var("x", &[4096]);
+    let roots: Vec<NodeId> = (0..64).map(|i| g.scale(x, 1.0 + i as f64 * 0.01)).collect();
+    let mut env = Env::new();
+    env.insert("x", Tensor::randn(&[4096], 11));
+    let plan = CompiledPlan::new(&g, &roots);
+    plan.validate_memory_plan();
+    let got = plan.run(&env);
+    let want = Plan::new(&g, &roots).run(&g, &env);
+    for (i, (gt, wt)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            gt.allclose(wt, 1e-12, 1e-14),
+            "root {}: parallel planned level diverged, diff {}",
+            i,
+            gt.max_abs_diff(wt)
+        );
+    }
+}
+
+#[test]
+fn concurrent_planned_runs_are_isolated() {
+    let mut w = logistic_regression(32, 8);
+    let grad = w.gradient();
+    let plan = CompiledPlan::new(&w.g, &[w.loss, grad]);
+    let want = plan.run(&w.env);
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            s.spawn(|| {
+                for _ in 0..10 {
+                    let got = plan.run(&w.env);
+                    assert_eq!(got[0].data(), want[0].data(), "concurrent run diverged");
+                    assert_eq!(got[1].data(), want[1].data());
+                }
+            });
+        }
+    });
+    let st = plan.pool_stats();
+    assert!(
+        st.arena_allocs <= 5,
+        "at most one arena per concurrent caller: {:?}",
+        st
+    );
+    assert_eq!(st.pool_locks, 0);
+}
+
+#[test]
+fn planned_rejects_bad_bindings_like_the_interpreter() {
+    let mut g = Graph::new();
+    let x = g.var("x", &[3]);
+    let y = g.elem(Elem::Exp, x);
+    let plan = CompiledPlan::new(&g, &[y]);
+    let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut env = Env::new();
+        env.insert("x", Tensor::randn(&[4], 1)); // wrong shape
+        plan.run(&env)
+    }));
+    assert!(err.is_err(), "wrong-shape binding must panic under Planned too");
+    let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| plan.run(&Env::new())));
+    assert!(err.is_err(), "unbound variable must panic under Planned too");
+}

@@ -5,10 +5,12 @@
 #
 # Usage:   scripts/bench_baseline.sh
 # Env:     BENCH_JSON  — override the output path (default BENCH_exec.json)
-#          BENCH_SECS  — not yet wired; edit `secs` in the bench source
+#          BENCH_SECS  — per-measurement time budget in seconds
+#                        (default 0.3; CI's bench-smoke job uses 0.05 to
+#                        keep the run short while still writing real rows)
 set -eu
 root=$(cd "$(dirname "$0")/.." && pwd)
 out="${BENCH_JSON:-$root/BENCH_exec.json}"
 cd "$root/rust"
-BENCH_JSON="$out" cargo bench --bench ablation_modes
+BENCH_JSON="$out" BENCH_SECS="${BENCH_SECS:-0.3}" cargo bench --bench ablation_modes
 echo "perf trajectory recorded at $out"
