@@ -121,8 +121,9 @@ fn main() {
             .eval("logreg_newton_state", vec![xv.clone(), yv.clone(), wcur.clone()])
             .expect("coordinator eval");
         let f = resp.outputs[0].item();
-        let gv = &resp.outputs[1];
-        let mut hv = resp.outputs[2].clone();
+        // materialise the zero-copy arena views before the lease drops
+        let gv = resp.outputs[1].to_tensor();
+        let mut hv = resp.outputs[2].to_tensor();
         println!("{:>4} {:>14.6} {:>14.3e} {:>10}", it, f, gv.norm(), fmt_secs(resp.latency));
         if gv.norm() < 1e-8 {
             println!("\nconverged in {} Newton steps ✓", it);
@@ -133,7 +134,7 @@ fn main() {
         for i in 0..N {
             hv.data_mut()[i * N + i] += 1e-6;
         }
-        let step = solve_spd(&hv, gv).expect("H must be SPD");
+        let step = solve_spd(&hv, &gv).expect("H must be SPD");
         wcur = wcur.sub(&step);
     }
     assert!(converged || wcur.norm().is_finite(), "training diverged");

@@ -1,0 +1,187 @@
+//! Open-loop load bench for the coordinator's dynamic-batching serving
+//! path.
+//!
+//! A single submitter fires requests at a fixed *offered* rate against a
+//! logistic-regression gradient entry, twice per rate: once with the
+//! default dynamic batch cap and once with `max_batch = 1` (the
+//! ablation baseline, batching off). Latency is measured from each
+//! request's **scheduled** send time, not from when `submit` returned —
+//! the open-loop discipline that makes queueing delay under saturation
+//! visible instead of silently eliding it (coordinated omission).
+//!
+//! Run: `cargo bench --bench serve_load`
+//!
+//! `BENCH_SECS=<secs>` sets the duration of each (rate, cap) cell
+//! (default 0.3; CI's bench-smoke job uses a small value) and
+//! `BENCH_JSON=<path>` records every row — the hook
+//! `scripts/bench_serve.sh` uses to write `BENCH_serve.json`.
+
+use std::sync::mpsc::TryRecvError;
+use std::time::{Duration, Instant};
+use tensorcalc::coordinator::{Coordinator, EngineEntry, DEFAULT_MAX_BATCH};
+use tensorcalc::problems::logistic_regression;
+use tensorcalc::tensor::Tensor;
+use tensorcalc::util::fmt_secs;
+
+struct LoadRow {
+    max_batch: usize,
+    offered_rps: f64,
+    achieved_rps: f64,
+    p50: f64,
+    p99: f64,
+    sent: usize,
+    dropped: usize,
+}
+
+/// Nearest-rank percentile of an already-sorted sample.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+fn run_load(max_batch: usize, offered_rps: f64, secs: f64) -> LoadRow {
+    let (m, n) = (64usize, 16usize);
+    let mut wl = logistic_regression(m, n);
+    let grad = wl.gradient();
+    let roots = [wl.loss, grad];
+    let mut c = Coordinator::new(4096);
+    c.register_engine(
+        "grad",
+        EngineEntry::compiled(
+            &wl.g,
+            &roots,
+            vec![
+                ("X".into(), vec![m, n]),
+                ("y".into(), vec![m]),
+                ("w".into(), vec![n]),
+            ],
+        )
+        .with_max_batch(max_batch),
+    );
+
+    let x = Tensor::randn(&[m, n], 11);
+    let y = Tensor::randn(&[m], 12).map(f64::signum);
+    let wv = Tensor::randn(&[n], 13).scale(0.1);
+
+    let total = (offered_rps * secs).ceil() as usize;
+    let t0 = Instant::now();
+    let mut lat: Vec<f64> = Vec::with_capacity(total);
+    let mut pending: Vec<(Instant, std::sync::mpsc::Receiver<_>)> = Vec::new();
+    let mut sent = 0usize;
+    let mut dropped = 0usize;
+    for i in 0..total {
+        let due = t0 + Duration::from_secs_f64(i as f64 / offered_rps);
+        while Instant::now() < due {
+            std::hint::spin_loop();
+        }
+        match c.submit("grad", vec![x.clone(), y.clone(), wv.clone()]) {
+            Ok(rx) => {
+                sent += 1;
+                pending.push((due, rx));
+            }
+            // backpressure (queue full): an open-loop generator drops
+            // the request and keeps its schedule
+            Err(_) => dropped += 1,
+        }
+        // reap finished responses without blocking the send schedule
+        pending.retain(|(due, rx)| match rx.try_recv() {
+            Ok(Ok(_)) => {
+                lat.push(due.elapsed().as_secs_f64());
+                false
+            }
+            Ok(Err(_)) | Err(TryRecvError::Disconnected) => {
+                dropped += 1;
+                false
+            }
+            Err(TryRecvError::Empty) => true,
+        });
+    }
+    for (due, rx) in pending {
+        match rx.recv() {
+            Ok(Ok(_)) => lat.push(due.elapsed().as_secs_f64()),
+            _ => dropped += 1,
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    c.shutdown();
+
+    lat.sort_by(f64::total_cmp);
+    LoadRow {
+        max_batch,
+        offered_rps,
+        achieved_rps: lat.len() as f64 / wall,
+        p50: percentile(&lat, 0.5),
+        p99: percentile(&lat, 0.99),
+        sent,
+        dropped,
+    }
+}
+
+fn rows_to_json(rows: &[LoadRow]) -> String {
+    let mut out =
+        String::from("{\n  \"schema\": \"tensorcalc-serve-load/v1\",\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"entry\": \"logreg_grad\", \"max_batch\": {}, \"offered_rps\": {}, \
+             \"achieved_rps\": {:.1}, \"p50_secs\": {:e}, \"p99_secs\": {:e}, \
+             \"sent\": {}, \"dropped\": {}}}{}\n",
+            r.max_batch,
+            r.offered_rps,
+            r.achieved_rps,
+            r.p50,
+            r.p99,
+            r.sent,
+            r.dropped,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+fn main() {
+    let secs: f64 = std::env::var("BENCH_SECS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.3);
+
+    let mut rows = Vec::new();
+    for &rate in &[1000.0f64, 4000.0, 16000.0] {
+        for &cap in &[DEFAULT_MAX_BATCH, 1] {
+            rows.push(run_load(cap, rate, secs));
+        }
+    }
+
+    println!(
+        "\n== serve_load — logreg grad (64×16), open loop, {}s per cell ==",
+        secs
+    );
+    println!(
+        "{:>9} {:>10} {:>13} {:>10} {:>10} {:>7} {:>8}",
+        "batch", "offered/s", "achieved/s", "p50", "p99", "sent", "dropped"
+    );
+    for r in &rows {
+        println!(
+            "{:>9} {:>10.0} {:>13.0} {:>10} {:>10} {:>7} {:>8}",
+            if r.max_batch == 1 { "off".to_string() } else { format!("≤{}", r.max_batch) },
+            r.offered_rps,
+            r.achieved_rps,
+            fmt_secs(r.p50).trim(),
+            fmt_secs(r.p99).trim(),
+            r.sent,
+            r.dropped
+        );
+    }
+
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        if !path.is_empty() {
+            match std::fs::write(&path, rows_to_json(&rows)) {
+                Ok(()) => println!("\nwrote {} serve-load rows to {}", rows.len(), path),
+                Err(e) => eprintln!("BENCH_JSON: failed to write {}: {}", path, e),
+            }
+        }
+    }
+}

@@ -1,5 +1,7 @@
-//! Lock-light service metrics: counters + a sampled latency reservoir.
+//! Lock-light service metrics: counters + per-entry latency reservoirs
+//! with uniform (Algorithm R) reservoir sampling.
 
+use crate::tensor::XorShift;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -10,7 +12,7 @@ pub struct Metrics {
     completed: AtomicU64,
     errors: AtomicU64,
     /// per-entry latency samples (seconds), capped reservoir
-    latencies: Mutex<HashMap<String, Vec<f64>>>,
+    latencies: Mutex<HashMap<String, Reservoir>>,
 }
 
 /// A point-in-time view.
@@ -19,11 +21,43 @@ pub struct Snapshot {
     pub submitted: u64,
     pub completed: u64,
     pub errors: u64,
-    /// per-entry (count, p50, p99) in seconds
+    /// per-entry (samples held, p50, p99) in seconds
     pub per_entry: Vec<(String, usize, f64, f64)>,
 }
 
 const RESERVOIR: usize = 4096;
+
+/// Uniform fixed-size sample of an unbounded latency stream (Vitter's
+/// Algorithm R): after `seen` observations, every one of them is in the
+/// reservoir with probability `RESERVOIR / seen`. The previous scheme
+/// indexed by the latency's *bit pattern* (`to_bits() % RESERVOIR`) —
+/// value-keyed, not random, so a steady-state service funneled all its
+/// similar latencies into a handful of slots and p50/p99 stayed frozen
+/// on warm-up samples.
+struct Reservoir {
+    samples: Vec<f64>,
+    /// observations ever offered (≥ samples.len())
+    seen: u64,
+    rng: XorShift,
+}
+
+impl Reservoir {
+    fn new() -> Self {
+        Reservoir { samples: Vec::new(), seen: 0, rng: XorShift::new(0x5EED) }
+    }
+
+    fn offer(&mut self, v: f64) {
+        self.seen += 1;
+        if self.samples.len() < RESERVOIR {
+            self.samples.push(v);
+        } else {
+            let j = (self.rng.next_u64() % self.seen) as usize;
+            if j < RESERVOIR {
+                self.samples[j] = v;
+            }
+        }
+    }
+}
 
 impl Metrics {
     pub fn new() -> Self {
@@ -45,30 +79,27 @@ impl Metrics {
             self.errors.fetch_add(1, Ordering::Relaxed);
         }
         let mut map = self.latencies.lock().unwrap();
-        let v = map.entry(entry.to_string()).or_default();
-        if v.len() < RESERVOIR {
-            v.push(latency);
-        } else {
-            // simple overwrite reservoir
-            let i = (latency.to_bits() as usize) % RESERVOIR;
-            v[i] = latency;
-        }
+        map.entry(entry.to_string()).or_insert_with(Reservoir::new).offer(latency);
     }
 
     pub fn snapshot(&self) -> Snapshot {
         let map = self.latencies.lock().unwrap();
         let mut per_entry = Vec::new();
-        for (name, v) in map.iter() {
-            let mut s = v.clone();
-            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for (name, r) in map.iter() {
+            let mut s = r.samples.clone();
+            // total order: NaN sorts last instead of panicking the snapshot
+            s.sort_by(f64::total_cmp);
+            // nearest-rank percentile: the ⌈q·N⌉-th smallest sample. The
+            // old truncating index `(N-1)·q as usize` rounded p99 down to
+            // p50 for small N.
             let p = |q: f64| -> f64 {
                 if s.is_empty() {
-                    0.0
-                } else {
-                    s[((s.len() - 1) as f64 * q) as usize]
+                    return 0.0;
                 }
+                let rank = (q * s.len() as f64).ceil() as usize;
+                s[rank.clamp(1, s.len()) - 1]
             };
-            per_entry.push((name.clone(), v.len(), p(0.5), p(0.99)));
+            per_entry.push((name.clone(), r.samples.len(), p(0.5), p(0.99)));
         }
         per_entry.sort_by(|a, b| a.0.cmp(&b.0));
         Snapshot {
@@ -116,5 +147,59 @@ mod tests {
         }
         let s = m.snapshot();
         assert_eq!(s.per_entry[0].1, RESERVOIR);
+    }
+
+    #[test]
+    fn reservoir_is_not_value_keyed() {
+        // Warm up with 1.0s, then shift the distribution to 2.0 for 8×
+        // the reservoir size. A uniform reservoir is dominated by 2.0s;
+        // the value-keyed overwrite funneled every 2.0 into ONE slot
+        // (2.0f64.to_bits() % RESERVOIR is a single index), freezing
+        // p50 and p99 at the warm-up value forever.
+        let m = Metrics::new();
+        for _ in 0..RESERVOIR {
+            m.completed("x", 1.0, false);
+        }
+        for _ in 0..8 * RESERVOIR {
+            m.completed("x", 2.0, false);
+        }
+        let s = m.snapshot();
+        let (_, _, p50, p99) = &s.per_entry[0];
+        assert_eq!(*p50, 2.0, "reservoir still dominated by warm-up samples");
+        assert_eq!(*p99, 2.0);
+    }
+
+    #[test]
+    fn percentiles_distinguish_p99_from_p50_on_small_samples() {
+        let m = Metrics::new();
+        m.completed("a", 0.001, false);
+        m.completed("a", 0.002, false);
+        let s = m.snapshot();
+        let (_, _, p50, p99) = &s.per_entry[0];
+        assert_eq!(*p50, 0.001);
+        assert_eq!(*p99, 0.002, "truncating index collapses p99 onto p50");
+    }
+
+    #[test]
+    fn nearest_rank_percentiles_are_exact() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.completed("a", i as f64 / 100.0, false);
+        }
+        let snap = m.snapshot();
+        let (_, _, p50, p99) = &snap.per_entry[0];
+        assert_eq!(*p50, 0.50);
+        assert_eq!(*p99, 0.99);
+    }
+
+    #[test]
+    fn snapshot_survives_nan_latency() {
+        // a NaN sample (e.g. a zero-duration division upstream) must not
+        // panic the sort inside snapshot()
+        let m = Metrics::new();
+        m.completed("a", f64::NAN, false);
+        m.completed("a", 1.0, false);
+        let s = m.snapshot();
+        assert_eq!(s.per_entry[0].1, 2);
     }
 }

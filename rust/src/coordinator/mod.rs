@@ -7,33 +7,74 @@
 //! thin-but-real coordinator: the end-to-end example and `tensorcalc
 //! serve` drive batched gradient/Hessian requests through it and report
 //! throughput/latency.
+//!
+//! ## Dynamic request batching
+//!
+//! An engine worker drains everything already queued for its entry and
+//! runs the drained eval jobs as *one* batched execution: inputs are
+//! stacked along a new leading batch axis and a batched variant of the
+//! plan — derived by [`crate::exec::batch_graph`] from the same
+//! canonical graph, compiled lazily per batch bucket through the global
+//! [`PlanCache`](crate::exec::PlanCache) — runs once. Batch sizes are
+//! bucketed to powers of two (capped by
+//! [`EngineEntry::with_max_batch`]); a partial bucket is padded with
+//! copies of the first request, whose slots are computed and discarded —
+//! the batch axis is never contracted, so pad slots cannot perturb live
+//! ones. Root outputs come back as [`PlanOutput`] views into the leased
+//! run arena (zero-copy; see [`CompiledPlan::run_leased`]) and are split
+//! per request by pointer arithmetic on the shared lease.
+//!
+//! The rewrite is bit-identity-preserving: slice `b` of a batched run is
+//! computed by the same floating-point operations, in the same order, as
+//! request `b` run alone (pinned in `tests/serve_batch.rs` and the
+//! module tests below). `with_max_batch(1)` turns batching off and is
+//! kept as the ablation axis for `benches/serve_load.rs`.
 
 mod metrics;
 pub use metrics::{Metrics, Snapshot};
 
 use crate::error::Result;
 use crate::eval::Env;
-use crate::exec::{global_plan_cache, CompiledPlan};
+use crate::exec::{batch_graph, global_plan_cache, CompiledPlan, ExecMemory, PlanOutput};
 use crate::ir::{Graph, NodeId};
+use crate::opt::OptLevel;
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 use crate::{anyhow, bail};
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-/// An engine-backed entry: a *compiled* plan (pooled buffers,
-/// level-parallel execution — see [`crate::exec`]) plus a fixed input
-/// signature. The graph itself is not retained — the plan is
-/// self-contained — and the plan comes from the global plan cache, so
-/// re-registering the same graph (the repeated-request hot path) reuses
-/// the compiled artifact and its warm buffer pool.
+/// Largest micro-batch an entry fuses into one run unless overridden:
+/// high enough to amortise per-request dispatch under load, low enough
+/// that a power-of-two bucket pads at most one doubling.
+pub const DEFAULT_MAX_BATCH: usize = 8;
+
+/// An engine-backed entry: a *compiled* plan (planned arena, level-
+/// parallel execution — see [`crate::exec`]) plus a fixed input
+/// signature. The entry retains the canonical (optimized + compacted)
+/// graph it was compiled from, so batched variants can be derived from
+/// the exact structure the base plan executes — that is what makes the
+/// batched path bit-identical per slice. All plans come from the global
+/// plan cache: re-registering the same graph (the repeated-request hot
+/// path) reuses the compiled artifact and its warm run states.
 pub struct EngineEntry {
     pub plan: Arc<CompiledPlan>,
     /// variable names in submission order, with expected shapes
     pub inputs: Vec<(String, Vec<usize>)>,
+    /// the graph `plan` was compiled from (canonical unless the entry
+    /// was built at `OptLevel::None`), retained for batched variants
+    graph: Graph,
+    roots: Vec<NodeId>,
+    memory: ExecMemory,
+    /// largest micro-batch fused into one run; 1 = batching off (the
+    /// ablation baseline)
+    max_batch: usize,
+    /// lazily compiled batched variants, one per batch bucket
+    batched: HashMap<usize, Arc<CompiledPlan>>,
 }
 
 impl EngineEntry {
@@ -45,8 +86,7 @@ impl EngineEntry {
         roots: &[NodeId],
         inputs: Vec<(String, Vec<usize>)>,
     ) -> Self {
-        let plan = global_plan_cache().get_or_compile(graph, roots);
-        EngineEntry { plan, inputs }
+        Self::compiled_with(graph, roots, inputs, OptLevel::default(), ExecMemory::default())
     }
 
     /// [`EngineEntry::compiled`] with the optimizer level and executor
@@ -58,11 +98,57 @@ impl EngineEntry {
         graph: &Graph,
         roots: &[NodeId],
         inputs: Vec<(String, Vec<usize>)>,
-        level: crate::opt::OptLevel,
-        memory: crate::exec::ExecMemory,
+        level: OptLevel,
+        memory: ExecMemory,
     ) -> Self {
-        let plan = global_plan_cache().get_or_compile_opts(graph, roots, level, memory);
-        EngineEntry { plan, inputs }
+        // canonicalise once here, then compile at OptLevel::None: the
+        // cache keys `None` by the fingerprint of the graph as given,
+        // which for the canonical graph is exactly the key the ordinary
+        // optimized path uses — same key, same shared Arc. Batched
+        // variants then derive from this frozen structure instead of
+        // re-running the optimizer (whose cost model could reassociate
+        // the batched contractions differently and break bit-identity).
+        let (graph, roots) = if level == OptLevel::None {
+            (graph.clone(), roots.to_vec())
+        } else {
+            let mut g2 = graph.clone();
+            let o = crate::opt::optimize(&mut g2, roots, level);
+            crate::opt::compact(&g2, &o.roots)
+        };
+        let plan = global_plan_cache().get_or_compile_opts(&graph, &roots, OptLevel::None, memory);
+        EngineEntry {
+            plan,
+            inputs,
+            graph,
+            roots,
+            memory,
+            max_batch: DEFAULT_MAX_BATCH,
+            batched: HashMap::new(),
+        }
+    }
+
+    /// Cap the dynamic batch size (1 disables batching — the ablation
+    /// baseline served next to the batched entry in `serve_load`).
+    pub fn with_max_batch(mut self, max_batch: usize) -> Self {
+        self.max_batch = max_batch.max(1);
+        self
+    }
+
+    /// The plan for one batch bucket, compiled on first use through the
+    /// global cache (key: fingerprint of the batched graph, which covers
+    /// the bucket size via the variables' leading axis).
+    fn batched_plan(&mut self, bucket: usize) -> Arc<CompiledPlan> {
+        if bucket <= 1 {
+            return self.plan.clone();
+        }
+        if let Some(p) = self.batched.get(&bucket) {
+            return p.clone();
+        }
+        let (bg, broots) = batch_graph(&self.graph, &self.roots, bucket);
+        let plan =
+            global_plan_cache().get_or_compile_opts(&bg, &broots, OptLevel::None, self.memory);
+        self.batched.insert(bucket, plan.clone());
+        plan
     }
 }
 
@@ -71,10 +157,13 @@ enum Job {
     Shutdown,
 }
 
-/// A completed evaluation.
+/// A completed evaluation. `outputs` are [`PlanOutput`]s: for engine
+/// entries they are zero-copy views into the plan's leased run arena
+/// (the arena returns to its pool when the last view drops); call
+/// [`PlanOutput::to_tensor`] to materialise an owned copy.
 #[derive(Debug)]
 pub struct Response {
-    pub outputs: Vec<Tensor>,
+    pub outputs: Vec<PlanOutput>,
     pub latency: f64,
     /// how many requests the worker drained in the same batch
     pub batch_size: usize,
@@ -103,6 +192,9 @@ impl Coordinator {
     }
 
     /// Register an engine-backed entry (symbolic expression evaluation).
+    /// Re-registering a name replaces the entry: the old worker is shut
+    /// down and joined before this returns, so every job it had already
+    /// accepted is answered and its thread is reaped (not leaked).
     pub fn register_engine(&mut self, name: &str, entry: EngineEntry) {
         let (tx, rx) = sync_channel::<Job>(self.queue_cap);
         let metrics = self.metrics.clone();
@@ -110,8 +202,30 @@ impl Coordinator {
         let handle = std::thread::spawn(move || {
             engine_worker(ename, entry, rx, metrics);
         });
-        self.workers
-            .insert(name.to_string(), Worker { tx, handle: Some(handle) });
+        self.insert_worker(name.to_string(), Worker { tx, handle: Some(handle) });
+    }
+
+    /// Install a worker under `name`, shutting down and joining any
+    /// worker previously registered there (the duplicate-registration
+    /// leak fix: dropping the old `Worker` silently detached its
+    /// thread — handle never joined, in-flight work unobservable).
+    fn insert_worker(&mut self, name: String, worker: Worker) {
+        if let Some(old) = self.workers.insert(name, worker) {
+            Self::stop_worker(old);
+        }
+    }
+
+    /// Shut down one worker and join its thread. Mirrors the
+    /// [`Coordinator::shutdown`] contract: the try_send is a best-effort
+    /// nudge, the sender drop is the authoritative signal, and the join
+    /// happens only after the drop so a full queue cannot deadlock.
+    fn stop_worker(w: Worker) {
+        let Worker { tx, handle } = w;
+        let _ = tx.try_send(Job::Shutdown);
+        drop(tx);
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
     }
 
     /// Register every listed artifact under `dir` as a PJRT-backed
@@ -154,8 +268,7 @@ impl Coordinator {
                     }
                 }
             });
-            self.workers
-                .insert(name.clone(), Worker { tx: ftx, handle: Some(fh) });
+            self.insert_worker(name.clone(), Worker { tx: ftx, handle: Some(fh) });
         }
         // shutdown guard: dropping the last fan-in sender stops the backend
         let (gtx, grx) = sync_channel::<Job>(1);
@@ -164,8 +277,7 @@ impl Coordinator {
             drop(tx);
             let _ = backend.join();
         });
-        self.workers
-            .insert("__pjrt_backend".into(), Worker { tx: gtx, handle: Some(gh) });
+        self.insert_worker("__pjrt_backend".into(), Worker { tx: gtx, handle: Some(gh) });
         Ok(())
     }
 
@@ -235,34 +347,46 @@ impl Drop for Coordinator {
     }
 }
 
-/// Engine worker: drains the queue (micro-batching: everything already
-/// queued is processed back-to-back and reported as one batch). A
-/// `Shutdown` drained mid-batch does not abort the batch: every eval
-/// job drained alongside it is still answered before the worker exits,
-/// and `batch_size` counts eval jobs only. Channel closure (all senders
-/// dropped) is treated as shutdown too.
-fn engine_worker(name: String, entry: EngineEntry, rx: Receiver<Job>, metrics: Arc<Metrics>) {
+/// Engine worker: drains the queue and serves the drained eval jobs in
+/// micro-batches of up to `entry.max_batch` requests, each batch one
+/// batched plan execution (see the module docs). A `Shutdown` drained
+/// mid-batch does not abort the batch: every eval job drained alongside
+/// it is still answered before the worker exits, and `batch_size`
+/// counts eval jobs only. Channel closure (all senders dropped) is
+/// treated as shutdown too. A panic inside plan execution is caught,
+/// answered to every affected caller as an `Err`, counted in the error
+/// metrics — and the worker stays alive for the next request.
+fn engine_worker(name: String, mut entry: EngineEntry, rx: Receiver<Job>, metrics: Arc<Metrics>) {
     while let Ok(first) = rx.recv() {
         let mut jobs = vec![first];
         while let Ok(j) = rx.try_recv() {
             jobs.push(j);
         }
-        let batch = jobs.iter().filter(|j| matches!(j, Job::Eval { .. })).count();
         let mut shutdown = false;
+        let mut evals = Vec::new();
         for job in jobs {
             match job {
                 Job::Shutdown => shutdown = true,
-                Job::Eval { inputs, reply } => {
-                    let t0 = Instant::now();
-                    let res = run_engine(&entry, inputs).map(|outputs| Response {
-                        outputs,
-                        latency: t0.elapsed().as_secs_f64(),
-                        batch_size: batch,
-                    });
-                    metrics.completed(&name, t0.elapsed().as_secs_f64(), res.is_err());
-                    let _ = reply.send(res);
+                Job::Eval { inputs, reply } => evals.push((inputs, reply)),
+            }
+        }
+        let batch = evals.len();
+        // validate per request up front: a malformed request is answered
+        // individually and cannot poison the stacked batch
+        let mut valid = Vec::with_capacity(evals.len());
+        for (inputs, reply) in evals {
+            match validate_inputs(&entry, &inputs) {
+                Ok(()) => valid.push((inputs, reply)),
+                Err(e) => {
+                    metrics.completed(&name, 0.0, true);
+                    let _ = reply.send(Err(e));
                 }
             }
+        }
+        while !valid.is_empty() {
+            let take = valid.len().min(entry.max_batch.max(1));
+            let chunk: Vec<_> = valid.drain(..take).collect();
+            run_chunk(&name, &mut entry, chunk, batch, &metrics);
         }
         if shutdown {
             return;
@@ -270,18 +394,94 @@ fn engine_worker(name: String, entry: EngineEntry, rx: Receiver<Job>, metrics: A
     }
 }
 
-fn run_engine(entry: &EngineEntry, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+/// Run one micro-batch: a single request executes the base plan, a
+/// larger one stacks inputs into the next power-of-two bucket (padding
+/// with copies of request 0) and executes the bucket's batched plan
+/// once. Both paths return leased zero-copy outputs and run under
+/// `catch_unwind`, so a panicking plan answers its callers instead of
+/// killing the worker.
+fn run_chunk(
+    name: &str,
+    entry: &mut EngineEntry,
+    chunk: Vec<(Vec<Tensor>, SyncSender<Result<Response>>)>,
+    batch: usize,
+    metrics: &Metrics,
+) {
+    let n = chunk.len();
+    let (ins, replies): (Vec<Vec<Tensor>>, Vec<SyncSender<Result<Response>>>) =
+        chunk.into_iter().unzip();
+    let t0 = Instant::now();
+    let outcome = catch_unwind(AssertUnwindSafe(move || -> Vec<Vec<PlanOutput>> {
+        if n == 1 {
+            let mut env = Env::new();
+            let req = ins.into_iter().next().expect("chunk of one");
+            for ((vname, _), t) in entry.inputs.iter().zip(req) {
+                env.insert(vname, t);
+            }
+            return vec![entry.plan.clone().run_leased(&env)];
+        }
+        let bucket = n.next_power_of_two().min(entry.max_batch).max(n);
+        let plan = entry.batched_plan(bucket);
+        let mut env = Env::new();
+        for (k, (vname, shape)) in entry.inputs.iter().enumerate() {
+            let len: usize = shape.iter().product();
+            let mut data = Vec::with_capacity(bucket * len);
+            for req in &ins {
+                data.extend_from_slice(req[k].data());
+            }
+            for _ in n..bucket {
+                // pad slots are computed and thrown away; the batch axis
+                // is never contracted, so they cannot affect live slots
+                data.extend_from_slice(ins[0][k].data());
+            }
+            let mut bshape = vec![bucket];
+            bshape.extend_from_slice(shape);
+            env.insert(vname, Tensor::new(&bshape, data));
+        }
+        let outs = plan.run_leased(&env);
+        (0..n)
+            .map(|i| outs.iter().map(|o| o.batch_slice(i, bucket)).collect())
+            .collect()
+    }));
+    let latency = t0.elapsed().as_secs_f64();
+    match outcome {
+        Ok(per_req) => {
+            for (outputs, reply) in per_req.into_iter().zip(replies) {
+                metrics.completed(name, latency, false);
+                let _ = reply.send(Ok(Response { outputs, latency, batch_size: batch }));
+            }
+        }
+        Err(payload) => {
+            let msg = panic_message(payload.as_ref());
+            for reply in replies {
+                metrics.completed(name, latency, true);
+                let _ = reply
+                    .send(Err(anyhow!("plan execution panicked for entry {}: {}", name, msg)));
+            }
+        }
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn validate_inputs(entry: &EngineEntry, inputs: &[Tensor]) -> Result<()> {
     if inputs.len() != entry.inputs.len() {
         bail!("expected {} inputs, got {}", entry.inputs.len(), inputs.len());
     }
-    let mut env = Env::new();
     for ((name, shape), t) in entry.inputs.iter().zip(inputs) {
         if t.shape() != &shape[..] {
             bail!("input {} shape {:?}, expected {:?}", name, t.shape(), shape);
         }
-        env.insert(name, t);
     }
-    Ok(entry.plan.run(&env))
+    Ok(())
 }
 
 /// PJRT worker: owns the runtime, routes jobs by artifact name.
@@ -292,7 +492,7 @@ fn pjrt_worker(mut runtime: Runtime, rx: Receiver<(String, Job)>, metrics: Arc<M
             Job::Eval { inputs, reply } => {
                 let t0 = Instant::now();
                 let res = runtime.execute(&name, &inputs).map(|outputs| Response {
-                    outputs,
+                    outputs: outputs.into_iter().map(PlanOutput::from).collect(),
                     latency: t0.elapsed().as_secs_f64(),
                     batch_size: 1,
                 });
@@ -309,15 +509,8 @@ mod tests {
     use crate::autodiff::reverse::reverse_gradient;
     use crate::simplify::simplify_one;
 
-    fn logreg_grad_entry(m: usize, n: usize) -> EngineEntry {
-        logreg_grad_entry_mem(m, n, crate::exec::ExecMemory::default())
-    }
-
-    fn logreg_grad_entry_mem(
-        m: usize,
-        n: usize,
-        memory: crate::exec::ExecMemory,
-    ) -> EngineEntry {
+    /// The logreg value+gradient graph the serving tests revolve around.
+    fn logreg_grad_graph(m: usize, n: usize) -> (Graph, Vec<NodeId>) {
         let mut g = Graph::new();
         let x = g.var("X", &[m, n]);
         let y = g.var("y", &[m]);
@@ -332,9 +525,22 @@ mod tests {
         let loss = g.sum_all(l);
         let grad = reverse_gradient(&mut g, loss, w);
         let grad = simplify_one(&mut g, grad);
+        (g, vec![loss, grad])
+    }
+
+    fn logreg_grad_entry(m: usize, n: usize) -> EngineEntry {
+        logreg_grad_entry_mem(m, n, crate::exec::ExecMemory::default())
+    }
+
+    fn logreg_grad_entry_mem(
+        m: usize,
+        n: usize,
+        memory: crate::exec::ExecMemory,
+    ) -> EngineEntry {
+        let (g, roots) = logreg_grad_graph(m, n);
         EngineEntry::compiled_with(
             &g,
-            &[loss, grad],
+            &roots,
             vec![
                 ("X".into(), vec![m, n]),
                 ("y".into(), vec![m]),
@@ -345,14 +551,28 @@ mod tests {
         )
     }
 
+    fn logreg_inputs(m: usize, n: usize, seed: u64) -> Vec<Tensor> {
+        vec![
+            Tensor::randn(&[m, n], seed),
+            Tensor::randn(&[m], seed + 1).map(f64::signum),
+            Tensor::randn(&[n], seed + 2),
+        ]
+    }
+
+    fn logreg_env(m: usize, n: usize, seed: u64) -> Env {
+        let inputs = logreg_inputs(m, n, seed);
+        let mut env = Env::new();
+        for (name, t) in ["X", "y", "w"].into_iter().zip(inputs) {
+            env.insert(name, t);
+        }
+        env
+    }
+
     #[test]
     fn engine_entry_roundtrip() {
         let mut c = Coordinator::new(16);
         c.register_engine("logreg_grad", logreg_grad_entry(8, 3));
-        let x = Tensor::randn(&[8, 3], 1);
-        let y = Tensor::randn(&[8], 2).map(f64::signum);
-        let w = Tensor::randn(&[3], 3);
-        let resp = c.eval("logreg_grad", vec![x, y, w]).unwrap();
+        let resp = c.eval("logreg_grad", logreg_inputs(8, 3, 1)).unwrap();
         assert_eq!(resp.outputs.len(), 2);
         assert_eq!(resp.outputs[1].shape(), &[3]);
         assert!(resp.latency >= 0.0);
@@ -364,11 +584,9 @@ mod tests {
         let mut c = Coordinator::new(16);
         c.register_engine("planned", logreg_grad_entry_mem(8, 3, ExecMemory::Planned));
         c.register_engine("pooled", logreg_grad_entry_mem(8, 3, ExecMemory::Pooled));
-        let x = Tensor::randn(&[8, 3], 1);
-        let y = Tensor::randn(&[8], 2).map(f64::signum);
-        let w = Tensor::randn(&[3], 3);
-        let a = c.eval("planned", vec![x.clone(), y.clone(), w.clone()]).unwrap();
-        let b = c.eval("pooled", vec![x, y, w]).unwrap();
+        let inputs = logreg_inputs(8, 3, 1);
+        let a = c.eval("planned", inputs.clone()).unwrap();
+        let b = c.eval("pooled", inputs).unwrap();
         assert_eq!(a.outputs.len(), b.outputs.len());
         for (ta, tb) in a.outputs.iter().zip(&b.outputs) {
             assert_eq!(ta.data(), tb.data(), "entry memory modes diverged");
@@ -396,10 +614,7 @@ mod tests {
         c.register_engine("e", logreg_grad_entry(16, 4));
         let mut rxs = Vec::new();
         for i in 0..32 {
-            let x = Tensor::randn(&[16, 4], i);
-            let y = Tensor::randn(&[16], i + 100).map(f64::signum);
-            let w = Tensor::randn(&[4], i + 200);
-            rxs.push(c.submit("e", vec![x, y, w]).unwrap());
+            rxs.push(c.submit("e", logreg_inputs(16, 4, i)).unwrap());
         }
         let mut max_batch = 0;
         for rx in rxs {
@@ -416,17 +631,10 @@ mod tests {
     fn backpressure_queue_full() {
         let mut c = Coordinator::new(1);
         c.register_engine("e", logreg_grad_entry(64, 16));
-        let mk = |i| {
-            vec![
-                Tensor::randn(&[64, 16], i),
-                Tensor::randn(&[64], i + 1).map(f64::signum),
-                Tensor::randn(&[16], i + 2),
-            ]
-        };
         let mut errs = 0;
         let mut oks = Vec::new();
         for i in 0..64 {
-            match c.submit("e", mk(i)) {
+            match c.submit("e", logreg_inputs(64, 16, i)) {
                 Ok(rx) => oks.push(rx),
                 Err(_) => errs += 1,
             }
@@ -442,17 +650,10 @@ mod tests {
     fn shutdown_with_saturated_cap1_queue_terminates() {
         let mut c = Coordinator::new(1);
         c.register_engine("e", logreg_grad_entry(64, 16));
-        let mk = |i| {
-            vec![
-                Tensor::randn(&[64, 16], i),
-                Tensor::randn(&[64], i + 1).map(f64::signum),
-                Tensor::randn(&[16], i + 2),
-            ]
-        };
         // saturate the cap-1 queue so try_send(Shutdown) will fail
         let mut accepted = Vec::new();
         for i in 0..16 {
-            if let Ok(rx) = c.submit("e", mk(i)) {
+            if let Ok(rx) = c.submit("e", logreg_inputs(64, 16, i)) {
                 accepted.push(rx);
             }
         }
@@ -481,18 +682,11 @@ mod tests {
         let entry = logreg_grad_entry(8, 3);
         let metrics = Arc::new(Metrics::new());
         let (tx, rx) = sync_channel::<Job>(8);
-        let mk = |i: u64| {
-            vec![
-                Tensor::randn(&[8, 3], i),
-                Tensor::randn(&[8], i + 1).map(f64::signum),
-                Tensor::randn(&[3], i + 2),
-            ]
-        };
         let (r1tx, r1rx) = sync_channel(1);
         let (r2tx, r2rx) = sync_channel(1);
-        tx.send(Job::Eval { inputs: mk(1), reply: r1tx }).unwrap();
+        tx.send(Job::Eval { inputs: logreg_inputs(8, 3, 1), reply: r1tx }).unwrap();
         tx.send(Job::Shutdown).unwrap();
-        tx.send(Job::Eval { inputs: mk(10), reply: r2tx }).unwrap();
+        tx.send(Job::Eval { inputs: logreg_inputs(8, 3, 10), reply: r2tx }).unwrap();
         drop(tx);
         engine_worker("e".into(), entry, rx, metrics.clone());
         let a = r1rx.recv().expect("first reply dropped").unwrap();
@@ -500,6 +694,177 @@ mod tests {
         assert_eq!(a.batch_size, 2, "Shutdown must not count toward the eval batch");
         assert_eq!(b.batch_size, 2);
         assert_eq!(metrics.snapshot().completed, 2);
+    }
+
+    #[test]
+    fn mid_batch_shutdown_answers_drained_jobs_batched() {
+        // The batched-path variant: enough evals around the Shutdown to
+        // force a real multi-request bucket, every one still answered.
+        let entry = logreg_grad_entry(8, 3);
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = sync_channel::<Job>(16);
+        let mut replies = Vec::new();
+        for i in 0..2u64 {
+            let (rtx, rrx) = sync_channel(1);
+            tx.send(Job::Eval { inputs: logreg_inputs(8, 3, 20 + i), reply: rtx }).unwrap();
+            replies.push(rrx);
+        }
+        tx.send(Job::Shutdown).unwrap();
+        for i in 2..5u64 {
+            let (rtx, rrx) = sync_channel(1);
+            tx.send(Job::Eval { inputs: logreg_inputs(8, 3, 20 + i), reply: rtx }).unwrap();
+            replies.push(rrx);
+        }
+        drop(tx);
+        engine_worker("e".into(), entry, rx, metrics.clone());
+        for rrx in replies {
+            let resp = rrx.recv().expect("drained eval dropped on shutdown").unwrap();
+            assert_eq!(resp.batch_size, 5);
+        }
+        assert_eq!(metrics.snapshot().completed, 5);
+        assert_eq!(metrics.snapshot().errors, 0);
+    }
+
+    #[test]
+    fn batched_run_bit_identical_to_sequential() {
+        // Queue 5 requests before the worker starts: one drain, one
+        // batched execution (bucket 8, so padding is exercised too).
+        // Every slice must match a sequential base-plan run bitwise.
+        let entry = logreg_grad_entry(8, 3);
+        let base = entry.plan.clone();
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = sync_channel::<Job>(8);
+        let mut replies = Vec::new();
+        for i in 0..5u64 {
+            let (rtx, rrx) = sync_channel(1);
+            tx.send(Job::Eval { inputs: logreg_inputs(8, 3, i * 10), reply: rtx }).unwrap();
+            replies.push((i, rrx));
+        }
+        drop(tx);
+        engine_worker("e".into(), entry, rx, metrics.clone());
+        for (i, rrx) in replies {
+            let resp = rrx.recv().unwrap().unwrap();
+            assert_eq!(resp.batch_size, 5);
+            let want = base.run(&logreg_env(8, 3, i * 10));
+            assert_eq!(resp.outputs.len(), want.len());
+            for (o, w) in resp.outputs.iter().zip(&want) {
+                assert_eq!(o.shape(), w.shape());
+                assert_eq!(o.data(), w.data(), "batched slice diverged from sequential run");
+            }
+        }
+        assert_eq!(metrics.snapshot().completed, 5);
+        assert_eq!(metrics.snapshot().errors, 0);
+    }
+
+    #[test]
+    fn batch_ablation_is_bit_identical() {
+        // The ablation axis: a max_batch=1 entry must serve bit-identical
+        // results to the batched entry for identical inputs.
+        let mut c = Coordinator::new(64);
+        c.register_engine("on", logreg_grad_entry(8, 3));
+        c.register_engine("off", logreg_grad_entry(8, 3).with_max_batch(1));
+        let mut pairs = Vec::new();
+        for i in 0..12 {
+            pairs.push((
+                c.submit("on", logreg_inputs(8, 3, i)).unwrap(),
+                c.submit("off", logreg_inputs(8, 3, i)).unwrap(),
+            ));
+        }
+        for (a, b) in pairs {
+            let ra = a.recv().unwrap().unwrap();
+            let rb = b.recv().unwrap().unwrap();
+            assert_eq!(ra.outputs.len(), rb.outputs.len());
+            for (x, y) in ra.outputs.iter().zip(&rb.outputs) {
+                assert_eq!(x.data(), y.data(), "batching ablation diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn concurrent_mixed_entries_match_direct_plans() {
+        // Concurrent submitters across two entries with different shapes;
+        // every response must be bit-identical to a direct base-plan run.
+        let mut c = Coordinator::new(256);
+        c.register_engine("small", logreg_grad_entry(8, 3));
+        c.register_engine("big", logreg_grad_entry(16, 4));
+        let plans =
+            [logreg_grad_entry(8, 3).plan.clone(), logreg_grad_entry(16, 4).plan.clone()];
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let c = &c;
+                let plans = &plans;
+                s.spawn(move || {
+                    for i in 0..8u64 {
+                        let seed = t * 100 + i;
+                        let which = ((t + i) % 2) as usize;
+                        let (m, n) = [(8, 3), (16, 4)][which];
+                        let name = ["small", "big"][which];
+                        let resp = c.eval(name, logreg_inputs(m, n, seed)).unwrap();
+                        let want = plans[which].run(&logreg_env(m, n, seed));
+                        assert_eq!(resp.outputs.len(), want.len());
+                        for (o, w) in resp.outputs.iter().zip(&want) {
+                            assert_eq!(o.data(), w.data(), "served output diverged bitwise");
+                        }
+                    }
+                });
+            }
+        });
+        let stats = c.metrics().snapshot();
+        assert_eq!(stats.completed, 32);
+        assert_eq!(stats.errors, 0);
+    }
+
+    #[test]
+    fn panic_in_plan_is_isolated() {
+        // An entry whose declared inputs omit a graph variable: the plan
+        // panics ("unbound variable w") at run time. The worker must
+        // answer with Err, count the error, and stay alive.
+        let (g, roots) = logreg_grad_graph(8, 3);
+        let entry = EngineEntry::compiled(
+            &g,
+            &roots,
+            vec![("X".into(), vec![8, 3]), ("y".into(), vec![8])],
+        );
+        let mut c = Coordinator::new(8);
+        c.register_engine("boom", entry);
+        c.register_engine("ok", logreg_grad_entry(8, 3));
+        let bad = vec![Tensor::randn(&[8, 3], 1), Tensor::randn(&[8], 2).map(f64::signum)];
+        let r1 = c.eval("boom", bad.clone());
+        assert!(r1.is_err(), "panicking plan must answer with Err");
+        let r2 = c.eval("boom", bad);
+        assert!(r2.is_err(), "worker must survive the panic and keep answering");
+        // healthy entries in the same coordinator are unaffected
+        let ok = c.eval("ok", logreg_inputs(8, 3, 5)).unwrap();
+        assert_eq!(ok.outputs.len(), 2);
+        let stats = c.metrics().snapshot();
+        assert_eq!(stats.completed, 3);
+        assert_eq!(stats.errors, 2);
+        c.shutdown();
+    }
+
+    #[test]
+    fn re_registration_joins_replaced_worker() {
+        let mut c = Coordinator::new(64);
+        c.register_engine("e", logreg_grad_entry(64, 16));
+        let mut rxs = Vec::new();
+        for i in 0..8 {
+            rxs.push(c.submit("e", logreg_inputs(64, 16, i)).unwrap());
+        }
+        // replacing the entry must shut down and *join* the old worker:
+        // by the time register_engine returns, every job it accepted has
+        // been answered (pre-fix the old thread was silently detached)
+        c.register_engine("e", logreg_grad_entry(8, 3));
+        for rx in rxs {
+            let resp = rx
+                .try_recv()
+                .expect("replaced worker must answer accepted jobs before registration returns");
+            assert!(resp.is_ok());
+        }
+        // the new worker serves the new signature, and shutdown after
+        // re-registration stays clean
+        let resp = c.eval("e", logreg_inputs(8, 3, 99)).unwrap();
+        assert_eq!(resp.outputs.len(), 2);
+        c.shutdown();
     }
 
     #[test]

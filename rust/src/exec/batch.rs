@@ -1,0 +1,218 @@
+//! Batched-variant graph rewrite for the serving layer.
+//!
+//! In Einstein notation a batch axis is just one more free index on
+//! every operand: to evaluate one expression DAG for `B` independent
+//! requests at once, prepend a size-`B` axis to every variable and
+//! thread a fresh label through every `Mul` spec on a batched path —
+//! the label is kept by the output and never summed, so slot `b` of the
+//! batched result is computed from exactly the same operand values, by
+//! exactly the same sequence of floating-point operations, as request
+//! `b` evaluated alone. That makes the rewrite *bit-identical* per
+//! slice, which is what lets the coordinator pin its batched serving
+//! path against N sequential runs (`tests/serve_batch.rs`).
+//!
+//! Nodes that do not depend on any variable (constants, deltas, and
+//! anything computed from them alone) stay unbatched and are computed
+//! once for the whole batch. They re-acquire the batch axis only where
+//! a batched path needs them:
+//!
+//! * an `Add` with one batched operand broadcast-lifts the other,
+//! * every root is lifted so all outputs carry the leading axis.
+//!
+//! The lift of a constant materialises a bigger constant (same value in
+//! every slot — trivially bit-identical); the lift of a computed node
+//! is an outer product with a ones vector, and `1.0 * v` is bitwise `v`.
+
+use crate::einsum::{EinSpec, Label};
+use crate::ir::{Graph, NodeId, Op};
+use std::collections::HashMap;
+
+/// Rewrite the sub-DAG of `g` reachable from `roots` into a batched
+/// variant: every variable gains a leading axis of size `bsz` and every
+/// root returns with that axis prepended to its shape. Returns the new
+/// graph and the mapped roots (in the same order as `roots`).
+///
+/// The rewrite is structure-preserving — node for node, with the same
+/// operand order and the same einsum contraction structure — so a plan
+/// compiled from the result at [`crate::opt::OptLevel::None`] executes
+/// each batch slice bit-identically to the unbatched plan.
+pub fn batch_graph(g: &Graph, roots: &[NodeId], bsz: usize) -> (Graph, Vec<NodeId>) {
+    assert!(bsz >= 1, "batch size must be at least 1");
+    let mut out = Graph::new();
+    // old id → (new id, does it carry the batch axis?)
+    let mut map: HashMap<NodeId, (NodeId, bool)> = HashMap::new();
+    for id in g.topo(roots) {
+        let mapped = match g.op(id) {
+            Op::Var(name) => {
+                let mut shape = vec![bsz];
+                shape.extend_from_slice(g.shape(id));
+                (out.var(name, &shape), true)
+            }
+            Op::Const(bits) => (out.constant(f64::from_bits(*bits), g.shape(id)), false),
+            Op::Delta { dims } => (out.delta(dims), false),
+            Op::Add(a, b) => {
+                let (mut na, ba) = map[a];
+                let (mut nb, bb) = map[b];
+                let batched = ba || bb;
+                // Add demands identical shapes: broadcast-lift the
+                // unbatched side of a mixed pair
+                if batched && !ba {
+                    na = lift(&mut out, na, bsz);
+                }
+                if batched && !bb {
+                    nb = lift(&mut out, nb, bsz);
+                }
+                (out.add(na, nb), batched)
+            }
+            Op::Mul(a, b, spec) => {
+                let (na, ba) = map[a];
+                let (nb, bb) = map[b];
+                if !ba && !bb {
+                    (out.mul(na, nb, spec.clone()), false)
+                } else {
+                    // thread a fresh batch label through the spec: kept
+                    // on every batched operand and on the output, never
+                    // summed — each slice contracts exactly as before
+                    let l: Label = spec.max_label() + 1;
+                    let mut s1 = spec.s1.clone();
+                    let mut s2 = spec.s2.clone();
+                    let mut s3 = spec.s3.clone();
+                    if ba {
+                        s1.insert(0, l);
+                    }
+                    if bb {
+                        s2.insert(0, l);
+                    }
+                    s3.insert(0, l);
+                    (out.mul(na, nb, EinSpec::new(s1, s2, s3)), true)
+                }
+            }
+            Op::Elem(f, a) => {
+                let (na, ba) = map[a];
+                (out.elem(*f, na), ba)
+            }
+            Op::GenUnary(f, a) => {
+                // general unary functions act on the trailing axis, so a
+                // leading batch axis just multiplies the row count
+                let (na, ba) = map[a];
+                (out.gen_unary(*f, na), ba)
+            }
+        };
+        map.insert(id, mapped);
+    }
+    let broots = roots
+        .iter()
+        .map(|r| {
+            let (nid, batched) = map[r];
+            if batched {
+                nid
+            } else {
+                lift(&mut out, nid, bsz)
+            }
+        })
+        .collect();
+    (out, broots)
+}
+
+/// Broadcast an unbatched node along a new leading axis of size `bsz`.
+/// A constant stays a constant (the bigger fill holds the same value);
+/// anything else becomes `ones[B] ⊗ v`, bit-identical per element since
+/// `1.0 * v == v` in IEEE arithmetic.
+fn lift(out: &mut Graph, n: NodeId, bsz: usize) -> NodeId {
+    if let Some(v) = out.const_value(n) {
+        let mut shape = vec![bsz];
+        shape.extend_from_slice(out.shape(n));
+        return out.constant(v, &shape);
+    }
+    let ones = out.constant(1.0, &[bsz]);
+    let rank = out.order(n) as Label;
+    let s2: Vec<Label> = (1..=rank).collect();
+    let mut s3: Vec<Label> = vec![0];
+    s3.extend_from_slice(&s2);
+    out.mul(ones, n, EinSpec::new(vec![0], s2, s3))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::{eval_many_with, Env};
+    use crate::ir::Elem;
+    use crate::opt::OptLevel;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn batched_shapes_gain_leading_axis() {
+        let mut g = Graph::new();
+        let x = g.var("X", &[4, 3]);
+        let w = g.var("w", &[3]);
+        let xw = g.mul(x, w, EinSpec::parse("ij,j->i"));
+        let e = g.elem(Elem::Exp, xw);
+        let (bg, broots) = batch_graph(&g, &[e], 5);
+        assert_eq!(bg.shape(broots[0]), &[5, 4]);
+        assert_eq!(bg.shape(bg.var_id("X").unwrap()), &[5, 4, 3]);
+    }
+
+    #[test]
+    fn unbatched_const_root_is_lifted() {
+        let mut g = Graph::new();
+        let _x = g.var("x", &[2]);
+        let c = g.constant(3.0, &[2]);
+        let (bg, broots) = batch_graph(&g, &[c], 4);
+        assert_eq!(bg.shape(broots[0]), &[4, 2]);
+        let mut env = Env::new();
+        env.insert("x", Tensor::zeros(&[2]));
+        let out = eval_many_with(&bg, &broots, &env, OptLevel::None);
+        assert!(out[0].data().iter().all(|&v| v == 3.0));
+    }
+
+    #[test]
+    fn batched_slices_match_per_request_eval_bitwise() {
+        // mixed Add (batched + const), contraction, elementwise chain
+        let mut g = Graph::new();
+        let x = g.var("X", &[3, 2]);
+        let w = g.var("w", &[2]);
+        let xw = g.mul(x, w, EinSpec::parse("ij,j->i"));
+        let e = g.elem(Elem::Exp, xw);
+        let one = g.constant(1.0, &[3]);
+        let s = g.add(e, one);
+        let l = g.elem(Elem::Log, s);
+        let bsz = 3;
+        let (bg, broots) = batch_graph(&g, &[l, xw], bsz);
+
+        let mut xs = Vec::new();
+        let mut ws = Vec::new();
+        for b in 0..bsz {
+            xs.push(Tensor::randn(&[3, 2], 7 + b as u64));
+            ws.push(Tensor::randn(&[2], 70 + b as u64));
+        }
+        let stack = |ts: &[Tensor], shape: &[usize]| {
+            let mut data = Vec::new();
+            for t in ts {
+                data.extend_from_slice(t.data());
+            }
+            let mut bshape = vec![ts.len()];
+            bshape.extend_from_slice(shape);
+            Tensor::new(&bshape, data)
+        };
+        let mut benv = Env::new();
+        benv.insert("X", stack(&xs, &[3, 2]));
+        benv.insert("w", stack(&ws, &[2]));
+        let batched = eval_many_with(&bg, &broots, &benv, OptLevel::None);
+        for b in 0..bsz {
+            let mut env = Env::new();
+            env.insert("X", xs[b].clone());
+            env.insert("w", ws[b].clone());
+            let seq = eval_many_with(&g, &[l, xw], &env, OptLevel::None);
+            for (r, s) in seq.iter().enumerate() {
+                let len = s.len();
+                assert_eq!(
+                    &batched[r].data()[b * len..(b + 1) * len],
+                    s.data(),
+                    "slice {} of root {} diverged",
+                    b,
+                    r
+                );
+            }
+        }
+    }
+}

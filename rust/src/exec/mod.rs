@@ -121,7 +121,10 @@
 //! of run arenas (or, under the pooled ablation mode, one warm buffer
 //! pool).
 
+mod batch;
 mod memplan;
+
+pub use batch::batch_graph;
 
 use crate::einsum::{EinScratch, EinSpec, EinsumPlan, EpiFn, Label, NoEpilogue};
 use crate::eval::Env;
@@ -679,6 +682,146 @@ thread_local! {
     static IDX_SCRATCH: RefCell<Vec<usize>> = const { RefCell::new(Vec::new()) };
 }
 
+/// A checked-out run state kept alive past the end of its run so root
+/// outputs can be served as views straight out of the arena — the
+/// zero-copy response path. Dropping the last reference returns the
+/// state (arena and all) to the plan's warm pool.
+pub struct RunLease {
+    /// `Some` until `Drop` takes it back to `plan.run_states`
+    state: Option<RunState>,
+    plan: Arc<CompiledPlan>,
+}
+
+// SAFETY: the lease only ever *reads* the arena `Vec<f64>` (through
+// `PlanOutput::data`), and only after the run that wrote it completed on
+// the leasing thread. The contained `SrcTable` pointers are inert while
+// leased — they are rewritten at the start of the next run and never
+// dereferenced through the lease.
+unsafe impl Send for RunLease {}
+unsafe impl Sync for RunLease {}
+
+impl Drop for RunLease {
+    fn drop(&mut self) {
+        if let Some(st) = self.state.take() {
+            self.plan.run_states.lock().unwrap().push(st);
+        }
+    }
+}
+
+impl RunLease {
+    fn arena(&self) -> &[f64] {
+        &self.state.as_ref().expect("lease taken before drop").arena
+    }
+}
+
+/// A root output of [`CompiledPlan::run_leased`]: either an owned
+/// [`Tensor`] or a zero-copy view into a leased run arena. Views borrow
+/// nothing from the caller — the `Arc`-owned lease keeps the arena alive
+/// — so a `PlanOutput` can cross threads and outlive the `Env` it was
+/// computed from. Cloning a view clones the `Arc`, not the data.
+#[derive(Clone)]
+pub struct PlanOutput {
+    shape: Vec<usize>,
+    repr: OutRepr,
+}
+
+#[derive(Clone)]
+enum OutRepr {
+    Owned(Tensor),
+    View { lease: Arc<RunLease>, off: usize, len: usize },
+}
+
+impl PlanOutput {
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// The value, row-major — a borrow of the leased arena for views.
+    pub fn data(&self) -> &[f64] {
+        match &self.repr {
+            OutRepr::Owned(t) => t.data(),
+            OutRepr::View { lease, off, len } => &lease.arena()[*off..*off + *len],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Scalar value; panics unless the output holds exactly one element.
+    pub fn item(&self) -> f64 {
+        let d = self.data();
+        assert_eq!(d.len(), 1, "item() on non-scalar output");
+        d[0]
+    }
+
+    /// Materialise an owned [`Tensor`] (copies a view's slice; this is
+    /// the moment a zero-copy response pays for its bytes).
+    pub fn to_tensor(&self) -> Tensor {
+        Tensor::new(&self.shape, self.data().to_vec())
+    }
+
+    /// Element-wise `|a - b| <= atol + rtol * |b|` against a tensor,
+    /// shapes included — mirrors [`Tensor::allclose`].
+    pub fn allclose(&self, other: &Tensor, rtol: f64, atol: f64) -> bool {
+        self.shape() == other.shape()
+            && self
+                .data()
+                .iter()
+                .zip(other.data())
+                .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+
+    /// View of slice `i` of a leading-axis-batched output: the first
+    /// axis (which must have size `bucket`) is dropped and the data
+    /// narrows to that slice. For a view this is pointer arithmetic on
+    /// the shared lease; for an owned tensor it copies the slice.
+    pub fn batch_slice(&self, i: usize, bucket: usize) -> PlanOutput {
+        assert!(
+            self.shape.first() == Some(&bucket) && i < bucket,
+            "batch_slice({}, {}) on output of shape {:?}",
+            i,
+            bucket,
+            self.shape
+        );
+        let inner: Vec<usize> = self.shape[1..].to_vec();
+        let len: usize = inner.iter().product();
+        let repr = match &self.repr {
+            OutRepr::Owned(t) => OutRepr::Owned(Tensor::new(
+                &inner,
+                t.data()[i * len..(i + 1) * len].to_vec(),
+            )),
+            OutRepr::View { lease, off, .. } => {
+                OutRepr::View { lease: lease.clone(), off: off + i * len, len }
+            }
+        };
+        PlanOutput { shape: inner, repr }
+    }
+}
+
+impl From<Tensor> for PlanOutput {
+    fn from(t: Tensor) -> Self {
+        PlanOutput { shape: t.shape().to_vec(), repr: OutRepr::Owned(t) }
+    }
+}
+
+impl fmt::Debug for PlanOutput {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let kind = match &self.repr {
+            OutRepr::Owned(_) => "owned",
+            OutRepr::View { .. } => "leased",
+        };
+        f.debug_struct("PlanOutput")
+            .field("shape", &self.shape)
+            .field("kind", &kind)
+            .finish()
+    }
+}
+
 /// An expression DAG compiled for repeated execution: dense instruction
 /// stream in topological order (element-wise chains fused), per-level
 /// scheduling on the persistent worker pool, buffer lifetimes compiled
@@ -1175,6 +1318,83 @@ impl CompiledPlan {
     /// allocation after the arena's first growth, no pool mutex, no
     /// thread spawn (parallel levels run on the persistent worker pool).
     fn run_planned(&self, env: &Env) -> Vec<Tensor> {
+        let st = self.exec_planned_state(env);
+        // materialise the roots (the only per-run allocations: the
+        // caller owns the returned tensors)
+        let mut out = Vec::with_capacity(self.root_pos.len());
+        for &p in &self.root_pos {
+            let (ptr, len) = st.srcs.0[p];
+            // SAFETY: the pointee — env tensor, plan static, or st's own
+            // arena — is still live here (env outlives the call, st is
+            // owned by this frame).
+            let data = unsafe { std::slice::from_raw_parts(ptr, len) }.to_vec();
+            out.push(Tensor::new(&self.shapes[p], data));
+        }
+        self.run_states.lock().unwrap().push(st);
+        out
+    }
+
+    /// Execute the plan against `env` and return the roots as
+    /// [`PlanOutput`]s: arena-backed zero-copy views under an `Arc`-owned
+    /// [`RunLease`] instead of `Tensor` clones — the serving hot path.
+    /// The leased run state (arena included) returns to the plan's warm
+    /// pool when the last output referencing it drops, so long-held
+    /// responses hold their arena with them.
+    ///
+    /// Roots whose bytes live outside the arena (a root that *is* a
+    /// variable or a compiled-in constant) are deep-copied, since the env
+    /// they borrow from dies with the call. Pooled-mode plans have no
+    /// arena and fall back to owned outputs wholesale.
+    ///
+    /// Takes the `Arc` by value (clone it to keep a handle — an `Arc`
+    /// clone, not a plan copy): the lease must own the plan to return
+    /// the run state on drop.
+    pub fn run_leased(self: Arc<Self>, env: &Env) -> Vec<PlanOutput> {
+        if self.memory == ExecMemory::Pooled {
+            return self.run_pooled(env).into_iter().map(PlanOutput::from).collect();
+        }
+        let mp = self.memplan.as_ref().expect("planned plan carries a memory plan");
+        let st = self.exec_planned_state(env);
+        enum Pending {
+            Owned(Tensor),
+            Slot { off: usize, len: usize },
+        }
+        let mut pend = Vec::with_capacity(self.root_pos.len());
+        for &p in &self.root_pos {
+            match &self.instrs[p] {
+                Instr::Var { .. } | Instr::Static(_) => {
+                    let (ptr, len) = st.srcs.0[p];
+                    // SAFETY: env and statics are live within this call.
+                    let data = unsafe { std::slice::from_raw_parts(ptr, len) }.to_vec();
+                    pend.push(Pending::Owned(Tensor::new(&self.shapes[p], data)));
+                }
+                _ => {
+                    let slot = mp.out[p].expect("planned instruction output");
+                    pend.push(Pending::Slot { off: slot.off, len: slot.len });
+                }
+            }
+        }
+        // moving `st` into the lease moves the Vec header, not the heap
+        // buffer, so the slot offsets recorded above stay valid
+        let plan = self;
+        let lease = Arc::new(RunLease { state: Some(st), plan: plan.clone() });
+        pend.into_iter()
+            .zip(&plan.root_pos)
+            .map(|(pd, &p)| match pd {
+                Pending::Owned(t) => PlanOutput::from(t),
+                Pending::Slot { off, len } => PlanOutput {
+                    shape: plan.shapes[p].clone(),
+                    repr: OutRepr::View { lease: lease.clone(), off, len },
+                },
+            })
+            .collect()
+    }
+
+    /// The shared body of [`run_planned`](Self::run_planned) and
+    /// [`run_leased`](Self::run_leased): check out a run state, resolve
+    /// every instruction's value source, execute all levels, and hand the
+    /// state (holding the results in its arena) back to the caller.
+    fn exec_planned_state(&self, env: &Env) -> RunState {
         let mp = self.memplan.as_ref().expect("planned plan carries a memory plan");
         let mut st = self.run_states.lock().unwrap().pop().unwrap_or_default();
         if st.arena.len() < mp.arena_len {
@@ -1236,17 +1456,8 @@ impl CompiledPlan {
                 }
             }
         }
-
-        // materialise the roots (the only per-run allocations: the
-        // caller owns the returned tensors)
-        let mut out = Vec::with_capacity(self.root_pos.len());
-        for &p in &self.root_pos {
-            let data = src_slice(&ex, p).to_vec();
-            out.push(Tensor::new(&self.shapes[p], data));
-        }
         drop(ex);
-        self.run_states.lock().unwrap().push(st);
-        out
+        st
     }
 
     /// Pooled-memory execution (the PR 1 ablation baseline): buffers
@@ -1831,6 +2042,70 @@ mod tests {
         let a = compiled.run(&env);
         let b = interp.run(&g, &env);
         assert!(a[0].allclose(&b[0], 1e-12, 1e-14), "diff {}", a[0].max_abs_diff(&b[0]));
+    }
+
+    #[test]
+    fn leased_run_matches_owned_and_recycles_state() {
+        let (g, y, env) = expr1();
+        let plan = Arc::new(CompiledPlan::new(&g, &[y]));
+        let owned = plan.run(&env);
+        let leased = plan.clone().run_leased(&env);
+        assert_eq!(leased.len(), owned.len());
+        for (l, o) in leased.iter().zip(&owned) {
+            assert_eq!(l.shape(), o.shape());
+            assert_eq!(l.data(), o.data(), "leased view diverged from owned run");
+        }
+        drop(leased);
+        // a dropped lease returns its run state: later runs must not
+        // grow fresh arenas
+        let a0 = plan.pool_stats().arena_allocs;
+        for _ in 0..4 {
+            drop(plan.clone().run_leased(&env));
+        }
+        assert_eq!(
+            plan.pool_stats().arena_allocs,
+            a0,
+            "dropped leases must recycle their run state"
+        );
+    }
+
+    #[test]
+    fn leased_var_root_outlives_env() {
+        // a root that *is* a variable borrows the env — the lease path
+        // must deep-copy it so the output survives the env
+        let mut g = Graph::new();
+        let x = g.var("x", &[4]);
+        let e = g.elem(Elem::Exp, x);
+        let plan = Arc::new(CompiledPlan::new(&g, &[x, e]));
+        let xt = Tensor::randn(&[4], 9);
+        let out = {
+            let mut env = Env::new();
+            env.insert("x", xt.clone());
+            plan.clone().run_leased(&env)
+        };
+        assert_eq!(out[0].data(), xt.data());
+        assert_eq!(out[1].shape(), &[4]);
+    }
+
+    #[test]
+    fn batch_slices_of_leased_outputs_share_one_lease() {
+        let (g, y, _) = expr1();
+        let (bg, broots) = batch_graph(&g, &[y], 2);
+        let plan = global_plan_cache().get_or_compile_opts(
+            &bg,
+            &broots,
+            OptLevel::None,
+            ExecMemory::Planned,
+        );
+        let mut env = Env::new();
+        env.insert("X", Tensor::randn(&[2, 4, 3], 1));
+        env.insert("w", Tensor::randn(&[2, 3], 2));
+        let out = plan.run_leased(&env);
+        let full = out[0].to_tensor();
+        let (a, b) = (out[0].batch_slice(0, 2), out[0].batch_slice(1, 2));
+        drop(out); // slices alone must keep the lease alive
+        assert_eq!(a.data(), &full.data()[..3]);
+        assert_eq!(b.data(), &full.data()[3..]);
     }
 
     #[test]

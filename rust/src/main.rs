@@ -7,7 +7,8 @@
 //! tensorcalc derive <problem> [--n N] [--mode reverse|cc|compressed] [--dot]
 //! tensorcalc bench fig2|fig3|newton [--sizes a,b,c] [--secs S] [--full]
 //! tensorcalc artifacts [--dir D]            list + smoke-run AOT artifacts
-//! tensorcalc serve [--requests N]           coordinator demo with metrics
+//! tensorcalc serve [--requests N] [--batch B]  coordinator demo with metrics
+//!                                           (B = max dynamic batch, 1 = off)
 //! ```
 
 use tensorcalc::coordinator::{Coordinator, EngineEntry};
@@ -83,7 +84,7 @@ fn run() -> Result<()> {
                  usage:\n  tensorcalc demo\n  tensorcalc derive <logreg|matfac|mlp> \
                  [--n N] [--mode reverse|cc|compressed] [--dot]\n  tensorcalc bench \
                  <fig2|fig3|newton> [--sizes a,b,c] [--secs S] [--full]\n  tensorcalc \
-                 artifacts [--dir D]\n  tensorcalc serve [--requests N]"
+                 artifacts [--dir D]\n  tensorcalc serve [--requests N] [--batch B]"
             );
             Ok(())
         }
@@ -251,6 +252,10 @@ fn artifacts(args: &Args) -> Result<()> {
 /// artifacts (PJRT), fire a synthetic request load, report metrics.
 fn serve(args: &Args) -> Result<()> {
     let requests: usize = args.get("requests").map(|v| v.parse().unwrap()).unwrap_or(200);
+    let batch: usize = args
+        .get("batch")
+        .map(|v| v.parse().unwrap())
+        .unwrap_or(tensorcalc::coordinator::DEFAULT_MAX_BATCH);
     let (m, n) = (256usize, 128usize);
     let mut c = Coordinator::new(1024);
 
@@ -269,7 +274,8 @@ fn serve(args: &Args) -> Result<()> {
                     ("y".into(), vec![m]),
                     ("w".into(), vec![n]),
                 ],
-            ),
+            )
+            .with_max_batch(batch),
         );
     }
     // PJRT-backed entries
@@ -279,7 +285,7 @@ fn serve(args: &Args) -> Result<()> {
         println!("(no artifacts — PJRT entries skipped)");
     }
 
-    println!("entries: {:?}", c.entries());
+    println!("entries: {:?} (engine max batch {})", c.entries(), batch);
     let x = Tensor::randn(&[m, n], 1);
     let y = Tensor::randn(&[m], 2).map(f64::signum);
     let wv = Tensor::randn(&[n], 3).scale(0.1);

@@ -1,0 +1,194 @@
+//! Differential pins for the serving layer's dynamic request batching:
+//! the batched plan variant ([`tensorcalc::exec::batch_graph`] compiled
+//! at `OptLevel::None`) must be **bit-identical** per batch slice to N
+//! sequential runs of the base plan, and both must agree with the
+//! interpreter oracle ([`tensorcalc::eval::Plan`]) on the *original*
+//! (pre-optimizer) graph. Pinned across three workloads — the logistic
+//! regression gradient, a neural-net Hessian, and a permuted-
+//! contraction chain — at several batch sizes including the `bsz = 1`
+//! ablation baseline.
+
+use tensorcalc::coordinator::{Coordinator, EngineEntry};
+use tensorcalc::einsum::EinSpec;
+use tensorcalc::eval::{Env, Plan};
+use tensorcalc::exec::{batch_graph, global_plan_cache, ExecMemory};
+use tensorcalc::ir::{Elem, Graph, NodeId};
+use tensorcalc::opt::{compact, optimize, OptLevel};
+use tensorcalc::problems::{logistic_regression, neural_net};
+use tensorcalc::tensor::Tensor;
+
+/// Stack per-request tensors along a new leading axis (what the
+/// coordinator worker does when it fuses a drained batch).
+fn stack(ts: &[Tensor]) -> Tensor {
+    let mut bshape = vec![ts.len()];
+    bshape.extend_from_slice(ts[0].shape());
+    let mut data = Vec::with_capacity(ts.len() * ts[0].len());
+    for t in ts {
+        data.extend_from_slice(t.data());
+    }
+    Tensor::new(&bshape, data)
+}
+
+/// The pin: canonicalise `g` exactly as `EngineEntry::compiled` does
+/// (optimize + compact, then freeze at `OptLevel::None`), derive the
+/// batched variant per bucket, and check every batch slice bitwise
+/// against the sequential base plan and allclose against the
+/// interpreter oracle on the original graph.
+fn pin_batched_against_sequential(g: &Graph, roots: &[NodeId], seed0: u64, bszs: &[usize]) {
+    let mut g2 = g.clone();
+    let o = optimize(&mut g2, roots, OptLevel::Full);
+    let (gc, croots) = compact(&g2, &o.roots);
+    let base =
+        global_plan_cache().get_or_compile_opts(&gc, &croots, OptLevel::None, ExecMemory::Planned);
+    let interp = Plan::new(g, roots);
+
+    let vars: Vec<(String, Vec<usize>)> = g
+        .var_names()
+        .into_iter()
+        .map(|n| {
+            let id = g.var_id(&n).unwrap();
+            (n, g.shape(id).to_vec())
+        })
+        .collect();
+
+    for &bsz in bszs {
+        let (bg, broots) = batch_graph(&gc, &croots, bsz);
+        let bplan = global_plan_cache().get_or_compile_opts(
+            &bg,
+            &broots,
+            OptLevel::None,
+            ExecMemory::Planned,
+        );
+
+        let mut envs = Vec::new();
+        for b in 0..bsz {
+            let mut env = Env::new();
+            for (i, (name, shape)) in vars.iter().enumerate() {
+                let seed = seed0 + (b * vars.len() + i) as u64;
+                env.insert(name, Tensor::randn(shape, seed).scale(0.5));
+            }
+            envs.push(env);
+        }
+        let mut benv = Env::new();
+        for (name, _) in &vars {
+            let ts: Vec<Tensor> =
+                envs.iter().map(|e| e.get(name).unwrap().clone()).collect();
+            benv.insert(name, stack(&ts));
+        }
+
+        let batched = bplan.run(&benv);
+        for (b, env) in envs.iter().enumerate() {
+            let seq = base.run(env);
+            let oracle = interp.run(g, env);
+            for (r, s) in seq.iter().enumerate() {
+                let len = s.len();
+                let slice = &batched[r].data()[b * len..(b + 1) * len];
+                assert_eq!(
+                    slice,
+                    s.data(),
+                    "bsz {}: slice {} of root {} not bit-identical to sequential run",
+                    bsz,
+                    b,
+                    r
+                );
+                let st = Tensor::new(s.shape(), slice.to_vec());
+                assert!(
+                    st.allclose(&oracle[r], 1e-6, 1e-8),
+                    "bsz {}: slice {} of root {} diverged from interpreter oracle, diff {}",
+                    bsz,
+                    b,
+                    r,
+                    st.max_abs_diff(&oracle[r])
+                );
+            }
+        }
+    }
+}
+
+/// Workload 1: logistic-regression loss + reverse gradient.
+#[test]
+fn logreg_gradient_batched_is_bit_identical() {
+    let mut wl = logistic_regression(8, 4);
+    let grad = wl.gradient();
+    let roots = [wl.loss, grad];
+    pin_batched_against_sequential(&wl.g, &roots, 100, &[1, 3, 4, 8]);
+}
+
+/// Workload 2: neural-net loss + reverse-over-reverse Hessian — deep
+/// elementwise chains (ReLU, LogSumExp pullbacks) and many shared
+/// subterms, the stress case for batchedness propagation through `Add`
+/// with unbatched (delta/constant) operands.
+#[test]
+fn neural_net_hessian_batched_is_bit_identical() {
+    let mut wl = neural_net(4, 2, 5);
+    let h = wl.hessian();
+    let roots = [wl.loss, h];
+    pin_batched_against_sequential(&wl.g, &roots, 500, &[1, 3]);
+}
+
+/// Workload 3: permuted contractions — output axes reordered relative
+/// to the operands ("ij,jk->ki" then "ki,ij->kj"), so the batch label
+/// is threaded through specs whose outputs are not in operand order.
+#[test]
+fn permuted_contraction_batched_is_bit_identical() {
+    let mut g = Graph::new();
+    let a = g.var("A", &[4, 5]);
+    let b = g.var("B", &[5, 3]);
+    let c = g.mul(a, b, EinSpec::parse("ij,jk->ki"));
+    let d = g.mul(c, a, EinSpec::parse("ki,ij->kj"));
+    let e = g.elem(Elem::Exp, c);
+    let one = g.constant(1.0, &[3, 5]);
+    let s = g.add(d, one);
+    pin_batched_against_sequential(&g, &[s, e], 900, &[1, 2, 5]);
+}
+
+/// End to end: the coordinator's batched serving path (drain → stack →
+/// batched plan → split) answers every request with values that match
+/// the interpreter oracle on the original graph.
+#[test]
+fn coordinator_batched_serving_matches_interpreter_oracle() {
+    let mut wl = logistic_regression(6, 3);
+    let grad = wl.gradient();
+    let roots = vec![wl.loss, grad];
+    let interp = Plan::new(&wl.g, &roots);
+
+    let mut c = Coordinator::new(64);
+    c.register_engine(
+        "grad",
+        EngineEntry::compiled(
+            &wl.g,
+            &roots,
+            vec![
+                ("X".into(), vec![6, 3]),
+                ("y".into(), vec![6]),
+                ("w".into(), vec![3]),
+            ],
+        ),
+    );
+
+    let mut pending = Vec::new();
+    for s in 0..10u64 {
+        let x = Tensor::randn(&[6, 3], 900 + s);
+        let y = Tensor::randn(&[6], 950 + s).map(f64::signum);
+        let wv = Tensor::randn(&[3], 990 + s);
+        let rx = c.submit("grad", vec![x.clone(), y.clone(), wv.clone()]).unwrap();
+        pending.push((x, y, wv, rx));
+    }
+    for (x, y, wv, rx) in pending {
+        let resp = rx.recv().unwrap().unwrap();
+        assert!(resp.batch_size >= 1);
+        let mut env = Env::new();
+        env.insert("X", x);
+        env.insert("y", y);
+        env.insert("w", wv);
+        let want = interp.run(&wl.g, &env);
+        for (r, w_) in want.iter().enumerate() {
+            assert!(
+                resp.outputs[r].allclose(w_, 1e-8, 1e-10),
+                "root {} diverged from oracle",
+                r
+            );
+        }
+    }
+    c.shutdown();
+}

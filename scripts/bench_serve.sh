@@ -1,0 +1,17 @@
+#!/usr/bin/env sh
+# Record the serving-layer load profile: run the serve_load open-loop
+# bench (dynamic batching on vs the max_batch=1 ablation, at several
+# offered rates) and write every row to BENCH_serve.json at the
+# repository root, next to the exec-layer BENCH_exec.json.
+#
+# Usage:   scripts/bench_serve.sh
+# Env:     BENCH_JSON  — override the output path (default BENCH_serve.json)
+#          BENCH_SECS  — seconds per (rate, batch-cap) cell
+#                        (default 0.3; CI's bench-smoke job uses 0.05 to
+#                        keep the run short while still writing real rows)
+set -eu
+root=$(cd "$(dirname "$0")/.." && pwd)
+out="${BENCH_JSON:-$root/BENCH_serve.json}"
+cd "$root/rust"
+BENCH_JSON="$out" BENCH_SECS="${BENCH_SECS:-0.3}" cargo bench --bench serve_load
+echo "serve-load profile recorded at $out"
