@@ -17,7 +17,10 @@
 //!   output sweep) vs `EpilogueMode::TwoPass` vs the unfused executor,
 //! * **memory** — `ExecMemory::Planned` (buffer lifetimes compiled to
 //!   arena offsets, persistent workers, no per-instruction lock) vs
-//!   `ExecMemory::Pooled` (the PR 1 mutex-guarded buffer pool).
+//!   `ExecMemory::Pooled` (the PR 1 mutex-guarded buffer pool),
+//! * **backend** — `BackendKind::Cpu` (the work-stealing level-parallel
+//!   executor) vs `BackendKind::Direct` (the direct-threaded closure
+//!   chain) over the same lowered streams.
 //!
 //! Run: `cargo bench --bench ablation_modes`
 //!
@@ -29,7 +32,7 @@
 use tensorcalc::autodiff::cross_country::optimize_contractions;
 use tensorcalc::einsum::{gemm_into, gemm_into_flat};
 use tensorcalc::eval::Env;
-use tensorcalc::exec::{CompiledPlan, EpilogueMode, ExecMemory};
+use tensorcalc::exec::{BackendKind, CompiledPlan, EpilogueMode, ExecMemory};
 use tensorcalc::figures::{maybe_write_bench_json, newton, print_table, Row};
 use tensorcalc::ir::{Elem, Graph};
 use tensorcalc::opt::{optimize, OptLevel};
@@ -150,8 +153,14 @@ fn main() {
             ("two-pass epilogue", true, EpilogueMode::TwoPass),
             ("unfused", false, EpilogueMode::InTile),
         ] {
-            let plan =
-                CompiledPlan::with_options(&g, &[y], fuse, mode, ExecMemory::default());
+            let plan = CompiledPlan::with_options(
+                &g,
+                &[y],
+                fuse,
+                mode,
+                ExecMemory::default(),
+                BackendKind::default(),
+            );
             let _ = plan.run(&env); // warm-up
             let (t, runs) = time_median(
                 || {
@@ -241,6 +250,7 @@ fn main() {
                 true,
                 EpilogueMode::default(),
                 memory,
+                BackendKind::default(),
             );
             let _ = plan.run(&env); // warm-up
             let (t, runs) = time_median(
@@ -265,6 +275,73 @@ fn main() {
                 p,
                 n,
                 100.0 * (b.secs - a.secs) / b.secs
+            );
+        }
+    }
+
+    // ---- backend: level-parallel work stealing vs direct-threaded ----
+    // same lowered instruction streams, same planned arena; only the
+    // executor differs. Cpu schedules each DAG level across the
+    // persistent worker pool, Direct runs one pre-monomorphized closure
+    // chain sequentially — the win is scheduling overhead on small/deep
+    // graphs, the loss is level parallelism on wide ones. Backends are
+    // bit-identical by contract (asserted here on live data).
+    const BACKEND_WORKLOADS: [(&str, usize); 3] =
+        [("logreg-grad", 128), ("logreg-grad", 256), ("matfac-hess", 32)];
+    let mut rows = Vec::new();
+    for (p, n) in BACKEND_WORKLOADS {
+        let (g, roots, env) = match p {
+            "logreg-grad" => {
+                let mut w = logistic_regression(2 * n, n);
+                let grad = w.gradient();
+                (w.g.clone(), vec![w.loss, grad], w.env.clone())
+            }
+            _ => {
+                let mut w = matrix_factorization(n, n, 5, false);
+                let h = w.hessian();
+                (w.g.clone(), vec![h], w.env.clone())
+            }
+        };
+        let mut g2 = g.clone();
+        let o = optimize(&mut g2, &roots, OptLevel::Full);
+        let mut outs: Vec<Vec<Tensor>> = Vec::new();
+        for (label, backend) in [
+            ("cpu (level-parallel)", BackendKind::Cpu),
+            ("direct-threaded", BackendKind::Direct),
+        ] {
+            let plan = CompiledPlan::with_options(
+                &g2,
+                &o.roots,
+                true,
+                EpilogueMode::default(),
+                ExecMemory::default(),
+                backend,
+            );
+            outs.push(plan.run(&env)); // warm-up, kept for the identity check
+            let (t, runs) = time_median(
+                || {
+                    std::hint::black_box(plan.run(&env));
+                },
+                3,
+                secs,
+            );
+            rows.push(Row { figure: "backend", problem: p, n, mode: label.into(), secs: t, runs });
+        }
+        for (a, b) in outs[0].iter().zip(outs[1].iter()) {
+            assert_eq!(a.data(), b.data(), "backends diverged on {} n={}", p, n);
+        }
+    }
+    print_table("Backend ablation — work-stealing levels vs direct-threaded", &rows);
+    all_rows.extend(rows.iter().cloned());
+    for (p, n) in BACKEND_WORKLOADS {
+        let cpu = rows.iter().find(|r| r.problem == p && r.n == n && r.mode.starts_with("cpu"));
+        let dir = rows.iter().find(|r| r.problem == p && r.n == n && r.mode.starts_with("direct"));
+        if let (Some(c), Some(d)) = (cpu, dir) {
+            println!(
+                "  {:<12} n={:<4} direct-threaded is {:+6.1}% vs level-parallel",
+                p,
+                n,
+                100.0 * (d.secs - c.secs) / c.secs
             );
         }
     }

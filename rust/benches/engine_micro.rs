@@ -5,7 +5,7 @@
 //! Run: `cargo bench --bench engine_micro`
 
 use tensorcalc::einsum::{einsum, gemm_into, gemm_into_flat, EinScratch, EinSpec, EinsumPlan};
-use tensorcalc::exec::{CompiledPlan, EpilogueMode, ExecMemory};
+use tensorcalc::exec::{BackendKind, CompiledPlan, EpilogueMode, ExecMemory};
 use tensorcalc::figures::{print_table, Row};
 use tensorcalc::problems::logistic_regression;
 use tensorcalc::tensor::Tensor;
@@ -111,26 +111,29 @@ fn main() {
     }
 
     // compiled executor on a whole derivative DAG: the repeated-request
-    // hot path across the memory ablation — the planned arena (fixed
-    // offsets, persistent workers, zero steady-state allocation), the
-    // PR 1 pooled mode, and the pooled+unfused PR 1 lowering.
+    // hot path across the memory/backend ablation — the planned arena
+    // (fixed offsets, persistent workers, zero steady-state allocation),
+    // the PR 1 pooled mode, the pooled+unfused PR 1 lowering, and the
+    // direct-threaded backend over the same planned arena.
     {
         let (m, n) = (256usize, 128usize);
         let mut w = logistic_regression(m, n);
         let grad = w.gradient();
-        let modes: [(&str, ExecMemory, bool); 3] = [
-            ("planned", ExecMemory::Planned, true),
-            ("pooled", ExecMemory::Pooled, true),
-            ("pooled unfused (PR 1)", ExecMemory::Pooled, false),
+        let modes: [(&str, ExecMemory, bool, BackendKind); 4] = [
+            ("planned", ExecMemory::Planned, true, BackendKind::Cpu),
+            ("pooled", ExecMemory::Pooled, true, BackendKind::Cpu),
+            ("pooled unfused (PR 1)", ExecMemory::Pooled, false, BackendKind::Cpu),
+            ("direct-threaded", ExecMemory::Planned, true, BackendKind::Direct),
         ];
         let mut timed: Vec<f64> = Vec::new();
-        for (label, memory, fuse) in modes {
+        for (label, memory, fuse, backend) in modes {
             let plan = CompiledPlan::with_options(
                 &w.g,
                 &[w.loss, grad],
                 fuse,
                 EpilogueMode::default(),
                 memory,
+                backend,
             );
             let _ = plan.run(&w.env); // warm-up
             let (t, runs) = time_median(
@@ -162,9 +165,10 @@ fn main() {
             timed.push(t);
         }
         println!(
-            "\n  planned vs pooled wall-clock {:+.1}%, fused vs unfused {:+.1}%",
+            "\n  planned vs pooled wall-clock {:+.1}%, fused vs unfused {:+.1}%, direct vs level-parallel {:+.1}%",
             100.0 * (timed[0] - timed[1]) / timed[1],
-            100.0 * (timed[1] - timed[2]) / timed[2]
+            100.0 * (timed[1] - timed[2]) / timed[2],
+            100.0 * (timed[3] - timed[0]) / timed[0]
         );
     }
 

@@ -35,7 +35,7 @@ pub use metrics::{Metrics, Snapshot};
 
 use crate::error::Result;
 use crate::eval::Env;
-use crate::exec::{batch_graph, global_plan_cache, CompiledPlan, ExecMemory, PlanOutput};
+use crate::exec::{batch_graph, global_plan_cache, BackendKind, CompiledPlan, ExecMemory, PlanOutput};
 use crate::ir::{Graph, NodeId};
 use crate::opt::OptLevel;
 use crate::runtime::Runtime;
@@ -43,6 +43,7 @@ use crate::tensor::Tensor;
 use crate::{anyhow, bail};
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -70,11 +71,17 @@ pub struct EngineEntry {
     graph: Graph,
     roots: Vec<NodeId>,
     memory: ExecMemory,
+    /// which executor serves this entry (per-entry backend choice)
+    backend: BackendKind,
     /// largest micro-batch fused into one run; 1 = batching off (the
     /// ablation baseline)
     max_batch: usize,
     /// lazily compiled batched variants, one per batch bucket
     batched: HashMap<usize, Arc<CompiledPlan>>,
+    /// batch-bucket plans compiled on the serving path (i.e. *not*
+    /// prewarmed) — [`EngineEntry::with_prewarm`] exists to pin this at
+    /// zero in steady state
+    lazy_compiles: Arc<AtomicU64>,
 }
 
 impl EngineEntry {
@@ -86,20 +93,29 @@ impl EngineEntry {
         roots: &[NodeId],
         inputs: Vec<(String, Vec<usize>)>,
     ) -> Self {
-        Self::compiled_with(graph, roots, inputs, OptLevel::default(), ExecMemory::default())
+        Self::compiled_with(
+            graph,
+            roots,
+            inputs,
+            OptLevel::default(),
+            ExecMemory::default(),
+            BackendKind::default(),
+        )
     }
 
-    /// [`EngineEntry::compiled`] with the optimizer level and executor
-    /// memory discipline explicit — the coordinator-side end of the
-    /// `ExecMemory` ablation. All entries share the process-wide
-    /// persistent worker pool regardless of mode, so the level
-    /// scheduler of repeated request bursts spawns no threads.
+    /// [`EngineEntry::compiled`] with the optimizer level, executor
+    /// memory discipline and execution backend explicit — the
+    /// coordinator-side end of the `ExecMemory` / `BackendKind`
+    /// ablations. All entries share the process-wide persistent worker
+    /// pool regardless of mode, so the level scheduler of repeated
+    /// request bursts spawns no threads.
     pub fn compiled_with(
         graph: &Graph,
         roots: &[NodeId],
         inputs: Vec<(String, Vec<usize>)>,
         level: OptLevel,
         memory: ExecMemory,
+        backend: BackendKind,
     ) -> Self {
         // canonicalise once here, then compile at OptLevel::None: the
         // cache keys `None` by the fingerprint of the graph as given,
@@ -115,15 +131,23 @@ impl EngineEntry {
             let o = crate::opt::optimize(&mut g2, roots, level);
             crate::opt::compact(&g2, &o.roots)
         };
-        let plan = global_plan_cache().get_or_compile_opts(&graph, &roots, OptLevel::None, memory);
+        let plan = global_plan_cache().get_or_compile_opts(
+            &graph,
+            &roots,
+            OptLevel::None,
+            memory,
+            backend,
+        );
         EngineEntry {
             plan,
             inputs,
             graph,
             roots,
             memory,
+            backend,
             max_batch: DEFAULT_MAX_BATCH,
             batched: HashMap::new(),
+            lazy_compiles: Arc::new(AtomicU64::new(0)),
         }
     }
 
@@ -132,6 +156,42 @@ impl EngineEntry {
     pub fn with_max_batch(mut self, max_batch: usize) -> Self {
         self.max_batch = max_batch.max(1);
         self
+    }
+
+    /// Eagerly compile every batch-bucket variant this entry can reach
+    /// (the power-of-two buckets up to `max_batch` — exactly the set
+    /// [`run_chunk`] computes), so the serving path never compiles: the
+    /// first burst after registration pays zero compile latency, and
+    /// [`EngineEntry::lazy_compile_counter`] stays at zero. Apply
+    /// *after* [`EngineEntry::with_max_batch`] — prewarming covers the
+    /// bucket set of the cap in force when it runs.
+    pub fn with_prewarm(mut self, prewarm: bool) -> Self {
+        if prewarm {
+            for n in 2..=self.max_batch {
+                let bucket = n.next_power_of_two().min(self.max_batch).max(n);
+                if !self.batched.contains_key(&bucket) {
+                    let (bg, broots) = batch_graph(&self.graph, &self.roots, bucket);
+                    let plan = global_plan_cache().get_or_compile_opts(
+                        &bg,
+                        &broots,
+                        OptLevel::None,
+                        self.memory,
+                        self.backend,
+                    );
+                    self.batched.insert(bucket, plan);
+                }
+            }
+        }
+        self
+    }
+
+    /// Handle on the lazy-compile counter: how many batch-bucket plans
+    /// were compiled on the serving path instead of at registration.
+    /// With [`EngineEntry::with_prewarm`] this must stay zero in steady
+    /// state (asserted in the module tests). The handle survives the
+    /// entry moving into its worker thread.
+    pub fn lazy_compile_counter(&self) -> Arc<AtomicU64> {
+        self.lazy_compiles.clone()
     }
 
     /// The plan for one batch bucket, compiled on first use through the
@@ -144,9 +204,15 @@ impl EngineEntry {
         if let Some(p) = self.batched.get(&bucket) {
             return p.clone();
         }
+        self.lazy_compiles.fetch_add(1, Ordering::Relaxed);
         let (bg, broots) = batch_graph(&self.graph, &self.roots, bucket);
-        let plan =
-            global_plan_cache().get_or_compile_opts(&bg, &broots, OptLevel::None, self.memory);
+        let plan = global_plan_cache().get_or_compile_opts(
+            &bg,
+            &broots,
+            OptLevel::None,
+            self.memory,
+            self.backend,
+        );
         self.batched.insert(bucket, plan.clone());
         plan
     }
@@ -537,6 +603,15 @@ mod tests {
         n: usize,
         memory: crate::exec::ExecMemory,
     ) -> EngineEntry {
+        logreg_grad_entry_opts(m, n, memory, BackendKind::default())
+    }
+
+    fn logreg_grad_entry_opts(
+        m: usize,
+        n: usize,
+        memory: crate::exec::ExecMemory,
+        backend: BackendKind,
+    ) -> EngineEntry {
         let (g, roots) = logreg_grad_graph(m, n);
         EngineEntry::compiled_with(
             &g,
@@ -548,6 +623,7 @@ mod tests {
             ],
             crate::opt::OptLevel::default(),
             memory,
+            backend,
         )
     }
 
@@ -591,6 +667,56 @@ mod tests {
         for (ta, tb) in a.outputs.iter().zip(&b.outputs) {
             assert_eq!(ta.data(), tb.data(), "entry memory modes diverged");
         }
+    }
+
+    #[test]
+    fn backend_entries_agree_bitwise() {
+        // per-entry backend choice: a direct-threaded entry serves
+        // bit-identical responses to the default cpu entry
+        let mut c = Coordinator::new(16);
+        c.register_engine(
+            "cpu",
+            logreg_grad_entry_opts(8, 3, ExecMemory::default(), BackendKind::Cpu),
+        );
+        c.register_engine(
+            "direct",
+            logreg_grad_entry_opts(8, 3, ExecMemory::default(), BackendKind::Direct),
+        );
+        let inputs = logreg_inputs(8, 3, 1);
+        let a = c.eval("cpu", inputs.clone()).unwrap();
+        let b = c.eval("direct", inputs).unwrap();
+        assert_eq!(a.outputs.len(), b.outputs.len());
+        for (ta, tb) in a.outputs.iter().zip(&b.outputs) {
+            assert_eq!(ta.data(), tb.data(), "entry backends diverged");
+        }
+    }
+
+    #[test]
+    fn prewarm_eliminates_serving_path_compiles() {
+        // queue 5 requests before the worker starts so one drain forms a
+        // multi-request bucket — the case that lazily compiles a batched
+        // plan unless the entry was prewarmed
+        let drive = |entry: EngineEntry| -> u64 {
+            let counter = entry.lazy_compile_counter();
+            let metrics = Arc::new(Metrics::new());
+            let (tx, rx) = sync_channel::<Job>(8);
+            let mut replies = Vec::new();
+            for i in 0..5u64 {
+                let (rtx, rrx) = sync_channel(1);
+                tx.send(Job::Eval { inputs: logreg_inputs(8, 3, i), reply: rtx }).unwrap();
+                replies.push(rrx);
+            }
+            drop(tx);
+            engine_worker("e".into(), entry, rx, metrics);
+            for rrx in replies {
+                rrx.recv().expect("reply dropped").unwrap();
+            }
+            counter.load(Ordering::Relaxed)
+        };
+        let cold = drive(logreg_grad_entry(8, 3));
+        assert!(cold > 0, "an un-prewarmed entry must compile its bucket lazily");
+        let warm = drive(logreg_grad_entry(8, 3).with_max_batch(8).with_prewarm(true));
+        assert_eq!(warm, 0, "a prewarmed entry must never compile on the serving path");
     }
 
     #[test]

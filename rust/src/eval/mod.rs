@@ -79,14 +79,29 @@ pub fn eval_many_opts(
     level: OptLevel,
     memory: crate::exec::ExecMemory,
 ) -> Vec<Tensor> {
-    use crate::exec::{CompiledPlan, EpilogueMode};
+    use crate::exec::{BackendKind, CompiledPlan, EpilogueMode};
     if level == OptLevel::None {
-        return CompiledPlan::with_options(g, roots, true, EpilogueMode::default(), memory)
-            .run(env);
+        return CompiledPlan::with_options(
+            g,
+            roots,
+            true,
+            EpilogueMode::default(),
+            memory,
+            BackendKind::default(),
+        )
+        .run(env);
     }
     let mut g2 = g.clone();
     let o = crate::opt::optimize(&mut g2, roots, level);
-    CompiledPlan::with_options(&g2, &o.roots, true, EpilogueMode::default(), memory).run(env)
+    CompiledPlan::with_options(
+        &g2,
+        &o.roots,
+        true,
+        EpilogueMode::default(),
+        memory,
+        BackendKind::default(),
+    )
+    .run(env)
 }
 
 /// A reusable evaluation plan: topological order restricted to the

@@ -1,0 +1,446 @@
+//! The work-stealing, level-parallel CPU backend — the production
+//! executor, extracted from the pre-seam `CompiledPlan` by code motion.
+//!
+//! In-arena runs walk the dependency levels; a level that passes the
+//! fork gate (`Lowered::level_fork`) is claimed in chunks from a shared
+//! atomic cursor by workers of the persistent pool
+//! ([`worker_pool`](crate::util::worker_pool)), so one oversized node
+//! delays only the thread that claimed it. This backend also owns the
+//! [`ExecMemory::Pooled`](crate::exec::ExecMemory::Pooled) ablation
+//! path and its shape-bucketed [`BufferPool`].
+
+use crate::einsum::{EinScratch, EpiFn, NoEpilogue};
+use crate::eval::Env;
+use crate::tensor::Tensor;
+use crate::util::worker_pool;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+use super::super::lower::{FusedSrc, Instr, Lowered, FUSED_MAX_ARGS};
+use super::super::{EpilogueMode, PoolStats};
+use super::{
+    fused_srcs_planned, fused_srcs_planned_except, gen_unary_into, src_slice, slot_mut,
+    ArenaExec, Backend, BackendKind, IDX_SCRATCH,
+};
+
+/// A shape-bucketed free list of `f64` buffers. Buffers are bucketed by
+/// exact element count; `acquire` pops a warm buffer (contents arbitrary
+/// — every instruction fully overwrites its output) or allocates a fresh
+/// one. Pooled-mode ablation only; planned runs never touch it.
+#[derive(Default)]
+pub struct BufferPool {
+    buckets: HashMap<usize, Vec<Vec<f64>>>,
+    fresh: u64,
+    reused: u64,
+}
+
+impl BufferPool {
+    fn acquire(&mut self, len: usize) -> Vec<f64> {
+        if let Some(list) = self.buckets.get_mut(&len) {
+            if let Some(buf) = list.pop() {
+                self.reused += 1;
+                debug_assert_eq!(buf.len(), len);
+                return buf;
+            }
+        }
+        self.fresh += 1;
+        vec![0.0; len]
+    }
+
+    fn release(&mut self, buf: Vec<f64>) {
+        self.buckets.entry(buf.len()).or_default().push(buf);
+    }
+
+    fn stats(&self) -> PoolStats {
+        PoolStats { fresh: self.fresh, reused: self.reused, ..PoolStats::default() }
+    }
+}
+
+/// A value slot during a pooled execution: intermediates own pooled
+/// buffers, inputs and compile-time constants are borrowed.
+enum Val<'a> {
+    Owned(Tensor),
+    Ref(&'a Tensor),
+}
+
+impl<'a> Val<'a> {
+    fn tensor(&self) -> &Tensor {
+        match self {
+            Val::Owned(t) => t,
+            Val::Ref(t) => t,
+        }
+    }
+}
+
+/// The work-stealing level executor plus the pooled-mode runtime state
+/// (buffer pool, einsum scratches, the lock counter the no-lock
+/// assertion reads).
+#[derive(Default)]
+pub struct CpuBackend {
+    pool: Mutex<BufferPool>,
+    /// einsum scratch buffers, checked out once per run (serial) or once
+    /// per worker (parallel) — never per node, to keep lock traffic low
+    /// (pooled mode only)
+    scratches: Mutex<Vec<EinScratch>>,
+    /// buffer-pool mutex acquisitions (the no-lock assertion's counter)
+    pool_locks: AtomicU64,
+}
+
+impl CpuBackend {
+    /// Acquire the buffer pool, counting the acquisition (the planned
+    /// mode's "no pool mutex on the hot path" assertion reads this).
+    fn lock_pool(&self) -> MutexGuard<'_, BufferPool> {
+        self.pool_locks.fetch_add(1, Ordering::Relaxed);
+        self.pool.lock().unwrap()
+    }
+
+    fn exec_node<'a>(
+        &self,
+        lw: &'a Lowered,
+        p: usize,
+        values: &[Option<Val<'a>>],
+        env: &'a Env,
+        scratch: &mut EinScratch,
+    ) -> Val<'a> {
+        let shape = &lw.shapes[p];
+        match &lw.instrs[p] {
+            Instr::Var { name, shape } => {
+                let t = env
+                    .get(name)
+                    .unwrap_or_else(|| panic!("unbound variable {}", name));
+                assert_eq!(
+                    t.shape(),
+                    &shape[..],
+                    "variable {} bound with wrong shape",
+                    name
+                );
+                Val::Ref(t)
+            }
+            Instr::Static(i) => Val::Ref(&lw.statics[*i]),
+            Instr::Add(a, b) => {
+                let ta = values[*a].as_ref().expect("operand not computed").tensor();
+                let tb = values[*b].as_ref().expect("operand not computed").tensor();
+                let mut buf = self.lock_pool().acquire(ta.len());
+                for ((o, &x), &y) in buf.iter_mut().zip(ta.data()).zip(tb.data()) {
+                    *o = x + y;
+                }
+                Val::Owned(Tensor::new(shape, buf))
+            }
+            Instr::Mul(a, b, plan, epi) => {
+                let ta = values[*a].as_ref().expect("operand not computed").tensor();
+                let tb = values[*b].as_ref().expect("operand not computed").tensor();
+                let out_len: usize = shape.iter().product();
+                let buf = self.lock_pool().acquire(out_len);
+                let mut out = Tensor::new(shape, buf);
+                match epi {
+                    None => plan.run(ta, tb, &mut out, scratch),
+                    Some(e) => {
+                        let srcs = fused_srcs(&e.args, values, out_len);
+                        let rest = &srcs[..e.args.len()];
+                        match lw.epilogue_mode {
+                            EpilogueMode::InTile => {
+                                // the fused chain runs on each output
+                                // tile right after its final
+                                // k-accumulation, cache-hot
+                                let tile_epi = EpiFn(|base: usize, seg: &mut [f64]| {
+                                    e.kernel.run_inplace_at(seg, base, rest)
+                                });
+                                plan.run_with_epilogue_in_tile(ta, tb, &mut out, scratch, &tile_epi);
+                            }
+                            EpilogueMode::TwoPass => {
+                                plan.run_with_epilogue(ta, tb, &mut out, scratch, |data| {
+                                    e.kernel.run_inplace(data, rest)
+                                });
+                            }
+                        }
+                    }
+                }
+                Val::Owned(out)
+            }
+            Instr::Elem(f, a) => {
+                let ta = values[*a].as_ref().expect("operand not computed").tensor();
+                let mut buf = self.lock_pool().acquire(ta.len());
+                for (o, &x) in buf.iter_mut().zip(ta.data()) {
+                    *o = f.apply(x);
+                }
+                Val::Owned(Tensor::new(shape, buf))
+            }
+            Instr::GenUnary(f, a, epi) => {
+                let ta = values[*a].as_ref().expect("operand not computed").tensor();
+                let out_len: usize = shape.iter().product();
+                let mut buf = self.lock_pool().acquire(out_len);
+                let last_dim = *ta.shape().last().expect("GenFn needs rank ≥ 1");
+                gen_unary_into(*f, ta.data(), last_dim, &mut buf);
+                if let Some(e) = epi {
+                    let srcs = fused_srcs(&e.args, values, out_len);
+                    e.kernel.run_inplace(&mut buf, &srcs[..e.args.len()]);
+                }
+                Val::Owned(Tensor::new(shape, buf))
+            }
+            Instr::Fused { kernel, args } => {
+                let out_len: usize = shape.iter().product();
+                let srcs = fused_srcs(args, values, out_len);
+                let mut buf = self.lock_pool().acquire(out_len);
+                kernel.run(&srcs[..args.len()], &mut buf);
+                Val::Owned(Tensor::new(shape, buf))
+            }
+        }
+    }
+}
+
+impl Backend for CpuBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Cpu
+    }
+
+    /// In-arena execution: walk the levels, forking a level onto the
+    /// persistent worker pool when the gate passes. Nothing here
+    /// allocates, locks, or touches a `Tensor`.
+    fn exec_arena(&self, lw: &Lowered, ex: &ArenaExec<'_>) {
+        for (lv, level) in lw.levels.iter().enumerate() {
+            if let Some((nt, chunk)) = lw.level_fork(lv, level.len()) {
+                let cursor = AtomicUsize::new(0);
+                let cursor_ref = &cursor;
+                worker_pool().scope(nt, move |_| loop {
+                    let start = cursor_ref.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= level.len() {
+                        break;
+                    }
+                    let end = (start + chunk).min(level.len());
+                    for &p in &level[start..end] {
+                        exec_node_planned(lw, p, ex);
+                    }
+                });
+            } else {
+                for &p in level {
+                    exec_node_planned(lw, p, ex);
+                }
+            }
+        }
+    }
+
+    /// Pooled-memory execution (the PR 1 ablation baseline): buffers
+    /// from the mutex-guarded pool, recycled at their last-use level.
+    fn run_pooled(&self, lw: &Lowered, env: &Env) -> Vec<Tensor> {
+        let n = lw.instrs.len();
+        let mut values: Vec<Option<Val>> = Vec::with_capacity(n);
+        values.resize_with(n, || None);
+        let mut scratch = self.scratches.lock().unwrap().pop().unwrap_or_default();
+
+        for (lv, level) in lw.levels.iter().enumerate() {
+            if let Some((nt, chunk)) = lw.level_fork(lv, level.len()) {
+                // Work stealing: workers claim chunks of the level from
+                // a shared cursor, so one oversized node delays only the
+                // thread that claimed it — not a whole static band.
+                let results: Vec<Mutex<Option<Val>>> =
+                    level.iter().map(|_| Mutex::new(None)).collect();
+                let cursor = AtomicUsize::new(0);
+                {
+                    let values_ref = &values;
+                    let results_ref = &results;
+                    let cursor_ref = &cursor;
+                    worker_pool().scope(nt, move |_| {
+                        let mut band_scratch =
+                            self.scratches.lock().unwrap().pop().unwrap_or_default();
+                        loop {
+                            let start = cursor_ref.fetch_add(chunk, Ordering::Relaxed);
+                            if start >= level.len() {
+                                break;
+                            }
+                            let end = (start + chunk).min(level.len());
+                            for k in start..end {
+                                let v = self.exec_node(
+                                    lw,
+                                    level[k],
+                                    values_ref,
+                                    env,
+                                    &mut band_scratch,
+                                );
+                                *results_ref[k].lock().unwrap() = Some(v);
+                            }
+                        }
+                        self.scratches.lock().unwrap().push(band_scratch);
+                    });
+                }
+                for (r, &p) in results.into_iter().zip(level) {
+                    values[p] = r.into_inner().unwrap();
+                }
+            } else {
+                for &p in level {
+                    let v = self.exec_node(lw, p, &values, env, &mut scratch);
+                    values[p] = Some(v);
+                }
+            }
+            // recycle buffers whose last consumer ran in this level
+            // (one pool lock per level, not per buffer)
+            if !lw.free_at_level[lv].is_empty() {
+                let mut pool = self.lock_pool();
+                for &p in &lw.free_at_level[lv] {
+                    if let Some(Val::Owned(t)) = values[p].take() {
+                        pool.release(t.into_data());
+                    }
+                }
+            }
+        }
+        self.scratches.lock().unwrap().push(scratch);
+
+        let mut out = Vec::with_capacity(lw.root_pos.len());
+        for i in 0..lw.root_pos.len() {
+            let p = lw.root_pos[i];
+            let used_again = lw.root_pos[i + 1..].contains(&p);
+            let t = if used_again {
+                values[p].as_ref().expect("root not computed").tensor().clone()
+            } else {
+                match values[p].take().expect("root not computed") {
+                    Val::Owned(t) => t,
+                    Val::Ref(t) => t.clone(),
+                }
+            };
+            out.push(t);
+        }
+        out
+    }
+
+    fn fold_stats(&self, stats: &mut PoolStats) {
+        let p = self.pool.lock().unwrap().stats();
+        stats.fresh = p.fresh;
+        stats.reused = p.reused;
+        stats.pool_locks = self.pool_locks.load(Ordering::Relaxed);
+    }
+}
+
+/// Execute one instruction of an in-arena run: operands and the
+/// destination are fixed arena offsets (or pre-resolved env/static
+/// pointers); nothing here allocates, locks, or touches a `Tensor`.
+fn exec_node_planned(lw: &Lowered, p: usize, ex: &ArenaExec<'_>) {
+    let mp = lw.memplan.as_ref().expect("in-arena plan carries a memory plan");
+    let instr = &lw.instrs[p];
+    let slot = match instr {
+        Instr::Var { .. } | Instr::Static(_) => return, // resolved up front
+        _ => mp.out[p].expect("planned instruction output"),
+    };
+    // SAFETY: this instruction is the sole writer of `slot` in its
+    // level, and no concurrently live buffer overlaps it (planner
+    // invariant, re-checked by validate_memory_plan / debug builds).
+    let out: &mut [f64] = unsafe { slot_mut(ex, slot) };
+    match instr {
+        Instr::Var { .. } | Instr::Static(_) => unreachable!(),
+        Instr::Add(a, b) => match lw.inplace_arg[p] {
+            // out aliases operand a: its values are already in place
+            Some(0) => {
+                for (o, &y) in out.iter_mut().zip(src_slice(ex, *b)) {
+                    *o += y;
+                }
+            }
+            // out aliases operand b
+            Some(_) => {
+                for (o, &x) in out.iter_mut().zip(src_slice(ex, *a)) {
+                    *o += x;
+                }
+            }
+            None => {
+                let ta = src_slice(ex, *a);
+                let tb = src_slice(ex, *b);
+                for ((o, &x), &y) in out.iter_mut().zip(ta).zip(tb) {
+                    *o = x + y;
+                }
+            }
+        },
+        Instr::Elem(f, a) => match lw.inplace_arg[p] {
+            Some(_) => {
+                for o in out.iter_mut() {
+                    *o = f.apply(*o);
+                }
+            }
+            None => {
+                for (o, &x) in out.iter_mut().zip(src_slice(ex, *a)) {
+                    *o = f.apply(x);
+                }
+            }
+        },
+        Instr::Mul(a, b, plan, epi) => {
+            let ta = src_slice(ex, *a);
+            let tb = src_slice(ex, *b);
+            let scr = mp.scratch[p].expect("contraction scratch planned");
+            // SAFETY: scratch slots are exclusive to this instruction
+            // for the duration of its level (planner invariant).
+            let (sa, sb, sc) = unsafe {
+                (slot_mut(ex, scr[0]), slot_mut(ex, scr[1]), slot_mut(ex, scr[2]))
+            };
+            IDX_SCRATCH.with(|idx_cell| {
+                let mut guard = idx_cell.borrow_mut();
+                let idx: &mut Vec<usize> = &mut guard;
+                match epi {
+                    None => plan.run_planned(ta, tb, out, sa, sb, sc, idx, &NoEpilogue),
+                    Some(e) => {
+                        let srcs = fused_srcs_planned(&e.args, ex, out.len());
+                        let rest = &srcs[..e.args.len()];
+                        match lw.epilogue_mode {
+                            EpilogueMode::InTile => {
+                                let tile_epi = EpiFn(|base: usize, seg: &mut [f64]| {
+                                    e.kernel.run_inplace_at(seg, base, rest)
+                                });
+                                plan.run_planned(ta, tb, out, sa, sb, sc, idx, &tile_epi);
+                            }
+                            EpilogueMode::TwoPass => {
+                                plan.run_planned(
+                                    ta,
+                                    tb,
+                                    out,
+                                    sa,
+                                    sb,
+                                    sc,
+                                    idx,
+                                    &NoEpilogue,
+                                );
+                                e.kernel.run_inplace(out, rest);
+                            }
+                        }
+                    }
+                }
+            });
+        }
+        Instr::GenUnary(f, a, epi) => {
+            let ta = src_slice(ex, *a);
+            let last_dim = *lw.shapes[*a].last().expect("GenFn needs rank ≥ 1");
+            gen_unary_into(*f, ta, last_dim, out);
+            if let Some(e) = epi {
+                let srcs = fused_srcs_planned(&e.args, ex, out.len());
+                e.kernel.run_inplace(out, &srcs[..e.args.len()]);
+            }
+        }
+        Instr::Fused { kernel, args } => match lw.inplace_arg[p] {
+            Some(arg) => {
+                // slot `arg` aliases the output; resolve the others
+                let srcs = fused_srcs_planned_except(args, ex, out.len(), arg);
+                kernel.run_inplace_arg(out, arg as u32, &srcs[..args.len()]);
+            }
+            None => {
+                let srcs = fused_srcs_planned(args, ex, out.len());
+                kernel.run(&srcs[..args.len()], out);
+            }
+        },
+    }
+}
+
+/// Resolve fused-kernel operand slots against computed pooled values:
+/// same contract as [`fused_srcs_planned`], resolving through `Val`s
+/// instead of the source table.
+fn fused_srcs<'v>(
+    args: &[usize],
+    values: &'v [Option<Val<'_>>],
+    out_len: usize,
+) -> [FusedSrc<'v>; FUSED_MAX_ARGS] {
+    debug_assert!(args.len() <= FUSED_MAX_ARGS, "group builder must cap operand slots");
+    let mut srcs = [FusedSrc::Scalar(0.0); FUSED_MAX_ARGS];
+    for (slot, &q) in args.iter().enumerate() {
+        let t = values[q].as_ref().expect("operand not computed").tensor();
+        srcs[slot] = if t.len() == out_len {
+            FusedSrc::Slice(t.data())
+        } else {
+            FusedSrc::Scalar(t.data()[0])
+        };
+    }
+    srcs
+}

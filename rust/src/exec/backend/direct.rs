@@ -1,0 +1,271 @@
+//! The direct-threaded backend: a second, genuinely different lowering
+//! of the same instruction stream — proof that the backend seam is
+//! real, and a latency play for small/skinny serving plans.
+//!
+//! Backend compilation walks the [`Lowered`] stream once (in level
+//! order, the sequential schedule the memory plan's liveness intervals
+//! are valid for) and emits **one monomorphized boxed closure per
+//! instruction**: output arena offsets, scratch slots, operand
+//! positions, the element-wise function pointer, the fused kernel and
+//! the epilogue placement are all resolved *here*, at compile time. A
+//! run is then a straight sequential walk of the closure chain — no
+//! instruction dispatch, no level bookkeeping, no atomics, no worker
+//! handoff. For the small plans the coordinator serves at low batch
+//! sizes, that per-node overhead is the dominant cost the
+//! work-stealing executor pays and this backend does not.
+//!
+//! The closures reuse exactly the kernels the CPU backend runs —
+//! `EinsumPlan::run_planned`, `FusedKernel`, `gen_unary_into` — with
+//! the same operand resolution and the same epilogue placement, so the
+//! two backends are bit-identical by construction
+//! (`tests/backend_equivalence.rs` pins it, and pins both against the
+//! interpreter oracle).
+//!
+//! This backend executes **in-arena only**: lowering force-builds the
+//! memory plan for it even under the pooled ablation mode, so
+//! [`Backend::run_pooled`]'s default (unreachable) body is never hit.
+
+use crate::einsum::{EpiFn, NoEpilogue};
+use crate::ir::Elem;
+
+use super::super::lower::{Instr, Lowered};
+use super::super::EpilogueMode;
+use super::{
+    fused_srcs_planned, fused_srcs_planned_except, gen_unary_into, src_slice, slot_mut,
+    ArenaExec, Backend, BackendKind, IDX_SCRATCH,
+};
+
+/// One compiled instruction: everything but the run's arena pointer is
+/// baked into the closure's captures.
+type DirectOp = Box<dyn Fn(&ArenaExec<'_>) + Send + Sync>;
+
+/// Coerce a closure to the higher-ranked [`DirectOp`] signature.
+fn boxed<F: for<'r> Fn(&ArenaExec<'r>) + Send + Sync + 'static>(f: F) -> DirectOp {
+    Box::new(f)
+}
+
+/// Monomorphize an element-wise function to a plain `fn` pointer. The
+/// bodies mirror [`Elem::apply`] exactly — bit-identical results are
+/// part of the backend contract.
+fn elem_fn(f: Elem) -> fn(f64) -> f64 {
+    match f {
+        Elem::Exp => |x| x.exp(),
+        Elem::Log => |x| x.ln(),
+        Elem::Relu => |x| x.max(0.0),
+        Elem::Step => |x| if x > 0.0 { 1.0 } else { 0.0 },
+        Elem::Sigmoid => |x| 1.0 / (1.0 + (-x).exp()),
+        Elem::Tanh => |x| x.tanh(),
+        Elem::Sqrt => |x| x.sqrt(),
+        Elem::Neg => |x| -x,
+        Elem::Recip => |x| 1.0 / x,
+        Elem::Square => |x| x * x,
+        Elem::Sign => |x| {
+            if x > 0.0 {
+                1.0
+            } else if x < 0.0 {
+                -1.0
+            } else {
+                0.0
+            }
+        },
+        Elem::Abs => |x| x.abs(),
+    }
+}
+
+/// The compiled closure chain. `Var`/`Static` instructions emit no
+/// closure at all — the facade resolves them into the source table
+/// before the backend runs.
+pub struct DirectBackend {
+    ops: Vec<DirectOp>,
+}
+
+impl DirectBackend {
+    /// Compile the stream into the closure chain. Closures are emitted
+    /// in **level order** (not stream order): the memory plan's slot
+    /// reuse is proven safe against level-based liveness, and level
+    /// order is the canonical sequential schedule consistent with it.
+    pub(crate) fn compile(lw: &Lowered) -> DirectBackend {
+        let mut ops = Vec::with_capacity(lw.instrs.len());
+        for level in &lw.levels {
+            for &p in level {
+                if let Some(op) = compile_instr(lw, p) {
+                    ops.push(op);
+                }
+            }
+        }
+        DirectBackend { ops }
+    }
+}
+
+impl Backend for DirectBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Direct
+    }
+
+    fn exec_arena(&self, _lw: &Lowered, ex: &ArenaExec<'_>) {
+        for op in &self.ops {
+            op(ex);
+        }
+    }
+}
+
+/// Compile one instruction into its closure, resolving every
+/// compile-time-known quantity now (slots, operand positions, function
+/// pointers, epilogue placement, in-place aliasing).
+fn compile_instr(lw: &Lowered, p: usize) -> Option<DirectOp> {
+    let mp = lw.memplan.as_ref().expect("direct backend requires an arena plan");
+    let instr = &lw.instrs[p];
+    let slot = match instr {
+        Instr::Var { .. } | Instr::Static(_) => return None, // source table
+        _ => mp.out[p].expect("planned instruction output"),
+    };
+    let op = match instr {
+        Instr::Var { .. } | Instr::Static(_) => unreachable!(),
+        Instr::Add(a, b) => {
+            let (a, b) = (*a, *b);
+            match lw.inplace_arg[p] {
+                // out aliases operand a: its values are already in place
+                Some(0) => boxed(move |ex| {
+                    let out = unsafe { slot_mut(ex, slot) };
+                    for (o, &y) in out.iter_mut().zip(src_slice(ex, b)) {
+                        *o += y;
+                    }
+                }),
+                // out aliases operand b
+                Some(_) => boxed(move |ex| {
+                    let out = unsafe { slot_mut(ex, slot) };
+                    for (o, &x) in out.iter_mut().zip(src_slice(ex, a)) {
+                        *o += x;
+                    }
+                }),
+                None => boxed(move |ex| {
+                    let out = unsafe { slot_mut(ex, slot) };
+                    let ta = src_slice(ex, a);
+                    let tb = src_slice(ex, b);
+                    for ((o, &x), &y) in out.iter_mut().zip(ta).zip(tb) {
+                        *o = x + y;
+                    }
+                }),
+            }
+        }
+        Instr::Elem(f, a) => {
+            let f = elem_fn(*f);
+            let a = *a;
+            match lw.inplace_arg[p] {
+                Some(_) => boxed(move |ex| {
+                    let out = unsafe { slot_mut(ex, slot) };
+                    for o in out.iter_mut() {
+                        *o = f(*o);
+                    }
+                }),
+                None => boxed(move |ex| {
+                    let out = unsafe { slot_mut(ex, slot) };
+                    for (o, &x) in out.iter_mut().zip(src_slice(ex, a)) {
+                        *o = f(x);
+                    }
+                }),
+            }
+        }
+        Instr::Mul(a, b, plan, epi) => {
+            let (a, b) = (*a, *b);
+            let plan = plan.clone();
+            let scr = mp.scratch[p].expect("contraction scratch planned");
+            match epi {
+                None => boxed(move |ex| {
+                    let out = unsafe { slot_mut(ex, slot) };
+                    let ta = src_slice(ex, a);
+                    let tb = src_slice(ex, b);
+                    // SAFETY: scratch slots are exclusive to this
+                    // instruction while it runs (planner invariant).
+                    let (sa, sb, sc) = unsafe {
+                        (slot_mut(ex, scr[0]), slot_mut(ex, scr[1]), slot_mut(ex, scr[2]))
+                    };
+                    IDX_SCRATCH.with(|idx_cell| {
+                        let mut idx = idx_cell.borrow_mut();
+                        plan.run_planned(ta, tb, out, sa, sb, sc, &mut idx, &NoEpilogue);
+                    });
+                }),
+                Some(e) => {
+                    let kernel = e.kernel.clone();
+                    let args = e.args.clone();
+                    let mode = lw.epilogue_mode;
+                    boxed(move |ex| {
+                        let out = unsafe { slot_mut(ex, slot) };
+                        let ta = src_slice(ex, a);
+                        let tb = src_slice(ex, b);
+                        // SAFETY: planner invariant, as above.
+                        let (sa, sb, sc) = unsafe {
+                            (slot_mut(ex, scr[0]), slot_mut(ex, scr[1]), slot_mut(ex, scr[2]))
+                        };
+                        let srcs = fused_srcs_planned(&args, ex, out.len());
+                        let rest = &srcs[..args.len()];
+                        IDX_SCRATCH.with(|idx_cell| {
+                            let mut idx = idx_cell.borrow_mut();
+                            match mode {
+                                EpilogueMode::InTile => {
+                                    let tile_epi = EpiFn(|base: usize, seg: &mut [f64]| {
+                                        kernel.run_inplace_at(seg, base, rest)
+                                    });
+                                    plan.run_planned(
+                                        ta, tb, out, sa, sb, sc, &mut idx, &tile_epi,
+                                    );
+                                }
+                                EpilogueMode::TwoPass => {
+                                    plan.run_planned(
+                                        ta,
+                                        tb,
+                                        out,
+                                        sa,
+                                        sb,
+                                        sc,
+                                        &mut idx,
+                                        &NoEpilogue,
+                                    );
+                                    kernel.run_inplace(out, rest);
+                                }
+                            }
+                        });
+                    })
+                }
+            }
+        }
+        Instr::GenUnary(f, a, epi) => {
+            let (gf, a) = (*f, *a);
+            let last_dim = *lw.shapes[a].last().expect("GenFn needs rank ≥ 1");
+            match epi {
+                None => boxed(move |ex| {
+                    let out = unsafe { slot_mut(ex, slot) };
+                    gen_unary_into(gf, src_slice(ex, a), last_dim, out);
+                }),
+                Some(e) => {
+                    let kernel = e.kernel.clone();
+                    let args = e.args.clone();
+                    boxed(move |ex| {
+                        let out = unsafe { slot_mut(ex, slot) };
+                        gen_unary_into(gf, src_slice(ex, a), last_dim, out);
+                        let srcs = fused_srcs_planned(&args, ex, out.len());
+                        kernel.run_inplace(out, &srcs[..args.len()]);
+                    })
+                }
+            }
+        }
+        Instr::Fused { kernel, args } => {
+            let kernel = kernel.clone();
+            let args = args.clone();
+            match lw.inplace_arg[p] {
+                Some(arg) => boxed(move |ex| {
+                    let out = unsafe { slot_mut(ex, slot) };
+                    // slot `arg` aliases the output; resolve the others
+                    let srcs = fused_srcs_planned_except(&args, ex, out.len(), arg);
+                    kernel.run_inplace_arg(out, arg as u32, &srcs[..args.len()]);
+                }),
+                None => boxed(move |ex| {
+                    let out = unsafe { slot_mut(ex, slot) };
+                    let srcs = fused_srcs_planned(&args, ex, out.len());
+                    kernel.run(&srcs[..args.len()], out);
+                }),
+            }
+        }
+    };
+    Some(op)
+}

@@ -1,0 +1,240 @@
+//! The backend seam: a [`Lowered`] instruction stream is turned into an
+//! executable artifact by a [`Backend`] implementation.
+//!
+//! The contract is deliberately narrow. Lowering (`exec::lower`) decides
+//! *what* runs — the fused instruction stream, dependency levels,
+//! buffer lifetimes, the static arena layout. A backend decides only
+//! *how* it runs:
+//!
+//! * [`cpu`] — the work-stealing, level-parallel executor on the
+//!   persistent worker pool: the production CPU path, extracted from the
+//!   pre-seam `CompiledPlan` by code motion. It is also the only
+//!   backend implementing the pooled-memory ablation mode.
+//! * [`direct`] — a direct-threaded second lowering: every instruction
+//!   is compiled into one monomorphized boxed closure (arena offsets,
+//!   scratch slots, operand kinds and epilogue placement resolved at
+//!   backend-compile time), and a run is a sequential walk of the
+//!   closure chain. A latency play for the small/skinny plans the
+//!   serving path sees at low batch sizes — and the proof that the seam
+//!   is real: it shares no executor code with [`cpu`], only the
+//!   kernels.
+//!
+//! Both backends execute **in-arena** through [`Backend::exec_arena`]:
+//! the facade (`exec::CompiledPlan`) checks out a run state, resolves
+//! every instruction's value source into an [`ArenaExec`], and hands it
+//! to the backend; root extraction, leasing and run-state recycling stay
+//! in the facade so every backend gets them for free. Pooled-mode
+//! execution ([`Backend::run_pooled`]) is optional — backends that only
+//! execute in-arena (the direct one) simply force the memory plan to be
+//! built at lowering time.
+//!
+//! Every backend is pinned bit-identical to every other **and**
+//! differentially against the interpreter oracle
+//! (`tests/backend_equivalence.rs`); a future PJRT/GPU backend slots in
+//! as a third implementation of the same trait, with the same tests.
+
+pub mod cpu;
+pub mod direct;
+
+use crate::eval::Env;
+use crate::ir::GenFn;
+use crate::tensor::Tensor;
+use std::cell::RefCell;
+
+use super::lower::{FusedSrc, Lowered, FUSED_MAX_ARGS};
+use super::memplan::Slot;
+use super::PoolStats;
+
+/// Which executor a plan compiles its instruction stream for. Part of
+/// the plan-cache key: plans for different backends are distinct
+/// artifacts.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, Default)]
+pub enum BackendKind {
+    /// The work-stealing, level-parallel executor on the persistent
+    /// worker pool — the production CPU path and the default.
+    #[default]
+    Cpu,
+    /// The direct-threaded executor: one monomorphized closure per
+    /// instruction, run sequentially in-arena. Lowest dispatch overhead;
+    /// best for small/skinny serving plans.
+    Direct,
+}
+
+impl BackendKind {
+    /// Stable name used by the CLI flag and the bench mode labels.
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Cpu => "cpu",
+            BackendKind::Direct => "direct",
+        }
+    }
+
+    /// Parse a CLI/bench name. Inverse of [`BackendKind::name`].
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "cpu" => Some(BackendKind::Cpu),
+            "direct" => Some(BackendKind::Direct),
+            _ => None,
+        }
+    }
+}
+
+/// An executable compiled from a [`Lowered`] stream. See the module
+/// docs for the split of responsibilities between lowering, the facade
+/// and the backend.
+pub trait Backend: Send + Sync {
+    /// Which kind this executable is (mirrors the compile request).
+    fn kind(&self) -> BackendKind;
+
+    /// Execute every instruction of an in-arena run. `ex` carries the
+    /// arena base and the per-instruction source table the facade
+    /// resolved; on return every root's slot holds its value.
+    fn exec_arena(&self, lw: &Lowered, ex: &ArenaExec<'_>);
+
+    /// Execute a pooled-memory run (the [`ExecMemory::Pooled`]
+    /// ablation). Only the CPU backend implements this; in-arena-only
+    /// backends never reach it because they force the memory plan at
+    /// lowering time.
+    ///
+    /// [`ExecMemory::Pooled`]: super::ExecMemory::Pooled
+    fn run_pooled(&self, _lw: &Lowered, _env: &Env) -> Vec<Tensor> {
+        unreachable!("this backend executes in-arena only")
+    }
+
+    /// Merge the backend's own counters (pool hits, lock counts) into a
+    /// stats snapshot. Backends without a pool report nothing.
+    fn fold_stats(&self, _stats: &mut PoolStats) {}
+}
+
+/// Compile a [`Lowered`] stream for `kind`. The CPU backend is a thin
+/// runtime over the stream; the direct backend walks the stream once
+/// here and emits its closure chain.
+pub(crate) fn compile(kind: BackendKind, lw: &Lowered) -> Box<dyn Backend> {
+    match kind {
+        BackendKind::Cpu => Box::new(cpu::CpuBackend::default()),
+        BackendKind::Direct => Box::new(direct::DirectBackend::compile(lw)),
+    }
+}
+
+/// Shared view of one in-arena run handed to a backend: the arena base
+/// plus the per-instruction source table.
+///
+/// SAFETY (for the `Sync` impl): each executor writes only its own
+/// instructions' output slots, and the memory planner guarantees that a
+/// slot written in level `L` overlaps no slot read or written by any
+/// other instruction live in `L` (`MemPlan::check_no_overlap`).
+pub struct ArenaExec<'r> {
+    pub(crate) base: *mut f64,
+    pub(crate) srcs: &'r [(*const f64, usize)],
+}
+
+unsafe impl Sync for ArenaExec<'_> {}
+
+/// Operand slice of instruction `q` (env tensor, static, or arena slot).
+#[inline]
+pub(crate) fn src_slice<'r>(ex: &ArenaExec<'r>, q: usize) -> &'r [f64] {
+    let (ptr, len) = ex.srcs[q];
+    // SAFETY: see ArenaExec — the pointee outlives the run and no &mut
+    // to the same region exists while this borrow is used.
+    unsafe { std::slice::from_raw_parts(ptr, len) }
+}
+
+/// Mutable view of an arena slot.
+///
+/// SAFETY: caller must be the (sole) instruction that owns `slot` in the
+/// current level — guaranteed by the memory plan.
+#[inline]
+#[allow(clippy::mut_from_ref)] // disjointness is the planner's invariant
+pub(crate) unsafe fn slot_mut<'r>(ex: &ArenaExec<'r>, slot: Slot) -> &'r mut [f64] {
+    std::slice::from_raw_parts_mut(ex.base.add(slot.off), slot.len)
+}
+
+thread_local! {
+    /// Per-thread odometer scratch for in-arena einsum gathers — the
+    /// one scratch that cannot live in the `f64` arena. Persistent pool
+    /// workers keep it warm across scopes, plans and coordinator
+    /// entries.
+    pub(crate) static IDX_SCRATCH: RefCell<Vec<usize>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Resolve fused-kernel operand slots through an in-arena run's source
+/// table: operands matching the output length stream per element,
+/// rank-0 operands broadcast. (Group construction guarantees every slot
+/// is one of the two.)
+///
+/// Returns a fixed-size stack array — the group builder caps kernels at
+/// `FUSED_MAX_ARGS` operand slots, so resolution costs zero heap
+/// allocations and the steady-state hot path is strictly alloc-free
+/// (callers slice the array to `args.len()`).
+pub(crate) fn fused_srcs_planned<'r>(
+    args: &[usize],
+    ex: &ArenaExec<'r>,
+    out_len: usize,
+) -> [FusedSrc<'r>; FUSED_MAX_ARGS] {
+    debug_assert!(args.len() <= FUSED_MAX_ARGS, "group builder must cap operand slots");
+    let mut srcs = [FusedSrc::Scalar(0.0); FUSED_MAX_ARGS];
+    for (slot, &q) in args.iter().enumerate() {
+        let s = src_slice(ex, q);
+        srcs[slot] = if s.len() == out_len {
+            FusedSrc::Slice(s)
+        } else {
+            FusedSrc::Scalar(s[0])
+        };
+    }
+    srcs
+}
+
+/// [`fused_srcs_planned`] minus the slot that aliases the output of an
+/// in-place fused instruction: that operand's bytes *are* the output
+/// buffer, so no shared slice to it may exist — the kernel reads it as
+/// the carrier instead (`FusedKernel::run_inplace_arg`).
+pub(crate) fn fused_srcs_planned_except<'r>(
+    args: &[usize],
+    ex: &ArenaExec<'r>,
+    out_len: usize,
+    skip: usize,
+) -> [FusedSrc<'r>; FUSED_MAX_ARGS] {
+    debug_assert!(args.len() <= FUSED_MAX_ARGS, "group builder must cap operand slots");
+    let mut srcs = [FusedSrc::Scalar(0.0); FUSED_MAX_ARGS];
+    for (slot, &q) in args.iter().enumerate() {
+        if slot == skip {
+            continue; // dummy: Load(skip) reads the carrier value
+        }
+        let s = src_slice(ex, q);
+        srcs[slot] = if s.len() == out_len {
+            FusedSrc::Slice(s)
+        } else {
+            FusedSrc::Scalar(s[0])
+        };
+    }
+    srcs
+}
+
+/// Write-into evaluation of the general unary functions (mirrors
+/// `GenFn::eval` but targets a raw buffer — pooled or arena-planned).
+/// `n` is the operand's trailing dimension; rank-0 inputs are rejected
+/// at lowering time.
+pub(crate) fn gen_unary_into(f: GenFn, data: &[f64], n: usize, out: &mut [f64]) {
+    match f {
+        GenFn::Softmax => {
+            out.copy_from_slice(data);
+            for row in out.chunks_mut(n) {
+                let m = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let mut z = 0.0;
+                for v in row.iter_mut() {
+                    *v = (*v - m).exp();
+                    z += *v;
+                }
+                for v in row.iter_mut() {
+                    *v /= z;
+                }
+            }
+        }
+        GenFn::LogSumExp => {
+            for (o, row) in out.iter_mut().zip(data.chunks(n)) {
+                let m = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                *o = m + row.iter().map(|v| (v - m).exp()).sum::<f64>().ln();
+            }
+        }
+    }
+}

@@ -1,0 +1,770 @@
+//! Backend-neutral lowering: expression DAG → dense [`Instr`] stream.
+//!
+//! Everything that happens **before** "how instructions run" lives here:
+//! descriptor lowering, the cross-node fusion pass (element-wise
+//! chains/trees collapse into [`FusedKernel`] postfix programs or ride
+//! contractions as in-place epilogues), dependency levelling with the
+//! flop estimates the schedulers gate on, buffer liveness, and the
+//! static memory plan. The result — a [`Lowered`] — is the artifact the
+//! [`backend`](super::backend) layer compiles into an executable: the
+//! same `Lowered` drives the work-stealing CPU executor and the
+//! direct-threaded closure backend, which is what makes the backends
+//! bit-identical by construction (same stream, same kernels, same
+//! accumulation order).
+
+use crate::einsum::{EinSpec, EinsumPlan, Label};
+use crate::ir::{Elem, GenFn, Graph, NodeId, Op};
+use crate::tensor::Tensor;
+use crate::util::{num_threads, PAR_BATCH_TOTAL_MIN_FLOP, PAR_LEVEL_MIN_FLOP, STEAL_CHUNKS_PER_THREAD};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::memplan::{MemPlan, PlanInput};
+use super::{EpilogueMode, ExecMemory};
+
+/// Maximum value-stack depth of a [`FusedKernel`] postfix program; the
+/// group builder stops inlining before a kernel could exceed it.
+pub(crate) const FUSED_MAX_STACK: usize = 16;
+
+/// Maximum number of operand slots of a [`FusedKernel`]. The group
+/// builder enforces it (pending-leaf accounting in
+/// [`GroupBuilder::operand`]), which lets the executors resolve operands
+/// into a fixed-size stack array per instruction — no heap allocation on
+/// the steady-state hot path.
+pub(crate) const FUSED_MAX_ARGS: usize = 16;
+
+/// One step of a fused single-pass pipeline (postfix form).
+#[derive(Clone, Copy)]
+pub(crate) enum FusedOp {
+    /// Push element `i` (or the broadcast scalar) of operand slot `k`.
+    Load(u32),
+    /// Apply an element-wise function to the top of the stack.
+    Un(Elem),
+    /// Pop two values, push their sum.
+    Add,
+    /// Pop two values, push their product.
+    Mul,
+}
+
+/// A collapsed chain/tree of `Elem` / `Add` / Hadamard- and
+/// scalar-`Mul` nodes evaluated in one pass over the data: for every
+/// element index the postfix program runs over a fixed-size value
+/// stack, reading operand slots and producing one output value — zero
+/// intermediate buffers regardless of the chain depth. `Clone` so the
+/// direct-threaded backend can bake a kernel into its closure chain.
+#[derive(Clone)]
+pub(crate) struct FusedKernel {
+    pub(crate) ops: Vec<FusedOp>,
+}
+
+/// An operand slot resolved for one execution: same-shape operands are
+/// read per element, rank-0 operands broadcast one value. `Copy` so a
+/// whole slot array can live on the stack.
+#[derive(Clone, Copy)]
+pub(crate) enum FusedSrc<'s> {
+    Slice(&'s [f64]),
+    Scalar(f64),
+}
+
+impl FusedSrc<'_> {
+    #[inline]
+    pub(crate) fn at(&self, i: usize) -> f64 {
+        match self {
+            FusedSrc::Slice(s) => s[i],
+            FusedSrc::Scalar(v) => *v,
+        }
+    }
+}
+
+impl FusedKernel {
+    /// `out[i] = program(srcs, i)`; `Load(k)` reads `srcs[k]`.
+    pub(crate) fn run(&self, srcs: &[FusedSrc], out: &mut [f64]) {
+        let mut stack = [0.0f64; FUSED_MAX_STACK];
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = self.eval_one(&mut stack, |k| srcs[k].at(i));
+        }
+    }
+
+    /// In-place epilogue on a producer's output: `Load(0)` reads the
+    /// buffer value being replaced, `Load(k ≥ 1)` reads `rest[k-1]`.
+    pub(crate) fn run_inplace(&self, buf: &mut [f64], rest: &[FusedSrc]) {
+        self.run_inplace_at(buf, 0, rest);
+    }
+
+    /// [`FusedKernel::run_inplace`] on a tile: `buf[j]` is global flat
+    /// output element `base + j`, so operand slots resolve correctly
+    /// from inside GEMM tiles, row bands and batch slices.
+    pub(crate) fn run_inplace_at(&self, buf: &mut [f64], base: usize, rest: &[FusedSrc]) {
+        let mut stack = [0.0f64; FUSED_MAX_STACK];
+        for (j, slot) in buf.iter_mut().enumerate() {
+            let carrier = *slot;
+            *slot = self.eval_one(&mut stack, |k| {
+                if k == 0 {
+                    carrier
+                } else {
+                    rest[k - 1].at(base + j)
+                }
+            });
+        }
+    }
+
+    /// The planned executor's in-place form: operand slot `arg` aliases
+    /// the output buffer, so `Load(arg)` reads the value being replaced
+    /// while every other slot reads `srcs` at its *original* position
+    /// (`srcs[arg]` is a dummy, never touched). Bit-identical to
+    /// [`FusedKernel::run`] with the aliased operand materialised.
+    pub(crate) fn run_inplace_arg(&self, buf: &mut [f64], arg: u32, srcs: &[FusedSrc]) {
+        let arg = arg as usize;
+        let mut stack = [0.0f64; FUSED_MAX_STACK];
+        for (i, out) in buf.iter_mut().enumerate() {
+            let carrier = *out;
+            *out = self.eval_one(&mut stack, |k| {
+                if k == arg {
+                    carrier
+                } else {
+                    srcs[k].at(i)
+                }
+            });
+        }
+    }
+
+    /// The one postfix interpreter every execution form shares: `load`
+    /// resolves `Load(k)` (per-element slice read, broadcast scalar, or
+    /// the in-place carrier value, depending on the caller's slot
+    /// convention).
+    #[inline]
+    fn eval_one<L: Fn(usize) -> f64>(
+        &self,
+        stack: &mut [f64; FUSED_MAX_STACK],
+        load: L,
+    ) -> f64 {
+        let mut sp = 0usize;
+        for op in &self.ops {
+            match op {
+                FusedOp::Load(k) => {
+                    stack[sp] = load(*k as usize);
+                    sp += 1;
+                }
+                FusedOp::Un(f) => stack[sp - 1] = f.apply(stack[sp - 1]),
+                FusedOp::Add => {
+                    sp -= 1;
+                    stack[sp - 1] += stack[sp];
+                }
+                FusedOp::Mul => {
+                    sp -= 1;
+                    stack[sp - 1] *= stack[sp];
+                }
+            }
+        }
+        debug_assert_eq!(sp, 1, "fused program must leave exactly one value");
+        stack[0]
+    }
+}
+
+/// A fused chain applied in place on a producer's freshly written
+/// output (slot 0 of the kernel is the produced value itself).
+pub(crate) struct Epilogue {
+    pub(crate) kernel: FusedKernel,
+    /// operand positions for kernel slots `1..` (slot 0 is the carrier)
+    pub(crate) args: Vec<usize>,
+}
+
+/// One lowered node. Operands are dense positions into the instruction
+/// stream (not `NodeId`s), so execution never touches the `Graph`. The
+/// stream is backend-neutral: every backend consumes exactly this.
+pub(crate) enum Instr {
+    /// Bind the named input from the `Env` (shape-checked, zero-copy).
+    Var { name: String, shape: Vec<usize> },
+    /// A `Const`/`Delta` tensor materialised once at compile time.
+    Static(usize),
+    Add(usize, usize),
+    /// Pre-compiled contraction (strides/pre-sums/permutation resolved),
+    /// optionally with a fused element-wise epilogue applied in place.
+    /// `Arc` so a backend can bake the plan into its own artifact.
+    Mul(usize, usize, Arc<EinsumPlan>, Option<Epilogue>),
+    Elem(Elem, usize),
+    GenUnary(GenFn, usize, Option<Epilogue>),
+    /// A collapsed element-wise chain/tree evaluated in one pass.
+    Fused { kernel: FusedKernel, args: Vec<usize> },
+}
+
+/// Intermediate lowering of one node, before the fusion pass decides
+/// which nodes survive as instructions.
+enum DescKind {
+    Var(String),
+    Static(usize),
+    Add(usize, usize),
+    Mul(usize, usize, EinsumPlan),
+    Elem(Elem, usize),
+    GenUnary(GenFn, usize),
+}
+
+fn desc_operands(d: &DescKind) -> Vec<usize> {
+    match d {
+        DescKind::Add(a, b) | DescKind::Mul(a, b, _) => vec![*a, *b],
+        DescKind::Elem(_, a) | DescKind::GenUnary(_, a) => vec![*a],
+        DescKind::Var(_) | DescKind::Static(_) => Vec::new(),
+    }
+}
+
+/// Fusion-pass classification of a node: how it reads its operands when
+/// evaluated element by element.
+#[derive(Clone, Copy)]
+enum FuseNode {
+    Un(Elem, usize),
+    Add2(usize, usize),
+    /// element-wise product of two same-shape operands
+    Had(usize, usize),
+    /// `(tensor, scalar)`: tensor scaled by a broadcast rank-0 operand
+    Scale(usize, usize),
+}
+
+fn all_distinct(ls: &[Label]) -> bool {
+    ls.iter().enumerate().all(|(i, l)| !ls[i + 1..].contains(l))
+}
+
+/// Classify a `Mul` node as element-wise fusable: a Hadamard product of
+/// same-shape operands, or a scalar broadcast scale. Anything with
+/// summed labels, diagonals or permuted outputs stays a contraction.
+fn classify_mul(
+    spec: &EinSpec,
+    a_shape: &[usize],
+    b_shape: &[usize],
+    pa: usize,
+    pb: usize,
+) -> Option<FuseNode> {
+    if spec.is_elementwise() && all_distinct(&spec.s1) {
+        return Some(FuseNode::Had(pa, pb));
+    }
+    if b_shape.is_empty() && spec.s2.is_empty() && spec.s3 == spec.s1 && all_distinct(&spec.s1) {
+        return Some(FuseNode::Scale(pa, pb));
+    }
+    if a_shape.is_empty() && spec.s1.is_empty() && spec.s3 == spec.s2 && all_distinct(&spec.s2) {
+        return Some(FuseNode::Scale(pb, pa));
+    }
+    None
+}
+
+/// A fused group under construction: the postfix program, its leaf
+/// operands (pre-fusion stream positions, slot order) and how many
+/// loads each leaf received — the epilogue-carrier check needs the
+/// latter to prove all of a producer's uses live inside the group.
+#[derive(Default)]
+struct Group {
+    ops: Vec<FusedOp>,
+    leaves: Vec<usize>,
+    leaf_loads: Vec<usize>,
+    n_nodes: usize,
+    /// melted producer applied in place (pre-fusion position)
+    carrier: Option<usize>,
+}
+
+impl Group {
+    fn push_leaf(&mut self, o: usize) {
+        let slot = match self.leaves.iter().position(|&q| q == o) {
+            Some(s) => s,
+            None => {
+                self.leaves.push(o);
+                self.leaf_loads.push(0);
+                self.leaves.len() - 1
+            }
+        };
+        self.leaf_loads[slot] += 1;
+        self.ops.push(FusedOp::Load(slot as u32));
+    }
+
+    /// Re-number slots for epilogue form: the carrier slot becomes
+    /// `Load(0)`, remaining leaves shift to slots `1..` in order.
+    fn rewrite_for_carrier(&mut self, slot: usize) {
+        for op in self.ops.iter_mut() {
+            if let FusedOp::Load(k) = op {
+                let k0 = *k as usize;
+                *k = if k0 == slot {
+                    0
+                } else if k0 < slot {
+                    (k0 + 1) as u32
+                } else {
+                    k0 as u32
+                };
+            }
+        }
+        self.carrier = Some(self.leaves.remove(slot));
+        self.leaf_loads.remove(slot);
+    }
+}
+
+/// Shared context of one group build (the fusion pass working over the
+/// pre-fusion descriptor stream).
+struct GroupBuilder<'c> {
+    fusable: &'c [Option<FuseNode>],
+    uses: &'c [usize],
+    is_root: &'c [bool],
+    shapes: &'c [Vec<usize>],
+    group_shape: &'c [usize],
+}
+
+impl GroupBuilder<'_> {
+    /// Emit the postfix program of member `p`; the value stack already
+    /// holds `held` entries when the member starts executing, and
+    /// enclosing members will still load `pending` more leaves after
+    /// this member returns (the operand-slot budget mirrors how `held`
+    /// budgets the value stack).
+    fn member(&self, p: usize, held: usize, pending: usize, melted: &mut [bool], grp: &mut Group) {
+        grp.n_nodes += 1;
+        match self.fusable[p].expect("group member must be fusable") {
+            FuseNode::Un(f, a) => {
+                self.operand(a, held, pending, melted, grp);
+                grp.ops.push(FusedOp::Un(f));
+            }
+            FuseNode::Add2(a, b) => {
+                self.operand(a, held, pending + 1, melted, grp);
+                self.operand(b, held + 1, pending, melted, grp);
+                grp.ops.push(FusedOp::Add);
+            }
+            FuseNode::Had(a, b) => {
+                self.operand(a, held, pending + 1, melted, grp);
+                self.operand(b, held + 1, pending, melted, grp);
+                grp.ops.push(FusedOp::Mul);
+            }
+            FuseNode::Scale(t, s) => {
+                self.operand(t, held, pending + 1, melted, grp);
+                // the rank-0 operand broadcasts per run, not per
+                // element: always a leaf
+                grp.push_leaf(s);
+                grp.ops.push(FusedOp::Mul);
+            }
+        }
+    }
+
+    /// Inline operand `o` when it is fusable, consumed only here, not a
+    /// plan root, shape-preserving, and both the value stack and the
+    /// operand-slot array have headroom (an inlined member adds at most
+    /// two direct leaves, and `pending` siblings still follow);
+    /// otherwise record it as a leaf.
+    fn operand(
+        &self,
+        o: usize,
+        held: usize,
+        pending: usize,
+        melted: &mut [bool],
+        grp: &mut Group,
+    ) {
+        let inline = held + 2 <= FUSED_MAX_STACK
+            && grp.leaves.len() + pending + 2 <= FUSED_MAX_ARGS
+            && !self.is_root[o]
+            && self.uses[o] == 1
+            && self.fusable[o].is_some()
+            && self.shapes[o].as_slice() == self.group_shape;
+        if inline {
+            melted[o] = true;
+            self.member(o, held, pending, melted, grp);
+        } else {
+            grp.push_leaf(o);
+        }
+    }
+}
+
+/// Operand positions of one instruction (epilogue arguments included).
+pub(crate) fn operands(instr: &Instr) -> Vec<usize> {
+    let mut v = match instr {
+        Instr::Add(a, b) | Instr::Mul(a, b, _, _) => vec![*a, *b],
+        Instr::Elem(_, a) | Instr::GenUnary(_, a, _) => vec![*a],
+        Instr::Fused { args, .. } => args.clone(),
+        Instr::Var { .. } | Instr::Static(_) => Vec::new(),
+    };
+    match instr {
+        Instr::Mul(_, _, _, Some(e)) | Instr::GenUnary(_, _, Some(e)) => v.extend(&e.args),
+        _ => {}
+    }
+    v
+}
+
+/// The backend-neutral compilation artifact: the fused instruction
+/// stream plus every compile-time decision a backend needs to execute
+/// it — dependency levels with their flop estimates, buffer lifetimes,
+/// the static memory plan, and the ablation toggles the plan was
+/// compiled under. A [`Backend`](super::backend::Backend) turns a
+/// `Lowered` into something runnable; the lowering itself never says
+/// *how* instructions run.
+pub struct Lowered {
+    pub(crate) instrs: Vec<Instr>,
+    pub(crate) shapes: Vec<Vec<usize>>,
+    pub(crate) statics: Vec<Tensor>,
+    /// instruction positions grouped by dependency depth (level 0 first);
+    /// nodes within one level are independent and may run in parallel
+    pub(crate) levels: Vec<Vec<usize>>,
+    /// estimated flops per level — gates the worker-pool fork
+    pub(crate) level_flops: Vec<usize>,
+    /// largest *internally parallel* (GEMM) flop estimate per level —
+    /// levels whose contractions parallelise internally (row bands /
+    /// batch splits) run serially at the level layer to avoid
+    /// nested-fork oversubscription
+    pub(crate) level_max_flops: Vec<usize>,
+    /// positions whose value dies after each level (returned to the pool;
+    /// pooled mode only — the planner bakes lifetimes into offsets)
+    pub(crate) free_at_level: Vec<Vec<usize>>,
+    pub(crate) root_pos: Vec<usize>,
+    /// where contraction epilogues run (in-tile vs two-pass ablation)
+    pub(crate) epilogue_mode: EpilogueMode,
+    /// where intermediates live (planned arena vs pooled ablation)
+    pub(crate) memory: ExecMemory,
+    /// the static memory plan (`Some` whenever the plan executes
+    /// in-arena: planned mode, or any backend that requires an arena)
+    pub(crate) memplan: Option<MemPlan>,
+    /// per instruction: operand index *within the instruction* whose
+    /// dying slot the output takes over in place (in-arena only; for
+    /// `Fused` this is the kernel's operand slot)
+    pub(crate) inplace_arg: Vec<Option<usize>>,
+}
+
+impl Lowered {
+    /// The level fork gate shared by **all** level-parallel execution:
+    /// fork only for many-small-node levels — a node whose contraction
+    /// exceeds `PAR_BATCH_TOTAL_MIN_FLOP` forks its own row bands /
+    /// batch splits inside the GEMM, and nesting both layers would
+    /// oversubscribe the cores. Returns `(participants, steal-chunk
+    /// size)` when the level should fork, `None` to run it serially.
+    /// Keeping the gate and the chunk formula in one place is part of
+    /// the bit-identical contract between memory modes: they must
+    /// schedule identically.
+    pub(crate) fn level_fork(&self, lv: usize, level_len: usize) -> Option<(usize, usize)> {
+        let nt = num_threads().min(level_len);
+        if nt > 1
+            && self.level_flops[lv] >= PAR_LEVEL_MIN_FLOP
+            && self.level_max_flops[lv] <= PAR_BATCH_TOTAL_MIN_FLOP
+        {
+            Some((nt, (level_len / (nt * STEAL_CHUNKS_PER_THREAD)).max(1)))
+        } else {
+            None
+        }
+    }
+}
+
+/// Lower the sub-DAG of `g` reachable from `roots` to a backend-neutral
+/// [`Lowered`]: descriptors → fusion → dense stream → levels/liveness →
+/// memory plan. `force_arena` builds the static memory plan even under
+/// [`ExecMemory::Pooled`] — for backends (like the direct-threaded one)
+/// that only execute in-arena.
+pub(crate) fn lower(
+    g: &Graph,
+    roots: &[NodeId],
+    fuse: bool,
+    epilogue_mode: EpilogueMode,
+    memory: ExecMemory,
+    force_arena: bool,
+) -> Lowered {
+    let order = g.topo(roots);
+    let n = order.len();
+    let mut pos_of: HashMap<NodeId, usize> = HashMap::with_capacity(n);
+    for (i, &id) in order.iter().enumerate() {
+        pos_of.insert(id, i);
+    }
+
+    // -- lower every reachable node to a descriptor --
+    let mut descs: Vec<Option<DescKind>> = Vec::with_capacity(n);
+    let mut shapes: Vec<Vec<usize>> = Vec::with_capacity(n);
+    let mut statics: Vec<Tensor> = Vec::new();
+    let mut base_flops: Vec<usize> = vec![0; n];
+    let mut fusable: Vec<Option<FuseNode>> = Vec::with_capacity(n);
+    for (i, &id) in order.iter().enumerate() {
+        let shape = g.shape(id).to_vec();
+        let out_len: usize = shape.iter().product();
+        let (kind, fnode) = match g.op(id) {
+            Op::Var(name) => (DescKind::Var(name.clone()), None),
+            Op::Const(bits) => {
+                statics.push(Tensor::fill(&shape, f64::from_bits(*bits)));
+                (DescKind::Static(statics.len() - 1), None)
+            }
+            Op::Delta { dims } => {
+                statics.push(Tensor::delta(dims));
+                (DescKind::Static(statics.len() - 1), None)
+            }
+            Op::Add(a, b) => {
+                let (pa, pb) = (pos_of[a], pos_of[b]);
+                (DescKind::Add(pa, pb), Some(FuseNode::Add2(pa, pb)))
+            }
+            Op::Mul(a, b, spec) => {
+                let plan = EinsumPlan::new(spec, g.shape(*a), g.shape(*b));
+                base_flops[i] = plan.iteration_space();
+                let (pa, pb) = (pos_of[a], pos_of[b]);
+                let f = classify_mul(spec, g.shape(*a), g.shape(*b), pa, pb);
+                (DescKind::Mul(pa, pb, plan), f)
+            }
+            Op::Elem(f, a) => {
+                let pa = pos_of[a];
+                (DescKind::Elem(*f, pa), Some(FuseNode::Un(*f, pa)))
+            }
+            Op::GenUnary(f, a) => {
+                // the interpreter's contract, enforced at *compile*
+                // time — a mid-run panic in gen_unary_into would
+                // poison pooled buffers
+                assert!(
+                    !g.shape(*a).is_empty(),
+                    "GenUnary({}) needs a rank ≥ 1 operand (got rank 0)",
+                    f.name()
+                );
+                (DescKind::GenUnary(*f, pos_of[a]), None)
+            }
+        };
+        if base_flops[i] == 0 && !matches!(kind, DescKind::Var(_) | DescKind::Static(_)) {
+            base_flops[i] = out_len;
+        }
+        descs.push(Some(kind));
+        shapes.push(shape);
+        fusable.push(if fuse { fnode } else { None });
+    }
+
+    // -- consumer counts over the pre-fusion stream (roots count) --
+    let root_old: Vec<usize> = roots.iter().map(|r| pos_of[r]).collect();
+    let mut uses = vec![0usize; n];
+    for d in &descs {
+        for o in desc_operands(d.as_ref().expect("desc present")) {
+            uses[o] += 1;
+        }
+    }
+    let mut is_root = vec![false; n];
+    for &r in &root_old {
+        uses[r] += 1;
+        is_root[r] = true;
+    }
+
+    // -- fusion pass: greedy maximal groups, processed root-down --
+    let mut melted = vec![false; n];
+    let mut groups: Vec<Option<Group>> = Vec::with_capacity(n);
+    groups.resize_with(n, || None);
+    for p in (0..n).rev() {
+        if melted[p] || fusable[p].is_none() {
+            continue;
+        }
+        let builder = GroupBuilder {
+            fusable: &fusable,
+            uses: &uses,
+            is_root: &is_root,
+            shapes: &shapes,
+            group_shape: &shapes[p],
+        };
+        let mut grp = Group::default();
+        builder.member(p, 0, 0, &mut melted, &mut grp);
+        // epilogue carrier: a contraction / general unary consumed
+        // only by this group, producing exactly the group shape
+        let carrier_slot = grp.leaves.iter().enumerate().find_map(|(slot, &l)| {
+            let eligible = !is_root[l]
+                && shapes[l].as_slice() == shapes[p].as_slice()
+                && grp.leaf_loads[slot] == uses[l]
+                && matches!(
+                    descs[l].as_ref().expect("desc present"),
+                    DescKind::Mul(..) | DescKind::GenUnary(..)
+                );
+            eligible.then_some(slot)
+        });
+        if let Some(slot) = carrier_slot {
+            let l = grp.leaves[slot];
+            melted[l] = true;
+            grp.rewrite_for_carrier(slot);
+            groups[p] = Some(grp);
+        } else if grp.n_nodes >= 2 {
+            groups[p] = Some(grp);
+        }
+        // n_nodes == 1 without a carrier: nothing was melted — the
+        // original single instruction is kept as-is
+    }
+
+    // -- emit the fused instruction stream (dense re-map) --
+    let mut remap = vec![usize::MAX; n];
+    let mut instrs: Vec<Instr> = Vec::new();
+    let mut out_shapes: Vec<Vec<usize>> = Vec::new();
+    let mut flops: Vec<usize> = Vec::new();
+    let mut internal_flops: Vec<usize> = Vec::new();
+    for p in 0..n {
+        if melted[p] {
+            continue;
+        }
+        let out_len: usize = shapes[p].iter().product();
+        let (instr, fl, ifl) = if let Some(grp) = groups[p].take() {
+            let args: Vec<usize> = grp.leaves.iter().map(|&q| remap[q]).collect();
+            let kernel = FusedKernel { ops: grp.ops };
+            let chain_fl = grp.n_nodes.saturating_mul(out_len);
+            match grp.carrier {
+                Some(l) => {
+                    let epi = Some(Epilogue { kernel, args });
+                    match descs[l].take().expect("carrier desc present") {
+                        DescKind::Mul(a, b, plan) => {
+                            let gemm_fl = plan.iteration_space();
+                            (
+                                Instr::Mul(remap[a], remap[b], Arc::new(plan), epi),
+                                gemm_fl.saturating_add(chain_fl),
+                                gemm_fl,
+                            )
+                        }
+                        DescKind::GenUnary(f, a) => (
+                            Instr::GenUnary(f, remap[a], epi),
+                            out_len.saturating_add(chain_fl),
+                            0,
+                        ),
+                        _ => unreachable!("carrier must be Mul or GenUnary"),
+                    }
+                }
+                None => (Instr::Fused { kernel, args }, chain_fl, 0),
+            }
+        } else {
+            let instr = match descs[p].take().expect("desc present") {
+                DescKind::Var(name) => Instr::Var { name, shape: shapes[p].clone() },
+                DescKind::Static(i) => Instr::Static(i),
+                DescKind::Add(a, b) => Instr::Add(remap[a], remap[b]),
+                DescKind::Mul(a, b, plan) => {
+                    Instr::Mul(remap[a], remap[b], Arc::new(plan), None)
+                }
+                DescKind::Elem(f, a) => Instr::Elem(f, remap[a]),
+                DescKind::GenUnary(f, a) => Instr::GenUnary(f, remap[a], None),
+            };
+            let ifl = match &instr {
+                Instr::Mul(_, _, plan, _) => plan.iteration_space(),
+                _ => 0,
+            };
+            (instr, base_flops[p], ifl)
+        };
+        remap[p] = instrs.len();
+        instrs.push(instr);
+        out_shapes.push(shapes[p].clone());
+        flops.push(fl);
+        internal_flops.push(ifl);
+    }
+
+    // -- levels / lifetimes over the fused stream --
+    let m = instrs.len();
+    let mut depth: Vec<usize> = vec![0; m];
+    for (i, instr) in instrs.iter().enumerate() {
+        let d = operands(instr)
+            .iter()
+            .map(|&c| depth[c] + 1)
+            .max()
+            .unwrap_or(0);
+        depth[i] = d;
+    }
+    let n_levels = depth.iter().copied().max().map(|d| d + 1).unwrap_or(0);
+    let mut levels: Vec<Vec<usize>> = vec![Vec::new(); n_levels];
+    let mut level_flops: Vec<usize> = vec![0; n_levels];
+    let mut level_max_flops: Vec<usize> = vec![0; n_levels];
+    for (i, &d) in depth.iter().enumerate() {
+        levels[d].push(i);
+        level_flops[d] = level_flops[d].saturating_add(flops[i]);
+        level_max_flops[d] = level_max_flops[d].max(internal_flops[i]);
+    }
+
+    // Buffer lifetimes: a value is released to the pool after the
+    // last level that consumes it. Roots are never released.
+    let mut last_level: Vec<Option<usize>> = vec![None; m];
+    for (i, instr) in instrs.iter().enumerate() {
+        for &c in operands(instr).iter() {
+            let lvl = depth[i];
+            last_level[c] = Some(last_level[c].map_or(lvl, |p| p.max(lvl)));
+        }
+    }
+    let root_pos: Vec<usize> = root_old.iter().map(|&r| remap[r]).collect();
+    for &r in &root_pos {
+        last_level[r] = None;
+    }
+    let mut free_at_level: Vec<Vec<usize>> = vec![Vec::new(); n_levels];
+    for (i, ll) in last_level.iter().enumerate() {
+        if let Some(lvl) = ll {
+            free_at_level[*lvl].push(i);
+        }
+    }
+
+    // -- static memory plan: liveness → intervals → arena offsets, with
+    //    in-place reuse of dying inputs. Built whenever the plan will
+    //    execute in-arena (planned mode, or a backend that forces it) --
+    let (plan_mem, inplace_arg) = if memory == ExecMemory::Planned || force_arena {
+        // consumers of each value at its last-use level: in-place
+        // transfer requires the taker to be the *sole* reader
+        // there (anything else in that level runs concurrently)
+        let mut last_consumers: Vec<Vec<usize>> = vec![Vec::new(); m];
+        for (i, instr) in instrs.iter().enumerate() {
+            for &c in operands(instr).iter() {
+                if last_level[c] == Some(depth[i]) {
+                    last_consumers[c].push(i);
+                }
+            }
+        }
+        // alias-safe in-place candidates: (operand stream
+        // position, operand index within the instruction)
+        let mut cand: Vec<Option<(usize, usize)>> = vec![None; m];
+        for (i, instr) in instrs.iter().enumerate() {
+            let out_len: usize = out_shapes[i].iter().product();
+            let eligible = |o: usize| -> bool {
+                out_len > 0
+                    && !matches!(instrs[o], Instr::Var { .. } | Instr::Static(_))
+                    && last_level[o] == Some(depth[i])
+                    && last_consumers[o].len() == 1
+                    && out_shapes[o].iter().product::<usize>() == out_len
+            };
+            cand[i] = match instr {
+                // streaming element-wise reads of index j happen
+                // strictly before the write of index j, so the
+                // output may overwrite the dying operand
+                Instr::Elem(_, a) if eligible(*a) => Some((*a, 0)),
+                Instr::Add(a, b) => {
+                    if eligible(*a) {
+                        Some((*a, 0))
+                    } else if eligible(*b) && a != b {
+                        Some((*b, 1))
+                    } else {
+                        None
+                    }
+                }
+                Instr::Fused { args, .. } => args
+                    .iter()
+                    .enumerate()
+                    .find(|(_, &q)| eligible(q))
+                    .map(|(slot, &q)| (q, slot)),
+                // contractions and general unaries read arbitrary
+                // indices (gather/GEMM/row reductions): never
+                // in-place
+                _ => None,
+            };
+        }
+        let inputs: Vec<PlanInput> = instrs
+            .iter()
+            .enumerate()
+            .map(|(i, instr)| PlanInput {
+                out_len: match instr {
+                    Instr::Var { .. } | Instr::Static(_) => None,
+                    _ => Some(out_shapes[i].iter().product()),
+                },
+                scratch: match instr {
+                    Instr::Mul(_, _, plan, _) => Some(plan.scratch_sizes()),
+                    _ => None,
+                },
+                def: depth[i],
+                last: last_level[i],
+                inplace_from: cand[i].map(|(o, _)| o),
+            })
+            .collect();
+        let mp = MemPlan::build(&inputs, n_levels);
+        // keep only the transfers the planner actually committed
+        let inplace_arg: Vec<Option<usize>> = (0..m)
+            .map(|i| match mp.inplace[i] {
+                Some(_) => cand[i].map(|(_, arg)| arg),
+                None => None,
+            })
+            .collect();
+        (Some(mp), inplace_arg)
+    } else {
+        (None, vec![None; m])
+    };
+
+    Lowered {
+        instrs,
+        shapes: out_shapes,
+        statics,
+        levels,
+        level_flops,
+        level_max_flops,
+        free_at_level,
+        root_pos,
+        epilogue_mode,
+        memory,
+        memplan: plan_mem,
+        inplace_arg,
+    }
+}

@@ -1,9 +1,8 @@
 //! The compiled execution engine: [`CompiledPlan`] lowers an expression
-//! DAG into a dense instruction stream executed over a statically
-//! planned arena (or, as the ablation baseline, pooled buffers), with
-//! pre-compiled write-into einsums, cross-node fusion of element-wise
-//! chains and work-stealing level scheduling on a persistent worker
-//! pool.
+//! DAG into a dense instruction stream and hands it to an execution
+//! [`Backend`], with pre-compiled write-into einsums, cross-node fusion
+//! of element-wise chains, and buffer lifetimes compiled to fixed arena
+//! offsets (or, as the ablation baseline, pooled buffers).
 //!
 //! ## Architecture (interpreter = oracle, compiled plan = hot path)
 //!
@@ -19,12 +18,35 @@
 //!   constants and δ tensors are materialised once, intermediate buffers
 //!   live at planner-assigned fixed offsets of a per-plan arena (the
 //!   shape-bucketed [`BufferPool`] survives as the
-//!   [`ExecMemory::Pooled`] ablation), and independent DAG levels run on
-//!   the persistent worker pool.
+//!   [`ExecMemory::Pooled`] ablation), and execution is delegated to a
+//!   pluggable [`Backend`].
 //!
 //! `tests/exec_equivalence.rs` pins the two against each other (and
 //! against `einsum_naive`) over randomized specs and DAGs, including
 //! deep element-wise chains that exercise the fusion pass.
+//!
+//! ## The backend seam
+//!
+//! Compilation is split in two layers:
+//!
+//! 1. **Lowering** (`exec::lower`, backend-neutral): DAG → fused
+//!    [`Lowered`] instruction stream, dependency levels with flop
+//!    estimates, buffer liveness, and the static arena memory plan —
+//!    everything up to but excluding *how* instructions run.
+//! 2. **Backend** ([`backend`]): compiles the `Lowered` into an
+//!    executable artifact. [`BackendKind::Cpu`] is the work-stealing,
+//!    level-parallel executor on the persistent worker pool;
+//!    [`BackendKind::Direct`] is a direct-threaded closure chain that
+//!    resolves offsets, operands and epilogues at compile time and runs
+//!    sequentially in-arena — lowest dispatch overhead for the
+//!    small/skinny plans the serving path sees at low batch sizes.
+//!
+//! All backends are bit-identical on every workload (same stream, same
+//! kernels, same accumulation order) and differentially pinned against
+//! the interpreter in `tests/backend_equivalence.rs`. The facade in
+//! this module owns what every backend shares: run-state checkout,
+//! source-table resolution, root extraction, leasing, and the plan
+//! cache.
 //!
 //! ## Fusion pass
 //!
@@ -54,7 +76,7 @@
 //! * [`EpilogueMode::TwoPass`] — the pre-tiling behaviour, kept as the
 //!   reference and ablation baseline: the contraction finishes, then the
 //!   kernel sweeps the whole output buffer once more
-//!   ([`EinsumPlan::run_with_epilogue`]).
+//!   ([`EinsumPlan::run_with_epilogue`](crate::einsum::EinsumPlan::run_with_epilogue)).
 //!
 //! The two are bit-identical (same GEMM accumulation order, same
 //! per-element epilogue program); `tests/tile_epilogue.rs` pins them
@@ -77,27 +99,14 @@
 //! * [`ExecMemory::Pooled`] — the PR 1 executor, kept as the
 //!   ablation/reference mode: intermediates come from a shape-bucketed
 //!   [`BufferPool`] behind a mutex and are recycled at their last use.
+//!   (The direct backend executes in-arena only, so it force-builds the
+//!   memory plan even under this mode.)
 //!
 //! The two modes are bit-identical (same instruction stream, same
 //! kernels, same accumulation order); `tests/memory_plan.rs` pins them
 //! against each other and against the interpreter, checks the planner's
 //! no-overlap invariant, and asserts the steady-state zero-alloc /
 //! no-lock counters.
-//!
-//! ## Work-stealing level scheduling on a persistent pool
-//!
-//! Within a parallel level, worker threads claim chunks of the level's
-//! instruction list from a shared atomic cursor instead of pre-sliced
-//! static bands, so one oversized node delays only the thread that
-//! claimed it — not an entire band scheduled behind it. The workers
-//! themselves come from the process-wide
-//! [`util::worker_pool`](crate::util::worker_pool): parked threads that
-//! survive across runs, plans and coordinator entries, so the level
-//! scheduler spawns no threads and every worker keeps its GEMM packing
-//! scratch and einsum odometer warm. (Serial levels containing a large
-//! contraction still fork scoped row-band threads *inside* the GEMM
-//! kernel — that layer is gated by `PAR_GEMM_MIN_FLOP` and is the one
-//! remaining spawn site.)
 //!
 //! ## Plan-cache key contract
 //!
@@ -106,54 +115,45 @@
 //! [`OptLevel::None`](crate::opt::OptLevel), the graph first runs
 //! through the [`crate::opt`] pipeline (global CSE + contraction
 //! reassociation) and a dead-node sweep; the key is
-//! `(graph fingerprint, root node ids)` **of the optimized, compacted
-//! graph**, where the fingerprint hashes every node **in id order** —
-//! operator, einsum spec, constant bits, δ dims *and node shape*.
-//! Because `Var` nodes carry their declared shape, the fingerprint
-//! covers the input-shape signature, and because the optimizer
-//! canonicalises specs and operand orders, differently-built but
-//! equivalent graphs converge on the same key; two graphs with equal
+//! `(graph fingerprint, root node ids, memory mode, backend)` **of the
+//! optimized, compacted graph**, where the fingerprint hashes every node
+//! **in id order** — operator, einsum spec, constant bits, δ dims *and
+//! node shape*. Because `Var` nodes carry their declared shape, the
+//! fingerprint covers the input-shape signature, and because the
+//! optimizer canonicalises specs and operand orders, differently-built
+//! but equivalent graphs converge on the same key; two graphs with equal
 //! fingerprints compile to identical instruction streams (modulo 64-bit
-//! hash collision). The cache never evicts: it is bounded by the number
-//! of distinct `(graph, roots)` pairs a process registers, which is the
+//! hash collision). Plans compiled under different [`ExecMemory`] modes
+//! or [`BackendKind`]s are distinct artifacts and cached separately.
+//! The cache never evicts: it is bounded by the number of distinct
+//! `(graph, roots)` configurations a process registers, which is the
 //! number of distinct service entries. Cached plans are `Arc`-shared,
 //! so every worker that serves the same graph also shares one warm set
 //! of run arenas (or, under the pooled ablation mode, one warm buffer
 //! pool).
 
+pub mod backend;
 mod batch;
-mod memplan;
+mod lower;
+pub(crate) mod memplan;
 
+pub use backend::cpu::BufferPool;
+pub use backend::{Backend, BackendKind};
 pub use batch::batch_graph;
+pub use lower::Lowered;
 
-use crate::einsum::{EinScratch, EinSpec, EinsumPlan, EpiFn, Label, NoEpilogue};
 use crate::eval::Env;
-use crate::ir::{Elem, GenFn, Graph, NodeId, Op};
+use crate::ir::{Graph, NodeId};
 use crate::opt::OptLevel;
 use crate::tensor::Tensor;
-use crate::util::{
-    num_threads, worker_pool, PAR_BATCH_TOTAL_MIN_FLOP, PAR_LEVEL_MIN_FLOP,
-    STEAL_CHUNKS_PER_THREAD,
-};
-use memplan::{MemPlan, PlanInput, Slot};
-use std::cell::RefCell;
+use backend::ArenaExec;
+use lower::Instr;
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::fmt;
 use std::hash::{Hash, Hasher};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
-
-/// A shape-bucketed free list of `f64` buffers. Buffers are bucketed by
-/// exact element count; `acquire` pops a warm buffer (contents arbitrary
-/// — every instruction fully overwrites its output) or allocates a fresh
-/// one.
-#[derive(Default)]
-pub struct BufferPool {
-    buckets: HashMap<usize, Vec<Vec<f64>>>,
-    fresh: u64,
-    reused: u64,
-}
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Memory counters of a [`CompiledPlan`] — the executor's "zero
 /// steady-state allocation" invariant is asserted through these, in the
@@ -228,384 +228,6 @@ pub enum ExecMemory {
     Pooled,
 }
 
-impl BufferPool {
-    fn acquire(&mut self, len: usize) -> Vec<f64> {
-        if let Some(list) = self.buckets.get_mut(&len) {
-            if let Some(buf) = list.pop() {
-                self.reused += 1;
-                debug_assert_eq!(buf.len(), len);
-                return buf;
-            }
-        }
-        self.fresh += 1;
-        vec![0.0; len]
-    }
-
-    fn release(&mut self, buf: Vec<f64>) {
-        self.buckets.entry(buf.len()).or_default().push(buf);
-    }
-
-    fn stats(&self) -> PoolStats {
-        PoolStats { fresh: self.fresh, reused: self.reused, ..PoolStats::default() }
-    }
-}
-
-/// Maximum value-stack depth of a [`FusedKernel`] postfix program; the
-/// group builder stops inlining before a kernel could exceed it.
-const FUSED_MAX_STACK: usize = 16;
-
-/// Maximum number of operand slots of a [`FusedKernel`]. The group
-/// builder enforces it (pending-leaf accounting in
-/// [`GroupBuilder::operand`]), which lets the executor resolve operands
-/// into a fixed-size stack array per instruction — no heap allocation on
-/// the steady-state hot path.
-const FUSED_MAX_ARGS: usize = 16;
-
-/// One step of a fused single-pass pipeline (postfix form).
-#[derive(Clone, Copy)]
-enum FusedOp {
-    /// Push element `i` (or the broadcast scalar) of operand slot `k`.
-    Load(u32),
-    /// Apply an element-wise function to the top of the stack.
-    Un(Elem),
-    /// Pop two values, push their sum.
-    Add,
-    /// Pop two values, push their product.
-    Mul,
-}
-
-/// A collapsed chain/tree of `Elem` / `Add` / Hadamard- and
-/// scalar-`Mul` nodes evaluated in one pass over the data: for every
-/// element index the postfix program runs over a fixed-size value
-/// stack, reading operand slots and producing one output value — zero
-/// intermediate buffers regardless of the chain depth.
-struct FusedKernel {
-    ops: Vec<FusedOp>,
-    /// number of graph nodes collapsed into this kernel
-    n_nodes: usize,
-}
-
-/// An operand slot resolved for one execution: same-shape operands are
-/// read per element, rank-0 operands broadcast one value. `Copy` so a
-/// whole slot array can live on the stack (see [`fused_srcs`]).
-#[derive(Clone, Copy)]
-enum FusedSrc<'s> {
-    Slice(&'s [f64]),
-    Scalar(f64),
-}
-
-impl FusedSrc<'_> {
-    #[inline]
-    fn at(&self, i: usize) -> f64 {
-        match self {
-            FusedSrc::Slice(s) => s[i],
-            FusedSrc::Scalar(v) => *v,
-        }
-    }
-}
-
-impl FusedKernel {
-    /// `out[i] = program(srcs, i)`; `Load(k)` reads `srcs[k]`.
-    fn run(&self, srcs: &[FusedSrc], out: &mut [f64]) {
-        let mut stack = [0.0f64; FUSED_MAX_STACK];
-        for (i, slot) in out.iter_mut().enumerate() {
-            *slot = self.eval_one(&mut stack, |k| srcs[k].at(i));
-        }
-    }
-
-    /// In-place epilogue on a producer's output: `Load(0)` reads the
-    /// buffer value being replaced, `Load(k ≥ 1)` reads `rest[k-1]`.
-    fn run_inplace(&self, buf: &mut [f64], rest: &[FusedSrc]) {
-        self.run_inplace_at(buf, 0, rest);
-    }
-
-    /// [`FusedKernel::run_inplace`] on a tile: `buf[j]` is global flat
-    /// output element `base + j`, so operand slots resolve correctly
-    /// from inside GEMM tiles, row bands and batch slices.
-    fn run_inplace_at(&self, buf: &mut [f64], base: usize, rest: &[FusedSrc]) {
-        let mut stack = [0.0f64; FUSED_MAX_STACK];
-        for (j, slot) in buf.iter_mut().enumerate() {
-            let carrier = *slot;
-            *slot = self.eval_one(&mut stack, |k| {
-                if k == 0 {
-                    carrier
-                } else {
-                    rest[k - 1].at(base + j)
-                }
-            });
-        }
-    }
-
-    /// The planned executor's in-place form: operand slot `arg` aliases
-    /// the output buffer, so `Load(arg)` reads the value being replaced
-    /// while every other slot reads `srcs` at its *original* position
-    /// (`srcs[arg]` is a dummy, never touched). Bit-identical to
-    /// [`FusedKernel::run`] with the aliased operand materialised.
-    fn run_inplace_arg(&self, buf: &mut [f64], arg: u32, srcs: &[FusedSrc]) {
-        let arg = arg as usize;
-        let mut stack = [0.0f64; FUSED_MAX_STACK];
-        for (i, out) in buf.iter_mut().enumerate() {
-            let carrier = *out;
-            *out = self.eval_one(&mut stack, |k| {
-                if k == arg {
-                    carrier
-                } else {
-                    srcs[k].at(i)
-                }
-            });
-        }
-    }
-
-    /// The one postfix interpreter every execution form shares: `load`
-    /// resolves `Load(k)` (per-element slice read, broadcast scalar, or
-    /// the in-place carrier value, depending on the caller's slot
-    /// convention).
-    #[inline]
-    fn eval_one<L: Fn(usize) -> f64>(
-        &self,
-        stack: &mut [f64; FUSED_MAX_STACK],
-        load: L,
-    ) -> f64 {
-        let mut sp = 0usize;
-        for op in &self.ops {
-            match op {
-                FusedOp::Load(k) => {
-                    stack[sp] = load(*k as usize);
-                    sp += 1;
-                }
-                FusedOp::Un(f) => stack[sp - 1] = f.apply(stack[sp - 1]),
-                FusedOp::Add => {
-                    sp -= 1;
-                    stack[sp - 1] += stack[sp];
-                }
-                FusedOp::Mul => {
-                    sp -= 1;
-                    stack[sp - 1] *= stack[sp];
-                }
-            }
-        }
-        debug_assert_eq!(sp, 1, "fused program must leave exactly one value");
-        stack[0]
-    }
-}
-
-/// A fused chain applied in place on a producer's freshly written
-/// output (slot 0 of the kernel is the produced value itself).
-struct Epilogue {
-    kernel: FusedKernel,
-    /// operand positions for kernel slots `1..` (slot 0 is the carrier)
-    args: Vec<usize>,
-}
-
-/// One lowered node. Operands are dense positions into the instruction
-/// stream (not `NodeId`s), so execution never touches the `Graph`.
-enum Instr {
-    /// Bind the named input from the `Env` (shape-checked, zero-copy).
-    Var { name: String, shape: Vec<usize> },
-    /// A `Const`/`Delta` tensor materialised once at compile time.
-    Static(usize),
-    Add(usize, usize),
-    /// Pre-compiled contraction (strides/pre-sums/permutation resolved),
-    /// optionally with a fused element-wise epilogue applied in place.
-    Mul(usize, usize, EinsumPlan, Option<Epilogue>),
-    Elem(Elem, usize),
-    GenUnary(GenFn, usize, Option<Epilogue>),
-    /// A collapsed element-wise chain/tree evaluated in one pass.
-    Fused { kernel: FusedKernel, args: Vec<usize> },
-}
-
-/// A value slot during execution: intermediates own pooled buffers,
-/// inputs and compile-time constants are borrowed.
-enum Val<'a> {
-    Owned(Tensor),
-    Ref(&'a Tensor),
-}
-
-impl<'a> Val<'a> {
-    fn tensor(&self) -> &Tensor {
-        match self {
-            Val::Owned(t) => t,
-            Val::Ref(t) => t,
-        }
-    }
-}
-
-/// Intermediate lowering of one node, before the fusion pass decides
-/// which nodes survive as instructions.
-enum DescKind {
-    Var(String),
-    Static(usize),
-    Add(usize, usize),
-    Mul(usize, usize, EinsumPlan),
-    Elem(Elem, usize),
-    GenUnary(GenFn, usize),
-}
-
-fn desc_operands(d: &DescKind) -> Vec<usize> {
-    match d {
-        DescKind::Add(a, b) | DescKind::Mul(a, b, _) => vec![*a, *b],
-        DescKind::Elem(_, a) | DescKind::GenUnary(_, a) => vec![*a],
-        DescKind::Var(_) | DescKind::Static(_) => Vec::new(),
-    }
-}
-
-/// Fusion-pass classification of a node: how it reads its operands when
-/// evaluated element by element.
-#[derive(Clone, Copy)]
-enum FuseNode {
-    Un(Elem, usize),
-    Add2(usize, usize),
-    /// element-wise product of two same-shape operands
-    Had(usize, usize),
-    /// `(tensor, scalar)`: tensor scaled by a broadcast rank-0 operand
-    Scale(usize, usize),
-}
-
-fn all_distinct(ls: &[Label]) -> bool {
-    ls.iter().enumerate().all(|(i, l)| !ls[i + 1..].contains(l))
-}
-
-/// Classify a `Mul` node as element-wise fusable: a Hadamard product of
-/// same-shape operands, or a scalar broadcast scale. Anything with
-/// summed labels, diagonals or permuted outputs stays a contraction.
-fn classify_mul(
-    spec: &EinSpec,
-    a_shape: &[usize],
-    b_shape: &[usize],
-    pa: usize,
-    pb: usize,
-) -> Option<FuseNode> {
-    if spec.is_elementwise() && all_distinct(&spec.s1) {
-        return Some(FuseNode::Had(pa, pb));
-    }
-    if b_shape.is_empty() && spec.s2.is_empty() && spec.s3 == spec.s1 && all_distinct(&spec.s1) {
-        return Some(FuseNode::Scale(pa, pb));
-    }
-    if a_shape.is_empty() && spec.s1.is_empty() && spec.s3 == spec.s2 && all_distinct(&spec.s2) {
-        return Some(FuseNode::Scale(pb, pa));
-    }
-    None
-}
-
-/// A fused group under construction: the postfix program, its leaf
-/// operands (pre-fusion stream positions, slot order) and how many
-/// loads each leaf received — the epilogue-carrier check needs the
-/// latter to prove all of a producer's uses live inside the group.
-#[derive(Default)]
-struct Group {
-    ops: Vec<FusedOp>,
-    leaves: Vec<usize>,
-    leaf_loads: Vec<usize>,
-    n_nodes: usize,
-    /// melted producer applied in place (pre-fusion position)
-    carrier: Option<usize>,
-}
-
-impl Group {
-    fn push_leaf(&mut self, o: usize) {
-        let slot = match self.leaves.iter().position(|&q| q == o) {
-            Some(s) => s,
-            None => {
-                self.leaves.push(o);
-                self.leaf_loads.push(0);
-                self.leaves.len() - 1
-            }
-        };
-        self.leaf_loads[slot] += 1;
-        self.ops.push(FusedOp::Load(slot as u32));
-    }
-
-    /// Re-number slots for epilogue form: the carrier slot becomes
-    /// `Load(0)`, remaining leaves shift to slots `1..` in order.
-    fn rewrite_for_carrier(&mut self, slot: usize) {
-        for op in self.ops.iter_mut() {
-            if let FusedOp::Load(k) = op {
-                let k0 = *k as usize;
-                *k = if k0 == slot {
-                    0
-                } else if k0 < slot {
-                    (k0 + 1) as u32
-                } else {
-                    k0 as u32
-                };
-            }
-        }
-        self.carrier = Some(self.leaves.remove(slot));
-        self.leaf_loads.remove(slot);
-    }
-}
-
-/// Shared context of one group build (the fusion pass working over the
-/// pre-fusion descriptor stream).
-struct GroupBuilder<'c> {
-    fusable: &'c [Option<FuseNode>],
-    uses: &'c [usize],
-    is_root: &'c [bool],
-    shapes: &'c [Vec<usize>],
-    group_shape: &'c [usize],
-}
-
-impl GroupBuilder<'_> {
-    /// Emit the postfix program of member `p`; the value stack already
-    /// holds `held` entries when the member starts executing, and
-    /// enclosing members will still load `pending` more leaves after
-    /// this member returns (the operand-slot budget mirrors how `held`
-    /// budgets the value stack).
-    fn member(&self, p: usize, held: usize, pending: usize, melted: &mut [bool], grp: &mut Group) {
-        grp.n_nodes += 1;
-        match self.fusable[p].expect("group member must be fusable") {
-            FuseNode::Un(f, a) => {
-                self.operand(a, held, pending, melted, grp);
-                grp.ops.push(FusedOp::Un(f));
-            }
-            FuseNode::Add2(a, b) => {
-                self.operand(a, held, pending + 1, melted, grp);
-                self.operand(b, held + 1, pending, melted, grp);
-                grp.ops.push(FusedOp::Add);
-            }
-            FuseNode::Had(a, b) => {
-                self.operand(a, held, pending + 1, melted, grp);
-                self.operand(b, held + 1, pending, melted, grp);
-                grp.ops.push(FusedOp::Mul);
-            }
-            FuseNode::Scale(t, s) => {
-                self.operand(t, held, pending + 1, melted, grp);
-                // the rank-0 operand broadcasts per run, not per
-                // element: always a leaf
-                grp.push_leaf(s);
-                grp.ops.push(FusedOp::Mul);
-            }
-        }
-    }
-
-    /// Inline operand `o` when it is fusable, consumed only here, not a
-    /// plan root, shape-preserving, and both the value stack and the
-    /// operand-slot array have headroom (an inlined member adds at most
-    /// two direct leaves, and `pending` siblings still follow);
-    /// otherwise record it as a leaf.
-    fn operand(
-        &self,
-        o: usize,
-        held: usize,
-        pending: usize,
-        melted: &mut [bool],
-        grp: &mut Group,
-    ) {
-        let inline = held + 2 <= FUSED_MAX_STACK
-            && grp.leaves.len() + pending + 2 <= FUSED_MAX_ARGS
-            && !self.is_root[o]
-            && self.uses[o] == 1
-            && self.fusable[o].is_some()
-            && self.shapes[o].as_slice() == self.group_shape;
-        if inline {
-            melted[o] = true;
-            self.member(o, held, pending, melted, grp);
-        } else {
-            grp.push_leaf(o);
-        }
-    }
-}
-
 /// Where a contraction's fused epilogue runs — the ablation toggle next
 /// to `CompiledPlan::with_fusion`. See the module docs ("Epilogue
 /// placement") for the contract; the two modes are bit-identical.
@@ -620,8 +242,8 @@ pub enum EpilogueMode {
     TwoPass,
 }
 
-/// Per-run state of a planned-memory execution, checked out once per
-/// call (one lock) and returned warm: the arena plus the resolved
+/// Per-run state of an in-arena execution, checked out once per call
+/// (one lock) and returned warm: the arena plus the resolved
 /// per-instruction source table. A plan keeps one `RunState` per
 /// concurrent caller; each grows its arena once and never again.
 #[derive(Default)]
@@ -641,46 +263,6 @@ struct SrcTable(Vec<(*const f64, usize)>);
 // derived from — env tensors, plan statics, the checked-out arena — are
 // live within that run.
 unsafe impl Send for SrcTable {}
-
-/// Shared view of one planned run handed to the level workers: the
-/// arena base plus the per-instruction source table.
-///
-/// SAFETY (for the `Sync` impl): each worker writes only its own
-/// instructions' output slots, and the memory planner guarantees that a
-/// slot written in level `L` overlaps no slot read or written by any
-/// other instruction live in `L` (`MemPlan::check_no_overlap`).
-struct ArenaExec<'r> {
-    base: *mut f64,
-    srcs: &'r [(*const f64, usize)],
-}
-
-unsafe impl Sync for ArenaExec<'_> {}
-
-/// Operand slice of instruction `q` (env tensor, static, or arena slot).
-#[inline]
-fn src_slice<'r>(ex: &ArenaExec<'r>, q: usize) -> &'r [f64] {
-    let (ptr, len) = ex.srcs[q];
-    // SAFETY: see ArenaExec — the pointee outlives the run and no &mut
-    // to the same region exists while this borrow is used.
-    unsafe { std::slice::from_raw_parts(ptr, len) }
-}
-
-/// Mutable view of an arena slot.
-///
-/// SAFETY: caller must be the (sole) instruction that owns `slot` in the
-/// current level — guaranteed by the memory plan.
-#[inline]
-#[allow(clippy::mut_from_ref)] // disjointness is the planner's invariant
-unsafe fn slot_mut<'r>(ex: &ArenaExec<'r>, slot: Slot) -> &'r mut [f64] {
-    std::slice::from_raw_parts_mut(ex.base.add(slot.off), slot.len)
-}
-
-thread_local! {
-    /// Per-thread odometer scratch for planned-mode einsum gathers — the
-    /// one scratch that cannot live in the `f64` arena. Persistent pool
-    /// workers keep it warm across scopes, plans and coordinator entries.
-    static IDX_SCRATCH: RefCell<Vec<usize>> = const { RefCell::new(Vec::new()) };
-}
 
 /// A checked-out run state kept alive past the end of its run so root
 /// outputs can be served as views straight out of the arena — the
@@ -822,413 +404,115 @@ impl fmt::Debug for PlanOutput {
     }
 }
 
-/// An expression DAG compiled for repeated execution: dense instruction
-/// stream in topological order (element-wise chains fused), per-level
-/// scheduling on the persistent worker pool, buffer lifetimes compiled
-/// to arena offsets (or pool-release points under the pooled ablation
-/// mode), and all contractions pre-compiled.
+/// An expression DAG compiled for repeated execution: the facade over
+/// the backend seam. Holds the backend-neutral [`Lowered`] artifact,
+/// the [`Backend`] executable compiled from it, and the run-time state
+/// every backend shares (warm run states, the arena-growth counter).
+/// The facade owns source-table resolution, root extraction and
+/// leasing; the backend owns only instruction execution.
 pub struct CompiledPlan {
-    instrs: Vec<Instr>,
-    shapes: Vec<Vec<usize>>,
-    statics: Vec<Tensor>,
-    /// instruction positions grouped by dependency depth (level 0 first);
-    /// nodes within one level are independent and may run in parallel
-    levels: Vec<Vec<usize>>,
-    /// estimated flops per level — gates the worker-pool fork
-    level_flops: Vec<usize>,
-    /// largest *internally parallel* (GEMM) flop estimate per level —
-    /// levels whose contractions parallelise internally (row bands /
-    /// batch splits) run serially at this layer to avoid nested-fork
-    /// oversubscription
-    level_max_flops: Vec<usize>,
-    /// positions whose value dies after each level (returned to the pool;
-    /// pooled mode only — the planner bakes lifetimes into offsets)
-    free_at_level: Vec<Vec<usize>>,
-    root_pos: Vec<usize>,
-    pool: Mutex<BufferPool>,
-    /// einsum scratch buffers, checked out once per run (serial) or once
-    /// per worker (parallel) — never per node, to keep lock traffic low
-    /// (pooled mode only)
-    scratches: Mutex<Vec<EinScratch>>,
-    /// where contraction epilogues run (in-tile vs two-pass ablation)
-    epilogue_mode: EpilogueMode,
-    /// where intermediates live (planned arena vs pooled ablation)
-    memory: ExecMemory,
-    /// the static memory plan (planned mode only)
-    memplan: Option<MemPlan>,
-    /// per instruction: operand index *within the instruction* whose
-    /// dying slot the output takes over in place (planned mode only; for
-    /// `Fused` this is the kernel's operand slot)
-    inplace_arg: Vec<Option<usize>>,
-    /// warm per-caller run states (arena + source table), planned mode
+    lowered: Lowered,
+    backend: BackendKind,
+    exec: Box<dyn Backend>,
+    /// warm per-caller run states (arena + source table), in-arena mode
     run_states: Mutex<Vec<RunState>>,
     /// run-state arenas grown at run time (cold starts; then constant)
     arena_allocs: AtomicU64,
-    /// buffer-pool mutex acquisitions (the no-lock assertion's counter)
-    pool_locks: AtomicU64,
 }
 
 impl CompiledPlan {
     /// Compile the sub-DAG of `g` reachable from `roots`.
     pub fn new(g: &Graph, roots: &[NodeId]) -> Self {
-        Self::with_options(g, roots, true, EpilogueMode::default(), ExecMemory::default())
+        Self::with_options(
+            g,
+            roots,
+            true,
+            EpilogueMode::default(),
+            ExecMemory::default(),
+            BackendKind::default(),
+        )
     }
 
     /// Compile with or without the cross-node fusion pass. `false`
     /// reproduces the PR 1 lowering (one buffer per node) and is kept as
     /// the ablation baseline for benches and differential tests.
     pub fn with_fusion(g: &Graph, roots: &[NodeId], fuse: bool) -> Self {
-        Self::with_options(g, roots, fuse, EpilogueMode::default(), ExecMemory::default())
+        Self::with_options(
+            g,
+            roots,
+            fuse,
+            EpilogueMode::default(),
+            ExecMemory::default(),
+            BackendKind::default(),
+        )
+    }
+
+    /// Compile for an explicit execution backend, every other toggle at
+    /// its default.
+    pub fn with_backend(g: &Graph, roots: &[NodeId], backend: BackendKind) -> Self {
+        Self::with_options(
+            g,
+            roots,
+            true,
+            EpilogueMode::default(),
+            ExecMemory::default(),
+            backend,
+        )
     }
 
     /// Compile with every ablation toggle explicit: the fusion pass
-    /// on/off, where contraction epilogues run ([`EpilogueMode`]), and
-    /// where intermediates live ([`ExecMemory`]).
+    /// on/off, where contraction epilogues run ([`EpilogueMode`]), where
+    /// intermediates live ([`ExecMemory`]), and which [`BackendKind`]
+    /// executes the stream. Lowering is backend-neutral; the backend
+    /// only changes *how* the same instructions run (the direct backend
+    /// additionally force-builds the arena plan, since it executes
+    /// in-arena even under the pooled ablation mode).
     pub fn with_options(
         g: &Graph,
         roots: &[NodeId],
         fuse: bool,
         epilogue_mode: EpilogueMode,
         memory: ExecMemory,
+        backend: BackendKind,
     ) -> Self {
-        let order = g.topo(roots);
-        let n = order.len();
-        let mut pos_of: HashMap<NodeId, usize> = HashMap::with_capacity(n);
-        for (i, &id) in order.iter().enumerate() {
-            pos_of.insert(id, i);
-        }
-
-        // -- lower every reachable node to a descriptor --
-        let mut descs: Vec<Option<DescKind>> = Vec::with_capacity(n);
-        let mut shapes: Vec<Vec<usize>> = Vec::with_capacity(n);
-        let mut statics: Vec<Tensor> = Vec::new();
-        let mut base_flops: Vec<usize> = vec![0; n];
-        let mut fusable: Vec<Option<FuseNode>> = Vec::with_capacity(n);
-        for (i, &id) in order.iter().enumerate() {
-            let shape = g.shape(id).to_vec();
-            let out_len: usize = shape.iter().product();
-            let (kind, fnode) = match g.op(id) {
-                Op::Var(name) => (DescKind::Var(name.clone()), None),
-                Op::Const(bits) => {
-                    statics.push(Tensor::fill(&shape, f64::from_bits(*bits)));
-                    (DescKind::Static(statics.len() - 1), None)
-                }
-                Op::Delta { dims } => {
-                    statics.push(Tensor::delta(dims));
-                    (DescKind::Static(statics.len() - 1), None)
-                }
-                Op::Add(a, b) => {
-                    let (pa, pb) = (pos_of[a], pos_of[b]);
-                    (DescKind::Add(pa, pb), Some(FuseNode::Add2(pa, pb)))
-                }
-                Op::Mul(a, b, spec) => {
-                    let plan = EinsumPlan::new(spec, g.shape(*a), g.shape(*b));
-                    base_flops[i] = plan.iteration_space();
-                    let (pa, pb) = (pos_of[a], pos_of[b]);
-                    let f = classify_mul(spec, g.shape(*a), g.shape(*b), pa, pb);
-                    (DescKind::Mul(pa, pb, plan), f)
-                }
-                Op::Elem(f, a) => {
-                    let pa = pos_of[a];
-                    (DescKind::Elem(*f, pa), Some(FuseNode::Un(*f, pa)))
-                }
-                Op::GenUnary(f, a) => {
-                    // the interpreter's contract, enforced at *compile*
-                    // time — a mid-run panic in gen_unary_into would
-                    // poison pooled buffers
-                    assert!(
-                        !g.shape(*a).is_empty(),
-                        "GenUnary({}) needs a rank ≥ 1 operand (got rank 0)",
-                        f.name()
-                    );
-                    (DescKind::GenUnary(*f, pos_of[a]), None)
-                }
-            };
-            if base_flops[i] == 0 && !matches!(kind, DescKind::Var(_) | DescKind::Static(_)) {
-                base_flops[i] = out_len;
-            }
-            descs.push(Some(kind));
-            shapes.push(shape);
-            fusable.push(if fuse { fnode } else { None });
-        }
-
-        // -- consumer counts over the pre-fusion stream (roots count) --
-        let root_old: Vec<usize> = roots.iter().map(|r| pos_of[r]).collect();
-        let mut uses = vec![0usize; n];
-        for d in &descs {
-            for o in desc_operands(d.as_ref().expect("desc present")) {
-                uses[o] += 1;
-            }
-        }
-        let mut is_root = vec![false; n];
-        for &r in &root_old {
-            uses[r] += 1;
-            is_root[r] = true;
-        }
-
-        // -- fusion pass: greedy maximal groups, processed root-down --
-        let mut melted = vec![false; n];
-        let mut groups: Vec<Option<Group>> = Vec::with_capacity(n);
-        groups.resize_with(n, || None);
-        for p in (0..n).rev() {
-            if melted[p] || fusable[p].is_none() {
-                continue;
-            }
-            let builder = GroupBuilder {
-                fusable: &fusable,
-                uses: &uses,
-                is_root: &is_root,
-                shapes: &shapes,
-                group_shape: &shapes[p],
-            };
-            let mut grp = Group::default();
-            builder.member(p, 0, 0, &mut melted, &mut grp);
-            // epilogue carrier: a contraction / general unary consumed
-            // only by this group, producing exactly the group shape
-            let carrier_slot = grp.leaves.iter().enumerate().find_map(|(slot, &l)| {
-                let eligible = !is_root[l]
-                    && shapes[l].as_slice() == shapes[p].as_slice()
-                    && grp.leaf_loads[slot] == uses[l]
-                    && matches!(
-                        descs[l].as_ref().expect("desc present"),
-                        DescKind::Mul(..) | DescKind::GenUnary(..)
-                    );
-                eligible.then_some(slot)
-            });
-            if let Some(slot) = carrier_slot {
-                let l = grp.leaves[slot];
-                melted[l] = true;
-                grp.rewrite_for_carrier(slot);
-                groups[p] = Some(grp);
-            } else if grp.n_nodes >= 2 {
-                groups[p] = Some(grp);
-            }
-            // n_nodes == 1 without a carrier: nothing was melted — the
-            // original single instruction is kept as-is
-        }
-
-        // -- emit the fused instruction stream (dense re-map) --
-        let mut remap = vec![usize::MAX; n];
-        let mut instrs: Vec<Instr> = Vec::new();
-        let mut out_shapes: Vec<Vec<usize>> = Vec::new();
-        let mut flops: Vec<usize> = Vec::new();
-        let mut internal_flops: Vec<usize> = Vec::new();
-        for p in 0..n {
-            if melted[p] {
-                continue;
-            }
-            let out_len: usize = shapes[p].iter().product();
-            let (instr, fl, ifl) = if let Some(grp) = groups[p].take() {
-                let args: Vec<usize> = grp.leaves.iter().map(|&q| remap[q]).collect();
-                let kernel = FusedKernel { ops: grp.ops, n_nodes: grp.n_nodes };
-                let chain_fl = grp.n_nodes.saturating_mul(out_len);
-                match grp.carrier {
-                    Some(l) => {
-                        let epi = Some(Epilogue { kernel, args });
-                        match descs[l].take().expect("carrier desc present") {
-                            DescKind::Mul(a, b, plan) => {
-                                let gemm_fl = plan.iteration_space();
-                                (
-                                    Instr::Mul(remap[a], remap[b], plan, epi),
-                                    gemm_fl.saturating_add(chain_fl),
-                                    gemm_fl,
-                                )
-                            }
-                            DescKind::GenUnary(f, a) => (
-                                Instr::GenUnary(f, remap[a], epi),
-                                out_len.saturating_add(chain_fl),
-                                0,
-                            ),
-                            _ => unreachable!("carrier must be Mul or GenUnary"),
-                        }
-                    }
-                    None => (Instr::Fused { kernel, args }, chain_fl, 0),
-                }
-            } else {
-                let instr = match descs[p].take().expect("desc present") {
-                    DescKind::Var(name) => Instr::Var { name, shape: shapes[p].clone() },
-                    DescKind::Static(i) => Instr::Static(i),
-                    DescKind::Add(a, b) => Instr::Add(remap[a], remap[b]),
-                    DescKind::Mul(a, b, plan) => Instr::Mul(remap[a], remap[b], plan, None),
-                    DescKind::Elem(f, a) => Instr::Elem(f, remap[a]),
-                    DescKind::GenUnary(f, a) => Instr::GenUnary(f, remap[a], None),
-                };
-                let ifl = match &instr {
-                    Instr::Mul(_, _, plan, _) => plan.iteration_space(),
-                    _ => 0,
-                };
-                (instr, base_flops[p], ifl)
-            };
-            remap[p] = instrs.len();
-            instrs.push(instr);
-            out_shapes.push(shapes[p].clone());
-            flops.push(fl);
-            internal_flops.push(ifl);
-        }
-
-        // -- levels / lifetimes over the fused stream --
-        let m = instrs.len();
-        let mut depth: Vec<usize> = vec![0; m];
-        for (i, instr) in instrs.iter().enumerate() {
-            let d = operands(instr)
-                .iter()
-                .map(|&c| depth[c] + 1)
-                .max()
-                .unwrap_or(0);
-            depth[i] = d;
-        }
-        let n_levels = depth.iter().copied().max().map(|d| d + 1).unwrap_or(0);
-        let mut levels: Vec<Vec<usize>> = vec![Vec::new(); n_levels];
-        let mut level_flops: Vec<usize> = vec![0; n_levels];
-        let mut level_max_flops: Vec<usize> = vec![0; n_levels];
-        for (i, &d) in depth.iter().enumerate() {
-            levels[d].push(i);
-            level_flops[d] = level_flops[d].saturating_add(flops[i]);
-            level_max_flops[d] = level_max_flops[d].max(internal_flops[i]);
-        }
-
-        // Buffer lifetimes: a value is released to the pool after the
-        // last level that consumes it. Roots are never released.
-        let mut last_level: Vec<Option<usize>> = vec![None; m];
-        for (i, instr) in instrs.iter().enumerate() {
-            for &c in operands(instr).iter() {
-                let lvl = depth[i];
-                last_level[c] = Some(last_level[c].map_or(lvl, |p| p.max(lvl)));
-            }
-        }
-        let root_pos: Vec<usize> = root_old.iter().map(|&r| remap[r]).collect();
-        for &r in &root_pos {
-            last_level[r] = None;
-        }
-        let mut free_at_level: Vec<Vec<usize>> = vec![Vec::new(); n_levels];
-        for (i, ll) in last_level.iter().enumerate() {
-            if let Some(lvl) = ll {
-                free_at_level[*lvl].push(i);
-            }
-        }
-
-        // -- static memory plan (planned mode): liveness → intervals →
-        //    arena offsets, with in-place reuse of dying inputs --
-        let (plan_mem, inplace_arg) = match memory {
-            ExecMemory::Pooled => (None, vec![None; m]),
-            ExecMemory::Planned => {
-                // consumers of each value at its last-use level: in-place
-                // transfer requires the taker to be the *sole* reader
-                // there (anything else in that level runs concurrently)
-                let mut last_consumers: Vec<Vec<usize>> = vec![Vec::new(); m];
-                for (i, instr) in instrs.iter().enumerate() {
-                    for &c in operands(instr).iter() {
-                        if last_level[c] == Some(depth[i]) {
-                            last_consumers[c].push(i);
-                        }
-                    }
-                }
-                // alias-safe in-place candidates: (operand stream
-                // position, operand index within the instruction)
-                let mut cand: Vec<Option<(usize, usize)>> = vec![None; m];
-                for (i, instr) in instrs.iter().enumerate() {
-                    let out_len: usize = out_shapes[i].iter().product();
-                    let eligible = |o: usize| -> bool {
-                        out_len > 0
-                            && !matches!(instrs[o], Instr::Var { .. } | Instr::Static(_))
-                            && last_level[o] == Some(depth[i])
-                            && last_consumers[o].len() == 1
-                            && out_shapes[o].iter().product::<usize>() == out_len
-                    };
-                    cand[i] = match instr {
-                        // streaming element-wise reads of index j happen
-                        // strictly before the write of index j, so the
-                        // output may overwrite the dying operand
-                        Instr::Elem(_, a) if eligible(*a) => Some((*a, 0)),
-                        Instr::Add(a, b) => {
-                            if eligible(*a) {
-                                Some((*a, 0))
-                            } else if eligible(*b) && a != b {
-                                Some((*b, 1))
-                            } else {
-                                None
-                            }
-                        }
-                        Instr::Fused { args, .. } => args
-                            .iter()
-                            .enumerate()
-                            .find(|(_, &q)| eligible(q))
-                            .map(|(slot, &q)| (q, slot)),
-                        // contractions and general unaries read arbitrary
-                        // indices (gather/GEMM/row reductions): never
-                        // in-place
-                        _ => None,
-                    };
-                }
-                let inputs: Vec<PlanInput> = instrs
-                    .iter()
-                    .enumerate()
-                    .map(|(i, instr)| PlanInput {
-                        out_len: match instr {
-                            Instr::Var { .. } | Instr::Static(_) => None,
-                            _ => Some(out_shapes[i].iter().product()),
-                        },
-                        scratch: match instr {
-                            Instr::Mul(_, _, plan, _) => Some(plan.scratch_sizes()),
-                            _ => None,
-                        },
-                        def: depth[i],
-                        last: last_level[i],
-                        inplace_from: cand[i].map(|(o, _)| o),
-                    })
-                    .collect();
-                let mp = MemPlan::build(&inputs, n_levels);
-                // keep only the transfers the planner actually committed
-                let inplace_arg: Vec<Option<usize>> = (0..m)
-                    .map(|i| match mp.inplace[i] {
-                        Some(_) => cand[i].map(|(_, arg)| arg),
-                        None => None,
-                    })
-                    .collect();
-                (Some(mp), inplace_arg)
-            }
-        };
-
-        CompiledPlan {
-            instrs,
-            shapes: out_shapes,
-            statics,
-            levels,
-            level_flops,
-            level_max_flops,
-            free_at_level,
-            root_pos,
-            pool: Mutex::new(BufferPool::default()),
-            scratches: Mutex::new(Vec::new()),
+        let lowered = lower::lower(
+            g,
+            roots,
+            fuse,
             epilogue_mode,
             memory,
-            memplan: plan_mem,
-            inplace_arg,
+            backend == BackendKind::Direct,
+        );
+        let exec = backend::compile(backend, &lowered);
+        CompiledPlan {
+            lowered,
+            backend,
+            exec,
             run_states: Mutex::new(Vec::new()),
             arena_allocs: AtomicU64::new(0),
-            pool_locks: AtomicU64::new(0),
         }
     }
 
     /// Number of instructions the plan executes (after fusion this is
     /// smaller than the reachable node count).
     pub fn len(&self) -> usize {
-        self.instrs.len()
+        self.lowered.instrs.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.instrs.is_empty()
+        self.lowered.instrs.is_empty()
     }
 
     /// Number of dependency levels (the critical-path length).
     pub fn depth(&self) -> usize {
-        self.levels.len()
+        self.lowered.levels.len()
     }
 
     /// Number of fused pipelines in the stream — standalone `Fused`
     /// instructions plus contraction/unary epilogues.
     pub fn fused_count(&self) -> usize {
-        self.instrs
+        self.lowered
+            .instrs
             .iter()
             .filter(|i| {
                 matches!(
@@ -1245,26 +529,32 @@ impl CompiledPlan {
     /// depending on the compile-time [`ExecMemory`]. After one warm-up
     /// run, repeated executions must not move the allocation counters.
     pub fn pool_stats(&self) -> PoolStats {
-        // diagnostic read: bypasses lock_pool so it never perturbs the
-        // pool_locks counter the tests assert on
-        let base = self.pool.lock().unwrap().stats();
-        PoolStats {
-            memory: self.memory,
+        let mut st = PoolStats {
+            memory: self.lowered.memory,
             arena_bytes: self
+                .lowered
                 .memplan
                 .as_ref()
                 .map_or(0, |mp| (mp.arena_len * std::mem::size_of::<f64>()) as u64),
-            planned_reuse: self.memplan.as_ref().map_or(0, |mp| mp.planned_reuse),
-            inplace_reuse: self.memplan.as_ref().map_or(0, |mp| mp.inplace_reuse),
+            planned_reuse: self.lowered.memplan.as_ref().map_or(0, |mp| mp.planned_reuse),
+            inplace_reuse: self.lowered.memplan.as_ref().map_or(0, |mp| mp.inplace_reuse),
             arena_allocs: self.arena_allocs.load(Ordering::Relaxed),
-            pool_locks: self.pool_locks.load(Ordering::Relaxed),
-            ..base
-        }
+            ..PoolStats::default()
+        };
+        // diagnostic read: the backend merges its own counters (pool
+        // hits, lock counts) without perturbing them
+        self.exec.fold_stats(&mut st);
+        st
     }
 
     /// The memory discipline this plan compiled with.
     pub fn memory(&self) -> ExecMemory {
-        self.memory
+        self.lowered.memory
+    }
+
+    /// The execution backend this plan compiled for.
+    pub fn backend(&self) -> BackendKind {
+        self.backend
     }
 
     /// Re-verify the memory plan's no-overlap invariant (no two live
@@ -1272,63 +562,39 @@ impl CompiledPlan {
     /// pooled plans. The differential suite calls this on every plan it
     /// builds; compile already asserts it under `debug_assertions`.
     pub fn validate_memory_plan(&self) {
-        if let Some(mp) = &self.memplan {
+        if let Some(mp) = &self.lowered.memplan {
             mp.check_no_overlap();
         }
     }
 
-    /// Acquire the buffer pool, counting the acquisition (the planned
-    /// mode's "no pool mutex on the hot path" assertion reads this).
-    fn lock_pool(&self) -> MutexGuard<'_, BufferPool> {
-        self.pool_locks.fetch_add(1, Ordering::Relaxed);
-        self.pool.lock().unwrap()
-    }
-
-    /// The level fork gate shared by **both** memory modes: fork only
-    /// for many-small-node levels — a node whose contraction exceeds
-    /// `PAR_BATCH_TOTAL_MIN_FLOP` forks its own row bands / batch splits
-    /// inside the GEMM, and nesting both layers would oversubscribe the
-    /// cores. Returns `(participants, steal-chunk size)` when the level
-    /// should fork, `None` to run it serially. Keeping the gate and the
-    /// chunk formula in one place is part of the Planned/Pooled
-    /// bit-identical contract: the two modes must schedule identically.
-    fn level_fork(&self, lv: usize, level_len: usize) -> Option<(usize, usize)> {
-        let nt = num_threads().min(level_len);
-        if nt > 1
-            && self.level_flops[lv] >= PAR_LEVEL_MIN_FLOP
-            && self.level_max_flops[lv] <= PAR_BATCH_TOTAL_MIN_FLOP
-        {
-            Some((nt, (level_len / (nt * STEAL_CHUNKS_PER_THREAD)).max(1)))
-        } else {
-            None
-        }
-    }
-
     /// Execute the plan against `env`. Panics on unbound or wrongly
-    /// shaped variables (same contract as the interpreter).
+    /// shaped variables (same contract as the interpreter). Dispatch is
+    /// on the plan's artifact, not the requested mode: any plan carrying
+    /// an arena layout runs in-arena (the direct backend does even under
+    /// the pooled ablation mode).
     pub fn run(&self, env: &Env) -> Vec<Tensor> {
-        match self.memory {
-            ExecMemory::Planned => self.run_planned(env),
-            ExecMemory::Pooled => self.run_pooled(env),
+        if self.lowered.memplan.is_some() {
+            self.run_planned(env)
+        } else {
+            self.exec.run_pooled(&self.lowered, env)
         }
     }
 
-    /// Planned-memory execution: one run-state checkout (a single lock),
-    /// then every instruction reads and writes fixed arena offsets. No
-    /// allocation after the arena's first growth, no pool mutex, no
-    /// thread spawn (parallel levels run on the persistent worker pool).
+    /// In-arena execution: one run-state checkout (a single lock), then
+    /// the backend reads and writes fixed arena offsets. No allocation
+    /// after the arena's first growth, no pool mutex.
     fn run_planned(&self, env: &Env) -> Vec<Tensor> {
         let st = self.exec_planned_state(env);
         // materialise the roots (the only per-run allocations: the
         // caller owns the returned tensors)
-        let mut out = Vec::with_capacity(self.root_pos.len());
-        for &p in &self.root_pos {
+        let mut out = Vec::with_capacity(self.lowered.root_pos.len());
+        for &p in &self.lowered.root_pos {
             let (ptr, len) = st.srcs.0[p];
             // SAFETY: the pointee — env tensor, plan static, or st's own
             // arena — is still live here (env outlives the call, st is
             // owned by this frame).
             let data = unsafe { std::slice::from_raw_parts(ptr, len) }.to_vec();
-            out.push(Tensor::new(&self.shapes[p], data));
+            out.push(Tensor::new(&self.lowered.shapes[p], data));
         }
         self.run_states.lock().unwrap().push(st);
         out
@@ -1343,30 +609,36 @@ impl CompiledPlan {
     ///
     /// Roots whose bytes live outside the arena (a root that *is* a
     /// variable or a compiled-in constant) are deep-copied, since the env
-    /// they borrow from dies with the call. Pooled-mode plans have no
-    /// arena and fall back to owned outputs wholesale.
+    /// they borrow from dies with the call. Plans without an arena (the
+    /// CPU backend under pooled mode) fall back to owned outputs
+    /// wholesale.
     ///
     /// Takes the `Arc` by value (clone it to keep a handle — an `Arc`
     /// clone, not a plan copy): the lease must own the plan to return
     /// the run state on drop.
     pub fn run_leased(self: Arc<Self>, env: &Env) -> Vec<PlanOutput> {
-        if self.memory == ExecMemory::Pooled {
-            return self.run_pooled(env).into_iter().map(PlanOutput::from).collect();
+        if self.lowered.memplan.is_none() {
+            return self
+                .exec
+                .run_pooled(&self.lowered, env)
+                .into_iter()
+                .map(PlanOutput::from)
+                .collect();
         }
-        let mp = self.memplan.as_ref().expect("planned plan carries a memory plan");
+        let mp = self.lowered.memplan.as_ref().expect("in-arena plan carries a memory plan");
         let st = self.exec_planned_state(env);
         enum Pending {
             Owned(Tensor),
             Slot { off: usize, len: usize },
         }
-        let mut pend = Vec::with_capacity(self.root_pos.len());
-        for &p in &self.root_pos {
-            match &self.instrs[p] {
+        let mut pend = Vec::with_capacity(self.lowered.root_pos.len());
+        for &p in &self.lowered.root_pos {
+            match &self.lowered.instrs[p] {
                 Instr::Var { .. } | Instr::Static(_) => {
                     let (ptr, len) = st.srcs.0[p];
                     // SAFETY: env and statics are live within this call.
                     let data = unsafe { std::slice::from_raw_parts(ptr, len) }.to_vec();
-                    pend.push(Pending::Owned(Tensor::new(&self.shapes[p], data)));
+                    pend.push(Pending::Owned(Tensor::new(&self.lowered.shapes[p], data)));
                 }
                 _ => {
                     let slot = mp.out[p].expect("planned instruction output");
@@ -1379,11 +651,11 @@ impl CompiledPlan {
         let plan = self;
         let lease = Arc::new(RunLease { state: Some(st), plan: plan.clone() });
         pend.into_iter()
-            .zip(&plan.root_pos)
+            .zip(&plan.lowered.root_pos)
             .map(|(pd, &p)| match pd {
                 Pending::Owned(t) => PlanOutput::from(t),
                 Pending::Slot { off, len } => PlanOutput {
-                    shape: plan.shapes[p].clone(),
+                    shape: plan.lowered.shapes[p].clone(),
                     repr: OutRepr::View { lease: lease.clone(), off, len },
                 },
             })
@@ -1392,10 +664,11 @@ impl CompiledPlan {
 
     /// The shared body of [`run_planned`](Self::run_planned) and
     /// [`run_leased`](Self::run_leased): check out a run state, resolve
-    /// every instruction's value source, execute all levels, and hand the
-    /// state (holding the results in its arena) back to the caller.
+    /// every instruction's value source, hand the backend the arena
+    /// view to execute, and return the state (holding the results in
+    /// its arena) to the caller.
     fn exec_planned_state(&self, env: &Env) -> RunState {
-        let mp = self.memplan.as_ref().expect("planned plan carries a memory plan");
+        let mp = self.lowered.memplan.as_ref().expect("in-arena plan carries a memory plan");
         let mut st = self.run_states.lock().unwrap().pop().unwrap_or_default();
         if st.arena.len() < mp.arena_len {
             self.arena_allocs.fetch_add(1, Ordering::Relaxed);
@@ -1406,7 +679,7 @@ impl CompiledPlan {
         // and shape checks happen once per run, on the calling thread
         let base = st.arena.as_mut_ptr();
         st.srcs.0.clear();
-        for (i, instr) in self.instrs.iter().enumerate() {
+        for (i, instr) in self.lowered.instrs.iter().enumerate() {
             let entry = match instr {
                 Instr::Var { name, shape } => {
                     let t = env
@@ -1421,7 +694,7 @@ impl CompiledPlan {
                     (t.data().as_ptr(), t.len())
                 }
                 Instr::Static(s) => {
-                    let t = &self.statics[*s];
+                    let t = &self.lowered.statics[*s];
                     (t.data().as_ptr(), t.len())
                 }
                 _ => {
@@ -1434,435 +707,9 @@ impl CompiledPlan {
             st.srcs.0.push(entry);
         }
         let ex = ArenaExec { base, srcs: &st.srcs.0 };
-
-        for (lv, level) in self.levels.iter().enumerate() {
-            if let Some((nt, chunk)) = self.level_fork(lv, level.len()) {
-                let cursor = AtomicUsize::new(0);
-                let ex_ref = &ex;
-                let cursor_ref = &cursor;
-                worker_pool().scope(nt, move |_| loop {
-                    let start = cursor_ref.fetch_add(chunk, Ordering::Relaxed);
-                    if start >= level.len() {
-                        break;
-                    }
-                    let end = (start + chunk).min(level.len());
-                    for &p in &level[start..end] {
-                        self.exec_node_planned(p, ex_ref);
-                    }
-                });
-            } else {
-                for &p in level {
-                    self.exec_node_planned(p, &ex);
-                }
-            }
-        }
+        self.exec.exec_arena(&self.lowered, &ex);
         drop(ex);
         st
-    }
-
-    /// Pooled-memory execution (the PR 1 ablation baseline): buffers
-    /// from the mutex-guarded pool, recycled at their last-use level.
-    fn run_pooled(&self, env: &Env) -> Vec<Tensor> {
-        let n = self.instrs.len();
-        let mut values: Vec<Option<Val>> = Vec::with_capacity(n);
-        values.resize_with(n, || None);
-        let mut scratch = self.scratches.lock().unwrap().pop().unwrap_or_default();
-
-        for (lv, level) in self.levels.iter().enumerate() {
-            if let Some((nt, chunk)) = self.level_fork(lv, level.len()) {
-                // Work stealing: workers claim chunks of the level from
-                // a shared cursor, so one oversized node delays only the
-                // thread that claimed it — not a whole static band.
-                let results: Vec<Mutex<Option<Val>>> =
-                    level.iter().map(|_| Mutex::new(None)).collect();
-                let cursor = AtomicUsize::new(0);
-                {
-                    let values_ref = &values;
-                    let results_ref = &results;
-                    let cursor_ref = &cursor;
-                    worker_pool().scope(nt, move |_| {
-                        let mut band_scratch =
-                            self.scratches.lock().unwrap().pop().unwrap_or_default();
-                        loop {
-                            let start = cursor_ref.fetch_add(chunk, Ordering::Relaxed);
-                            if start >= level.len() {
-                                break;
-                            }
-                            let end = (start + chunk).min(level.len());
-                            for k in start..end {
-                                let v = self.exec_node(
-                                    level[k],
-                                    values_ref,
-                                    env,
-                                    &mut band_scratch,
-                                );
-                                *results_ref[k].lock().unwrap() = Some(v);
-                            }
-                        }
-                        self.scratches.lock().unwrap().push(band_scratch);
-                    });
-                }
-                for (r, &p) in results.into_iter().zip(level) {
-                    values[p] = r.into_inner().unwrap();
-                }
-            } else {
-                for &p in level {
-                    let v = self.exec_node(p, &values, env, &mut scratch);
-                    values[p] = Some(v);
-                }
-            }
-            // recycle buffers whose last consumer ran in this level
-            // (one pool lock per level, not per buffer)
-            if !self.free_at_level[lv].is_empty() {
-                let mut pool = self.lock_pool();
-                for &p in &self.free_at_level[lv] {
-                    if let Some(Val::Owned(t)) = values[p].take() {
-                        pool.release(t.into_data());
-                    }
-                }
-            }
-        }
-        self.scratches.lock().unwrap().push(scratch);
-
-        let mut out = Vec::with_capacity(self.root_pos.len());
-        for i in 0..self.root_pos.len() {
-            let p = self.root_pos[i];
-            let used_again = self.root_pos[i + 1..].contains(&p);
-            let t = if used_again {
-                values[p].as_ref().expect("root not computed").tensor().clone()
-            } else {
-                match values[p].take().expect("root not computed") {
-                    Val::Owned(t) => t,
-                    Val::Ref(t) => t.clone(),
-                }
-            };
-            out.push(t);
-        }
-        out
-    }
-
-    /// Execute one instruction of a planned run: operands and the
-    /// destination are fixed arena offsets (or pre-resolved env/static
-    /// pointers); nothing here allocates, locks, or touches a `Tensor`.
-    fn exec_node_planned(&self, p: usize, ex: &ArenaExec<'_>) {
-        let mp = self.memplan.as_ref().expect("planned plan carries a memory plan");
-        let instr = &self.instrs[p];
-        let slot = match instr {
-            Instr::Var { .. } | Instr::Static(_) => return, // resolved up front
-            _ => mp.out[p].expect("planned instruction output"),
-        };
-        // SAFETY: this instruction is the sole writer of `slot` in its
-        // level, and no concurrently live buffer overlaps it (planner
-        // invariant, re-checked by validate_memory_plan / debug builds).
-        let out: &mut [f64] = unsafe { slot_mut(ex, slot) };
-        match instr {
-            Instr::Var { .. } | Instr::Static(_) => unreachable!(),
-            Instr::Add(a, b) => match self.inplace_arg[p] {
-                // out aliases operand a: its values are already in place
-                Some(0) => {
-                    for (o, &y) in out.iter_mut().zip(src_slice(ex, *b)) {
-                        *o += y;
-                    }
-                }
-                // out aliases operand b
-                Some(_) => {
-                    for (o, &x) in out.iter_mut().zip(src_slice(ex, *a)) {
-                        *o += x;
-                    }
-                }
-                None => {
-                    let ta = src_slice(ex, *a);
-                    let tb = src_slice(ex, *b);
-                    for ((o, &x), &y) in out.iter_mut().zip(ta).zip(tb) {
-                        *o = x + y;
-                    }
-                }
-            },
-            Instr::Elem(f, a) => match self.inplace_arg[p] {
-                Some(_) => {
-                    for o in out.iter_mut() {
-                        *o = f.apply(*o);
-                    }
-                }
-                None => {
-                    for (o, &x) in out.iter_mut().zip(src_slice(ex, *a)) {
-                        *o = f.apply(x);
-                    }
-                }
-            },
-            Instr::Mul(a, b, plan, epi) => {
-                let ta = src_slice(ex, *a);
-                let tb = src_slice(ex, *b);
-                let scr = mp.scratch[p].expect("contraction scratch planned");
-                // SAFETY: scratch slots are exclusive to this instruction
-                // for the duration of its level (planner invariant).
-                let (sa, sb, sc) = unsafe {
-                    (slot_mut(ex, scr[0]), slot_mut(ex, scr[1]), slot_mut(ex, scr[2]))
-                };
-                IDX_SCRATCH.with(|idx_cell| {
-                    let mut guard = idx_cell.borrow_mut();
-                    let idx: &mut Vec<usize> = &mut guard;
-                    match epi {
-                        None => plan.run_planned(ta, tb, out, sa, sb, sc, idx, &NoEpilogue),
-                        Some(e) => {
-                            let srcs = fused_srcs_planned(&e.args, ex, out.len());
-                            let rest = &srcs[..e.args.len()];
-                            match self.epilogue_mode {
-                                EpilogueMode::InTile => {
-                                    let tile_epi = EpiFn(|base: usize, seg: &mut [f64]| {
-                                        e.kernel.run_inplace_at(seg, base, rest)
-                                    });
-                                    plan.run_planned(ta, tb, out, sa, sb, sc, idx, &tile_epi);
-                                }
-                                EpilogueMode::TwoPass => {
-                                    plan.run_planned(
-                                        ta,
-                                        tb,
-                                        out,
-                                        sa,
-                                        sb,
-                                        sc,
-                                        idx,
-                                        &NoEpilogue,
-                                    );
-                                    e.kernel.run_inplace(out, rest);
-                                }
-                            }
-                        }
-                    }
-                });
-            }
-            Instr::GenUnary(f, a, epi) => {
-                let ta = src_slice(ex, *a);
-                let last_dim = *self.shapes[*a].last().expect("GenFn needs rank ≥ 1");
-                gen_unary_into(*f, ta, last_dim, out);
-                if let Some(e) = epi {
-                    let srcs = fused_srcs_planned(&e.args, ex, out.len());
-                    e.kernel.run_inplace(out, &srcs[..e.args.len()]);
-                }
-            }
-            Instr::Fused { kernel, args } => match self.inplace_arg[p] {
-                Some(arg) => {
-                    // slot `arg` aliases the output; resolve the others
-                    let srcs = fused_srcs_planned_except(args, ex, out.len(), arg);
-                    kernel.run_inplace_arg(out, arg as u32, &srcs[..args.len()]);
-                }
-                None => {
-                    let srcs = fused_srcs_planned(args, ex, out.len());
-                    kernel.run(&srcs[..args.len()], out);
-                }
-            },
-        }
-    }
-
-    fn exec_node<'a>(
-        &'a self,
-        p: usize,
-        values: &[Option<Val<'a>>],
-        env: &'a Env,
-        scratch: &mut EinScratch,
-    ) -> Val<'a> {
-        let shape = &self.shapes[p];
-        match &self.instrs[p] {
-            Instr::Var { name, shape } => {
-                let t = env
-                    .get(name)
-                    .unwrap_or_else(|| panic!("unbound variable {}", name));
-                assert_eq!(
-                    t.shape(),
-                    &shape[..],
-                    "variable {} bound with wrong shape",
-                    name
-                );
-                Val::Ref(t)
-            }
-            Instr::Static(i) => Val::Ref(&self.statics[*i]),
-            Instr::Add(a, b) => {
-                let ta = values[*a].as_ref().expect("operand not computed").tensor();
-                let tb = values[*b].as_ref().expect("operand not computed").tensor();
-                let mut buf = self.lock_pool().acquire(ta.len());
-                for ((o, &x), &y) in buf.iter_mut().zip(ta.data()).zip(tb.data()) {
-                    *o = x + y;
-                }
-                Val::Owned(Tensor::new(shape, buf))
-            }
-            Instr::Mul(a, b, plan, epi) => {
-                let ta = values[*a].as_ref().expect("operand not computed").tensor();
-                let tb = values[*b].as_ref().expect("operand not computed").tensor();
-                let out_len: usize = shape.iter().product();
-                let buf = self.lock_pool().acquire(out_len);
-                let mut out = Tensor::new(shape, buf);
-                match epi {
-                    None => plan.run(ta, tb, &mut out, scratch),
-                    Some(e) => {
-                        let srcs = fused_srcs(&e.args, values, out_len);
-                        let rest = &srcs[..e.args.len()];
-                        match self.epilogue_mode {
-                            EpilogueMode::InTile => {
-                                // the fused chain runs on each output
-                                // tile right after its final
-                                // k-accumulation, cache-hot
-                                let tile_epi = EpiFn(|base: usize, seg: &mut [f64]| {
-                                    e.kernel.run_inplace_at(seg, base, rest)
-                                });
-                                plan.run_with_epilogue_in_tile(ta, tb, &mut out, scratch, &tile_epi);
-                            }
-                            EpilogueMode::TwoPass => {
-                                plan.run_with_epilogue(ta, tb, &mut out, scratch, |data| {
-                                    e.kernel.run_inplace(data, rest)
-                                });
-                            }
-                        }
-                    }
-                }
-                Val::Owned(out)
-            }
-            Instr::Elem(f, a) => {
-                let ta = values[*a].as_ref().expect("operand not computed").tensor();
-                let mut buf = self.lock_pool().acquire(ta.len());
-                for (o, &x) in buf.iter_mut().zip(ta.data()) {
-                    *o = f.apply(x);
-                }
-                Val::Owned(Tensor::new(shape, buf))
-            }
-            Instr::GenUnary(f, a, epi) => {
-                let ta = values[*a].as_ref().expect("operand not computed").tensor();
-                let out_len: usize = shape.iter().product();
-                let mut buf = self.lock_pool().acquire(out_len);
-                let last_dim = *ta.shape().last().expect("GenFn needs rank ≥ 1");
-                gen_unary_into(*f, ta.data(), last_dim, &mut buf);
-                if let Some(e) = epi {
-                    let srcs = fused_srcs(&e.args, values, out_len);
-                    e.kernel.run_inplace(&mut buf, &srcs[..e.args.len()]);
-                }
-                Val::Owned(Tensor::new(shape, buf))
-            }
-            Instr::Fused { kernel, args } => {
-                let out_len: usize = shape.iter().product();
-                let srcs = fused_srcs(args, values, out_len);
-                let mut buf = self.lock_pool().acquire(out_len);
-                kernel.run(&srcs[..args.len()], &mut buf);
-                Val::Owned(Tensor::new(shape, buf))
-            }
-        }
-    }
-}
-
-/// Resolve fused-kernel operand slots against computed values: operands
-/// matching the output length stream per element, rank-0 operands
-/// broadcast. (Group construction guarantees every slot is one of the
-/// two.)
-///
-/// Returns a fixed-size stack array — the group builder caps kernels at
-/// [`FUSED_MAX_ARGS`] operand slots, so resolution costs zero heap
-/// allocations and the executor's steady-state hot path is strictly
-/// alloc-free (callers slice the array to `args.len()`).
-fn fused_srcs<'v>(
-    args: &[usize],
-    values: &'v [Option<Val<'_>>],
-    out_len: usize,
-) -> [FusedSrc<'v>; FUSED_MAX_ARGS] {
-    debug_assert!(args.len() <= FUSED_MAX_ARGS, "group builder must cap operand slots");
-    let mut srcs = [FusedSrc::Scalar(0.0); FUSED_MAX_ARGS];
-    for (slot, &q) in args.iter().enumerate() {
-        let t = values[q].as_ref().expect("operand not computed").tensor();
-        srcs[slot] = if t.len() == out_len {
-            FusedSrc::Slice(t.data())
-        } else {
-            FusedSrc::Scalar(t.data()[0])
-        };
-    }
-    srcs
-}
-
-/// [`fused_srcs`] for the planned path: operand slots resolve through
-/// the run's source table instead of `Val`s. Same contract, same
-/// fixed-size zero-allocation array.
-fn fused_srcs_planned<'r>(
-    args: &[usize],
-    ex: &ArenaExec<'r>,
-    out_len: usize,
-) -> [FusedSrc<'r>; FUSED_MAX_ARGS] {
-    debug_assert!(args.len() <= FUSED_MAX_ARGS, "group builder must cap operand slots");
-    let mut srcs = [FusedSrc::Scalar(0.0); FUSED_MAX_ARGS];
-    for (slot, &q) in args.iter().enumerate() {
-        let s = src_slice(ex, q);
-        srcs[slot] = if s.len() == out_len {
-            FusedSrc::Slice(s)
-        } else {
-            FusedSrc::Scalar(s[0])
-        };
-    }
-    srcs
-}
-
-/// [`fused_srcs_planned`] minus the slot that aliases the output of an
-/// in-place fused instruction: that operand's bytes *are* the output
-/// buffer, so no shared slice to it may exist — the kernel reads it as
-/// the carrier instead ([`FusedKernel::run_inplace_arg`]).
-fn fused_srcs_planned_except<'r>(
-    args: &[usize],
-    ex: &ArenaExec<'r>,
-    out_len: usize,
-    skip: usize,
-) -> [FusedSrc<'r>; FUSED_MAX_ARGS] {
-    debug_assert!(args.len() <= FUSED_MAX_ARGS, "group builder must cap operand slots");
-    let mut srcs = [FusedSrc::Scalar(0.0); FUSED_MAX_ARGS];
-    for (slot, &q) in args.iter().enumerate() {
-        if slot == skip {
-            continue; // dummy: Load(skip) reads the carrier value
-        }
-        let s = src_slice(ex, q);
-        srcs[slot] = if s.len() == out_len {
-            FusedSrc::Slice(s)
-        } else {
-            FusedSrc::Scalar(s[0])
-        };
-    }
-    srcs
-}
-
-/// Operand positions of one instruction (epilogue arguments included).
-fn operands(instr: &Instr) -> Vec<usize> {
-    let mut v = match instr {
-        Instr::Add(a, b) | Instr::Mul(a, b, _, _) => vec![*a, *b],
-        Instr::Elem(_, a) | Instr::GenUnary(_, a, _) => vec![*a],
-        Instr::Fused { args, .. } => args.clone(),
-        Instr::Var { .. } | Instr::Static(_) => Vec::new(),
-    };
-    match instr {
-        Instr::Mul(_, _, _, Some(e)) | Instr::GenUnary(_, _, Some(e)) => v.extend(&e.args),
-        _ => {}
-    }
-    v
-}
-
-/// Write-into evaluation of the general unary functions (mirrors
-/// [`GenFn::eval`] but targets a raw buffer — pooled or arena-planned).
-/// `n` is the operand's trailing dimension; rank-0 inputs are rejected
-/// at compile time.
-fn gen_unary_into(f: GenFn, data: &[f64], n: usize, out: &mut [f64]) {
-    match f {
-        GenFn::Softmax => {
-            out.copy_from_slice(data);
-            for row in out.chunks_mut(n) {
-                let m = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-                let mut z = 0.0;
-                for v in row.iter_mut() {
-                    *v = (*v - m).exp();
-                    z += *v;
-                }
-                for v in row.iter_mut() {
-                    *v /= z;
-                }
-            }
-        }
-        GenFn::LogSumExp => {
-            for (o, row) in out.iter_mut().zip(data.chunks(n)) {
-                let m = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-                *o = m + row.iter().map(|v| (v - m).exp()).sum::<f64>().ln();
-            }
-        }
     }
 }
 
@@ -1884,19 +731,26 @@ struct PlanKey {
     /// plans compiled under different memory disciplines are distinct
     /// artifacts (offsets vs pool), so the key separates them
     memory: ExecMemory,
+    /// likewise for the execution backend: a direct-threaded closure
+    /// chain and a level-parallel plan are different compiled artifacts
+    backend: BackendKind,
 }
 
-/// Memoised compiled plans keyed by `(graph fingerprint, roots)` — the
-/// coordinator's repeated-request hot path compiles each entry once and
-/// shares it (plan + warm buffer pool) across workers.
+/// Memoised compiled plans keyed by `(graph fingerprint, roots, memory,
+/// backend)` — the coordinator's repeated-request hot path compiles
+/// each entry once and shares it (plan + warm arenas or buffer pool)
+/// across workers.
 #[derive(Default)]
 pub struct PlanCache {
     /// canonical plans, keyed by the fingerprint of the graph actually
     /// compiled (the optimized + compacted graph unless `OptLevel::None`)
     map: Mutex<HashMap<PlanKey, Arc<CompiledPlan>>>,
-    /// fast path: `(raw input fingerprint, roots, level)` → plan, so a
-    /// repeated request skips the optimizer entirely — only first-time
-    /// graphs pay for canonicalization
+    /// fast path: `(raw input key, level)` → plan, so a repeated request
+    /// skips the optimizer entirely — only first-time graphs pay for
+    /// canonicalization. The raw key carries the full configuration
+    /// (memory mode and backend included), so a repeated graph requested
+    /// under a different configuration can never be served the other
+    /// configuration's plan.
     by_input: Mutex<HashMap<(PlanKey, OptLevel), Arc<CompiledPlan>>>,
 }
 
@@ -1912,7 +766,7 @@ impl PlanCache {
     }
 
     /// Fetch the compiled plan for `(g, roots)` with an explicit
-    /// optimizer level (default memory discipline). See
+    /// optimizer level (default memory discipline and backend). See
     /// [`PlanCache::get_or_compile_opts`].
     pub fn get_or_compile_with(
         &self,
@@ -1920,29 +774,32 @@ impl PlanCache {
         roots: &[NodeId],
         level: OptLevel,
     ) -> Arc<CompiledPlan> {
-        self.get_or_compile_opts(g, roots, level, ExecMemory::default())
+        self.get_or_compile_opts(g, roots, level, ExecMemory::default(), BackendKind::default())
     }
 
     /// Fetch the compiled plan for `(g, roots)` with an explicit
-    /// optimizer level and memory discipline. For `OptLevel::None` the
-    /// graph is fingerprinted and compiled exactly as given (the pre-PR 3
-    /// behaviour, kept as the ablation escape hatch); otherwise the graph
-    /// is optimized and dead-node-swept first and the *optimized,
-    /// compacted* graph is what the key fingerprints — so
-    /// differently-built but equivalent graphs converge on one cached
-    /// plan (one warm arena set or buffer pool). Plans compiled under
-    /// different [`ExecMemory`] modes are cached separately.
+    /// optimizer level, memory discipline and execution backend. For
+    /// `OptLevel::None` the graph is fingerprinted and compiled exactly
+    /// as given (the pre-PR 3 behaviour, kept as the ablation escape
+    /// hatch); otherwise the graph is optimized and dead-node-swept
+    /// first and the *optimized, compacted* graph is what the key
+    /// fingerprints — so differently-built but equivalent graphs
+    /// converge on one cached plan (one warm arena set or buffer pool).
+    /// Plans compiled under different [`ExecMemory`] modes or
+    /// [`BackendKind`]s are cached separately.
     pub fn get_or_compile_opts(
         &self,
         g: &Graph,
         roots: &[NodeId],
         level: OptLevel,
         memory: ExecMemory,
+        backend: BackendKind,
     ) -> Arc<CompiledPlan> {
         let input_key = PlanKey {
             fingerprint: graph_fingerprint(g),
             roots: roots.iter().map(|r| r.0).collect(),
             memory,
+            backend,
         };
         if level == OptLevel::None {
             let mut map = self.map.lock().unwrap();
@@ -1955,6 +812,7 @@ impl PlanCache {
                 true,
                 EpilogueMode::default(),
                 memory,
+                backend,
             ));
             map.insert(input_key, plan.clone());
             return plan;
@@ -1972,6 +830,7 @@ impl PlanCache {
             fingerprint: graph_fingerprint(&gc),
             roots: croots.iter().map(|r| r.0).collect(),
             memory,
+            backend,
         };
         let plan = {
             let mut map = self.map.lock().unwrap();
@@ -1984,6 +843,7 @@ impl PlanCache {
                     true,
                     EpilogueMode::default(),
                     memory,
+                    backend,
                 ));
                 map.insert(canon_key, plan.clone());
                 plan
@@ -2013,8 +873,9 @@ pub fn global_plan_cache() -> &'static PlanCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::einsum::EinSpec;
     use crate::eval::Plan;
-    use crate::ir::Elem;
+    use crate::ir::{Elem, GenFn};
 
     fn expr1() -> (Graph, NodeId, Env) {
         // Xᵀ((exp(Xw)+1)⁻¹ ⊙ exp(Xw)) — paper Expression (1)
@@ -2042,6 +903,44 @@ mod tests {
         let a = compiled.run(&env);
         let b = interp.run(&g, &env);
         assert!(a[0].allclose(&b[0], 1e-12, 1e-14), "diff {}", a[0].max_abs_diff(&b[0]));
+    }
+
+    #[test]
+    fn direct_backend_is_bit_identical_to_cpu() {
+        let (g, y, env) = expr1();
+        let cpu = CompiledPlan::new(&g, &[y]);
+        let direct = CompiledPlan::with_backend(&g, &[y], BackendKind::Direct);
+        assert_eq!(cpu.backend(), BackendKind::Cpu);
+        assert_eq!(direct.backend(), BackendKind::Direct);
+        direct.validate_memory_plan();
+        let a = cpu.run(&env);
+        let b = direct.run(&env);
+        assert_eq!(a[0].data(), b[0].data(), "backends must be bit-identical");
+        // the direct backend leases arena views exactly like the cpu one
+        let direct = Arc::new(direct);
+        let leased = direct.clone().run_leased(&env);
+        assert_eq!(leased[0].data(), a[0].data());
+    }
+
+    #[test]
+    fn direct_backend_executes_in_arena_under_pooled_mode() {
+        // the direct backend force-builds the arena plan even under the
+        // pooled ablation mode, and never touches a pool mutex
+        let (g, y, env) = expr1();
+        let plan = CompiledPlan::with_options(
+            &g,
+            &[y],
+            true,
+            EpilogueMode::default(),
+            ExecMemory::Pooled,
+            BackendKind::Direct,
+        );
+        let want = CompiledPlan::new(&g, &[y]).run(&env);
+        let got = plan.run(&env);
+        assert_eq!(got[0].data(), want[0].data());
+        let st = plan.pool_stats();
+        assert_eq!(st.pool_locks, 0, "direct backend must not touch the pool");
+        assert!(st.arena_bytes > 0, "direct backend must carry an arena plan");
     }
 
     #[test]
@@ -2096,6 +995,7 @@ mod tests {
             &broots,
             OptLevel::None,
             ExecMemory::Planned,
+            BackendKind::Cpu,
         );
         let mut env = Env::new();
         env.insert("X", Tensor::randn(&[2, 4, 3], 1));
@@ -2150,6 +1050,7 @@ mod tests {
             true,
             EpilogueMode::InTile,
             ExecMemory::default(),
+            BackendKind::default(),
         );
         let two_pass = CompiledPlan::with_options(
             &g,
@@ -2157,6 +1058,7 @@ mod tests {
             true,
             EpilogueMode::TwoPass,
             ExecMemory::default(),
+            BackendKind::default(),
         );
         assert!(in_tile.fused_count() >= 1, "expression 1 must produce an epilogue");
         let a = in_tile.run(&env);
@@ -2186,6 +1088,7 @@ mod tests {
             true,
             EpilogueMode::default(),
             ExecMemory::Pooled,
+            BackendKind::Cpu,
         );
         let first = plan.run(&env);
         let cold = plan.pool_stats();
@@ -2218,6 +1121,7 @@ mod tests {
             true,
             EpilogueMode::default(),
             ExecMemory::Pooled,
+            BackendKind::Cpu,
         );
         let a = planned.run(&env);
         let b = pooled.run(&env);
@@ -2293,6 +1197,52 @@ mod tests {
     }
 
     #[test]
+    fn plan_cache_separates_memory_modes_and_backends() {
+        // regression for the by_input fast-path key: a repeated graph
+        // requested under a different memory mode or backend must never
+        // be served the other configuration's plan
+        let cache = PlanCache::new();
+        let (g, y, env) = expr1();
+        let level = OptLevel::default();
+        let planned =
+            cache.get_or_compile_opts(&g, &[y], level, ExecMemory::Planned, BackendKind::Cpu);
+        let pooled =
+            cache.get_or_compile_opts(&g, &[y], level, ExecMemory::Pooled, BackendKind::Cpu);
+        let direct =
+            cache.get_or_compile_opts(&g, &[y], level, ExecMemory::Planned, BackendKind::Direct);
+        assert!(
+            !Arc::ptr_eq(&planned, &pooled),
+            "memory modes must compile distinct plans"
+        );
+        assert!(
+            !Arc::ptr_eq(&planned, &direct),
+            "backends must compile distinct plans"
+        );
+        assert_eq!(planned.memory(), ExecMemory::Planned);
+        assert_eq!(pooled.memory(), ExecMemory::Pooled);
+        assert_eq!(direct.backend(), BackendKind::Direct);
+        assert_eq!(cache.len(), 3);
+        // repeated requests hit their own artifact (the fast path
+        // includes the full configuration in its key)
+        let planned2 =
+            cache.get_or_compile_opts(&g, &[y], level, ExecMemory::Planned, BackendKind::Cpu);
+        let pooled2 =
+            cache.get_or_compile_opts(&g, &[y], level, ExecMemory::Pooled, BackendKind::Cpu);
+        let direct2 =
+            cache.get_or_compile_opts(&g, &[y], level, ExecMemory::Planned, BackendKind::Direct);
+        assert!(Arc::ptr_eq(&planned, &planned2));
+        assert!(Arc::ptr_eq(&pooled, &pooled2));
+        assert!(Arc::ptr_eq(&direct, &direct2));
+        assert_eq!(cache.len(), 3);
+        // and all three agree bitwise
+        let a = planned.run(&env);
+        let b = pooled.run(&env);
+        let c = direct.run(&env);
+        assert_eq!(a[0].data(), b[0].data());
+        assert_eq!(a[0].data(), c[0].data());
+    }
+
+    #[test]
     fn plan_cache_canonicalizes_equivalent_graphs() {
         // the same contraction written with different labels / operand
         // order must converge on ONE cached plan via the optimizer...
@@ -2365,7 +1315,7 @@ mod tests {
     fn levels_partition_instructions() {
         let (g, y, _) = expr1();
         let plan = CompiledPlan::new(&g, &[y]);
-        let total: usize = plan.levels.iter().map(|l| l.len()).sum();
+        let total: usize = plan.lowered.levels.iter().map(|l| l.len()).sum();
         assert_eq!(total, plan.len());
         assert!(plan.depth() >= 4, "expression 1 has a chain of depth ≥ 4");
     }

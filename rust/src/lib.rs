@@ -88,8 +88,8 @@ pub mod prelude {
     pub use crate::einsum::{einsum, einsum_into, EinScratch, EinSpec, EinsumPlan};
     pub use crate::eval::{eval, eval_many, eval_many_opts, eval_many_with, Env, Plan};
     pub use crate::exec::{
-        batch_graph, global_plan_cache, CompiledPlan, EpilogueMode, ExecMemory, PlanCache,
-        PlanOutput,
+        batch_graph, global_plan_cache, BackendKind, CompiledPlan, EpilogueMode, ExecMemory,
+        PlanCache, PlanOutput,
     };
     pub use crate::ir::{Elem, Graph, NodeId, Op};
     pub use crate::opt::{compact, optimize, report, OptLevel, OptStats};

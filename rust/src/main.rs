@@ -4,10 +4,12 @@
 //!
 //! ```text
 //! tensorcalc demo                           quick tour on Expression (1)
-//! tensorcalc derive <problem> [--n N] [--mode reverse|cc|compressed] [--dot]
+//! tensorcalc derive <problem> [--n N] [--mode reverse|cc|compressed]
+//!                   [--backend cpu|direct] [--dot]
 //! tensorcalc bench fig2|fig3|newton [--sizes a,b,c] [--secs S] [--full]
 //! tensorcalc artifacts [--dir D]            list + smoke-run AOT artifacts
-//! tensorcalc serve [--requests N] [--batch B]  coordinator demo with metrics
+//! tensorcalc serve [--requests N] [--batch B] [--backend cpu|direct]
+//!                                           coordinator demo with metrics
 //!                                           (B = max dynamic batch, 1 = off)
 //! ```
 
@@ -66,6 +68,15 @@ impl Args {
     fn secs(&self, default: f64) -> f64 {
         self.get("secs").map(|s| s.parse().expect("bad secs")).unwrap_or(default)
     }
+
+    fn backend(&self) -> Result<BackendKind> {
+        match self.get("backend") {
+            None => Ok(BackendKind::default()),
+            Some(s) => {
+                BackendKind::parse(s).ok_or_else(|| anyhow!("unknown backend {} (cpu|direct)", s))
+            }
+        }
+    }
 }
 
 fn run() -> Result<()> {
@@ -82,9 +93,10 @@ fn run() -> Result<()> {
             println!(
                 "tensorcalc — A Simple and Efficient Tensor Calculus for ML (reproduction)\n\n\
                  usage:\n  tensorcalc demo\n  tensorcalc derive <logreg|matfac|mlp> \
-                 [--n N] [--mode reverse|cc|compressed] [--dot]\n  tensorcalc bench \
-                 <fig2|fig3|newton> [--sizes a,b,c] [--secs S] [--full]\n  tensorcalc \
-                 artifacts [--dir D]\n  tensorcalc serve [--requests N] [--batch B]"
+                 [--n N] [--mode reverse|cc|compressed] [--backend cpu|direct] [--dot]\n  \
+                 tensorcalc bench <fig2|fig3|newton> [--sizes a,b,c] [--secs S] [--full]\n  \
+                 tensorcalc artifacts [--dir D]\n  tensorcalc serve [--requests N] \
+                 [--batch B] [--backend cpu|direct]"
             );
             Ok(())
         }
@@ -164,14 +176,16 @@ fn derive(args: &Args) -> Result<()> {
     // to this DAG before compilation, and what the executor's static
     // memory planner packs the result into — one optimize run for both
     {
+        let backend = args.backend()?;
         let mut g2 = w.g.clone();
         let o = tensorcalc::opt::optimize(&mut g2, &[node], tensorcalc::opt::OptLevel::Full);
         println!("optimizer (CSE + reassociation): {}", o.stats);
-        let plan = CompiledPlan::new(&g2, &o.roots);
+        let plan = CompiledPlan::with_backend(&g2, &o.roots, backend);
         println!(
-            "memory plan ({} instrs, {} levels): {}",
+            "memory plan ({} instrs, {} levels, backend {}): {}",
             plan.len(),
             plan.depth(),
+            plan.backend().name(),
             plan.pool_stats()
         );
     }
@@ -256,17 +270,19 @@ fn serve(args: &Args) -> Result<()> {
         .get("batch")
         .map(|v| v.parse().unwrap())
         .unwrap_or(tensorcalc::coordinator::DEFAULT_MAX_BATCH);
+    let backend = args.backend()?;
     let (m, n) = (256usize, 128usize);
     let mut c = Coordinator::new(1024);
 
-    // engine-backed gradient entry (compiled plan via the global cache)
+    // engine-backed gradient entry (compiled plan via the global cache),
+    // prewarmed so no batch bucket compiles on the serving path
     {
         let mut w = logistic_regression(m, n);
         let grad = w.gradient();
         let roots = [w.loss, grad];
         c.register_engine(
             "logreg_grad_engine",
-            EngineEntry::compiled(
+            EngineEntry::compiled_with(
                 &w.g,
                 &roots,
                 vec![
@@ -274,8 +290,12 @@ fn serve(args: &Args) -> Result<()> {
                     ("y".into(), vec![m]),
                     ("w".into(), vec![n]),
                 ],
+                OptLevel::default(),
+                ExecMemory::default(),
+                backend,
             )
-            .with_max_batch(batch),
+            .with_max_batch(batch)
+            .with_prewarm(true),
         );
     }
     // PJRT-backed entries
@@ -285,7 +305,12 @@ fn serve(args: &Args) -> Result<()> {
         println!("(no artifacts — PJRT entries skipped)");
     }
 
-    println!("entries: {:?} (engine max batch {})", c.entries(), batch);
+    println!(
+        "entries: {:?} (engine max batch {}, backend {})",
+        c.entries(),
+        batch,
+        backend.name()
+    );
     let x = Tensor::randn(&[m, n], 1);
     let y = Tensor::randn(&[m], 2).map(f64::signum);
     let wv = Tensor::randn(&[n], 3).scale(0.1);

@@ -1,0 +1,237 @@
+//! Differential pinning of the execution backends behind the
+//! `exec::backend` seam: `BackendKind::Cpu` (the level-parallel
+//! work-stealing executor) vs `BackendKind::Direct` (the
+//! direct-threaded closure chain) vs the interpreter oracle.
+//!
+//! The backend contract under test:
+//!
+//! * both backends consume the **same** backend-neutral `Lowered`
+//!   artifact (same instruction stream, same fused kernels, same
+//!   accumulation order), so their outputs must be **bit-identical** —
+//!   not merely close — across every workload, memory discipline and
+//!   epilogue mode;
+//! * both must stay allclose to the un-fused interpreter
+//!   ([`tensorcalc::eval::Plan`]), the reference semantics;
+//! * the direct backend always executes in-arena (it forces a memory
+//!   plan even under the `Pooled` ablation mode), so its steady state
+//!   takes no pool lock and its plan passes the no-overlap check;
+//! * warm re-runs are bit-stable on both sides.
+
+use tensorcalc::eval::{Env, Plan};
+use tensorcalc::exec::{batch_graph, BackendKind, CompiledPlan, EpilogueMode, ExecMemory};
+use tensorcalc::ir::{Graph, NodeId};
+use tensorcalc::opt::{compact, optimize, OptLevel};
+use tensorcalc::problems::{logistic_regression, matrix_factorization, neural_net};
+use tensorcalc::tensor::Tensor;
+
+/// Compile `(g, roots)` for both backends under the given options, pin
+/// them bit-identical against each other and close against the
+/// interpreter, re-check the no-overlap invariant, and verify warm
+/// re-runs are bit-stable.
+fn check_backends(
+    g: &Graph,
+    roots: &[NodeId],
+    env: &Env,
+    memory: ExecMemory,
+    epilogue: EpilogueMode,
+    label: &str,
+) {
+    let cpu = CompiledPlan::with_options(g, roots, true, epilogue, memory, BackendKind::Cpu);
+    let direct = CompiledPlan::with_options(g, roots, true, epilogue, memory, BackendKind::Direct);
+    assert_eq!(cpu.backend(), BackendKind::Cpu);
+    assert_eq!(direct.backend(), BackendKind::Direct);
+    // both artifacts lower from the same stream — the direct backend
+    // must not change what was compiled, only how it executes
+    assert_eq!(cpu.len(), direct.len(), "{label}: lowering diverged across backends");
+    assert_eq!(cpu.fused_count(), direct.fused_count());
+    cpu.validate_memory_plan();
+    direct.validate_memory_plan();
+
+    let a = cpu.run(env);
+    let b = direct.run(env);
+    let want = Plan::new(g, roots).run(g, env);
+    assert_eq!(a.len(), b.len());
+    for (k, ((ta, tb), tw)) in a.iter().zip(&b).zip(&want).enumerate() {
+        assert_eq!(
+            ta.data(),
+            tb.data(),
+            "{label}: root {k}: cpu vs direct must be bit-identical"
+        );
+        assert!(
+            ta.allclose(tw, 1e-9, 1e-11),
+            "{label}: root {k}: vs interpreter diff {}",
+            ta.max_abs_diff(tw)
+        );
+    }
+    // warm re-runs must not drift on either side
+    let a2 = cpu.run(env);
+    let b2 = direct.run(env);
+    for (k, ((x, y), (x2, y2))) in a.iter().zip(&b).zip(a2.iter().zip(&b2)).enumerate() {
+        assert_eq!(x.data(), x2.data(), "{label}: root {k}: cpu warm re-run drifted");
+        assert_eq!(y.data(), y2.data(), "{label}: root {k}: direct warm re-run drifted");
+    }
+}
+
+/// Every (memory, epilogue) cell of the option matrix for one workload.
+fn check_matrix(g: &Graph, roots: &[NodeId], env: &Env, label: &str) {
+    for memory in [ExecMemory::Planned, ExecMemory::Pooled] {
+        for epilogue in [EpilogueMode::InTile, EpilogueMode::TwoPass] {
+            check_backends(
+                g,
+                roots,
+                env,
+                memory,
+                epilogue,
+                &format!("{label} [{:?}/{:?}]", memory, epilogue),
+            );
+        }
+    }
+}
+
+#[test]
+fn logreg_gradient_across_backends() {
+    let mut w = logistic_regression(96, 8);
+    let grad = w.gradient();
+    check_matrix(&w.g, &[w.loss, grad], &w.env, "logreg-grad");
+}
+
+#[test]
+fn matfac_compressed_hessian_across_backends() {
+    // the §3.3 compressed Hessian core (k×k instead of the order-4
+    // tensor): dense contraction chains over shared sub-DAGs
+    let mut w = matrix_factorization(12, 12, 3, false);
+    let comp = w.hessian_compressed();
+    assert!(comp.is_compressed());
+    let core = comp.eval_node();
+    check_matrix(&w.g, &[core], &w.env, "matfac-hess-compressed");
+}
+
+#[test]
+fn neural_net_hessian_across_backends() {
+    // reverse-over-reverse MLP Hessian, optimized: deep levels and the
+    // widest fan-out the suite has — the strongest contrast between the
+    // work-stealing schedule and the sequential closure chain
+    let mut w = neural_net(6, 4, 10);
+    let h = w.hessian();
+    let mut g2 = w.g.clone();
+    let o = optimize(&mut g2, &[h], OptLevel::Full);
+    check_matrix(&g2, &o.roots, &w.env, "mlp-hess");
+}
+
+#[test]
+fn batched_serving_variant_across_backends() {
+    // the serving path's shape: canonicalise exactly as
+    // `EngineEntry::compiled` does, derive the batched variant, and pin
+    // both backends on it slice by slice against the sequential base
+    // plan on the *original* graph's interpreter
+    let bsz = 4usize;
+    let mut w = logistic_regression(8, 4);
+    let grad = w.gradient();
+    let roots = [w.loss, grad];
+    let mut g2 = w.g.clone();
+    let o = optimize(&mut g2, &roots, OptLevel::Full);
+    let (gc, croots) = compact(&g2, &o.roots);
+    let (bg, broots) = batch_graph(&gc, &croots, bsz);
+
+    let vars: Vec<(String, Vec<usize>)> = w
+        .g
+        .var_names()
+        .into_iter()
+        .map(|n| {
+            let id = w.g.var_id(&n).unwrap();
+            (n, w.g.shape(id).to_vec())
+        })
+        .collect();
+    let mut envs = Vec::new();
+    for b in 0..bsz {
+        let mut env = Env::new();
+        for (i, (name, shape)) in vars.iter().enumerate() {
+            let seed = 700 + (b * vars.len() + i) as u64;
+            env.insert(name, Tensor::randn(shape, seed).scale(0.5));
+        }
+        envs.push(env);
+    }
+    let mut benv = Env::new();
+    for (name, _) in &vars {
+        let mut bshape = vec![bsz];
+        let first = envs[0].get(name).unwrap();
+        bshape.extend_from_slice(first.shape());
+        let mut data = Vec::with_capacity(bsz * first.len());
+        for e in &envs {
+            data.extend_from_slice(e.get(name).unwrap().data());
+        }
+        benv.insert(name, Tensor::new(&bshape, data));
+    }
+
+    check_matrix(&bg, &broots, &benv, "logreg-grad-batched");
+
+    // and the batched outputs decompose into the per-request answers
+    let bplan = CompiledPlan::with_backend(&bg, &broots, BackendKind::Direct);
+    let batched = bplan.run(&benv);
+    let interp = Plan::new(&w.g, &roots);
+    for (b, env) in envs.iter().enumerate() {
+        let oracle = interp.run(&w.g, env);
+        for (r, want) in oracle.iter().enumerate() {
+            let len = want.len();
+            let chunk = batched[r].data()[b * len..(b + 1) * len].to_vec();
+            let slice = Tensor::new(want.shape(), chunk);
+            assert!(
+                slice.allclose(want, 1e-9, 1e-11),
+                "slice {b} of root {r} diverged from the per-request oracle, diff {}",
+                slice.max_abs_diff(want)
+            );
+        }
+    }
+}
+
+#[test]
+fn direct_backend_never_touches_the_pool() {
+    // even when asked for the Pooled ablation, the direct backend runs
+    // in-arena: zero pool locks, a live arena, and bit-identity with
+    // the planned cpu default
+    let mut w = logistic_regression(48, 12);
+    let grad = w.gradient();
+    let direct = CompiledPlan::with_options(
+        &w.g,
+        &[w.loss, grad],
+        true,
+        EpilogueMode::default(),
+        ExecMemory::Pooled,
+        BackendKind::Direct,
+    );
+    direct.validate_memory_plan();
+    let got = direct.run(&w.env);
+    for _ in 0..5 {
+        let again = direct.run(&w.env);
+        assert_eq!(again[0].data(), got[0].data());
+        assert_eq!(again[1].data(), got[1].data());
+    }
+    let st = direct.pool_stats();
+    assert_eq!(st.pool_locks, 0, "direct backend took the pool mutex: {:?}", st);
+    assert!(st.arena_bytes > 0, "direct backend must carry an arena layout: {:?}", st);
+
+    let want = CompiledPlan::new(&w.g, &[w.loss, grad]).run(&w.env);
+    assert_eq!(got[0].data(), want[0].data());
+    assert_eq!(got[1].data(), want[1].data());
+}
+
+#[test]
+fn concurrent_direct_runs_are_isolated() {
+    // one shared direct plan hammered from several threads: per-caller
+    // arenas keep results bit-stable with no interference
+    let mut w = logistic_regression(32, 8);
+    let grad = w.gradient();
+    let plan = CompiledPlan::with_backend(&w.g, &[w.loss, grad], BackendKind::Direct);
+    let want = plan.run(&w.env);
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            s.spawn(|| {
+                for _ in 0..10 {
+                    let got = plan.run(&w.env);
+                    assert_eq!(got[0].data(), want[0].data(), "concurrent direct run diverged");
+                    assert_eq!(got[1].data(), want[1].data());
+                }
+            });
+        }
+    });
+}

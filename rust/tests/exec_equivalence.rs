@@ -15,7 +15,7 @@
 use tensorcalc::autodiff::reverse::reverse_derivative;
 use tensorcalc::einsum::{einsum, einsum_into, einsum_naive, EinScratch, EinSpec, Label};
 use tensorcalc::eval::{fd_gradient, fd_jacobian, Env, Plan};
-use tensorcalc::exec::{CompiledPlan, EpilogueMode, ExecMemory, PlanCache};
+use tensorcalc::exec::{BackendKind, CompiledPlan, EpilogueMode, ExecMemory, PlanCache};
 use tensorcalc::ir::{Elem, Graph, NodeId, Op};
 use tensorcalc::problems::{logistic_regression, matrix_factorization, neural_net};
 use tensorcalc::tensor::{Tensor, XorShift};
@@ -272,10 +272,22 @@ fn fusion_cuts_fresh_pool_allocations_on_deep_elem_chain() {
     // pooled mode: this test asserts the *pool's* bucket counters (the
     // planned default never touches them — tests/memory_plan.rs owns the
     // arena-side assertions)
-    let fused =
-        CompiledPlan::with_options(&g, &[v], true, EpilogueMode::default(), ExecMemory::Pooled);
-    let unfused =
-        CompiledPlan::with_options(&g, &[v], false, EpilogueMode::default(), ExecMemory::Pooled);
+    let fused = CompiledPlan::with_options(
+        &g,
+        &[v],
+        true,
+        EpilogueMode::default(),
+        ExecMemory::Pooled,
+        BackendKind::default(),
+    );
+    let unfused = CompiledPlan::with_options(
+        &g,
+        &[v],
+        false,
+        EpilogueMode::default(),
+        ExecMemory::Pooled,
+        BackendKind::default(),
+    );
     let a = fused.run(&env);
     let b = unfused.run(&env);
     assert_eq!(a[0].data(), b[0].data(), "fusion changed the numerics");
@@ -359,6 +371,7 @@ fn pool_stops_allocating_after_warmup() {
         true,
         EpilogueMode::default(),
         ExecMemory::Pooled,
+        BackendKind::default(),
     );
     let first = plan.run(&w.env);
     let cold = plan.pool_stats();

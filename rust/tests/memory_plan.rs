@@ -15,7 +15,7 @@
 //!   concurrent caller, results bit-stable).
 
 use tensorcalc::eval::{Env, Plan};
-use tensorcalc::exec::{CompiledPlan, EpilogueMode, ExecMemory};
+use tensorcalc::exec::{BackendKind, CompiledPlan, EpilogueMode, ExecMemory};
 use tensorcalc::ir::{Elem, Graph, NodeId};
 use tensorcalc::opt::{optimize, OptLevel};
 use tensorcalc::problems::{logistic_regression, matrix_factorization, neural_net};
@@ -26,11 +26,23 @@ use tensorcalc::tensor::Tensor;
 /// memory plan's no-overlap invariant, and verify warm-arena re-runs are
 /// bit-stable.
 fn check_modes(g: &Graph, roots: &[NodeId], env: &Env, fuse: bool, label: &str) {
-    let planned =
-        CompiledPlan::with_options(g, roots, fuse, EpilogueMode::default(), ExecMemory::Planned);
+    let planned = CompiledPlan::with_options(
+        g,
+        roots,
+        fuse,
+        EpilogueMode::default(),
+        ExecMemory::Planned,
+        BackendKind::default(),
+    );
     planned.validate_memory_plan();
-    let pooled =
-        CompiledPlan::with_options(g, roots, fuse, EpilogueMode::default(), ExecMemory::Pooled);
+    let pooled = CompiledPlan::with_options(
+        g,
+        roots,
+        fuse,
+        EpilogueMode::default(),
+        ExecMemory::Pooled,
+        BackendKind::default(),
+    );
     let a = planned.run(env);
     let b = pooled.run(env);
     let want = Plan::new(g, roots).run(g, env);
@@ -131,10 +143,22 @@ fn epilogue_modes_bit_identical_under_planned() {
     let mut env = Env::new();
     env.insert("X", Tensor::randn(&[m, k], 61));
     env.insert("W", Tensor::randn(&[k, n], 62));
-    let in_tile =
-        CompiledPlan::with_options(&g, &[y], true, EpilogueMode::InTile, ExecMemory::Planned);
-    let two_pass =
-        CompiledPlan::with_options(&g, &[y], true, EpilogueMode::TwoPass, ExecMemory::Planned);
+    let in_tile = CompiledPlan::with_options(
+        &g,
+        &[y],
+        true,
+        EpilogueMode::InTile,
+        ExecMemory::Planned,
+        BackendKind::default(),
+    );
+    let two_pass = CompiledPlan::with_options(
+        &g,
+        &[y],
+        true,
+        EpilogueMode::TwoPass,
+        ExecMemory::Planned,
+        BackendKind::default(),
+    );
     assert!(in_tile.fused_count() >= 1);
     let a = in_tile.run(&env);
     let b = two_pass.run(&env);
@@ -183,6 +207,7 @@ fn pooled_mode_still_counts_its_locks() {
         true,
         EpilogueMode::default(),
         ExecMemory::Pooled,
+        BackendKind::default(),
     );
     let _ = plan.run(&w.env);
     let st = plan.pool_stats();
@@ -205,8 +230,14 @@ fn packing_reuses_dead_bytes_and_chains_in_place() {
     }
     let mut env = Env::new();
     env.insert("x", Tensor::randn(&[len], 7));
-    let planned =
-        CompiledPlan::with_options(&g, &[v], false, EpilogueMode::default(), ExecMemory::Planned);
+    let planned = CompiledPlan::with_options(
+        &g,
+        &[v],
+        false,
+        EpilogueMode::default(),
+        ExecMemory::Planned,
+        BackendKind::default(),
+    );
     planned.validate_memory_plan();
     let st = planned.pool_stats();
     assert_eq!(
@@ -217,8 +248,14 @@ fn packing_reuses_dead_bytes_and_chains_in_place() {
     );
     assert_eq!(st.inplace_reuse, 5, "every link must take over its input in place");
     // and in-place execution must not change the numerics
-    let pooled =
-        CompiledPlan::with_options(&g, &[v], false, EpilogueMode::default(), ExecMemory::Pooled);
+    let pooled = CompiledPlan::with_options(
+        &g,
+        &[v],
+        false,
+        EpilogueMode::default(),
+        ExecMemory::Pooled,
+        BackendKind::default(),
+    );
     let a = planned.run(&env);
     let b = pooled.run(&env);
     assert_eq!(a[0].data(), b[0].data());
@@ -240,6 +277,7 @@ fn packing_reuses_dead_bytes_and_chains_in_place() {
         false,
         EpilogueMode::default(),
         ExecMemory::Planned,
+        BackendKind::default(),
     );
     p2.validate_memory_plan();
     let st2 = p2.pool_stats();

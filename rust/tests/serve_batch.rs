@@ -11,7 +11,7 @@
 use tensorcalc::coordinator::{Coordinator, EngineEntry};
 use tensorcalc::einsum::EinSpec;
 use tensorcalc::eval::{Env, Plan};
-use tensorcalc::exec::{batch_graph, global_plan_cache, ExecMemory};
+use tensorcalc::exec::{batch_graph, global_plan_cache, BackendKind, ExecMemory};
 use tensorcalc::ir::{Elem, Graph, NodeId};
 use tensorcalc::opt::{compact, optimize, OptLevel};
 use tensorcalc::problems::{logistic_regression, neural_net};
@@ -38,8 +38,13 @@ fn pin_batched_against_sequential(g: &Graph, roots: &[NodeId], seed0: u64, bszs:
     let mut g2 = g.clone();
     let o = optimize(&mut g2, roots, OptLevel::Full);
     let (gc, croots) = compact(&g2, &o.roots);
-    let base =
-        global_plan_cache().get_or_compile_opts(&gc, &croots, OptLevel::None, ExecMemory::Planned);
+    let base = global_plan_cache().get_or_compile_opts(
+        &gc,
+        &croots,
+        OptLevel::None,
+        ExecMemory::Planned,
+        BackendKind::default(),
+    );
     let interp = Plan::new(g, roots);
 
     let vars: Vec<(String, Vec<usize>)> = g
@@ -58,6 +63,7 @@ fn pin_batched_against_sequential(g: &Graph, roots: &[NodeId], seed0: u64, bszs:
             &broots,
             OptLevel::None,
             ExecMemory::Planned,
+            BackendKind::default(),
         );
 
         let mut envs = Vec::new();

@@ -10,7 +10,7 @@
 
 use tensorcalc::einsum::{einsum_naive, gemm_into_flat, EinSpec};
 use tensorcalc::eval::{Env, Plan};
-use tensorcalc::exec::{CompiledPlan, EpilogueMode, ExecMemory};
+use tensorcalc::exec::{BackendKind, CompiledPlan, EpilogueMode, ExecMemory};
 use tensorcalc::ir::{Elem, Graph, NodeId};
 use tensorcalc::tensor::Tensor;
 
@@ -88,10 +88,22 @@ fn chain_on_matmul(m: usize, k: usize, n: usize) -> (Graph, NodeId, Env) {
 fn in_tile_epilogue_pinned_on_all_shapes() {
     for &(m, k, n) in SHAPES {
         let (g, y, env) = chain_on_matmul(m, k, n);
-        let in_tile =
-            CompiledPlan::with_options(&g, &[y], true, EpilogueMode::InTile, ExecMemory::Planned);
-        let two_pass =
-            CompiledPlan::with_options(&g, &[y], true, EpilogueMode::TwoPass, ExecMemory::Planned);
+        let in_tile = CompiledPlan::with_options(
+            &g,
+            &[y],
+            true,
+            EpilogueMode::InTile,
+            ExecMemory::Planned,
+            BackendKind::default(),
+        );
+        let two_pass = CompiledPlan::with_options(
+            &g,
+            &[y],
+            true,
+            EpilogueMode::TwoPass,
+            ExecMemory::Planned,
+            BackendKind::default(),
+        );
         let unfused = CompiledPlan::with_fusion(&g, &[y], false);
         assert!(
             in_tile.fused_count() >= 1,
@@ -134,10 +146,22 @@ fn in_tile_epilogue_on_matvec_fast_path() {
     let mut env = Env::new();
     env.insert("X", Tensor::randn(&[m, k], 31));
     env.insert("w", Tensor::randn(&[k], 32));
-    let in_tile =
-        CompiledPlan::with_options(&g, &[y], true, EpilogueMode::InTile, ExecMemory::Planned);
-    let two_pass =
-        CompiledPlan::with_options(&g, &[y], true, EpilogueMode::TwoPass, ExecMemory::Planned);
+    let in_tile = CompiledPlan::with_options(
+        &g,
+        &[y],
+        true,
+        EpilogueMode::InTile,
+        ExecMemory::Planned,
+        BackendKind::default(),
+    );
+    let two_pass = CompiledPlan::with_options(
+        &g,
+        &[y],
+        true,
+        EpilogueMode::TwoPass,
+        ExecMemory::Planned,
+        BackendKind::default(),
+    );
     assert!(in_tile.fused_count() >= 1);
     let a = in_tile.run(&env);
     let b = two_pass.run(&env);
@@ -162,10 +186,22 @@ fn in_tile_epilogue_on_batched_contraction() {
     let mut env = Env::new();
     env.insert("A", Tensor::randn(&[bsz, d, d], 51));
     env.insert("B", Tensor::randn(&[bsz, d, d], 52));
-    let in_tile =
-        CompiledPlan::with_options(&g, &[y], true, EpilogueMode::InTile, ExecMemory::Planned);
-    let two_pass =
-        CompiledPlan::with_options(&g, &[y], true, EpilogueMode::TwoPass, ExecMemory::Planned);
+    let in_tile = CompiledPlan::with_options(
+        &g,
+        &[y],
+        true,
+        EpilogueMode::InTile,
+        ExecMemory::Planned,
+        BackendKind::default(),
+    );
+    let two_pass = CompiledPlan::with_options(
+        &g,
+        &[y],
+        true,
+        EpilogueMode::TwoPass,
+        ExecMemory::Planned,
+        BackendKind::default(),
+    );
     assert!(in_tile.fused_count() >= 1);
     let va = in_tile.run(&env);
     let vb = two_pass.run(&env);
@@ -187,10 +223,22 @@ fn in_tile_epilogue_on_permuted_output_falls_back() {
     let mut env = Env::new();
     env.insert("A", Tensor::randn(&[m, k], 61));
     env.insert("B", Tensor::randn(&[k, n], 62));
-    let in_tile =
-        CompiledPlan::with_options(&g, &[y], true, EpilogueMode::InTile, ExecMemory::Planned);
-    let two_pass =
-        CompiledPlan::with_options(&g, &[y], true, EpilogueMode::TwoPass, ExecMemory::Planned);
+    let in_tile = CompiledPlan::with_options(
+        &g,
+        &[y],
+        true,
+        EpilogueMode::InTile,
+        ExecMemory::Planned,
+        BackendKind::default(),
+    );
+    let two_pass = CompiledPlan::with_options(
+        &g,
+        &[y],
+        true,
+        EpilogueMode::TwoPass,
+        ExecMemory::Planned,
+        BackendKind::default(),
+    );
     let va = in_tile.run(&env);
     let vb = two_pass.run(&env);
     let want = Plan::new(&g, &[y]).run(&g, &env);

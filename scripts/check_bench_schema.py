@@ -1,0 +1,120 @@
+#!/usr/bin/env python3
+"""Validate the perf-trajectory JSON artifacts against their schemas.
+
+CI runs this right after `scripts/bench_baseline.sh` (which writes
+`BENCH_exec.json`, schema `tensorcalc-bench-rows/v1`) and
+`scripts/bench_serve.sh` (which writes `BENCH_serve.json`, schema
+`tensorcalc-serve-load/v1`), so a bench refactor that silently changes
+the row shape — renamed keys, stringified numbers, a dropped dimension —
+fails the build instead of corrupting the downstream trajectory plots.
+
+Usage: check_bench_schema.py [FILE ...]
+
+With no arguments, checks whichever of ./BENCH_exec.json and
+./BENCH_serve.json exist (at least one must). The schema is picked per
+file from its "schema" field. Stdlib only.
+"""
+
+import json
+import numbers
+import sys
+
+# field -> required type, per schema. bool is excluded from the numeric
+# and int checks below (it subclasses int in Python).
+EXEC_ROW = {
+    "figure": str,
+    "problem": str,
+    "n": int,
+    "mode": str,
+    "median_secs": numbers.Real,
+    "runs": int,
+}
+
+SERVE_ROW = {
+    "entry": str,
+    "max_batch": int,
+    "offered_rps": numbers.Real,
+    "achieved_rps": numbers.Real,
+    "p50_secs": numbers.Real,
+    "p99_secs": numbers.Real,
+    "sent": int,
+    "dropped": int,
+}
+
+SCHEMAS = {
+    "tensorcalc-bench-rows/v1": EXEC_ROW,
+    "tensorcalc-serve-load/v1": SERVE_ROW,
+}
+
+
+def type_name(t):
+    return getattr(t, "__name__", str(t))
+
+
+def check_row(row, fields, where):
+    errors = []
+    if not isinstance(row, dict):
+        return ["%s: row is %s, expected object" % (where, type(row).__name__)]
+    for key, want in fields.items():
+        if key not in row:
+            errors.append("%s: missing field %r" % (where, key))
+            continue
+        val = row[key]
+        if isinstance(val, bool) or not isinstance(val, want):
+            errors.append(
+                "%s: field %r is %s (%r), expected %s"
+                % (where, key, type(val).__name__, val, type_name(want))
+            )
+    for key in row:
+        if key not in fields:
+            errors.append("%s: unknown field %r" % (where, key))
+    return errors
+
+
+def check_file(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        return ["%s: %s" % (path, e)]
+    if not isinstance(doc, dict):
+        return ["%s: top level is %s, expected object" % (path, type(doc).__name__)]
+    schema = doc.get("schema")
+    if schema not in SCHEMAS:
+        return [
+            "%s: unknown schema %r (expected one of %s)"
+            % (path, schema, ", ".join(sorted(SCHEMAS)))
+        ]
+    rows = doc.get("rows")
+    if not isinstance(rows, list):
+        return ["%s: 'rows' is %s, expected array" % (path, type(rows).__name__)]
+    if not rows:
+        return ["%s: 'rows' is empty — the bench recorded nothing" % path]
+    errors = []
+    fields = SCHEMAS[schema]
+    for i, row in enumerate(rows):
+        errors.extend(check_row(row, fields, "%s: rows[%d]" % (path, i)))
+    if not errors:
+        print("%s: OK (%s, %d rows)" % (path, schema, len(rows)))
+    return errors
+
+
+def main(argv):
+    paths = argv[1:]
+    if not paths:
+        import os
+
+        paths = [p for p in ("BENCH_exec.json", "BENCH_serve.json") if os.path.exists(p)]
+        if not paths:
+            print("check_bench_schema.py: no BENCH_*.json found", file=sys.stderr)
+            return 1
+    errors = []
+    for p in paths:
+        errors.extend(check_file(p))
+    for e in errors:
+        print("check_bench_schema.py: %s" % e, file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
