@@ -20,7 +20,10 @@
 //!   `ExecMemory::Pooled` (the PR 1 mutex-guarded buffer pool),
 //! * **backend** — `BackendKind::Cpu` (the work-stealing level-parallel
 //!   executor) vs `BackendKind::Direct` (the direct-threaded closure
-//!   chain) over the same lowered streams.
+//!   chain) over the same lowered streams,
+//! * **trace** — `TraceMode::Off` (the default; a dead branch per
+//!   instruction) vs `TraceMode::Profile` (per-instruction spans into
+//!   per-lane ring buffers): the price of the observability layer.
 //!
 //! Run: `cargo bench --bench ablation_modes`
 //!
@@ -35,6 +38,7 @@ use tensorcalc::eval::Env;
 use tensorcalc::exec::{BackendKind, CompiledPlan, EpilogueMode, ExecMemory};
 use tensorcalc::figures::{maybe_write_bench_json, newton, print_table, Row};
 use tensorcalc::ir::{Elem, Graph};
+use tensorcalc::obs::TraceMode;
 use tensorcalc::opt::{optimize, OptLevel};
 use tensorcalc::problems::{logistic_regression, matrix_factorization, neural_net};
 use tensorcalc::tensor::Tensor;
@@ -160,6 +164,7 @@ fn main() {
                 mode,
                 ExecMemory::default(),
                 BackendKind::default(),
+                TraceMode::Off,
             );
             let _ = plan.run(&env); // warm-up
             let (t, runs) = time_median(
@@ -251,6 +256,7 @@ fn main() {
                 EpilogueMode::default(),
                 memory,
                 BackendKind::default(),
+                TraceMode::Off,
             );
             let _ = plan.run(&env); // warm-up
             let (t, runs) = time_median(
@@ -316,6 +322,7 @@ fn main() {
                 EpilogueMode::default(),
                 ExecMemory::default(),
                 backend,
+                TraceMode::Off,
             );
             outs.push(plan.run(&env)); // warm-up, kept for the identity check
             let (t, runs) = time_median(
@@ -388,6 +395,69 @@ fn main() {
             .find(|r| r.problem == p && r.n == n && r.mode == "cse+reassoc");
         if let (Some(b), Some(f)) = (base, full) {
             println!("  {:<8} n={:<4} cse+reassoc is {:>6.2}× vs OptLevel::None", p, n, b.secs / f.secs);
+        }
+    }
+
+    // ---- trace: observability overhead, Off vs Profile ----
+    // same plan options either side, only TraceMode differs. Off must
+    // cost nothing beyond a dead branch (it is the steady-state serving
+    // configuration); Profile quantifies what `derive --trace` pays.
+    // Outputs are asserted bit-identical — tracing is read-only.
+    const TRACE_WORKLOADS: [(&str, usize); 2] = [("logreg-grad", 128), ("matfac-hess", 32)];
+    let mut rows = Vec::new();
+    for (p, n) in TRACE_WORKLOADS {
+        let (g, roots, env) = match p {
+            "logreg-grad" => {
+                let mut w = logistic_regression(2 * n, n);
+                let grad = w.gradient();
+                (w.g.clone(), vec![w.loss, grad], w.env.clone())
+            }
+            _ => {
+                let mut w = matrix_factorization(n, n, 5, false);
+                let h = w.hessian();
+                (w.g.clone(), vec![h], w.env.clone())
+            }
+        };
+        let mut g2 = g.clone();
+        let o = optimize(&mut g2, &roots, OptLevel::Full);
+        let mut outs: Vec<Vec<Tensor>> = Vec::new();
+        for (label, trace) in [("off (default)", TraceMode::Off), ("profile", TraceMode::Profile)]
+        {
+            let plan = CompiledPlan::with_options(
+                &g2,
+                &o.roots,
+                true,
+                EpilogueMode::default(),
+                ExecMemory::default(),
+                BackendKind::default(),
+                trace,
+            );
+            outs.push(plan.run(&env)); // warm-up, kept for the identity check
+            let (t, runs) = time_median(
+                || {
+                    std::hint::black_box(plan.run(&env));
+                },
+                3,
+                secs,
+            );
+            rows.push(Row { figure: "trace", problem: p, n, mode: label.into(), secs: t, runs });
+        }
+        for (a, b) in outs[0].iter().zip(outs[1].iter()) {
+            assert_eq!(a.data(), b.data(), "tracing perturbed outputs on {} n={}", p, n);
+        }
+    }
+    print_table("Trace ablation — TraceMode::Off vs Profile", &rows);
+    all_rows.extend(rows.iter().cloned());
+    for (p, n) in TRACE_WORKLOADS {
+        let off = rows.iter().find(|r| r.problem == p && r.n == n && r.mode.starts_with("off"));
+        let pr = rows.iter().find(|r| r.problem == p && r.n == n && r.mode == "profile");
+        if let (Some(o), Some(t)) = (off, pr) {
+            println!(
+                "  {:<12} n={:<4} profiling costs {:+6.1}% over untraced",
+                p,
+                n,
+                100.0 * (t.secs - o.secs) / o.secs
+            );
         }
     }
 

@@ -134,6 +134,7 @@ fn main() {
                 EpilogueMode::default(),
                 memory,
                 backend,
+                tensorcalc::obs::TraceMode::Off,
             );
             let _ = plan.run(&w.env); // warm-up
             let (t, runs) = time_median(

@@ -1,18 +1,35 @@
-//! Lock-light service metrics: counters + per-entry latency reservoirs
-//! with uniform (Algorithm R) reservoir sampling.
+//! Lock-light service metrics: global counters, per-entry latency
+//! reservoirs (uniform Algorithm R sampling), per-entry log₂ histograms
+//! for queue-wait and service time, batch-size distributions, a live
+//! queue-depth gauge, registered gauges (lease recycling, compile
+//! counters), and a Prometheus-style text exposition
+//! ([`Metrics::render_prometheus`]).
 
 use crate::tensor::XorShift;
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::collections::{BTreeMap, HashMap};
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::Mutex;
+
+/// A gauge read at render time (e.g. a closure over a plan's
+/// `pool_stats`). Boxed so callers can register anything.
+type GaugeFn = Box<dyn Fn() -> f64 + Send>;
 
 /// Shared metrics for the coordinator.
 pub struct Metrics {
     submitted: AtomicU64,
     completed: AtomicU64,
     errors: AtomicU64,
-    /// per-entry latency samples (seconds), capped reservoir
-    latencies: Mutex<HashMap<String, Reservoir>>,
+    /// jobs sitting in worker channels right now: +1 at enqueue, −1 at
+    /// drain (signed so a racy snapshot renders a transient −1 instead
+    /// of wrapping)
+    queue_depth: AtomicI64,
+    /// per-entry streams (latency reservoir, histograms, batch sizes)
+    entries: Mutex<HashMap<String, EntryMetrics>>,
+    /// registered gauges keyed by `(metric name, label set)`; keyed
+    /// replacement, so re-registering an entry updates in place instead
+    /// of leaking a stale closure
+    gauges: Mutex<BTreeMap<(String, String), GaugeFn>>,
 }
 
 /// A point-in-time view.
@@ -26,6 +43,81 @@ pub struct Snapshot {
 }
 
 const RESERVOIR: usize = 4096;
+
+/// Histogram bucket count: upper bounds `1µs · 2^i` for `i = 0..25`
+/// (1µs … ~16.8s) plus the +Inf overflow bucket — log₂ spacing covers
+/// the full serving range in a fixed, allocation-free array.
+const N_BUCKETS: usize = 25;
+
+/// Upper bound (seconds) of bucket `i`.
+fn bucket_le(i: usize) -> f64 {
+    1e-6 * (1u64 << i) as f64
+}
+
+/// Fixed-bucket log₂ histogram (non-cumulative counts; the Prometheus
+/// renderer cumulates).
+#[derive(Clone)]
+struct Histogram {
+    counts: [u64; N_BUCKETS + 1],
+    sum: f64,
+    count: u64,
+}
+
+impl Histogram {
+    fn new() -> Self {
+        Histogram { counts: [0; N_BUCKETS + 1], sum: 0.0, count: 0 }
+    }
+
+    fn observe(&mut self, v: f64) {
+        let mut idx = N_BUCKETS; // +Inf (also where NaN lands)
+        for i in 0..N_BUCKETS {
+            if v <= bucket_le(i) {
+                idx = i;
+                break;
+            }
+        }
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.count += 1;
+    }
+
+    /// Append `<name>_bucket{...,le=...}` / `_sum` / `_count` lines.
+    fn render(&self, out: &mut String, name: &str, labels: &str) {
+        let mut cum = 0u64;
+        for i in 0..N_BUCKETS {
+            cum += self.counts[i];
+            let _ = writeln!(out, "{name}_bucket{{{labels},le=\"{}\"}} {cum}", bucket_le(i));
+        }
+        cum += self.counts[N_BUCKETS];
+        let _ = writeln!(out, "{name}_bucket{{{labels},le=\"+Inf\"}} {cum}");
+        let _ = writeln!(out, "{name}_sum{{{labels}}} {}", self.sum);
+        let _ = writeln!(out, "{name}_count{{{labels}}} {}", self.count);
+    }
+}
+
+/// Everything tracked per coordinator entry.
+struct EntryMetrics {
+    /// end-to-end latency samples (queue wait + service), capped reservoir
+    latency: Reservoir,
+    queue_wait: Histogram,
+    service: Histogram,
+    /// batch size → occurrences (one count per *request*, so the
+    /// distribution weights what requests experienced)
+    batch_sizes: BTreeMap<usize, u64>,
+    errors: u64,
+}
+
+impl EntryMetrics {
+    fn new() -> Self {
+        EntryMetrics {
+            latency: Reservoir::new(),
+            queue_wait: Histogram::new(),
+            service: Histogram::new(),
+            batch_sizes: BTreeMap::new(),
+            errors: 0,
+        }
+    }
+}
 
 /// Uniform fixed-size sample of an unbounded latency stream (Vitter's
 /// Algorithm R): after `seen` observations, every one of them is in the
@@ -65,7 +157,9 @@ impl Metrics {
             submitted: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             errors: AtomicU64::new(0),
-            latencies: Mutex::new(HashMap::new()),
+            queue_depth: AtomicI64::new(0),
+            entries: Mutex::new(HashMap::new()),
+            gauges: Mutex::new(BTreeMap::new()),
         }
     }
 
@@ -73,20 +167,70 @@ impl Metrics {
         self.submitted.fetch_add(1, Ordering::Relaxed);
     }
 
-    pub fn completed(&self, entry: &str, latency: f64, is_err: bool) {
+    /// A job entered a worker channel.
+    pub fn enqueued(&self) {
+        self.queue_depth.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A job left a worker channel (drained into a batch).
+    pub fn dequeued(&self) {
+        self.queue_depth.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Record one finished request with its full timing breakdown:
+    /// `queue_secs` from enqueue to drain, `service_secs` from drain to
+    /// reply, `batch` the fused batch it rode in. The latency reservoir
+    /// samples the sum (what the caller experienced).
+    pub fn observe(
+        &self,
+        entry: &str,
+        queue_secs: f64,
+        service_secs: f64,
+        batch: usize,
+        is_err: bool,
+    ) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         if is_err {
             self.errors.fetch_add(1, Ordering::Relaxed);
         }
-        let mut map = self.latencies.lock().unwrap();
-        map.entry(entry.to_string()).or_insert_with(Reservoir::new).offer(latency);
+        let mut map = self.entries.lock().unwrap();
+        let e = map.entry(entry.to_string()).or_insert_with(EntryMetrics::new);
+        e.latency.offer(queue_secs + service_secs);
+        e.queue_wait.observe(queue_secs);
+        e.service.observe(service_secs);
+        *e.batch_sizes.entry(batch).or_insert(0) += 1;
+        if is_err {
+            e.errors += 1;
+        }
+    }
+
+    /// Record one finished request with only its end-to-end latency
+    /// (queue wait unknown, batch size 1) — the pre-breakdown entry
+    /// point, kept for callers without an enqueue stamp.
+    pub fn completed(&self, entry: &str, latency: f64, is_err: bool) {
+        self.observe(entry, 0.0, latency, 1, is_err);
+    }
+
+    /// Register (or replace) a gauge rendered by
+    /// [`render_prometheus`](Self::render_prometheus). `labels` is the
+    /// raw label body, e.g. `entry="grad"` — may be empty.
+    pub fn register_gauge(
+        &self,
+        name: &str,
+        labels: &str,
+        f: impl Fn() -> f64 + Send + 'static,
+    ) {
+        self.gauges
+            .lock()
+            .unwrap()
+            .insert((name.to_string(), labels.to_string()), Box::new(f));
     }
 
     pub fn snapshot(&self) -> Snapshot {
-        let map = self.latencies.lock().unwrap();
+        let map = self.entries.lock().unwrap();
         let mut per_entry = Vec::new();
-        for (name, r) in map.iter() {
-            let mut s = r.samples.clone();
+        for (name, e) in map.iter() {
+            let mut s = e.latency.samples.clone();
             // total order: NaN sorts last instead of panicking the snapshot
             s.sort_by(f64::total_cmp);
             // nearest-rank percentile: the ⌈q·N⌉-th smallest sample. The
@@ -99,7 +243,7 @@ impl Metrics {
                 let rank = (q * s.len() as f64).ceil() as usize;
                 s[rank.clamp(1, s.len()) - 1]
             };
-            per_entry.push((name.clone(), r.samples.len(), p(0.5), p(0.99)));
+            per_entry.push((name.clone(), e.latency.samples.len(), p(0.5), p(0.99)));
         }
         per_entry.sort_by(|a, b| a.0.cmp(&b.0));
         Snapshot {
@@ -108,6 +252,129 @@ impl Metrics {
             errors: self.errors.load(Ordering::Relaxed),
             per_entry,
         }
+    }
+
+    /// Render every counter, gauge and histogram in the Prometheus text
+    /// exposition format (one metric family per `# HELP`/`# TYPE` pair).
+    /// Zero dependencies: plain text, scrapeable or just readable.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        let counter = |out: &mut String, name: &str, help: &str, v: u64| {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {v}");
+        };
+        counter(
+            &mut out,
+            "tensorcalc_submitted_total",
+            "Requests accepted by submit().",
+            self.submitted.load(Ordering::Relaxed),
+        );
+        counter(
+            &mut out,
+            "tensorcalc_completed_total",
+            "Requests answered (ok or error).",
+            self.completed.load(Ordering::Relaxed),
+        );
+        counter(
+            &mut out,
+            "tensorcalc_errors_total",
+            "Requests answered with an error.",
+            self.errors.load(Ordering::Relaxed),
+        );
+        let (hits, misses) = crate::exec::global_plan_cache().cache_stats();
+        counter(
+            &mut out,
+            "tensorcalc_plan_cache_hits_total",
+            "Plan-cache lookups served an existing compiled plan.",
+            hits,
+        );
+        counter(
+            &mut out,
+            "tensorcalc_plan_cache_misses_total",
+            "Plan-cache lookups that compiled a fresh plan.",
+            misses,
+        );
+
+        let _ = writeln!(out, "# HELP tensorcalc_queue_depth Jobs waiting in worker channels.");
+        let _ = writeln!(out, "# TYPE tensorcalc_queue_depth gauge");
+        let _ = writeln!(
+            out,
+            "tensorcalc_queue_depth {}",
+            self.queue_depth.load(Ordering::Relaxed)
+        );
+
+        {
+            let map = self.entries.lock().unwrap();
+            let mut names: Vec<&String> = map.keys().collect();
+            names.sort();
+            let _ = writeln!(
+                out,
+                "# HELP tensorcalc_queue_wait_seconds Enqueue-to-drain wait per request."
+            );
+            let _ = writeln!(out, "# TYPE tensorcalc_queue_wait_seconds histogram");
+            for name in &names {
+                map[*name].queue_wait.render(
+                    &mut out,
+                    "tensorcalc_queue_wait_seconds",
+                    &format!("entry=\"{name}\""),
+                );
+            }
+            let _ = writeln!(
+                out,
+                "# HELP tensorcalc_service_seconds Drain-to-reply service time per request."
+            );
+            let _ = writeln!(out, "# TYPE tensorcalc_service_seconds histogram");
+            for name in &names {
+                map[*name].service.render(
+                    &mut out,
+                    "tensorcalc_service_seconds",
+                    &format!("entry=\"{name}\""),
+                );
+            }
+            let _ = writeln!(
+                out,
+                "# HELP tensorcalc_batch_total Requests served per fused batch size."
+            );
+            let _ = writeln!(out, "# TYPE tensorcalc_batch_total counter");
+            for name in &names {
+                for (bsz, n) in &map[*name].batch_sizes {
+                    let _ = writeln!(
+                        out,
+                        "tensorcalc_batch_total{{entry=\"{name}\",size=\"{bsz}\"}} {n}"
+                    );
+                }
+            }
+            let _ = writeln!(
+                out,
+                "# HELP tensorcalc_entry_errors_total Error replies per entry."
+            );
+            let _ = writeln!(out, "# TYPE tensorcalc_entry_errors_total counter");
+            for name in &names {
+                let _ = writeln!(
+                    out,
+                    "tensorcalc_entry_errors_total{{entry=\"{name}\"}} {}",
+                    map[*name].errors
+                );
+            }
+        }
+
+        // registered gauges, grouped by family (the BTreeMap keeps one
+        // family's label sets adjacent and the output deterministic)
+        let gauges = self.gauges.lock().unwrap();
+        let mut last_name: Option<&str> = None;
+        for ((name, labels), f) in gauges.iter() {
+            if last_name != Some(name.as_str()) {
+                let _ = writeln!(out, "# TYPE {name} gauge");
+                last_name = Some(name.as_str());
+            }
+            if labels.is_empty() {
+                let _ = writeln!(out, "{name} {}", f());
+            } else {
+                let _ = writeln!(out, "{name}{{{labels}}} {}", f());
+            }
+        }
+        out
     }
 }
 
@@ -201,5 +468,89 @@ mod tests {
         m.completed("a", 1.0, false);
         let s = m.snapshot();
         assert_eq!(s.per_entry[0].1, 2);
+    }
+
+    #[test]
+    fn histogram_buckets_cumulate_and_overflow() {
+        let mut h = Histogram::new();
+        h.observe(0.5e-6); // first bucket (≤ 1µs)
+        h.observe(3e-6); // ≤ 4µs bucket
+        h.observe(1e9); // +Inf
+        assert_eq!(h.count, 3);
+        let mut out = String::new();
+        h.render(&mut out, "m", "entry=\"e\"");
+        assert!(out.contains("m_bucket{entry=\"e\",le=\"0.000001\"} 1"));
+        assert!(out.contains("m_bucket{entry=\"e\",le=\"0.000004\"} 2"));
+        assert!(out.contains("m_bucket{entry=\"e\",le=\"+Inf\"} 3"));
+        assert!(out.contains("m_count{entry=\"e\"} 3"));
+    }
+
+    #[test]
+    fn observe_breaks_out_queue_service_and_batch() {
+        let m = Metrics::new();
+        m.enqueued();
+        m.enqueued();
+        m.dequeued();
+        m.observe("g", 0.002, 0.001, 4, false);
+        m.observe("g", 0.0, 0.005, 1, true);
+        let s = m.snapshot();
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.errors, 1);
+        // reservoir samples the sum the caller saw
+        let (_, n, p50, _) = &s.per_entry[0];
+        assert_eq!(*n, 2);
+        assert!(*p50 > 0.0);
+        let text = m.render_prometheus();
+        assert!(text.contains("tensorcalc_queue_depth 1"));
+        assert!(text.contains("tensorcalc_batch_total{entry=\"g\",size=\"4\"} 1"));
+        assert!(text.contains("tensorcalc_batch_total{entry=\"g\",size=\"1\"} 1"));
+        assert!(text.contains("tensorcalc_entry_errors_total{entry=\"g\"} 1"));
+        assert!(text.contains("tensorcalc_service_seconds_count{entry=\"g\"} 2"));
+    }
+
+    #[test]
+    fn registered_gauges_render_and_replace_in_place() {
+        let m = Metrics::new();
+        m.register_gauge("tensorcalc_test_gauge", "entry=\"a\"", || 1.0);
+        // re-registering the same (name, labels) replaces — no leak, no
+        // duplicate series
+        m.register_gauge("tensorcalc_test_gauge", "entry=\"a\"", || 2.0);
+        let text = m.render_prometheus();
+        assert!(text.contains("tensorcalc_test_gauge{entry=\"a\"} 2"));
+        assert!(!text.contains("tensorcalc_test_gauge{entry=\"a\"} 1"));
+        assert_eq!(text.matches("# TYPE tensorcalc_test_gauge gauge").count(), 1);
+    }
+
+    #[test]
+    fn prometheus_text_has_well_formed_families() {
+        let m = Metrics::new();
+        m.submitted();
+        m.completed("a", 0.001, false);
+        let text = m.render_prometheus();
+        for family in [
+            "tensorcalc_submitted_total",
+            "tensorcalc_completed_total",
+            "tensorcalc_errors_total",
+            "tensorcalc_plan_cache_hits_total",
+            "tensorcalc_plan_cache_misses_total",
+            "tensorcalc_queue_depth",
+            "tensorcalc_queue_wait_seconds",
+            "tensorcalc_service_seconds",
+        ] {
+            assert!(
+                text.contains(&format!("# TYPE {family} ")),
+                "missing TYPE line for {family}:\n{text}"
+            );
+        }
+        // every non-comment line is `name[{labels}] value`
+        for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            let mut parts = line.rsplitn(2, ' ');
+            let value = parts.next().unwrap();
+            assert!(
+                value.parse::<f64>().is_ok(),
+                "unparseable sample value in line: {line}"
+            );
+            assert!(parts.next().is_some(), "no metric name in line: {line}");
+        }
     }
 }

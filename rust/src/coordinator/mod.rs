@@ -37,7 +37,8 @@ use crate::error::Result;
 use crate::eval::Env;
 use crate::exec::{batch_graph, global_plan_cache, BackendKind, CompiledPlan, ExecMemory, PlanOutput};
 use crate::ir::{Graph, NodeId};
-use crate::opt::OptLevel;
+use crate::obs::TraceMode;
+use crate::opt::{OptLevel, OptStats};
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 use crate::{anyhow, bail};
@@ -82,6 +83,13 @@ pub struct EngineEntry {
     /// prewarmed) — [`EngineEntry::with_prewarm`] exists to pin this at
     /// zero in steady state
     lazy_compiles: Arc<AtomicU64>,
+    /// batch-bucket plans compiled at registration time by
+    /// [`EngineEntry::with_prewarm`]
+    prewarm_compiles: Arc<AtomicU64>,
+    /// what the optimizer did to this entry's graph before it was
+    /// frozen (None when built at `OptLevel::None`); surfaced through
+    /// [`Coordinator::stats`]
+    opt_stats: Option<OptStats>,
 }
 
 impl EngineEntry {
@@ -124,12 +132,13 @@ impl EngineEntry {
         // variants then derive from this frozen structure instead of
         // re-running the optimizer (whose cost model could reassociate
         // the batched contractions differently and break bit-identity).
-        let (graph, roots) = if level == OptLevel::None {
-            (graph.clone(), roots.to_vec())
+        let (graph, roots, opt_stats) = if level == OptLevel::None {
+            (graph.clone(), roots.to_vec(), None)
         } else {
             let mut g2 = graph.clone();
             let o = crate::opt::optimize(&mut g2, roots, level);
-            crate::opt::compact(&g2, &o.roots)
+            let (gc, croots) = crate::opt::compact(&g2, &o.roots);
+            (gc, croots, Some(o.stats))
         };
         let plan = global_plan_cache().get_or_compile_opts(
             &graph,
@@ -137,6 +146,7 @@ impl EngineEntry {
             OptLevel::None,
             memory,
             backend,
+            TraceMode::Off,
         );
         EngineEntry {
             plan,
@@ -148,6 +158,8 @@ impl EngineEntry {
             max_batch: DEFAULT_MAX_BATCH,
             batched: HashMap::new(),
             lazy_compiles: Arc::new(AtomicU64::new(0)),
+            prewarm_compiles: Arc::new(AtomicU64::new(0)),
+            opt_stats,
         }
     }
 
@@ -177,7 +189,9 @@ impl EngineEntry {
                         OptLevel::None,
                         self.memory,
                         self.backend,
+                        TraceMode::Off,
                     );
+                    self.prewarm_compiles.fetch_add(1, Ordering::Relaxed);
                     self.batched.insert(bucket, plan);
                 }
             }
@@ -192,6 +206,25 @@ impl EngineEntry {
     /// entry moving into its worker thread.
     pub fn lazy_compile_counter(&self) -> Arc<AtomicU64> {
         self.lazy_compiles.clone()
+    }
+
+    /// Handle on the prewarm-compile counter: how many batch-bucket
+    /// plans [`EngineEntry::with_prewarm`] compiled at registration.
+    pub fn prewarm_compile_counter(&self) -> Arc<AtomicU64> {
+        self.prewarm_compiles.clone()
+    }
+
+    /// What the optimizer did to this entry's graph before compilation
+    /// (None when the entry was built at `OptLevel::None`).
+    pub fn opt_stats(&self) -> Option<OptStats> {
+        self.opt_stats
+    }
+
+    /// The batch buckets with a compiled plan right now, ascending.
+    pub fn compiled_buckets(&self) -> Vec<usize> {
+        let mut b: Vec<usize> = self.batched.keys().copied().collect();
+        b.sort_unstable();
+        b
     }
 
     /// The plan for one batch bucket, compiled on first use through the
@@ -212,6 +245,7 @@ impl EngineEntry {
             OptLevel::None,
             self.memory,
             self.backend,
+            TraceMode::Off,
         );
         self.batched.insert(bucket, plan.clone());
         plan
@@ -219,7 +253,15 @@ impl EngineEntry {
 }
 
 enum Job {
-    Eval { inputs: Vec<Tensor>, reply: SyncSender<Result<Response>> },
+    Eval {
+        inputs: Vec<Tensor>,
+        reply: SyncSender<Result<Response>>,
+        /// stamped in [`Coordinator::submit`]: queue wait is measured
+        /// from here to the worker's drain, so `Response.latency` is
+        /// the end-to-end time the caller experienced, not just the
+        /// plan execution
+        enqueued: Instant,
+    },
     Shutdown,
 }
 
@@ -230,7 +272,13 @@ enum Job {
 #[derive(Debug)]
 pub struct Response {
     pub outputs: Vec<PlanOutput>,
+    /// end-to-end latency the caller experienced:
+    /// `queue_secs + service_secs`
     pub latency: f64,
+    /// time the request waited in the worker queue (enqueue → drain)
+    pub queue_secs: f64,
+    /// time the (possibly batched) plan execution took (drain → reply)
+    pub service_secs: f64,
     /// how many requests the worker drained in the same batch
     pub batch_size: usize,
 }
@@ -240,17 +288,50 @@ struct Worker {
     handle: Option<JoinHandle<()>>,
 }
 
+/// Compile-time facts about one registered engine entry, kept on the
+/// coordinator after the entry itself moves into its worker thread.
+struct EntryInfo {
+    opt_stats: Option<OptStats>,
+    max_batch: usize,
+    prewarmed_buckets: Vec<usize>,
+    lazy_compiles: Arc<AtomicU64>,
+    prewarm_compiles: Arc<AtomicU64>,
+}
+
+/// One entry's row in [`Coordinator::stats`]: the optimizer report its
+/// graph was compiled under plus the batched-plan compile counters.
+#[derive(Debug, Clone)]
+pub struct EntryStats {
+    pub name: String,
+    /// what the optimizer did before the graph was frozen (None for
+    /// entries built at `OptLevel::None`)
+    pub opt_stats: Option<OptStats>,
+    pub max_batch: usize,
+    /// batch buckets compiled at registration by `with_prewarm`
+    pub prewarmed_buckets: Vec<usize>,
+    /// batch-bucket plans compiled lazily on the serving path
+    pub lazy_compiles: u64,
+    /// batch-bucket plans compiled eagerly at registration
+    pub prewarm_compiles: u64,
+}
+
 /// The coordinator: one worker thread per registered entry, bounded
 /// queues, shared metrics.
 pub struct Coordinator {
     workers: HashMap<String, Worker>,
+    infos: HashMap<String, EntryInfo>,
     metrics: Arc<Metrics>,
     queue_cap: usize,
 }
 
 impl Coordinator {
     pub fn new(queue_cap: usize) -> Self {
-        Coordinator { workers: HashMap::new(), metrics: Arc::new(Metrics::new()), queue_cap }
+        Coordinator {
+            workers: HashMap::new(),
+            infos: HashMap::new(),
+            metrics: Arc::new(Metrics::new()),
+            queue_cap,
+        }
     }
 
     pub fn metrics(&self) -> Arc<Metrics> {
@@ -261,7 +342,33 @@ impl Coordinator {
     /// Re-registering a name replaces the entry: the old worker is shut
     /// down and joined before this returns, so every job it had already
     /// accepted is answered and its thread is reaped (not leaked).
+    ///
+    /// Registration also wires the entry's compile counters and its
+    /// plan's run-state recycling into the metrics gauge surface, so
+    /// `Metrics::render_prometheus` exposes them without the worker's
+    /// involvement.
     pub fn register_engine(&mut self, name: &str, entry: EngineEntry) {
+        let info = EntryInfo {
+            opt_stats: entry.opt_stats,
+            max_batch: entry.max_batch,
+            prewarmed_buckets: entry.compiled_buckets(),
+            lazy_compiles: entry.lazy_compiles.clone(),
+            prewarm_compiles: entry.prewarm_compiles.clone(),
+        };
+        let labels = format!("entry=\"{}\"", name);
+        let lazy = info.lazy_compiles.clone();
+        self.metrics.register_gauge("tensorcalc_lazy_compiles", &labels, move || {
+            lazy.load(Ordering::Relaxed) as f64
+        });
+        let prewarmed = info.prewarm_compiles.clone();
+        self.metrics.register_gauge("tensorcalc_prewarm_compiles", &labels, move || {
+            prewarmed.load(Ordering::Relaxed) as f64
+        });
+        let plan = entry.plan.clone();
+        self.metrics.register_gauge("tensorcalc_lease_state_reuse", &labels, move || {
+            plan.pool_stats().state_reuse as f64
+        });
+        self.infos.insert(name.to_string(), info);
         let (tx, rx) = sync_channel::<Job>(self.queue_cap);
         let metrics = self.metrics.clone();
         let ename = name.to_string();
@@ -269,6 +376,26 @@ impl Coordinator {
             engine_worker(ename, entry, rx, metrics);
         });
         self.insert_worker(name.to_string(), Worker { tx, handle: Some(handle) });
+    }
+
+    /// Per-entry compile/optimizer statistics, sorted by entry name.
+    /// Covers engine entries only (PJRT entries have no optimizer run
+    /// or batched variants to report).
+    pub fn stats(&self) -> Vec<EntryStats> {
+        let mut v: Vec<EntryStats> = self
+            .infos
+            .iter()
+            .map(|(name, i)| EntryStats {
+                name: name.clone(),
+                opt_stats: i.opt_stats,
+                max_batch: i.max_batch,
+                prewarmed_buckets: i.prewarmed_buckets.clone(),
+                lazy_compiles: i.lazy_compiles.load(Ordering::Relaxed),
+                prewarm_compiles: i.prewarm_compiles.load(Ordering::Relaxed),
+            })
+            .collect();
+        v.sort_by(|a, b| a.name.cmp(&b.name));
+        v
     }
 
     /// Install a worker under `name`, shutting down and joining any
@@ -357,9 +484,10 @@ impl Coordinator {
             .ok_or_else(|| anyhow!("unknown entry {}", entry))?;
         let (rtx, rrx) = sync_channel(1);
         w.tx
-            .try_send(Job::Eval { inputs, reply: rtx })
+            .try_send(Job::Eval { inputs, reply: rtx, enqueued: Instant::now() })
             .map_err(|e| anyhow!("queue full / closed for {}: {}", entry, e))?;
         self.metrics.submitted();
+        self.metrics.enqueued();
         Ok(rrx)
     }
 
@@ -433,18 +561,21 @@ fn engine_worker(name: String, mut entry: EngineEntry, rx: Receiver<Job>, metric
         for job in jobs {
             match job {
                 Job::Shutdown => shutdown = true,
-                Job::Eval { inputs, reply } => evals.push((inputs, reply)),
+                Job::Eval { inputs, reply, enqueued } => {
+                    metrics.dequeued();
+                    evals.push((inputs, reply, enqueued));
+                }
             }
         }
         let batch = evals.len();
         // validate per request up front: a malformed request is answered
         // individually and cannot poison the stacked batch
         let mut valid = Vec::with_capacity(evals.len());
-        for (inputs, reply) in evals {
+        for (inputs, reply, enqueued) in evals {
             match validate_inputs(&entry, &inputs) {
-                Ok(()) => valid.push((inputs, reply)),
+                Ok(()) => valid.push((inputs, reply, enqueued)),
                 Err(e) => {
-                    metrics.completed(&name, 0.0, true);
+                    metrics.observe(&name, enqueued.elapsed().as_secs_f64(), 0.0, 1, true);
                     let _ = reply.send(Err(e));
                 }
             }
@@ -466,16 +597,29 @@ fn engine_worker(name: String, mut entry: EngineEntry, rx: Receiver<Job>, metric
 /// once. Both paths return leased zero-copy outputs and run under
 /// `catch_unwind`, so a panicking plan answers its callers instead of
 /// killing the worker.
+///
+/// Timing: queue wait runs per request from its enqueue stamp to the
+/// drain point here; the service clock starts after the drain and
+/// covers stacking + execution, shared by every request in the chunk.
+/// `Response.latency` is the sum — the pre-PR accounting started the
+/// clock after the drain, silently excluding queue wait.
 fn run_chunk(
     name: &str,
     entry: &mut EngineEntry,
-    chunk: Vec<(Vec<Tensor>, SyncSender<Result<Response>>)>,
+    chunk: Vec<(Vec<Tensor>, SyncSender<Result<Response>>, Instant)>,
     batch: usize,
     metrics: &Metrics,
 ) {
     let n = chunk.len();
-    let (ins, replies): (Vec<Vec<Tensor>>, Vec<SyncSender<Result<Response>>>) =
-        chunk.into_iter().unzip();
+    let drained = Instant::now();
+    let mut ins = Vec::with_capacity(n);
+    let mut replies = Vec::with_capacity(n);
+    let mut queue_waits = Vec::with_capacity(n);
+    for (inputs, reply, enqueued) in chunk {
+        queue_waits.push(drained.duration_since(enqueued).as_secs_f64());
+        ins.push(inputs);
+        replies.push(reply);
+    }
     let t0 = Instant::now();
     let outcome = catch_unwind(AssertUnwindSafe(move || -> Vec<Vec<PlanOutput>> {
         if n == 1 {
@@ -509,18 +653,24 @@ fn run_chunk(
             .map(|i| outs.iter().map(|o| o.batch_slice(i, bucket)).collect())
             .collect()
     }));
-    let latency = t0.elapsed().as_secs_f64();
+    let service = t0.elapsed().as_secs_f64();
     match outcome {
         Ok(per_req) => {
-            for (outputs, reply) in per_req.into_iter().zip(replies) {
-                metrics.completed(name, latency, false);
-                let _ = reply.send(Ok(Response { outputs, latency, batch_size: batch }));
+            for ((outputs, reply), queue) in per_req.into_iter().zip(replies).zip(queue_waits) {
+                metrics.observe(name, queue, service, batch, false);
+                let _ = reply.send(Ok(Response {
+                    outputs,
+                    latency: queue + service,
+                    queue_secs: queue,
+                    service_secs: service,
+                    batch_size: batch,
+                }));
             }
         }
         Err(payload) => {
             let msg = panic_message(payload.as_ref());
-            for reply in replies {
-                metrics.completed(name, latency, true);
+            for (reply, queue) in replies.into_iter().zip(queue_waits) {
+                metrics.observe(name, queue, service, batch, true);
                 let _ = reply
                     .send(Err(anyhow!("plan execution panicked for entry {}: {}", name, msg)));
             }
@@ -555,14 +705,20 @@ fn pjrt_worker(mut runtime: Runtime, rx: Receiver<(String, Job)>, metrics: Arc<M
     while let Ok((name, job)) = rx.recv() {
         match job {
             Job::Shutdown => return,
-            Job::Eval { inputs, reply } => {
+            Job::Eval { inputs, reply, enqueued } => {
+                metrics.dequeued();
+                let queue = enqueued.elapsed().as_secs_f64();
                 let t0 = Instant::now();
-                let res = runtime.execute(&name, &inputs).map(|outputs| Response {
+                let res = runtime.execute(&name, &inputs);
+                let service = t0.elapsed().as_secs_f64();
+                metrics.observe(&name, queue, service, 1, res.is_err());
+                let res = res.map(|outputs| Response {
                     outputs: outputs.into_iter().map(PlanOutput::from).collect(),
-                    latency: t0.elapsed().as_secs_f64(),
+                    latency: queue + service,
+                    queue_secs: queue,
+                    service_secs: service,
                     batch_size: 1,
                 });
-                metrics.completed(&name, t0.elapsed().as_secs_f64(), res.is_err());
                 let _ = reply.send(res);
             }
         }
@@ -644,6 +800,12 @@ mod tests {
         env
     }
 
+    /// A hand-built eval job for tests that drive `engine_worker`
+    /// directly, stamped now (as `Coordinator::submit` would).
+    fn eval_job(inputs: Vec<Tensor>, reply: SyncSender<Result<Response>>) -> Job {
+        Job::Eval { inputs, reply, enqueued: Instant::now() }
+    }
+
     #[test]
     fn engine_entry_roundtrip() {
         let mut c = Coordinator::new(16);
@@ -652,6 +814,49 @@ mod tests {
         assert_eq!(resp.outputs.len(), 2);
         assert_eq!(resp.outputs[1].shape(), &[3]);
         assert!(resp.latency >= 0.0);
+    }
+
+    #[test]
+    fn latency_is_queue_wait_plus_service_time() {
+        let mut c = Coordinator::new(16);
+        c.register_engine("e", logreg_grad_entry(8, 3));
+        let resp = c.eval("e", logreg_inputs(8, 3, 1)).unwrap();
+        assert!(resp.queue_secs >= 0.0);
+        assert!(resp.service_secs > 0.0, "plan execution takes nonzero time");
+        let sum = resp.queue_secs + resp.service_secs;
+        assert!(
+            (resp.latency - sum).abs() < 1e-12,
+            "latency {} must equal queue {} + service {}",
+            resp.latency,
+            resp.queue_secs,
+            resp.service_secs
+        );
+    }
+
+    #[test]
+    fn stats_surface_reports_optimizer_and_compile_counters() {
+        let mut c = Coordinator::new(16);
+        c.register_engine("warm", logreg_grad_entry(8, 3).with_max_batch(8).with_prewarm(true));
+        c.register_engine("cold", logreg_grad_entry(8, 3));
+        let stats = c.stats();
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].name, "cold");
+        assert_eq!(stats[1].name, "warm");
+        let warm = &stats[1];
+        // entries compile at the default (Full) level, so the optimizer
+        // report must ride along
+        let os = warm.opt_stats.expect("optimized entry must carry OptStats");
+        assert!(os.nodes_before >= os.nodes_after);
+        assert_eq!(warm.prewarmed_buckets, vec![2, 4, 8]);
+        assert_eq!(warm.prewarm_compiles, 3);
+        assert_eq!(warm.lazy_compiles, 0);
+        assert_eq!(stats[0].prewarmed_buckets, Vec::<usize>::new());
+        assert_eq!(stats[0].prewarm_compiles, 0);
+        // the registration gauges surface the same counters per entry
+        let prom = c.metrics().render_prometheus();
+        assert!(prom.contains("tensorcalc_prewarm_compiles{entry=\"warm\"} 3"), "{prom}");
+        assert!(prom.contains("tensorcalc_lazy_compiles{entry=\"cold\"} 0"), "{prom}");
+        c.shutdown();
     }
 
     #[test]
@@ -703,7 +908,7 @@ mod tests {
             let mut replies = Vec::new();
             for i in 0..5u64 {
                 let (rtx, rrx) = sync_channel(1);
-                tx.send(Job::Eval { inputs: logreg_inputs(8, 3, i), reply: rtx }).unwrap();
+                tx.send(eval_job(logreg_inputs(8, 3, i), rtx)).unwrap();
                 replies.push(rrx);
             }
             drop(tx);
@@ -810,9 +1015,9 @@ mod tests {
         let (tx, rx) = sync_channel::<Job>(8);
         let (r1tx, r1rx) = sync_channel(1);
         let (r2tx, r2rx) = sync_channel(1);
-        tx.send(Job::Eval { inputs: logreg_inputs(8, 3, 1), reply: r1tx }).unwrap();
+        tx.send(eval_job(logreg_inputs(8, 3, 1), r1tx)).unwrap();
         tx.send(Job::Shutdown).unwrap();
-        tx.send(Job::Eval { inputs: logreg_inputs(8, 3, 10), reply: r2tx }).unwrap();
+        tx.send(eval_job(logreg_inputs(8, 3, 10), r2tx)).unwrap();
         drop(tx);
         engine_worker("e".into(), entry, rx, metrics.clone());
         let a = r1rx.recv().expect("first reply dropped").unwrap();
@@ -832,13 +1037,13 @@ mod tests {
         let mut replies = Vec::new();
         for i in 0..2u64 {
             let (rtx, rrx) = sync_channel(1);
-            tx.send(Job::Eval { inputs: logreg_inputs(8, 3, 20 + i), reply: rtx }).unwrap();
+            tx.send(eval_job(logreg_inputs(8, 3, 20 + i), rtx)).unwrap();
             replies.push(rrx);
         }
         tx.send(Job::Shutdown).unwrap();
         for i in 2..5u64 {
             let (rtx, rrx) = sync_channel(1);
-            tx.send(Job::Eval { inputs: logreg_inputs(8, 3, 20 + i), reply: rtx }).unwrap();
+            tx.send(eval_job(logreg_inputs(8, 3, 20 + i), rtx)).unwrap();
             replies.push(rrx);
         }
         drop(tx);
@@ -863,7 +1068,7 @@ mod tests {
         let mut replies = Vec::new();
         for i in 0..5u64 {
             let (rtx, rrx) = sync_channel(1);
-            tx.send(Job::Eval { inputs: logreg_inputs(8, 3, i * 10), reply: rtx }).unwrap();
+            tx.send(eval_job(logreg_inputs(8, 3, i * 10), rtx)).unwrap();
             replies.push((i, rrx));
         }
         drop(tx);

@@ -64,20 +64,31 @@ pub fn eval_many(g: &Graph, roots: &[NodeId], env: &Env) -> Vec<Tensor> {
 /// the escape hatch that compiles the graph exactly as given (the
 /// ablation baseline alongside `CompiledPlan::with_fusion(.., false)`).
 pub fn eval_many_with(g: &Graph, roots: &[NodeId], env: &Env, level: OptLevel) -> Vec<Tensor> {
-    eval_many_opts(g, roots, env, level, crate::exec::ExecMemory::default())
+    eval_many_opts(
+        g,
+        roots,
+        env,
+        level,
+        crate::exec::ExecMemory::default(),
+        crate::obs::TraceMode::default(),
+    )
 }
 
-/// [`eval_many_with`] with the executor's memory discipline explicit:
-/// [`ExecMemory::Planned`](crate::exec::ExecMemory) compiles buffer
-/// lifetimes to arena offsets (the default),
+/// [`eval_many_with`] with the executor's memory discipline and trace
+/// mode explicit: [`ExecMemory::Planned`](crate::exec::ExecMemory)
+/// compiles buffer lifetimes to arena offsets (the default),
 /// [`ExecMemory::Pooled`](crate::exec::ExecMemory) keeps the PR 1
-/// mutex-guarded buffer pool as the ablation baseline.
+/// mutex-guarded buffer pool as the ablation baseline, and any
+/// `trace != Off` compiles an instrumented plan (see [`crate::obs`] —
+/// use `CompiledPlan::run_traced` to actually read the spans back;
+/// this convenience entry point discards them).
 pub fn eval_many_opts(
     g: &Graph,
     roots: &[NodeId],
     env: &Env,
     level: OptLevel,
     memory: crate::exec::ExecMemory,
+    trace: crate::obs::TraceMode,
 ) -> Vec<Tensor> {
     use crate::exec::{BackendKind, CompiledPlan, EpilogueMode};
     if level == OptLevel::None {
@@ -88,6 +99,7 @@ pub fn eval_many_opts(
             EpilogueMode::default(),
             memory,
             BackendKind::default(),
+            trace,
         )
         .run(env);
     }
@@ -100,6 +112,7 @@ pub fn eval_many_opts(
         EpilogueMode::default(),
         memory,
         BackendKind::default(),
+        trace,
     )
     .run(env)
 }

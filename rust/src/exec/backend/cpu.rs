@@ -196,26 +196,31 @@ impl Backend for CpuBackend {
 
     /// In-arena execution: walk the levels, forking a level onto the
     /// persistent worker pool when the gate passes. Nothing here
-    /// allocates, locks, or touches a `Tensor`.
+    /// allocates, locks, or touches a `Tensor` — with tracing off the
+    /// only addition is one untaken branch per instruction.
     fn exec_arena(&self, lw: &Lowered, ex: &ArenaExec<'_>) {
         for (lv, level) in lw.levels.iter().enumerate() {
+            let l0 = ex.trace.map(|s| s.now());
             if let Some((nt, chunk)) = lw.level_fork(lv, level.len()) {
                 let cursor = AtomicUsize::new(0);
                 let cursor_ref = &cursor;
-                worker_pool().scope(nt, move |_| loop {
+                worker_pool().scope(nt, move |lane| loop {
                     let start = cursor_ref.fetch_add(chunk, Ordering::Relaxed);
                     if start >= level.len() {
                         break;
                     }
                     let end = (start + chunk).min(level.len());
                     for &p in &level[start..end] {
-                        exec_node_planned(lw, p, ex);
+                        exec_node_traced(lw, p, ex, lane as u32);
                     }
                 });
             } else {
                 for &p in level {
-                    exec_node_planned(lw, p, ex);
+                    exec_node_traced(lw, p, ex, 0);
                 }
+            }
+            if let (Some(s), Some(t0)) = (ex.trace, l0) {
+                s.record_level(lv as u32, t0);
             }
         }
     }
@@ -310,10 +315,31 @@ impl Backend for CpuBackend {
     }
 }
 
+/// [`exec_node_planned`] wrapped in a span when the run carries a trace
+/// sink. The untraced path is the `None` arm — one branch, no clock
+/// read. `Var`/`Static` never execute, so they are skipped before the
+/// clock starts (a traced run records exactly the executed instructions).
+#[inline]
+fn exec_node_traced(lw: &Lowered, p: usize, ex: &ArenaExec<'_>, lane: u32) {
+    match ex.trace {
+        None => exec_node_planned(lw, p, ex, lane),
+        Some(sink) => {
+            if matches!(lw.instrs[p], Instr::Var { .. } | Instr::Static(_)) {
+                return;
+            }
+            let t0 = sink.now();
+            exec_node_planned(lw, p, ex, lane);
+            sink.record_instr(lane, p as u32, t0);
+        }
+    }
+}
+
 /// Execute one instruction of an in-arena run: operands and the
 /// destination are fixed arena offsets (or pre-resolved env/static
 /// pointers); nothing here allocates, locks, or touches a `Tensor`.
-fn exec_node_planned(lw: &Lowered, p: usize, ex: &ArenaExec<'_>) {
+/// `lane` is only read when the run is traced (the two-pass epilogue
+/// sweep records its own sub-span).
+fn exec_node_planned(lw: &Lowered, p: usize, ex: &ArenaExec<'_>, lane: u32) {
     let mp = lw.memplan.as_ref().expect("in-arena plan carries a memory plan");
     let instr = &lw.instrs[p];
     let slot = match instr {
@@ -394,7 +420,11 @@ fn exec_node_planned(lw: &Lowered, p: usize, ex: &ArenaExec<'_>) {
                                     idx,
                                     &NoEpilogue,
                                 );
+                                let t0 = ex.trace.map(|s| s.now());
                                 e.kernel.run_inplace(out, rest);
+                                if let (Some(s), Some(t0)) = (ex.trace, t0) {
+                                    s.record_epilogue(lane, p as u32, t0);
+                                }
                             }
                         }
                     }

@@ -74,9 +74,16 @@ fn elem_fn(f: Elem) -> fn(f64) -> f64 {
 
 /// The compiled closure chain. `Var`/`Static` instructions emit no
 /// closure at all — the facade resolves them into the source table
-/// before the backend runs.
+/// before the backend runs. Each closure carries its instruction
+/// position so a traced run can attribute spans; epilogues are baked
+/// *inside* the closures here, so unlike the CPU backend a direct trace
+/// has no separate epilogue sub-spans (their time is inside the
+/// instruction span).
 pub struct DirectBackend {
-    ops: Vec<DirectOp>,
+    ops: Vec<(u32, DirectOp)>,
+    /// cumulative closure count at the end of each level — a traced run
+    /// replays the level structure from this, the untraced run ignores it
+    level_ends: Vec<usize>,
 }
 
 impl DirectBackend {
@@ -86,14 +93,16 @@ impl DirectBackend {
     /// order is the canonical sequential schedule consistent with it.
     pub(crate) fn compile(lw: &Lowered) -> DirectBackend {
         let mut ops = Vec::with_capacity(lw.instrs.len());
+        let mut level_ends = Vec::with_capacity(lw.levels.len());
         for level in &lw.levels {
             for &p in level {
                 if let Some(op) = compile_instr(lw, p) {
-                    ops.push(op);
+                    ops.push((p as u32, op));
                 }
             }
+            level_ends.push(ops.len());
         }
-        DirectBackend { ops }
+        DirectBackend { ops, level_ends }
     }
 }
 
@@ -103,8 +112,26 @@ impl Backend for DirectBackend {
     }
 
     fn exec_arena(&self, _lw: &Lowered, ex: &ArenaExec<'_>) {
-        for op in &self.ops {
-            op(ex);
+        match ex.trace {
+            None => {
+                for (_, op) in &self.ops {
+                    op(ex);
+                }
+            }
+            Some(sink) => {
+                // sequential executor: everything runs on lane 0
+                let mut start = 0;
+                for (lv, &end) in self.level_ends.iter().enumerate() {
+                    let l0 = sink.now();
+                    for (pos, op) in &self.ops[start..end] {
+                        let t0 = sink.now();
+                        op(ex);
+                        sink.record_instr(0, *pos, t0);
+                    }
+                    sink.record_level(lv as u32, l0);
+                    start = end;
+                }
+            }
         }
     }
 }

@@ -126,6 +126,12 @@ pub(crate) fn compile(kind: BackendKind, lw: &Lowered) -> Box<dyn Backend> {
 pub struct ArenaExec<'r> {
     pub(crate) base: *mut f64,
     pub(crate) srcs: &'r [(*const f64, usize)],
+    /// span recorder for this run, `None` under `TraceMode::Off` — the
+    /// executors branch on it once per instruction/level, so the
+    /// untraced hot path pays a predicted-not-taken branch and nothing
+    /// else (no allocation, no lock; counter-asserted in
+    /// `tests/obs_trace.rs`)
+    pub(crate) trace: Option<&'r crate::obs::TraceSink>,
 }
 
 unsafe impl Sync for ArenaExec<'_> {}

@@ -14,6 +14,7 @@
 
 use crate::einsum::{EinSpec, EinsumPlan, Label};
 use crate::ir::{Elem, GenFn, Graph, NodeId, Op};
+use crate::obs::TraceMode;
 use crate::tensor::Tensor;
 use crate::util::{num_threads, PAR_BATCH_TOTAL_MIN_FLOP, PAR_LEVEL_MIN_FLOP, STEAL_CHUNKS_PER_THREAD};
 use std::collections::HashMap;
@@ -415,6 +416,11 @@ pub struct Lowered {
     /// dying slot the output takes over in place (in-arena only; for
     /// `Fused` this is the kernel's operand slot)
     pub(crate) inplace_arg: Vec<Option<usize>>,
+    /// estimated flops per instruction (the same cost-model figures the
+    /// level aggregates fold over) — the profiler's GFLOP/s denominator
+    pub(crate) instr_flops: Vec<usize>,
+    /// how much the backends record while executing this plan
+    pub(crate) trace: TraceMode,
 }
 
 impl Lowered {
@@ -444,7 +450,9 @@ impl Lowered {
 /// [`Lowered`]: descriptors → fusion → dense stream → levels/liveness →
 /// memory plan. `force_arena` builds the static memory plan even under
 /// [`ExecMemory::Pooled`] — for backends (like the direct-threaded one)
-/// that only execute in-arena.
+/// that only execute in-arena, and for traced plans (span recording is
+/// wired through the arena executor, so any `trace != Off` forces one
+/// too).
 pub(crate) fn lower(
     g: &Graph,
     roots: &[NodeId],
@@ -452,7 +460,9 @@ pub(crate) fn lower(
     epilogue_mode: EpilogueMode,
     memory: ExecMemory,
     force_arena: bool,
+    trace: TraceMode,
 ) -> Lowered {
+    let force_arena = force_arena || trace != TraceMode::Off;
     let order = g.topo(roots);
     let n = order.len();
     let mut pos_of: HashMap<NodeId, usize> = HashMap::with_capacity(n);
@@ -766,5 +776,7 @@ pub(crate) fn lower(
         memory,
         memplan: plan_mem,
         inplace_arg,
+        instr_flops: flops,
+        trace,
     }
 }

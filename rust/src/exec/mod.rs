@@ -115,16 +115,18 @@
 //! [`OptLevel::None`](crate::opt::OptLevel), the graph first runs
 //! through the [`crate::opt`] pipeline (global CSE + contraction
 //! reassociation) and a dead-node sweep; the key is
-//! `(graph fingerprint, root node ids, memory mode, backend)` **of the
-//! optimized, compacted graph**, where the fingerprint hashes every node
+//! `(graph fingerprint, root node ids, memory mode, backend, trace
+//! mode)` **of the optimized, compacted graph**, where the fingerprint hashes every node
 //! **in id order** — operator, einsum spec, constant bits, δ dims *and
 //! node shape*. Because `Var` nodes carry their declared shape, the
 //! fingerprint covers the input-shape signature, and because the
 //! optimizer canonicalises specs and operand orders, differently-built
 //! but equivalent graphs converge on the same key; two graphs with equal
 //! fingerprints compile to identical instruction streams (modulo 64-bit
-//! hash collision). Plans compiled under different [`ExecMemory`] modes
-//! or [`BackendKind`]s are distinct artifacts and cached separately.
+//! hash collision). Plans compiled under different [`ExecMemory`] modes,
+//! [`BackendKind`]s or [`TraceMode`]s are distinct artifacts and cached
+//! separately (an instrumented plan must never be served where the
+//! zero-overhead default was requested, and vice versa).
 //! The cache never evicts: it is bounded by the number of distinct
 //! `(graph, roots)` configurations a process registers, which is the
 //! number of distinct service entries. Cached plans are `Arc`-shared,
@@ -144,6 +146,7 @@ pub use lower::Lowered;
 
 use crate::eval::Env;
 use crate::ir::{Graph, NodeId};
+use crate::obs::{self, TraceMode};
 use crate::opt::OptLevel;
 use crate::tensor::Tensor;
 use backend::ArenaExec;
@@ -187,6 +190,13 @@ pub struct PoolStats {
     pub arena_allocs: u64,
     /// times the buffer-pool mutex was acquired (zero under `Planned`)
     pub pool_locks: u64,
+    /// trace sinks allocated at run time (zero under [`TraceMode::Off`];
+    /// otherwise one per run state, then constant — the observability
+    /// twin of `arena_allocs`)
+    pub trace_allocs: u64,
+    /// in-arena runs that recycled a warm run state from the lease pool
+    /// instead of starting a fresh one
+    pub state_reuse: u64,
 }
 
 impl fmt::Display for PoolStats {
@@ -250,6 +260,10 @@ pub enum EpilogueMode {
 struct RunState {
     arena: Vec<f64>,
     srcs: SrcTable,
+    /// the span recorder, allocated on the first traced run of this
+    /// state and reset (not reallocated) on every run after — `None`
+    /// forever under [`TraceMode::Off`]
+    trace: Option<Box<obs::TraceSink>>,
 }
 
 /// Resolved value source of every instruction for one run: a pointer and
@@ -418,6 +432,10 @@ pub struct CompiledPlan {
     run_states: Mutex<Vec<RunState>>,
     /// run-state arenas grown at run time (cold starts; then constant)
     arena_allocs: AtomicU64,
+    /// trace sinks allocated at run time (always zero under `Off`)
+    trace_allocs: AtomicU64,
+    /// in-arena runs served by a recycled warm run state
+    state_reuse: AtomicU64,
 }
 
 impl CompiledPlan {
@@ -430,6 +448,7 @@ impl CompiledPlan {
             EpilogueMode::default(),
             ExecMemory::default(),
             BackendKind::default(),
+            TraceMode::default(),
         )
     }
 
@@ -444,6 +463,7 @@ impl CompiledPlan {
             EpilogueMode::default(),
             ExecMemory::default(),
             BackendKind::default(),
+            TraceMode::default(),
         )
     }
 
@@ -457,16 +477,19 @@ impl CompiledPlan {
             EpilogueMode::default(),
             ExecMemory::default(),
             backend,
+            TraceMode::default(),
         )
     }
 
     /// Compile with every ablation toggle explicit: the fusion pass
     /// on/off, where contraction epilogues run ([`EpilogueMode`]), where
-    /// intermediates live ([`ExecMemory`]), and which [`BackendKind`]
-    /// executes the stream. Lowering is backend-neutral; the backend
-    /// only changes *how* the same instructions run (the direct backend
-    /// additionally force-builds the arena plan, since it executes
-    /// in-arena even under the pooled ablation mode).
+    /// intermediates live ([`ExecMemory`]), which [`BackendKind`]
+    /// executes the stream, and how much the run records ([`TraceMode`]).
+    /// Lowering is backend-neutral; the backend only changes *how* the
+    /// same instructions run (the direct backend additionally
+    /// force-builds the arena plan, since it executes in-arena even
+    /// under the pooled ablation mode — and so does any `trace != Off`,
+    /// since span recording is wired through the arena executor).
     pub fn with_options(
         g: &Graph,
         roots: &[NodeId],
@@ -474,6 +497,7 @@ impl CompiledPlan {
         epilogue_mode: EpilogueMode,
         memory: ExecMemory,
         backend: BackendKind,
+        trace: TraceMode,
     ) -> Self {
         let lowered = lower::lower(
             g,
@@ -482,6 +506,7 @@ impl CompiledPlan {
             epilogue_mode,
             memory,
             backend == BackendKind::Direct,
+            trace,
         );
         let exec = backend::compile(backend, &lowered);
         CompiledPlan {
@@ -490,6 +515,8 @@ impl CompiledPlan {
             exec,
             run_states: Mutex::new(Vec::new()),
             arena_allocs: AtomicU64::new(0),
+            trace_allocs: AtomicU64::new(0),
+            state_reuse: AtomicU64::new(0),
         }
     }
 
@@ -539,6 +566,8 @@ impl CompiledPlan {
             planned_reuse: self.lowered.memplan.as_ref().map_or(0, |mp| mp.planned_reuse),
             inplace_reuse: self.lowered.memplan.as_ref().map_or(0, |mp| mp.inplace_reuse),
             arena_allocs: self.arena_allocs.load(Ordering::Relaxed),
+            trace_allocs: self.trace_allocs.load(Ordering::Relaxed),
+            state_reuse: self.state_reuse.load(Ordering::Relaxed),
             ..PoolStats::default()
         };
         // diagnostic read: the backend merges its own counters (pool
@@ -555,6 +584,68 @@ impl CompiledPlan {
     /// The execution backend this plan compiled for.
     pub fn backend(&self) -> BackendKind {
         self.backend
+    }
+
+    /// The [`TraceMode`] this plan compiled with.
+    pub fn trace_mode(&self) -> TraceMode {
+        self.lowered.trace
+    }
+
+    /// Number of instructions that actually execute: the stream minus
+    /// `Var` bindings and compile-time statics, which never run and are
+    /// never traced. This is the span count a Profile-mode trace must
+    /// cover exactly once per run.
+    pub fn executed_instrs(&self) -> usize {
+        self.lowered
+            .instrs
+            .iter()
+            .filter(|i| !matches!(i, Instr::Var { .. } | Instr::Static(_)))
+            .count()
+    }
+
+    /// The backend-neutral lowering artifact (crate-internal: the
+    /// benches and the obs exporters read levels and flop estimates).
+    pub(crate) fn lowered(&self) -> &Lowered {
+        &self.lowered
+    }
+
+    /// Static plan description for the obs exporters: one
+    /// [`obs::InstrInfo`] per executed instruction (kernel label, level,
+    /// cost-model flops, output bytes).
+    pub fn plan_info(&self) -> obs::PlanInfo {
+        let lw = &self.lowered;
+        let mut level_of = vec![0u32; lw.instrs.len()];
+        for (lv, level) in lw.levels.iter().enumerate() {
+            for &p in level {
+                level_of[p] = lv as u32;
+            }
+        }
+        let instrs = lw
+            .instrs
+            .iter()
+            .enumerate()
+            .filter_map(|(p, instr)| {
+                let name = match instr {
+                    Instr::Var { .. } | Instr::Static(_) => return None,
+                    Instr::Add(..) => "add".to_string(),
+                    Instr::Mul(_, _, _, None) => "mul".to_string(),
+                    Instr::Mul(_, _, _, Some(_)) => "mul+epilogue".to_string(),
+                    Instr::Elem(f, _) => format!("elem {}", f.name()),
+                    Instr::GenUnary(f, _, None) => format!("gen {}", f.name()),
+                    Instr::GenUnary(f, _, Some(_)) => format!("gen {}+epilogue", f.name()),
+                    Instr::Fused { kernel, .. } => format!("fused[{}]", kernel.ops.len()),
+                };
+                Some(obs::InstrInfo {
+                    pos: p as u32,
+                    name,
+                    level: level_of[p],
+                    flops: lw.instr_flops[p] as u64,
+                    bytes: (lw.shapes[p].iter().product::<usize>() * std::mem::size_of::<f64>())
+                        as u64,
+                })
+            })
+            .collect();
+        obs::PlanInfo { instrs, levels: lw.levels.len(), backend: self.backend.name() }
     }
 
     /// Re-verify the memory plan's no-overlap invariant (no two live
@@ -669,10 +760,32 @@ impl CompiledPlan {
     /// its arena) to the caller.
     fn exec_planned_state(&self, env: &Env) -> RunState {
         let mp = self.lowered.memplan.as_ref().expect("in-arena plan carries a memory plan");
-        let mut st = self.run_states.lock().unwrap().pop().unwrap_or_default();
+        let mut st = match self.run_states.lock().unwrap().pop() {
+            Some(st) => {
+                self.state_reuse.fetch_add(1, Ordering::Relaxed);
+                st
+            }
+            None => RunState::default(),
+        };
         if st.arena.len() < mp.arena_len {
             self.arena_allocs.fetch_add(1, Ordering::Relaxed);
             st.arena.resize(mp.arena_len, 0.0);
+        }
+        if self.lowered.trace != TraceMode::Off {
+            if st.trace.is_none() {
+                // capacity: every instruction can span twice per run
+                // (instr + epilogue), plus one span per level, plus slack
+                let cap = 2 * self.lowered.instrs.len() + self.lowered.levels.len() + 16;
+                self.trace_allocs.fetch_add(1, Ordering::Relaxed);
+                st.trace = Some(Box::new(obs::TraceSink::new(
+                    self.lowered.trace,
+                    crate::util::num_threads(),
+                    cap,
+                )));
+            }
+            if let Some(t) = st.trace.as_mut() {
+                t.reset();
+            }
         }
 
         // resolve every instruction's value source up front: env lookups
@@ -706,10 +819,34 @@ impl CompiledPlan {
             };
             st.srcs.0.push(entry);
         }
-        let ex = ArenaExec { base, srcs: &st.srcs.0 };
+        let ex = ArenaExec { base, srcs: &st.srcs.0, trace: st.trace.as_deref() };
         self.exec.exec_arena(&self.lowered, &ex);
         drop(ex);
         st
+    }
+
+    /// Execute the plan and return the recorded [`obs::Trace`] alongside
+    /// the outputs. On a plan compiled with [`TraceMode::Off`] this is
+    /// just [`run`](Self::run) plus an empty trace — the instrumented
+    /// path only exists on plans whose cache key asked for it.
+    pub fn run_traced(&self, env: &Env) -> (Vec<Tensor>, obs::Trace) {
+        if self.lowered.trace == TraceMode::Off {
+            return (self.run(env), obs::Trace::default());
+        }
+        // trace != Off forced an arena at lowering time, so the planned
+        // path is the only one that can run here
+        let mut st = self.exec_planned_state(env);
+        let mut out = Vec::with_capacity(self.lowered.root_pos.len());
+        for &p in &self.lowered.root_pos {
+            let (ptr, len) = st.srcs.0[p];
+            // SAFETY: same as `run_planned` — env, statics, and st's own
+            // arena are all live here.
+            let data = unsafe { std::slice::from_raw_parts(ptr, len) }.to_vec();
+            out.push(Tensor::new(&self.lowered.shapes[p], data));
+        }
+        let trace = st.trace.as_mut().map(|t| t.drain()).unwrap_or_default();
+        self.run_states.lock().unwrap().push(st);
+        (out, trace)
     }
 }
 
@@ -734,10 +871,13 @@ struct PlanKey {
     /// likewise for the execution backend: a direct-threaded closure
     /// chain and a level-parallel plan are different compiled artifacts
     backend: BackendKind,
+    /// and for the trace mode: an instrumented plan must never be
+    /// served where the zero-overhead default was requested
+    trace: TraceMode,
 }
 
 /// Memoised compiled plans keyed by `(graph fingerprint, roots, memory,
-/// backend)` — the coordinator's repeated-request hot path compiles
+/// backend, trace mode)` — the coordinator's repeated-request hot path compiles
 /// each entry once and shares it (plan + warm arenas or buffer pool)
 /// across workers.
 #[derive(Default)]
@@ -752,6 +892,10 @@ pub struct PlanCache {
     /// under a different configuration can never be served the other
     /// configuration's plan.
     by_input: Mutex<HashMap<(PlanKey, OptLevel), Arc<CompiledPlan>>>,
+    /// lookups that found an existing plan (either table)
+    hits: AtomicU64,
+    /// lookups that compiled a fresh plan
+    misses: AtomicU64,
 }
 
 impl PlanCache {
@@ -774,7 +918,14 @@ impl PlanCache {
         roots: &[NodeId],
         level: OptLevel,
     ) -> Arc<CompiledPlan> {
-        self.get_or_compile_opts(g, roots, level, ExecMemory::default(), BackendKind::default())
+        self.get_or_compile_opts(
+            g,
+            roots,
+            level,
+            ExecMemory::default(),
+            BackendKind::default(),
+            TraceMode::default(),
+        )
     }
 
     /// Fetch the compiled plan for `(g, roots)` with an explicit
@@ -785,8 +936,8 @@ impl PlanCache {
     /// first and the *optimized, compacted* graph is what the key
     /// fingerprints — so differently-built but equivalent graphs
     /// converge on one cached plan (one warm arena set or buffer pool).
-    /// Plans compiled under different [`ExecMemory`] modes or
-    /// [`BackendKind`]s are cached separately.
+    /// Plans compiled under different [`ExecMemory`] modes,
+    /// [`BackendKind`]s or [`TraceMode`]s are cached separately.
     pub fn get_or_compile_opts(
         &self,
         g: &Graph,
@@ -794,18 +945,22 @@ impl PlanCache {
         level: OptLevel,
         memory: ExecMemory,
         backend: BackendKind,
+        trace: TraceMode,
     ) -> Arc<CompiledPlan> {
         let input_key = PlanKey {
             fingerprint: graph_fingerprint(g),
             roots: roots.iter().map(|r| r.0).collect(),
             memory,
             backend,
+            trace,
         };
         if level == OptLevel::None {
             let mut map = self.map.lock().unwrap();
             if let Some(plan) = map.get(&input_key) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
                 return plan.clone();
             }
+            self.misses.fetch_add(1, Ordering::Relaxed);
             let plan = Arc::new(CompiledPlan::with_options(
                 g,
                 roots,
@@ -813,6 +968,7 @@ impl PlanCache {
                 EpilogueMode::default(),
                 memory,
                 backend,
+                trace,
             ));
             map.insert(input_key, plan.clone());
             return plan;
@@ -821,6 +977,7 @@ impl PlanCache {
         // pass of the raw graph, no clone, no optimizer
         let input_key = (input_key, level);
         if let Some(plan) = self.by_input.lock().unwrap().get(&input_key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
             return plan.clone();
         }
         let mut g2 = g.clone();
@@ -831,12 +988,15 @@ impl PlanCache {
             roots: croots.iter().map(|r| r.0).collect(),
             memory,
             backend,
+            trace,
         };
         let plan = {
             let mut map = self.map.lock().unwrap();
             if let Some(plan) = map.get(&canon_key) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
                 plan.clone()
             } else {
+                self.misses.fetch_add(1, Ordering::Relaxed);
                 let plan = Arc::new(CompiledPlan::with_options(
                     &gc,
                     &croots,
@@ -844,6 +1004,7 @@ impl PlanCache {
                     EpilogueMode::default(),
                     memory,
                     backend,
+                    trace,
                 ));
                 map.insert(canon_key, plan.clone());
                 plan
@@ -851,6 +1012,12 @@ impl PlanCache {
         };
         self.by_input.lock().unwrap().insert(input_key, plan.clone());
         plan
+    }
+
+    /// `(hits, misses)` across both lookup tables since process start —
+    /// the serving metrics surface reads this off the global cache.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
     }
 
     /// Number of cached plans (distinct compiled artifacts, not raw-graph
@@ -934,6 +1101,7 @@ mod tests {
             EpilogueMode::default(),
             ExecMemory::Pooled,
             BackendKind::Direct,
+            TraceMode::Off,
         );
         let want = CompiledPlan::new(&g, &[y]).run(&env);
         let got = plan.run(&env);
@@ -996,6 +1164,7 @@ mod tests {
             OptLevel::None,
             ExecMemory::Planned,
             BackendKind::Cpu,
+            TraceMode::Off,
         );
         let mut env = Env::new();
         env.insert("X", Tensor::randn(&[2, 4, 3], 1));
@@ -1051,6 +1220,7 @@ mod tests {
             EpilogueMode::InTile,
             ExecMemory::default(),
             BackendKind::default(),
+            TraceMode::Off,
         );
         let two_pass = CompiledPlan::with_options(
             &g,
@@ -1059,6 +1229,7 @@ mod tests {
             EpilogueMode::TwoPass,
             ExecMemory::default(),
             BackendKind::default(),
+            TraceMode::Off,
         );
         assert!(in_tile.fused_count() >= 1, "expression 1 must produce an epilogue");
         let a = in_tile.run(&env);
@@ -1089,6 +1260,7 @@ mod tests {
             EpilogueMode::default(),
             ExecMemory::Pooled,
             BackendKind::Cpu,
+            TraceMode::Off,
         );
         let first = plan.run(&env);
         let cold = plan.pool_stats();
@@ -1122,6 +1294,7 @@ mod tests {
             EpilogueMode::default(),
             ExecMemory::Pooled,
             BackendKind::Cpu,
+            TraceMode::Off,
         );
         let a = planned.run(&env);
         let b = pooled.run(&env);
@@ -1204,12 +1377,10 @@ mod tests {
         let cache = PlanCache::new();
         let (g, y, env) = expr1();
         let level = OptLevel::default();
-        let planned =
-            cache.get_or_compile_opts(&g, &[y], level, ExecMemory::Planned, BackendKind::Cpu);
-        let pooled =
-            cache.get_or_compile_opts(&g, &[y], level, ExecMemory::Pooled, BackendKind::Cpu);
-        let direct =
-            cache.get_or_compile_opts(&g, &[y], level, ExecMemory::Planned, BackendKind::Direct);
+        let get = |mem, be| cache.get_or_compile_opts(&g, &[y], level, mem, be, TraceMode::Off);
+        let planned = get(ExecMemory::Planned, BackendKind::Cpu);
+        let pooled = get(ExecMemory::Pooled, BackendKind::Cpu);
+        let direct = get(ExecMemory::Planned, BackendKind::Direct);
         assert!(
             !Arc::ptr_eq(&planned, &pooled),
             "memory modes must compile distinct plans"
@@ -1224,12 +1395,9 @@ mod tests {
         assert_eq!(cache.len(), 3);
         // repeated requests hit their own artifact (the fast path
         // includes the full configuration in its key)
-        let planned2 =
-            cache.get_or_compile_opts(&g, &[y], level, ExecMemory::Planned, BackendKind::Cpu);
-        let pooled2 =
-            cache.get_or_compile_opts(&g, &[y], level, ExecMemory::Pooled, BackendKind::Cpu);
-        let direct2 =
-            cache.get_or_compile_opts(&g, &[y], level, ExecMemory::Planned, BackendKind::Direct);
+        let planned2 = get(ExecMemory::Planned, BackendKind::Cpu);
+        let pooled2 = get(ExecMemory::Pooled, BackendKind::Cpu);
+        let direct2 = get(ExecMemory::Planned, BackendKind::Direct);
         assert!(Arc::ptr_eq(&planned, &planned2));
         assert!(Arc::ptr_eq(&pooled, &pooled2));
         assert!(Arc::ptr_eq(&direct, &direct2));

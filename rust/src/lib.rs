@@ -35,6 +35,11 @@
 //!   AOT-compiled JAX/Pallas artifacts (behind the `pjrt` cargo
 //!   feature) and the derivative-evaluation service built on top; engine
 //!   entries serve requests through cached [`exec::CompiledPlan`]s.
+//! * [`obs`] — the zero-dependency tracing/profiling layer: both exec
+//!   backends record per-instruction spans under an opt-in
+//!   [`obs::TraceMode`], exported as a profile table or Chrome trace-event
+//!   JSON; the serving side renders Prometheus-style metrics
+//!   ([`coordinator::metrics`]).
 //!
 //! ## Quickstart
 //!
@@ -69,6 +74,7 @@ pub mod eval;
 pub mod exec;
 pub mod figures;
 pub mod ir;
+pub mod obs;
 pub mod opt;
 pub mod parser;
 pub mod problems;
@@ -92,6 +98,7 @@ pub mod prelude {
         PlanCache, PlanOutput,
     };
     pub use crate::ir::{Elem, Graph, NodeId, Op};
+    pub use crate::obs::{chrome_trace_json, Profile, Trace, TraceMode};
     pub use crate::opt::{compact, optimize, report, OptLevel, OptStats};
     pub use crate::simplify::simplify;
     pub use crate::tensor::Tensor;

@@ -6,15 +6,19 @@
 //! tensorcalc demo                           quick tour on Expression (1)
 //! tensorcalc derive <problem> [--n N] [--mode reverse|cc|compressed]
 //!                   [--backend cpu|direct] [--dot]
+//!                   [--trace off|profile|json=PATH]
+//!                             profile = per-instruction table,
+//!                             json    = Chrome trace-event file
 //! tensorcalc bench fig2|fig3|newton [--sizes a,b,c] [--secs S] [--full]
 //! tensorcalc artifacts [--dir D]            list + smoke-run AOT artifacts
 //! tensorcalc serve [--requests N] [--batch B] [--backend cpu|direct]
-//!                                           coordinator demo with metrics
-//!                                           (B = max dynamic batch, 1 = off)
+//!                  [--prom PATH]            coordinator demo with metrics
+//!                                           (B = max dynamic batch, 1 = off;
+//!                                           --prom dumps Prometheus text)
 //! ```
 
 use tensorcalc::coordinator::{Coordinator, EngineEntry};
-use tensorcalc::error::Result;
+use tensorcalc::error::{Context as _, Result};
 use tensorcalc::figures;
 use tensorcalc::{anyhow, bail};
 use tensorcalc::ir::{Elem, Graph};
@@ -93,10 +97,11 @@ fn run() -> Result<()> {
             println!(
                 "tensorcalc — A Simple and Efficient Tensor Calculus for ML (reproduction)\n\n\
                  usage:\n  tensorcalc demo\n  tensorcalc derive <logreg|matfac|mlp> \
-                 [--n N] [--mode reverse|cc|compressed] [--backend cpu|direct] [--dot]\n  \
+                 [--n N] [--mode reverse|cc|compressed] [--backend cpu|direct] [--dot] \
+                 [--trace off|profile|json=PATH]\n  \
                  tensorcalc bench <fig2|fig3|newton> [--sizes a,b,c] [--secs S] [--full]\n  \
                  tensorcalc artifacts [--dir D]\n  tensorcalc serve [--requests N] \
-                 [--batch B] [--backend cpu|direct]"
+                 [--batch B] [--backend cpu|direct] [--prom PATH]"
             );
             Ok(())
         }
@@ -188,11 +193,58 @@ fn derive(args: &Args) -> Result<()> {
             plan.backend().name(),
             plan.pool_stats()
         );
+        run_trace(args, &g2, &o.roots, &w.env, backend)?;
     }
     if args.get("dot").is_some() {
         println!("{}", w.g.to_dot(&[node]));
     } else {
         println!("{}", w.g.program(&[node]));
+    }
+    Ok(())
+}
+
+/// `derive --trace`: re-compile the optimized graph with tracing on,
+/// run it once on the workload's sample inputs, and either print the
+/// profile table (`--trace profile`) or write a Perfetto-loadable
+/// Chrome trace-event file (`--trace json=PATH`).
+fn run_trace(
+    args: &Args,
+    g: &Graph,
+    roots: &[NodeId],
+    env: &Env,
+    backend: BackendKind,
+) -> Result<()> {
+    let spec = match args.get("trace") {
+        None | Some("off") => return Ok(()),
+        Some(s) => s,
+    };
+    let (mode, json_path) = if spec == "profile" {
+        (TraceMode::Profile, None)
+    } else if let Some(p) = spec.strip_prefix("json=") {
+        // Trace mode adds level/epilogue spans — the timeline export
+        // wants them, the aggregate table doesn't need them
+        (TraceMode::Trace, Some(p.to_string()))
+    } else {
+        bail!("unknown --trace {} (off|profile|json=PATH)", spec);
+    };
+    let plan = CompiledPlan::with_options(
+        g,
+        roots,
+        true,
+        EpilogueMode::default(),
+        ExecMemory::default(),
+        backend,
+        mode,
+    );
+    let (_outputs, trace) = plan.run_traced(env);
+    let info = plan.plan_info();
+    match json_path {
+        Some(path) => {
+            std::fs::write(&path, chrome_trace_json(&trace, &info))
+                .with_context(|| format!("writing {}", path))?;
+            println!("wrote Chrome trace ({} spans) to {}", trace.spans.len(), path);
+        }
+        None => println!("{}", Profile::build(&trace, &info).render_table(10)),
     }
     Ok(())
 }
@@ -364,6 +416,24 @@ fn serve(args: &Args) -> Result<()> {
             tensorcalc::util::fmt_secs(p50),
             tensorcalc::util::fmt_secs(p99)
         );
+    }
+    // the `stats` request surface: what the optimizer did per entry and
+    // where its batched-plan compiles happened (registration vs serving)
+    for es in c.stats() {
+        let opt = match es.opt_stats {
+            Some(s) => s.to_string(),
+            None => "frozen at OptLevel::None".into(),
+        };
+        println!(
+            "stats {}: max_batch {}, prewarmed buckets {:?}, compiles \
+             {} prewarm / {} lazy | {}",
+            es.name, es.max_batch, es.prewarmed_buckets, es.prewarm_compiles, es.lazy_compiles, opt
+        );
+    }
+    if let Some(path) = args.get("prom") {
+        std::fs::write(path, c.metrics().render_prometheus())
+            .with_context(|| format!("writing {}", path))?;
+        println!("wrote Prometheus metrics to {}", path);
     }
     Ok(())
 }

@@ -1,0 +1,742 @@
+//! Observability: plan-level tracing and profiling.
+//!
+//! Zero-dependency instrumentation for the compiled executor. Both
+//! execution backends record per-instruction (and, in [`TraceMode::Trace`],
+//! per-level and epilogue) spans into pre-sized per-lane ring buffers
+//! owned by the plan's run state ([`TraceSink`]); the drained [`Trace`]
+//! aggregates into a [`Profile`] (top-k instructions by time, achieved
+//! GFLOP/s against the `opt::cost` flop estimate, level occupancy) or
+//! exports as Chrome trace-event JSON loadable in Perfetto /
+//! `chrome://tracing` ([`chrome_trace_json`]).
+//!
+//! The overhead contract: with [`TraceMode::Off`] (the default) the hot
+//! path pays exactly one predictable branch per instruction — no
+//! allocation, no lock, no clock read — and plans stay bit-identical to
+//! pre-instrumentation builds (counter-asserted in
+//! `tests/obs_trace.rs`, like PR 5's zero-alloc arena contract). With
+//! tracing on, each span costs two monotonic clock reads and one write
+//! into a lane-private ring buffer; buffers never grow mid-run, and
+//! overflow increments a drop counter instead of allocating.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Trace modes
+// ---------------------------------------------------------------------------
+
+/// How much a compiled plan records while executing.
+///
+/// Threads through `CompiledPlan::with_options`, the lowering artifact,
+/// the plan-cache key, `eval_many_opts` and the `--trace` CLI flag.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum TraceMode {
+    /// No instrumentation: the steady-state contract (zero allocations,
+    /// no locks, bit-identical output) is unchanged.
+    #[default]
+    Off,
+    /// Per-instruction spans only — enough for the [`Profile`] table.
+    Profile,
+    /// Instruction + level + two-pass-epilogue spans — the full
+    /// timeline for Chrome-trace export.
+    Trace,
+}
+
+impl TraceMode {
+    /// Canonical lower-case name, as accepted by [`TraceMode::parse`].
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceMode::Off => "off",
+            TraceMode::Profile => "profile",
+            TraceMode::Trace => "trace",
+        }
+    }
+
+    /// Parse a CLI-style mode name.
+    pub fn parse(s: &str) -> Option<TraceMode> {
+        match s {
+            "off" => Some(TraceMode::Off),
+            "profile" => Some(TraceMode::Profile),
+            "trace" => Some(TraceMode::Trace),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for TraceMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Spans
+// ---------------------------------------------------------------------------
+
+/// What a [`Span`] measured.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SpanKind {
+    /// One executed instruction (`id` = instruction position).
+    #[default]
+    Instr,
+    /// One DAG level, fork to join (`id` = level index, lane 0).
+    Level,
+    /// The second pass of a two-pass epilogue (`id` = the carrying
+    /// instruction's position).
+    Epilogue,
+}
+
+/// One timed interval, in nanoseconds since the run's epoch.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Span {
+    pub kind: SpanKind,
+    /// Instruction position or level index, per [`SpanKind`].
+    pub id: u32,
+    /// Worker lane (scope participant index; 0 is the calling thread).
+    pub lane: u32,
+    pub t0_ns: u64,
+    pub t1_ns: u64,
+}
+
+impl Span {
+    /// Span duration in seconds.
+    pub fn secs(&self) -> f64 {
+        self.t1_ns.saturating_sub(self.t0_ns) as f64 * 1e-9
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The sink: pre-sized per-lane ring buffers
+// ---------------------------------------------------------------------------
+
+/// One lane's ring: a fixed, pre-sized span array plus a monotone write
+/// counter. Writes past capacity wrap (oldest spans are overwritten and
+/// counted as dropped at drain time); the buffer never grows mid-run.
+struct LaneBuf {
+    spans: Vec<Span>,
+    written: u64,
+}
+
+impl LaneBuf {
+    fn new(cap: usize) -> LaneBuf {
+        LaneBuf { spans: vec![Span::default(); cap.max(1)], written: 0 }
+    }
+
+    #[inline]
+    fn push(&mut self, span: Span) {
+        let cap = self.spans.len();
+        self.spans[(self.written % cap as u64) as usize] = span;
+        self.written += 1;
+    }
+}
+
+/// A lane slot. Each lane is written only by the single scope
+/// participant running as that lane (the same disjointness argument as
+/// the executor's arena slots), so handing `&TraceSink` to all
+/// participants is safe.
+struct LaneSlot(UnsafeCell<LaneBuf>);
+
+// SAFETY: see `LaneSlot` — lane i is touched only by participant i
+// while the scope is live, and only by the owner (`&mut`) otherwise.
+unsafe impl Sync for LaneSlot {}
+
+/// Per-run span recorder owned by a plan's run state: one pre-sized
+/// ring buffer per worker lane plus the run's clock epoch. Allocated
+/// once per run state on the first traced run and reused (reset)
+/// afterwards, so traced steady state allocates nothing either.
+pub struct TraceSink {
+    mode: TraceMode,
+    epoch: Instant,
+    lanes: Box<[LaneSlot]>,
+    /// Spans aimed at a lane index beyond the sink's width (never
+    /// expected; counted instead of written to keep `record` race-free).
+    overflow: AtomicU64,
+}
+
+impl TraceSink {
+    /// A sink with `lanes` ring buffers of `cap` spans each.
+    pub fn new(mode: TraceMode, lanes: usize, cap: usize) -> TraceSink {
+        let lanes = lanes.max(1);
+        TraceSink {
+            mode,
+            epoch: Instant::now(),
+            lanes: (0..lanes).map(|_| LaneSlot(UnsafeCell::new(LaneBuf::new(cap)))).collect(),
+            overflow: AtomicU64::new(0),
+        }
+    }
+
+    pub fn mode(&self) -> TraceMode {
+        self.mode
+    }
+
+    /// Nanoseconds since the current run's epoch.
+    #[inline]
+    pub fn now(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Rewind every lane and restart the clock for a new run.
+    pub fn reset(&mut self) {
+        for slot in self.lanes.iter_mut() {
+            slot.0.get_mut().written = 0;
+        }
+        *self.overflow.get_mut() = 0;
+        self.epoch = Instant::now();
+    }
+
+    #[inline]
+    fn record(&self, lane: u32, kind: SpanKind, id: u32, t0_ns: u64) {
+        let t1_ns = self.now();
+        match self.lanes.get(lane as usize) {
+            // SAFETY: each lane is written only by its own participant.
+            Some(slot) => unsafe {
+                (*slot.0.get()).push(Span { kind, id, lane, t0_ns, t1_ns });
+            },
+            None => {
+                self.overflow.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Record one executed instruction, closing at the current clock.
+    #[inline]
+    pub fn record_instr(&self, lane: u32, pos: u32, t0_ns: u64) {
+        self.record(lane, SpanKind::Instr, pos, t0_ns);
+    }
+
+    /// Record one level (fork to join). Level spans are part of the
+    /// full timeline only — [`TraceMode::Profile`] skips them.
+    #[inline]
+    pub fn record_level(&self, level: u32, t0_ns: u64) {
+        if self.mode == TraceMode::Trace {
+            self.record(0, SpanKind::Level, level, t0_ns);
+        }
+    }
+
+    /// Record a two-pass epilogue's second pass (full timeline only).
+    #[inline]
+    pub fn record_epilogue(&self, lane: u32, pos: u32, t0_ns: u64) {
+        if self.mode == TraceMode::Trace {
+            self.record(lane, SpanKind::Epilogue, pos, t0_ns);
+        }
+    }
+
+    /// Collect the run's spans, sorted by start time.
+    pub fn drain(&mut self) -> Trace {
+        let mut spans = Vec::new();
+        let mut dropped = *self.overflow.get_mut();
+        let lanes = self.lanes.len();
+        for slot in self.lanes.iter_mut() {
+            let buf = slot.0.get_mut();
+            let cap = buf.spans.len() as u64;
+            if buf.written <= cap {
+                spans.extend_from_slice(&buf.spans[..buf.written as usize]);
+            } else {
+                // the ring wrapped: the oldest `written - cap` spans are
+                // gone; what's left starts at the wrap cursor
+                dropped += buf.written - cap;
+                let at = (buf.written % cap) as usize;
+                spans.extend_from_slice(&buf.spans[at..]);
+                spans.extend_from_slice(&buf.spans[..at]);
+            }
+        }
+        spans.sort_by_key(|s| (s.t0_ns, s.t1_ns));
+        Trace { mode: self.mode, spans, lanes, dropped }
+    }
+}
+
+/// The drained spans of one plan run.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub mode: TraceMode,
+    /// All spans, sorted by start time.
+    pub spans: Vec<Span>,
+    /// Ring buffers the sink carried (one per potential worker lane).
+    pub lanes: usize,
+    /// Spans lost to ring wrap-around (0 unless a plan re-executes an
+    /// instruction stream larger than the pre-sized rings).
+    pub dropped: u64,
+}
+
+impl Trace {
+    /// Spans of one kind, in start order.
+    pub fn spans_of(&self, kind: SpanKind) -> impl Iterator<Item = &Span> {
+        self.spans.iter().filter(move |s| s.kind == kind)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Static plan description (built by `exec`, consumed by the exporters)
+// ---------------------------------------------------------------------------
+
+/// What the lowering knows statically about one executed instruction.
+#[derive(Clone, Debug)]
+pub struct InstrInfo {
+    /// Position in the lowered instruction stream.
+    pub pos: u32,
+    /// Human-readable kernel label (`mul`, `fused[4]`, `elem tanh`, …).
+    pub name: String,
+    /// DAG level the instruction executes in.
+    pub level: u32,
+    /// The `opt::cost`-model flop estimate baked in at lowering.
+    pub flops: u64,
+    /// Output bytes written.
+    pub bytes: u64,
+}
+
+/// Static description of a compiled plan, paired with a [`Trace`] by
+/// the exporters. Built by `CompiledPlan::plan_info`.
+#[derive(Clone, Debug, Default)]
+pub struct PlanInfo {
+    /// Executed instructions only (`Var`/`Static` never run and are
+    /// never traced).
+    pub instrs: Vec<InstrInfo>,
+    /// Number of DAG levels in the schedule.
+    pub levels: usize,
+    /// Executing backend name (`cpu` / `direct`).
+    pub backend: &'static str,
+}
+
+impl PlanInfo {
+    fn instr(&self, pos: u32) -> Option<&InstrInfo> {
+        self.instrs.iter().find(|i| i.pos == pos)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Profile aggregation
+// ---------------------------------------------------------------------------
+
+/// Aggregated cost of one instruction across a trace.
+#[derive(Clone, Debug)]
+pub struct InstrProfile {
+    pub pos: u32,
+    pub name: String,
+    pub level: u32,
+    /// Spans observed (1 per run for a single-run trace).
+    pub calls: u64,
+    /// Total wall time across all spans.
+    pub secs: f64,
+    /// The cost model's flop estimate (per call).
+    pub flops: u64,
+    /// Achieved GFLOP/s: `calls · flops / secs / 1e9`.
+    pub gflops: f64,
+}
+
+/// Aggregated occupancy of one DAG level.
+#[derive(Clone, Debug)]
+pub struct LevelProfile {
+    pub level: u32,
+    /// Executed instructions scheduled in this level.
+    pub instrs: usize,
+    /// Level envelope: last span end minus first span start.
+    pub wall_secs: f64,
+    /// Sum of instruction span durations inside the level.
+    pub busy_secs: f64,
+    /// Distinct worker lanes that recorded spans in the level.
+    pub lanes_used: usize,
+    /// `busy / (wall · lanes_used)` — the steal-balance figure.
+    pub occupancy: f64,
+}
+
+/// Per-plan profile: the [`Trace`] rolled up against the plan's static
+/// [`PlanInfo`].
+#[derive(Clone, Debug, Default)]
+pub struct Profile {
+    pub mode: TraceMode,
+    /// Envelope of all instruction spans.
+    pub wall_secs: f64,
+    /// Cost-model flops summed over all recorded calls.
+    pub total_flops: u64,
+    /// Per-instruction rows, sorted by total time, descending.
+    pub instrs: Vec<InstrProfile>,
+    /// Per-level rows, in level order.
+    pub levels: Vec<LevelProfile>,
+    /// Distinct instructions that recorded at least one span.
+    pub covered: usize,
+    /// Executed instructions the plan carries.
+    pub expected: usize,
+    /// Spans lost to ring wrap-around.
+    pub dropped: u64,
+}
+
+impl Profile {
+    /// Roll a trace up against its plan description.
+    pub fn build(trace: &Trace, info: &PlanInfo) -> Profile {
+        let mut per_instr: Vec<(u64, u64)> = Vec::new(); // (calls, ns) by info index
+        per_instr.resize(info.instrs.len(), (0, 0));
+        let mut t_lo = u64::MAX;
+        let mut t_hi = 0u64;
+        for s in trace.spans_of(SpanKind::Instr) {
+            t_lo = t_lo.min(s.t0_ns);
+            t_hi = t_hi.max(s.t1_ns);
+            if let Some(ix) = info.instrs.iter().position(|i| i.pos == s.id) {
+                per_instr[ix].0 += 1;
+                per_instr[ix].1 += s.t1_ns.saturating_sub(s.t0_ns);
+            }
+        }
+        let mut instrs: Vec<InstrProfile> = info
+            .instrs
+            .iter()
+            .zip(&per_instr)
+            .filter(|(_, (calls, _))| *calls > 0)
+            .map(|(i, &(calls, ns))| {
+                let secs = ns as f64 * 1e-9;
+                InstrProfile {
+                    pos: i.pos,
+                    name: i.name.clone(),
+                    level: i.level,
+                    calls,
+                    secs,
+                    flops: i.flops,
+                    gflops: if secs > 0.0 {
+                        (calls as f64 * i.flops as f64) / secs / 1e9
+                    } else {
+                        0.0
+                    },
+                }
+            })
+            .collect();
+        instrs.sort_by(|a, b| b.secs.total_cmp(&a.secs));
+        let total_flops: u64 = instrs.iter().map(|i| i.calls * i.flops).sum();
+
+        let mut levels = Vec::new();
+        for lv in 0..info.levels as u32 {
+            let members: Vec<u32> =
+                info.instrs.iter().filter(|i| i.level == lv).map(|i| i.pos).collect();
+            if members.is_empty() {
+                continue;
+            }
+            let mut lo = u64::MAX;
+            let mut hi = 0u64;
+            let mut busy = 0u64;
+            let mut lanes: Vec<u32> = Vec::new();
+            let mut seen = false;
+            for s in trace.spans_of(SpanKind::Instr).filter(|s| members.contains(&s.id)) {
+                seen = true;
+                lo = lo.min(s.t0_ns);
+                hi = hi.max(s.t1_ns);
+                busy += s.t1_ns.saturating_sub(s.t0_ns);
+                if !lanes.contains(&s.lane) {
+                    lanes.push(s.lane);
+                }
+            }
+            if !seen {
+                continue;
+            }
+            let wall_secs = hi.saturating_sub(lo) as f64 * 1e-9;
+            let busy_secs = busy as f64 * 1e-9;
+            let denom = wall_secs * lanes.len().max(1) as f64;
+            levels.push(LevelProfile {
+                level: lv,
+                instrs: members.len(),
+                wall_secs,
+                busy_secs,
+                lanes_used: lanes.len(),
+                occupancy: if denom > 0.0 { (busy_secs / denom).min(1.0) } else { 1.0 },
+            });
+        }
+
+        Profile {
+            mode: trace.mode,
+            wall_secs: if t_hi > t_lo { (t_hi - t_lo) as f64 * 1e-9 } else { 0.0 },
+            total_flops,
+            covered: instrs.len(),
+            expected: info.instrs.len(),
+            instrs,
+            levels,
+            dropped: trace.dropped,
+        }
+    }
+
+    /// Render the paper-bench-style profile table: a plan summary, the
+    /// top-`k` instructions by time, and per-level occupancy.
+    pub fn render_table(&self, k: usize) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let total_secs: f64 = self.instrs.iter().map(|i| i.secs).sum();
+        let _ = writeln!(
+            out,
+            "profile: {} of {} instructions covered, wall {:.3} ms, {:.3} GFLOP total{}",
+            self.covered,
+            self.expected,
+            self.wall_secs * 1e3,
+            self.total_flops as f64 / 1e9,
+            if self.dropped > 0 {
+                format!(", {} spans dropped", self.dropped)
+            } else {
+                String::new()
+            }
+        );
+        let _ = writeln!(
+            out,
+            "{:>4} {:<28} {:>5} {:>5} {:>10} {:>6} {:>12} {:>9}",
+            "pos", "instr", "level", "calls", "time", "%time", "flops/call", "GFLOP/s"
+        );
+        for i in self.instrs.iter().take(k) {
+            let _ = writeln!(
+                out,
+                "{:>4} {:<28} {:>5} {:>5} {:>9.1}us {:>5.1}% {:>12} {:>9.2}",
+                i.pos,
+                i.name,
+                i.level,
+                i.calls,
+                i.secs * 1e6,
+                if total_secs > 0.0 { 100.0 * i.secs / total_secs } else { 0.0 },
+                i.flops,
+                i.gflops
+            );
+        }
+        if !self.levels.is_empty() {
+            let _ = writeln!(
+                out,
+                "{:>5} {:>6} {:>10} {:>10} {:>5} {:>9}",
+                "level", "instrs", "wall", "busy", "lanes", "occupancy"
+            );
+            for l in &self.levels {
+                let _ = writeln!(
+                    out,
+                    "{:>5} {:>6} {:>9.1}us {:>9.1}us {:>5} {:>8.1}%",
+                    l.level,
+                    l.instrs,
+                    l.wall_secs * 1e6,
+                    l.busy_secs * 1e6,
+                    l.lanes_used,
+                    l.occupancy * 100.0
+                );
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace-event export
+// ---------------------------------------------------------------------------
+
+fn push_json_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Serialize a trace as Chrome trace-event JSON (the `traceEvents`
+/// array format), loadable in Perfetto or `chrome://tracing`. Worker
+/// lanes map to tids, instruction / level / epilogue spans become
+/// complete (`"ph":"X"`) events, and each lane gets a `thread_name`
+/// metadata record.
+pub fn chrome_trace_json(trace: &Trace, info: &PlanInfo) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::from("{\"traceEvents\":[");
+    let mut first = true;
+    let mut sep = |out: &mut String, first: &mut bool| {
+        if !*first {
+            out.push(',');
+        }
+        *first = false;
+        out.push('\n');
+    };
+    for lane in 0..trace.lanes {
+        sep(&mut out, &mut first);
+        let _ = write!(
+            out,
+            "{{\"ph\":\"M\",\"pid\":1,\"tid\":{},\"name\":\"thread_name\",\
+             \"args\":{{\"name\":\"lane {}{}\"}}}}",
+            lane,
+            lane,
+            if lane == 0 { " (caller)" } else { "" }
+        );
+    }
+    for s in &trace.spans {
+        sep(&mut out, &mut first);
+        let (cat, name, flops, level) = match s.kind {
+            SpanKind::Instr => match info.instr(s.id) {
+                Some(i) => ("instr", i.name.clone(), i.flops, i.level),
+                None => ("instr", format!("instr {}", s.id), 0, 0),
+            },
+            SpanKind::Level => ("level", format!("level {}", s.id), 0, s.id),
+            SpanKind::Epilogue => {
+                let name = match info.instr(s.id) {
+                    Some(i) => format!("epilogue of {}", i.name),
+                    None => format!("epilogue of instr {}", s.id),
+                };
+                ("epilogue", name, 0, s.id)
+            }
+        };
+        let _ = write!(
+            out,
+            "{{\"ph\":\"X\",\"pid\":1,\"tid\":{},\"ts\":{:.3},\"dur\":{:.3},\"cat\":\"{}\",\
+             \"name\":",
+            s.lane,
+            s.t0_ns as f64 / 1e3,
+            s.t1_ns.saturating_sub(s.t0_ns) as f64 / 1e3,
+            cat
+        );
+        push_json_str(&mut out, &name);
+        let _ = write!(
+            out,
+            ",\"args\":{{\"pos\":{},\"level\":{},\"flops\":{}}}}}",
+            s.id, level, flops
+        );
+    }
+    let _ = write!(
+        out,
+        "\n],\"displayTimeUnit\":\"ns\",\"otherData\":{{\"backend\":\"{}\",\"mode\":\"{}\",\
+         \"dropped\":{}}}}}",
+        info.backend,
+        trace.mode.name(),
+        trace.dropped
+    );
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(kind: SpanKind, id: u32, lane: u32, t0: u64, t1: u64) -> Span {
+        Span { kind, id, lane, t0_ns: t0, t1_ns: t1 }
+    }
+
+    fn info2() -> PlanInfo {
+        PlanInfo {
+            instrs: vec![
+                InstrInfo { pos: 2, name: "mul".into(), level: 1, flops: 1000, bytes: 80 },
+                InstrInfo { pos: 3, name: "elem tanh".into(), level: 2, flops: 10, bytes: 80 },
+            ],
+            levels: 3,
+            backend: "cpu",
+        }
+    }
+
+    #[test]
+    fn sink_records_resets_and_drains_in_order() {
+        let mut sink = TraceSink::new(TraceMode::Trace, 2, 8);
+        let a = sink.now();
+        sink.record_instr(1, 7, a);
+        let b = sink.now();
+        sink.record_instr(0, 3, b);
+        sink.record_level(0, a);
+        let t = sink.drain();
+        assert_eq!(t.spans.len(), 3);
+        assert_eq!(t.lanes, 2);
+        assert_eq!(t.dropped, 0);
+        assert!(t.spans.windows(2).all(|w| w[0].t0_ns <= w[1].t0_ns));
+        // reset rewinds everything
+        sink.reset();
+        let t = sink.drain();
+        assert!(t.spans.is_empty());
+    }
+
+    #[test]
+    fn profile_mode_skips_level_and_epilogue_spans() {
+        let mut sink = TraceSink::new(TraceMode::Profile, 1, 8);
+        let t0 = sink.now();
+        sink.record_instr(0, 1, t0);
+        sink.record_level(0, t0);
+        sink.record_epilogue(0, 1, t0);
+        let t = sink.drain();
+        assert_eq!(t.spans.len(), 1);
+        assert_eq!(t.spans[0].kind, SpanKind::Instr);
+    }
+
+    #[test]
+    fn ring_wraps_and_counts_drops_instead_of_growing() {
+        let mut sink = TraceSink::new(TraceMode::Profile, 1, 4);
+        for i in 0..10u32 {
+            let t0 = sink.now();
+            sink.record_instr(0, i, t0);
+        }
+        let t = sink.drain();
+        assert_eq!(t.spans.len(), 4, "ring must stay at capacity");
+        assert_eq!(t.dropped, 6);
+        // the survivors are the newest writes, still in order
+        let ids: Vec<u32> = t.spans.iter().map(|s| s.id).collect();
+        assert_eq!(ids, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn out_of_range_lane_counts_overflow() {
+        let mut sink = TraceSink::new(TraceMode::Profile, 1, 4);
+        let t0 = sink.now();
+        sink.record_instr(5, 0, t0);
+        let t = sink.drain();
+        assert!(t.spans.is_empty());
+        assert_eq!(t.dropped, 1);
+    }
+
+    #[test]
+    fn profile_aggregates_time_flops_and_occupancy() {
+        let trace = Trace {
+            mode: TraceMode::Trace,
+            spans: vec![
+                span(SpanKind::Instr, 2, 0, 0, 2_000),
+                span(SpanKind::Instr, 2, 0, 2_000, 4_000),
+                span(SpanKind::Instr, 3, 1, 4_000, 5_000),
+            ],
+            lanes: 2,
+            dropped: 0,
+        };
+        let p = Profile::build(&trace, &info2());
+        assert_eq!(p.covered, 2);
+        assert_eq!(p.expected, 2);
+        assert_eq!(p.total_flops, 2 * 1000 + 10);
+        // sorted by time: the mul (4µs) leads
+        assert_eq!(p.instrs[0].pos, 2);
+        assert_eq!(p.instrs[0].calls, 2);
+        assert!((p.instrs[0].secs - 4e-6).abs() < 1e-12);
+        assert!((p.instrs[0].gflops - 2000.0 / 4e-6 / 1e9).abs() < 1e-9);
+        // one level row per level with executed members + spans
+        assert_eq!(p.levels.len(), 2);
+        assert_eq!(p.levels[0].level, 1);
+        assert_eq!(p.levels[0].lanes_used, 1);
+        assert!((p.levels[0].occupancy - 1.0).abs() < 1e-9);
+        let table = p.render_table(10);
+        assert!(table.contains("mul"));
+        assert!(table.contains("elem tanh"));
+    }
+
+    #[test]
+    fn chrome_json_has_events_metadata_and_escaping() {
+        let mut info = info2();
+        info.instrs[0].name = "mul \"ij,jk->ik\"".into();
+        let trace = Trace {
+            mode: TraceMode::Trace,
+            spans: vec![
+                span(SpanKind::Level, 1, 0, 0, 5_000),
+                span(SpanKind::Instr, 2, 1, 100, 4_900),
+                span(SpanKind::Epilogue, 2, 1, 4_000, 4_800),
+            ],
+            lanes: 2,
+            dropped: 0,
+        };
+        let js = chrome_trace_json(&trace, &info);
+        assert!(js.starts_with("{\"traceEvents\":["));
+        assert!(js.contains("\"ph\":\"X\""));
+        assert!(js.contains("\"ph\":\"M\""));
+        assert!(js.contains("\"cat\":\"level\""));
+        assert!(js.contains("\"cat\":\"epilogue\""));
+        assert!(js.contains("mul \\\"ij,jk->ik\\\""));
+        assert_eq!(js.matches('{').count(), js.matches('}').count());
+    }
+
+    #[test]
+    fn trace_mode_names_round_trip() {
+        for m in [TraceMode::Off, TraceMode::Profile, TraceMode::Trace] {
+            assert_eq!(TraceMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(TraceMode::parse("bogus"), None);
+        assert_eq!(TraceMode::default(), TraceMode::Off);
+    }
+}

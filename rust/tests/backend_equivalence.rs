@@ -20,6 +20,7 @@
 use tensorcalc::eval::{Env, Plan};
 use tensorcalc::exec::{batch_graph, BackendKind, CompiledPlan, EpilogueMode, ExecMemory};
 use tensorcalc::ir::{Graph, NodeId};
+use tensorcalc::obs::TraceMode;
 use tensorcalc::opt::{compact, optimize, OptLevel};
 use tensorcalc::problems::{logistic_regression, matrix_factorization, neural_net};
 use tensorcalc::tensor::Tensor;
@@ -36,8 +37,24 @@ fn check_backends(
     epilogue: EpilogueMode,
     label: &str,
 ) {
-    let cpu = CompiledPlan::with_options(g, roots, true, epilogue, memory, BackendKind::Cpu);
-    let direct = CompiledPlan::with_options(g, roots, true, epilogue, memory, BackendKind::Direct);
+    let cpu = CompiledPlan::with_options(
+        g,
+        roots,
+        true,
+        epilogue,
+        memory,
+        BackendKind::Cpu,
+        TraceMode::Off,
+    );
+    let direct = CompiledPlan::with_options(
+        g,
+        roots,
+        true,
+        epilogue,
+        memory,
+        BackendKind::Direct,
+        TraceMode::Off,
+    );
     assert_eq!(cpu.backend(), BackendKind::Cpu);
     assert_eq!(direct.backend(), BackendKind::Direct);
     // both artifacts lower from the same stream — the direct backend
@@ -198,6 +215,7 @@ fn direct_backend_never_touches_the_pool() {
         EpilogueMode::default(),
         ExecMemory::Pooled,
         BackendKind::Direct,
+        TraceMode::Off,
     );
     direct.validate_memory_plan();
     let got = direct.run(&w.env);

@@ -17,6 +17,7 @@ use tensorcalc::einsum::{einsum, einsum_into, einsum_naive, EinScratch, EinSpec,
 use tensorcalc::eval::{fd_gradient, fd_jacobian, Env, Plan};
 use tensorcalc::exec::{BackendKind, CompiledPlan, EpilogueMode, ExecMemory, PlanCache};
 use tensorcalc::ir::{Elem, Graph, NodeId, Op};
+use tensorcalc::obs::TraceMode;
 use tensorcalc::problems::{logistic_regression, matrix_factorization, neural_net};
 use tensorcalc::tensor::{Tensor, XorShift};
 
@@ -279,6 +280,7 @@ fn fusion_cuts_fresh_pool_allocations_on_deep_elem_chain() {
         EpilogueMode::default(),
         ExecMemory::Pooled,
         BackendKind::default(),
+        TraceMode::Off,
     );
     let unfused = CompiledPlan::with_options(
         &g,
@@ -287,6 +289,7 @@ fn fusion_cuts_fresh_pool_allocations_on_deep_elem_chain() {
         EpilogueMode::default(),
         ExecMemory::Pooled,
         BackendKind::default(),
+        TraceMode::Off,
     );
     let a = fused.run(&env);
     let b = unfused.run(&env);
@@ -372,6 +375,7 @@ fn pool_stops_allocating_after_warmup() {
         EpilogueMode::default(),
         ExecMemory::Pooled,
         BackendKind::default(),
+        TraceMode::Off,
     );
     let first = plan.run(&w.env);
     let cold = plan.pool_stats();

@@ -17,6 +17,7 @@
 use tensorcalc::eval::{Env, Plan};
 use tensorcalc::exec::{BackendKind, CompiledPlan, EpilogueMode, ExecMemory};
 use tensorcalc::ir::{Elem, Graph, NodeId};
+use tensorcalc::obs::TraceMode;
 use tensorcalc::opt::{optimize, OptLevel};
 use tensorcalc::problems::{logistic_regression, matrix_factorization, neural_net};
 use tensorcalc::tensor::Tensor;
@@ -33,6 +34,7 @@ fn check_modes(g: &Graph, roots: &[NodeId], env: &Env, fuse: bool, label: &str) 
         EpilogueMode::default(),
         ExecMemory::Planned,
         BackendKind::default(),
+        TraceMode::Off,
     );
     planned.validate_memory_plan();
     let pooled = CompiledPlan::with_options(
@@ -42,6 +44,7 @@ fn check_modes(g: &Graph, roots: &[NodeId], env: &Env, fuse: bool, label: &str) 
         EpilogueMode::default(),
         ExecMemory::Pooled,
         BackendKind::default(),
+        TraceMode::Off,
     );
     let a = planned.run(env);
     let b = pooled.run(env);
@@ -150,6 +153,7 @@ fn epilogue_modes_bit_identical_under_planned() {
         EpilogueMode::InTile,
         ExecMemory::Planned,
         BackendKind::default(),
+        TraceMode::Off,
     );
     let two_pass = CompiledPlan::with_options(
         &g,
@@ -158,6 +162,7 @@ fn epilogue_modes_bit_identical_under_planned() {
         EpilogueMode::TwoPass,
         ExecMemory::Planned,
         BackendKind::default(),
+        TraceMode::Off,
     );
     assert!(in_tile.fused_count() >= 1);
     let a = in_tile.run(&env);
@@ -208,6 +213,7 @@ fn pooled_mode_still_counts_its_locks() {
         EpilogueMode::default(),
         ExecMemory::Pooled,
         BackendKind::default(),
+        TraceMode::Off,
     );
     let _ = plan.run(&w.env);
     let st = plan.pool_stats();
@@ -237,6 +243,7 @@ fn packing_reuses_dead_bytes_and_chains_in_place() {
         EpilogueMode::default(),
         ExecMemory::Planned,
         BackendKind::default(),
+        TraceMode::Off,
     );
     planned.validate_memory_plan();
     let st = planned.pool_stats();
@@ -255,6 +262,7 @@ fn packing_reuses_dead_bytes_and_chains_in_place() {
         EpilogueMode::default(),
         ExecMemory::Pooled,
         BackendKind::default(),
+        TraceMode::Off,
     );
     let a = planned.run(&env);
     let b = pooled.run(&env);
@@ -278,6 +286,7 @@ fn packing_reuses_dead_bytes_and_chains_in_place() {
         EpilogueMode::default(),
         ExecMemory::Planned,
         BackendKind::default(),
+        TraceMode::Off,
     );
     p2.validate_memory_plan();
     let st2 = p2.pool_stats();

@@ -1,0 +1,320 @@
+//! Pins for the observability subsystem (`obs`): span coverage and
+//! nesting in the traced modes, Chrome-trace export fidelity, profile
+//! agreement across backends — and, most load-bearing, the
+//! `TraceMode::Off` overhead contract: an untraced plan allocates no
+//! sink, takes no lock, and serves **bit-identical** outputs to both a
+//! traced twin and a plan built through the pre-instrumentation
+//! constructors (the PR 5 zero-alloc counter assertions, extended to
+//! the tracing layer).
+
+use std::collections::HashMap;
+
+use tensorcalc::eval::Env;
+use tensorcalc::exec::{BackendKind, CompiledPlan, EpilogueMode, ExecMemory};
+use tensorcalc::ir::{Elem, Graph, NodeId};
+use tensorcalc::obs::{chrome_trace_json, Profile, SpanKind, Trace, TraceMode};
+use tensorcalc::problems::{logistic_regression, neural_net};
+use tensorcalc::tensor::Tensor;
+
+/// Compile the logreg value+gradient workload with explicit backend and
+/// trace mode (planned memory, fusion on — the serving configuration).
+fn logreg_plan(
+    m: usize,
+    n: usize,
+    backend: BackendKind,
+    trace: TraceMode,
+) -> (CompiledPlan, Env) {
+    let mut w = logistic_regression(m, n);
+    let grad = w.gradient();
+    let plan = plan_with(&w.g, &[w.loss, grad], EpilogueMode::default(), backend, trace);
+    (plan, w.env)
+}
+
+fn plan_with(
+    g: &Graph,
+    roots: &[NodeId],
+    epilogue: EpilogueMode,
+    backend: BackendKind,
+    trace: TraceMode,
+) -> CompiledPlan {
+    CompiledPlan::with_options(
+        g,
+        roots,
+        true,
+        epilogue,
+        ExecMemory::default(),
+        backend,
+        trace,
+    )
+}
+
+/// Instruction-span ids → occurrence counts for one drained trace.
+fn instr_counts(trace: &Trace) -> HashMap<u32, u64> {
+    let mut counts = HashMap::new();
+    for s in trace.spans_of(SpanKind::Instr) {
+        *counts.entry(s.id).or_insert(0u64) += 1;
+    }
+    counts
+}
+
+/// Profile mode: every executed instruction of the plan appears exactly
+/// once in the drained trace — no more, no less — on both backends, and
+/// the rolled-up `Profile` reports full coverage with no drops.
+#[test]
+fn profile_covers_every_executed_instruction_exactly_once() {
+    for backend in [BackendKind::Cpu, BackendKind::Direct] {
+        let (plan, env) = logreg_plan(48, 12, backend, TraceMode::Profile);
+        let (outs, trace) = plan.run_traced(&env);
+        assert_eq!(outs.len(), 2);
+        assert_eq!(trace.mode, TraceMode::Profile);
+        assert_eq!(trace.dropped, 0, "{:?}: pre-sized rings must not wrap", backend);
+
+        let info = plan.plan_info();
+        assert_eq!(info.instrs.len(), plan.executed_instrs());
+        let counts = instr_counts(&trace);
+        assert_eq!(
+            counts.len(),
+            plan.executed_instrs(),
+            "{:?}: every executed instruction must be spanned",
+            backend
+        );
+        for i in &info.instrs {
+            assert_eq!(
+                counts.get(&i.pos),
+                Some(&1),
+                "{:?}: instruction {} ({}) must record exactly one span",
+                backend,
+                i.pos,
+                i.name
+            );
+        }
+
+        let prof = Profile::build(&trace, &info);
+        assert_eq!(prof.covered, prof.expected);
+        assert_eq!(prof.dropped, 0);
+        assert!(prof.wall_secs > 0.0);
+        // every instruction row renders; the table is the CLI surface
+        let table = prof.render_table(info.instrs.len());
+        for i in &info.instrs {
+            assert!(table.contains(&i.name), "{:?}: table lost {}", backend, i.name);
+        }
+    }
+}
+
+/// Warm traced re-runs stay covered: the sink is reset, not
+/// re-allocated, and still records every instruction each run.
+#[test]
+fn warm_traced_reruns_reset_the_sink() {
+    let (plan, env) = logreg_plan(32, 8, BackendKind::Cpu, TraceMode::Profile);
+    let (_, first) = plan.run_traced(&env);
+    for _ in 0..3 {
+        let (_, again) = plan.run_traced(&env);
+        assert_eq!(
+            instr_counts(&again).len(),
+            instr_counts(&first).len(),
+            "a warm traced run must re-cover the full instruction stream"
+        );
+        assert_eq!(again.dropped, 0);
+    }
+    let st = plan.pool_stats();
+    assert_eq!(st.trace_allocs, 1, "one sink per run state, reused across runs: {:?}", st);
+}
+
+/// The Chrome-trace export carries exactly the instruction stream: one
+/// `"cat":"instr"` complete event per executed instruction, metadata
+/// per lane, balanced braces, and the plan's backend in `otherData`.
+#[test]
+fn chrome_trace_json_matches_the_instruction_stream() {
+    for backend in [BackendKind::Cpu, BackendKind::Direct] {
+        let (plan, env) = logreg_plan(48, 12, backend, TraceMode::Trace);
+        let (_, trace) = plan.run_traced(&env);
+        let info = plan.plan_info();
+        let js = chrome_trace_json(&trace, &info);
+
+        assert!(js.starts_with("{\"traceEvents\":["), "{:?}: not a traceEvents object", backend);
+        assert!(js.trim_end().ends_with('}'));
+        assert_eq!(js.matches('{').count(), js.matches('}').count(), "{:?}", backend);
+        assert_eq!(js.matches('[').count(), js.matches(']').count(), "{:?}", backend);
+        assert_eq!(
+            js.matches("\"cat\":\"instr\"").count(),
+            plan.executed_instrs(),
+            "{:?}: one instr event per executed instruction",
+            backend
+        );
+        assert_eq!(
+            js.matches("\"cat\":\"level\"").count(),
+            trace.spans_of(SpanKind::Level).count(),
+            "{:?}",
+            backend
+        );
+        assert_eq!(js.matches("\"ph\":\"M\"").count(), trace.lanes);
+        assert!(js.contains(&format!("\"backend\":\"{}\"", info.backend)));
+        assert!(js.contains("\"mode\":\"trace\""));
+        // every instruction position survives the export
+        for i in &info.instrs {
+            let needle = format!("\"pos\":{}", i.pos);
+            assert!(js.contains(&needle), "{:?}: lost pos {}", backend, i.pos);
+        }
+    }
+}
+
+/// Both backends execute the same lowered stream, so their profiles
+/// must agree exactly on the cost model's totals.
+#[test]
+fn cpu_and_direct_profiles_agree_on_flop_totals() {
+    let mut w = neural_net(6, 4, 10);
+    let h = w.hessian();
+    let mut totals = Vec::new();
+    for backend in [BackendKind::Cpu, BackendKind::Direct] {
+        let plan =
+            plan_with(&w.g, &[w.loss, h], EpilogueMode::default(), backend, TraceMode::Profile);
+        let (_, trace) = plan.run_traced(&w.env);
+        let prof = Profile::build(&trace, &plan.plan_info());
+        assert_eq!(prof.covered, prof.expected, "{:?}", backend);
+        totals.push(prof.total_flops);
+    }
+    assert!(totals[0] > 0, "the cost model must attribute work to this plan");
+    assert_eq!(totals[0], totals[1], "backends disagree on total flops");
+}
+
+/// Full-timeline mode: every instruction span nests inside the span of
+/// the level that scheduled it, on both backends.
+#[test]
+fn trace_mode_spans_nest_within_their_levels() {
+    for backend in [BackendKind::Cpu, BackendKind::Direct] {
+        let (plan, env) = logreg_plan(48, 12, backend, TraceMode::Trace);
+        let (_, trace) = plan.run_traced(&env);
+        let info = plan.plan_info();
+        let level_of: HashMap<u32, u32> = info.instrs.iter().map(|i| (i.pos, i.level)).collect();
+        let levels: HashMap<u32, (u64, u64)> = trace
+            .spans_of(SpanKind::Level)
+            .map(|s| (s.id, (s.t0_ns, s.t1_ns)))
+            .collect();
+        assert!(!levels.is_empty(), "{:?}: Trace mode must record level spans", backend);
+        for s in trace.spans_of(SpanKind::Instr) {
+            let lv = level_of[&s.id];
+            let (l0, l1) = levels[&lv];
+            assert!(
+                l0 <= s.t0_ns && s.t1_ns <= l1,
+                "{:?}: instr {} [{}, {}] escapes level {} [{}, {}]",
+                backend,
+                s.id,
+                s.t0_ns,
+                s.t1_ns,
+                lv,
+                l0,
+                l1
+            );
+        }
+    }
+}
+
+/// Two-pass epilogues show up as sub-spans nested inside the carrying
+/// contraction's instruction span (cpu backend; the direct backend
+/// bakes epilogues into its closures and records no sub-span).
+#[test]
+fn two_pass_epilogue_spans_nest_in_their_instruction() {
+    let n = 64usize;
+    let mut g = Graph::new();
+    let x = g.var("X", &[n, n]);
+    let wv = g.var("W", &[n, n]);
+    let xw = g.matmul(x, wv);
+    let t = g.elem(Elem::Tanh, xw);
+    let one = g.constant(1.0, &[n, n]);
+    let s = g.add(t, one);
+    let y = g.hadamard(s, xw);
+    let mut env = Env::new();
+    env.insert("X", Tensor::randn(&[n, n], 5));
+    env.insert("W", Tensor::randn(&[n, n], 6));
+
+    let plan = plan_with(&g, &[y], EpilogueMode::TwoPass, BackendKind::Cpu, TraceMode::Trace);
+    let (_, trace) = plan.run_traced(&env);
+    let epilogues: Vec<_> = trace.spans_of(SpanKind::Epilogue).copied().collect();
+    assert!(!epilogues.is_empty(), "TwoPass + fusion must produce epilogue spans");
+    for e in &epilogues {
+        let host = trace
+            .spans_of(SpanKind::Instr)
+            .find(|s| s.id == e.id)
+            .expect("epilogue span without its carrying instruction");
+        assert!(
+            host.t0_ns <= e.t0_ns && e.t1_ns <= host.t1_ns,
+            "epilogue of instr {} escapes its instruction span",
+            e.id
+        );
+        assert_eq!(host.lane, e.lane, "the second pass runs on the recording lane");
+    }
+}
+
+/// The overhead contract. An untraced plan must (a) never allocate a
+/// trace sink, (b) keep the PR 5 steady state — one cold arena
+/// allocation, zero pool locks — across many warm runs, and (c) serve
+/// outputs bit-identical to a Profile-mode twin *and* to a plan built
+/// through the pre-instrumentation constructor path.
+#[test]
+fn off_mode_allocates_nothing_and_stays_bit_identical() {
+    let (off, env) = logreg_plan(48, 12, BackendKind::Cpu, TraceMode::Off);
+    assert_eq!(off.trace_mode(), TraceMode::Off);
+    let baseline = off.run(&env);
+    for _ in 0..20 {
+        let again = off.run(&env);
+        for (a, b) in baseline.iter().zip(&again) {
+            assert_eq!(a.data(), b.data(), "untraced warm re-run drifted");
+        }
+    }
+    let st = off.pool_stats();
+    assert_eq!(st.trace_allocs, 0, "Off mode must never allocate a sink: {:?}", st);
+    assert_eq!(st.arena_allocs, 1, "steady state regressed to re-allocating: {:?}", st);
+    assert_eq!(st.pool_locks, 0, "steady state took the pool mutex: {:?}", st);
+
+    // run_traced on an Off plan degrades to a plain run + empty trace
+    let (outs, trace) = off.run_traced(&env);
+    assert!(trace.spans.is_empty());
+    for (a, b) in baseline.iter().zip(&outs) {
+        assert_eq!(a.data(), b.data());
+    }
+
+    // tracing is read-only: a Profile twin computes the same bits
+    let (profiled, _) = logreg_plan(48, 12, BackendKind::Cpu, TraceMode::Profile);
+    let traced_out = profiled.run(&env);
+    for (a, b) in baseline.iter().zip(&traced_out) {
+        assert_eq!(a.data(), b.data(), "Profile mode perturbed the computation");
+    }
+
+    // and the pre-PR constructor compiles to the same results
+    let mut w = logistic_regression(48, 12);
+    let grad = w.gradient();
+    let legacy = CompiledPlan::new(&w.g, &[w.loss, grad]).run(&w.env);
+    for (a, b) in baseline.iter().zip(&legacy) {
+        assert_eq!(a.data(), b.data(), "Off-mode plan diverged from the legacy constructor");
+    }
+}
+
+/// The plan cache keys on trace mode: asking for a traced plan must not
+/// hand back (or overwrite) the untraced artifact.
+#[test]
+fn plan_cache_separates_trace_modes() {
+    use std::sync::Arc;
+    use tensorcalc::exec::global_plan_cache;
+    use tensorcalc::opt::OptLevel;
+
+    let mut w = logistic_regression(24, 6);
+    let grad = w.gradient();
+    let roots = [w.loss, grad];
+    let get = |trace: TraceMode| {
+        global_plan_cache().get_or_compile_opts(
+            &w.g,
+            &roots,
+            OptLevel::Full,
+            ExecMemory::default(),
+            BackendKind::default(),
+            trace,
+        )
+    };
+    let off = get(TraceMode::Off);
+    let prof = get(TraceMode::Profile);
+    assert!(!Arc::ptr_eq(&off, &prof), "cache conflated trace modes");
+    assert_eq!(off.trace_mode(), TraceMode::Off);
+    assert_eq!(prof.trace_mode(), TraceMode::Profile);
+    assert!(Arc::ptr_eq(&off, &get(TraceMode::Off)), "same-mode lookup must hit");
+    assert!(Arc::ptr_eq(&prof, &get(TraceMode::Profile)));
+}

@@ -13,6 +13,7 @@ use tensorcalc::einsum::EinSpec;
 use tensorcalc::eval::{Env, Plan};
 use tensorcalc::exec::{batch_graph, global_plan_cache, BackendKind, ExecMemory};
 use tensorcalc::ir::{Elem, Graph, NodeId};
+use tensorcalc::obs::TraceMode;
 use tensorcalc::opt::{compact, optimize, OptLevel};
 use tensorcalc::problems::{logistic_regression, neural_net};
 use tensorcalc::tensor::Tensor;
@@ -44,6 +45,7 @@ fn pin_batched_against_sequential(g: &Graph, roots: &[NodeId], seed0: u64, bszs:
         OptLevel::None,
         ExecMemory::Planned,
         BackendKind::default(),
+        TraceMode::Off,
     );
     let interp = Plan::new(g, roots);
 
@@ -64,6 +66,7 @@ fn pin_batched_against_sequential(g: &Graph, roots: &[NodeId], seed0: u64, bszs:
             OptLevel::None,
             ExecMemory::Planned,
             BackendKind::default(),
+            TraceMode::Off,
         );
 
         let mut envs = Vec::new();

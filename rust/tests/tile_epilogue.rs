@@ -12,6 +12,7 @@ use tensorcalc::einsum::{einsum_naive, gemm_into_flat, EinSpec};
 use tensorcalc::eval::{Env, Plan};
 use tensorcalc::exec::{BackendKind, CompiledPlan, EpilogueMode, ExecMemory};
 use tensorcalc::ir::{Elem, Graph, NodeId};
+use tensorcalc::obs::TraceMode;
 use tensorcalc::tensor::Tensor;
 
 /// Shapes chosen to hit every kernel path: the flat small/skinny
@@ -95,6 +96,7 @@ fn in_tile_epilogue_pinned_on_all_shapes() {
             EpilogueMode::InTile,
             ExecMemory::Planned,
             BackendKind::default(),
+            TraceMode::Off,
         );
         let two_pass = CompiledPlan::with_options(
             &g,
@@ -103,6 +105,7 @@ fn in_tile_epilogue_pinned_on_all_shapes() {
             EpilogueMode::TwoPass,
             ExecMemory::Planned,
             BackendKind::default(),
+            TraceMode::Off,
         );
         let unfused = CompiledPlan::with_fusion(&g, &[y], false);
         assert!(
@@ -153,6 +156,7 @@ fn in_tile_epilogue_on_matvec_fast_path() {
         EpilogueMode::InTile,
         ExecMemory::Planned,
         BackendKind::default(),
+        TraceMode::Off,
     );
     let two_pass = CompiledPlan::with_options(
         &g,
@@ -161,6 +165,7 @@ fn in_tile_epilogue_on_matvec_fast_path() {
         EpilogueMode::TwoPass,
         ExecMemory::Planned,
         BackendKind::default(),
+        TraceMode::Off,
     );
     assert!(in_tile.fused_count() >= 1);
     let a = in_tile.run(&env);
@@ -193,6 +198,7 @@ fn in_tile_epilogue_on_batched_contraction() {
         EpilogueMode::InTile,
         ExecMemory::Planned,
         BackendKind::default(),
+        TraceMode::Off,
     );
     let two_pass = CompiledPlan::with_options(
         &g,
@@ -201,6 +207,7 @@ fn in_tile_epilogue_on_batched_contraction() {
         EpilogueMode::TwoPass,
         ExecMemory::Planned,
         BackendKind::default(),
+        TraceMode::Off,
     );
     assert!(in_tile.fused_count() >= 1);
     let va = in_tile.run(&env);
@@ -230,6 +237,7 @@ fn in_tile_epilogue_on_permuted_output_falls_back() {
         EpilogueMode::InTile,
         ExecMemory::Planned,
         BackendKind::default(),
+        TraceMode::Off,
     );
     let two_pass = CompiledPlan::with_options(
         &g,
@@ -238,6 +246,7 @@ fn in_tile_epilogue_on_permuted_output_falls_back() {
         EpilogueMode::TwoPass,
         ExecMemory::Planned,
         BackendKind::default(),
+        TraceMode::Off,
     );
     let va = in_tile.run(&env);
     let vb = two_pass.run(&env);

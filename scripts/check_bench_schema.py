@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Validate the perf-trajectory JSON artifacts against their schemas.
+"""Validate the perf-trajectory and observability artifacts.
 
 CI runs this right after `scripts/bench_baseline.sh` (which writes
 `BENCH_exec.json`, schema `tensorcalc-bench-rows/v1`) and
@@ -8,15 +8,28 @@ CI runs this right after `scripts/bench_baseline.sh` (which writes
 the row shape — renamed keys, stringified numbers, a dropped dimension —
 fails the build instead of corrupting the downstream trajectory plots.
 
+It also validates the PR 8 observability exports:
+
+* Chrome trace-event JSON from `tensorcalc derive --trace json=PATH`
+  (recognised by a top-level "traceEvents" array): every event needs
+  str name/ph, int pid/tid, numeric ts, and complete ("X") events a
+  non-negative dur; at least one complete event must be present.
+* Prometheus text exposition from `tensorcalc serve --prom PATH`
+  (recognised by a `.prom` / `.txt` extension or non-JSON content):
+  each non-comment line must be `name[{labels}] value` with a float
+  value, and at least one sample must be present.
+
 Usage: check_bench_schema.py [FILE ...]
 
 With no arguments, checks whichever of ./BENCH_exec.json and
-./BENCH_serve.json exist (at least one must). The schema is picked per
-file from its "schema" field. Stdlib only.
+./BENCH_serve.json exist (at least one must). The format is picked per
+file from its content ("schema" / "traceEvents" field, else Prometheus
+text). Stdlib only.
 """
 
 import json
 import numbers
+import re
 import sys
 
 # field -> required type, per schema. bool is excluded from the numeric
@@ -71,14 +84,87 @@ def check_row(row, fields, where):
     return errors
 
 
+# one Prometheus exposition sample: metric name, optional {labels},
+# then a float (inf/nan allowed — histograms emit "+Inf" only in label
+# values, which the label body swallows)
+PROM_SAMPLE = re.compile(
+    r"^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^{}]*\})?\s+[-+]?"
+    r"([0-9]*\.?[0-9]+([eE][-+]?[0-9]+)?|[iI]nf|[nN]a[nN])$"
+)
+
+
+def check_chrome_trace(doc, path):
+    """Chrome trace-event JSON (the object-with-traceEvents format)."""
+    errors = []
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return ["%s: 'traceEvents' is %s, expected array" % (path, type(events).__name__)]
+    if not events:
+        return ["%s: 'traceEvents' is empty — the trace recorded nothing" % path]
+    complete = 0
+    for i, ev in enumerate(events):
+        where = "%s: traceEvents[%d]" % (path, i)
+        if not isinstance(ev, dict):
+            errors.append("%s: event is %s, expected object" % (where, type(ev).__name__))
+            continue
+        for key, want in (("name", str), ("ph", str), ("pid", int), ("tid", int)):
+            val = ev.get(key)
+            if isinstance(val, bool) or not isinstance(val, want):
+                errors.append(
+                    "%s: field %r is %s (%r), expected %s"
+                    % (where, key, type(val).__name__, val, type_name(want))
+                )
+        if ev.get("ph") == "X":
+            complete += 1
+            for key in ("ts", "dur"):
+                val = ev.get(key)
+                if isinstance(val, bool) or not isinstance(val, numbers.Real):
+                    errors.append("%s: complete event needs numeric %r, got %r" % (where, key, val))
+                elif key == "dur" and val < 0:
+                    errors.append("%s: negative dur %r" % (where, val))
+    if complete == 0:
+        errors.append("%s: no complete ('ph':'X') events — nothing was spanned" % path)
+    if not errors:
+        print("%s: OK (chrome-trace, %d events, %d complete)" % (path, len(events), complete))
+    return errors
+
+
+def check_prometheus(text, path):
+    """Prometheus text exposition: comments + `name[{labels}] value`."""
+    errors = []
+    samples = 0
+    for lineno, line in enumerate(text.splitlines(), 1):
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        if PROM_SAMPLE.match(line):
+            samples += 1
+        else:
+            errors.append("%s:%d: malformed sample line %r" % (path, lineno, line))
+    if samples == 0:
+        errors.append("%s: no samples — the exposition is empty" % path)
+    if not errors:
+        print("%s: OK (prometheus, %d samples)" % (path, samples))
+    return errors
+
+
 def check_file(path):
     try:
         with open(path) as f:
-            doc = json.load(f)
-    except (OSError, ValueError) as e:
+            raw = f.read()
+    except OSError as e:
         return ["%s: %s" % (path, e)]
+    try:
+        doc = json.loads(raw)
+    except ValueError as e:
+        # not JSON: the only non-JSON artifact is the Prometheus text dump
+        if path.endswith(".json"):
+            return ["%s: %s" % (path, e)]
+        return check_prometheus(raw, path)
     if not isinstance(doc, dict):
         return ["%s: top level is %s, expected object" % (path, type(doc).__name__)]
+    if "traceEvents" in doc:
+        return check_chrome_trace(doc, path)
     schema = doc.get("schema")
     if schema not in SCHEMAS:
         return [
