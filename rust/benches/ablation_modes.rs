@@ -12,6 +12,10 @@
 //!
 //! * **gemm** — the tiled/packed kernel vs the flat pre-tiling kernel on
 //!   epilogue-free contractions (tiling must not regress these),
+//! * **simd** — the runtime-dispatched SIMD register microkernel vs the
+//!   forced-scalar tier (`TC_SIMD=off`) on the same tiled path: the
+//!   two are bit-identical by contract, so the rows measure pure
+//!   codegen speedup,
 //! * **epilogue** — fused chains riding on a contraction:
 //!   `EpilogueMode::InTile` (applied inside the GEMM tiles, no second
 //!   output sweep) vs `EpilogueMode::TwoPass` vs the unfused executor,
@@ -132,6 +136,50 @@ fn main() {
         rows.push(Row { figure: "gemm", problem: "matmul", n, mode: "flat (pre-tiling)".into(), secs: t, runs });
     }
     print_table("GEMM kernel ablation — tiled/packed vs flat (epilogue-free)", &rows);
+    all_rows.extend(rows.iter().cloned());
+
+    // ---- simd: dispatched microkernel vs forced scalar ----
+    // same tiled/packed path, same blocking; only the register
+    // microkernel (and the fused-interpreter codegen tier) differs.
+    // Scalar and SIMD are bit-identical by contract, asserted here on
+    // live data before timing.
+    let native = tensorcalc::util::simd::active_isa();
+    let mut rows = Vec::new();
+    for &n in &[128usize, 256, 512] {
+        let a = Tensor::randn(&[n, n], 21);
+        let b = Tensor::randn(&[n, n], 22);
+        let mut c = vec![0.0; n * n];
+        let mut outs: Vec<Vec<f64>> = Vec::new();
+        for (label, isa) in [
+            (format!("dispatched ({})", native.name()), native),
+            ("forced scalar".to_string(), tensorcalc::util::simd::Isa::Scalar),
+        ] {
+            let prev = tensorcalc::util::simd::set_isa(isa);
+            c.fill(0.0);
+            gemm_into(a.data(), b.data(), &mut c, n, n, n);
+            outs.push(c.clone());
+            let (t, runs) = time_median(
+                || {
+                    c.fill(0.0);
+                    gemm_into(a.data(), b.data(), &mut c, n, n, n);
+                    std::hint::black_box(&c);
+                },
+                3,
+                secs,
+            );
+            tensorcalc::util::simd::set_isa(prev);
+            rows.push(Row { figure: "simd", problem: "matmul", n, mode: label, secs: t, runs });
+        }
+        assert_eq!(outs[0], outs[1], "scalar and {} GEMM diverged at n={}", native.name(), n);
+    }
+    print_table("SIMD ablation — dispatched microkernel vs forced scalar", &rows);
+    for &n in &[128usize, 256, 512] {
+        let simd = rows.iter().find(|r| r.n == n && r.mode.starts_with("dispatched"));
+        let scal = rows.iter().find(|r| r.n == n && r.mode.starts_with("forced"));
+        if let (Some(v), Some(s)) = (simd, scal) {
+            println!("  n={:<5} {} is {:>6.2}× vs scalar", n, native.name(), s.secs / v.secs);
+        }
+    }
     all_rows.extend(rows.iter().cloned());
 
     // ---- epilogue: in-tile vs two-pass vs unfused on a GEMM-fed chain ----

@@ -1,19 +1,29 @@
 //! Blocked, packed, tiled GEMM — the inner kernel every contraction
-//! reduces to — with an in-tile epilogue hook.
+//! reduces to — with an in-tile epilogue hook and a runtime-dispatched
+//! SIMD register microkernel.
 //!
 //! `C[m,n] += Σ_k A[m,k] · B[k,n]` over row-major contiguous buffers.
 //!
-//! The tiled path is the classic three-level blocking: a
-//! [`GEMM_MR`]×[`GEMM_NR`] register microkernel accumulates into local
-//! scalars, an [`GEMM_MC`]×[`GEMM_KC`] block of A is packed into
-//! microkernel order (L2-resident, per-thread scratch sized to the
-//! call), and B is packed **once per GEMM** into
-//! [`GEMM_KC`]×[`GEMM_NC`] chunks ([`pack_b_all`]) that the microkernel
-//! streams through — on the parallel path all row bands share the one
-//! packed B read-only. Packing pads partial tiles with zeros so the
-//! microkernel always runs full constant-trip loops (auto-vectorised);
-//! the store loop masks the padding back off. Large GEMMs parallelise
-//! over row bands with scoped threads, exactly like the flat kernel.
+//! The tiled path is the classic three-level blocking: an `MR×NR`
+//! register microkernel accumulates into registers, an `MC×KC` block of
+//! A is packed into microkernel order (L2-resident, per-thread scratch
+//! sized to the call), and B is packed **once per GEMM** into `KC×NC`
+//! chunks ([`pack_b_all`]) that the microkernel streams through — on
+//! the parallel path all row bands share the one packed B read-only.
+//! Packing pads partial tiles with zeros so the microkernel always runs
+//! full constant-trip loops; the store loop masks the padding back off.
+//! Large GEMMs parallelise over row bands with scoped threads, exactly
+//! like the flat kernel.
+//!
+//! The blocking geometry and the microkernel are no longer compile-time
+//! choices: [`gemm_into_epi`] resolves a [`crate::util::simd::GemmCfg`]
+//! at entry — the process-wide [`crate::util::simd::Blocking`] (from
+//! `TC_GEMM_BLOCKING` or the startup autotuner; defaults [`GEMM_MR`] ×
+//! [`GEMM_NR`] tiles in [`GEMM_MC`]/[`GEMM_KC`]/[`GEMM_NC`] blocks) plus
+//! the microkernel dispatched for the active ISA (`TC_SIMD`, see
+//! [`crate::util::simd`]). Scalar and SIMD kernels accumulate each
+//! output element in the same IEEE order (separate mul/add, no FMA), so
+//! the dispatch choice never changes results bitwise.
 //!
 //! **In-tile epilogue** ([`TileEpilogue`]): callers can pass a per-tile
 //! post-processing hook that is applied to every output element exactly
@@ -31,6 +41,7 @@
 //! (below [`GEMM_TILED_MIN_FLOP`] packing would dominate) and the
 //! tiled-vs-flat ablation dimension in `benches/`.
 
+use crate::util::simd::{self, Blocking, GemmCfg, MicroKernel};
 use crate::util::{
     num_threads, par_band_zip, with_pack_scratch, GEMM_KC, GEMM_MC, GEMM_MR, GEMM_NC, GEMM_NR,
     GEMM_TILED_MIN_FLOP, PAR_GEMM_MIN_FLOP,
@@ -119,12 +130,16 @@ pub fn gemm_into_epi<E: TileEpilogue>(
         epi.apply(c_base, c);
         return;
     }
-    // Matvec (n == 1 < GEMM_NR), small, or skinny shapes: the
-    // packed/tiled path cannot pay for itself — run the flat reference
-    // kernel (which has its own matvec fast path) and sweep the output
-    // once. For every shape in this class the output is tiny relative
-    // to the operand reads, so the extra sweep is noise.
-    if m < GEMM_MR || n < GEMM_NR || m * n * k < GEMM_TILED_MIN_FLOP {
+    // Resolve blocking + microkernel *before* borrowing this thread's
+    // pack scratch: a first-call autotune runs probe GEMMs that use the
+    // scratch themselves, which must not observe an open borrow.
+    let cfg = simd::gemm_cfg();
+    // Matvec (n == 1 < NR), small, or skinny shapes: the packed/tiled
+    // path cannot pay for itself — run the flat reference kernel (which
+    // has its own matvec fast path) and sweep the output once. For
+    // every shape in this class the output is tiny relative to the
+    // operand reads, so the extra sweep is noise.
+    if m < cfg.blk.mr || n < cfg.blk.nr || m * n * k < GEMM_TILED_MIN_FLOP {
         gemm_into_flat(a, b, c, m, k, n);
         epi.apply(c_base, c);
         return;
@@ -140,21 +155,42 @@ pub fn gemm_into_epi<E: TileEpilogue>(
             // shared read-only by the row bands — packing it inside
             // each band would multiply that memory traffic by the
             // thread count. Each band packs only its own A blocks.
-            pack_b_all(b, &mut pack.b, k, n);
+            pack_b_all(b, &mut pack.b, k, n, cfg.blk);
             let bpack: &[f64] = &pack.b;
             par_band_zip(c, n, a, k, |off, cb, ab| {
                 let rows = cb.len() / n;
                 with_pack_scratch(|wpack| {
-                    tiled_body(ab, bpack, cb, rows, k, n, c_base + off * n, epi, &mut wpack.a)
+                    tiled_body(
+                        ab,
+                        bpack,
+                        cb,
+                        rows,
+                        k,
+                        n,
+                        c_base + off * n,
+                        epi,
+                        &mut wpack.a,
+                        &cfg,
+                    )
                 });
             });
         });
     } else {
         with_pack_scratch(|pack| {
-            pack_b_all(b, &mut pack.b, k, n);
-            tiled_body(a, &pack.b, c, m, k, n, c_base, epi, &mut pack.a)
+            pack_b_all(b, &mut pack.b, k, n, cfg.blk);
+            tiled_body(a, &pack.b, c, m, k, n, c_base, epi, &mut pack.a, &cfg)
         });
     }
+}
+
+/// Padded width (in f64 columns) of the packed B panel starting at
+/// column `jc`: the panel covers `min(nc, n - jc)` live columns, rounded
+/// up to whole `nr`-wide microtiles. The **single source of truth** for
+/// the panel geometry — the pre-pass that sizes the pack buffer, the
+/// packing loop and the consuming tile loop all call this, so the three
+/// can never disagree about where a ragged edge panel ends.
+pub(crate) fn b_panel_width(n: usize, jc: usize, nc: usize, nr: usize) -> usize {
+    nc.min(n - jc).div_ceil(nr) * nr
 }
 
 /// Pack every `(jc, pc)` block of B once, in the exact `(jc outer, pc
@@ -162,21 +198,20 @@ pub fn gemm_into_epi<E: TileEpilogue>(
 /// per GEMM, not once per row band. The scratch only ever grows (no
 /// clear-and-zero: [`pack_b`] overwrites every element of its chunk,
 /// padding included, and readers use the same chunk offsets).
-fn pack_b_all(b: &[f64], bpack: &mut Vec<f64>, k: usize, n: usize) {
-    let mut padded_n = 0usize;
-    for jc in (0..n).step_by(GEMM_NC) {
-        padded_n += GEMM_NC.min(n - jc).div_ceil(GEMM_NR) * GEMM_NR;
-    }
+fn pack_b_all(b: &[f64], bpack: &mut Vec<f64>, k: usize, n: usize, blk: Blocking) {
+    let Blocking { nr, kc: kc_blk, nc: nc_blk, .. } = blk;
+    let padded_n: usize =
+        (0..n).step_by(nc_blk).map(|jc| b_panel_width(n, jc, nc_blk, nr)).sum();
     if bpack.len() < padded_n * k {
         bpack.resize(padded_n * k, 0.0);
     }
     let mut off = 0usize;
-    for jc in (0..n).step_by(GEMM_NC) {
-        let nc = GEMM_NC.min(n - jc);
-        for pc in (0..k).step_by(GEMM_KC) {
-            let kc = GEMM_KC.min(k - pc);
-            let len = nc.div_ceil(GEMM_NR) * GEMM_NR * kc;
-            pack_b(b, &mut bpack[off..off + len], pc, kc, jc, nc, n);
+    for jc in (0..n).step_by(nc_blk) {
+        let nc = nc_blk.min(n - jc);
+        for pc in (0..k).step_by(kc_blk) {
+            let kc = kc_blk.min(k - pc);
+            let len = b_panel_width(n, jc, nc_blk, nr) * kc;
+            pack_b(b, &mut bpack[off..off + len], pc, kc, jc, nc, n, nr);
             off += len;
         }
     }
@@ -186,9 +221,9 @@ fn pack_b_all(b: &[f64], bpack: &mut Vec<f64>, k: usize, n: usize) {
 /// (KC k-blocks) → `ic` (MC row blocks), reading pre-packed B chunks
 /// (see [`pack_b_all`]) and packing A once per `(ic, pc)` into `apack`
 /// (grown to the call's actual block size, then reused), then sweeps
-/// the microkernel over the packed panels. On the *last* k-block each
-/// finished `mc×nc` output block gets the epilogue applied row by row,
-/// while it is cache-hot.
+/// the dispatched microkernel over the packed panels. On the *last*
+/// k-block each finished `mc×nc` output block gets the epilogue applied
+/// row by row, while it is cache-hot.
 #[allow(clippy::too_many_arguments)]
 fn tiled_body<E: TileEpilogue>(
     a: &[f64],
@@ -200,29 +235,32 @@ fn tiled_body<E: TileEpilogue>(
     c_base: usize,
     epi: &E,
     apack: &mut Vec<f64>,
+    cfg: &GemmCfg,
 ) {
-    let a_need = GEMM_MC.min(m).div_ceil(GEMM_MR) * GEMM_MR * GEMM_KC.min(k);
+    let Blocking { mr: mr_blk, nr: nr_blk, mc: mc_blk, kc: kc_blk, nc: nc_blk } = cfg.blk;
+    let ukr = cfg.ukr;
+    let a_need = mc_blk.min(m).div_ceil(mr_blk) * mr_blk * kc_blk.min(k);
     if apack.len() < a_need {
         apack.resize(a_need, 0.0);
     }
     let mut b_off = 0usize;
-    for jc in (0..n).step_by(GEMM_NC) {
-        let nc = GEMM_NC.min(n - jc);
-        for pc in (0..k).step_by(GEMM_KC) {
-            let kc = GEMM_KC.min(k - pc);
+    for jc in (0..n).step_by(nc_blk) {
+        let nc = nc_blk.min(n - jc);
+        for pc in (0..k).step_by(kc_blk) {
+            let kc = kc_blk.min(k - pc);
             let last_k = pc + kc == k;
-            let bchunk = &bpack[b_off..b_off + nc.div_ceil(GEMM_NR) * GEMM_NR * kc];
+            let bchunk = &bpack[b_off..b_off + b_panel_width(n, jc, nc_blk, nr_blk) * kc];
             b_off += bchunk.len();
-            for ic in (0..m).step_by(GEMM_MC) {
-                let mc = GEMM_MC.min(m - ic);
-                pack_a(a, apack, ic, mc, pc, kc, k);
-                for jr in (0..nc).step_by(GEMM_NR) {
-                    let nr = GEMM_NR.min(nc - jr);
-                    let bp = &bchunk[(jr / GEMM_NR) * kc * GEMM_NR..][..kc * GEMM_NR];
-                    for ir in (0..mc).step_by(GEMM_MR) {
-                        let mr = GEMM_MR.min(mc - ir);
-                        let ap = &apack[(ir / GEMM_MR) * kc * GEMM_MR..][..kc * GEMM_MR];
-                        microkernel(ap, bp, c, n, ic + ir, jc + jr, mr, nr, kc);
+            for ic in (0..m).step_by(mc_blk) {
+                let mc = mc_blk.min(m - ic);
+                pack_a(a, apack, ic, mc, pc, kc, k, mr_blk);
+                for jr in (0..nc).step_by(nr_blk) {
+                    let nr = nr_blk.min(nc - jr);
+                    let bp = &bchunk[(jr / nr_blk) * kc * nr_blk..][..kc * nr_blk];
+                    for ir in (0..mc).step_by(mr_blk) {
+                        let mr = mr_blk.min(mc - ir);
+                        let ap = &apack[(ir / mr_blk) * kc * mr_blk..][..kc * mr_blk];
+                        ukr(ap, bp, c, n, ic + ir, jc + jr, mr, nr, kc);
                     }
                 }
                 if last_k {
@@ -237,13 +275,23 @@ fn tiled_body<E: TileEpilogue>(
 }
 
 /// Pack `A[ic..ic+mc, pc..pc+kc]` (row stride `lda`) into panels of
-/// [`GEMM_MR`] rows: `ap[panel][kk][r]`, zero-padded to full panels.
-fn pack_a(a: &[f64], ap: &mut [f64], ic: usize, mc: usize, pc: usize, kc: usize, lda: usize) {
+/// `mr_blk` rows: `ap[panel][kk][r]`, zero-padded to full panels.
+#[allow(clippy::too_many_arguments)]
+fn pack_a(
+    a: &[f64],
+    ap: &mut [f64],
+    ic: usize,
+    mc: usize,
+    pc: usize,
+    kc: usize,
+    lda: usize,
+    mr_blk: usize,
+) {
     let mut dst = 0usize;
-    for ir in (0..mc).step_by(GEMM_MR) {
-        let mr = GEMM_MR.min(mc - ir);
+    for ir in (0..mc).step_by(mr_blk) {
+        let mr = mr_blk.min(mc - ir);
         for kk in 0..kc {
-            for r in 0..GEMM_MR {
+            for r in 0..mr_blk {
                 ap[dst] = if r < mr { a[(ic + ir + r) * lda + pc + kk] } else { 0.0 };
                 dst += 1;
             }
@@ -252,14 +300,24 @@ fn pack_a(a: &[f64], ap: &mut [f64], ic: usize, mc: usize, pc: usize, kc: usize,
 }
 
 /// Pack `B[pc..pc+kc, jc..jc+nc]` (row stride `ldb`) into panels of
-/// [`GEMM_NR`] columns: `bp[panel][kk][j]`, zero-padded to full panels.
-fn pack_b(b: &[f64], bp: &mut [f64], pc: usize, kc: usize, jc: usize, nc: usize, ldb: usize) {
+/// `nr_blk` columns: `bp[panel][kk][j]`, zero-padded to full panels.
+#[allow(clippy::too_many_arguments)]
+fn pack_b(
+    b: &[f64],
+    bp: &mut [f64],
+    pc: usize,
+    kc: usize,
+    jc: usize,
+    nc: usize,
+    ldb: usize,
+    nr_blk: usize,
+) {
     let mut dst = 0usize;
-    for jr in (0..nc).step_by(GEMM_NR) {
-        let nr = GEMM_NR.min(nc - jr);
+    for jr in (0..nc).step_by(nr_blk) {
+        let nr = nr_blk.min(nc - jr);
         for kk in 0..kc {
             let src = (pc + kk) * ldb + jc + jr;
-            for j in 0..GEMM_NR {
+            for j in 0..nr_blk {
                 bp[dst] = if j < nr { b[src + j] } else { 0.0 };
                 dst += 1;
             }
@@ -267,40 +325,27 @@ fn pack_b(b: &[f64], bp: &mut [f64], pc: usize, kc: usize, jc: usize, nc: usize,
     }
 }
 
-/// The register microkernel: accumulate a full [`GEMM_MR`]×[`GEMM_NR`]
-/// tile over `kc` packed steps in local accumulators (constant-trip
-/// loops — LLVM keeps the tile in SIMD registers), then add the valid
-/// `mr×nr` part into `C` at `(row0, col0)` with row stride `ldc`.
-#[allow(clippy::too_many_arguments)]
-#[inline]
-fn microkernel(
-    ap: &[f64],
-    bp: &[f64],
-    c: &mut [f64],
-    ldc: usize,
-    row0: usize,
-    col0: usize,
-    mr: usize,
-    nr: usize,
-    kc: usize,
-) {
-    let mut acc = [[0.0f64; GEMM_NR]; GEMM_MR];
-    for kk in 0..kc {
-        let av = &ap[kk * GEMM_MR..kk * GEMM_MR + GEMM_MR];
-        let bv = &bp[kk * GEMM_NR..kk * GEMM_NR + GEMM_NR];
-        for r in 0..GEMM_MR {
-            let ar = av[r];
-            for j in 0..GEMM_NR {
-                acc[r][j] += ar * bv[j];
-            }
+/// Time one `(blocking, microkernel)` candidate on a fixed `m×k×n`
+/// probe GEMM: pack B, run [`tiled_body`], take the best of two reps.
+/// Called by the startup autotuner in [`crate::util::simd`] — it drives
+/// [`tiled_body`] directly with an explicit config (never `gemm_into`,
+/// which would re-enter the blocking `OnceLock` mid-initialization).
+pub(crate) fn tune_probe(blk: Blocking, ukr: MicroKernel, m: usize, k: usize, n: usize) -> f64 {
+    let a: Vec<f64> = (0..m * k).map(|i| ((i % 13) as f64) * 0.125 - 0.75).collect();
+    let b: Vec<f64> = (0..k * n).map(|i| ((i % 7) as f64) * 0.25 - 0.875).collect();
+    let mut c = vec![0.0f64; m * n];
+    let cfg = GemmCfg { blk, ukr };
+    let mut best = f64::INFINITY;
+    with_pack_scratch(|pack| {
+        for _ in 0..2 {
+            let t0 = std::time::Instant::now();
+            pack_b_all(&b, &mut pack.b, k, n, blk);
+            tiled_body(&a, &pack.b, &mut c, m, k, n, 0, &NoEpilogue, &mut pack.a, &cfg);
+            best = best.min(t0.elapsed().as_secs_f64());
         }
-    }
-    for r in 0..mr {
-        let crow = &mut c[(row0 + r) * ldc + col0..(row0 + r) * ldc + col0 + nr];
-        for (cv, av) in crow.iter_mut().zip(acc[r][..nr].iter()) {
-            *cv += av;
-        }
-    }
+    });
+    std::hint::black_box(&c);
+    best
 }
 
 /// The pre-tiling flat kernel (k-blocked, column-blocked, row-parallel,
@@ -376,6 +421,7 @@ pub fn gemm_into_flat(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n
 mod tests {
     use super::*;
     use crate::tensor::XorShift;
+    use crate::util::simd::{kernel_for, supported_isas, Isa, SUPPORTED_TILES, TUNE_CANDIDATES};
 
     fn naive(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
         let mut c = vec![0.0; m * n];
@@ -501,5 +547,104 @@ mod tests {
         });
         gemm_into_epi(&[], &[], &mut c, 2, 0, 2, 0, &epi);
         assert_eq!(c, vec![11.0, 12.0, 13.0, 14.0]);
+    }
+
+    /// The hoisted [`b_panel_width`] helper and the pack/consume loops
+    /// must agree on ragged edge panels: every live B element lands at
+    /// the offset the consumer computes, and padding is exactly zero.
+    #[test]
+    fn panel_geometry_ragged_edges() {
+        // spot-check the helper against hand-computed widths
+        assert_eq!(b_panel_width(17, 0, 512, 8), 24); // 17 live → 3 tiles
+        assert_eq!(b_panel_width(512, 0, 512, 8), 512); // exact block
+        assert_eq!(b_panel_width(513, 512, 512, 8), 8); // 1 live col
+        assert_eq!(b_panel_width(1030, 1024, 512, 8), 8); // 6 live cols
+        assert_eq!(b_panel_width(1030, 512, 512, 8), 512); // interior block
+        assert_eq!(b_panel_width(1, 0, 512, 4), 4);
+
+        let blk = Blocking::DEFAULT;
+        for (k, n) in [(1usize, 1usize), (3, 17), (300, 1030), (257, 513)] {
+            let b: Vec<f64> = (0..k * n).map(|i| (i as f64) * 0.5 + 1.0).collect();
+            let mut bpack = Vec::new();
+            pack_b_all(&b, &mut bpack, k, n, blk);
+            // walk the chunks exactly as tiled_body does
+            let mut off = 0usize;
+            for jc in (0..n).step_by(blk.nc) {
+                let nc = blk.nc.min(n - jc);
+                for pc in (0..k).step_by(blk.kc) {
+                    let kc = blk.kc.min(k - pc);
+                    let width = b_panel_width(n, jc, blk.nc, blk.nr);
+                    let chunk = &bpack[off..off + width * kc];
+                    off += chunk.len();
+                    for jr in (0..nc).step_by(blk.nr) {
+                        let live = blk.nr.min(nc - jr);
+                        let panel = &chunk[(jr / blk.nr) * kc * blk.nr..][..kc * blk.nr];
+                        for kk in 0..kc {
+                            for j in 0..blk.nr {
+                                let got = panel[kk * blk.nr + j];
+                                let want = if j < live {
+                                    b[(pc + kk) * n + jc + jr + j]
+                                } else {
+                                    0.0
+                                };
+                                assert_eq!(
+                                    got, want,
+                                    "k={k} n={n} jc={jc} pc={pc} jr={jr} kk={kk} j={j}"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+            // a fresh pack buffer is sized exactly by the pre-pass, so
+            // the consumer walk must end exactly at its end
+            assert_eq!(off, bpack.len(), "k={k} n={n}: consumer walk != packed size");
+        }
+    }
+
+    /// Every autotune candidate geometry, driven through the real packed
+    /// tiled path with every supported ISA's microkernel, must match the
+    /// naive reference — and all ISAs must agree bitwise with scalar.
+    #[test]
+    fn every_tune_candidate_matches_naive() {
+        let (m, k, n) = (37usize, 300usize, 29usize);
+        let a = rand_vec(m * k, 11);
+        let b = rand_vec(k * n, 12);
+        let want = naive(&a, &b, m, k, n);
+        for cand in TUNE_CANDIDATES {
+            let mut scalar_out: Option<Vec<f64>> = None;
+            for isa in supported_isas() {
+                let ukr = kernel_for(isa, cand.mr, cand.nr).unwrap();
+                let cfg = GemmCfg { blk: cand, ukr };
+                let mut c = vec![0.0f64; m * n];
+                let mut apack = Vec::new();
+                let mut bpack = Vec::new();
+                pack_b_all(&b, &mut bpack, k, n, cand);
+                tiled_body(&a, &bpack, &mut c, m, k, n, 0, &NoEpilogue, &mut apack, &cfg);
+                for (g, w) in c.iter().zip(&want) {
+                    assert!(
+                        (g - w).abs() < 1e-9,
+                        "{cand:?} {} diverged from naive: {g} vs {w}",
+                        isa.name()
+                    );
+                }
+                match &scalar_out {
+                    None => {
+                        assert_eq!(isa, Isa::Scalar, "supported_isas must lead with scalar");
+                        scalar_out = Some(c);
+                    }
+                    Some(sc) => assert_eq!(
+                        &c,
+                        sc,
+                        "{cand:?}: {} not bit-identical to scalar",
+                        isa.name()
+                    ),
+                }
+            }
+        }
+        // sanity: the candidate tile set stays inside the kernel tables
+        for cand in TUNE_CANDIDATES {
+            assert!(SUPPORTED_TILES.contains(&(cand.mr, cand.nr)));
+        }
     }
 }

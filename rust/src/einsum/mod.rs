@@ -58,5 +58,6 @@ mod spec;
 
 pub use exec::{einsum, einsum_naive, reduce_sum};
 pub use gemm::{gemm, gemm_into, gemm_into_epi, gemm_into_flat, EpiFn, NoEpilogue, TileEpilogue};
+pub(crate) use gemm::tune_probe;
 pub use plan::{einsum_into, EinScratch, EinsumPlan, ScratchSizes};
 pub use spec::{EinSpec, Label};

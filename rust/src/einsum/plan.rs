@@ -32,6 +32,7 @@ use super::exec::has_distinct;
 use super::gemm::{gemm_into_epi, NoEpilogue, TileEpilogue};
 use super::spec::{EinSpec, Label};
 use crate::tensor::{row_major_strides, Tensor};
+use crate::util::simd::{mul_into, mul_scalar_into, scale_assign};
 use crate::util::{par_band_zip2, PAR_BATCH_SLICE_MAX_FLOP, PAR_BATCH_TOTAL_MIN_FLOP};
 
 /// Reusable scratch for [`einsum_into`] / [`EinsumPlan::run`]: two
@@ -528,9 +529,7 @@ impl EinsumPlan {
         debug_assert_eq!(out_data.len(), self.out_shape.iter().product::<usize>());
         match &self.kind {
             Kind::Elementwise => {
-                for ((o, &x), &y) in out_data.iter_mut().zip(a).zip(b) {
-                    *o = x * y;
-                }
+                mul_into(out_data, a, b);
                 epi.apply(0, out_data);
             }
             Kind::ScaleA { a_gather, b_sum } => {
@@ -538,9 +537,7 @@ impl EinsumPlan {
                 let mut s = [0.0f64];
                 b_sum.run(b, &mut s, idx);
                 if s[0] != 1.0 {
-                    for o in out_data.iter_mut() {
-                        *o *= s[0];
-                    }
+                    scale_assign(out_data, s[0]);
                 }
                 epi.apply(0, out_data);
             }
@@ -549,9 +546,7 @@ impl EinsumPlan {
                 let mut s = [0.0f64];
                 a_sum.run(a, &mut s, idx);
                 if s[0] != 1.0 {
-                    for o in out_data.iter_mut() {
-                        *o *= s[0];
-                    }
+                    scale_assign(out_data, s[0]);
                 }
                 epi.apply(0, out_data);
             }
@@ -681,9 +676,7 @@ pub(super) fn batched_gemm_epi<E: TileEpilogue>(
         while off < c.len() {
             let end = (off + EPI_BLOCK).min(c.len());
             let cb = &mut c[off..end];
-            for ((cv, av), bv) in cb.iter_mut().zip(&a[off..end]).zip(&b[off..end]) {
-                *cv = av * bv;
-            }
+            mul_into(cb, &a[off..end], &b[off..end]);
             epi.apply(off, cb);
             off = end;
         }
@@ -693,9 +686,7 @@ pub(super) fn batched_gemm_epi<E: TileEpilogue>(
             let bv = b[bi];
             let arow = &a[bi * m..(bi + 1) * m];
             let crow = &mut c[bi * m..(bi + 1) * m];
-            for (cv, av) in crow.iter_mut().zip(arow) {
-                *cv = av * bv;
-            }
+            mul_scalar_into(crow, arow, bv);
             epi.apply(bi * m, crow);
         }
     } else {

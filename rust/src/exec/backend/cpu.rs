@@ -12,6 +12,7 @@
 use crate::einsum::{EinScratch, EpiFn, NoEpilogue};
 use crate::eval::Env;
 use crate::tensor::Tensor;
+use crate::util::simd::{add_assign, add_into};
 use crate::util::worker_pool;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -122,9 +123,7 @@ impl CpuBackend {
                 let ta = values[*a].as_ref().expect("operand not computed").tensor();
                 let tb = values[*b].as_ref().expect("operand not computed").tensor();
                 let mut buf = self.lock_pool().acquire(ta.len());
-                for ((o, &x), &y) in buf.iter_mut().zip(ta.data()).zip(tb.data()) {
-                    *o = x + y;
-                }
+                add_into(&mut buf, ta.data(), tb.data());
                 Val::Owned(Tensor::new(shape, buf))
             }
             Instr::Mul(a, b, plan, epi) => {
@@ -354,24 +353,10 @@ fn exec_node_planned(lw: &Lowered, p: usize, ex: &ArenaExec<'_>, lane: u32) {
         Instr::Var { .. } | Instr::Static(_) => unreachable!(),
         Instr::Add(a, b) => match lw.inplace_arg[p] {
             // out aliases operand a: its values are already in place
-            Some(0) => {
-                for (o, &y) in out.iter_mut().zip(src_slice(ex, *b)) {
-                    *o += y;
-                }
-            }
+            Some(0) => add_assign(out, src_slice(ex, *b)),
             // out aliases operand b
-            Some(_) => {
-                for (o, &x) in out.iter_mut().zip(src_slice(ex, *a)) {
-                    *o += x;
-                }
-            }
-            None => {
-                let ta = src_slice(ex, *a);
-                let tb = src_slice(ex, *b);
-                for ((o, &x), &y) in out.iter_mut().zip(ta).zip(tb) {
-                    *o = x + y;
-                }
-            }
+            Some(_) => add_assign(out, src_slice(ex, *a)),
+            None => add_into(out, src_slice(ex, *a), src_slice(ex, *b)),
         },
         Instr::Elem(f, a) => match lw.inplace_arg[p] {
             Some(_) => {

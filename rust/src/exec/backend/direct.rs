@@ -27,6 +27,7 @@
 
 use crate::einsum::{EpiFn, NoEpilogue};
 use crate::ir::Elem;
+use crate::util::simd::{add_assign, add_into};
 
 use super::super::lower::{Instr, Lowered};
 use super::super::EpilogueMode;
@@ -154,24 +155,16 @@ fn compile_instr(lw: &Lowered, p: usize) -> Option<DirectOp> {
                 // out aliases operand a: its values are already in place
                 Some(0) => boxed(move |ex| {
                     let out = unsafe { slot_mut(ex, slot) };
-                    for (o, &y) in out.iter_mut().zip(src_slice(ex, b)) {
-                        *o += y;
-                    }
+                    add_assign(out, src_slice(ex, b));
                 }),
                 // out aliases operand b
                 Some(_) => boxed(move |ex| {
                     let out = unsafe { slot_mut(ex, slot) };
-                    for (o, &x) in out.iter_mut().zip(src_slice(ex, a)) {
-                        *o += x;
-                    }
+                    add_assign(out, src_slice(ex, a));
                 }),
                 None => boxed(move |ex| {
                     let out = unsafe { slot_mut(ex, slot) };
-                    let ta = src_slice(ex, a);
-                    let tb = src_slice(ex, b);
-                    for ((o, &x), &y) in out.iter_mut().zip(ta).zip(tb) {
-                        *o = x + y;
-                    }
+                    add_into(out, src_slice(ex, a), src_slice(ex, b));
                 }),
             }
         }

@@ -68,6 +68,9 @@ pub(crate) enum FusedSrc<'s> {
 }
 
 impl FusedSrc<'_> {
+    /// Per-element read — the reference the chunked interpreter's tests
+    /// pin against (the hot paths read whole lane blocks instead).
+    #[cfg(test)]
     #[inline]
     pub(crate) fn at(&self, i: usize) -> f64 {
         match self {
@@ -77,13 +80,24 @@ impl FusedSrc<'_> {
     }
 }
 
+/// Lane-block width of the chunked fused interpreter: each postfix step
+/// runs over this many elements at once (a full AVX-512 f64 vector, two
+/// AVX2 vectors, four NEON vectors).
+pub(crate) const FUSED_LANES: usize = 8;
+
+/// Resolve `Load` lanes `[off, off + dst.len())` from one operand slot.
+#[inline(always)]
+fn fill_src(src: &FusedSrc, off: usize, dst: &mut [f64]) {
+    match src {
+        FusedSrc::Slice(s) => dst.copy_from_slice(&s[off..off + dst.len()]),
+        FusedSrc::Scalar(v) => dst.fill(*v),
+    }
+}
+
 impl FusedKernel {
     /// `out[i] = program(srcs, i)`; `Load(k)` reads `srcs[k]`.
     pub(crate) fn run(&self, srcs: &[FusedSrc], out: &mut [f64]) {
-        let mut stack = [0.0f64; FUSED_MAX_STACK];
-        for (i, slot) in out.iter_mut().enumerate() {
-            *slot = self.eval_one(&mut stack, |k| srcs[k].at(i));
-        }
+        self.eval_chunks(out, |k, off, dst, _carrier| fill_src(&srcs[k as usize], off, dst));
     }
 
     /// In-place epilogue on a producer's output: `Load(0)` reads the
@@ -96,17 +110,13 @@ impl FusedKernel {
     /// output element `base + j`, so operand slots resolve correctly
     /// from inside GEMM tiles, row bands and batch slices.
     pub(crate) fn run_inplace_at(&self, buf: &mut [f64], base: usize, rest: &[FusedSrc]) {
-        let mut stack = [0.0f64; FUSED_MAX_STACK];
-        for (j, slot) in buf.iter_mut().enumerate() {
-            let carrier = *slot;
-            *slot = self.eval_one(&mut stack, |k| {
-                if k == 0 {
-                    carrier
-                } else {
-                    rest[k - 1].at(base + j)
-                }
-            });
-        }
+        self.eval_chunks(buf, |k, off, dst, carrier| {
+            if k == 0 {
+                dst.copy_from_slice(&carrier[..dst.len()]);
+            } else {
+                fill_src(&rest[k as usize - 1], base + off, dst);
+            }
+        });
     }
 
     /// The planned executor's in-place form: operand slot `arg` aliases
@@ -115,30 +125,103 @@ impl FusedKernel {
     /// (`srcs[arg]` is a dummy, never touched). Bit-identical to
     /// [`FusedKernel::run`] with the aliased operand materialised.
     pub(crate) fn run_inplace_arg(&self, buf: &mut [f64], arg: u32, srcs: &[FusedSrc]) {
-        let arg = arg as usize;
-        let mut stack = [0.0f64; FUSED_MAX_STACK];
-        for (i, out) in buf.iter_mut().enumerate() {
-            let carrier = *out;
-            *out = self.eval_one(&mut stack, |k| {
-                if k == arg {
-                    carrier
-                } else {
-                    srcs[k].at(i)
+        self.eval_chunks(buf, |k, off, dst, carrier| {
+            if k == arg {
+                dst.copy_from_slice(&carrier[..dst.len()]);
+            } else {
+                fill_src(&srcs[k as usize], off, dst);
+            }
+        });
+    }
+
+    /// Dispatch wrapper around [`FusedKernel::eval_chunks_body`]: on
+    /// x86-64 with AVX2 active, run the identical body compiled with
+    /// AVX2 enabled (the lane loops are pure per-lane maps, so the wider
+    /// codegen is bit-identical to the portable build — dispatch only
+    /// changes speed).
+    #[inline]
+    fn eval_chunks<F: Fn(u32, usize, &mut [f64], &[f64])>(&self, out: &mut [f64], fill: F) {
+        #[cfg(target_arch = "x86_64")]
+        if matches!(
+            crate::util::simd::active_isa(),
+            crate::util::simd::Isa::Avx2 | crate::util::simd::Isa::Avx512
+        ) {
+            // SAFETY: the dispatch tier guarantees AVX2 is present.
+            unsafe { self.eval_chunks_avx2(out, fill) };
+            return;
+        }
+        self.eval_chunks_body(out, fill);
+    }
+
+    /// # Safety
+    /// Requires AVX2; only called when the active ISA tier implies it.
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    unsafe fn eval_chunks_avx2<F: Fn(u32, usize, &mut [f64], &[f64])>(
+        &self,
+        out: &mut [f64],
+        fill: F,
+    ) {
+        self.eval_chunks_body(out, fill)
+    }
+
+    /// The one postfix interpreter every execution form shares, blocked
+    /// over [`FUSED_LANES`]-wide chunks: `fill(k, off, dst, carrier)`
+    /// resolves `Load(k)` for lanes `[off, off + dst.len())` (slice
+    /// block, broadcast scalar, or the in-place carrier lanes, depending
+    /// on the caller's slot convention). `Add`/`Mul` run full
+    /// constant-trip lane loops — on a ragged tail chunk the stale lanes
+    /// past `dst.len()` compute garbage that is never stored back, which
+    /// is harmless for IEEE arithmetic. `Un` applies the *same* scalar
+    /// function per lane as the per-element reference, so lane blocking
+    /// never changes results bitwise.
+    #[inline(always)]
+    fn eval_chunks_body<F: Fn(u32, usize, &mut [f64], &[f64])>(&self, out: &mut [f64], fill: F) {
+        let mut stack = [[0.0f64; FUSED_LANES]; FUSED_MAX_STACK];
+        let mut carrier = [0.0f64; FUSED_LANES];
+        let n = out.len();
+        let mut off = 0usize;
+        while off < n {
+            let l = FUSED_LANES.min(n - off);
+            carrier[..l].copy_from_slice(&out[off..off + l]);
+            let mut sp = 0usize;
+            for op in &self.ops {
+                match op {
+                    FusedOp::Load(k) => {
+                        fill(*k, off, &mut stack[sp][..l], &carrier);
+                        sp += 1;
+                    }
+                    FusedOp::Un(f) => {
+                        for v in stack[sp - 1][..l].iter_mut() {
+                            *v = f.apply(*v);
+                        }
+                    }
+                    FusedOp::Add => {
+                        sp -= 1;
+                        let (lo, hi) = stack.split_at_mut(sp);
+                        for (a, &b) in lo[sp - 1].iter_mut().zip(hi[0].iter()) {
+                            *a += b;
+                        }
+                    }
+                    FusedOp::Mul => {
+                        sp -= 1;
+                        let (lo, hi) = stack.split_at_mut(sp);
+                        for (a, &b) in lo[sp - 1].iter_mut().zip(hi[0].iter()) {
+                            *a *= b;
+                        }
+                    }
                 }
-            });
+            }
+            debug_assert_eq!(sp, 1, "fused program must leave exactly one value");
+            out[off..off + l].copy_from_slice(&stack[0][..l]);
+            off += l;
         }
     }
 
-    /// The one postfix interpreter every execution form shares: `load`
-    /// resolves `Load(k)` (per-element slice read, broadcast scalar, or
-    /// the in-place carrier value, depending on the caller's slot
-    /// convention).
-    #[inline]
-    fn eval_one<L: Fn(usize) -> f64>(
-        &self,
-        stack: &mut [f64; FUSED_MAX_STACK],
-        load: L,
-    ) -> f64 {
+    /// Per-element reference interpreter — the oracle the chunked tests
+    /// pin [`FusedKernel::eval_chunks_body`] against bitwise.
+    #[cfg(test)]
+    fn eval_one<L: Fn(usize) -> f64>(&self, stack: &mut [f64; FUSED_MAX_STACK], load: L) -> f64 {
         let mut sp = 0usize;
         for op in &self.ops {
             match op {
@@ -778,5 +861,134 @@ pub(crate) fn lower(
         inplace_arg,
         instr_flops: flops,
         trace,
+    }
+}
+
+#[cfg(test)]
+mod fused_tests {
+    use super::*;
+    use crate::tensor::XorShift;
+
+    /// Random postfix programs (always stack-valid, ending with one
+    /// value) over `n_args` operand slots.
+    fn random_program(rng: &mut XorShift, n_args: usize) -> FusedKernel {
+        let elems = [Elem::Exp, Elem::Tanh, Elem::Relu, Elem::Neg, Elem::Square];
+        let mut ops = vec![FusedOp::Load(rng.below(n_args) as u32)];
+        let mut depth = 1usize;
+        for _ in 0..(2 + rng.below(12)) {
+            match rng.below(4) {
+                0 if depth < FUSED_MAX_STACK - 1 => {
+                    ops.push(FusedOp::Load(rng.below(n_args) as u32));
+                    depth += 1;
+                }
+                1 if depth >= 2 => {
+                    ops.push(FusedOp::Add);
+                    depth -= 1;
+                }
+                2 if depth >= 2 => {
+                    ops.push(FusedOp::Mul);
+                    depth -= 1;
+                }
+                _ => ops.push(FusedOp::Un(elems[rng.below(elems.len())])),
+            }
+        }
+        while depth > 1 {
+            ops.push(if rng.below(2) == 0 { FusedOp::Add } else { FusedOp::Mul });
+            depth -= 1;
+        }
+        FusedKernel { ops }
+    }
+
+    fn rand_vec(rng: &mut XorShift, n: usize) -> Vec<f64> {
+        (0..n).map(|_| rng.next_f64() * 2.0 - 1.0).collect()
+    }
+
+    /// The chunked lane interpreter (whichever tier is dispatched) must
+    /// reproduce the per-element reference bitwise, across all three
+    /// execution forms, including ragged tails and broadcast scalars.
+    #[test]
+    fn chunked_interpreter_bit_identical_to_reference() {
+        let mut rng = XorShift::new(42);
+        for case in 0..60u64 {
+            let n_args = 1 + (case % 3) as usize;
+            let kernel = random_program(&mut rng, n_args);
+            // lengths straddling FUSED_LANES boundaries, incl. 0 and 1
+            let len = [0usize, 1, 7, 8, 9, 16, 61][(case % 7) as usize];
+            let slices: Vec<Vec<f64>> = (0..n_args).map(|_| rand_vec(&mut rng, len)).collect();
+            let scalar = rng.next_f64();
+            let srcs: Vec<FusedSrc> = slices
+                .iter()
+                .enumerate()
+                .map(|(k, s)| {
+                    if k == n_args - 1 && case % 2 == 0 {
+                        FusedSrc::Scalar(scalar)
+                    } else {
+                        FusedSrc::Slice(s)
+                    }
+                })
+                .collect();
+
+            // run(): fresh output
+            let mut want = vec![0.0f64; len];
+            let mut stack = [0.0f64; FUSED_MAX_STACK];
+            for (i, w) in want.iter_mut().enumerate() {
+                *w = kernel.eval_one(&mut stack, |k| srcs[k].at(i));
+            }
+            let mut got = vec![0.0f64; len];
+            kernel.run(&srcs, &mut got);
+            assert_eq!(got, want, "run() diverged (case {case}, len {len})");
+
+            // run_inplace_at(): slot 0 is the carrier, offset base
+            let base = 3usize;
+            let rest = &srcs[..n_args.saturating_sub(1)];
+            let carrier0 = rand_vec(&mut rng, len);
+            // rest slots index from `base`, so back them with longer data
+            let long: Vec<Vec<f64>> =
+                (0..rest.len()).map(|_| rand_vec(&mut rng, len + base)).collect();
+            let rest_srcs: Vec<FusedSrc> =
+                long.iter().map(|s| FusedSrc::Slice(s)).collect();
+            let mut want_ip = carrier0.clone();
+            for (j, w) in want_ip.iter_mut().enumerate() {
+                let carrier = *w;
+                *w = kernel.eval_one(&mut stack, |k| {
+                    if k == 0 {
+                        carrier
+                    } else if k - 1 < rest_srcs.len() {
+                        rest_srcs[k - 1].at(base + j)
+                    } else {
+                        carrier
+                    }
+                });
+            }
+            // only valid when the program touches existing slots
+            if kernel.ops.iter().all(|op| match op {
+                FusedOp::Load(k) => (*k as usize) <= rest_srcs.len(),
+                _ => true,
+            }) {
+                let mut got_ip = carrier0.clone();
+                kernel.run_inplace_at(&mut got_ip, base, &rest_srcs);
+                if rest_srcs.len() + 1 >= n_args {
+                    assert_eq!(got_ip, want_ip, "run_inplace_at diverged (case {case})");
+                }
+            }
+
+            // run_inplace_arg(): slot `arg` aliases the output
+            let arg = (case % n_args as u64) as u32;
+            let carrier1 = rand_vec(&mut rng, len);
+            let mut want_arg = carrier1.clone();
+            for (i, w) in want_arg.iter_mut().enumerate() {
+                let carrier = *w;
+                *w = kernel.eval_one(&mut stack, |k| {
+                    if k == arg as usize {
+                        carrier
+                    } else {
+                        srcs[k].at(i)
+                    }
+                });
+            }
+            let mut got_arg = carrier1.clone();
+            kernel.run_inplace_arg(&mut got_arg, arg, &srcs);
+            assert_eq!(got_arg, want_arg, "run_inplace_arg diverged (case {case})");
+        }
     }
 }

@@ -9,6 +9,10 @@
 //!                   [--trace off|profile|json=PATH]
 //!                             profile = per-instruction table,
 //!                             json    = Chrome trace-event file
+//!
+//! Every subcommand accepts `--simd off|avx2|avx512|neon` to force the
+//! kernel dispatch tier (same values as the `TC_SIMD` env var; the
+//! blocking geometry takes `TC_GEMM_BLOCKING="MR,NR,MC,KC,NC"`).
 //! tensorcalc bench fig2|fig3|newton [--sizes a,b,c] [--secs S] [--full]
 //! tensorcalc artifacts [--dir D]            list + smoke-run AOT artifacts
 //! tensorcalc serve [--requests N] [--batch B] [--backend cpu|direct]
@@ -81,12 +85,27 @@ impl Args {
             }
         }
     }
+
+    /// Apply `--simd TIER` (force the kernel dispatch tier) before any
+    /// plan compiles; errors on unknown names or unsupported CPUs.
+    fn apply_simd(&self) -> Result<()> {
+        if let Some(s) = self.get("simd") {
+            let isa = tensorcalc::util::simd::Isa::parse(s)
+                .ok_or_else(|| anyhow!("unknown --simd {} (off|avx2|avx512|neon)", s))?;
+            if !isa.supported() {
+                bail!("--simd {}: this CPU does not support {}", s, isa.name());
+            }
+            tensorcalc::util::simd::set_isa(isa);
+        }
+        Ok(())
+    }
 }
 
 fn run() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     let cmd = raw.first().cloned().unwrap_or_else(|| "help".into());
     let args = Args::parse(&raw[raw.len().min(1)..]);
+    args.apply_simd()?;
     match cmd.as_str() {
         "demo" => demo(),
         "derive" => derive(&args),
@@ -101,7 +120,9 @@ fn run() -> Result<()> {
                  [--trace off|profile|json=PATH]\n  \
                  tensorcalc bench <fig2|fig3|newton> [--sizes a,b,c] [--secs S] [--full]\n  \
                  tensorcalc artifacts [--dir D]\n  tensorcalc serve [--requests N] \
-                 [--batch B] [--backend cpu|direct] [--prom PATH]"
+                 [--batch B] [--backend cpu|direct] [--prom PATH]\n\n\
+                 all subcommands: [--simd off|avx2|avx512|neon] forces kernel dispatch\n\
+                 env: TC_SIMD=off|avx2|avx512|neon, TC_GEMM_BLOCKING=MR,NR,MC,KC,NC"
             );
             Ok(())
         }
@@ -156,6 +177,19 @@ fn derive(args: &Args) -> Result<()> {
         other => bail!("unknown problem {}", other),
     };
     println!("problem={} n={} loss DAG: {} nodes", problem, n, dag_size(&w.g, w.loss));
+    {
+        let isa = tensorcalc::util::simd::active_isa();
+        let blk = tensorcalc::util::simd::blocking();
+        println!(
+            "kernels: simd={} blocking=MR{},NR{},MC{},KC{},NC{}",
+            isa.name(),
+            blk.mr,
+            blk.nr,
+            blk.mc,
+            blk.kc,
+            blk.nc
+        );
+    }
     let node = match mode {
         "reverse" => w.hessian(),
         "cc" => w.hessian_cross_country(),

@@ -1,7 +1,10 @@
 //! Small utilities: the persistent [`WorkerPool`], scoped-thread data
 //! parallelism (the offline build has no rayon), the shared
-//! parallelism/blocking constants, per-thread GEMM packing scratch, and
+//! parallelism/blocking constants, per-thread GEMM packing scratch,
+//! runtime SIMD dispatch and the blocking autotuner ([`simd`]), and
 //! wall-clock helpers for the bench harnesses.
+
+pub mod simd;
 
 use std::cell::{Cell, RefCell};
 use std::collections::VecDeque;
@@ -42,27 +45,35 @@ pub const PAR_LEVEL_MIN_FLOP: usize = 1 << 17;
 pub const STEAL_CHUNKS_PER_THREAD: usize = 4;
 
 // ---------------------------------------------------------------------------
-// Blocking parameters of the tiled GEMM kernel (`crate::einsum::gemm`).
-// The register microkernel computes a GEMM_MR×GEMM_NR tile of C in local
-// accumulators; cache blocking packs an MC×KC panel of A (L2-resident)
-// and a KC×NC panel of B (streamed through L2/L3) around it. Sizes are
-// in f64 elements: the A panel is MC·KC·8 = 128 KiB and the active B
-// sub-panel KC·NR·8 = 16 KiB, comfortable for common L2/L1 sizes.
+// Default blocking parameters of the tiled GEMM kernel
+// (`crate::einsum::gemm`). The register microkernel computes an MR×NR
+// tile of C in local accumulators; cache blocking packs an MC×KC panel
+// of A (L2-resident) and a KC×NC panel of B (streamed through L2/L3)
+// around it. Sizes are in f64 elements: the default A panel is
+// MC·KC·8 = 128 KiB and the active B sub-panel KC·NR·8 = 16 KiB,
+// comfortable for common L2/L1 sizes.
+//
+// Since the SIMD/autotuner rework these constants are *defaults*, not
+// the live geometry: [`simd::blocking`] resolves the per-process
+// [`simd::Blocking`] from `TC_GEMM_BLOCKING` or the startup autotuner,
+// seeded by these values ([`simd::Blocking::DEFAULT`]).
 // ---------------------------------------------------------------------------
 
-/// Microkernel tile rows — accumulator rows held in registers.
+/// Default microkernel tile rows — accumulator rows held in registers.
 pub const GEMM_MR: usize = 4;
 
-/// Microkernel tile columns — one or two SIMD vectors of f64.
+/// Default microkernel tile columns — one or two SIMD vectors of f64.
 pub const GEMM_NR: usize = 8;
 
-/// Cache block of output rows (must be a multiple of [`GEMM_MR`]).
+/// Default cache block of output rows (a multiple of [`GEMM_MR`]).
 pub const GEMM_MC: usize = 64;
 
-/// Cache block along the contraction dimension.
+/// Cache block along the contraction dimension. Shared by every
+/// autotune candidate — KC is the one blocking parameter that affects
+/// accumulation order, so pinning it keeps the tuner numerics-neutral.
 pub const GEMM_KC: usize = 256;
 
-/// Cache block of output columns (must be a multiple of [`GEMM_NR`]).
+/// Default cache block of output columns (a multiple of [`GEMM_NR`]).
 pub const GEMM_NC: usize = 512;
 
 /// Below this many flops (m·n·k) a GEMM skips tiling/packing and runs

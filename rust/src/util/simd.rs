@@ -1,0 +1,944 @@
+//! Runtime SIMD dispatch and the GEMM blocking autotuner.
+//!
+//! # Dispatch
+//!
+//! The GEMM register microkernel and the fused element-wise pipelines
+//! come in one scalar and up to three explicit-SIMD flavours (AVX-512,
+//! AVX2+FMA, NEON — `core::arch` f64 intrinsics). Which flavour runs is
+//! decided **once per process** ([`active_isa`]): CPU feature detection
+//! picks the widest supported tier, the `TC_SIMD` environment variable
+//! (`off`/`scalar`/`avx2`/`avx512`/`neon`) pins it, and tests/benches
+//! can flip it at runtime with [`set_isa`]. The decision is cached in an
+//! atomic; per-call dispatch cost is one relaxed load plus a
+//! function-pointer table lookup ([`kernel_for`]).
+//!
+//! # Bit-identity
+//!
+//! Every microkernel — scalar and SIMD alike — computes each output
+//! element as the *same* IEEE-754 operation chain: the `MR×NR` register
+//! tile accumulates `acc[r][j] += a[r] · b[j]` as a separate multiply
+//! then add (**no FMA contraction**), in the same k order, with one add
+//! into `C` per k-block. The SIMD kernels vectorize across the `NR`
+//! column dimension, so each C element still owns an independent
+//! per-lane accumulation chain; lane-wise `vmul`/`vadd` round exactly
+//! like their scalar counterparts. Forced-scalar and every dispatched
+//! ISA therefore produce **bit-identical** results under the same
+//! [`Blocking`] — the repo's oracle contract survives the rewrite, and
+//! `tests/simd_equivalence.rs` pins it.
+//!
+//! # Blocking autotuner
+//!
+//! The tile/cache-blocking geometry ([`Blocking`]) is no longer a set of
+//! hard-coded constants: [`blocking`] resolves it once per process from
+//! `TC_GEMM_BLOCKING="MR,NR,MC,KC,NC"` (validated loudly — divisibility
+//! and supported-tile violations panic) or, absent the override, from a
+//! small at-startup autotuner that times each [`TUNE_CANDIDATES`] entry
+//! on a fixed probe GEMM and caches the winner ([`tune_count`] exposes
+//! how many times tuning actually ran — once, however many plans warm
+//! up afterwards). All candidates share the same `KC`, and `MR`/`NR`/
+//! `MC`/`NC` never affect per-element accumulation order, so the
+//! autotuner's pick changes speed but **never numerics**; only an
+//! explicit `TC_GEMM_BLOCKING` with a different `KC` re-rounds.
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+use super::{GEMM_KC, GEMM_MC, GEMM_MR, GEMM_NC, GEMM_NR};
+
+/// An instruction-set tier of the dispatched kernels. `Scalar` is always
+/// available and is the bit-identity reference; the SIMD tiers are only
+/// activatable when [`Isa::supported`] confirms the CPU has them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable scalar kernels (the reference path, `TC_SIMD=off`).
+    Scalar,
+    /// x86-64 AVX2 (+FMA presence checked, though the kernels use
+    /// separate mul/add for bit-identity), 4 f64 lanes.
+    Avx2,
+    /// x86-64 AVX-512F, 8 f64 lanes.
+    Avx512,
+    /// AArch64 NEON (baseline on that architecture), 2 f64 lanes.
+    Neon,
+}
+
+impl Isa {
+    /// The name used by `TC_SIMD`, the CLI `--simd` flag and the bench
+    /// mode labels.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Avx512 => "avx512",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Parse a `TC_SIMD` / `--simd` value (`off` is an alias for
+    /// `scalar`, matching the ablation convention of the other
+    /// subsystem switches).
+    pub fn parse(s: &str) -> Option<Isa> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "scalar" => Some(Isa::Scalar),
+            "avx2" => Some(Isa::Avx2),
+            "avx512" => Some(Isa::Avx512),
+            "neon" => Some(Isa::Neon),
+            _ => None,
+        }
+    }
+
+    /// Whether this tier can run on the current CPU.
+    pub fn supported(self) -> bool {
+        match self {
+            Isa::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma"),
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx512 => is_x86_feature_detected!("avx512f"),
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => true,
+            #[cfg(not(target_arch = "x86_64"))]
+            Isa::Avx2 | Isa::Avx512 => false,
+            #[cfg(not(target_arch = "aarch64"))]
+            Isa::Neon => false,
+        }
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            Isa::Scalar => 1,
+            Isa::Avx2 => 2,
+            Isa::Avx512 => 3,
+            Isa::Neon => 4,
+        }
+    }
+
+    fn from_code(c: u8) -> Isa {
+        match c {
+            1 => Isa::Scalar,
+            2 => Isa::Avx2,
+            3 => Isa::Avx512,
+            4 => Isa::Neon,
+            _ => unreachable!("bad ISA code {c}"),
+        }
+    }
+}
+
+/// Every ISA this build could dispatch to on the current CPU, scalar
+/// first — the iteration axis of the differential test wall.
+pub fn supported_isas() -> Vec<Isa> {
+    [Isa::Scalar, Isa::Avx2, Isa::Avx512, Isa::Neon]
+        .into_iter()
+        .filter(|isa| isa.supported())
+        .collect()
+}
+
+/// The widest SIMD tier the current CPU supports.
+pub fn detect_isa() -> Isa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx512f") {
+            Isa::Avx512
+        } else if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            Isa::Avx2
+        } else {
+            Isa::Scalar
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        Isa::Neon
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        Isa::Scalar
+    }
+}
+
+/// `u8::MAX` = not yet initialized; otherwise an [`Isa::code`].
+static ACTIVE_ISA: AtomicU8 = AtomicU8::new(u8::MAX);
+
+fn init_isa_from_env() -> Isa {
+    match std::env::var("TC_SIMD") {
+        Ok(s) => {
+            let isa = Isa::parse(&s).unwrap_or_else(|| {
+                panic!("invalid TC_SIMD value {s:?}: expected off|scalar|avx2|avx512|neon")
+            });
+            assert!(
+                isa.supported(),
+                "TC_SIMD={s} requests ISA `{}`, which this CPU does not support",
+                isa.name()
+            );
+            isa
+        }
+        Err(_) => detect_isa(),
+    }
+}
+
+/// The ISA every dispatched kernel currently runs on. Initialized once
+/// from `TC_SIMD` (or CPU detection); a relaxed atomic load afterwards.
+pub fn active_isa() -> Isa {
+    let c = ACTIVE_ISA.load(Ordering::Relaxed);
+    if c != u8::MAX {
+        return Isa::from_code(c);
+    }
+    let isa = init_isa_from_env();
+    ACTIVE_ISA.store(isa.code(), Ordering::Relaxed);
+    isa
+}
+
+/// Force the dispatched ISA at runtime (tests, benches, the CLI
+/// `--simd` flag) and return the previous one. Panics on a tier the CPU
+/// does not support — a silent scalar fallback would turn a differential
+/// test into a tautology. Callers that flip this concurrently with
+/// running plans must serialize themselves; each GEMM/fused-kernel call
+/// reads the ISA once at entry and stays internally consistent.
+pub fn set_isa(isa: Isa) -> Isa {
+    assert!(isa.supported(), "cannot force unsupported ISA `{}`", isa.name());
+    let prev = active_isa();
+    ACTIVE_ISA.store(isa.code(), Ordering::Relaxed);
+    prev
+}
+
+// ---------------------------------------------------------------------------
+// Blocking geometry
+// ---------------------------------------------------------------------------
+
+/// The `(MR, NR)` register tiles that have microkernels in every ISA
+/// table — [`Blocking::validate`] rejects anything else.
+pub const SUPPORTED_TILES: &[(usize, usize)] = &[(4, 4), (4, 8), (6, 8), (8, 8)];
+
+/// The tile/cache-blocking geometry of the tiled GEMM: an `mr×nr`
+/// register microkernel inside `mc×kc` packed A blocks and `kc×nc`
+/// packed B panels. Resolved once per process by [`blocking`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Blocking {
+    /// Microkernel tile rows (accumulator rows held in registers).
+    pub mr: usize,
+    /// Microkernel tile columns (one or more SIMD vectors of f64).
+    pub nr: usize,
+    /// Cache block of output rows; must be a multiple of `mr`.
+    pub mc: usize,
+    /// Cache block along the contraction dimension. The one parameter
+    /// that affects rounding order (the register tile is flushed to C
+    /// once per k-block) — every [`TUNE_CANDIDATES`] entry shares it.
+    pub kc: usize,
+    /// Cache block of output columns; must be a multiple of `nr`.
+    pub nc: usize,
+}
+
+impl Blocking {
+    /// The pre-autotuner geometry (the `GEMM_*` constants in
+    /// `util`), kept as the documented baseline and test pin.
+    pub const DEFAULT: Blocking =
+        Blocking { mr: GEMM_MR, nr: GEMM_NR, mc: GEMM_MC, kc: GEMM_KC, nc: GEMM_NC };
+
+    /// Check the packing invariants the tiled kernel relies on:
+    /// a supported `(MR, NR)` tile, `MC % MR == 0`, `NC % NR == 0`,
+    /// and nothing zero.
+    pub fn validate(&self) -> Result<(), String> {
+        let Blocking { mr, nr, mc, kc, nc } = *self;
+        if !SUPPORTED_TILES.contains(&(mr, nr)) {
+            return Err(format!(
+                "unsupported microkernel tile {mr}x{nr}; supported (MR,NR) pairs: {SUPPORTED_TILES:?}"
+            ));
+        }
+        if kc == 0 {
+            return Err("KC must be non-zero".to_string());
+        }
+        if mc == 0 || mc % mr != 0 {
+            return Err(format!("MC ({mc}) must be a non-zero multiple of MR ({mr})"));
+        }
+        if nc == 0 || nc % nr != 0 {
+            return Err(format!("NC ({nc}) must be a non-zero multiple of NR ({nr})"));
+        }
+        Ok(())
+    }
+
+    /// Parse a `TC_GEMM_BLOCKING` override: five comma-separated
+    /// integers `"MR,NR,MC,KC,NC"`, validated with [`Blocking::validate`].
+    pub fn parse(s: &str) -> Result<Blocking, String> {
+        let parts: Vec<&str> = s.split(',').map(str::trim).collect();
+        if parts.len() != 5 {
+            return Err(format!("expected \"MR,NR,MC,KC,NC\", got {s:?}"));
+        }
+        let mut v = [0usize; 5];
+        for (slot, p) in v.iter_mut().zip(&parts) {
+            *slot = p.parse().map_err(|_| format!("bad integer {p:?} in {s:?}"))?;
+        }
+        let blk = Blocking { mr: v[0], nr: v[1], mc: v[2], kc: v[3], nc: v[4] };
+        blk.validate()?;
+        Ok(blk)
+    }
+}
+
+/// The autotuner's candidate set. Every entry validates, and every
+/// entry shares `KC = 256` so the tuner's pick can never change
+/// per-element accumulation order — tuning is a pure-performance
+/// decision.
+pub const TUNE_CANDIDATES: [Blocking; 5] = [
+    Blocking { mr: 4, nr: 8, mc: 64, kc: 256, nc: 512 },
+    Blocking { mr: 8, nr: 8, mc: 64, kc: 256, nc: 512 },
+    Blocking { mr: 6, nr: 8, mc: 96, kc: 256, nc: 512 },
+    Blocking { mr: 4, nr: 8, mc: 128, kc: 256, nc: 1024 },
+    Blocking { mr: 4, nr: 4, mc: 64, kc: 256, nc: 512 },
+];
+
+static BLOCKING: OnceLock<Blocking> = OnceLock::new();
+static TUNE_COUNT: AtomicU64 = AtomicU64::new(0);
+
+/// How many times the autotuner has actually run in this process —
+/// at most once, regardless of how many plans compile or warm up
+/// (zero under a `TC_GEMM_BLOCKING` pin). The tune-once tests assert
+/// on this counter.
+pub fn tune_count() -> u64 {
+    TUNE_COUNT.load(Ordering::Relaxed)
+}
+
+fn autotune() -> Blocking {
+    TUNE_COUNT.fetch_add(1, Ordering::Relaxed);
+    // Probe shape: big enough that packing + tile traversal dominate,
+    // small enough that five candidates cost a few ms at startup.
+    let (m, k, n) = (64, 256, 128);
+    let isa = active_isa();
+    let mut best = Blocking::DEFAULT;
+    let mut best_t = f64::INFINITY;
+    for cand in TUNE_CANDIDATES {
+        debug_assert!(cand.validate().is_ok());
+        let ukr = kernel_for(isa, cand.mr, cand.nr)
+            .expect("every tune candidate has a kernel in every ISA table");
+        let t = crate::einsum::tune_probe(cand, ukr, m, k, n);
+        if t < best_t {
+            best_t = t;
+            best = cand;
+        }
+    }
+    best
+}
+
+/// The process-wide blocking geometry: `TC_GEMM_BLOCKING` if set
+/// (invalid values panic — a typo must not silently fall back), else
+/// the autotuner's pick. Cached in a `OnceLock`; the steady-state cost
+/// is one initialized-check per GEMM call.
+pub fn blocking() -> Blocking {
+    *BLOCKING.get_or_init(|| match std::env::var("TC_GEMM_BLOCKING") {
+        Ok(s) => Blocking::parse(&s)
+            .unwrap_or_else(|e| panic!("invalid TC_GEMM_BLOCKING {s:?}: {e}")),
+        Err(_) => autotune(),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// The microkernel function-pointer table
+// ---------------------------------------------------------------------------
+
+/// One register microkernel: accumulate a full `MR×NR` tile over `kc`
+/// packed k-steps from an A micro-panel (`kc×MR`, row-padded) and a B
+/// micro-panel (`kc×NR`, column-padded), then add the valid `mr×nr`
+/// part into `C` at `(row0, col0)` with row stride `ldc`. The argument
+/// order is `(ap, bp, c, ldc, row0, col0, mr, nr, kc)`.
+pub type MicroKernel = fn(&[f64], &[f64], &mut [f64], usize, usize, usize, usize, usize, usize);
+
+/// The per-call GEMM configuration the tiled kernel threads through its
+/// loop nest: the resolved [`Blocking`] plus the microkernel dispatched
+/// for `(active ISA, MR, NR)`.
+#[derive(Clone, Copy)]
+pub struct GemmCfg {
+    /// The process-wide blocking geometry.
+    pub blk: Blocking,
+    /// The dispatched register microkernel.
+    pub ukr: MicroKernel,
+}
+
+/// Resolve the blocking and kernel for one GEMM call. Called at
+/// `gemm_into_epi` entry, *before* any packing scratch is borrowed, so
+/// a first-call autotune can itself run probe GEMMs.
+pub fn gemm_cfg() -> GemmCfg {
+    let blk = blocking();
+    let ukr = kernel_for(active_isa(), blk.mr, blk.nr)
+        .expect("validated blocking always has a microkernel for the active ISA");
+    GemmCfg { blk, ukr }
+}
+
+/// Look up the microkernel for `(isa, mr, nr)`. Total over
+/// [`SUPPORTED_TILES`] for every ISA the build includes; `None` for
+/// unsupported tiles (and for SIMD tiers on foreign architectures).
+pub fn kernel_for(isa: Isa, mr: usize, nr: usize) -> Option<MicroKernel> {
+    match isa {
+        Isa::Scalar => scalar_kernel(mr, nr),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => x86::avx2_kernel(mr, nr),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx512 => x86::avx512_kernel(mr, nr),
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => neon::neon_kernel(mr, nr),
+        #[cfg(not(target_arch = "x86_64"))]
+        Isa::Avx2 | Isa::Avx512 => None,
+        #[cfg(not(target_arch = "aarch64"))]
+        Isa::Neon => None,
+    }
+}
+
+/// Shared tail of every microkernel: add the valid `mr×nr` part of the
+/// accumulator tile into `C`. One add per element, in row-major order —
+/// identical across scalar and SIMD kernels, so the store never breaks
+/// bit-identity (partial tiles included).
+#[inline(always)]
+fn store_tile<const MR: usize, const NR: usize>(
+    acc: &[[f64; NR]; MR],
+    c: &mut [f64],
+    ldc: usize,
+    row0: usize,
+    col0: usize,
+    mr: usize,
+    nr: usize,
+) {
+    for r in 0..mr {
+        let off = (row0 + r) * ldc + col0;
+        let crow = &mut c[off..off + nr];
+        for (cv, av) in crow.iter_mut().zip(acc[r][..nr].iter()) {
+            *cv += av;
+        }
+    }
+}
+
+macro_rules! scalar_ukr {
+    ($name:ident, $mr:literal, $nr:literal) => {
+        #[allow(clippy::too_many_arguments)]
+        fn $name(
+            ap: &[f64],
+            bp: &[f64],
+            c: &mut [f64],
+            ldc: usize,
+            row0: usize,
+            col0: usize,
+            mr: usize,
+            nr: usize,
+            kc: usize,
+        ) {
+            let mut acc = [[0.0f64; $nr]; $mr];
+            for kk in 0..kc {
+                let av = &ap[kk * $mr..kk * $mr + $mr];
+                let bv = &bp[kk * $nr..kk * $nr + $nr];
+                for r in 0..$mr {
+                    let ar = av[r];
+                    for j in 0..$nr {
+                        acc[r][j] += ar * bv[j];
+                    }
+                }
+            }
+            store_tile::<$mr, $nr>(&acc, c, ldc, row0, col0, mr, nr);
+        }
+    };
+}
+
+scalar_ukr!(ukr_scalar_4x4, 4, 4);
+scalar_ukr!(ukr_scalar_4x8, 4, 8);
+scalar_ukr!(ukr_scalar_6x8, 6, 8);
+scalar_ukr!(ukr_scalar_8x8, 8, 8);
+
+fn scalar_kernel(mr: usize, nr: usize) -> Option<MicroKernel> {
+    Some(match (mr, nr) {
+        (4, 4) => ukr_scalar_4x4,
+        (4, 8) => ukr_scalar_4x8,
+        (6, 8) => ukr_scalar_6x8,
+        (8, 8) => ukr_scalar_8x8,
+        _ => return None,
+    })
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! AVX2 (4 f64 lanes) and AVX-512F (8 f64 lanes) microkernels. Both
+    //! vectorize across the NR column dimension and use separate
+    //! `vmulpd`/`vaddpd` (never FMA), so each lane rounds exactly like
+    //! the scalar kernel's `acc[r][j] += a[r] * b[j]`.
+
+    use super::{store_tile, MicroKernel};
+    use core::arch::x86_64::{
+        _mm256_add_pd, _mm256_loadu_pd, _mm256_mul_pd, _mm256_set1_pd, _mm256_setzero_pd,
+        _mm256_storeu_pd, _mm512_add_pd, _mm512_loadu_pd, _mm512_mul_pd, _mm512_set1_pd,
+        _mm512_setzero_pd, _mm512_storeu_pd,
+    };
+
+    macro_rules! avx2_ukr {
+        ($inner:ident, $outer:ident, $mr:literal, $nr:literal) => {
+            /// # Safety
+            /// Requires AVX2; only reachable through `avx2_kernel` /
+            /// `avx512_kernel`, whose ISAs are gated on detection.
+            #[allow(clippy::too_many_arguments)]
+            #[target_feature(enable = "avx2")]
+            unsafe fn $inner(
+                ap: &[f64],
+                bp: &[f64],
+                c: &mut [f64],
+                ldc: usize,
+                row0: usize,
+                col0: usize,
+                mr: usize,
+                nr: usize,
+                kc: usize,
+            ) {
+                debug_assert!(ap.len() >= kc * $mr && bp.len() >= kc * $nr);
+                let mut acc = [[_mm256_setzero_pd(); $nr / 4]; $mr];
+                for kk in 0..kc {
+                    let bbase = bp.as_ptr().add(kk * $nr);
+                    let mut bv = [_mm256_setzero_pd(); $nr / 4];
+                    for (v, slot) in bv.iter_mut().enumerate() {
+                        *slot = _mm256_loadu_pd(bbase.add(4 * v));
+                    }
+                    let abase = ap.as_ptr().add(kk * $mr);
+                    for (r, arow) in acc.iter_mut().enumerate() {
+                        let ar = _mm256_set1_pd(*abase.add(r));
+                        for (slot, &b) in arow.iter_mut().zip(bv.iter()) {
+                            // separate mul then add — no FMA contraction
+                            *slot = _mm256_add_pd(*slot, _mm256_mul_pd(ar, b));
+                        }
+                    }
+                }
+                let mut spill = [[0.0f64; $nr]; $mr];
+                for (srow, arow) in spill.iter_mut().zip(acc.iter()) {
+                    for (v, &lane) in arow.iter().enumerate() {
+                        _mm256_storeu_pd(srow.as_mut_ptr().add(4 * v), lane);
+                    }
+                }
+                store_tile::<$mr, $nr>(&spill, c, ldc, row0, col0, mr, nr);
+            }
+
+            #[allow(clippy::too_many_arguments)]
+            fn $outer(
+                ap: &[f64],
+                bp: &[f64],
+                c: &mut [f64],
+                ldc: usize,
+                row0: usize,
+                col0: usize,
+                mr: usize,
+                nr: usize,
+                kc: usize,
+            ) {
+                // SAFETY: this wrapper only enters the dispatch table for
+                // Avx2/Avx512, which `Isa::supported` gates on detection.
+                unsafe { $inner(ap, bp, c, ldc, row0, col0, mr, nr, kc) }
+            }
+        };
+    }
+
+    macro_rules! avx512_ukr {
+        ($inner:ident, $outer:ident, $mr:literal) => {
+            /// # Safety
+            /// Requires AVX-512F; only reachable through `avx512_kernel`.
+            #[allow(clippy::too_many_arguments)]
+            #[target_feature(enable = "avx512f")]
+            unsafe fn $inner(
+                ap: &[f64],
+                bp: &[f64],
+                c: &mut [f64],
+                ldc: usize,
+                row0: usize,
+                col0: usize,
+                mr: usize,
+                nr: usize,
+                kc: usize,
+            ) {
+                debug_assert!(ap.len() >= kc * $mr && bp.len() >= kc * 8);
+                let mut acc = [_mm512_setzero_pd(); $mr];
+                for kk in 0..kc {
+                    let bv = _mm512_loadu_pd(bp.as_ptr().add(kk * 8));
+                    let abase = ap.as_ptr().add(kk * $mr);
+                    for (r, slot) in acc.iter_mut().enumerate() {
+                        let ar = _mm512_set1_pd(*abase.add(r));
+                        // separate mul then add — no FMA contraction
+                        *slot = _mm512_add_pd(*slot, _mm512_mul_pd(ar, bv));
+                    }
+                }
+                let mut spill = [[0.0f64; 8]; $mr];
+                for (srow, &lane) in spill.iter_mut().zip(acc.iter()) {
+                    _mm512_storeu_pd(srow.as_mut_ptr(), lane);
+                }
+                store_tile::<$mr, 8>(&spill, c, ldc, row0, col0, mr, nr);
+            }
+
+            #[allow(clippy::too_many_arguments)]
+            fn $outer(
+                ap: &[f64],
+                bp: &[f64],
+                c: &mut [f64],
+                ldc: usize,
+                row0: usize,
+                col0: usize,
+                mr: usize,
+                nr: usize,
+                kc: usize,
+            ) {
+                // SAFETY: only dispatched for Avx512, gated on detection.
+                unsafe { $inner(ap, bp, c, ldc, row0, col0, mr, nr, kc) }
+            }
+        };
+    }
+
+    avx2_ukr!(ukr_avx2_4x4_tf, ukr_avx2_4x4, 4, 4);
+    avx2_ukr!(ukr_avx2_4x8_tf, ukr_avx2_4x8, 4, 8);
+    avx2_ukr!(ukr_avx2_6x8_tf, ukr_avx2_6x8, 6, 8);
+    avx2_ukr!(ukr_avx2_8x8_tf, ukr_avx2_8x8, 8, 8);
+
+    avx512_ukr!(ukr_avx512_4x8_tf, ukr_avx512_4x8, 4);
+    avx512_ukr!(ukr_avx512_6x8_tf, ukr_avx512_6x8, 6);
+    avx512_ukr!(ukr_avx512_8x8_tf, ukr_avx512_8x8, 8);
+
+    pub(super) fn avx2_kernel(mr: usize, nr: usize) -> Option<MicroKernel> {
+        Some(match (mr, nr) {
+            (4, 4) => ukr_avx2_4x4,
+            (4, 8) => ukr_avx2_4x8,
+            (6, 8) => ukr_avx2_6x8,
+            (8, 8) => ukr_avx2_8x8,
+            _ => return None,
+        })
+    }
+
+    pub(super) fn avx512_kernel(mr: usize, nr: usize) -> Option<MicroKernel> {
+        Some(match (mr, nr) {
+            // NR = 4 tiles run the AVX2 kernel (identical rounding;
+            // AVX-512F hardware always has AVX2)
+            (4, 4) => ukr_avx2_4x4,
+            (4, 8) => ukr_avx512_4x8,
+            (6, 8) => ukr_avx512_6x8,
+            (8, 8) => ukr_avx512_8x8,
+            _ => return None,
+        })
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    //! NEON microkernels (2 f64 lanes), vectorized across NR with
+    //! separate `vmulq`/`vaddq` — no FMA contraction.
+
+    use super::{store_tile, MicroKernel};
+    use core::arch::aarch64::{vaddq_f64, vdupq_n_f64, vld1q_f64, vmulq_f64, vst1q_f64};
+
+    macro_rules! neon_ukr {
+        ($inner:ident, $outer:ident, $mr:literal, $nr:literal) => {
+            /// # Safety
+            /// Requires NEON, which is baseline on aarch64.
+            #[allow(clippy::too_many_arguments)]
+            #[target_feature(enable = "neon")]
+            unsafe fn $inner(
+                ap: &[f64],
+                bp: &[f64],
+                c: &mut [f64],
+                ldc: usize,
+                row0: usize,
+                col0: usize,
+                mr: usize,
+                nr: usize,
+                kc: usize,
+            ) {
+                debug_assert!(ap.len() >= kc * $mr && bp.len() >= kc * $nr);
+                let mut acc = [[vdupq_n_f64(0.0); $nr / 2]; $mr];
+                for kk in 0..kc {
+                    let bbase = bp.as_ptr().add(kk * $nr);
+                    let mut bv = [vdupq_n_f64(0.0); $nr / 2];
+                    for (v, slot) in bv.iter_mut().enumerate() {
+                        *slot = vld1q_f64(bbase.add(2 * v));
+                    }
+                    let abase = ap.as_ptr().add(kk * $mr);
+                    for (r, arow) in acc.iter_mut().enumerate() {
+                        let ar = vdupq_n_f64(*abase.add(r));
+                        for (slot, &b) in arow.iter_mut().zip(bv.iter()) {
+                            // separate mul then add — no FMA contraction
+                            *slot = vaddq_f64(*slot, vmulq_f64(ar, b));
+                        }
+                    }
+                }
+                let mut spill = [[0.0f64; $nr]; $mr];
+                for (srow, arow) in spill.iter_mut().zip(acc.iter()) {
+                    for (v, &lane) in arow.iter().enumerate() {
+                        vst1q_f64(srow.as_mut_ptr().add(2 * v), lane);
+                    }
+                }
+                store_tile::<$mr, $nr>(&spill, c, ldc, row0, col0, mr, nr);
+            }
+
+            #[allow(clippy::too_many_arguments)]
+            fn $outer(
+                ap: &[f64],
+                bp: &[f64],
+                c: &mut [f64],
+                ldc: usize,
+                row0: usize,
+                col0: usize,
+                mr: usize,
+                nr: usize,
+                kc: usize,
+            ) {
+                // SAFETY: NEON is baseline on every aarch64 target.
+                unsafe { $inner(ap, bp, c, ldc, row0, col0, mr, nr, kc) }
+            }
+        };
+    }
+
+    neon_ukr!(ukr_neon_4x4_tf, ukr_neon_4x4, 4, 4);
+    neon_ukr!(ukr_neon_4x8_tf, ukr_neon_4x8, 4, 8);
+    neon_ukr!(ukr_neon_6x8_tf, ukr_neon_6x8, 6, 8);
+    neon_ukr!(ukr_neon_8x8_tf, ukr_neon_8x8, 8, 8);
+
+    pub(super) fn neon_kernel(mr: usize, nr: usize) -> Option<MicroKernel> {
+        Some(match (mr, nr) {
+            (4, 4) => ukr_neon_4x4,
+            (4, 8) => ukr_neon_4x8,
+            (6, 8) => ukr_neon_6x8,
+            (8, 8) => ukr_neon_8x8,
+            _ => return None,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatched element-wise helpers
+//
+// The compiled executor's non-contraction sweeps (tensor adds, the
+// einsum element-wise fast paths) are lane-independent maps, so an
+// AVX2-compiled clone of the same loop is bit-identical to the baseline
+// build — `#[target_feature]` only widens the vectors LLVM may use.
+// ---------------------------------------------------------------------------
+
+macro_rules! ew_op {
+    ($(#[$doc:meta])* $name:ident, $avx:ident, ($($arg:ident: $ty:ty),*), $body:block) => {
+        #[cfg(target_arch = "x86_64")]
+        #[target_feature(enable = "avx2")]
+        unsafe fn $avx($($arg: $ty),*) $body
+
+        $(#[$doc])*
+        #[inline]
+        pub fn $name($($arg: $ty),*) {
+            #[cfg(target_arch = "x86_64")]
+            if matches!(active_isa(), Isa::Avx2 | Isa::Avx512) {
+                // SAFETY: the dispatch tier guarantees AVX2 is present.
+                unsafe { $avx($($arg),*) };
+                return;
+            }
+            $body
+        }
+    };
+}
+
+ew_op!(
+    /// `out[i] = a[i] + b[i]` (dispatched; bit-identical across ISAs).
+    add_into,
+    add_into_avx2,
+    (out: &mut [f64], a: &[f64], b: &[f64]),
+    {
+        for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+            *o = x + y;
+        }
+    }
+);
+
+ew_op!(
+    /// `out[i] += a[i]` (dispatched; bit-identical across ISAs).
+    add_assign,
+    add_assign_avx2,
+    (out: &mut [f64], a: &[f64]),
+    {
+        for (o, &x) in out.iter_mut().zip(a) {
+            *o += x;
+        }
+    }
+);
+
+ew_op!(
+    /// `out[i] = a[i] * b[i]` (dispatched; bit-identical across ISAs).
+    mul_into,
+    mul_into_avx2,
+    (out: &mut [f64], a: &[f64], b: &[f64]),
+    {
+        for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+            *o = x * y;
+        }
+    }
+);
+
+ew_op!(
+    /// `out[i] = a[i] * s` (dispatched; bit-identical across ISAs).
+    mul_scalar_into,
+    mul_scalar_into_avx2,
+    (out: &mut [f64], a: &[f64], s: f64),
+    {
+        for (o, &x) in out.iter_mut().zip(a) {
+            *o = x * s;
+        }
+    }
+);
+
+ew_op!(
+    /// `out[i] *= s` (dispatched; bit-identical across ISAs).
+    scale_assign,
+    scale_assign_avx2,
+    (out: &mut [f64], s: f64),
+    {
+        for o in out.iter_mut() {
+            *o *= s;
+        }
+    }
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn isa_parse_named_forms() {
+        assert_eq!(Isa::parse("off"), Some(Isa::Scalar));
+        assert_eq!(Isa::parse("scalar"), Some(Isa::Scalar));
+        assert_eq!(Isa::parse("AVX2"), Some(Isa::Avx2));
+        assert_eq!(Isa::parse(" avx512 "), Some(Isa::Avx512));
+        assert_eq!(Isa::parse("neon"), Some(Isa::Neon));
+        assert_eq!(Isa::parse("sse9"), None);
+        assert_eq!(Isa::parse(""), None);
+    }
+
+    #[test]
+    fn detection_is_coherent() {
+        let best = detect_isa();
+        assert!(best.supported());
+        let all = supported_isas();
+        assert!(all.contains(&Isa::Scalar));
+        assert!(all.contains(&best));
+    }
+
+    #[test]
+    fn parse_blocking_accepts_valid() {
+        let blk = Blocking::parse("4,8,64,256,512").unwrap();
+        assert_eq!(blk, Blocking::DEFAULT);
+        let blk = Blocking::parse(" 8 , 8 , 64 , 128 , 512 ").unwrap();
+        assert_eq!(blk, Blocking { mr: 8, nr: 8, mc: 64, kc: 128, nc: 512 });
+    }
+
+    #[test]
+    fn parse_blocking_rejects_loudly() {
+        // MC % MR != 0
+        let e = Blocking::parse("4,8,65,256,512").unwrap_err();
+        assert!(e.contains("MC"), "{e}");
+        // NC % NR != 0
+        let e = Blocking::parse("4,8,64,256,513").unwrap_err();
+        assert!(e.contains("NC"), "{e}");
+        // unsupported register tile
+        let e = Blocking::parse("5,8,65,256,512").unwrap_err();
+        assert!(e.contains("unsupported"), "{e}");
+        // wrong arity and garbage integers
+        assert!(Blocking::parse("4,8,64,256").is_err());
+        assert!(Blocking::parse("4,8,64,256,512,9").is_err());
+        assert!(Blocking::parse("4,8,sixty,256,512").is_err());
+        // zeros
+        assert!(Blocking::parse("4,8,64,0,512").is_err());
+        assert!(Blocking::parse("4,8,0,256,512").is_err());
+    }
+
+    #[test]
+    fn default_and_candidates_validate() {
+        assert!(Blocking::DEFAULT.validate().is_ok());
+        for cand in TUNE_CANDIDATES {
+            assert!(cand.validate().is_ok(), "{cand:?}");
+            // the pick must never change numerics: same KC everywhere
+            assert_eq!(cand.kc, Blocking::DEFAULT.kc, "{cand:?} breaks KC invariance");
+        }
+    }
+
+    #[test]
+    fn blocking_is_cached_and_tunes_at_most_once() {
+        let b1 = blocking();
+        let t1 = tune_count();
+        let b2 = blocking();
+        let t2 = tune_count();
+        assert_eq!(b1, b2, "blocking must be stable within a process");
+        assert_eq!(t1, t2, "a warm blocking() call re-ran the tuner");
+        assert!(t1 <= 1, "the tuner ran {t1} times");
+        assert!(b1.validate().is_ok());
+    }
+
+    #[test]
+    fn every_isa_table_is_total_over_supported_tiles() {
+        for isa in supported_isas() {
+            for &(mr, nr) in SUPPORTED_TILES {
+                assert!(
+                    kernel_for(isa, mr, nr).is_some(),
+                    "no {mr}x{nr} kernel for {}",
+                    isa.name()
+                );
+            }
+        }
+        // unsupported tiles answer None instead of panicking
+        assert!(kernel_for(Isa::Scalar, 5, 8).is_none());
+        assert!(kernel_for(Isa::Scalar, 4, 6).is_none());
+    }
+
+    /// Kernel-level bit-identity: every dispatched ISA microkernel must
+    /// reproduce the scalar kernel exactly — full tiles, partial tiles
+    /// and padded panels alike.
+    #[test]
+    fn microkernels_bit_identical_to_scalar() {
+        for &(mr_t, nr_t) in SUPPORTED_TILES {
+            for kc in [1usize, 3, 17, 64] {
+                // deterministic packed panels, zero-padded rows/cols
+                let ap: Vec<f64> =
+                    (0..kc * mr_t).map(|i| ((i * 37 % 101) as f64) * 0.013 - 0.5).collect();
+                let bp: Vec<f64> =
+                    (0..kc * nr_t).map(|i| ((i * 53 % 97) as f64) * 0.021 - 0.7).collect();
+                let ldc = nr_t + 3;
+                for (mr, nr) in [(mr_t, nr_t), (mr_t - 1, nr_t - 1), (1, 1)] {
+                    let mr = mr.max(1);
+                    let nr = nr.max(1);
+                    let mut want = vec![0.25f64; mr_t * ldc];
+                    let scalar = kernel_for(Isa::Scalar, mr_t, nr_t).unwrap();
+                    scalar(&ap, &bp, &mut want, ldc, 0, 1, mr, nr, kc);
+                    for isa in supported_isas() {
+                        let ukr = kernel_for(isa, mr_t, nr_t).unwrap();
+                        let mut got = vec![0.25f64; mr_t * ldc];
+                        ukr(&ap, &bp, &mut got, ldc, 0, 1, mr, nr, kc);
+                        assert_eq!(
+                            got,
+                            want,
+                            "{}x{} tile (valid {mr}x{nr}, kc {kc}) diverged on {}",
+                            mr_t,
+                            nr_t,
+                            isa.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn elementwise_helpers_bit_identical_across_dispatch() {
+        let a: Vec<f64> = (0..103).map(|i| (i as f64) * 0.37 - 19.0).collect();
+        let b: Vec<f64> = (0..103).map(|i| (i as f64) * -0.11 + 3.0).collect();
+        let mut plain = vec![0.0; 103];
+        for ((o, &x), &y) in plain.iter_mut().zip(&a).zip(&b) {
+            *o = x + y;
+        }
+        let mut got = vec![0.0; 103];
+        add_into(&mut got, &a, &b);
+        assert_eq!(got, plain);
+        mul_into(&mut got, &a, &b);
+        for ((o, &x), &y) in plain.iter_mut().zip(&a).zip(&b) {
+            *o = x * y;
+        }
+        assert_eq!(got, plain);
+        add_assign(&mut got, &a);
+        for (o, &x) in plain.iter_mut().zip(&a) {
+            *o += x;
+        }
+        assert_eq!(got, plain);
+        mul_scalar_into(&mut got, &b, 1.37);
+        for (o, &y) in plain.iter_mut().zip(&b) {
+            *o = y * 1.37;
+        }
+        assert_eq!(got, plain);
+        scale_assign(&mut got, -0.5);
+        for o in plain.iter_mut() {
+            *o *= -0.5;
+        }
+        assert_eq!(got, plain);
+    }
+}

@@ -3,11 +3,15 @@
 //! semantics preservation under simplify/cross-country, mode agreement
 //! on random DAGs, and FD validation of random derivative chains.
 
-use tensorcalc::einsum::{einsum, EinSpec, Label};
+use std::sync::Mutex;
+
+use tensorcalc::einsum::{einsum, gemm_into, gemm_into_epi, gemm_into_flat, EpiFn};
+use tensorcalc::einsum::{EinSpec, Label};
 use tensorcalc::eval::{eval, eval_many, fd_gradient, Env};
 use tensorcalc::ir::{Elem, Graph, NodeId};
 use tensorcalc::prelude::*;
 use tensorcalc::tensor::{Tensor, XorShift};
+use tensorcalc::util::simd::{blocking, set_isa, supported_isas, Isa};
 
 /// Brute-force einsum reference (independent of the engine's fast paths).
 fn einsum_naive(spec: &EinSpec, a: &Tensor, b: &Tensor) -> Tensor {
@@ -255,6 +259,235 @@ fn prop_hessian_symmetry_on_random_dags() {
             seed,
             hv.max_abs_diff(&hv.t())
         );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GEMM shape fuzzer: the dispatched tiled kernel against its references
+// ---------------------------------------------------------------------------
+//
+// Four implementations of `C += A·B` are pinned **bit-identical** (not
+// allclose) on random awkward shapes: the tiled kernel under every
+// dispatched ISA, the tiled kernel forced scalar, `gemm_into_flat`, and
+// an in-file naive triple loop. This works because all four accumulate
+// each `C[i][j]` along `k` in increasing order with separate mul/add,
+// and the tiled path flushes its register tile to `C` exactly once when
+// `k ≤ KC` — so the fuzzer draws `k ≤ blocking().kc` for the four-way
+// pin and larger `k` (multi-flush) for the SIMD-vs-scalar-only pin.
+//
+// The ISA is process-global, so the tests that flip it serialize.
+
+static GEMM_ISA_LOCK: Mutex<()> = Mutex::new(());
+
+/// Flip the active ISA, restoring the previous tier on drop.
+struct IsaFlip {
+    prev: Isa,
+}
+
+impl IsaFlip {
+    fn to(isa: Isa) -> IsaFlip {
+        IsaFlip { prev: set_isa(isa) }
+    }
+}
+
+impl Drop for IsaFlip {
+    fn drop(&mut self) {
+        set_isa(self.prev);
+    }
+}
+
+fn matmul_naive(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    let mut c = vec![0.0; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p];
+            for j in 0..n {
+                c[i * n + j] += av * b[p * n + j];
+            }
+        }
+    }
+    c
+}
+
+/// A dimension biased toward the edges the tiling must get right: 1,
+/// one under/over the register tile, exact tile multiples, and noise.
+fn awkward_dim(rng: &mut XorShift, tile: usize) -> usize {
+    match rng.below(6) {
+        0 => 1,
+        1 => tile - 1,
+        2 => tile + 1,
+        3 => tile * (1 + rng.below(8)),
+        _ => 1 + rng.below(97),
+    }
+}
+
+fn rand_mat(rng: &mut XorShift, len: usize) -> Vec<f64> {
+    (0..len).map(|_| rng.next_f64() - 0.5).collect()
+}
+
+#[test]
+fn prop_gemm_fuzz_four_way_bit_identity() {
+    let _lock = GEMM_ISA_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let isas = supported_isas();
+    let blk = blocking();
+    let mut rng = XorShift::new(0xF002);
+    let mut tiled_hits = 0usize;
+    for case in 0..60usize {
+        let (m, n, k);
+        if case < 5 {
+            // guaranteed deep into the tiled path: both dims past the
+            // register tile and well over the min-flop gate
+            m = blk.mr * 3 + case;
+            n = blk.nr * 5 + 1;
+            k = blk.kc.min(64 + 7 * case);
+        } else {
+            m = awkward_dim(&mut rng, blk.mr);
+            n = awkward_dim(&mut rng, blk.nr);
+            k = 1 + rng.below(blk.kc); // single register flush: k ≤ KC
+        }
+        if m >= blk.mr && n >= blk.nr && m * n * k >= 1 << 14 {
+            tiled_hits += 1;
+        }
+        let a = rand_mat(&mut rng, m * k);
+        let b = rand_mat(&mut rng, k * n);
+        let want = matmul_naive(&a, &b, m, k, n);
+        let mut flat = vec![0.0; m * n];
+        gemm_into_flat(&a, &b, &mut flat, m, k, n);
+        assert_eq!(flat, want, "case {case} ({m}x{k}x{n}): flat != naive");
+        for &isa in &isas {
+            let _s = IsaFlip::to(isa);
+            let mut c = vec![0.0; m * n];
+            gemm_into(&a, &b, &mut c, m, k, n);
+            assert_eq!(
+                c,
+                want,
+                "case {case} ({m}x{k}x{n}): tiled under {} != naive",
+                isa.name()
+            );
+        }
+    }
+    // the generator must actually exercise the tiled path, not just
+    // fall through to the flat small-shape gate every time
+    assert!(tiled_hits >= 8, "only {tiled_hits}/60 cases engaged the tiled path");
+}
+
+#[test]
+fn prop_gemm_fuzz_epilogue_fused_and_accumulating() {
+    let _lock = GEMM_ISA_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let isas = supported_isas();
+    let blk = blocking();
+    let mut rng = XorShift::new(0xF003);
+    // the affine test epilogue sees *global* offsets (c_base included)
+    let epi = |base: usize, seg: &mut [f64]| {
+        for (i, v) in seg.iter_mut().enumerate() {
+            *v = 2.0 * *v + (base + i) as f64 * 0.001;
+        }
+    };
+    for case in 0..40 {
+        let m = awkward_dim(&mut rng, blk.mr);
+        let n = awkward_dim(&mut rng, blk.nr);
+        // multi-KC-block k on odd cases: the epilogue must still fire
+        // exactly once per element, on the *last* flush only
+        let k = if case % 2 == 0 { 1 + rng.below(blk.kc) } else { blk.kc + 1 + rng.below(64) };
+        let a = rand_mat(&mut rng, m * k);
+        let b = rand_mat(&mut rng, k * n);
+        let c_base = rng.below(1000);
+
+        // reference: plain accumulate, then one sweep at the same
+        // global offsets — only valid bitwise when k ≤ KC
+        let scalar_fused = {
+            let _s = IsaFlip::to(Isa::Scalar);
+            let mut c = vec![0.0; m * n];
+            gemm_into_epi(&a, &b, &mut c, m, k, n, c_base, &EpiFn(epi));
+            c
+        };
+        if k <= blk.kc {
+            let mut want = matmul_naive(&a, &b, m, k, n);
+            epi(c_base, &mut want);
+            assert_eq!(scalar_fused, want, "case {case} ({m}x{k}x{n}): fused != gemm-then-sweep");
+        }
+        // every dispatched ISA reproduces the fused scalar result bit
+        // for bit, multi-flush shapes included
+        for &isa in &isas[1..] {
+            let _s = IsaFlip::to(isa);
+            let mut c = vec![0.0; m * n];
+            gemm_into_epi(&a, &b, &mut c, m, k, n, c_base, &EpiFn(epi));
+            assert_eq!(
+                c,
+                scalar_fused,
+                "case {case} ({m}x{k}x{n}): fused under {} != scalar",
+                isa.name()
+            );
+        }
+
+        // accumulating into a pre-filled C (the `+=` contract): scalar
+        // vs SIMD share the path, so this needs no k cap either
+        let prefill: Vec<f64> = (0..m * n).map(|i| (i % 9) as f64 * 0.25 - 1.0).collect();
+        let scalar_acc = {
+            let _s = IsaFlip::to(Isa::Scalar);
+            let mut c = prefill.clone();
+            gemm_into(&a, &b, &mut c, m, k, n);
+            c
+        };
+        for &isa in &isas[1..] {
+            let _s = IsaFlip::to(isa);
+            let mut c = prefill.clone();
+            gemm_into(&a, &b, &mut c, m, k, n);
+            assert_eq!(
+                c,
+                scalar_acc,
+                "case {case} ({m}x{k}x{n}): accumulate under {} != scalar",
+                isa.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_einsum_batched_permuted_bit_identical_across_isas() {
+    // above the kernel seam: batched and output-permuted einsum specs
+    // route through `batched_gemm_epi` / packed panels with per-slice
+    // `c_base` offsets — the dispatched kernels must stay bit-identical
+    // to forced scalar through all of that plumbing, and allclose to
+    // the brute-force oracle
+    let _lock = GEMM_ISA_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let isas = supported_isas();
+    let specs =
+        ["ij,jk->ik", "ij,jk->ki", "bij,bjk->bik", "bij,bjk->ikb", "ij,kj->ik", "bi,bij->bj"];
+    let mut rng = XorShift::new(0xF004);
+    for case in 0..30usize {
+        let spec = EinSpec::parse(specs[case % specs.len()]);
+        let mut dims = std::collections::HashMap::new();
+        let mut shape_of = |labels: &[Label], rng: &mut XorShift| -> Vec<usize> {
+            labels
+                .iter()
+                .map(|&l| *dims.entry(l).or_insert_with(|| 1 + rng.below(13)))
+                .collect()
+        };
+        let sa = shape_of(&spec.s1, &mut rng);
+        let sb = shape_of(&spec.s2, &mut rng);
+        let a = Tensor::randn(&sa, 9100 + case as u64);
+        let b = Tensor::randn(&sb, 9200 + case as u64);
+        let base = {
+            let _s = IsaFlip::to(Isa::Scalar);
+            einsum(&spec, &a, &b)
+        };
+        let slow = einsum_naive(&spec, &a, &b);
+        assert!(
+            base.allclose(&slow, 1e-9, 1e-10),
+            "case {case}: {spec} on {sa:?}x{sb:?}, diff {}",
+            base.max_abs_diff(&slow)
+        );
+        for &isa in &isas[1..] {
+            let _s = IsaFlip::to(isa);
+            let fast = einsum(&spec, &a, &b);
+            assert_eq!(
+                fast.data(),
+                base.data(),
+                "case {case}: {spec} under {} != scalar",
+                isa.name()
+            );
+        }
     }
 }
 

@@ -1,0 +1,333 @@
+//! The SIMD differential wall: forced-scalar vs every dispatched ISA vs
+//! the interpreter oracle, across the whole execution option matrix.
+//!
+//! The kernel contract under test (see `util::simd`):
+//!
+//! * every SIMD microkernel maps lanes across the `NR` column dimension
+//!   and uses separate mul-then-add (never FMA), so each `C[r][j]` keeps
+//!   the scalar kernel's k-accumulation chain — forced-scalar and every
+//!   dispatched tier must be **bit-identical**, not merely close;
+//! * the dispatch is resolved per call from the process-global active
+//!   ISA, so one compiled plan re-run under a flipped ISA takes the new
+//!   kernels — the wall compiles each cell once and sweeps ISAs over it;
+//! * blocking geometry (`MR/NR/MC/NC`) never affects numerics and every
+//!   autotune candidate shares `KC`, so the tuner's pick is invisible to
+//!   these assertions;
+//! * all of the above must hold in every `ExecMemory` × `EpilogueMode`
+//!   × `BackendKind` cell, on the batched serving variant, and without
+//!   disturbing the zero-alloc / no-lock steady state.
+//!
+//! Tests that flip the active ISA serialize on a process-wide mutex:
+//! the ISA is process-global state and `cargo test` runs the tests in
+//! this binary on several threads.
+
+use std::sync::{Mutex, MutexGuard};
+
+use tensorcalc::einsum::{gemm, gemm_into};
+use tensorcalc::eval::{Env, Plan};
+use tensorcalc::exec::{batch_graph, BackendKind, CompiledPlan, EpilogueMode, ExecMemory};
+use tensorcalc::ir::{Graph, NodeId};
+use tensorcalc::obs::TraceMode;
+use tensorcalc::opt::{compact, optimize, OptLevel};
+use tensorcalc::problems::{logistic_regression, matrix_factorization, neural_net};
+use tensorcalc::tensor::{Tensor, XorShift};
+use tensorcalc::util::simd::{blocking, set_isa, supported_isas, Blocking, Isa};
+
+static ISA_LOCK: Mutex<()> = Mutex::new(());
+
+fn isa_lock() -> MutexGuard<'static, ()> {
+    // a failed assertion elsewhere must not wedge the rest of the wall
+    ISA_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// RAII flip of the process-global ISA; restores the previous tier on
+/// drop so a failing assertion cannot leak a forced ISA into later
+/// tests. Callers must already hold [`isa_lock`].
+struct IsaFlip {
+    prev: Isa,
+}
+
+impl IsaFlip {
+    fn to(isa: Isa) -> IsaFlip {
+        IsaFlip { prev: set_isa(isa) }
+    }
+}
+
+impl Drop for IsaFlip {
+    fn drop(&mut self) {
+        set_isa(self.prev);
+    }
+}
+
+/// One workload through the full option matrix. Each
+/// memory × epilogue × backend cell is compiled **once**, then re-run
+/// under forced scalar and under every dispatched ISA the CPU supports:
+/// the scalar run must stay allclose to the interpreter oracle, and
+/// every SIMD run must reproduce the scalar run bit for bit.
+fn check_wall(g: &Graph, roots: &[NodeId], env: &Env, label: &str) {
+    let oracle = Plan::new(g, roots).run(g, env);
+    let isas = supported_isas();
+    assert_eq!(isas[0], Isa::Scalar, "scalar must lead the ISA sweep");
+    for memory in [ExecMemory::Planned, ExecMemory::Pooled] {
+        for epilogue in [EpilogueMode::InTile, EpilogueMode::TwoPass] {
+            for backend in [BackendKind::Cpu, BackendKind::Direct] {
+                let plan = CompiledPlan::with_options(
+                    g,
+                    roots,
+                    true,
+                    epilogue,
+                    memory,
+                    backend,
+                    TraceMode::Off,
+                );
+                let cell = format!("{label} [{:?}/{:?}/{:?}]", memory, epilogue, backend);
+                let base = {
+                    let _s = IsaFlip::to(Isa::Scalar);
+                    plan.run(env)
+                };
+                assert_eq!(base.len(), oracle.len());
+                for (k, (tb, tw)) in base.iter().zip(&oracle).enumerate() {
+                    assert!(
+                        tb.allclose(tw, 1e-9, 1e-11),
+                        "{cell}: root {k}: forced scalar vs interpreter diff {}",
+                        tb.max_abs_diff(tw)
+                    );
+                }
+                for &isa in &isas[1..] {
+                    let _s = IsaFlip::to(isa);
+                    let got = plan.run(env);
+                    for (k, (tg, tb)) in got.iter().zip(&base).enumerate() {
+                        assert_eq!(
+                            tg.data(),
+                            tb.data(),
+                            "{cell}: root {k}: {} must be bit-identical to forced scalar",
+                            isa.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn gemm_bit_identical_across_isas() {
+    // the kernel seam in isolation, below the executor: accumulating
+    // GEMM on awkward shapes (m/n of 1, non-multiples of MR/NR, k both
+    // under and over KC so multi-KC-block flushes are covered too)
+    let _lock = isa_lock();
+    let isas = supported_isas();
+    let blk = blocking();
+    let mut rng = XorShift::new(0x51D0);
+    for &(m, k, n) in &[
+        (1usize, 1usize, 1usize),
+        (1, 7, 64),
+        (5, 300, 1),
+        (37, 61, 29),
+        (64, blk.kc, 48),
+        (33, blk.kc + 17, 70),
+        (96, 129, 131),
+    ] {
+        let a: Vec<f64> = (0..m * k).map(|_| rng.next_f64() - 0.5).collect();
+        let b: Vec<f64> = (0..k * n).map(|_| rng.next_f64() - 0.5).collect();
+        let base = {
+            let _s = IsaFlip::to(Isa::Scalar);
+            // non-zero C: the accumulate path is the contract
+            let mut c: Vec<f64> = (0..m * n).map(|i| (i % 5) as f64 * 0.125).collect();
+            gemm_into(&a, &b, &mut c, m, k, n);
+            c
+        };
+        for &isa in &isas[1..] {
+            let _s = IsaFlip::to(isa);
+            let mut c: Vec<f64> = (0..m * n).map(|i| (i % 5) as f64 * 0.125).collect();
+            gemm_into(&a, &b, &mut c, m, k, n);
+            assert_eq!(
+                c,
+                base,
+                "gemm {m}x{k}x{n}: {} diverged from forced scalar",
+                isa.name()
+            );
+        }
+        // and the scalar result itself is right: naive triple loop
+        let mut want = vec![0.0; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let av = a[i * k + p];
+                for j in 0..n {
+                    want[i * n + j] += av * b[p * n + j];
+                }
+            }
+        }
+        for (i, (&got, &w)) in base.iter().zip(&want).enumerate() {
+            let got = got - (i % 5) as f64 * 0.125;
+            assert!(
+                (got - w).abs() <= 1e-9 * w.abs().max(1.0),
+                "gemm {m}x{k}x{n}: element {i}: scalar {got} vs naive {w}"
+            );
+        }
+    }
+    // gemm() (the allocating wrapper) rides the same seam
+    let _s = IsaFlip::to(*isas.last().unwrap());
+    let a = vec![1.0; 6];
+    let b = vec![2.0; 6];
+    assert_eq!(gemm(&a, &b, 2, 3, 2), vec![6.0; 4]);
+}
+
+#[test]
+fn logreg_gradient_wall() {
+    let _lock = isa_lock();
+    let mut w = logistic_regression(96, 8);
+    let grad = w.gradient();
+    check_wall(&w.g, &[w.loss, grad], &w.env, "logreg-grad");
+}
+
+#[test]
+fn matfac_compressed_hessian_wall() {
+    // §3.3 compressed Hessian core: dense contraction chains over
+    // shared sub-DAGs — the heaviest GEMM mix in the suite
+    let _lock = isa_lock();
+    let mut w = matrix_factorization(12, 12, 3, false);
+    let comp = w.hessian_compressed();
+    assert!(comp.is_compressed());
+    let core = comp.eval_node();
+    check_wall(&w.g, &[core], &w.env, "matfac-hess-compressed");
+}
+
+#[test]
+fn neural_net_hessian_optimized_wall() {
+    // reverse-over-reverse MLP Hessian after OptLevel::Full: the
+    // deepest fused element-wise pipelines, so this cell exercises the
+    // lane-chunked FusedKernel interpreter as hard as the microkernels
+    let _lock = isa_lock();
+    let mut w = neural_net(6, 4, 10);
+    let h = w.hessian();
+    let mut g2 = w.g.clone();
+    let o = optimize(&mut g2, &[h], OptLevel::Full);
+    check_wall(&g2, &o.roots, &w.env, "mlp-hess-opt");
+}
+
+#[test]
+fn batched_serving_wall() {
+    // the serving path's shape: canonicalise exactly as the engine
+    // does (optimize → compact → batch_graph), sweep the batched graph
+    // through the full wall, then check the dispatched-ISA batched
+    // outputs still decompose into the per-request interpreter answers
+    let _lock = isa_lock();
+    let bsz = 4usize;
+    let mut w = logistic_regression(8, 4);
+    let grad = w.gradient();
+    let roots = [w.loss, grad];
+    let mut g2 = w.g.clone();
+    let o = optimize(&mut g2, &roots, OptLevel::Full);
+    let (gc, croots) = compact(&g2, &o.roots);
+    let (bg, broots) = batch_graph(&gc, &croots, bsz);
+
+    let vars: Vec<(String, Vec<usize>)> = w
+        .g
+        .var_names()
+        .into_iter()
+        .map(|n| {
+            let id = w.g.var_id(&n).unwrap();
+            (n, w.g.shape(id).to_vec())
+        })
+        .collect();
+    let mut envs = Vec::new();
+    for b in 0..bsz {
+        let mut env = Env::new();
+        for (i, (name, shape)) in vars.iter().enumerate() {
+            let seed = 900 + (b * vars.len() + i) as u64;
+            env.insert(name, Tensor::randn(shape, seed).scale(0.5));
+        }
+        envs.push(env);
+    }
+    let mut benv = Env::new();
+    for (name, _) in &vars {
+        let mut bshape = vec![bsz];
+        let first = envs[0].get(name).unwrap();
+        bshape.extend_from_slice(first.shape());
+        let mut data = Vec::with_capacity(bsz * first.len());
+        for e in &envs {
+            data.extend_from_slice(e.get(name).unwrap().data());
+        }
+        benv.insert(name, Tensor::new(&bshape, data));
+    }
+
+    check_wall(&bg, &broots, &benv, "logreg-grad-batched");
+
+    let bplan = CompiledPlan::with_backend(&bg, &broots, BackendKind::Direct);
+    let interp = Plan::new(&w.g, &roots);
+    for &isa in &supported_isas() {
+        let _s = IsaFlip::to(isa);
+        let batched = bplan.run(&benv);
+        for (b, env) in envs.iter().enumerate() {
+            let want_all = interp.run(&w.g, env);
+            for (r, want) in want_all.iter().enumerate() {
+                let len = want.len();
+                let chunk = batched[r].data()[b * len..(b + 1) * len].to_vec();
+                let slice = Tensor::new(want.shape(), chunk);
+                assert!(
+                    slice.allclose(want, 1e-9, 1e-11),
+                    "{}: slice {b} of root {r} diverged from the per-request \
+                     oracle, diff {}",
+                    isa.name(),
+                    slice.max_abs_diff(want)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn steady_state_stays_zero_alloc_under_simd() {
+    // the dispatch indirection must not disturb the Off-trace steady
+    // state: after warm-up under the widest dispatched ISA, re-runs
+    // allocate no new arenas and never touch the pool mutex
+    let _lock = isa_lock();
+    let best = *supported_isas().last().unwrap();
+    let _s = IsaFlip::to(best);
+    let mut w = logistic_regression(48, 12);
+    let grad = w.gradient();
+    let plan = CompiledPlan::new(&w.g, &[w.loss, grad]);
+    let first = plan.run(&w.env);
+    let cold = plan.pool_stats();
+    for _ in 0..5 {
+        let again = plan.run(&w.env);
+        assert_eq!(again[0].data(), first[0].data(), "warm re-run drifted under {best:?}");
+        assert_eq!(again[1].data(), first[1].data());
+    }
+    let warm = plan.pool_stats();
+    assert_eq!(
+        warm.arena_allocs, cold.arena_allocs,
+        "arena grew after warm-up under {best:?}: {:?}",
+        warm
+    );
+    assert_eq!(
+        warm.pool_locks, 0,
+        "planned mode took the pool mutex under {best:?}: {:?}",
+        warm
+    );
+}
+
+#[test]
+fn dispatch_surface_parses_and_validates() {
+    // the knobs the wall (and CI) steer by: TC_SIMD names round-trip,
+    // the active blocking is sane, and every supported tier is flippable
+    let _lock = isa_lock();
+    for isa in [Isa::Scalar, Isa::Avx2, Isa::Avx512, Isa::Neon] {
+        assert_eq!(Isa::parse(isa.name()), Some(isa));
+    }
+    assert_eq!(Isa::parse("off"), Some(Isa::Scalar));
+    assert_eq!(Isa::parse("AVX2"), Some(Isa::Avx2));
+    assert_eq!(Isa::parse("sse9"), None);
+
+    let blk = blocking();
+    blk.validate().expect("the process blocking must validate");
+    let spec = format!("{},{},{},{},{}", blk.mr, blk.nr, blk.mc, blk.kc, blk.nc);
+    assert_eq!(Blocking::parse(&spec).unwrap(), blk, "blocking must round-trip via its spec");
+    assert!(Blocking::parse("4,8,63,256,512").is_err(), "MC % MR != 0 must be rejected");
+
+    for isa in supported_isas() {
+        let prev = set_isa(isa);
+        set_isa(prev);
+    }
+}

@@ -59,6 +59,12 @@ SCHEMAS = {
     "tensorcalc-serve-load/v1": SERVE_ROW,
 }
 
+# figures the full ablation bench must always record — a refactor that
+# silently drops one of these dimensions fails the build
+REQUIRED_FIGURES = {
+    "tensorcalc-bench-rows/v1": {"simd"},
+}
+
 
 def type_name(t):
     return getattr(t, "__name__", str(t))
@@ -180,6 +186,13 @@ def check_file(path):
     fields = SCHEMAS[schema]
     for i, row in enumerate(rows):
         errors.extend(check_row(row, fields, "%s: rows[%d]" % (path, i)))
+    have = {row.get("figure") for row in rows if isinstance(row, dict)}
+    for fig in sorted(REQUIRED_FIGURES.get(schema, ())):
+        if fig not in have:
+            errors.append(
+                "%s: required figure %r has no rows (the %s ablation was dropped)"
+                % (path, fig, fig)
+            )
     if not errors:
         print("%s: OK (%s, %d rows)" % (path, schema, len(rows)))
     return errors
