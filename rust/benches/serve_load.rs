@@ -1,29 +1,41 @@
 //! Open-loop load bench for the coordinator's dynamic-batching serving
 //! path.
 //!
-//! A single submitter fires requests at a fixed *offered* rate against a
-//! logistic-regression gradient entry, twice per rate: once with the
-//! default dynamic batch cap and once with `max_batch = 1` (the
-//! ablation baseline, batching off). Latency is measured from each
-//! request's **scheduled** send time, not from when `submit` returned —
-//! the open-loop discipline that makes queueing delay under saturation
-//! visible instead of silently eliding it (coordinated omission).
+//! Two kinds of cell:
+//!
+//! * `sweep` — a single submitter fires requests at a fixed *offered*
+//!   rate against a logistic-regression gradient entry, twice per rate:
+//!   once with the default dynamic batch cap and once with
+//!   `max_batch = 1` (the ablation baseline, batching off).
+//! * `overload` — the robustness row: offered rate far beyond capacity,
+//!   a small queue under `ShedPolicy::ShedOldest`, and a per-request
+//!   deadline. What matters here is *goodput* (achieved/s counts only
+//!   requests answered `Ok`), the shed/expired split, and the p99 of
+//!   the admitted-and-served requests.
+//!
+//! Latency is measured from each request's **scheduled** send time, not
+//! from when `submit` returned — the open-loop discipline that makes
+//! queueing delay under saturation visible instead of silently eliding
+//! it (coordinated omission).
 //!
 //! Run: `cargo bench --bench serve_load`
 //!
-//! `BENCH_SECS=<secs>` sets the duration of each (rate, cap) cell
-//! (default 0.3; CI's bench-smoke job uses a small value) and
-//! `BENCH_JSON=<path>` records every row — the hook
-//! `scripts/bench_serve.sh` uses to write `BENCH_serve.json`.
+//! `BENCH_SECS=<secs>` sets the duration of each cell (default 0.3;
+//! CI's bench-smoke job uses a small value) and `BENCH_JSON=<path>`
+//! records every row — the hook `scripts/bench_serve.sh` uses to write
+//! `BENCH_serve.json`.
 
 use std::sync::mpsc::TryRecvError;
 use std::time::{Duration, Instant};
-use tensorcalc::coordinator::{Coordinator, EngineEntry, DEFAULT_MAX_BATCH};
+use tensorcalc::coordinator::{
+    Coordinator, EngineEntry, Request, ShedPolicy, DEFAULT_MAX_BATCH,
+};
 use tensorcalc::problems::logistic_regression;
 use tensorcalc::tensor::Tensor;
 use tensorcalc::util::fmt_secs;
 
 struct LoadRow {
+    cell: &'static str,
     max_batch: usize,
     offered_rps: f64,
     achieved_rps: f64,
@@ -31,6 +43,33 @@ struct LoadRow {
     p99: f64,
     sent: usize,
     dropped: usize,
+    shed: u64,
+    expired: u64,
+    /// per-request deadline budget; 0 = no deadline
+    deadline_ms: u64,
+}
+
+/// One cell's knobs beyond (cap, rate): the robustness axis.
+struct CellCfg {
+    cell: &'static str,
+    queue_cap: usize,
+    policy: ShedPolicy,
+    deadline_ms: u64,
+}
+
+impl CellCfg {
+    fn sweep() -> Self {
+        CellCfg { cell: "sweep", queue_cap: 4096, policy: ShedPolicy::Reject, deadline_ms: 0 }
+    }
+
+    fn overload() -> Self {
+        CellCfg {
+            cell: "overload",
+            queue_cap: 256,
+            policy: ShedPolicy::ShedOldest,
+            deadline_ms: 50,
+        }
+    }
 }
 
 /// Nearest-rank percentile of an already-sorted sample.
@@ -42,12 +81,12 @@ fn percentile(sorted: &[f64], q: f64) -> f64 {
     sorted[rank.clamp(1, sorted.len()) - 1]
 }
 
-fn run_load(max_batch: usize, offered_rps: f64, secs: f64) -> LoadRow {
+fn run_load(cfg: &CellCfg, max_batch: usize, offered_rps: f64, secs: f64) -> LoadRow {
     let (m, n) = (64usize, 16usize);
     let mut wl = logistic_regression(m, n);
     let grad = wl.gradient();
     let roots = [wl.loss, grad];
-    let mut c = Coordinator::new(4096);
+    let mut c = Coordinator::new(cfg.queue_cap);
     c.register_engine(
         "grad",
         EngineEntry::compiled(
@@ -59,7 +98,8 @@ fn run_load(max_batch: usize, offered_rps: f64, secs: f64) -> LoadRow {
                 ("w".into(), vec![n]),
             ],
         )
-        .with_max_batch(max_batch),
+        .with_max_batch(max_batch)
+        .with_shed_policy(cfg.policy),
     );
 
     let x = Tensor::randn(&[m, n], 11);
@@ -77,16 +117,24 @@ fn run_load(max_batch: usize, offered_rps: f64, secs: f64) -> LoadRow {
         while Instant::now() < due {
             std::hint::spin_loop();
         }
-        match c.submit("grad", vec![x.clone(), y.clone(), wv.clone()]) {
+        let inputs = vec![x.clone(), y.clone(), wv.clone()];
+        let req = if cfg.deadline_ms > 0 {
+            Request::new(inputs).with_deadline(Duration::from_millis(cfg.deadline_ms))
+        } else {
+            Request::new(inputs)
+        };
+        match c.submit_with("grad", req) {
             Ok(rx) => {
                 sent += 1;
                 pending.push((due, rx));
             }
-            // backpressure (queue full): an open-loop generator drops
-            // the request and keeps its schedule
+            // backpressure (queue full / expired at admission): an
+            // open-loop generator drops the request and keeps its
+            // schedule
             Err(_) => dropped += 1,
         }
-        // reap finished responses without blocking the send schedule
+        // reap finished responses without blocking the send schedule;
+        // only `Ok` answers count toward goodput and the latency sample
         pending.retain(|(due, rx)| match rx.try_recv() {
             Ok(Ok(_)) => {
                 lat.push(due.elapsed().as_secs_f64());
@@ -107,9 +155,11 @@ fn run_load(max_batch: usize, offered_rps: f64, secs: f64) -> LoadRow {
     }
     let wall = t0.elapsed().as_secs_f64();
     c.shutdown();
+    let snap = c.metrics().snapshot();
 
     lat.sort_by(f64::total_cmp);
     LoadRow {
+        cell: cfg.cell,
         max_batch,
         offered_rps,
         achieved_rps: lat.len() as f64 / wall,
@@ -117,17 +167,22 @@ fn run_load(max_batch: usize, offered_rps: f64, secs: f64) -> LoadRow {
         p99: percentile(&lat, 0.99),
         sent,
         dropped,
+        shed: snap.shed,
+        expired: snap.expired + snap.rejected_expired,
+        deadline_ms: cfg.deadline_ms,
     }
 }
 
 fn rows_to_json(rows: &[LoadRow]) -> String {
     let mut out =
-        String::from("{\n  \"schema\": \"tensorcalc-serve-load/v1\",\n  \"rows\": [\n");
+        String::from("{\n  \"schema\": \"tensorcalc-serve-load/v2\",\n  \"rows\": [\n");
     for (i, r) in rows.iter().enumerate() {
         out.push_str(&format!(
-            "    {{\"entry\": \"logreg_grad\", \"max_batch\": {}, \"offered_rps\": {}, \
-             \"achieved_rps\": {:.1}, \"p50_secs\": {:e}, \"p99_secs\": {:e}, \
-             \"sent\": {}, \"dropped\": {}}}{}\n",
+            "    {{\"entry\": \"logreg_grad\", \"cell\": \"{}\", \"max_batch\": {}, \
+             \"offered_rps\": {}, \"achieved_rps\": {:.1}, \"p50_secs\": {:e}, \
+             \"p99_secs\": {:e}, \"sent\": {}, \"dropped\": {}, \"shed\": {}, \
+             \"expired\": {}, \"deadline_ms\": {}}}{}\n",
+            r.cell,
             r.max_batch,
             r.offered_rps,
             r.achieved_rps,
@@ -135,6 +190,9 @@ fn rows_to_json(rows: &[LoadRow]) -> String {
             r.p99,
             r.sent,
             r.dropped,
+            r.shed,
+            r.expired,
+            r.deadline_ms,
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }
@@ -149,30 +207,37 @@ fn main() {
         .unwrap_or(0.3);
 
     let mut rows = Vec::new();
+    let sweep = CellCfg::sweep();
     for &rate in &[1000.0f64, 4000.0, 16000.0] {
         for &cap in &[DEFAULT_MAX_BATCH, 1] {
-            rows.push(run_load(cap, rate, secs));
+            rows.push(run_load(&sweep, cap, rate, secs));
         }
     }
+    // the robustness row: offered load far beyond capacity, small queue,
+    // shed-oldest, 50ms deadlines — goodput + shed/expired split
+    rows.push(run_load(&CellCfg::overload(), DEFAULT_MAX_BATCH, 32000.0, secs));
 
     println!(
         "\n== serve_load — logreg grad (64×16), open loop, {}s per cell ==",
         secs
     );
     println!(
-        "{:>9} {:>10} {:>13} {:>10} {:>10} {:>7} {:>8}",
-        "batch", "offered/s", "achieved/s", "p50", "p99", "sent", "dropped"
+        "{:>9} {:>9} {:>10} {:>13} {:>10} {:>10} {:>7} {:>8} {:>6} {:>8}",
+        "cell", "batch", "offered/s", "goodput/s", "p50", "p99", "sent", "dropped", "shed", "expired"
     );
     for r in &rows {
         println!(
-            "{:>9} {:>10.0} {:>13.0} {:>10} {:>10} {:>7} {:>8}",
+            "{:>9} {:>9} {:>10.0} {:>13.0} {:>10} {:>10} {:>7} {:>8} {:>6} {:>8}",
+            r.cell,
             if r.max_batch == 1 { "off".to_string() } else { format!("≤{}", r.max_batch) },
             r.offered_rps,
             r.achieved_rps,
             fmt_secs(r.p50).trim(),
             fmt_secs(r.p99).trim(),
             r.sent,
-            r.dropped
+            r.dropped,
+            r.shed,
+            r.expired
         );
     }
 

@@ -1,0 +1,158 @@
+//! The overload degradation ladder: trade per-request latency headroom
+//! for availability when an entry's queue stays hot.
+//!
+//! Each engine worker feeds the ladder one observation per drain — how
+//! many jobs the drain pulled, relative to the queue capacity. Sustained
+//! hot drains escalate the level; sustained cool drains walk it back
+//! (with hysteresis on both edges so one burst cannot flap the ladder):
+//!
+//! * **Level 0** — normal: chunks up to `max_batch`, partial buckets
+//!   padded to the next power of two, batch variants compiled lazily if
+//!   missing.
+//! * **Level 1** — capped: chunks snap to the largest *already-compiled*
+//!   power-of-two bucket that fits exactly. No pad slots are computed
+//!   and wasted, and the serving path never compiles — throughput is
+//!   spent only on live work.
+//! * **Level 2** — base plan only: every request runs the entry's cached
+//!   `OptLevel::None` canonical plan (batch 1). Maximum availability,
+//!   zero batching wait.
+//!
+//! Degraded output equals normal output bit-for-bit: every level serves
+//! from the same frozen canonical graph through bucket variants that are
+//! already pinned bit-identical per slice (`tests/serve_batch.rs`), so
+//! the ladder changes *scheduling*, never numerics — asserted again
+//! end-to-end in `tests/chaos.rs`.
+
+/// Per-worker escalation state. Deterministic: level transitions depend
+/// only on the sequence of drain sizes fed in.
+#[derive(Debug)]
+pub struct DegradeLadder {
+    level: u8,
+    hot: u32,
+    cool: u32,
+    /// a drain pulling at least this many jobs is "hot"
+    high_fill: usize,
+    /// a drain pulling at most this many jobs is "cool"
+    low_fill: usize,
+    escalate_after: u32,
+    deescalate_after: u32,
+}
+
+/// Highest ladder level (base-plan-only serving).
+pub const MAX_DEGRADE_LEVEL: u8 = 2;
+
+impl DegradeLadder {
+    /// Thresholds derive from the queue capacity: hot at half-full
+    /// drains, cool at one-eighth. Escalation needs 3 consecutive hot
+    /// drains; de-escalation needs 8 consecutive cool ones — recovering
+    /// is deliberately slower than degrading.
+    pub fn new(queue_cap: usize) -> Self {
+        DegradeLadder {
+            level: 0,
+            hot: 0,
+            cool: 0,
+            high_fill: (queue_cap / 2).max(2),
+            low_fill: (queue_cap / 8).max(1),
+            escalate_after: 3,
+            deescalate_after: 8,
+        }
+    }
+
+    pub fn level(&self) -> u8 {
+        self.level
+    }
+
+    /// Feed one drain's job count. Returns `(level, escalated)` —
+    /// `escalated` is true exactly when this observation raised the
+    /// level (the metrics hook counts those transitions).
+    pub fn observe_drain(&mut self, drained: usize) -> (u8, bool) {
+        if drained >= self.high_fill {
+            self.hot += 1;
+            self.cool = 0;
+            if self.hot >= self.escalate_after && self.level < MAX_DEGRADE_LEVEL {
+                self.level += 1;
+                self.hot = 0;
+                return (self.level, true);
+            }
+        } else if drained <= self.low_fill {
+            self.cool += 1;
+            self.hot = 0;
+            if self.cool >= self.deescalate_after && self.level > 0 {
+                self.level -= 1;
+                self.cool = 0;
+            }
+        } else {
+            // mid-band drains reset both streaks: hysteresis
+            self.hot = 0;
+            self.cool = 0;
+        }
+        (self.level, false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sustained_hot_drains_escalate_stepwise() {
+        let mut l = DegradeLadder::new(16); // hot ≥ 8, cool ≤ 2
+        assert_eq!(l.observe_drain(8), (0, false));
+        assert_eq!(l.observe_drain(8), (0, false));
+        assert_eq!(l.observe_drain(8), (1, true), "third hot drain escalates");
+        assert_eq!(l.observe_drain(16), (1, false));
+        assert_eq!(l.observe_drain(16), (1, false));
+        assert_eq!(l.observe_drain(16), (2, true));
+        // the ladder tops out at MAX_DEGRADE_LEVEL
+        for _ in 0..10 {
+            assert_eq!(l.observe_drain(16).0, MAX_DEGRADE_LEVEL);
+        }
+    }
+
+    #[test]
+    fn recovery_needs_a_longer_cool_streak() {
+        let mut l = DegradeLadder::new(16);
+        for _ in 0..3 {
+            l.observe_drain(16);
+        }
+        assert_eq!(l.level(), 1);
+        // 7 cool drains are not enough
+        for _ in 0..7 {
+            assert_eq!(l.observe_drain(1).0, 1);
+        }
+        assert_eq!(l.observe_drain(1), (0, false), "eighth cool drain de-escalates");
+    }
+
+    #[test]
+    fn mid_band_drains_break_both_streaks() {
+        let mut l = DegradeLadder::new(16);
+        l.observe_drain(8);
+        l.observe_drain(8);
+        l.observe_drain(4); // mid-band: resets the hot streak
+        assert_eq!(l.observe_drain(8), (0, false));
+        assert_eq!(l.observe_drain(8), (0, false));
+        assert_eq!(l.observe_drain(8), (1, true));
+        // and on the way down: a mid-band drain resets the cool streak
+        for _ in 0..7 {
+            l.observe_drain(1);
+        }
+        l.observe_drain(4);
+        for _ in 0..7 {
+            assert_eq!(l.observe_drain(1).0, 1);
+        }
+        assert_eq!(l.observe_drain(1).0, 0);
+    }
+
+    #[test]
+    fn tiny_queues_still_have_a_working_band() {
+        let mut l = DegradeLadder::new(1); // hot ≥ 2, cool ≤ 1
+        for _ in 0..3 {
+            l.observe_drain(5);
+        }
+        assert_eq!(l.level(), 1, "cap-1 queues must still be able to degrade");
+        for _ in 0..8 {
+            l.observe_drain(0);
+        }
+        assert_eq!(l.level(), 0);
+    }
+}

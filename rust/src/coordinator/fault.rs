@@ -1,0 +1,244 @@
+//! Deterministic, zero-dependency fault injection for the serving
+//! layer. A [`FaultPlan`] is a seeded RNG plus per-site firing rates;
+//! the coordinator consults it at four named sites in the request path:
+//!
+//! * [`FaultSite::QueueFull`] — `submit` pretends the entry queue is at
+//!   capacity (the caller sees a retryable `SubmitError::QueueFull`).
+//! * [`FaultSite::ServiceLatency`] — the worker sleeps before executing
+//!   a chunk, simulating a slow plan (drives deadline expiry and queue
+//!   buildup deterministically in tests).
+//! * [`FaultSite::ExecPanic`] — the worker panics inside the
+//!   `catch_unwind` that guards plan execution.
+//! * [`FaultSite::ReplyDrop`] — the worker drops a reply channel
+//!   without sending (the caller sees `RecvError`, never a hang).
+//!
+//! Faults never corrupt the metrics contract: a dropped reply is still
+//! *counted* by the worker before the drop, so the balance invariant
+//! `submitted == completed + errors + shed + expired` pinned by
+//! `tests/chaos.rs` holds under every plan.
+//!
+//! The draw sequence is a single seeded [`XorShift`] stream, so a given
+//! (seed, request schedule) replays the same faults — that is what lets
+//! the chaos suite assert exact behavior instead of "usually works".
+//! Enable in production-shaped runs via the `TC_FAULT` env var, e.g.
+//! `TC_FAULT="seed=42,exec_panic=0.05,latency=0.2,latency_ms=5"`.
+
+use crate::tensor::XorShift;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// A named injection point in the serving path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultSite {
+    /// `Coordinator::submit`: reject as if the queue were full.
+    QueueFull,
+    /// Worker, before plan execution: sleep for the plan's latency.
+    ServiceLatency,
+    /// Worker, inside the execution `catch_unwind`: panic.
+    ExecPanic,
+    /// Worker, at reply time: drop the channel without sending.
+    ReplyDrop,
+}
+
+/// Seeded per-site fault rates. `FaultPlan::none()` is the always-off
+/// fast path (no lock taken); a plan built by [`FaultPlan::seeded`] or
+/// [`FaultPlan::from_env`] draws one RNG value per consulted site.
+#[derive(Debug)]
+pub struct FaultPlan {
+    enabled: bool,
+    queue_full: f64,
+    exec_panic: f64,
+    latency: f64,
+    latency_dur: Duration,
+    reply_drop: f64,
+    rng: Mutex<XorShift>,
+}
+
+impl FaultPlan {
+    /// No faults, ever. The coordinator default.
+    pub fn none() -> Self {
+        FaultPlan {
+            enabled: false,
+            queue_full: 0.0,
+            exec_panic: 0.0,
+            latency: 0.0,
+            latency_dur: Duration::from_millis(1),
+            reply_drop: 0.0,
+            rng: Mutex::new(XorShift::new(1)),
+        }
+    }
+
+    /// An active plan with every rate at zero; compose with
+    /// [`FaultPlan::with_rate`] / [`FaultPlan::with_latency`].
+    pub fn seeded(seed: u64) -> Self {
+        FaultPlan { enabled: true, rng: Mutex::new(XorShift::new(seed)), ..Self::none() }
+    }
+
+    /// Set one site's firing probability (clamped to `[0, 1]`).
+    pub fn with_rate(mut self, site: FaultSite, rate: f64) -> Self {
+        let rate = rate.clamp(0.0, 1.0);
+        match site {
+            FaultSite::QueueFull => self.queue_full = rate,
+            FaultSite::ExecPanic => self.exec_panic = rate,
+            FaultSite::ServiceLatency => self.latency = rate,
+            FaultSite::ReplyDrop => self.reply_drop = rate,
+        }
+        self
+    }
+
+    /// Set the sleep injected when [`FaultSite::ServiceLatency`] fires.
+    pub fn with_latency(mut self, dur: Duration) -> Self {
+        self.latency_dur = dur;
+        self
+    }
+
+    /// Whether any site can fire at all.
+    pub fn is_active(&self) -> bool {
+        self.enabled
+            && (self.queue_full > 0.0
+                || self.exec_panic > 0.0
+                || self.latency > 0.0
+                || self.reply_drop > 0.0)
+    }
+
+    /// Parse `TC_FAULT` (comma-separated `key=value`: `seed`,
+    /// `queue_full`, `exec_panic`, `latency`, `latency_ms`,
+    /// `reply_drop`). `None` when unset or empty; malformed specs panic
+    /// loudly — a typo silently disabling chaos is worse than a crash.
+    pub fn from_env() -> Option<FaultPlan> {
+        let spec = std::env::var("TC_FAULT").ok()?;
+        if spec.trim().is_empty() {
+            return None;
+        }
+        Some(Self::parse(&spec))
+    }
+
+    fn parse(spec: &str) -> FaultPlan {
+        let mut plan = FaultPlan::seeded(1);
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, val) = part
+                .split_once('=')
+                .unwrap_or_else(|| panic!("TC_FAULT: expected key=value, got {:?}", part));
+            let rate = |what: &str| -> f64 {
+                val.parse::<f64>()
+                    .unwrap_or_else(|_| panic!("TC_FAULT: bad {} value {:?}", what, val))
+                    .clamp(0.0, 1.0)
+            };
+            match key {
+                "seed" => {
+                    let s: u64 = val
+                        .parse()
+                        .unwrap_or_else(|_| panic!("TC_FAULT: bad seed value {:?}", val));
+                    plan.rng = Mutex::new(XorShift::new(s));
+                }
+                "queue_full" => plan.queue_full = rate("queue_full"),
+                "exec_panic" => plan.exec_panic = rate("exec_panic"),
+                "latency" => plan.latency = rate("latency"),
+                "latency_ms" => {
+                    let ms: u64 = val
+                        .parse()
+                        .unwrap_or_else(|_| panic!("TC_FAULT: bad latency_ms value {:?}", val));
+                    plan.latency_dur = Duration::from_millis(ms);
+                }
+                "reply_drop" => plan.reply_drop = rate("reply_drop"),
+                other => panic!("TC_FAULT: unknown key {:?}", other),
+            }
+        }
+        plan
+    }
+
+    fn rate(&self, site: FaultSite) -> f64 {
+        match site {
+            FaultSite::QueueFull => self.queue_full,
+            FaultSite::ExecPanic => self.exec_panic,
+            FaultSite::ServiceLatency => self.latency,
+            FaultSite::ReplyDrop => self.reply_drop,
+        }
+    }
+
+    /// Draw: does `site` fire now? Rate-0 sites draw nothing, so adding
+    /// a rate to one site never shifts another site's replay sequence.
+    pub fn fire(&self, site: FaultSite) -> bool {
+        if !self.enabled {
+            return false;
+        }
+        let rate = self.rate(site);
+        if rate <= 0.0 {
+            return false;
+        }
+        if rate >= 1.0 {
+            return true;
+        }
+        let x = self.rng.lock().unwrap().next_u64();
+        (x as f64) < rate * (u64::MAX as f64)
+    }
+
+    /// Sleep if [`FaultSite::ServiceLatency`] fires.
+    pub fn maybe_delay(&self) {
+        if self.fire(FaultSite::ServiceLatency) {
+            std::thread::sleep(self.latency_dur);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_never_fires() {
+        let p = FaultPlan::none();
+        assert!(!p.is_active());
+        for _ in 0..100 {
+            assert!(!p.fire(FaultSite::ExecPanic));
+            assert!(!p.fire(FaultSite::QueueFull));
+        }
+    }
+
+    #[test]
+    fn rate_bounds_are_exact() {
+        let p = FaultPlan::seeded(7).with_rate(FaultSite::ExecPanic, 1.0);
+        for _ in 0..100 {
+            assert!(p.fire(FaultSite::ExecPanic));
+        }
+        let p = FaultPlan::seeded(7).with_rate(FaultSite::ExecPanic, 0.0);
+        for _ in 0..100 {
+            assert!(!p.fire(FaultSite::ExecPanic));
+        }
+    }
+
+    #[test]
+    fn same_seed_replays_the_same_firing_sequence() {
+        let draw = |seed: u64| -> Vec<bool> {
+            let p = FaultPlan::seeded(seed).with_rate(FaultSite::ReplyDrop, 0.5);
+            (0..64).map(|_| p.fire(FaultSite::ReplyDrop)).collect()
+        };
+        assert_eq!(draw(42), draw(42), "a seed must replay deterministically");
+        assert_ne!(draw(42), draw(43), "different seeds must diverge");
+        let seq = draw(42);
+        assert!(seq.iter().any(|&b| b) && seq.iter().any(|&b| !b), "rate 0.5 mixes outcomes");
+    }
+
+    #[test]
+    fn env_spec_parses_every_key() {
+        let p = FaultPlan::parse(
+            "seed=9,queue_full=0.25,exec_panic=0.5,latency=1.0,latency_ms=7,reply_drop=0.1",
+        );
+        assert!(p.is_active());
+        assert_eq!(p.queue_full, 0.25);
+        assert_eq!(p.exec_panic, 0.5);
+        assert_eq!(p.latency, 1.0);
+        assert_eq!(p.latency_dur, Duration::from_millis(7));
+        assert_eq!(p.reply_drop, 0.1);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown key")]
+    fn env_spec_rejects_unknown_keys() {
+        let _ = FaultPlan::parse("seed=1,typo_rate=0.5");
+    }
+}

@@ -2,8 +2,15 @@
 //! reservoirs (uniform Algorithm R sampling), per-entry log₂ histograms
 //! for queue-wait and service time, batch-size distributions, a live
 //! queue-depth gauge, registered gauges (lease recycling, compile
-//! counters), and a Prometheus-style text exposition
+//! counters, degrade level), and a Prometheus-style text exposition
 //! ([`Metrics::render_prometheus`]).
+//!
+//! Accounting contract (pinned by `tests/chaos.rs`): every *admitted*
+//! request resolves into exactly one of completed / errors / shed /
+//! expired, so `submitted == completed + errors + shed + expired` once
+//! the queues drain. Admission-time refusals (queue-full rejects,
+//! already-expired deadlines) are counted separately in
+//! `rejected_full` / `rejected_expired` and never enter the balance.
 
 use crate::tensor::XorShift;
 use std::collections::{BTreeMap, HashMap};
@@ -15,11 +22,34 @@ use std::sync::Mutex;
 /// `pool_stats`). Boxed so callers can register anything.
 type GaugeFn = Box<dyn Fn() -> f64 + Send>;
 
+/// How one admitted request resolved — the argument to
+/// [`Metrics::observe`]. Exactly one per admitted request, which is
+/// what makes the balance invariant checkable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Answered with a response.
+    Ok,
+    /// Answered with an error (panic, invalid input, backend failure).
+    Error,
+    /// Evicted under `ShedPolicy::ShedOldest`, answered `Err(Shed)`.
+    Shed,
+    /// Deadline passed before execution, answered `Err(Expired)`.
+    Expired,
+}
+
 /// Shared metrics for the coordinator.
 pub struct Metrics {
     submitted: AtomicU64,
     completed: AtomicU64,
     errors: AtomicU64,
+    shed: AtomicU64,
+    expired: AtomicU64,
+    /// admission refusals: queue at capacity (retryable)
+    rejected_full: AtomicU64,
+    /// admission refusals: deadline already expired at submit
+    rejected_expired: AtomicU64,
+    /// chunks served under a nonzero degrade-ladder level
+    degraded: AtomicU64,
     /// jobs sitting in worker channels right now: +1 at enqueue, −1 at
     /// drain (signed so a racy snapshot renders a transient −1 instead
     /// of wrapping)
@@ -36,8 +66,19 @@ pub struct Metrics {
 #[derive(Debug, Clone)]
 pub struct Snapshot {
     pub submitted: u64,
+    /// requests answered with a response (successes only)
     pub completed: u64,
     pub errors: u64,
+    /// requests evicted under `ShedPolicy::ShedOldest`
+    pub shed: u64,
+    /// requests whose deadline passed before execution
+    pub expired: u64,
+    /// admission refusals: queue full
+    pub rejected_full: u64,
+    /// admission refusals: deadline already expired at submit
+    pub rejected_expired: u64,
+    /// chunks served under a nonzero degrade level
+    pub degraded: u64,
     /// per-entry (samples held, p50, p99) in seconds
     pub per_entry: Vec<(String, usize, f64, f64)>,
 }
@@ -105,6 +146,8 @@ struct EntryMetrics {
     /// distribution weights what requests experienced)
     batch_sizes: BTreeMap<usize, u64>,
     errors: u64,
+    shed: u64,
+    expired: u64,
 }
 
 impl EntryMetrics {
@@ -115,6 +158,8 @@ impl EntryMetrics {
             service: Histogram::new(),
             batch_sizes: BTreeMap::new(),
             errors: 0,
+            shed: 0,
+            expired: 0,
         }
     }
 }
@@ -157,6 +202,11 @@ impl Metrics {
             submitted: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            expired: AtomicU64::new(0),
+            rejected_full: AtomicU64::new(0),
+            rejected_expired: AtomicU64::new(0),
+            degraded: AtomicU64::new(0),
             queue_depth: AtomicI64::new(0),
             entries: Mutex::new(HashMap::new()),
             gauges: Mutex::new(BTreeMap::new()),
@@ -177,30 +227,59 @@ impl Metrics {
         self.queue_depth.fetch_sub(1, Ordering::Relaxed);
     }
 
-    /// Record one finished request with its full timing breakdown:
-    /// `queue_secs` from enqueue to drain, `service_secs` from drain to
-    /// reply, `batch` the fused batch it rode in. The latency reservoir
-    /// samples the sum (what the caller experienced).
+    /// An admission-time refusal because the entry's queue was full
+    /// (the caller saw `SubmitError::QueueFull`). Pre-PR a full queue
+    /// was invisible to the Prometheus surface.
+    pub fn rejected_queue_full(&self) {
+        self.rejected_full.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// An admission-time refusal because the deadline had already
+    /// passed (the caller saw `SubmitError::Expired`).
+    pub fn rejected_expired(&self) {
+        self.rejected_expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One chunk was served under a nonzero degrade-ladder level.
+    pub fn degraded_run(&self) {
+        self.degraded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record the resolution of one *admitted* request with its timing
+    /// breakdown: `queue_secs` from enqueue to drain, `service_secs`
+    /// from drain to reply, `batch` the fused batch it rode in. Exactly
+    /// one call per admitted request — that is the balance invariant.
+    /// Sheds and expiries record their queue wait (the time the system
+    /// held the request) but contribute no latency/service/batch
+    /// samples, which describe executed requests only.
     pub fn observe(
         &self,
         entry: &str,
         queue_secs: f64,
         service_secs: f64,
         batch: usize,
-        is_err: bool,
+        outcome: Outcome,
     ) {
-        self.completed.fetch_add(1, Ordering::Relaxed);
-        if is_err {
-            self.errors.fetch_add(1, Ordering::Relaxed);
-        }
+        match outcome {
+            Outcome::Ok => self.completed.fetch_add(1, Ordering::Relaxed),
+            Outcome::Error => self.errors.fetch_add(1, Ordering::Relaxed),
+            Outcome::Shed => self.shed.fetch_add(1, Ordering::Relaxed),
+            Outcome::Expired => self.expired.fetch_add(1, Ordering::Relaxed),
+        };
         let mut map = self.entries.lock().unwrap();
         let e = map.entry(entry.to_string()).or_insert_with(EntryMetrics::new);
-        e.latency.offer(queue_secs + service_secs);
         e.queue_wait.observe(queue_secs);
-        e.service.observe(service_secs);
-        *e.batch_sizes.entry(batch).or_insert(0) += 1;
-        if is_err {
-            e.errors += 1;
+        match outcome {
+            Outcome::Ok | Outcome::Error => {
+                e.latency.offer(queue_secs + service_secs);
+                e.service.observe(service_secs);
+                *e.batch_sizes.entry(batch).or_insert(0) += 1;
+                if outcome == Outcome::Error {
+                    e.errors += 1;
+                }
+            }
+            Outcome::Shed => e.shed += 1,
+            Outcome::Expired => e.expired += 1,
         }
     }
 
@@ -208,7 +287,8 @@ impl Metrics {
     /// (queue wait unknown, batch size 1) — the pre-breakdown entry
     /// point, kept for callers without an enqueue stamp.
     pub fn completed(&self, entry: &str, latency: f64, is_err: bool) {
-        self.observe(entry, 0.0, latency, 1, is_err);
+        let outcome = if is_err { Outcome::Error } else { Outcome::Ok };
+        self.observe(entry, 0.0, latency, 1, outcome);
     }
 
     /// Register (or replace) a gauge rendered by
@@ -250,6 +330,11 @@ impl Metrics {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            expired: self.expired.load(Ordering::Relaxed),
+            rejected_full: self.rejected_full.load(Ordering::Relaxed),
+            rejected_expired: self.rejected_expired.load(Ordering::Relaxed),
+            degraded: self.degraded.load(Ordering::Relaxed),
             per_entry,
         }
     }
@@ -273,7 +358,7 @@ impl Metrics {
         counter(
             &mut out,
             "tensorcalc_completed_total",
-            "Requests answered (ok or error).",
+            "Requests answered with a response (successes only).",
             self.completed.load(Ordering::Relaxed),
         );
         counter(
@@ -282,6 +367,41 @@ impl Metrics {
             "Requests answered with an error.",
             self.errors.load(Ordering::Relaxed),
         );
+        counter(
+            &mut out,
+            "tensorcalc_shed_total",
+            "Admitted requests evicted under shed-oldest overload policy.",
+            self.shed.load(Ordering::Relaxed),
+        );
+        counter(
+            &mut out,
+            "tensorcalc_expired_total",
+            "Admitted requests whose deadline passed before execution.",
+            self.expired.load(Ordering::Relaxed),
+        );
+        counter(
+            &mut out,
+            "tensorcalc_degraded_total",
+            "Chunks served under a nonzero degrade-ladder level.",
+            self.degraded.load(Ordering::Relaxed),
+        );
+        {
+            let _ = writeln!(
+                out,
+                "# HELP tensorcalc_rejected_total Requests refused at admission, by reason."
+            );
+            let _ = writeln!(out, "# TYPE tensorcalc_rejected_total counter");
+            let _ = writeln!(
+                out,
+                "tensorcalc_rejected_total{{reason=\"queue_full\"}} {}",
+                self.rejected_full.load(Ordering::Relaxed)
+            );
+            let _ = writeln!(
+                out,
+                "tensorcalc_rejected_total{{reason=\"expired\"}} {}",
+                self.rejected_expired.load(Ordering::Relaxed)
+            );
+        }
         let (hits, misses) = crate::exec::global_plan_cache().cache_stats();
         counter(
             &mut out,
@@ -357,6 +477,30 @@ impl Metrics {
                     map[*name].errors
                 );
             }
+            let _ = writeln!(
+                out,
+                "# HELP tensorcalc_entry_shed_total Shed replies per entry."
+            );
+            let _ = writeln!(out, "# TYPE tensorcalc_entry_shed_total counter");
+            for name in &names {
+                let _ = writeln!(
+                    out,
+                    "tensorcalc_entry_shed_total{{entry=\"{name}\"}} {}",
+                    map[*name].shed
+                );
+            }
+            let _ = writeln!(
+                out,
+                "# HELP tensorcalc_entry_expired_total Expired replies per entry."
+            );
+            let _ = writeln!(out, "# TYPE tensorcalc_entry_expired_total counter");
+            for name in &names {
+                let _ = writeln!(
+                    out,
+                    "tensorcalc_entry_expired_total{{entry=\"{name}\"}} {}",
+                    map[*name].expired
+                );
+            }
         }
 
         // registered gauges, grouped by family (the BTreeMap keeps one
@@ -397,8 +541,9 @@ mod tests {
         m.completed("a", 0.002, true);
         let s = m.snapshot();
         assert_eq!(s.submitted, 2);
-        assert_eq!(s.completed, 2);
+        assert_eq!(s.completed, 1, "completed counts successes only");
         assert_eq!(s.errors, 1);
+        assert_eq!(s.submitted, s.completed + s.errors + s.shed + s.expired);
         assert_eq!(s.per_entry.len(), 1);
         let (name, count, p50, p99) = &s.per_entry[0];
         assert_eq!(name, "a");
@@ -491,10 +636,10 @@ mod tests {
         m.enqueued();
         m.enqueued();
         m.dequeued();
-        m.observe("g", 0.002, 0.001, 4, false);
-        m.observe("g", 0.0, 0.005, 1, true);
+        m.observe("g", 0.002, 0.001, 4, Outcome::Ok);
+        m.observe("g", 0.0, 0.005, 1, Outcome::Error);
         let s = m.snapshot();
-        assert_eq!(s.completed, 2);
+        assert_eq!(s.completed, 1);
         assert_eq!(s.errors, 1);
         // reservoir samples the sum the caller saw
         let (_, n, p50, _) = &s.per_entry[0];
@@ -531,6 +676,10 @@ mod tests {
             "tensorcalc_submitted_total",
             "tensorcalc_completed_total",
             "tensorcalc_errors_total",
+            "tensorcalc_shed_total",
+            "tensorcalc_expired_total",
+            "tensorcalc_degraded_total",
+            "tensorcalc_rejected_total",
             "tensorcalc_plan_cache_hits_total",
             "tensorcalc_plan_cache_misses_total",
             "tensorcalc_queue_depth",
@@ -552,5 +701,56 @@ mod tests {
             );
             assert!(parts.next().is_some(), "no metric name in line: {line}");
         }
+    }
+
+    #[test]
+    fn outcomes_split_into_disjoint_counters_and_balance() {
+        let m = Metrics::new();
+        for _ in 0..6 {
+            m.submitted();
+        }
+        m.observe("g", 0.001, 0.002, 2, Outcome::Ok);
+        m.observe("g", 0.001, 0.002, 2, Outcome::Ok);
+        m.observe("g", 0.001, 0.002, 2, Outcome::Error);
+        m.observe("g", 0.010, 0.0, 0, Outcome::Shed);
+        m.observe("g", 0.010, 0.0, 0, Outcome::Shed);
+        m.observe("g", 0.050, 0.0, 0, Outcome::Expired);
+        let s = m.snapshot();
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.shed, 2);
+        assert_eq!(s.expired, 1);
+        assert_eq!(s.submitted, s.completed + s.errors + s.shed + s.expired);
+        // sheds/expiries never pollute executed-request distributions:
+        // only the 3 executed requests hold latency samples
+        assert_eq!(s.per_entry[0].1, 3);
+        let text = m.render_prometheus();
+        assert!(text.contains("tensorcalc_shed_total 2"), "{text}");
+        assert!(text.contains("tensorcalc_expired_total 1"), "{text}");
+        assert!(text.contains("tensorcalc_entry_shed_total{entry=\"g\"} 2"), "{text}");
+        assert!(text.contains("tensorcalc_entry_expired_total{entry=\"g\"} 1"), "{text}");
+        // but their queue wait IS recorded (the system held them)
+        assert!(text.contains("tensorcalc_queue_wait_seconds_count{entry=\"g\"} 6"), "{text}");
+        assert!(text.contains("tensorcalc_service_seconds_count{entry=\"g\"} 3"), "{text}");
+    }
+
+    #[test]
+    fn admission_rejections_and_degraded_runs_are_counted() {
+        let m = Metrics::new();
+        m.rejected_queue_full();
+        m.rejected_queue_full();
+        m.rejected_expired();
+        m.degraded_run();
+        let s = m.snapshot();
+        assert_eq!(s.rejected_full, 2);
+        assert_eq!(s.rejected_expired, 1);
+        assert_eq!(s.degraded, 1);
+        // rejections stay outside the admitted-request balance
+        assert_eq!(s.submitted, 0);
+        assert_eq!(s.completed + s.errors + s.shed + s.expired, 0);
+        let text = m.render_prometheus();
+        assert!(text.contains("tensorcalc_rejected_total{reason=\"queue_full\"} 2"), "{text}");
+        assert!(text.contains("tensorcalc_rejected_total{reason=\"expired\"} 1"), "{text}");
+        assert!(text.contains("tensorcalc_degraded_total 1"), "{text}");
     }
 }

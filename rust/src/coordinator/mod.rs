@@ -29,10 +29,49 @@
 //! request `b` run alone (pinned in `tests/serve_batch.rs` and the
 //! module tests below). `with_max_batch(1)` turns batching off and is
 //! kept as the ablation axis for `benches/serve_load.rs`.
+//!
+//! ## Serving robustness
+//!
+//! The request path is specified end to end (see ARCHITECTURE.md,
+//! "Serving robustness"):
+//!
+//! * **Admission** — [`Coordinator::submit_with`] takes a [`Request`]
+//!   with an optional deadline and returns a typed [`SubmitError`]
+//!   (`QueueFull` is the only retryable variant). Already-expired
+//!   deadlines are rejected before touching the queue. Full queues obey
+//!   the entry's [`ShedPolicy`]: reject, evict-oldest (the victim is
+//!   answered [`ServeError::Shed`]), or block with a timeout.
+//! * **Drain** — the worker answers expired jobs `Err(Expired)` before
+//!   any compile/exec work, orders the remainder nearest-deadline-first
+//!   (stable, so undeadlined traffic stays FIFO), and re-checks expiry
+//!   between chunks of one drain.
+//! * **Degradation** — a per-worker [`DegradeLadder`] watches drain
+//!   sizes; under sustained overload it first restricts chunks to
+//!   already-compiled exact-fit buckets (no padding, no serving-path
+//!   compiles), then to the base plan. Degraded outputs are
+//!   bit-identical to normal ones — the ladder changes scheduling,
+//!   never numerics.
+//! * **Accounting** — every shed, expiry, rejection and degraded run is
+//!   counted ([`Metrics`], exported via Prometheus), and the balance
+//!   `submitted == completed + errors + shed + expired` holds under
+//!   every fault mix — pinned by `tests/chaos.rs` against the seeded
+//!   [`FaultPlan`] injector (env `TC_FAULT`).
+//! * **Shutdown** — [`JobQueue::close`] is the deterministic signal:
+//!   it cannot be lost to a full queue (the old `try_send(Shutdown)`
+//!   nudge could), and jobs accepted before the close are still drained
+//!   and answered.
 
+mod degrade;
+mod fault;
 mod metrics;
-pub use metrics::{Metrics, Snapshot};
+mod queue;
 
+pub use degrade::{DegradeLadder, MAX_DEGRADE_LEVEL};
+pub use fault::{FaultPlan, FaultSite};
+pub use metrics::{Metrics, Outcome, Snapshot};
+pub use queue::ShedPolicy;
+
+use crate::anyhow;
 use crate::error::Result;
 use crate::eval::Env;
 use crate::exec::{batch_graph, global_plan_cache, BackendKind, CompiledPlan, ExecMemory, PlanOutput};
@@ -41,19 +80,146 @@ use crate::obs::TraceMode;
 use crate::opt::{OptLevel, OptStats};
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
-use crate::{anyhow, bail};
+use queue::{JobQueue, PushOutcome};
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Largest micro-batch an entry fuses into one run unless overridden:
 /// high enough to amortise per-request dispatch under load, low enough
 /// that a power-of-two bucket pads at most one doubling.
 pub const DEFAULT_MAX_BATCH: usize = 8;
+
+/// Why [`Coordinator::submit`] / [`Coordinator::submit_with`] refused a
+/// request at admission. Typed so callers can tell retryable congestion
+/// from permanent conditions — the old stringly
+/// `anyhow!("queue full / closed for {}")` conflated all four.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The entry's queue is at capacity under [`ShedPolicy::Reject`]
+    /// (or a [`ShedPolicy::Block`] timed out). Retryable: back off and
+    /// resubmit.
+    QueueFull { entry: String },
+    /// No entry registered under this name.
+    UnknownEntry { entry: String },
+    /// The entry's worker is shutting down; its queue takes no new work.
+    Closed { entry: String },
+    /// The request's deadline had already passed at submit time —
+    /// refused before it could waste queue space.
+    Expired { entry: String },
+}
+
+impl SubmitError {
+    /// Whether resubmitting the same request can succeed. Only
+    /// [`SubmitError::QueueFull`] is transient.
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, SubmitError::QueueFull { .. })
+    }
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull { entry } => write!(f, "queue full for {}", entry),
+            SubmitError::UnknownEntry { entry } => write!(f, "unknown entry {}", entry),
+            SubmitError::Closed { entry } => write!(f, "entry {} is shutting down", entry),
+            SubmitError::Expired { entry } => {
+                write!(f, "deadline already expired at submit for {}", entry)
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+impl From<SubmitError> for crate::error::Error {
+    fn from(e: SubmitError) -> Self {
+        crate::error::Error::msg(e.to_string())
+    }
+}
+
+/// Why an *admitted* request was answered with an error. This is the
+/// `Err` side of the reply channel ([`ServeResult`]); admission-time
+/// refusals are [`SubmitError`] instead.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The deadline passed while the request waited in the queue or
+    /// between chunks of a drain — answered before any exec work.
+    Expired,
+    /// Evicted by a newer request under [`ShedPolicy::ShedOldest`].
+    Shed,
+    /// Plan execution panicked (caught; the worker survives).
+    Panic(String),
+    /// The request failed input validation (arity/shape mismatch).
+    Invalid(String),
+    /// The backend reported an execution error.
+    Exec(String),
+}
+
+impl ServeError {
+    /// Whether resubmitting the same request can succeed. Sheds and
+    /// transient execution failures are retryable; an expired deadline
+    /// or malformed request is not.
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, ServeError::Shed | ServeError::Panic(_) | ServeError::Exec(_))
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Expired => write!(f, "deadline expired before execution"),
+            ServeError::Shed => write!(f, "shed under overload (oldest-first eviction)"),
+            ServeError::Panic(m) => write!(f, "plan execution panicked: {}", m),
+            ServeError::Invalid(m) => write!(f, "invalid request: {}", m),
+            ServeError::Exec(m) => write!(f, "execution failed: {}", m),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl From<ServeError> for crate::error::Error {
+    fn from(e: ServeError) -> Self {
+        crate::error::Error::msg(e.to_string())
+    }
+}
+
+/// What a reply channel carries: the response, or a typed serving
+/// error.
+pub type ServeResult = std::result::Result<Response, ServeError>;
+
+/// One submission: inputs plus an optional deadline. Deadlines are
+/// monotonic [`Instant`]s, never wall clock — a host clock step cannot
+/// expire (or resurrect) queued work.
+#[derive(Debug)]
+pub struct Request {
+    pub inputs: Vec<Tensor>,
+    pub deadline: Option<Instant>,
+}
+
+impl Request {
+    pub fn new(inputs: Vec<Tensor>) -> Self {
+        Request { inputs, deadline: None }
+    }
+
+    /// Deadline as a budget from now.
+    pub fn with_deadline(mut self, budget: Duration) -> Self {
+        self.deadline = Some(Instant::now() + budget);
+        self
+    }
+
+    /// Deadline as an absolute instant (for callers propagating an
+    /// upstream deadline).
+    pub fn with_deadline_at(mut self, at: Instant) -> Self {
+        self.deadline = Some(at);
+        self
+    }
+}
 
 /// An engine-backed entry: a *compiled* plan (planned arena, level-
 /// parallel execution — see [`crate::exec`]) plus a fixed input
@@ -90,6 +256,14 @@ pub struct EngineEntry {
     /// frozen (None when built at `OptLevel::None`); surfaced through
     /// [`Coordinator::stats`]
     opt_stats: Option<OptStats>,
+    /// what `submit` does when this entry's queue is full
+    policy: ShedPolicy,
+    /// pin the degradation ladder at a fixed level (test / ops API);
+    /// None = let the ladder drive
+    forced_degrade: Option<u8>,
+    /// the worker's current ladder level, exported as the
+    /// `tensorcalc_degrade_level` gauge
+    degrade_level: Arc<AtomicU64>,
 }
 
 impl EngineEntry {
@@ -160,6 +334,9 @@ impl EngineEntry {
             lazy_compiles: Arc::new(AtomicU64::new(0)),
             prewarm_compiles: Arc::new(AtomicU64::new(0)),
             opt_stats,
+            policy: ShedPolicy::default(),
+            forced_degrade: None,
+            degrade_level: Arc::new(AtomicU64::new(0)),
         }
     }
 
@@ -167,6 +344,27 @@ impl EngineEntry {
     /// baseline served next to the batched entry in `serve_load`).
     pub fn with_max_batch(mut self, max_batch: usize) -> Self {
         self.max_batch = max_batch.max(1);
+        self
+    }
+
+    /// Set the full-queue policy for this entry's submissions
+    /// (default: [`ShedPolicy::Reject`]).
+    pub fn with_shed_policy(mut self, policy: ShedPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// The full-queue policy in force for this entry.
+    pub fn shed_policy(&self) -> ShedPolicy {
+        self.policy
+    }
+
+    /// Pin the degradation ladder at a fixed level (clamped to
+    /// [`MAX_DEGRADE_LEVEL`]) instead of letting drain pressure drive
+    /// it — the test/ops hook that makes the degraded paths
+    /// deterministically reachable.
+    pub fn with_forced_degrade_level(mut self, level: u8) -> Self {
+        self.forced_degrade = Some(level.min(MAX_DEGRADE_LEVEL));
         self
     }
 
@@ -250,19 +448,42 @@ impl EngineEntry {
         self.batched.insert(bucket, plan.clone());
         plan
     }
+
+    /// Chunk size under degradation. Level ≥ 2 serves the base plan
+    /// only; level 1 snaps to the largest *already-compiled* bucket
+    /// that fits exactly (no pad slots computed, no serving-path
+    /// compiles), falling back to the base plan when none fits.
+    fn degraded_chunk(&self, pending: usize, level: u8) -> usize {
+        if level >= 2 {
+            return 1;
+        }
+        let cap = pending.min(self.max_batch.max(1));
+        let mut best = 1;
+        for &b in self.batched.keys() {
+            if b <= cap && b > best {
+                best = b;
+            }
+        }
+        best
+    }
 }
 
-enum Job {
-    Eval {
-        inputs: Vec<Tensor>,
-        reply: SyncSender<Result<Response>>,
-        /// stamped in [`Coordinator::submit`]: queue wait is measured
-        /// from here to the worker's drain, so `Response.latency` is
-        /// the end-to-end time the caller experienced, not just the
-        /// plan execution
-        enqueued: Instant,
-    },
-    Shutdown,
+/// One accepted request as it sits in an entry's [`JobQueue`].
+struct QueuedJob {
+    inputs: Vec<Tensor>,
+    reply: SyncSender<ServeResult>,
+    /// stamped in [`Coordinator::submit_with`]: queue wait is measured
+    /// from here to the worker's drain, so `Response.latency` is the
+    /// end-to-end time the caller experienced, not just the plan
+    /// execution
+    enqueued: Instant,
+    deadline: Option<Instant>,
+}
+
+impl QueuedJob {
+    fn expired_at(&self, now: Instant) -> bool {
+        self.deadline.map(|d| d <= now).unwrap_or(false)
+    }
 }
 
 /// A completed evaluation. `outputs` are [`PlanOutput`]s: for engine
@@ -284,7 +505,8 @@ pub struct Response {
 }
 
 struct Worker {
-    tx: SyncSender<Job>,
+    queue: Arc<JobQueue<QueuedJob>>,
+    policy: ShedPolicy,
     handle: Option<JoinHandle<()>>,
 }
 
@@ -316,21 +538,30 @@ pub struct EntryStats {
 }
 
 /// The coordinator: one worker thread per registered entry, bounded
-/// queues, shared metrics.
+/// queues, shared metrics, one process-wide fault plan (off by default,
+/// seeded via `TC_FAULT` or [`Coordinator::with_faults`]).
 pub struct Coordinator {
     workers: HashMap<String, Worker>,
     infos: HashMap<String, EntryInfo>,
     metrics: Arc<Metrics>,
     queue_cap: usize,
+    faults: Arc<FaultPlan>,
 }
 
 impl Coordinator {
     pub fn new(queue_cap: usize) -> Self {
+        Self::with_faults(queue_cap, FaultPlan::from_env().unwrap_or_else(FaultPlan::none))
+    }
+
+    /// A coordinator with an explicit fault plan — the chaos-test entry
+    /// point ([`FaultPlan::none`] for production behavior).
+    pub fn with_faults(queue_cap: usize, faults: FaultPlan) -> Self {
         Coordinator {
             workers: HashMap::new(),
             infos: HashMap::new(),
             metrics: Arc::new(Metrics::new()),
             queue_cap,
+            faults: Arc::new(faults),
         }
     }
 
@@ -343,10 +574,10 @@ impl Coordinator {
     /// down and joined before this returns, so every job it had already
     /// accepted is answered and its thread is reaped (not leaked).
     ///
-    /// Registration also wires the entry's compile counters and its
-    /// plan's run-state recycling into the metrics gauge surface, so
-    /// `Metrics::render_prometheus` exposes them without the worker's
-    /// involvement.
+    /// Registration also wires the entry's compile counters, its
+    /// plan's run-state recycling, and its current degradation level
+    /// into the metrics gauge surface, so `Metrics::render_prometheus`
+    /// exposes them without the worker's involvement.
     pub fn register_engine(&mut self, name: &str, entry: EngineEntry) {
         let info = EntryInfo {
             opt_stats: entry.opt_stats,
@@ -368,14 +599,21 @@ impl Coordinator {
         self.metrics.register_gauge("tensorcalc_lease_state_reuse", &labels, move || {
             plan.pool_stats().state_reuse as f64
         });
-        self.infos.insert(name.to_string(), info);
-        let (tx, rx) = sync_channel::<Job>(self.queue_cap);
-        let metrics = self.metrics.clone();
-        let ename = name.to_string();
-        let handle = std::thread::spawn(move || {
-            engine_worker(ename, entry, rx, metrics);
+        let dlevel = entry.degrade_level.clone();
+        self.metrics.register_gauge("tensorcalc_degrade_level", &labels, move || {
+            dlevel.load(Ordering::Relaxed) as f64
         });
-        self.insert_worker(name.to_string(), Worker { tx, handle: Some(handle) });
+        self.infos.insert(name.to_string(), info);
+        let policy = entry.policy;
+        let queue = Arc::new(JobQueue::new(self.queue_cap));
+        let metrics = self.metrics.clone();
+        let faults = self.faults.clone();
+        let ename = name.to_string();
+        let q2 = queue.clone();
+        let handle = std::thread::spawn(move || {
+            engine_worker(ename, entry, q2, metrics, faults);
+        });
+        self.insert_worker(name.to_string(), Worker { queue, policy, handle: Some(handle) });
     }
 
     /// Per-entry compile/optimizer statistics, sorted by entry name.
@@ -408,15 +646,14 @@ impl Coordinator {
         }
     }
 
-    /// Shut down one worker and join its thread. Mirrors the
-    /// [`Coordinator::shutdown`] contract: the try_send is a best-effort
-    /// nudge, the sender drop is the authoritative signal, and the join
-    /// happens only after the drop so a full queue cannot deadlock.
-    fn stop_worker(w: Worker) {
-        let Worker { tx, handle } = w;
-        let _ = tx.try_send(Job::Shutdown);
-        drop(tx);
-        if let Some(h) = handle {
+    /// Shut down one worker and join its thread. [`JobQueue::close`] is
+    /// the deterministic signal: it wakes the worker unconditionally
+    /// (a full queue cannot swallow it, unlike the old best-effort
+    /// `try_send(Job::Shutdown)` nudge), and the worker still drains
+    /// and answers every job accepted before the close.
+    fn stop_worker(mut w: Worker) {
+        w.queue.close();
+        if let Some(h) = w.handle.take() {
             let _ = h.join();
         }
     }
@@ -430,7 +667,7 @@ impl Coordinator {
         dir: std::path::PathBuf,
         names: &[String],
     ) -> Result<()> {
-        let (tx, rx) = sync_channel::<(String, Job)>(self.queue_cap);
+        let (tx, rx) = sync_channel::<(String, QueuedJob)>(self.queue_cap);
         let metrics = self.metrics.clone();
         let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
         let backend = std::thread::spawn(move || {
@@ -448,53 +685,137 @@ impl Coordinator {
         });
         ready_rx.recv().map_err(|_| anyhow!("pjrt backend died"))??;
         for name in names {
-            let (ftx, frx) = sync_channel::<Job>(self.queue_cap);
+            let fq = Arc::new(JobQueue::<QueuedJob>::new(self.queue_cap));
+            let fq2 = fq.clone();
             let tx2 = tx.clone();
             let n2 = name.clone();
-            let fh = std::thread::spawn(move || {
-                while let Ok(job) = frx.recv() {
-                    if matches!(job, Job::Shutdown) {
-                        break;
-                    }
-                    if tx2.send((n2.clone(), job)).is_err() {
+            let fmetrics = self.metrics.clone();
+            let fh = std::thread::spawn(move || loop {
+                let (jobs, closed) = fq2.drain_wait();
+                let mut jobs = jobs.into_iter();
+                let mut backend_gone = false;
+                for job in &mut jobs {
+                    if let Err(e) = tx2.send((n2.clone(), job)) {
+                        let (_, job) = e.0;
+                        answer_backend_gone(&fmetrics, &n2, job);
+                        backend_gone = true;
                         break;
                     }
                 }
+                if backend_gone {
+                    for job in jobs {
+                        answer_backend_gone(&fmetrics, &n2, job);
+                    }
+                    return;
+                }
+                if closed {
+                    return;
+                }
             });
-            self.insert_worker(name.clone(), Worker { tx: ftx, handle: Some(fh) });
+            self.insert_worker(
+                name.clone(),
+                Worker { queue: fq, policy: ShedPolicy::Reject, handle: Some(fh) },
+            );
         }
-        // shutdown guard: dropping the last fan-in sender stops the backend
-        let (gtx, grx) = sync_channel::<Job>(1);
+        // shutdown guard: when its queue closes it drops the last fan-in
+        // sender, which (after every forwarder has exited and dropped
+        // its clone) disconnects the backend's receiver and stops it
+        let gq = Arc::new(JobQueue::<QueuedJob>::new(1));
+        let gq2 = gq.clone();
         let gh = std::thread::spawn(move || {
-            let _ = grx.recv();
+            let _ = gq2.drain_wait();
             drop(tx);
             let _ = backend.join();
         });
-        self.insert_worker("__pjrt_backend".into(), Worker { tx: gtx, handle: Some(gh) });
+        self.insert_worker(
+            "__pjrt_backend".into(),
+            Worker { queue: gq, policy: ShedPolicy::Reject, handle: Some(gh) },
+        );
         Ok(())
     }
 
-    /// Submit asynchronously; returns a receiver for the response.
-    /// Errors immediately if the entry is unknown or its queue is full
-    /// (backpressure surfaces to the caller).
-    pub fn submit(&self, entry: &str, inputs: Vec<Tensor>) -> Result<Receiver<Result<Response>>> {
+    /// Submit asynchronously with no deadline; returns a receiver for
+    /// the [`ServeResult`]. See [`Coordinator::submit_with`].
+    pub fn submit(
+        &self,
+        entry: &str,
+        inputs: Vec<Tensor>,
+    ) -> std::result::Result<Receiver<ServeResult>, SubmitError> {
+        self.submit_with(entry, Request::new(inputs))
+    }
+
+    /// Admission control: refuse unknown entries, already-expired
+    /// deadlines, and (per the entry's [`ShedPolicy`]) full queues —
+    /// each with a typed [`SubmitError`]. Under
+    /// [`ShedPolicy::ShedOldest`] the submission is accepted by
+    /// evicting the oldest queued job, which is answered
+    /// `Err(ServeError::Shed)` here, on the submitter's thread.
+    pub fn submit_with(
+        &self,
+        entry: &str,
+        req: Request,
+    ) -> std::result::Result<Receiver<ServeResult>, SubmitError> {
         let w = self
             .workers
             .get(entry)
-            .ok_or_else(|| anyhow!("unknown entry {}", entry))?;
+            .ok_or_else(|| SubmitError::UnknownEntry { entry: entry.to_string() })?;
+        if let Some(d) = req.deadline {
+            // monotonic: Instant::now() never runs backwards, so a
+            // deadline observed expired here stays expired
+            if d <= Instant::now() {
+                self.metrics.rejected_expired();
+                return Err(SubmitError::Expired { entry: entry.to_string() });
+            }
+        }
+        if self.faults.fire(FaultSite::QueueFull) {
+            self.metrics.rejected_queue_full();
+            return Err(SubmitError::QueueFull { entry: entry.to_string() });
+        }
         let (rtx, rrx) = sync_channel(1);
-        w.tx
-            .try_send(Job::Eval { inputs, reply: rtx, enqueued: Instant::now() })
-            .map_err(|e| anyhow!("queue full / closed for {}: {}", entry, e))?;
-        self.metrics.submitted();
-        self.metrics.enqueued();
-        Ok(rrx)
+        let job = QueuedJob {
+            inputs: req.inputs,
+            reply: rtx,
+            enqueued: Instant::now(),
+            deadline: req.deadline,
+        };
+        match w.queue.push(job, w.policy) {
+            PushOutcome::Accepted => {
+                self.metrics.submitted();
+                self.metrics.enqueued();
+                Ok(rrx)
+            }
+            PushOutcome::AcceptedShed(victim) => {
+                self.metrics.submitted();
+                self.metrics.enqueued();
+                // the victim was admitted earlier (counted then); close
+                // out its accounting and answer it as shed
+                self.metrics.dequeued();
+                self.metrics.observe(
+                    entry,
+                    victim.enqueued.elapsed().as_secs_f64(),
+                    0.0,
+                    0,
+                    Outcome::Shed,
+                );
+                let _ = victim.reply.send(Err(ServeError::Shed));
+                Ok(rrx)
+            }
+            PushOutcome::Full => {
+                self.metrics.rejected_queue_full();
+                Err(SubmitError::QueueFull { entry: entry.to_string() })
+            }
+            PushOutcome::Closed => Err(SubmitError::Closed { entry: entry.to_string() }),
+        }
     }
 
     /// Blocking evaluation.
     pub fn eval(&self, entry: &str, inputs: Vec<Tensor>) -> Result<Response> {
         let rx = self.submit(entry, inputs)?;
-        rx.recv().map_err(|_| anyhow!("worker dropped"))?
+        match rx.recv() {
+            Ok(Ok(resp)) => Ok(resp),
+            Ok(Err(e)) => Err(e.into()),
+            Err(_) => Err(anyhow!("worker dropped reply for {}", entry)),
+        }
     }
 
     /// Registered entry names (excluding internal workers).
@@ -511,26 +832,22 @@ impl Coordinator {
 
     /// Stop all workers and wait for them.
     ///
-    /// The authoritative shutdown signal is *dropping every sender
-    /// before joining any worker*: a `try_send(Job::Shutdown)` alone
-    /// fails silently when a queue is full, and joining while the
-    /// sender is still alive would then deadlock (the worker blocks in
-    /// `recv` forever). Workers treat channel closure as shutdown and
-    /// still drain (and answer) every job buffered before the close.
-    /// All senders drop before the first join so that fan-in topologies
-    /// (the PJRT backend) cannot wedge on a sibling's queue either.
+    /// Every queue is closed *before* the first join: closing is the
+    /// authoritative signal (deterministic — a full queue cannot
+    /// swallow it) and workers drain and answer every job accepted
+    /// before the close. Closing all queues first means fan-in
+    /// topologies (the PJRT backend) cannot wedge on a sibling either:
+    /// each forwarder exits on its own close, releasing its fan-in
+    /// sender, and the guard stops the backend once its queue closes.
     pub fn shutdown(&mut self) {
-        let mut handles = Vec::new();
-        for (_, mut w) in self.workers.drain() {
-            // best-effort nudge for an idle worker; the sender drop at
-            // the end of this iteration is what guarantees progress
-            let _ = w.tx.try_send(Job::Shutdown);
-            if let Some(h) = w.handle.take() {
-                handles.push(h);
-            }
+        let workers: Vec<Worker> = self.workers.drain().map(|(_, w)| w).collect();
+        for w in &workers {
+            w.queue.close();
         }
-        for h in handles {
-            let _ = h.join();
+        for mut w in workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
         }
     }
 }
@@ -543,49 +860,81 @@ impl Drop for Coordinator {
 
 /// Engine worker: drains the queue and serves the drained eval jobs in
 /// micro-batches of up to `entry.max_batch` requests, each batch one
-/// batched plan execution (see the module docs). A `Shutdown` drained
-/// mid-batch does not abort the batch: every eval job drained alongside
-/// it is still answered before the worker exits, and `batch_size`
-/// counts eval jobs only. Channel closure (all senders dropped) is
-/// treated as shutdown too. A panic inside plan execution is caught,
-/// answered to every affected caller as an `Err`, counted in the error
-/// metrics — and the worker stays alive for the next request.
-fn engine_worker(name: String, mut entry: EngineEntry, rx: Receiver<Job>, metrics: Arc<Metrics>) {
-    while let Ok(first) = rx.recv() {
-        let mut jobs = vec![first];
-        while let Ok(j) = rx.try_recv() {
-            jobs.push(j);
-        }
-        let mut shutdown = false;
-        let mut evals = Vec::new();
-        for job in jobs {
-            match job {
-                Job::Shutdown => shutdown = true,
-                Job::Eval { inputs, reply, enqueued } => {
-                    metrics.dequeued();
-                    evals.push((inputs, reply, enqueued));
+/// batched plan execution (see the module docs). Per drain it:
+/// answers already-expired jobs `Err(Expired)` before any exec work,
+/// rejects malformed jobs individually (they cannot poison the stacked
+/// batch), orders the rest nearest-deadline-first, feeds the drain size
+/// to the degradation ladder, and re-checks expiry between chunks. A
+/// closed queue ([`JobQueue::close`]) is the shutdown signal; jobs
+/// drained alongside the close are still answered before the worker
+/// exits. A panic inside plan execution is caught, answered to every
+/// affected caller as an `Err`, counted in the error metrics — and the
+/// worker stays alive for the next request.
+fn engine_worker(
+    name: String,
+    mut entry: EngineEntry,
+    queue: Arc<JobQueue<QueuedJob>>,
+    metrics: Arc<Metrics>,
+    faults: Arc<FaultPlan>,
+) {
+    let mut ladder = DegradeLadder::new(queue.cap());
+    loop {
+        let (jobs, closed) = queue.drain_wait();
+        if !jobs.is_empty() {
+            let fill = jobs.len();
+            let now = Instant::now();
+            let mut valid = Vec::with_capacity(jobs.len());
+            for job in jobs {
+                metrics.dequeued();
+                if job.expired_at(now) {
+                    let queue_wait = now.duration_since(job.enqueued).as_secs_f64();
+                    metrics.observe(&name, queue_wait, 0.0, 0, Outcome::Expired);
+                    send_reply(&faults, job.reply, Err(ServeError::Expired));
+                } else if let Err(msg) = validate_inputs(&entry, &job.inputs) {
+                    let queue_wait = now.duration_since(job.enqueued).as_secs_f64();
+                    metrics.observe(&name, queue_wait, 0.0, 1, Outcome::Error);
+                    send_reply(&faults, job.reply, Err(ServeError::Invalid(msg)));
+                } else {
+                    valid.push(job);
                 }
             }
-        }
-        let batch = evals.len();
-        // validate per request up front: a malformed request is answered
-        // individually and cannot poison the stacked batch
-        let mut valid = Vec::with_capacity(evals.len());
-        for (inputs, reply, enqueued) in evals {
-            match validate_inputs(&entry, &inputs) {
-                Ok(()) => valid.push((inputs, reply, enqueued)),
-                Err(e) => {
-                    metrics.observe(&name, enqueued.elapsed().as_secs_f64(), 0.0, 1, true);
-                    let _ = reply.send(Err(e));
+            // nearest deadline first (stable: undeadlined FIFO intact),
+            // so under pressure the jobs most at risk run soonest
+            order_by_deadline(&mut valid);
+            let batch = valid.len();
+            let level = match entry.forced_degrade {
+                Some(l) => l.min(MAX_DEGRADE_LEVEL),
+                None => ladder.observe_drain(fill).0,
+            };
+            entry.degrade_level.store(level as u64, Ordering::Relaxed);
+            while !valid.is_empty() {
+                // re-check between chunks: earlier chunks of this drain
+                // may have outlasted later jobs' deadlines
+                let now = Instant::now();
+                let mut i = 0;
+                while i < valid.len() {
+                    if valid[i].expired_at(now) {
+                        let job = valid.remove(i);
+                        let queue_wait = now.duration_since(job.enqueued).as_secs_f64();
+                        metrics.observe(&name, queue_wait, 0.0, 0, Outcome::Expired);
+                        send_reply(&faults, job.reply, Err(ServeError::Expired));
+                    } else {
+                        i += 1;
+                    }
                 }
+                if valid.is_empty() {
+                    break;
+                }
+                let take = if level == 0 {
+                    valid.len().min(entry.max_batch.max(1))
+                } else {
+                    entry.degraded_chunk(valid.len(), level)
+                };
+                let chunk: Vec<QueuedJob> = valid.drain(..take).collect();
+                run_chunk(&name, &mut entry, chunk, batch, level > 0, &metrics, &faults);
             }
         }
-        while !valid.is_empty() {
-            let take = valid.len().min(entry.max_batch.max(1));
-            let chunk: Vec<_> = valid.drain(..take).collect();
-            run_chunk(&name, &mut entry, chunk, batch, &metrics);
-        }
-        if shutdown {
+        if closed {
             return;
         }
     }
@@ -594,34 +943,44 @@ fn engine_worker(name: String, mut entry: EngineEntry, rx: Receiver<Job>, metric
 /// Run one micro-batch: a single request executes the base plan, a
 /// larger one stacks inputs into the next power-of-two bucket (padding
 /// with copies of request 0) and executes the bucket's batched plan
-/// once. Both paths return leased zero-copy outputs and run under
+/// once. Degraded chunks arrive pre-sized to an exact-fit compiled
+/// bucket, so the pad loop is empty and `batched_plan` is a cache hit.
+/// Both paths return leased zero-copy outputs and run under
 /// `catch_unwind`, so a panicking plan answers its callers instead of
 /// killing the worker.
 ///
 /// Timing: queue wait runs per request from its enqueue stamp to the
 /// drain point here; the service clock starts after the drain and
 /// covers stacking + execution, shared by every request in the chunk.
-/// `Response.latency` is the sum — the pre-PR accounting started the
-/// clock after the drain, silently excluding queue wait.
+/// `Response.latency` is the sum.
 fn run_chunk(
     name: &str,
     entry: &mut EngineEntry,
-    chunk: Vec<(Vec<Tensor>, SyncSender<Result<Response>>, Instant)>,
+    chunk: Vec<QueuedJob>,
     batch: usize,
+    degraded: bool,
     metrics: &Metrics,
+    faults: &FaultPlan,
 ) {
     let n = chunk.len();
     let drained = Instant::now();
     let mut ins = Vec::with_capacity(n);
     let mut replies = Vec::with_capacity(n);
     let mut queue_waits = Vec::with_capacity(n);
-    for (inputs, reply, enqueued) in chunk {
-        queue_waits.push(drained.duration_since(enqueued).as_secs_f64());
-        ins.push(inputs);
-        replies.push(reply);
+    for job in chunk {
+        queue_waits.push(drained.duration_since(job.enqueued).as_secs_f64());
+        ins.push(job.inputs);
+        replies.push(job.reply);
+    }
+    if degraded {
+        metrics.degraded_run();
     }
     let t0 = Instant::now();
     let outcome = catch_unwind(AssertUnwindSafe(move || -> Vec<Vec<PlanOutput>> {
+        faults.maybe_delay();
+        if faults.fire(FaultSite::ExecPanic) {
+            panic!("injected fault: exec panic at entry {}", name);
+        }
         if n == 1 {
             let mut env = Env::new();
             let req = ins.into_iter().next().expect("chunk of one");
@@ -630,7 +989,12 @@ fn run_chunk(
             }
             return vec![entry.plan.clone().run_leased(&env)];
         }
-        let bucket = n.next_power_of_two().min(entry.max_batch).max(n);
+        let bucket = if degraded {
+            // degraded_chunk already snapped n to a compiled bucket
+            n
+        } else {
+            n.next_power_of_two().min(entry.max_batch).max(n)
+        };
         let plan = entry.batched_plan(bucket);
         let mut env = Env::new();
         for (k, (vname, shape)) in entry.inputs.iter().enumerate() {
@@ -657,25 +1021,55 @@ fn run_chunk(
     match outcome {
         Ok(per_req) => {
             for ((outputs, reply), queue) in per_req.into_iter().zip(replies).zip(queue_waits) {
-                metrics.observe(name, queue, service, batch, false);
-                let _ = reply.send(Ok(Response {
-                    outputs,
-                    latency: queue + service,
-                    queue_secs: queue,
-                    service_secs: service,
-                    batch_size: batch,
-                }));
+                metrics.observe(name, queue, service, batch, Outcome::Ok);
+                send_reply(
+                    faults,
+                    reply,
+                    Ok(Response {
+                        outputs,
+                        latency: queue + service,
+                        queue_secs: queue,
+                        service_secs: service,
+                        batch_size: batch,
+                    }),
+                );
             }
         }
         Err(payload) => {
             let msg = panic_message(payload.as_ref());
             for (reply, queue) in replies.into_iter().zip(queue_waits) {
-                metrics.observe(name, queue, service, batch, true);
-                let _ = reply
-                    .send(Err(anyhow!("plan execution panicked for entry {}: {}", name, msg)));
+                metrics.observe(name, queue, service, batch, Outcome::Error);
+                send_reply(
+                    faults,
+                    reply,
+                    Err(ServeError::Panic(format!("entry {}: {}", name, msg))),
+                );
             }
         }
     }
+}
+
+/// Deliver a reply — or, when the [`FaultSite::ReplyDrop`] fault fires,
+/// drop the channel unsent. Metrics are always recorded *before* this
+/// point, so the balance invariant survives dropped replies (the caller
+/// sees `RecvError`, never a hang).
+fn send_reply(faults: &FaultPlan, reply: SyncSender<ServeResult>, result: ServeResult) {
+    if faults.fire(FaultSite::ReplyDrop) {
+        drop(reply);
+        return;
+    }
+    let _ = reply.send(result);
+}
+
+/// Stable nearest-deadline-first order: deadlined jobs ascending by
+/// deadline, then undeadlined jobs in arrival (FIFO) order.
+fn order_by_deadline(jobs: &mut [QueuedJob]) {
+    jobs.sort_by(|a, b| match (a.deadline, b.deadline) {
+        (Some(x), Some(y)) => x.cmp(&y),
+        (Some(_), None) => std::cmp::Ordering::Less,
+        (None, Some(_)) => std::cmp::Ordering::Greater,
+        (None, None) => std::cmp::Ordering::Equal,
+    });
 }
 
 fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
@@ -688,40 +1082,54 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
-fn validate_inputs(entry: &EngineEntry, inputs: &[Tensor]) -> Result<()> {
+fn validate_inputs(entry: &EngineEntry, inputs: &[Tensor]) -> std::result::Result<(), String> {
     if inputs.len() != entry.inputs.len() {
-        bail!("expected {} inputs, got {}", entry.inputs.len(), inputs.len());
+        return Err(format!("expected {} inputs, got {}", entry.inputs.len(), inputs.len()));
     }
     for ((name, shape), t) in entry.inputs.iter().zip(inputs) {
         if t.shape() != &shape[..] {
-            bail!("input {} shape {:?}, expected {:?}", name, t.shape(), shape);
+            return Err(format!("input {} shape {:?}, expected {:?}", name, t.shape(), shape));
         }
     }
     Ok(())
 }
 
-/// PJRT worker: owns the runtime, routes jobs by artifact name.
-fn pjrt_worker(mut runtime: Runtime, rx: Receiver<(String, Job)>, metrics: Arc<Metrics>) {
+/// Close out a job whose PJRT backend is gone: count it and answer the
+/// caller instead of silently dropping the reply channel.
+fn answer_backend_gone(metrics: &Metrics, name: &str, job: QueuedJob) {
+    metrics.dequeued();
+    metrics.observe(name, job.enqueued.elapsed().as_secs_f64(), 0.0, 0, Outcome::Error);
+    let _ = job.reply.send(Err(ServeError::Exec("pjrt backend unavailable".into())));
+}
+
+/// PJRT worker: owns the runtime, routes jobs by artifact name, answers
+/// expired jobs before touching the device.
+fn pjrt_worker(mut runtime: Runtime, rx: Receiver<(String, QueuedJob)>, metrics: Arc<Metrics>) {
     while let Ok((name, job)) = rx.recv() {
-        match job {
-            Job::Shutdown => return,
-            Job::Eval { inputs, reply, enqueued } => {
-                metrics.dequeued();
-                let queue = enqueued.elapsed().as_secs_f64();
-                let t0 = Instant::now();
-                let res = runtime.execute(&name, &inputs);
-                let service = t0.elapsed().as_secs_f64();
-                metrics.observe(&name, queue, service, 1, res.is_err());
-                let res = res.map(|outputs| Response {
-                    outputs: outputs.into_iter().map(PlanOutput::from).collect(),
-                    latency: queue + service,
-                    queue_secs: queue,
-                    service_secs: service,
-                    batch_size: 1,
-                });
-                let _ = reply.send(res);
-            }
+        metrics.dequeued();
+        let now = Instant::now();
+        if job.expired_at(now) {
+            let queue_wait = now.duration_since(job.enqueued).as_secs_f64();
+            metrics.observe(&name, queue_wait, 0.0, 0, Outcome::Expired);
+            let _ = job.reply.send(Err(ServeError::Expired));
+            continue;
         }
+        let queue = now.duration_since(job.enqueued).as_secs_f64();
+        let t0 = Instant::now();
+        let res = runtime.execute(&name, &job.inputs);
+        let service = t0.elapsed().as_secs_f64();
+        let outcome = if res.is_err() { Outcome::Error } else { Outcome::Ok };
+        metrics.observe(&name, queue, service, 1, outcome);
+        let res = res
+            .map(|outputs| Response {
+                outputs: outputs.into_iter().map(PlanOutput::from).collect(),
+                latency: queue + service,
+                queue_secs: queue,
+                service_secs: service,
+                batch_size: 1,
+            })
+            .map_err(|e| ServeError::Exec(e.to_string()));
+        let _ = job.reply.send(res);
     }
 }
 
@@ -800,10 +1208,35 @@ mod tests {
         env
     }
 
-    /// A hand-built eval job for tests that drive `engine_worker`
-    /// directly, stamped now (as `Coordinator::submit` would).
-    fn eval_job(inputs: Vec<Tensor>, reply: SyncSender<Result<Response>>) -> Job {
-        Job::Eval { inputs, reply, enqueued: Instant::now() }
+    fn no_faults() -> Arc<FaultPlan> {
+        Arc::new(FaultPlan::none())
+    }
+
+    /// Enqueue one job (stamped now, no deadline) for tests that drive
+    /// `engine_worker` directly.
+    fn push_job(
+        q: &JobQueue<QueuedJob>,
+        inputs: Vec<Tensor>,
+        reply: SyncSender<ServeResult>,
+    ) {
+        let out = q.push(
+            QueuedJob { inputs, reply, enqueued: Instant::now(), deadline: None },
+            ShedPolicy::Reject,
+        );
+        assert!(matches!(out, PushOutcome::Accepted), "test queue must accept");
+    }
+
+    fn push_job_deadline(
+        q: &JobQueue<QueuedJob>,
+        inputs: Vec<Tensor>,
+        reply: SyncSender<ServeResult>,
+        deadline: Instant,
+    ) {
+        let out = q.push(
+            QueuedJob { inputs, reply, enqueued: Instant::now(), deadline: Some(deadline) },
+            ShedPolicy::Reject,
+        );
+        assert!(matches!(out, PushOutcome::Accepted), "test queue must accept");
     }
 
     #[test]
@@ -856,6 +1289,7 @@ mod tests {
         let prom = c.metrics().render_prometheus();
         assert!(prom.contains("tensorcalc_prewarm_compiles{entry=\"warm\"} 3"), "{prom}");
         assert!(prom.contains("tensorcalc_lazy_compiles{entry=\"cold\"} 0"), "{prom}");
+        assert!(prom.contains("tensorcalc_degrade_level{entry=\"warm\"} 0"), "{prom}");
         c.shutdown();
     }
 
@@ -904,15 +1338,15 @@ mod tests {
         let drive = |entry: EngineEntry| -> u64 {
             let counter = entry.lazy_compile_counter();
             let metrics = Arc::new(Metrics::new());
-            let (tx, rx) = sync_channel::<Job>(8);
+            let q = Arc::new(JobQueue::new(8));
             let mut replies = Vec::new();
             for i in 0..5u64 {
                 let (rtx, rrx) = sync_channel(1);
-                tx.send(eval_job(logreg_inputs(8, 3, i), rtx)).unwrap();
+                push_job(&q, logreg_inputs(8, 3, i), rtx);
                 replies.push(rrx);
             }
-            drop(tx);
-            engine_worker("e".into(), entry, rx, metrics);
+            q.close();
+            engine_worker("e".into(), entry, q, metrics, no_faults());
             for rrx in replies {
                 rrx.recv().expect("reply dropped").unwrap();
             }
@@ -927,7 +1361,9 @@ mod tests {
     #[test]
     fn unknown_entry_errors() {
         let c = Coordinator::new(4);
-        assert!(c.submit("nope", vec![]).is_err());
+        let err = c.submit("nope", vec![]).err().expect("unknown entry must be refused");
+        assert_eq!(err, SubmitError::UnknownEntry { entry: "nope".into() });
+        assert!(!err.is_retryable());
     }
 
     #[test]
@@ -959,7 +1395,7 @@ mod tests {
     }
 
     #[test]
-    fn backpressure_queue_full() {
+    fn backpressure_queue_full_is_typed_and_counted() {
         let mut c = Coordinator::new(1);
         c.register_engine("e", logreg_grad_entry(64, 16));
         let mut errs = 0;
@@ -967,7 +1403,11 @@ mod tests {
         for i in 0..64 {
             match c.submit("e", logreg_inputs(64, 16, i)) {
                 Ok(rx) => oks.push(rx),
-                Err(_) => errs += 1,
+                Err(e) => {
+                    assert_eq!(e, SubmitError::QueueFull { entry: "e".into() });
+                    assert!(e.is_retryable(), "QueueFull is the retryable variant");
+                    errs += 1;
+                }
             }
         }
         for rx in oks {
@@ -975,13 +1415,16 @@ mod tests {
         }
         // with queue_cap=1 and 64 rapid submits, backpressure should trigger
         assert!(errs > 0, "expected backpressure with cap=1");
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.rejected_full, errs, "every QueueFull must be counted");
+        assert_eq!(snap.submitted, 64 - errs, "rejected requests are not submitted");
     }
 
     #[test]
     fn shutdown_with_saturated_cap1_queue_terminates() {
         let mut c = Coordinator::new(1);
         c.register_engine("e", logreg_grad_entry(64, 16));
-        // saturate the cap-1 queue so try_send(Shutdown) will fail
+        // saturate the cap-1 queue so a lossy nudge-style signal would fail
         let mut accepted = Vec::new();
         for i in 0..16 {
             if let Ok(rx) = c.submit("e", logreg_inputs(64, 16, i)) {
@@ -1007,49 +1450,42 @@ mod tests {
     }
 
     #[test]
-    fn mid_batch_shutdown_answers_drained_jobs() {
-        // Deterministic mid-batch shutdown: queue [Eval, Shutdown, Eval]
-        // before the worker starts, so one drain sees all three.
+    fn close_with_queued_jobs_answers_all() {
+        // the satellite-1 contract at the worker: close() does not
+        // discard accepted jobs — the final drain serves them
         let entry = logreg_grad_entry(8, 3);
         let metrics = Arc::new(Metrics::new());
-        let (tx, rx) = sync_channel::<Job>(8);
+        let q = Arc::new(JobQueue::new(8));
         let (r1tx, r1rx) = sync_channel(1);
         let (r2tx, r2rx) = sync_channel(1);
-        tx.send(eval_job(logreg_inputs(8, 3, 1), r1tx)).unwrap();
-        tx.send(Job::Shutdown).unwrap();
-        tx.send(eval_job(logreg_inputs(8, 3, 10), r2tx)).unwrap();
-        drop(tx);
-        engine_worker("e".into(), entry, rx, metrics.clone());
+        push_job(&q, logreg_inputs(8, 3, 1), r1tx);
+        push_job(&q, logreg_inputs(8, 3, 10), r2tx);
+        q.close();
+        engine_worker("e".into(), entry, q, metrics.clone(), no_faults());
         let a = r1rx.recv().expect("first reply dropped").unwrap();
-        let b = r2rx.recv().expect("eval after mid-batch Shutdown dropped").unwrap();
-        assert_eq!(a.batch_size, 2, "Shutdown must not count toward the eval batch");
+        let b = r2rx.recv().expect("job queued before close dropped").unwrap();
+        assert_eq!(a.batch_size, 2);
         assert_eq!(b.batch_size, 2);
         assert_eq!(metrics.snapshot().completed, 2);
     }
 
     #[test]
-    fn mid_batch_shutdown_answers_drained_jobs_batched() {
-        // The batched-path variant: enough evals around the Shutdown to
-        // force a real multi-request bucket, every one still answered.
+    fn close_with_queued_jobs_answers_all_batched() {
+        // the batched-path variant: enough jobs for a real
+        // multi-request bucket, every one still answered after close
         let entry = logreg_grad_entry(8, 3);
         let metrics = Arc::new(Metrics::new());
-        let (tx, rx) = sync_channel::<Job>(16);
+        let q = Arc::new(JobQueue::new(16));
         let mut replies = Vec::new();
-        for i in 0..2u64 {
+        for i in 0..5u64 {
             let (rtx, rrx) = sync_channel(1);
-            tx.send(eval_job(logreg_inputs(8, 3, 20 + i), rtx)).unwrap();
+            push_job(&q, logreg_inputs(8, 3, 20 + i), rtx);
             replies.push(rrx);
         }
-        tx.send(Job::Shutdown).unwrap();
-        for i in 2..5u64 {
-            let (rtx, rrx) = sync_channel(1);
-            tx.send(eval_job(logreg_inputs(8, 3, 20 + i), rtx)).unwrap();
-            replies.push(rrx);
-        }
-        drop(tx);
-        engine_worker("e".into(), entry, rx, metrics.clone());
+        q.close();
+        engine_worker("e".into(), entry, q, metrics.clone(), no_faults());
         for rrx in replies {
-            let resp = rrx.recv().expect("drained eval dropped on shutdown").unwrap();
+            let resp = rrx.recv().expect("job queued before close dropped").unwrap();
             assert_eq!(resp.batch_size, 5);
         }
         assert_eq!(metrics.snapshot().completed, 5);
@@ -1064,15 +1500,15 @@ mod tests {
         let entry = logreg_grad_entry(8, 3);
         let base = entry.plan.clone();
         let metrics = Arc::new(Metrics::new());
-        let (tx, rx) = sync_channel::<Job>(8);
+        let q = Arc::new(JobQueue::new(8));
         let mut replies = Vec::new();
         for i in 0..5u64 {
             let (rtx, rrx) = sync_channel(1);
-            tx.send(eval_job(logreg_inputs(8, 3, i * 10), rtx)).unwrap();
+            push_job(&q, logreg_inputs(8, 3, i * 10), rtx);
             replies.push((i, rrx));
         }
-        drop(tx);
-        engine_worker("e".into(), entry, rx, metrics.clone());
+        q.close();
+        engine_worker("e".into(), entry, q, metrics.clone(), no_faults());
         for (i, rrx) in replies {
             let resp = rrx.recv().unwrap().unwrap();
             assert_eq!(resp.batch_size, 5);
@@ -1168,7 +1604,7 @@ mod tests {
         let ok = c.eval("ok", logreg_inputs(8, 3, 5)).unwrap();
         assert_eq!(ok.outputs.len(), 2);
         let stats = c.metrics().snapshot();
-        assert_eq!(stats.completed, 3);
+        assert_eq!(stats.completed, 1, "completed counts successes only");
         assert_eq!(stats.errors, 2);
         c.shutdown();
     }
@@ -1214,5 +1650,264 @@ mod tests {
         let grad =
             crate::runtime::read_f32_raw(dir.join("check/logreg_grad.f32"), &[128]).unwrap();
         assert!(resp.outputs[1].allclose(&grad, 1e-4, 1e-4));
+    }
+
+    // ---- deadline / shed / degrade robustness tests ----
+
+    #[test]
+    fn submit_errors_classify_retryability() {
+        let q = SubmitError::QueueFull { entry: "e".into() };
+        assert!(q.is_retryable());
+        assert!(q.to_string().contains("queue full"));
+        assert!(!SubmitError::UnknownEntry { entry: "e".into() }.is_retryable());
+        assert!(!SubmitError::Closed { entry: "e".into() }.is_retryable());
+        assert!(!SubmitError::Expired { entry: "e".into() }.is_retryable());
+        assert!(ServeError::Shed.is_retryable());
+        assert!(ServeError::Panic("x".into()).is_retryable());
+        assert!(ServeError::Exec("x".into()).is_retryable());
+        assert!(!ServeError::Expired.is_retryable());
+        assert!(!ServeError::Invalid("x".into()).is_retryable());
+    }
+
+    #[test]
+    fn shed_policy_cli_spellings_parse() {
+        assert_eq!(ShedPolicy::parse("reject"), Some(ShedPolicy::Reject));
+        assert_eq!(ShedPolicy::parse("oldest"), Some(ShedPolicy::ShedOldest));
+        assert_eq!(ShedPolicy::parse("shed-oldest"), Some(ShedPolicy::ShedOldest));
+        assert_eq!(ShedPolicy::parse("block"), Some(ShedPolicy::Block(Duration::from_millis(100))));
+        assert_eq!(
+            ShedPolicy::parse("block:250"),
+            Some(ShedPolicy::Block(Duration::from_millis(250)))
+        );
+        assert_eq!(ShedPolicy::parse("nope"), None);
+        assert_eq!(ShedPolicy::Block(Duration::from_millis(250)).to_string(), "block:250");
+    }
+
+    #[test]
+    fn zero_and_past_deadlines_are_rejected_at_admission() {
+        // Deadlines are monotonic Instants: a zero budget stamps
+        // `now + 0`, and by the time admission re-reads the clock the
+        // deadline can only be <= now — never resurrected by a clock
+        // step, because Instant never runs backwards.
+        let t0 = Instant::now();
+        let mut c = Coordinator::new(8);
+        c.register_engine("e", logreg_grad_entry(8, 3));
+        let err = c
+            .submit_with("e", Request::new(logreg_inputs(8, 3, 1)).with_deadline(Duration::ZERO))
+            .err()
+            .expect("zero deadline must be rejected at admission");
+        assert_eq!(err, SubmitError::Expired { entry: "e".into() });
+        assert!(!err.is_retryable());
+        // a deadline in the past (t0 predates register_engine's compile)
+        let err = c
+            .submit_with("e", Request::new(logreg_inputs(8, 3, 2)).with_deadline_at(t0))
+            .err()
+            .expect("past deadline must be rejected at admission");
+        assert_eq!(err, SubmitError::Expired { entry: "e".into() });
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.rejected_expired, 2);
+        assert_eq!(snap.submitted, 0, "rejected requests never count as submitted");
+        // a generous deadline is admitted and served
+        let rx = c
+            .submit_with(
+                "e",
+                Request::new(logreg_inputs(8, 3, 3)).with_deadline(Duration::from_secs(60)),
+            )
+            .unwrap();
+        assert!(rx.recv().unwrap().is_ok());
+    }
+
+    #[test]
+    fn near_deadline_jobs_sort_first_and_fifo_is_stable() {
+        let now = Instant::now();
+        let mk = |deadline: Option<Instant>, tag: f64| -> QueuedJob {
+            let (tx, _rx) = sync_channel(1);
+            QueuedJob {
+                inputs: vec![Tensor::new(&[1], vec![tag])],
+                reply: tx,
+                enqueued: now,
+                deadline,
+            }
+        };
+        let mut jobs = vec![
+            mk(None, 0.0),
+            mk(Some(now + Duration::from_secs(5)), 1.0),
+            mk(Some(now + Duration::from_secs(1)), 2.0),
+            mk(None, 3.0),
+            mk(Some(now + Duration::from_secs(1)), 4.0),
+        ];
+        order_by_deadline(&mut jobs);
+        let tags: Vec<f64> = jobs.iter().map(|j| j.inputs[0].data()[0]).collect();
+        // nearest deadlines first (ties FIFO-stable), undeadlined last in
+        // arrival order
+        assert_eq!(tags, vec![2.0, 4.0, 1.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn expired_jobs_in_a_drain_are_answered_before_exec() {
+        // One already-expired job drained alongside two live ones: the
+        // expired job gets Err(Expired) with no exec work, the live jobs
+        // form the fused batch and stay bit-identical to base-plan runs.
+        let entry = logreg_grad_entry(8, 3).with_max_batch(8).with_prewarm(true);
+        let base = entry.plan.clone();
+        let metrics = Arc::new(Metrics::new());
+        let q = Arc::new(JobQueue::new(8));
+        let now = Instant::now();
+        let (etx, erx) = sync_channel(1);
+        push_job_deadline(&q, logreg_inputs(8, 3, 50), etx, now); // expires immediately
+        let mut live = Vec::new();
+        for i in 0..2u64 {
+            let (rtx, rrx) = sync_channel(1);
+            push_job_deadline(&q, logreg_inputs(8, 3, 60 + i), rtx, now + Duration::from_secs(60));
+            live.push((60 + i, rrx));
+        }
+        q.close();
+        engine_worker("e".into(), entry, q, metrics.clone(), no_faults());
+        match erx.recv().expect("expired job must still get its one reply") {
+            Err(ServeError::Expired) => {}
+            other => panic!("expected Err(Expired), got {:?}", other),
+        }
+        for (seed, rrx) in live {
+            let resp = rrx.recv().unwrap().unwrap();
+            assert_eq!(resp.batch_size, 2, "batch counts live jobs only");
+            let want = base.run(&logreg_env(8, 3, seed));
+            for (o, w) in resp.outputs.iter().zip(&want) {
+                assert_eq!(o.data(), w.data(), "live slice diverged with expired sibling");
+            }
+        }
+        let snap = metrics.snapshot();
+        assert_eq!(snap.expired, 1);
+        assert_eq!(snap.completed, 2);
+        assert_eq!(snap.errors, 0);
+    }
+
+    #[test]
+    fn deadline_expiry_mid_drain_answers_expired_before_exec() {
+        // Two live jobs drained together, chunked one at a time
+        // (max_batch 1); injected service latency (300ms, rate 1.0 —
+        // fires without drawing, so fully deterministic) makes the first
+        // chunk outlast the second job's 250ms deadline. The worker must
+        // catch that between chunks and answer Err(Expired) pre-exec.
+        // Deadline ordering runs the 100ms job first; both are live at
+        // drain time (the drain starts within microseconds of the push).
+        let faults = Arc::new(
+            FaultPlan::seeded(1)
+                .with_rate(FaultSite::ServiceLatency, 1.0)
+                .with_latency(Duration::from_millis(300)),
+        );
+        let entry = logreg_grad_entry(8, 3).with_max_batch(1);
+        let metrics = Arc::new(Metrics::new());
+        let q = Arc::new(JobQueue::new(8));
+        let now = Instant::now();
+        let (r1tx, r1rx) = sync_channel(1);
+        let (r2tx, r2rx) = sync_channel(1);
+        push_job_deadline(&q, logreg_inputs(8, 3, 1), r1tx, now + Duration::from_millis(100));
+        push_job_deadline(&q, logreg_inputs(8, 3, 2), r2tx, now + Duration::from_millis(250));
+        q.close();
+        engine_worker("e".into(), entry, q, metrics.clone(), faults);
+        assert!(r1rx.recv().unwrap().is_ok(), "job inside its deadline at drain time runs");
+        match r2rx.recv().expect("mid-drain-expired job must get its one reply") {
+            Err(ServeError::Expired) => {}
+            other => panic!("expected Err(Expired) after chunk overran deadline, got {:?}", other),
+        }
+        let snap = metrics.snapshot();
+        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.expired, 1);
+    }
+
+    #[test]
+    fn shed_oldest_policy_answers_victims_with_shed() {
+        // Injected 10ms service latency (rate 1.0) keeps the worker busy
+        // while 32 submissions race a cap-2 queue: ShedOldest admits all
+        // of them, evicting oldest-first. Exactly-one-reply and the
+        // metrics balance must hold.
+        let faults = FaultPlan::seeded(3)
+            .with_rate(FaultSite::ServiceLatency, 1.0)
+            .with_latency(Duration::from_millis(10));
+        let mut c = Coordinator::with_faults(2, faults);
+        c.register_engine(
+            "e",
+            logreg_grad_entry(8, 3).with_shed_policy(ShedPolicy::ShedOldest),
+        );
+        let mut rxs = Vec::new();
+        for i in 0..32 {
+            rxs.push(c.submit("e", logreg_inputs(8, 3, i)).expect("shed-oldest never rejects"));
+        }
+        let mut ok = 0u64;
+        let mut shed = 0u64;
+        for rx in rxs {
+            match rx.recv().expect("every admitted request gets exactly one reply") {
+                Ok(_) => ok += 1,
+                Err(ServeError::Shed) => shed += 1,
+                Err(e) => panic!("unexpected serve error: {:?}", e),
+            }
+        }
+        assert_eq!(ok + shed, 32);
+        assert!(shed > 0, "cap-2 queue under a busy worker must shed");
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.submitted, 32);
+        assert_eq!(snap.completed, ok);
+        assert_eq!(snap.shed, shed);
+        assert_eq!(
+            snap.submitted,
+            snap.completed + snap.errors + snap.shed + snap.expired,
+            "metrics balance must hold under shedding"
+        );
+    }
+
+    #[test]
+    fn forced_degrade_levels_serve_bit_identically() {
+        // Level 1 (exact-fit compiled buckets, no pad, no compiles) and
+        // level 2 (base plan only) must both serve bit-identical outputs
+        // to the canonical plan — the ladder changes scheduling, never
+        // numerics.
+        for level in [1u8, 2] {
+            let entry = logreg_grad_entry(8, 3)
+                .with_max_batch(8)
+                .with_prewarm(true)
+                .with_forced_degrade_level(level);
+            let lazy = entry.lazy_compile_counter();
+            let base = entry.plan.clone();
+            let metrics = Arc::new(Metrics::new());
+            let q = Arc::new(JobQueue::new(8));
+            let mut replies = Vec::new();
+            for i in 0..5u64 {
+                let (rtx, rrx) = sync_channel(1);
+                push_job(&q, logreg_inputs(8, 3, i * 7), rtx);
+                replies.push((i * 7, rrx));
+            }
+            q.close();
+            engine_worker("e".into(), entry, q, metrics.clone(), no_faults());
+            for (seed, rrx) in replies {
+                let resp = rrx.recv().unwrap().unwrap();
+                let want = base.run(&logreg_env(8, 3, seed));
+                assert_eq!(resp.outputs.len(), want.len());
+                for (o, w) in resp.outputs.iter().zip(&want) {
+                    assert_eq!(o.data(), w.data(), "degrade level {} diverged bitwise", level);
+                }
+            }
+            assert_eq!(
+                lazy.load(Ordering::Relaxed),
+                0,
+                "degraded serving must never compile (level {})",
+                level
+            );
+            let snap = metrics.snapshot();
+            assert_eq!(snap.completed, 5);
+            assert!(snap.degraded > 0, "degraded chunks must be counted (level {})", level);
+        }
+    }
+
+    #[test]
+    fn degraded_chunk_snaps_to_compiled_buckets() {
+        let entry = logreg_grad_entry(8, 3).with_max_batch(8).with_prewarm(true);
+        // prewarmed buckets: 2, 4, 8
+        assert_eq!(entry.degraded_chunk(5, 1), 4, "largest compiled bucket <= 5");
+        assert_eq!(entry.degraded_chunk(8, 1), 8);
+        assert_eq!(entry.degraded_chunk(3, 1), 2);
+        assert_eq!(entry.degraded_chunk(1, 1), 1, "no bucket fits: base plan");
+        assert_eq!(entry.degraded_chunk(5, 2), 1, "level 2 is base-plan only");
+        let cold = logreg_grad_entry(8, 3);
+        assert_eq!(cold.degraded_chunk(5, 1), 1, "nothing compiled: base plan, no compiles");
     }
 }

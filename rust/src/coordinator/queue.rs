@@ -1,0 +1,300 @@
+//! The bounded per-entry job queue behind [`Coordinator::submit`]
+//! (replacing the former `std::sync::mpsc::sync_channel`): a
+//! `Mutex<VecDeque>` with two condvars, so the coordinator controls the
+//! *full-queue policy* ([`ShedPolicy`]) on the submit side and gets a
+//! deterministic shutdown signal ([`JobQueue::close`]) on the worker
+//! side — the mpsc channel could do neither (its only overload behavior
+//! is reject, and its only close signal is dropping every sender, which
+//! a `try_send(Shutdown)` nudge could silently fail to reinforce on a
+//! full queue).
+//!
+//! Contract: every job accepted by [`JobQueue::push`] is either drained
+//! by the worker (including after `close` — closing does not discard
+//! queued jobs) or handed back to the submitter as the shed victim, so
+//! the caller can answer it. Nothing is silently dropped.
+//!
+//! [`Coordinator::submit`]: super::Coordinator::submit
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// What [`JobQueue::push`] does when the queue is at capacity — the
+/// per-entry backpressure policy (CLI: `serve --shed`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Refuse the new job (the submitter sees a retryable
+    /// `SubmitError::QueueFull`). The default: callers own their retry
+    /// loop and the queue never lies about its capacity.
+    Reject,
+    /// Evict the oldest queued job to make room — the evicted job is
+    /// answered `Err(ServeError::Shed)` by the submitter. Freshest-wins:
+    /// right when stale work loses value fastest (deadline traffic).
+    ShedOldest,
+    /// Wait up to the given duration for the worker to drain, then
+    /// reject. Smooths short bursts at the cost of submitter latency.
+    Block(Duration),
+}
+
+impl Default for ShedPolicy {
+    fn default() -> Self {
+        ShedPolicy::Reject
+    }
+}
+
+impl ShedPolicy {
+    /// Parse the CLI / env spelling: `reject`, `oldest`, `block`
+    /// (100 ms default), or `block:<ms>`.
+    pub fn parse(s: &str) -> Option<ShedPolicy> {
+        match s {
+            "reject" => Some(ShedPolicy::Reject),
+            "oldest" | "shed-oldest" => Some(ShedPolicy::ShedOldest),
+            _ => {
+                let rest = s.strip_prefix("block")?;
+                if rest.is_empty() {
+                    return Some(ShedPolicy::Block(Duration::from_millis(100)));
+                }
+                let ms: u64 = rest.strip_prefix(':')?.parse().ok()?;
+                Some(ShedPolicy::Block(Duration::from_millis(ms)))
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for ShedPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShedPolicy::Reject => write!(f, "reject"),
+            ShedPolicy::ShedOldest => write!(f, "oldest"),
+            ShedPolicy::Block(d) => write!(f, "block:{}", d.as_millis()),
+        }
+    }
+}
+
+/// Outcome of [`JobQueue::push`]. The shed victim rides back to the
+/// submitter so *it* answers the evicted caller — the queue itself never
+/// owns a reply channel.
+#[derive(Debug)]
+pub(crate) enum PushOutcome<T> {
+    Accepted,
+    /// Accepted after evicting the oldest queued item (returned).
+    AcceptedShed(T),
+    /// At capacity under `Reject`, or `Block` timed out.
+    Full,
+    /// The queue was closed (worker shutting down).
+    Closed,
+}
+
+struct State<T> {
+    jobs: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded MPSC job queue: many submitters, one draining worker.
+pub(crate) struct JobQueue<T> {
+    state: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+impl<T> JobQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        JobQueue {
+            state: Mutex::new(State { jobs: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    #[cfg(test)]
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().jobs.len()
+    }
+
+    /// Submit one job under the given full-queue policy.
+    pub fn push(&self, item: T, policy: ShedPolicy) -> PushOutcome<T> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return PushOutcome::Closed;
+        }
+        if st.jobs.len() < self.cap {
+            st.jobs.push_back(item);
+            self.not_empty.notify_one();
+            return PushOutcome::Accepted;
+        }
+        match policy {
+            ShedPolicy::Reject => PushOutcome::Full,
+            ShedPolicy::ShedOldest => {
+                let victim = st.jobs.pop_front().expect("full queue has a head (cap >= 1)");
+                st.jobs.push_back(item);
+                self.not_empty.notify_one();
+                PushOutcome::AcceptedShed(victim)
+            }
+            ShedPolicy::Block(timeout) => {
+                let deadline = Instant::now() + timeout;
+                while st.jobs.len() >= self.cap && !st.closed {
+                    let left = deadline.saturating_duration_since(Instant::now());
+                    if left.is_zero() {
+                        return PushOutcome::Full;
+                    }
+                    let (guard, _timed_out) =
+                        self.not_full.wait_timeout(st, left).unwrap();
+                    st = guard;
+                }
+                if st.closed {
+                    return PushOutcome::Closed;
+                }
+                st.jobs.push_back(item);
+                self.not_empty.notify_one();
+                PushOutcome::Accepted
+            }
+        }
+    }
+
+    /// Worker side: block until at least one job is queued or the queue
+    /// is closed, then take everything. Returns `(jobs, closed)` —
+    /// `closed` with a non-empty batch means "serve these, then exit".
+    pub fn drain_wait(&self) -> (Vec<T>, bool) {
+        let mut st = self.state.lock().unwrap();
+        while st.jobs.is_empty() && !st.closed {
+            st = self.not_empty.wait(st).unwrap();
+        }
+        let jobs: Vec<T> = st.jobs.drain(..).collect();
+        let closed = st.closed;
+        drop(st);
+        if !jobs.is_empty() {
+            self.not_full.notify_all();
+        }
+        (jobs, closed)
+    }
+
+    /// The deterministic shutdown signal: wakes the worker (and any
+    /// blocked submitters) unconditionally. Jobs already queued stay
+    /// queued — the worker drains and answers them before exiting.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn push_then_drain_roundtrip_in_order() {
+        let q = JobQueue::new(4);
+        for i in 0..3 {
+            assert!(matches!(q.push(i, ShedPolicy::Reject), PushOutcome::Accepted));
+        }
+        let (jobs, closed) = q.drain_wait();
+        assert_eq!(jobs, vec![0, 1, 2]);
+        assert!(!closed);
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn reject_policy_refuses_at_capacity() {
+        let q = JobQueue::new(2);
+        assert!(matches!(q.push(1, ShedPolicy::Reject), PushOutcome::Accepted));
+        assert!(matches!(q.push(2, ShedPolicy::Reject), PushOutcome::Accepted));
+        assert!(matches!(q.push(3, ShedPolicy::Reject), PushOutcome::Full));
+        // the rejected item was not enqueued
+        assert_eq!(q.drain_wait().0, vec![1, 2]);
+    }
+
+    #[test]
+    fn shed_oldest_evicts_head_and_returns_it() {
+        let q = JobQueue::new(2);
+        q.push(1, ShedPolicy::ShedOldest);
+        q.push(2, ShedPolicy::ShedOldest);
+        match q.push(3, ShedPolicy::ShedOldest) {
+            PushOutcome::AcceptedShed(victim) => assert_eq!(victim, 1),
+            other => panic!("expected AcceptedShed, got {:?}", other),
+        }
+        assert_eq!(q.drain_wait().0, vec![2, 3]);
+    }
+
+    #[test]
+    fn block_policy_times_out_on_a_stuck_queue() {
+        let q = JobQueue::new(1);
+        q.push(1, ShedPolicy::Reject);
+        let t0 = Instant::now();
+        let out = q.push(2, ShedPolicy::Block(Duration::from_millis(20)));
+        assert!(matches!(out, PushOutcome::Full));
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+    }
+
+    #[test]
+    fn block_policy_succeeds_when_the_worker_drains() {
+        let q = Arc::new(JobQueue::new(1));
+        q.push(1, ShedPolicy::Reject);
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            q2.drain_wait().0
+        });
+        let out = q.push(2, ShedPolicy::Block(Duration::from_secs(10)));
+        assert!(matches!(out, PushOutcome::Accepted));
+        let drained = h.join().unwrap();
+        assert_eq!(drained, vec![1]);
+        assert_eq!(q.drain_wait().0, vec![2]);
+    }
+
+    #[test]
+    fn close_wakes_an_idle_drainer_and_rejects_new_pushes() {
+        let q = Arc::new(JobQueue::<u32>::new(4));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.drain_wait());
+        std::thread::sleep(Duration::from_millis(10));
+        q.close();
+        let (jobs, closed) = h.join().unwrap();
+        assert!(jobs.is_empty());
+        assert!(closed, "close must wake and flag the drainer");
+        assert!(matches!(q.push(1, ShedPolicy::Reject), PushOutcome::Closed));
+        assert!(matches!(
+            q.push(1, ShedPolicy::Block(Duration::from_secs(10))),
+            PushOutcome::Closed
+        ));
+    }
+
+    #[test]
+    fn close_preserves_queued_jobs_for_the_final_drain() {
+        // the satellite-1 contract: closing does not discard accepted
+        // jobs — the worker's final drain still sees them
+        let q = JobQueue::new(4);
+        q.push(7, ShedPolicy::Reject);
+        q.push(8, ShedPolicy::Reject);
+        q.close();
+        let (jobs, closed) = q.drain_wait();
+        assert_eq!(jobs, vec![7, 8]);
+        assert!(closed);
+        // subsequent drains terminate immediately and stay empty
+        let (jobs, closed) = q.drain_wait();
+        assert!(jobs.is_empty() && closed);
+    }
+
+    #[test]
+    fn close_unblocks_a_blocked_submitter() {
+        let q = Arc::new(JobQueue::new(1));
+        q.push(1, ShedPolicy::Reject);
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            q2.close();
+        });
+        let out = q.push(2, ShedPolicy::Block(Duration::from_secs(60)));
+        assert!(matches!(out, PushOutcome::Closed), "close must unblock Block submitters");
+        h.join().unwrap();
+    }
+}

@@ -16,12 +16,16 @@
 //! tensorcalc bench fig2|fig3|newton [--sizes a,b,c] [--secs S] [--full]
 //! tensorcalc artifacts [--dir D]            list + smoke-run AOT artifacts
 //! tensorcalc serve [--requests N] [--batch B] [--backend cpu|direct]
+//!                  [--deadline-ms MS] [--shed reject|oldest|block[:MS]]
 //!                  [--prom PATH]            coordinator demo with metrics
 //!                                           (B = max dynamic batch, 1 = off;
+//!                                           --deadline-ms gives every request
+//!                                           a deadline budget, --shed picks
+//!                                           the full-queue policy;
 //!                                           --prom dumps Prometheus text)
 //! ```
 
-use tensorcalc::coordinator::{Coordinator, EngineEntry};
+use tensorcalc::coordinator::{Coordinator, EngineEntry, Request, ShedPolicy};
 use tensorcalc::error::{Context as _, Result};
 use tensorcalc::figures;
 use tensorcalc::{anyhow, bail};
@@ -120,7 +124,8 @@ fn run() -> Result<()> {
                  [--trace off|profile|json=PATH]\n  \
                  tensorcalc bench <fig2|fig3|newton> [--sizes a,b,c] [--secs S] [--full]\n  \
                  tensorcalc artifacts [--dir D]\n  tensorcalc serve [--requests N] \
-                 [--batch B] [--backend cpu|direct] [--prom PATH]\n\n\
+                 [--batch B] [--backend cpu|direct] [--deadline-ms MS] \
+                 [--shed reject|oldest|block[:MS]] [--prom PATH]\n\n\
                  all subcommands: [--simd off|avx2|avx512|neon] forces kernel dispatch\n\
                  env: TC_SIMD=off|avx2|avx512|neon, TC_GEMM_BLOCKING=MR,NR,MC,KC,NC"
             );
@@ -357,6 +362,13 @@ fn serve(args: &Args) -> Result<()> {
         .map(|v| v.parse().unwrap())
         .unwrap_or(tensorcalc::coordinator::DEFAULT_MAX_BATCH);
     let backend = args.backend()?;
+    let deadline_ms: Option<u64> =
+        args.get("deadline-ms").map(|v| v.parse().expect("bad --deadline-ms"));
+    let shed = match args.get("shed") {
+        None => ShedPolicy::default(),
+        Some(s) => ShedPolicy::parse(s)
+            .ok_or_else(|| anyhow!("unknown --shed {} (reject|oldest|block[:MS])", s))?,
+    };
     let (m, n) = (256usize, 128usize);
     let mut c = Coordinator::new(1024);
 
@@ -381,7 +393,8 @@ fn serve(args: &Args) -> Result<()> {
                 backend,
             )
             .with_max_batch(batch)
-            .with_prewarm(true),
+            .with_prewarm(true)
+            .with_shed_policy(shed),
         );
     }
     // PJRT-backed entries
@@ -416,14 +429,21 @@ fn serve(args: &Args) -> Result<()> {
         } else {
             vec![wv.clone(), x.clone(), y.clone()]
         };
-        match c.submit(entry, inputs) {
+        let req = match deadline_ms {
+            Some(ms) => Request::new(inputs).with_deadline(std::time::Duration::from_millis(ms)),
+            None => Request::new(inputs),
+        };
+        match c.submit_with(entry, req) {
             Ok(rx) => pending.push(rx),
-            Err(_) => {
+            Err(e) if e.is_retryable() => {
                 // backpressure: drain one then continue
                 if let Some(rx) = pending.pop() {
                     let _ = rx.recv();
                 }
             }
+            // non-retryable admission refusals (e.g. an already-expired
+            // deadline) are counted in the metrics and reported below
+            Err(_) => {}
         }
     }
     let mut ok = 0usize;
@@ -440,6 +460,18 @@ fn serve(args: &Args) -> Result<()> {
         snap.submitted,
         wall,
         ok as f64 / wall
+    );
+    println!(
+        "outcomes: {} ok, {} errors, {} shed, {} expired | \
+         rejected at admission: {} queue-full, {} expired | policy {}{}",
+        snap.completed,
+        snap.errors,
+        snap.shed,
+        snap.expired,
+        snap.rejected_full,
+        snap.rejected_expired,
+        shed,
+        deadline_ms.map(|ms| format!(", deadline {}ms", ms)).unwrap_or_default()
     );
     println!("{:<22} {:>8} {:>12} {:>12}", "entry", "count", "p50", "p99");
     for (name, count, p50, p99) in snap.per_entry {

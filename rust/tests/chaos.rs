@@ -1,0 +1,409 @@
+//! Chaos suite: the serving coordinator's robustness invariants under
+//! deterministic fault injection ([`tensorcalc::coordinator::FaultPlan`]).
+//!
+//! Every test pins the same four contracts from ARCHITECTURE.md
+//! ("Serving robustness"), under a different fault mix:
+//!
+//! 1. **One answer per request** — every accepted submission is resolved
+//!    exactly once: a reply, a typed error, or a dropped channel
+//!    (`RecvError`). Never a hang.
+//! 2. **Shutdown terminates** — `Coordinator::shutdown` joins every
+//!    worker even while faults are firing, and answers jobs accepted
+//!    before the close.
+//! 3. **The balance holds** — `submitted == completed + errors + shed +
+//!    expired` over admitted requests, under every fault mix (admission
+//!    rejections are counted separately and sit outside the balance).
+//! 4. **Degraded output is bit-identical** — the degradation ladder
+//!    changes scheduling, never numerics.
+//!
+//! The fault seed comes from `TC_FAULT_SEED` (default 1), so CI can
+//! sweep seeds while any one run stays exactly reproducible.
+
+use std::sync::mpsc::RecvTimeoutError;
+use std::time::{Duration, Instant};
+
+use tensorcalc::coordinator::{
+    Coordinator, EngineEntry, FaultPlan, FaultSite, Request, ServeError, ServeResult,
+    ShedPolicy, Snapshot, SubmitError,
+};
+use tensorcalc::problems::logistic_regression;
+use tensorcalc::tensor::Tensor;
+
+/// Fault seed for this run: `TC_FAULT_SEED` env, default 1. CI sweeps a
+/// small seed matrix; locally `TC_FAULT_SEED=7 cargo test --test chaos`
+/// replays one schedule exactly.
+fn seed() -> u64 {
+    std::env::var("TC_FAULT_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(1)
+}
+
+/// A logistic-regression gradient entry (the serving workload used
+/// throughout `tests/serve_batch.rs`): inputs X [6,3], y [6], w [3];
+/// roots [loss, grad].
+fn logreg_entry() -> EngineEntry {
+    let mut wl = logistic_regression(6, 3);
+    let grad = wl.gradient();
+    let roots = vec![wl.loss, grad];
+    EngineEntry::compiled(
+        &wl.g,
+        &roots,
+        vec![
+            ("X".into(), vec![6, 3]),
+            ("y".into(), vec![6]),
+            ("w".into(), vec![3]),
+        ],
+    )
+}
+
+fn inputs(s: u64) -> Vec<Tensor> {
+    vec![
+        Tensor::randn(&[6, 3], 3000 + s),
+        Tensor::randn(&[6], 5000 + s).map(f64::signum),
+        Tensor::randn(&[3], 7000 + s),
+    ]
+}
+
+/// Contract 3: the accounting balance over *admitted* requests.
+fn assert_balance(snap: &Snapshot) {
+    assert_eq!(
+        snap.submitted,
+        snap.completed + snap.errors + snap.shed + snap.expired,
+        "balance violated: {:?}",
+        snap
+    );
+}
+
+/// Contract 1: resolve one receiver within a generous bound — a reply,
+/// a serve error, or a dropped channel. A timeout is a hang, and fails.
+fn resolve(rx: &std::sync::mpsc::Receiver<ServeResult>) -> Option<ServeResult> {
+    match rx.recv_timeout(Duration::from_secs(30)) {
+        Ok(r) => Some(r),
+        Err(RecvTimeoutError::Disconnected) => None,
+        Err(RecvTimeoutError::Timeout) => panic!("request hung: no reply within 30s"),
+    }
+}
+
+/// Exec panics are caught per chunk, answered as retryable
+/// `ServeError::Panic`, and never kill the worker — and the balance
+/// holds over the mixed ok/panic outcome stream.
+#[test]
+fn injected_exec_panics_are_isolated_and_balanced() {
+    let faults = FaultPlan::seeded(seed()).with_rate(FaultSite::ExecPanic, 0.3);
+    let mut c = Coordinator::with_faults(256, faults);
+    // max_batch 1: one chunk (= one panic draw) per request, so 60
+    // draws at rate 0.3 make both outcomes overwhelmingly certain for
+    // any seed
+    c.register_engine("grad", logreg_entry().with_max_batch(1));
+
+    let rxs: Vec<_> =
+        (0..60).map(|s| c.submit("grad", inputs(s)).expect("queue has room")).collect();
+    let (mut ok, mut panicked) = (0u64, 0u64);
+    for rx in &rxs {
+        match resolve(rx).expect("exec-panic faults never drop replies") {
+            Ok(resp) => {
+                assert_eq!(resp.outputs.len(), 2);
+                ok += 1;
+            }
+            Err(ServeError::Panic(msg)) => {
+                assert!(msg.contains("injected fault"), "unexpected panic: {}", msg);
+                assert!(ServeError::Panic(msg).is_retryable());
+                panicked += 1;
+            }
+            Err(other) => panic!("unexpected serve error: {}", other),
+        }
+    }
+    c.shutdown();
+
+    assert!(ok > 0, "rate 0.3 must let some requests through");
+    assert!(panicked > 0, "rate 0.3 must fire over 60 draws");
+    let snap = c.metrics().snapshot();
+    assert_eq!(snap.submitted, 60);
+    assert_eq!(snap.completed, ok);
+    assert_eq!(snap.errors, panicked);
+    assert_balance(&snap);
+}
+
+/// Under sustained overload with `ShedPolicy::ShedOldest`, every
+/// submission is accepted, victims are answered `Err(Shed)` (retryable),
+/// and sheds are counted inside the balance.
+#[test]
+fn overload_sheds_oldest_and_answers_every_victim() {
+    let faults = FaultPlan::seeded(seed())
+        .with_rate(FaultSite::ServiceLatency, 1.0)
+        .with_latency(Duration::from_millis(10));
+    let mut c = Coordinator::with_faults(2, faults);
+    c.register_engine(
+        "grad",
+        logreg_entry().with_max_batch(1).with_shed_policy(ShedPolicy::ShedOldest),
+    );
+
+    // cap-2 queue, 10ms of injected latency per chunk, 40 rapid
+    // submissions: the queue must evict
+    let rxs: Vec<_> = (0..40)
+        .map(|s| c.submit("grad", inputs(s)).expect("shed-oldest always accepts"))
+        .collect();
+    let (mut ok, mut shed) = (0u64, 0u64);
+    for rx in &rxs {
+        match resolve(rx).expect("shed faults never drop replies") {
+            Ok(_) => ok += 1,
+            Err(ServeError::Shed) => {
+                assert!(ServeError::Shed.is_retryable());
+                shed += 1;
+            }
+            Err(other) => panic!("unexpected serve error: {}", other),
+        }
+    }
+    c.shutdown();
+
+    assert_eq!(ok + shed, 40, "every submission resolves exactly once");
+    assert!(shed > 0, "a cap-2 queue under 40 rapid submits must shed");
+    let snap = c.metrics().snapshot();
+    assert_eq!(snap.submitted, 40);
+    assert_eq!(snap.shed, shed);
+    assert_balance(&snap);
+}
+
+/// Injected queue-full faults surface as typed, retryable
+/// `SubmitError::QueueFull`; rejections are counted outside the balance,
+/// which still holds over the requests that were admitted.
+#[test]
+fn injected_queue_full_rejections_are_typed_and_outside_the_balance() {
+    let faults = FaultPlan::seeded(seed()).with_rate(FaultSite::QueueFull, 0.5);
+    let mut c = Coordinator::with_faults(256, faults);
+    c.register_engine("grad", logreg_entry());
+
+    let mut rxs = Vec::new();
+    let mut rejected = 0u64;
+    for s in 0..100 {
+        match c.submit("grad", inputs(s)) {
+            Ok(rx) => rxs.push(rx),
+            Err(e) => {
+                assert_eq!(e, SubmitError::QueueFull { entry: "grad".into() });
+                assert!(e.is_retryable());
+                rejected += 1;
+            }
+        }
+    }
+    for rx in &rxs {
+        assert!(
+            resolve(rx).expect("no reply-drop faults in this mix").is_ok(),
+            "admitted requests must serve normally"
+        );
+    }
+    c.shutdown();
+
+    assert!(rejected > 0, "rate 0.5 must reject over 100 draws");
+    assert!(!rxs.is_empty(), "rate 0.5 must admit over 100 draws");
+    let snap = c.metrics().snapshot();
+    assert_eq!(snap.rejected_full, rejected);
+    assert_eq!(snap.submitted, rxs.len() as u64);
+    assert_eq!(snap.completed, rxs.len() as u64);
+    assert_balance(&snap);
+}
+
+/// A dropped reply channel resolves the caller with `RecvError` — never
+/// a hang — and the request was already counted, so the balance
+/// survives the drop.
+#[test]
+fn dropped_replies_disconnect_instead_of_hanging() {
+    let faults = FaultPlan::seeded(seed()).with_rate(FaultSite::ReplyDrop, 1.0);
+    let mut c = Coordinator::with_faults(64, faults);
+    c.register_engine("grad", logreg_entry());
+
+    let rxs: Vec<_> =
+        (0..10).map(|s| c.submit("grad", inputs(s)).expect("queue has room")).collect();
+    for rx in &rxs {
+        assert!(
+            resolve(rx).is_none(),
+            "reply_drop=1.0 must drop every channel (disconnect, not hang)"
+        );
+    }
+    c.shutdown();
+
+    let snap = c.metrics().snapshot();
+    assert_eq!(snap.submitted, 10);
+    assert_eq!(
+        snap.completed, 10,
+        "dropped replies are counted before the drop — accounting is not lost"
+    );
+    assert_balance(&snap);
+}
+
+/// Deadlines: already-expired at submit → rejected before the queue
+/// (outside the balance); expiring while queued behind a slow chunk →
+/// answered `Err(Expired)` before any exec work (inside the balance).
+#[test]
+fn expired_deadlines_are_refused_or_answered_before_exec() {
+    let faults = FaultPlan::seeded(seed())
+        .with_rate(FaultSite::ServiceLatency, 1.0)
+        .with_latency(Duration::from_millis(300));
+    let mut c = Coordinator::with_faults(64, faults);
+    c.register_engine("grad", logreg_entry().with_max_batch(1));
+
+    // (a) dead on arrival: a zero budget has already expired by the
+    // time admission checks it
+    for s in 0..3 {
+        let req = Request::new(inputs(s)).with_deadline(Duration::ZERO);
+        match c.submit_with("grad", req) {
+            Err(e @ SubmitError::Expired { .. }) => assert!(!e.is_retryable()),
+            other => panic!("expected Expired at admission, got {:?}", other),
+        }
+    }
+
+    // (b) expiry in the queue: the nearest-deadline job runs first and
+    // its chunk carries 300ms of injected latency, so the 250ms-deadline
+    // job expires before its turn — whether the worker drains the two
+    // jobs together (mid-drain re-check) or one at a time (pre-drain
+    // check), the outcome is the same
+    let served = c
+        .submit_with(
+            "grad",
+            Request::new(inputs(10)).with_deadline(Duration::from_millis(100)),
+        )
+        .expect("future deadline is admitted");
+    let doomed = c
+        .submit_with(
+            "grad",
+            Request::new(inputs(11)).with_deadline(Duration::from_millis(250)),
+        )
+        .expect("future deadline is admitted");
+    assert!(
+        resolve(&served).expect("no reply drops").is_ok(),
+        "the nearest-deadline job runs before its deadline check can fail"
+    );
+    match resolve(&doomed).expect("expiry faults never drop replies") {
+        Err(ServeError::Expired) => {}
+        other => panic!("expected Err(Expired), got {:?}", other),
+    }
+    c.shutdown();
+
+    let snap = c.metrics().snapshot();
+    assert_eq!(snap.rejected_expired, 3, "dead-on-arrival requests never enter the queue");
+    assert_eq!(snap.expired, 1);
+    assert_eq!(snap.completed, 1);
+    assert_eq!(snap.submitted, 2, "rejected submissions are not counted as submitted");
+    assert_balance(&snap);
+}
+
+/// Contract 4: degraded serving (levels 1 and 2) returns bit-identical
+/// outputs to the undegraded entry — the ladder changes scheduling,
+/// never numerics.
+#[test]
+fn degraded_serving_is_bit_identical_to_normal() {
+    // reference: no faults, no degradation
+    let mut reference = Coordinator::with_faults(64, FaultPlan::none());
+    reference.register_engine("ref", logreg_entry().with_prewarm(true));
+
+    // degraded: injected latency builds real queue depth so level-1
+    // drains actually take multi-request chunks through the exact-fit
+    // compiled buckets
+    let faults = FaultPlan::seeded(seed())
+        .with_rate(FaultSite::ServiceLatency, 1.0)
+        .with_latency(Duration::from_millis(5));
+    let mut degraded = Coordinator::with_faults(64, faults);
+    degraded.register_engine(
+        "deg1",
+        logreg_entry().with_prewarm(true).with_forced_degrade_level(1),
+    );
+    degraded.register_engine("deg2", logreg_entry().with_forced_degrade_level(2));
+
+    let n = 12u64;
+    let want: Vec<_> = (0..n)
+        .map(|s| {
+            let resp = reference.eval("ref", inputs(s)).expect("reference serves");
+            resp.outputs.iter().map(|o| o.data().to_vec()).collect::<Vec<_>>()
+        })
+        .collect();
+
+    for entry in ["deg1", "deg2"] {
+        let rxs: Vec<_> = (0..n)
+            .map(|s| degraded.submit(entry, inputs(s)).expect("queue has room"))
+            .collect();
+        for (s, rx) in rxs.iter().enumerate() {
+            let resp = resolve(rx)
+                .expect("no reply drops in this mix")
+                .expect("degraded entries still serve");
+            assert_eq!(resp.outputs.len(), want[s].len());
+            for (r, w) in want[s].iter().enumerate() {
+                assert_eq!(
+                    resp.outputs[r].data(),
+                    &w[..],
+                    "{}: request {} root {} not bit-identical to normal serving",
+                    entry,
+                    s,
+                    r
+                );
+            }
+        }
+    }
+    degraded.shutdown();
+    reference.shutdown();
+
+    let snap = degraded.metrics().snapshot();
+    assert!(snap.degraded > 0, "forced levels must count degraded chunks");
+    assert_eq!(snap.completed, 2 * n);
+    assert_balance(&snap);
+}
+
+/// Contract 2: shutdown terminates under a storm on every fault site at
+/// once, every accepted request still resolves (reply, error, or
+/// disconnect), and the balance holds over whatever mix the storm
+/// produced.
+#[test]
+fn shutdown_terminates_under_a_fault_storm() {
+    let faults = FaultPlan::seeded(seed())
+        .with_rate(FaultSite::QueueFull, 0.2)
+        .with_rate(FaultSite::ExecPanic, 0.2)
+        .with_rate(FaultSite::ServiceLatency, 0.2)
+        .with_rate(FaultSite::ReplyDrop, 0.2)
+        .with_latency(Duration::from_millis(2));
+    let mut c = Coordinator::with_faults(8, faults);
+    c.register_engine(
+        "grad",
+        logreg_entry().with_max_batch(2).with_shed_policy(ShedPolicy::ShedOldest),
+    );
+
+    let mut rxs = Vec::new();
+    for s in 0..40 {
+        let req = if s % 4 == 0 {
+            Request::new(inputs(s)).with_deadline(Duration::from_millis(30))
+        } else {
+            Request::new(inputs(s))
+        };
+        match c.submit_with("grad", req) {
+            Ok(rx) => rxs.push(rx),
+            Err(e) => assert!(
+                matches!(e, SubmitError::QueueFull { .. } | SubmitError::Expired { .. }),
+                "storm admission can only refuse full/expired, got {:?}",
+                e
+            ),
+        }
+    }
+    let accepted = rxs.len() as u64;
+
+    // watchdog: shutdown on its own thread; polling join guards against
+    // a wedged worker turning the suite into a hang
+    let metrics = c.metrics();
+    let h = std::thread::spawn(move || c.shutdown());
+    let t0 = Instant::now();
+    while !h.is_finished() {
+        assert!(
+            t0.elapsed() < Duration::from_secs(60),
+            "shutdown wedged under fault storm"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    h.join().expect("shutdown thread must not panic");
+
+    // every accepted request resolves exactly once — reply, typed
+    // error, or disconnect — even though shutdown already completed
+    let mut resolved = 0u64;
+    for rx in &rxs {
+        let _ = resolve(rx);
+        resolved += 1;
+    }
+    assert_eq!(resolved, accepted);
+
+    let snap = metrics.snapshot();
+    assert_eq!(snap.submitted, accepted);
+    assert_balance(&snap);
+}

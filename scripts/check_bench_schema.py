@@ -4,7 +4,7 @@
 CI runs this right after `scripts/bench_baseline.sh` (which writes
 `BENCH_exec.json`, schema `tensorcalc-bench-rows/v1`) and
 `scripts/bench_serve.sh` (which writes `BENCH_serve.json`, schema
-`tensorcalc-serve-load/v1`), so a bench refactor that silently changes
+`tensorcalc-serve-load/v2`), so a bench refactor that silently changes
 the row shape — renamed keys, stringified numbers, a dropped dimension —
 fails the build instead of corrupting the downstream trajectory plots.
 
@@ -45,6 +45,7 @@ EXEC_ROW = {
 
 SERVE_ROW = {
     "entry": str,
+    "cell": str,
     "max_batch": int,
     "offered_rps": numbers.Real,
     "achieved_rps": numbers.Real,
@@ -52,17 +53,36 @@ SERVE_ROW = {
     "p99_secs": numbers.Real,
     "sent": int,
     "dropped": int,
+    "shed": int,
+    "expired": int,
+    "deadline_ms": int,
 }
 
 SCHEMAS = {
     "tensorcalc-bench-rows/v1": EXEC_ROW,
-    "tensorcalc-serve-load/v1": SERVE_ROW,
+    "tensorcalc-serve-load/v2": SERVE_ROW,
 }
 
 # figures the full ablation bench must always record — a refactor that
 # silently drops one of these dimensions fails the build
 REQUIRED_FIGURES = {
     "tensorcalc-bench-rows/v1": {"simd"},
+}
+
+# cells the serve-load bench must always record: "overload" is the
+# robustness row (goodput + shed/expired under deadline pressure)
+REQUIRED_CELLS = {
+    "tensorcalc-serve-load/v2": {"overload"},
+}
+
+# counter families the coordinator's Prometheus exposition must carry
+# once it is recognisably a tensorcalc dump — a metrics refactor that
+# drops the robustness counters fails the build
+REQUIRED_PROM_FAMILIES = {
+    "tensorcalc_shed_total",
+    "tensorcalc_expired_total",
+    "tensorcalc_degraded_total",
+    "tensorcalc_rejected_total",
 }
 
 
@@ -139,16 +159,24 @@ def check_prometheus(text, path):
     """Prometheus text exposition: comments + `name[{labels}] value`."""
     errors = []
     samples = 0
+    families = set()
     for lineno, line in enumerate(text.splitlines(), 1):
         line = line.strip()
         if not line or line.startswith("#"):
             continue
         if PROM_SAMPLE.match(line):
             samples += 1
+            families.add(line.split("{", 1)[0].split(None, 1)[0])
         else:
             errors.append("%s:%d: malformed sample line %r" % (path, lineno, line))
     if samples == 0:
         errors.append("%s: no samples — the exposition is empty" % path)
+    if any(f.startswith("tensorcalc_") for f in families):
+        for fam in sorted(REQUIRED_PROM_FAMILIES - families):
+            errors.append(
+                "%s: required family %r missing (the robustness counters were dropped)"
+                % (path, fam)
+            )
     if not errors:
         print("%s: OK (prometheus, %d samples)" % (path, samples))
     return errors
@@ -192,6 +220,13 @@ def check_file(path):
             errors.append(
                 "%s: required figure %r has no rows (the %s ablation was dropped)"
                 % (path, fig, fig)
+            )
+    have_cells = {row.get("cell") for row in rows if isinstance(row, dict)}
+    for cell in sorted(REQUIRED_CELLS.get(schema, ())):
+        if cell not in have_cells:
+            errors.append(
+                "%s: required cell %r has no rows (the %s run was dropped)"
+                % (path, cell, cell)
             )
     if not errors:
         print("%s: OK (%s, %d rows)" % (path, schema, len(rows)))
